@@ -1,0 +1,54 @@
+//! Loop rearrangement exploration (§6.2 / Figure 4): sweep conv shapes
+//! and chart where Mloop vs Kloop wins and where the required bandwidth
+//! crosses the board's 4.2 GB/s budget.
+//!
+//! ```sh
+//! cargo run --release --example loop_rearrangement
+//! ```
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::coordinator::report;
+use snowflake::compiler::{decide, layout, CompileOptions, LoopOrder};
+use snowflake::model::layer::{LayerKind, Shape};
+
+fn main() {
+    let cfg = SnowflakeConfig::default();
+
+    // The paper's Figure 4 examples.
+    let rows = report::fig4(&cfg);
+    report::print_fig4(&rows, &cfg);
+
+    // Extended sweep: 1x1 convs with growing kernel volume — where does
+    // Mloop stop being viable?
+    println!("\nSweep: 14x14 input, 1x1 conv, growing channels (stride 1)");
+    println!("{:<20} {:>12} {:>12} {:>8}", "in->out", "Mloop GB/s", "Kloop GB/s", "winner");
+    for (ic, oc) in [(128, 256), (256, 512), (512, 1024), (1024, 2048)] {
+        let in_shape = Shape::new(ic, 14, 14);
+        let kind = LayerKind::Conv { in_ch: ic, out_ch: oc, kh: 1, kw: 1, stride: 1, pad: 0, relu: false };
+        let out = kind.out_shape(in_shape);
+        let op = layout::Lowered::Conv {
+            node: 0,
+            src: None,
+            bypass: None,
+            in_ch: ic,
+            out_ch: oc,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            relu: false,
+        };
+        let d = decide::decide(&op, in_shape, out, 0, 0, &cfg, &CompileOptions::default())
+            .expect("decide");
+        let decide::OpPlan::Conv(c) = d else { unreachable!() };
+        let m = decide::required_bandwidth_gbs(&c, in_shape, &cfg, LoopOrder::Mloop);
+        let k = decide::required_bandwidth_gbs(&c, in_shape, &cfg, LoopOrder::Kloop);
+        println!(
+            "{:<20} {:>12.2} {:>12.2} {:>8}",
+            format!("{ic}->{oc}"),
+            m,
+            k,
+            if k <= m { "Kloop" } else { "Mloop" }
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Quickstart: compile one convolution layer, run it on the Snowflake
+//! simulator, and validate the output against the fixed-point reference
+//! — the whole §5 pipeline in ~40 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::fixed::Q8_8;
+use snowflake::isa::asm::disasm_program;
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::refimpl;
+
+fn main() {
+    // A Table-1 style layer: 27x27 input, 5x5 kernels, 64 -> 192.
+    let mut g = Graph::new("quickstart", Shape::new(64, 27, 27));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 64, out_ch: 192, kh: 5, kw: 5, stride: 1, pad: 2, relu: true },
+        "conv2",
+    );
+
+    let cfg = SnowflakeConfig::default();
+    let compiled = compile(&g, &cfg, &CompileOptions::default()).expect("compile");
+    println!(
+        "compiled {} instructions ({} banks); first 12:",
+        compiled.program.len(),
+        compiled.program.len().div_ceil(cfg.icache_bank_instrs)
+    );
+    let head = snowflake::isa::instr::Program {
+        instrs: compiled.program.instrs[..12].to_vec(),
+        comments: compiled.program.comments[..12].to_vec(),
+    };
+    print!("{}", disasm_program(&head));
+
+    // Deploy synthetic weights + input, simulate.
+    let w = Weights::init(&g, 42);
+    let x = synthetic_input(&g, 42);
+    let mut m = deploy::make_machine(&compiled, &g, &w, &x);
+    let stats = m.run().expect("simulate");
+    println!("\nsimulation: {}", stats.summary(&cfg));
+
+    // Validate against the Q8.8 software reference (§5.3).
+    let want = &refimpl::forward_q(&g, &w, &x, Q8_8)[0];
+    let got = deploy::read_canvas(&m, &compiled.plan.canvases[&0]);
+    let diffs = got.count_diff(want);
+    println!(
+        "validation: {}/{} output words match the Q8.8 reference",
+        want.len() - diffs,
+        want.len()
+    );
+    assert_eq!(diffs, 0, "outputs must be bit-exact");
+    println!("OK");
+}

@@ -1,0 +1,64 @@
+//! ResNet bandwidth study: run ResNet18 (and optionally ResNet50) on
+//! the simulator and break execution down per layer — which layers are
+//! compute-bound, which hit the 4.2 GB/s wall, and how the bypass
+//! traffic of residual blocks shows up (the §6.1 discussion of
+//! ResNet's "cold buffer misses, memory bandwidth limitation and
+//! non-overlapped Maxpool layers").
+//!
+//! ```sh
+//! cargo run --release --example resnet_bandwidth [-- --model resnet50]
+//! ```
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{compile, decide, deploy, CompileOptions};
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::model::zoo;
+use snowflake::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let model = args.opt_or("model", "resnet18");
+    let g = zoo::by_name(model).expect("unknown model");
+    let cfg = SnowflakeConfig::default();
+    let opts = CompileOptions { skip_fc: true, ..Default::default() };
+    let compiled = compile(&g, &cfg, &opts).expect("compile");
+
+    // Static per-layer analysis: required bandwidth under both loop
+    // orders (the Fig. 4 model applied to the whole network).
+    println!("{:<18} {:>10} {:>12} {:>12}", "layer", "kernelKB", "Mloop GB/s", "Kloop GB/s");
+    let shapes = g.shapes();
+    for lp in &compiled.plan.layers {
+        if let decide::OpPlan::Conv(c) = &lp.decision {
+            let node = lp.op.out_node();
+            let in_shape = match lp.op.src() {
+                None => g.input,
+                Some(p) => shapes[p],
+            };
+            let m = decide::required_bandwidth_gbs(c, in_shape, &cfg, snowflake::compiler::LoopOrder::Mloop);
+            let k = decide::required_bandwidth_gbs(c, in_shape, &cfg, snowflake::compiler::LoopOrder::Kloop);
+            let name = &g.nodes[node].name;
+            let over = if k > cfg.bandwidth_gbs() { " <-- over budget" } else { "" };
+            println!(
+                "{:<18} {:>10.1} {:>12.2} {:>12.2}{}",
+                name,
+                (c.k_groups * 4 * c.kernel_words) as f64 * 2.0 / 1024.0,
+                m,
+                k,
+                over
+            );
+        }
+    }
+
+    // Dynamic run.
+    let w = Weights::init(&g, 42);
+    let x = synthetic_input(&g, 42);
+    let mut m = deploy::make_machine(&compiled, &g, &w, &x);
+    let stats = m.run().expect("simulate");
+    println!("\n{}: {}", g.name, stats.summary(&cfg));
+    println!(
+        "loads {:.1} MB, stores {:.1} MB, per-unit bytes {:?}",
+        stats.bytes_loaded() as f64 / 1e6,
+        stats.bytes_stored as f64 / 1e6,
+        stats.unit_bytes
+    );
+}

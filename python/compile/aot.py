@@ -1,0 +1,50 @@
+"""AOT bridge: lower the L2 jax graphs (with their L1 Pallas kernels
+inlined, interpret=True) to **HLO text** artifacts for the rust PJRT
+runtime.
+
+HLO text — NOT `lowered.compile()`/`.serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+that the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and aot_recipe.md).
+
+Usage: `python -m compile.aot --out ../artifacts` (from python/), or
+`make artifacts` at the repo root.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, (fn, shapes) in EXPORTS.items():
+        specs = [jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars, inputs {shapes})")
+
+
+if __name__ == "__main__":
+    main()

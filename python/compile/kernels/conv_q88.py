@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: fixed-point (Qm.n) convolution with the Snowflake
+vMAC datapath — int16 operands, int32 accumulation, bias preloaded at
+accumulator scale, round-to-nearest writeback shift with saturation,
+optional fused ReLU. Bit-compatible with `rust/src/fixed` and the
+simulator's MAC unit, so artifacts built from this kernel are the golden
+numerical model the rust coordinator validates against.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): Snowflake's
+MBuf/WBuf scratchpads map to VMEM blocks via BlockSpec — the grid walks
+kernel-group tiles (the compiler's step-4 "single kernel granularity"),
+each program instance holding one weight tile and the whole (small)
+input tile, mirroring a map-tile × kernel-tile pairing. The vMAC *trace*
+(contiguous MAC sequence over window rows) becomes the per-tap
+multiply-accumulate below. `interpret=True` always: the CPU PJRT plugin
+cannot run Mosaic custom-calls; real-TPU performance is estimated
+structurally (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FRAC = 8  # Q8.8 by default; Q5.11 passes frac=11.
+
+# Kernel-group tile: 8 output channels per grid step (two vMAC groups).
+K_TILE = 8
+
+
+def _writeback(acc, frac):
+    """Rounding, saturating shift from product scale to storage scale."""
+    half = jnp.int32(1 << (frac - 1))
+    shifted = (acc + half) >> frac
+    return jnp.clip(shifted, -32768, 32767).astype(jnp.int16)
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, kh, kw, ho, wo, relu, frac):
+    """One kernel-group tile: full (padded) input in VMEM, one weight
+    tile, produce [K_TILE, ho, wo] outputs."""
+    x = x_ref[...].astype(jnp.int32)  # [C, Hp, Wp]
+    w = w_ref[...].astype(jnp.int32)  # [K_TILE, C, kh, kw]
+    b = b_ref[...].astype(jnp.int32)  # [K_TILE]
+    # Accumulator at product scale, bias preloaded (the VMOV).
+    acc = jnp.broadcast_to((b << frac)[:, None, None], (w.shape[0], ho, wo)).astype(jnp.int32)
+    for fy in range(kh):
+        for fx in range(kw):
+            # Strided window slice: [C, ho, wo] at tap (fy, fx).
+            patch = jax.lax.slice(
+                x,
+                (0, fy, fx),
+                (x.shape[0], fy + (ho - 1) * stride + 1, fx + (wo - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            tap = w[:, :, fy, fx]  # [K_TILE, C]
+            acc = acc + jnp.einsum("kc,chw->khw", tap, patch).astype(jnp.int32)
+    out = _writeback(acc, frac)
+    if relu:
+        out = jnp.maximum(out, 0)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "relu", "frac"))
+def conv_q(x, w, b, stride=1, pad=0, relu=False, frac=FRAC):
+    """Fixed-point conv: x int16 [C,H,W], w int16 [K,C,kh,kw], b int16
+    [K] -> int16 [K,Ho,Wo]. K must be a multiple of K_TILE."""
+    c, h, ww = x.shape
+    k, _, kh, kw = w.shape
+    assert k % K_TILE == 0, f"K={k} must be a multiple of {K_TILE}"
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (ww + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    kernel = functools.partial(
+        _conv_kernel, stride=stride, kh=kh, kw=kw, ho=ho, wo=wo, relu=relu, frac=frac
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(k // K_TILE,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),  # maps tile: whole input
+            pl.BlockSpec((K_TILE, c, kh, kw), lambda i: (i, 0, 0, 0)),  # kernel tile
+            pl.BlockSpec((K_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((K_TILE, ho, wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ho, wo), jnp.int16),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, w, b)
+
+
+def residual_add_q(a, bypass, relu=False):
+    """Saturating fixed-point residual addition (post-writeback, as the
+    hardware's bypass VMOV + writeback adder does)."""
+    s = jnp.clip(a.astype(jnp.int32) + bypass.astype(jnp.int32), -32768, 32767).astype(jnp.int16)
+    if relu:
+        s = jnp.maximum(s, 0)
+    return s

@@ -1,0 +1,73 @@
+"""Pure-jnp/numpy oracle for the Pallas kernels — the CORE correctness
+signal (kernel vs ref must match bit-exactly; both mirror
+rust/src/fixed)."""
+
+import numpy as np
+
+FRAC = 8
+
+
+def quantize(x, frac=FRAC):
+    """f32 -> int16 Qm.n, round-to-nearest ties away from zero."""
+    scaled = np.asarray(x, dtype=np.float64) * (1 << frac)
+    rounded = np.where(scaled >= 0, np.floor(scaled + 0.5), np.ceil(scaled - 0.5))
+    return np.clip(rounded, -32768, 32767).astype(np.int16)
+
+
+def dequantize(q, frac=FRAC):
+    return np.asarray(q, dtype=np.float32) / (1 << frac)
+
+
+def writeback(acc, frac=FRAC):
+    """int array at product scale -> int16 storage scale."""
+    acc = np.asarray(acc, dtype=np.int64)
+    shifted = (acc + (1 << (frac - 1))) >> frac
+    return np.clip(shifted, -32768, 32767).astype(np.int16)
+
+
+def conv_q_ref(x, w, b, stride=1, pad=0, relu=False, frac=FRAC):
+    """Reference fixed-point conv (numpy, scalar-exact)."""
+    x = np.asarray(x, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    c, h, ww = x.shape
+    k, _, kh, kw = w.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (ww + 2 * pad - kw) // stride + 1
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    out = np.zeros((k, ho, wo), dtype=np.int16)
+    for ki in range(k):
+        acc = np.full((ho, wo), int(b[ki]) << frac, dtype=np.int64)
+        for fy in range(kh):
+            for fx in range(kw):
+                patch = xp[:, fy : fy + (ho - 1) * stride + 1 : stride,
+                            fx : fx + (wo - 1) * stride + 1 : stride]
+                acc += np.einsum("c,chw->hw", w[ki, :, fy, fx], patch)
+        o = writeback(acc, frac)
+        if relu:
+            o = np.maximum(o, 0)
+        out[ki] = o
+    return out
+
+
+def maxpool_q_ref(x, ks, stride):
+    x = np.asarray(x)
+    c, h, w = x.shape
+    ho = (h - ks) // stride + 1
+    wo = (w - ks) // stride + 1
+    out = np.zeros((c, ho, wo), dtype=x.dtype)
+    for y in range(ho):
+        for xx in range(wo):
+            out[:, y, xx] = x[:, y * stride : y * stride + ks, xx * stride : xx * stride + ks].max(
+                axis=(1, 2)
+            )
+    return out
+
+
+def residual_add_ref(a, bypass, relu=False):
+    s = np.clip(
+        np.asarray(a, dtype=np.int32) + np.asarray(bypass, dtype=np.int32), -32768, 32767
+    ).astype(np.int16)
+    if relu:
+        s = np.maximum(s, 0)
+    return s

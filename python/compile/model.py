@@ -1,0 +1,74 @@
+"""L2: jax model graphs in Snowflake fixed-point arithmetic, built on
+the L1 Pallas kernel. These are the golden computations `aot.py` lowers
+to HLO text for the rust runtime — the §5.3 software validation path,
+AOT-compiled so Python never runs at inference time.
+
+Fixed validation shapes (the rust side mirrors them in
+`coordinator/golden.rs` and `rust/tests/runtime_golden.rs`):
+
+* `conv3x3`:  x[16,12,12], w[8,16,3,3], b[8]   -> [8,12,12] (pad 1, relu)
+* `conv1x1`:  x[32,10,10], w[16,32,1,1], b[16] -> [16,5,5]  (stride 2)
+* `block`:    identity residual block, x[16,8,8], two 3x3 convs
+"""
+
+import jax.numpy as jnp
+
+from .kernels.conv_q88 import conv_q, residual_add_q
+
+CONV3X3_SHAPES = dict(x=(16, 12, 12), w=(8, 16, 3, 3), b=(8,))
+CONV1X1_SHAPES = dict(x=(32, 10, 10), w=(16, 32, 1, 1), b=(16,))
+BLOCK_SHAPES = dict(
+    x=(16, 8, 8), w1=(16, 16, 3, 3), b1=(16,), w2=(16, 16, 3, 3), b2=(16,)
+)
+
+
+def _i16(*xs):
+    """AOT boundary: the rust `xla` crate speaks int32 literals, the
+    datapath is int16 — cast on entry, values are always in range."""
+    return [x.astype(jnp.int16) for x in xs]
+
+
+def conv3x3(x, w, b):
+    """3x3 pad-1 relu conv — the workhorse validator."""
+    x, w, b = _i16(x, w, b)
+    return (conv_q(x, w, b, stride=1, pad=1, relu=True).astype(jnp.int32),)
+
+
+def conv1x1(x, w, b):
+    """1x1 stride-2 conv — the ResNet downsample shape."""
+    x, w, b = _i16(x, w, b)
+    return (conv_q(x, w, b, stride=2, pad=0, relu=False).astype(jnp.int32),)
+
+
+def block(x, w1, b1, w2, b2):
+    """Identity residual block: conv-relu, conv, add bypass, relu —
+    exactly the fused conv+res the compiler emits."""
+    x, w1, b1, w2, b2 = _i16(x, w1, b1, w2, b2)
+    h = conv_q(x, w1, b1, stride=1, pad=1, relu=True)
+    h = conv_q(h, w2, b2, stride=1, pad=1, relu=False)
+    return (residual_add_q(h, x, relu=True).astype(jnp.int32),)
+
+
+def maxpool2(x):
+    """2x2 stride-2 max pool on int16 (relu'd) maps."""
+    (x,) = _i16(x)
+    c, h, w = x.shape
+    v = x.reshape(c, h // 2, 2, w // 2, 2)
+    return (jnp.max(jnp.max(v, axis=4), axis=2).astype(jnp.int32),)
+
+
+EXPORTS = {
+    "conv3x3_q88": (conv3x3, [CONV3X3_SHAPES["x"], CONV3X3_SHAPES["w"], CONV3X3_SHAPES["b"]]),
+    "conv1x1_q88": (conv1x1, [CONV1X1_SHAPES["x"], CONV1X1_SHAPES["w"], CONV1X1_SHAPES["b"]]),
+    "block_q88": (
+        block,
+        [
+            BLOCK_SHAPES["x"],
+            BLOCK_SHAPES["w1"],
+            BLOCK_SHAPES["b1"],
+            BLOCK_SHAPES["w2"],
+            BLOCK_SHAPES["b2"],
+        ],
+    ),
+    "maxpool_q88": (maxpool2, [(16, 12, 12)]),
+}

@@ -1,0 +1,123 @@
+"""pytest: L1 Pallas kernel vs the pure-numpy oracle — bit-exact — plus
+hypothesis sweeps over shapes/values (the CORE correctness signal for
+the golden model)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv_q88 import conv_q, residual_add_q
+from compile.model import EXPORTS
+
+
+def rand_q(rng, shape, amp=2.0):
+    return ref.quantize(rng.uniform(-amp, amp, size=shape))
+
+
+def test_writeback_matches_rust_semantics():
+    # Pin the rounding: (acc + 128) >> 8 with saturation.
+    assert ref.writeback(np.array([0])) == 0
+    assert ref.writeback(np.array([128])) == 1  # tie rounds up
+    assert ref.writeback(np.array([127])) == 0
+    assert ref.writeback(np.array([-128])) == 0  # (-128+128)>>8 = 0
+    assert ref.writeback(np.array([1 << 40])) == 32767
+    assert ref.writeback(np.array([-(1 << 40)])) == -32768
+
+
+@pytest.mark.parametrize(
+    "c,h,k,ks,stride,pad,relu",
+    [
+        (16, 12, 8, 3, 1, 1, True),
+        (32, 10, 16, 1, 2, 0, False),
+        (3, 16, 8, 5, 2, 2, True),
+        (16, 8, 8, 3, 1, 0, False),
+    ],
+)
+def test_pallas_conv_matches_ref(c, h, k, ks, stride, pad, relu):
+    rng = np.random.default_rng(42)
+    x = rand_q(rng, (c, h, h))
+    w = rand_q(rng, (k, c, ks, ks), amp=0.5)
+    b = rand_q(rng, (k,), amp=0.5)
+    got = np.asarray(conv_q(x, w, b, stride=stride, pad=pad, relu=relu))
+    want = ref.conv_q_ref(x, w, b, stride=stride, pad=pad, relu=relu)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.sampled_from([3, 8, 16]),
+    h=st.integers(min_value=5, max_value=12),
+    ks=st.sampled_from([1, 3]),
+    stride=st.integers(min_value=1, max_value=2),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_conv_property(c, h, ks, stride, relu, seed):
+    pad = ks // 2
+    if (h + 2 * pad - ks) // stride + 1 < 1:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand_q(rng, (c, h, h))
+    w = rand_q(rng, (8, c, ks, ks), amp=0.4)
+    b = rand_q(rng, (8,), amp=0.4)
+    got = np.asarray(conv_q(x, w, b, stride=stride, pad=pad, relu=relu))
+    want = ref.conv_q_ref(x, w, b, stride=stride, pad=pad, relu=relu)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1), relu=st.booleans())
+def test_residual_add_property(seed, relu):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-32768, 32767, size=(4, 5, 5), dtype=np.int16)
+    bp = rng.integers(-32768, 32767, size=(4, 5, 5), dtype=np.int16)
+    got = np.asarray(residual_add_q(a, bp, relu=relu))
+    want = ref.residual_add_ref(a, bp, relu=relu)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_saturation_end_to_end():
+    # Large values must clip, not wrap.
+    x = np.full((16, 4, 4), 30000, dtype=np.int16)
+    w = np.full((8, 16, 1, 1), 30000, dtype=np.int16)
+    b = np.zeros(8, dtype=np.int16)
+    got = np.asarray(conv_q(x, w, b))
+    assert (got == 32767).all()
+
+
+def test_model_exports_lower():
+    # Every export must trace and lower (shape sanity for aot.py).
+    import jax
+    import jax.numpy as jnp
+
+    for name, (fn, shapes) in EXPORTS.items():
+        specs = [jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        assert lowered is not None, name
+
+
+def test_block_matches_composed_refs():
+    rng = np.random.default_rng(7)
+    from compile.model import BLOCK_SHAPES, block
+
+    x = rand_q(rng, BLOCK_SHAPES["x"])
+    w1 = rand_q(rng, BLOCK_SHAPES["w1"], amp=0.3)
+    b1 = rand_q(rng, BLOCK_SHAPES["b1"], amp=0.3)
+    w2 = rand_q(rng, BLOCK_SHAPES["w2"], amp=0.3)
+    b2 = rand_q(rng, BLOCK_SHAPES["b2"], amp=0.3)
+    (got,) = block(*[v.astype(np.int32) for v in (x, w1, b1, w2, b2)])
+    h = ref.conv_q_ref(x, w1, b1, stride=1, pad=1, relu=True)
+    h = ref.conv_q_ref(h, w2, b2, stride=1, pad=1, relu=False)
+    want = ref.residual_add_ref(h, x, relu=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_maxpool_matches_ref():
+    rng = np.random.default_rng(9)
+    from compile.model import maxpool2
+
+    x = rng.integers(-1000, 1000, size=(16, 12, 12), dtype=np.int16)
+    (got,) = maxpool2(x.astype(np.int32))
+    want = ref.maxpool_q_ref(x, 2, 2)
+    np.testing.assert_array_equal(np.asarray(got), want)

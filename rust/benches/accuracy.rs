@@ -1,0 +1,29 @@
+//! Bench E5 — regenerates the §5.3 quantization profile: fp32 vs Q8.8
+//! vs Q5.11. The paper reports ImageNet top-5 of 89 / 84 / 88 %; our
+//! substitution measures top-1/top-5 *agreement* with fp32 on a random
+//! CNN (DESIGN.md §Substitutions) plus output RMS error, reproducing
+//! the ordering fp32 > Q5.11 > Q8.8.
+
+use snowflake::coordinator::report;
+use snowflake::fixed::{Q5_11, Q8_8};
+use snowflake::util::bench::Bencher;
+
+fn main() {
+    let rows = report::accuracy(48, 7);
+    report::print_accuracy(&rows);
+
+    let rms88 = report::quantization_rms(Q8_8, 7);
+    let rms511 = report::quantization_rms(Q5_11, 7);
+    println!("\noutput RMS error vs fp32: Q8.8 {rms88:.5}  Q5.11 {rms511:.5}");
+    println!("paper (ImageNet top-5): float 89%, Q5.11 88%, Q8.8 84%");
+
+    let q511 = rows.iter().find(|r| r.format == "Q5.11").unwrap();
+    let q88 = rows.iter().find(|r| r.format == "Q8.8").unwrap();
+    assert!(q511.top5_agree >= q88.top5_agree, "Q5.11 must agree at least as well");
+    assert!(rms511 < rms88, "Q5.11 must have lower RMS error");
+
+    let b = Bencher::quick();
+    b.run("accuracy/16-inputs", || {
+        let _ = report::accuracy(16, 7);
+    });
+}

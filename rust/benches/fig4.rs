@@ -1,0 +1,30 @@
+//! Bench E4 — regenerates Figure 4: required memory bandwidth in Mloop
+//! vs Kloop mode for eight conv examples against the 4.2 GB/s board
+//! budget.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::coordinator::report;
+use snowflake::util::bench::Bencher;
+
+fn main() {
+    let cfg = SnowflakeConfig::default();
+    let rows = report::fig4(&cfg);
+    report::print_fig4(&rows, &cfg);
+
+    // Shape: AlexNet layers (A, B) under the line in both modes; the big
+    // ResNet50 layers (G, H) demand more than the budget under Mloop and
+    // do no worse under Kloop — "Kloop mode is necessary for those
+    // layers" (§6.2).
+    for r in &rows[..2] {
+        assert!(r.mloop_gbs.min(r.kloop_gbs) < cfg.bandwidth_gbs(), "{}", r.tag);
+    }
+    for r in &rows[6..] {
+        assert!(r.mloop_gbs > cfg.bandwidth_gbs(), "{} mloop {}", r.tag, r.mloop_gbs);
+        assert!(r.kloop_gbs <= r.mloop_gbs, "{}", r.tag);
+    }
+
+    let b = Bencher::quick();
+    b.run("fig4/model", || {
+        let _ = report::fig4(&cfg);
+    });
+}

@@ -1,0 +1,32 @@
+//! Bench E1/E6 — regenerates Table 1: hand-optimized vs auto-generated
+//! instruction streams on the four AlexNet conv layers, plus host-side
+//! timing of the simulation itself.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::coordinator::report;
+use snowflake::util::bench::Bencher;
+
+fn main() {
+    let cfg = SnowflakeConfig::default();
+    let rows = report::table1(&cfg, 42);
+    report::print_table1(&rows);
+
+    // Paper-shape checks (loudly, so regressions surface in CI logs).
+    for r in &rows {
+        let ratio = r.auto_ms / r.hand_ms;
+        println!(
+            "  {}: auto/hand time ratio {:.4} (paper: ~1.00x), instr delta {}",
+            r.layer,
+            ratio,
+            r.auto_instrs as i64 - r.hand_instrs as i64
+        );
+        assert!(ratio < 1.15, "auto should be within 15% of hand ({ratio})");
+        assert!(r.auto_instrs >= r.hand_instrs);
+    }
+
+    // Host-side cost of one hand/auto pair (compile + simulate).
+    let b = Bencher::quick();
+    b.run("table1/full-regeneration", || {
+        let _ = report::table1(&cfg, 42);
+    });
+}

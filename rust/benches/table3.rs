@@ -1,0 +1,25 @@
+//! Bench E3 — regenerates Table 3: execution speedup versus measured
+//! load imbalance on the CONV 1×1 1024→2048 stride-2 layer, across the
+//! balance policies of §6.3.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::coordinator::report;
+use snowflake::util::bench::Bencher;
+
+fn main() {
+    let cfg = SnowflakeConfig::default();
+    let rows = report::table3(&cfg, 42);
+    report::print_table3(&rows);
+
+    println!("\npaper: imbalance 5..102% keeps speedup ~1.64-1.66x; 114% -> 1.297x; 132% -> 1.0x");
+    // Shape: best balance beats the worst case, monotone-ish trend.
+    let best = rows.iter().map(|r| r.speedup).fold(0.0f64, f64::max);
+    let worst_imb = rows.iter().map(|r| r.imbalance_pct).fold(0.0f64, f64::max);
+    assert!(best > 1.1, "fine balance must give >1.1x over the worst ({best})");
+    assert!(worst_imb > 50.0, "the degenerate policies must show heavy imbalance");
+
+    let b = Bencher::quick();
+    b.run("table3/sweep", || {
+        let _ = report::table3(&cfg, 42);
+    });
+}

@@ -1,0 +1,168 @@
+//! Snowflake hardware parameters (§3 of the paper).
+//!
+//! One `SnowflakeConfig` value is shared by the compiler and the
+//! simulator — the paper's "Snowflake hardware parameter object is
+//! globally shared among functions" (§5.1 step 3). Defaults reproduce
+//! the synthesized configuration: 1 cluster × 4 CUs × 4 vMACs × 16 MACs
+//! (256 processing units) at 250 MHz on a board with 4.2 GB/s of
+//! bidirectional AXI bandwidth.
+
+/// Static description of a Snowflake instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnowflakeConfig {
+    /// Clock frequency in MHz (paper: 250).
+    pub clock_mhz: f64,
+    /// Compute units per cluster (paper: 4).
+    pub n_cus: usize,
+    /// Vector MACs per CU (paper: 4).
+    pub vmacs_per_cu: usize,
+    /// Scalar MACs per vMAC = vector lane width (paper: 16).
+    pub macs_per_vmac: usize,
+    /// Bytes per data word (16-bit fixed point).
+    pub word_bytes: usize,
+
+    /// Maps buffer: bytes per bank (paper: 64 KB), double banked.
+    pub mbuf_bank_bytes: usize,
+    /// Number of MBuf banks (double buffering).
+    pub mbuf_banks: usize,
+    /// Weight buffer bytes per vMAC, split in two regions for double
+    /// buffering. The paper synthesizes 8 KB; we default to 16 KB so a
+    /// whole 3x3x512 kernel (ResNet50 layer4) stays resident — the
+    /// paper's hardware used partial-kernel accumulation passes we do
+    /// not reconstruct (DESIGN.md §ISA-reconstruction).
+    pub wbuf_bytes: usize,
+    /// Bias / bypass buffer bytes per CU (our reconstruction; holds conv
+    /// biases and residual bypass row strips for VMOV).
+    pub bbuf_bytes: usize,
+
+    /// Instruction cache banks (paper: 2) and instructions per bank
+    /// (paper: 512). Branching across banks is not permitted.
+    pub icache_banks: usize,
+    pub icache_bank_instrs: usize,
+
+    /// DMA load/store units (paper: 4).
+    pub n_load_units: usize,
+    /// Total off-chip bandwidth in bytes/cycle shared by all active
+    /// streams (ZC706: 4.2 GB/s at 250 MHz = 16.8 B/cycle).
+    pub axi_bytes_per_cycle: f64,
+    /// Fixed DMA transaction setup latency in cycles (models descriptor
+    /// setup + AXI burst start; makes very fine-grained loads costly,
+    /// which is why load balancing has a sweet spot — Table 3).
+    pub dma_setup_cycles: u64,
+
+    /// Depth of each CU's pending-vector-instruction queue ("trace
+    /// buffer"; §5.2 uses 16 as the fill count).
+    pub vector_queue_depth: usize,
+    /// Branch pipeline cost: 4 cycles ⇒ 4 delay slots.
+    pub branch_delay_slots: usize,
+    /// Scalar execute stage latency (paper: 2 cycles).
+    pub scalar_exec_cycles: u64,
+    /// Extra cycles for the gather adder + writeback at the end of a
+    /// COOP trace.
+    pub gather_cycles: u64,
+}
+
+impl Default for SnowflakeConfig {
+    fn default() -> Self {
+        SnowflakeConfig {
+            clock_mhz: 250.0,
+            n_cus: 4,
+            vmacs_per_cu: 4,
+            macs_per_vmac: 16,
+            word_bytes: 2,
+            mbuf_bank_bytes: 64 * 1024,
+            mbuf_banks: 2,
+            wbuf_bytes: 16 * 1024,
+            bbuf_bytes: 64 * 1024,
+            icache_banks: 2,
+            icache_bank_instrs: 512,
+            n_load_units: 4,
+            axi_bytes_per_cycle: 16.8,
+            dma_setup_cycles: 64,
+            vector_queue_depth: 16,
+            branch_delay_slots: 4,
+            scalar_exec_cycles: 2,
+            gather_cycles: 2,
+        }
+    }
+}
+
+impl SnowflakeConfig {
+    /// Total scalar MAC units (paper: 256).
+    pub fn total_macs(&self) -> usize {
+        self.n_cus * self.vmacs_per_cu * self.macs_per_vmac
+    }
+
+    /// Peak arithmetic throughput in Gop/s (2 ops per MAC·cycle).
+    pub fn peak_gops(&self) -> f64 {
+        self.total_macs() as f64 * 2.0 * self.clock_mhz / 1000.0
+    }
+
+    /// Off-chip bandwidth in GB/s.
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.axi_bytes_per_cycle * self.clock_mhz / 1000.0
+    }
+
+    /// Words per MBuf bank.
+    pub fn mbuf_bank_words(&self) -> usize {
+        self.mbuf_bank_bytes / self.word_bytes
+    }
+
+    /// Words per WBuf region (half of the buffer: double buffered).
+    pub fn wbuf_region_words(&self) -> usize {
+        self.wbuf_bytes / 2 / self.word_bytes
+    }
+
+    /// Words in the whole WBuf of one vMAC.
+    pub fn wbuf_words(&self) -> usize {
+        self.wbuf_bytes / self.word_bytes
+    }
+
+    /// Words per bias/bypass buffer.
+    pub fn bbuf_words(&self) -> usize {
+        self.bbuf_bytes / self.word_bytes
+    }
+
+    /// Vector lane width in words (one buffer block).
+    pub fn lane_words(&self) -> usize {
+        self.macs_per_vmac
+    }
+
+    /// Convert a cycle count to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_mhz * 1e3)
+    }
+
+    /// Convert (bytes moved, cycles) to achieved GB/s.
+    pub fn achieved_gbs(&self, bytes: u64, cycles: u64) -> f64 {
+        if cycles == 0 {
+            return 0.0;
+        }
+        bytes as f64 / cycles as f64 * self.clock_mhz / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configuration() {
+        let c = SnowflakeConfig::default();
+        assert_eq!(c.total_macs(), 256);
+        assert_eq!(c.peak_gops(), 128.0);
+        assert!((c.bandwidth_gbs() - 4.2).abs() < 1e-9);
+        assert_eq!(c.mbuf_bank_words(), 32 * 1024);
+        assert_eq!(c.wbuf_words(), 8 * 1024);
+        assert_eq!(c.icache_banks * c.icache_bank_instrs, 1024);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let c = SnowflakeConfig::default();
+        // 250k cycles at 250 MHz = 1 ms.
+        assert!((c.cycles_to_ms(250_000) - 1.0).abs() < 1e-12);
+        // Moving 16.8 bytes/cycle for any duration = 4.2 GB/s.
+        assert!((c.achieved_gbs(16_800, 1000) - 4.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,125 @@
+//! Communication load balancing (§6.3 / Table 3).
+//!
+//! "Snowflake has 4 load/store units, and properly distributing LD
+//! instructions to all units prevents CU stalls due to data transfer …
+//! A better approach is to break the maps data into multiple load
+//! instructions and distribute evenly with the kernel loads."
+//!
+//! `UnitAllocator` is threaded through code generation: every emitted LD
+//! asks it for a unit, and the greedy policy keeps a running byte count
+//! per unit so the heaviest stream never piles onto one port. The
+//! policies reproduce the imbalance spectrum of Table 3.
+
+use super::BalancePolicy;
+
+/// Assigns load units to LD instructions at code-generation time.
+#[derive(Clone, Debug)]
+pub struct UnitAllocator {
+    policy: BalancePolicy,
+    bytes: Vec<u64>,
+    rr: usize,
+}
+
+/// Coarse stream classes (the TwoUnits policy pins by class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamClass {
+    Maps,
+    Weights,
+    Bias,
+    ICache,
+}
+
+impl UnitAllocator {
+    pub fn new(policy: BalancePolicy, n_units: usize) -> Self {
+        UnitAllocator { policy, bytes: vec![0; n_units], rr: 0 }
+    }
+
+    /// How many pieces to split a maps stream into.
+    pub fn map_split(&self) -> usize {
+        match self.policy {
+            BalancePolicy::Greedy { split } => split.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Pick a unit for a stream of `words` 16-bit words.
+    pub fn unit_for(&mut self, class: StreamClass, words: usize) -> u8 {
+        let n = self.bytes.len();
+        let u = match self.policy {
+            BalancePolicy::OneUnit => 0,
+            BalancePolicy::TwoUnits => match class {
+                // The paper's worst measured case: "kernel and maps uses
+                // two load units".
+                StreamClass::Maps | StreamClass::ICache => 0,
+                StreamClass::Weights | StreamClass::Bias => 1 % n,
+            },
+            BalancePolicy::Greedy { .. } => {
+                // Least-loaded unit; round-robin tie-break.
+                let mut best = 0;
+                let mut best_b = u64::MAX;
+                for i in 0..n {
+                    let idx = (self.rr + i) % n;
+                    if self.bytes[idx] < best_b {
+                        best_b = self.bytes[idx];
+                        best = idx;
+                    }
+                }
+                self.rr = (best + 1) % n;
+                best
+            }
+        };
+        self.bytes[u] += (words * 2) as u64;
+        u as u8
+    }
+
+    /// Static byte counters (codegen-side estimate of the imbalance the
+    /// run will show).
+    pub fn planned_imbalance_pct(&self) -> f64 {
+        let total: u64 = self.bytes.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / self.bytes.len() as f64;
+        let max = *self.bytes.iter().max().unwrap() as f64;
+        (max / mean - 1.0) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_balances_bytes() {
+        let mut a = UnitAllocator::new(BalancePolicy::Greedy { split: 2 }, 4);
+        for i in 0..100 {
+            let words = 100 + (i % 7) * 30;
+            a.unit_for(if i % 3 == 0 { StreamClass::Maps } else { StreamClass::Weights }, words);
+        }
+        assert!(a.planned_imbalance_pct() < 10.0, "{}", a.planned_imbalance_pct());
+    }
+
+    #[test]
+    fn one_unit_is_maximally_imbalanced() {
+        let mut a = UnitAllocator::new(BalancePolicy::OneUnit, 4);
+        for _ in 0..10 {
+            a.unit_for(StreamClass::Maps, 100);
+        }
+        assert!((a.planned_imbalance_pct() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_units_split_by_class() {
+        let mut a = UnitAllocator::new(BalancePolicy::TwoUnits, 4);
+        assert_eq!(a.unit_for(StreamClass::Maps, 10), 0);
+        assert_eq!(a.unit_for(StreamClass::Weights, 10), 1);
+        assert_eq!(a.unit_for(StreamClass::Maps, 10), 0);
+        assert!(a.planned_imbalance_pct() > 90.0);
+    }
+
+    #[test]
+    fn split_factor_from_policy() {
+        assert_eq!(UnitAllocator::new(BalancePolicy::Greedy { split: 4 }, 4).map_split(), 4);
+        assert_eq!(UnitAllocator::new(BalancePolicy::OneUnit, 4).map_split(), 1);
+    }
+}

@@ -1,0 +1,304 @@
+//! Convolution code generation (Kloop structure of Fig. 3): per map
+//! tile, stream kernel groups through the double-buffered weight
+//! buffers; inside, Y and X loops walk windows whose kh×segment MAC
+//! traces accumulate in the vMACs, with VMOV-staged biases and residual
+//! bypass values applied on writeback.
+
+use super::emit::*;
+use crate::compiler::balance::{StreamClass, UnitAllocator};
+use crate::compiler::decide::ConvPlan;
+use crate::compiler::layout::Canvas;
+use crate::compiler::tile::{map_tiles, MapTile};
+use crate::compiler::CompileOptions;
+use crate::arch::SnowflakeConfig;
+use crate::isa::instr::{Instr, LdTarget, MacFlags, Program, VmovSel};
+
+pub struct ConvCtx<'a> {
+    pub cfg: &'a SnowflakeConfig,
+    pub opts: &'a CompileOptions,
+    pub d: &'a ConvPlan,
+    pub in_cv: Canvas,
+    pub out_cv: Canvas,
+    pub byp_cv: Option<Canvas>,
+    pub weights_addr: usize,
+    pub bias_addr: usize,
+}
+
+/// Emit the per-CU maps strip loads for one tile (split per the balance
+/// policy).
+fn emit_maps_loads(e: &mut Emitter, ctx: &ConvCtx, tile: &MapTile, alloc: &mut UnitAllocator) {
+    let d = ctx.d;
+    let strip_rows = tile.in_rows(d.kh, d.stride) + crate::compiler::decide::CONV_SPILL_ROWS;
+    let strip_words = strip_rows * ctx.in_cv.row_words();
+    let bank_base = tile.bank * ctx.cfg.mbuf_bank_words();
+    let split = alloc.map_split().min(strip_words.div_ceil(64));
+    for cu in 0..ctx.cfg.n_cus {
+        // First canvas row of this CU's strip: output row oy maps to
+        // canvas row oy*stride + (mp - pad).
+        let cy0 = tile.cu_oy0(cu) * d.stride + (ctx.in_cv.mp - d.pad);
+        let mem0 = ctx.in_cv.raw_row(cy0);
+        let piece = strip_words.div_ceil(split);
+        let mut off = 0usize;
+        while off < strip_words {
+            let len = piece.min(strip_words - off);
+            let unit = alloc.unit_for(StreamClass::Maps, len);
+            e.movi(R_LDTMP, (bank_base + off) as i64);
+            e.movi(R_T0, (mem0 + off) as i64);
+            e.movi(R_T1, len as i64);
+            e.c(
+                Instr::Ld {
+                    target: LdTarget::MBuf { cu: cu as u8, bank: tile.bank as u8 },
+                    broadcast: false,
+                    unit,
+                    rd: R_LDTMP,
+                    rs1: R_T0,
+                    rs2: R_T1,
+                },
+                &format!("maps strip tile{} cu{}", tile.index, cu),
+            );
+            off += len;
+        }
+    }
+}
+
+/// Emit the per-CU bypass strip loads for one tile (into BBuf above the
+/// bias array).
+fn emit_bypass_loads(e: &mut Emitter, ctx: &ConvCtx, tile: &MapTile, alloc: &mut UnitAllocator) {
+    let d = ctx.d;
+    let byp = ctx.byp_cv.expect("bypass canvas");
+    let bias_sz = d.k_groups * 4;
+    let words = tile.rows_per_cu * byp.row_words();
+    assert!(
+        bias_sz + words <= ctx.cfg.bbuf_words(),
+        "bypass strip ({} words) + biases ({}) exceed BBuf",
+        words,
+        bias_sz
+    );
+    for cu in 0..ctx.cfg.n_cus {
+        let cy0 = tile.cu_oy0(cu) + byp.mp;
+        let mem0 = byp.raw_row(cy0);
+        let unit = alloc.unit_for(StreamClass::Bias, words);
+        e.movi(R_LDTMP, bias_sz as i64);
+        e.movi(R_T0, mem0 as i64);
+        e.movi(R_T1, words as i64);
+        e.c(
+            Instr::Ld {
+                target: LdTarget::BBuf { cu: cu as u8 },
+                broadcast: false,
+                unit,
+                rd: R_LDTMP,
+                rs1: R_T0,
+                rs2: R_T1,
+            },
+            &format!("bypass strip tile{} cu{}", tile.index, cu),
+        );
+    }
+}
+
+/// Emit the 4 kernel loads of one group. Target WBuf region base comes
+/// from register `buf_reg` (compute-time value), stream address from
+/// `R_LDTMP` (caller sets it to the group base), advancing by `R_KW`.
+fn emit_kernel_group_loads(e: &mut Emitter, ctx: &ConvCtx, buf_reg: u8, alloc: &mut UnitAllocator) {
+    let d = ctx.d;
+    e.movi(R_T1, d.kernel_words as i64);
+    for v in 0..ctx.cfg.vmacs_per_cu {
+        let unit = alloc.unit_for(StreamClass::Weights, d.kernel_words);
+        e.c(
+            Instr::Ld {
+                target: LdTarget::WBuf { cu: 0, vmac: v as u8 },
+                broadcast: true,
+                unit,
+                rd: buf_reg,
+                rs1: R_LDTMP,
+                rs2: R_T1,
+            },
+            &format!("kernels vmac{v}"),
+        );
+        if v + 1 < ctx.cfg.vmacs_per_cu {
+            e.e(Instr::Add { rd: R_LDTMP, rs1: R_LDTMP, rs2: R_KW });
+        }
+    }
+}
+
+/// Emit the inner window MAC sequence (kh rows × segments).
+fn emit_window(e: &mut Emitter, ctx: &ConvCtx) {
+    let d = ctx.d;
+    if d.has_bypass {
+        e.e(Instr::Vmov { sel: VmovSel::Bypass, rs1: R_BYP, wide: false });
+    }
+    e.e(Instr::Add { rd: R_MTRACE, rs1: R_MWIN, rs2: 0 });
+    e.e(Instr::Add { rd: R_WTRACE, rs1: R_WREG, rs2: 0 });
+    let n_segs = d.geom.segs.len();
+    for fy in 0..d.kh {
+        for (si, &seg) in d.geom.segs.iter().enumerate() {
+            let first = fy == 0 && si == 0;
+            let last = fy == d.kh - 1 && si == n_segs - 1;
+            let flags = MacFlags {
+                reset: first,
+                writeback: last,
+                relu: last && d.relu,
+                bypass: last && d.has_bypass,
+            };
+            e.e(Instr::Mac {
+                coop: true,
+                rd: R_OUT,
+                rs1: R_MTRACE,
+                rs2: R_WTRACE,
+                len: (seg / 16) as u8,
+                flags,
+            });
+            if !last {
+                e.e(Instr::Addi { rd: R_MTRACE, rs1: R_MTRACE, imm: seg as i16 });
+                e.e(Instr::Addi { rd: R_WTRACE, rs1: R_WTRACE, imm: seg as i16 });
+            }
+        }
+        if fy + 1 < d.kh {
+            e.e(Instr::Add { rd: R_MTRACE, rs1: R_MTRACE, rs2: R_ROWFIX });
+        }
+    }
+}
+
+/// Emit a full convolution layer: a prologue block plus one block per
+/// map tile.
+pub fn emit_conv(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let d = ctx.d;
+    let tiles = map_tiles(d.h_out, d.rows_per_cu, cfg);
+    let region_words = cfg.wbuf_region_words();
+    let mut blocks = Vec::new();
+
+    // ------------------------- prologue -------------------------------
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    let row_words_in = ctx.in_cv.row_words() as i64;
+    let row_words_out = ctx.out_cv.row_words() as i64;
+    e.movi(R_ROWW_IN, row_words_in);
+    e.movi(R_XADV, (d.stride * d.c_pad_in) as i64);
+    e.movi(R_ROWW_OUT, row_words_out);
+    e.movi(R_CPO, d.c_pad_out as i64);
+    e.movi(R_KW, d.kernel_words as i64);
+    e.movi(R_YADV, (d.stride) as i64 * row_words_in);
+    e.movi(R_ROWFIX, row_words_in - d.geom.row_read as i64);
+    e.movi(28, 1); // vmac output stride: adjacent channels
+    if d.has_bypass {
+        e.movi(R_MISC, ctx.byp_cv.unwrap().row_words() as i64);
+    }
+    if d.dbuf_w {
+        e.movi(R_REGION, region_words as i64);
+    }
+    // Bias array -> BBuf[0..] (broadcast).
+    {
+        let words = d.k_groups * 4;
+        let unit = alloc.unit_for(StreamClass::Bias, words);
+        e.movi(R_LDTMP, 0);
+        e.movi(R_T0, ctx.bias_addr as i64);
+        e.movi(R_T1, words as i64);
+        e.c(
+            Instr::Ld {
+                target: LdTarget::BBuf { cu: 0 },
+                broadcast: true,
+                unit,
+                rd: R_LDTMP,
+                rs1: R_T0,
+                rs2: R_T1,
+            },
+            "bias array",
+        );
+    }
+    // Maps strips for tile 0.
+    emit_maps_loads(&mut e, ctx, &tiles[0], alloc);
+    blocks.push(e.prog);
+
+    // ------------------------- tiles ----------------------------------
+    for (t, tile) in tiles.iter().enumerate() {
+        let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+        // Prefetch next tile's maps into the other bank.
+        if t + 1 < tiles.len() {
+            emit_maps_loads(&mut e, ctx, &tiles[t + 1], alloc);
+        }
+        if d.has_bypass {
+            emit_bypass_loads(&mut e, ctx, tile, alloc);
+        }
+        // Kernel group 0 of this tile.
+        let parity = if d.dbuf_w { (t * d.k_groups) % 2 } else { 0 };
+        e.movi(R_WREG, (parity * region_words) as i64);
+        e.movi(R_LDTMP, ctx.weights_addr as i64);
+        emit_kernel_group_loads(&mut e, ctx, R_WREG, alloc);
+        e.movi(R_KMEM, (ctx.weights_addr + 4 * d.kernel_words) as i64);
+        e.movi(R_OUTBASE, ctx.out_cv.addr_u(0, tile.oy0, 0) as i64);
+        e.movi(31, tile.rows_per_cu as i64 * row_words_out); // per-CU row offset
+        e.movi(R_BIAS, 0);
+
+        let bank_base = (tile.bank * cfg.mbuf_bank_words()) as i64;
+        let col_off = ((ctx.in_cv.mp - d.pad) * d.c_pad_in) as i64;
+        let byp0_off = ctx
+            .byp_cv
+            .map(|b| (d.k_groups * 4 + b.mp * d.c_pad_out) as i64)
+            .unwrap_or(0);
+
+        e.counted_loop(
+            R_KC,
+            R_KL,
+            d.k_groups,
+            |e| {
+                e.e(Instr::Vmov { sel: VmovSel::Bias, rs1: R_BIAS, wide: false });
+                e.movi(R_MROW, bank_base);
+                e.e(Instr::Add { rd: R_T1, rs1: R_OUTBASE, rs2: R_BIAS });
+                if d.has_bypass {
+                    e.addi(R_T0, R_BIAS, byp0_off);
+                }
+                e.counted_loop(
+                    R_YC,
+                    R_YL,
+                    tile.rows_per_cu,
+                    |e| {
+                        e.addi(R_MWIN, R_MROW, col_off);
+                        e.e(Instr::Add { rd: R_OUT, rs1: R_T1, rs2: 0 });
+                        if d.has_bypass {
+                            e.e(Instr::Add { rd: R_BYP, rs1: R_T0, rs2: 0 });
+                        }
+                        e.counted_loop(
+                            R_XC,
+                            R_XL,
+                            d.w_out,
+                            |e| emit_window(e, ctx),
+                            |e, _| {
+                                e.e(Instr::Add { rd: R_MWIN, rs1: R_MWIN, rs2: R_XADV });
+                                e.e(Instr::Add { rd: R_OUT, rs1: R_OUT, rs2: R_CPO });
+                                if d.has_bypass {
+                                    e.e(Instr::Add { rd: R_BYP, rs1: R_BYP, rs2: R_CPO });
+                                }
+                            },
+                        );
+                    },
+                    |e, _| {
+                        e.e(Instr::Add { rd: R_MROW, rs1: R_MROW, rs2: R_YADV });
+                        e.e(Instr::Add { rd: R_T1, rs1: R_T1, rs2: R_ROWW_OUT });
+                        if d.has_bypass {
+                            e.e(Instr::Add { rd: R_T0, rs1: R_T0, rs2: R_MISC });
+                        }
+                    },
+                );
+                // Prefetch the next kernel group (dummy on the last
+                // iteration; region interlock keeps reloads safe).
+                if d.dbuf_w {
+                    e.e(Instr::Muli { rd: R_NOP, rs1: R_WREG, imm: -1 });
+                    e.e(Instr::Add { rd: R_T0, rs1: R_REGION, rs2: R_NOP });
+                } else {
+                    e.e(Instr::Add { rd: R_T0, rs1: 0, rs2: 0 });
+                }
+                e.e(Instr::Add { rd: R_LDTMP, rs1: R_KMEM, rs2: 0 });
+                emit_kernel_group_loads(e, ctx, R_T0, alloc);
+                e.e(Instr::Mov { rd: R_NOP, rs1: R_KW, sh: 2 });
+                e.e(Instr::Add { rd: R_KMEM, rs1: R_KMEM, rs2: R_NOP });
+                if d.dbuf_w {
+                    e.e(Instr::Add { rd: R_WREG, rs1: R_T0, rs2: 0 });
+                }
+            },
+            |e, _| {
+                e.e(Instr::Addi { rd: R_BIAS, rs1: R_BIAS, imm: 4 });
+            },
+        );
+        blocks.push(e.prog);
+    }
+    blocks
+}

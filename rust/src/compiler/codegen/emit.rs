@@ -1,0 +1,254 @@
+//! Emission helpers: the static register map (§5.2 "register assignment
+//! is statically defined to avoid unnecessary register saving
+//! instructions"), wide-immediate materialization, and the counted-loop
+//! builder with branch-delay-slot filling.
+
+use crate::arch::SnowflakeConfig;
+use crate::isa::instr::{Instr, Program, Reg};
+
+// ---------------------------------------------------------------------
+// Static register assignment (r0 hardwired zero; r28..r31 reserved by
+// the ISA conventions in `isa::instr`).
+// ---------------------------------------------------------------------
+pub const R_MROW: Reg = 1; //  maps strip row base (MBuf)
+pub const R_MWIN: Reg = 2; //  window base (advances along x)
+pub const R_WTRACE: Reg = 3; // weight trace address
+pub const R_MTRACE: Reg = 4; // maps trace address
+pub const R_ROWFIX: Reg = 5; // const: row_words_in - row_read
+pub const R_OUT: Reg = 6; //   output address
+pub const R_BIAS: Reg = 7; //  bbuf bias address (kg*4)
+pub const R_BYP: Reg = 8; //   bbuf bypass address
+pub const R_XC: Reg = 9; //    x loop counter
+pub const R_XL: Reg = 10; //   x loop limit
+pub const R_YC: Reg = 11; //   y loop counter
+pub const R_YL: Reg = 12; //   y loop limit
+pub const R_KC: Reg = 13; //   kernel-group loop counter
+pub const R_KL: Reg = 14; //   kernel-group loop limit
+pub const R_T0: Reg = 15; //   temp (byp row base / LD buf target)
+pub const R_T1: Reg = 16; //   temp (out row base / LD length)
+pub const R_ROWW_IN: Reg = 17; // const: input canvas row words
+pub const R_XADV: Reg = 18; //  const: stride*c_pad_in (or pool lane stride)
+pub const R_ROWW_OUT: Reg = 19; // const: output canvas row words
+pub const R_CPO: Reg = 20; //   const: c_pad_out
+pub const R_KMEM: Reg = 21; //  next kernel group DRAM address
+pub const R_WREG: Reg = 22; //  current WBuf compute-region base
+pub const R_LDTMP: Reg = 23; // LD memory-address scratch
+pub const R_KW: Reg = 24; //    const: kernel_words
+pub const R_YADV: Reg = 25; //  const: stride*row_words_in
+pub const R_OUTBASE: Reg = 26; // tile output base
+pub const R_MISC: Reg = 27; //  const: bypass-canvas row words / misc
+pub const R_NOP: Reg = 29; //   no-op scratch (also large-imm staging)
+pub const R_REGION: Reg = 30; // const: WBuf region words (double buffer)
+
+/// Instruction emitter over one block.
+pub struct Emitter<'a> {
+    pub prog: Program,
+    pub cfg: &'a SnowflakeConfig,
+    /// Fill branch delay slots with useful tail instructions (hand
+    /// optimization); false emits no-ops after the branch instead.
+    pub smart: bool,
+}
+
+impl<'a> Emitter<'a> {
+    pub fn new(cfg: &'a SnowflakeConfig, smart: bool) -> Self {
+        Emitter { prog: Program::new(), cfg, smart }
+    }
+
+    pub fn e(&mut self, i: Instr) {
+        self.prog.push(i);
+    }
+
+    pub fn c(&mut self, i: Instr, comment: &str) {
+        self.prog.push_commented(i, comment);
+    }
+
+    pub fn len(&self) -> usize {
+        self.prog.len()
+    }
+
+    /// No-op (architecturally: `addi r29, r0, 0`).
+    pub fn nop(&mut self) {
+        self.e(Instr::Addi { rd: R_NOP, rs1: 0, imm: 0 });
+    }
+
+    /// Materialize an arbitrary value into `rd` (1–3 instructions).
+    pub fn movi(&mut self, rd: Reg, val: i64) {
+        if (-(1 << 22)..(1 << 22)).contains(&val) {
+            self.e(Instr::Movi { rd, imm: val as i32 });
+        } else {
+            // val = hi << 11 + lo, lo in [0, 2048).
+            let lo = val & 0x7ff;
+            let hi = val >> 11;
+            assert!(hi < (1 << 22), "movi value out of range: {val}");
+            self.e(Instr::Movi { rd, imm: hi as i32 });
+            self.e(Instr::Mov { rd, rs1: rd, sh: 11 });
+            if lo != 0 {
+                self.e(Instr::Addi { rd, rs1: rd, imm: lo as i16 });
+            }
+        }
+    }
+
+    /// `rd = rs + delta` for arbitrary delta (1 or 3 instructions; uses
+    /// r29 as staging for wide deltas).
+    pub fn addi(&mut self, rd: Reg, rs: Reg, delta: i64) {
+        if delta == 0 && rd == rs {
+            return;
+        }
+        if (-2048..=2047).contains(&delta) {
+            self.e(Instr::Addi { rd, rs1: rs, imm: delta as i16 });
+        } else {
+            self.movi(R_NOP, delta);
+            self.e(Instr::Add { rd, rs1: rs, rs2: R_NOP });
+        }
+    }
+
+    /// Counted loop: runs `body` `n` times. `tail` returns up to 4
+    /// iteration-epilogue instructions (safe to run every iteration,
+    /// mutually independent) used to fill the branch delay slots in
+    /// smart mode; in plain mode they run before the branch and the
+    /// slots are no-ops — the instruction-count-vs-latency trade of
+    /// §5.2.
+    pub fn counted_loop<B, T>(&mut self, cnt: Reg, lim: Reg, n: usize, body: B, tail: T)
+    where
+        B: FnOnce(&mut Self),
+        T: FnOnce(&mut Self, bool),
+    {
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            body(self);
+            tail(self, false);
+            return;
+        }
+        self.movi(cnt, 0);
+        self.movi(lim, n as i64 - 1);
+        let start = self.prog.len();
+        body(self);
+        if self.smart {
+            self.e(Instr::Addi { rd: cnt, rs1: cnt, imm: 1 });
+            let off = start as i64 - self.prog.len() as i64;
+            self.e(Instr::Ble { rs1: cnt, rs2: lim, off: off as i16 });
+            let before = self.prog.len();
+            tail(self, true);
+            let emitted = self.prog.len() - before;
+            assert!(emitted <= self.cfg.branch_delay_slots, "tail too long for delay slots");
+            for _ in emitted..self.cfg.branch_delay_slots {
+                self.nop();
+            }
+        } else {
+            tail(self, false);
+            self.e(Instr::Addi { rd: cnt, rs1: cnt, imm: 1 });
+            let off = start as i64 - self.prog.len() as i64;
+            self.e(Instr::Ble { rs1: cnt, rs2: lim, off: off as i16 });
+            for _ in 0..self.cfg.branch_delay_slots {
+                self.nop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_8;
+    use crate::sim::Machine;
+
+    fn run(prog: Program) -> Machine {
+        let mut m = Machine::new(SnowflakeConfig::default(), Q8_8, 1024);
+        let mut p = prog;
+        p.push(Instr::Halt);
+        crate::isa::verify::assert_valid(&p.instrs, &m.cfg);
+        m.load_program(p.instrs);
+        m.run().expect("run");
+        m
+    }
+
+    #[test]
+    fn movi_wide_values() {
+        let cfg = SnowflakeConfig::default();
+        for &val in &[0i64, 1, -1, 2047, 4_194_303, 4_194_304, 20_000_000, (1 << 30) + 12345] {
+            let mut e = Emitter::new(&cfg, false);
+            e.movi(1, val);
+            let m = run(e.prog);
+            assert_eq!(m.regs[1], val, "val {val}");
+        }
+    }
+
+    #[test]
+    fn addi_wide_deltas() {
+        let cfg = SnowflakeConfig::default();
+        for &d in &[0i64, 5, -2048, 2047, 2048, 100_000, -1_000_000] {
+            let mut e = Emitter::new(&cfg, false);
+            e.movi(1, 7);
+            e.addi(2, 1, d);
+            let m = run(e.prog);
+            assert_eq!(m.regs[2], 7 + d, "delta {d}");
+        }
+    }
+
+    #[test]
+    fn counted_loop_runs_n_times() {
+        let cfg = SnowflakeConfig::default();
+        for smart in [false, true] {
+            for n in [1usize, 2, 7] {
+                let mut e = Emitter::new(&cfg, smart);
+                e.counted_loop(
+                    R_XC,
+                    R_XL,
+                    n,
+                    |e| e.e(Instr::Addi { rd: 5, rs1: 5, imm: 1 }),
+                    |e, _| e.e(Instr::Addi { rd: 6, rs1: 6, imm: 1 }),
+                );
+                let m = run(e.prog);
+                assert_eq!(m.regs[5], n as i64, "body n={n} smart={smart}");
+                assert_eq!(m.regs[6], n as i64, "tail n={n} smart={smart}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_loops() {
+        let cfg = SnowflakeConfig::default();
+        let mut e = Emitter::new(&cfg, true);
+        e.counted_loop(
+            R_YC,
+            R_YL,
+            3,
+            |e| {
+                e.counted_loop(
+                    R_XC,
+                    R_XL,
+                    5,
+                    |e| e.e(Instr::Addi { rd: 5, rs1: 5, imm: 1 }),
+                    |e, _| e.e(Instr::Addi { rd: 6, rs1: 6, imm: 1 }),
+                );
+            },
+            |e, _| e.e(Instr::Addi { rd: 7, rs1: 7, imm: 1 }),
+        );
+        let m = run(e.prog);
+        assert_eq!(m.regs[5], 15);
+        assert_eq!(m.regs[6], 15);
+        assert_eq!(m.regs[7], 3);
+    }
+
+    #[test]
+    fn smart_loops_are_shorter() {
+        let cfg = SnowflakeConfig::default();
+        let mk = |smart: bool| {
+            let mut e = Emitter::new(&cfg, smart);
+            e.counted_loop(
+                R_XC,
+                R_XL,
+                4,
+                |e| e.e(Instr::Addi { rd: 5, rs1: 5, imm: 1 }),
+                |e, _| {
+                    e.e(Instr::Addi { rd: 6, rs1: 6, imm: 1 });
+                    e.e(Instr::Addi { rd: 7, rs1: 7, imm: 1 });
+                },
+            );
+            e.prog.len()
+        };
+        assert!(mk(true) < mk(false));
+    }
+}

@@ -1,0 +1,150 @@
+//! Fully-connected code generation.
+//!
+//! FC is the paper's uniform-trace showcase: a 1×1-spatial COOP conv
+//! whose single window is one long dot product, chunk-streamed through
+//! the double-buffered weight buffers because a whole kernel row exceeds
+//! them. 16 kernels are distributed across the machine per iteration —
+//! 4 per-CU weight buffers × 4 CUs = the paper's "16 weight LDs in a 4
+//! CU system" — with the per-CU output stride (r31 = 4 channels)
+//! scattering results. Inherently bandwidth-bound (§2), excluded from
+//! the paper's reported times; compiled and measured here regardless.
+
+use super::emit::*;
+use crate::arch::SnowflakeConfig;
+use crate::compiler::balance::{StreamClass, UnitAllocator};
+use crate::compiler::decide::FcPlan;
+use crate::compiler::layout::Canvas;
+use crate::compiler::CompileOptions;
+use crate::isa::instr::{Instr, LdTarget, MacFlags, Program, VmovSel};
+
+pub struct FcCtx<'a> {
+    pub cfg: &'a SnowflakeConfig,
+    pub opts: &'a CompileOptions,
+    pub in_cv: Canvas,
+    pub out_cv: Canvas,
+    pub weights_addr: usize,
+    pub bias_addr: usize,
+}
+
+/// Emit an FC layer: prologue + kernel-group loop.
+pub fn emit_fc(ctx: &FcCtx, d: &FcPlan, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let feat: usize = d.chunks.iter().sum();
+    let kernel_words = feat;
+    let group_words = 16 * kernel_words;
+    let region_words = cfg.wbuf_region_words();
+    let mut blocks = Vec::new();
+
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    // Input feature vector -> MBuf bank 0 (broadcast; the canvas is
+    // contiguous for 1x1/flattenable inputs).
+    {
+        let unit = alloc.unit_for(StreamClass::Maps, feat);
+        e.movi(R_LDTMP, 0);
+        e.movi(R_T0, ctx.in_cv.base as i64);
+        e.movi(R_T1, feat as i64);
+        e.e(Instr::Ld {
+            target: LdTarget::MBuf { cu: 0, bank: 0 },
+            broadcast: true,
+            unit,
+            rd: R_LDTMP,
+            rs1: R_T0,
+            rs2: R_T1,
+        });
+    }
+    // Per-CU bias slices: deploy arranges bias as [cu][group][4].
+    {
+        let slice = d.k_groups * 4;
+        for cu in 0..cfg.n_cus {
+            let unit = alloc.unit_for(StreamClass::Bias, slice);
+            e.movi(R_LDTMP, 0);
+            e.movi(R_T0, (ctx.bias_addr + cu * slice) as i64);
+            e.movi(R_T1, slice as i64);
+            e.e(Instr::Ld {
+                target: LdTarget::BBuf { cu: cu as u8 },
+                broadcast: false,
+                unit,
+                rd: R_LDTMP,
+                rs1: R_T0,
+                rs2: R_T1,
+            });
+        }
+    }
+    e.movi(28, 1); // vmac stride: adjacent channels
+    e.movi(31, 4); // CU stride: 4 channels
+    e.movi(R_KW, kernel_words as i64);
+    e.movi(R_REGION, region_words as i64);
+    e.movi(R_KMEM, ctx.weights_addr as i64);
+    e.movi(R_WREG, 0);
+    e.movi(R_BIAS, 0);
+    e.movi(R_OUT, ctx.out_cv.addr_u(0, 0, 0) as i64);
+    blocks.push(e.prog);
+
+    // Kernel-group loop: weights for group kg live at
+    // weights_addr + kg*group_words, arranged [chunk][cu][vmac][chunk_words].
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    e.counted_loop(
+        R_KC,
+        R_KL,
+        d.k_groups,
+        |e| {
+            e.e(Instr::Vmov { sel: VmovSel::Bias, rs1: R_BIAS, wide: false });
+            // Chunks: load chunk j (region j%2), MAC it; the region
+            // interlock orders reloads behind pending readers.
+            let mut m_off = 0usize;
+            let mut w_off = 0usize; // offset within the group's DRAM image
+            e.movi(R_T1, 0); // placeholder; set per chunk below
+            for (j, &chunk) in d.chunks.iter().enumerate() {
+                let region = (j % 2) * region_words;
+                // 16 per-CU kernel-chunk loads.
+                e.movi(R_T1, chunk as i64);
+                for cu in 0..cfg.n_cus {
+                    for v in 0..cfg.vmacs_per_cu {
+                        let unit = alloc.unit_for(StreamClass::Weights, chunk);
+                        e.addi(
+                            R_LDTMP,
+                            R_KMEM,
+                            (w_off + (cu * cfg.vmacs_per_cu + v) * chunk) as i64,
+                        );
+                        e.movi(R_T0, region as i64);
+                        e.e(Instr::Ld {
+                            target: LdTarget::WBuf { cu: cu as u8, vmac: v as u8 },
+                            broadcast: false,
+                            unit,
+                            rd: R_T0,
+                            rs1: R_LDTMP,
+                            rs2: R_T1,
+                        });
+                    }
+                }
+                // MAC over this chunk.
+                e.movi(R_MTRACE, m_off as i64);
+                e.movi(R_WTRACE, region as i64);
+                let last = j + 1 == d.chunks.len();
+                e.e(Instr::Mac {
+                    coop: true,
+                    rd: R_OUT,
+                    rs1: R_MTRACE,
+                    rs2: R_WTRACE,
+                    len: (chunk / 16) as u8,
+                    flags: MacFlags {
+                        reset: j == 0,
+                        writeback: last,
+                        relu: last && d.relu,
+                        bypass: false,
+                    },
+                });
+                m_off += chunk;
+                w_off += 16 * chunk;
+            }
+            // Advance to the next group.
+            e.addi(R_KMEM, R_KMEM, group_words as i64);
+        },
+        |e, _| {
+            e.e(Instr::Addi { rd: R_BIAS, rs1: R_BIAS, imm: 4 });
+            e.e(Instr::Addi { rd: R_OUT, rs1: R_OUT, imm: 16 });
+        },
+    );
+    blocks.push(e.prog);
+    blocks
+}

@@ -1,0 +1,182 @@
+//! Instruction generation (§5.2): per-tile instruction blocks from the
+//! layer emitters, concatenated with instruction-cache bank packing —
+//! "the compiler inserts load for the following instruction cache bank
+//! at the beginning of each instruction block" — block-size prediction
+//! against the bank constraint, and a final verifier pass.
+
+pub mod conv;
+pub mod emit;
+pub mod fc;
+pub mod pool;
+
+use super::balance::{StreamClass, UnitAllocator};
+use super::decide::OpPlan;
+use super::layout::{Lowered, Plan};
+use super::{CompileError, CompileOptions, CompiledModel};
+use crate::arch::SnowflakeConfig;
+use crate::isa::instr::{Instr, LdTarget, Program};
+use crate::isa::verify;
+use emit::{R_LDTMP, R_T0, R_T1};
+
+/// Slots reserved at every bank start (from the second bank on) for the
+/// next-bank icache load.
+const PROLOGUE_SLOTS: usize = 8;
+
+/// Generate the full instruction stream for a planned model.
+pub fn generate(
+    graph: &crate::model::graph::Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+    mut plan: Plan,
+) -> Result<CompiledModel, CompileError> {
+    let _ = graph;
+    let mut alloc = UnitAllocator::new(opts.balance, cfg.n_load_units);
+
+    // Per-layer blocks.
+    let mut blocks: Vec<Program> = Vec::new();
+    let mut layer_of_block: Vec<usize> = Vec::new();
+    for (li, lp) in plan.layers.iter().enumerate() {
+        let in_cv = plan.in_canvas(&lp.op);
+        let out_cv = plan.out_canvas(&lp.op);
+        let bs = match (&lp.op, &lp.decision) {
+            (Lowered::Conv { bypass, .. }, OpPlan::Conv(d)) => {
+                let ctx = conv::ConvCtx {
+                    cfg,
+                    opts,
+                    d,
+                    in_cv,
+                    out_cv,
+                    byp_cv: bypass.map(|b| plan.canvases[&b]),
+                    weights_addr: lp.weights_addr,
+                    bias_addr: lp.bias_addr,
+                };
+                conv::emit_conv(&ctx, &mut alloc)
+            }
+            (Lowered::MaxPool { .. }, OpPlan::MaxPool(d)) => {
+                let ctx = pool::PoolCtx { cfg, opts, in_cv, out_cv };
+                pool::emit_maxpool(&ctx, d, &mut alloc)
+            }
+            (Lowered::AvgPool { .. }, OpPlan::AvgPool(d)) => {
+                let ctx = pool::AvgCtx {
+                    cfg,
+                    opts,
+                    in_cv,
+                    out_cv,
+                    weights_addr: lp.weights_addr,
+                    zero_addr: plan.zero_addr,
+                };
+                pool::emit_avgpool(&ctx, d, &mut alloc)
+            }
+            (Lowered::Fc { .. }, OpPlan::Fc(d)) => {
+                if opts.skip_fc {
+                    Vec::new()
+                } else {
+                    let ctx = fc::FcCtx {
+                        cfg,
+                        opts,
+                        in_cv,
+                        out_cv,
+                        weights_addr: lp.weights_addr,
+                        bias_addr: lp.bias_addr,
+                    };
+                    fc::emit_fc(&ctx, d, &mut alloc)
+                }
+            }
+            _ => return Err(CompileError("op/plan mismatch".into())),
+        };
+        for b in bs {
+            blocks.push(b);
+            layer_of_block.push(li);
+        }
+    }
+
+    // ---- bank packing (block-size prediction + icache prologues) -----
+    let bank = cfg.icache_bank_instrs;
+    for (bi, b) in blocks.iter().enumerate() {
+        if b.len() > bank - PROLOGUE_SLOTS {
+            return Err(CompileError(format!(
+                "block {bi} (layer {}) has {} instructions; exceeds the {}-instruction bank \
+                 budget — a different generation strategy is required (§5.2)",
+                layer_of_block[bi],
+                b.len(),
+                bank - PROLOGUE_SLOTS
+            )));
+        }
+    }
+
+    let mut stream = Program::new();
+    let mut layer_ranges: Vec<(usize, String, std::ops::Range<usize>)> = Vec::new();
+    let emit_prologue = |stream: &mut Program, alloc: &mut UnitAllocator, chunk: usize| {
+        // Load chunk+1 into its bank while this bank executes.
+        let start = stream.len();
+        let next = chunk + 1;
+        let mut e = emit::Emitter::new(cfg, opts.smart_delay_slots);
+        e.movi(R_T0, (next * bank) as i64);
+        e.movi(R_T1, (plan.program_addr + next * bank * 2) as i64);
+        e.movi(R_LDTMP, bank as i64);
+        let unit = alloc.unit_for(StreamClass::ICache, bank * 2);
+        e.c(
+            Instr::Ld {
+                target: LdTarget::ICache { bank: (next % cfg.icache_banks) as u8 },
+                broadcast: true,
+                unit,
+                rd: R_T0,
+                rs1: R_T1,
+                rs2: R_LDTMP,
+            },
+            &format!("icache chunk {next}"),
+        );
+        stream.extend(&e.prog);
+        while stream.len() - start < PROLOGUE_SLOTS {
+            stream.push(Instr::Addi { rd: emit::R_NOP, rs1: 0, imm: 0 });
+        }
+    };
+
+    for (bi, b) in blocks.iter().enumerate() {
+        let pos = stream.len() % bank;
+        let space = bank - pos;
+        if b.len() + if pos == 0 { PROLOGUE_SLOTS } else { 0 } > space {
+            // Pad to the bank boundary; the prologue goes at its start.
+            for _ in 0..space {
+                stream.push(Instr::Addi { rd: emit::R_NOP, rs1: 0, imm: 0 });
+            }
+        }
+        let chunk_now = stream.len() / bank;
+        if stream.len() % bank == 0 && chunk_now >= 1 {
+            emit_prologue(&mut stream, &mut alloc, chunk_now);
+        }
+        let start = stream.len();
+        stream.extend(b);
+        let li = layer_of_block[bi];
+        let name = plan.layers[li].op.name().to_string();
+        match layer_ranges.last_mut() {
+            Some((l, _, r)) if *l == li => r.end = stream.len(),
+            _ => layer_ranges.push((li, name, start..stream.len())),
+        }
+    }
+    stream.push(Instr::Halt);
+    let code_len = stream.len();
+    // Pad the image to a whole bank, plus one spare bank of HALTs: the
+    // last bank's prologue prefetches a next chunk that must exist in
+    // the DRAM image even though it never executes.
+    while stream.len() % bank != 0 {
+        stream.push(Instr::Halt);
+    }
+    for _ in 0..bank {
+        stream.push(Instr::Halt);
+    }
+
+    // Verify against the architectural constraints.
+    let violations = verify::verify(&stream.instrs, cfg);
+    if !violations.is_empty() {
+        let head: Vec<String> = violations.iter().take(5).map(|v| v.to_string()).collect();
+        return Err(CompileError(format!(
+            "generated stream fails verification ({} violations): {}",
+            violations.len(),
+            head.join("; ")
+        )));
+    }
+
+    plan.mem_words = plan.program_addr + stream.len() * 2;
+    Ok(CompiledModel { program: stream, plan, layer_ranges, code_len })
+}

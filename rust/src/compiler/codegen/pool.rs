@@ -1,0 +1,324 @@
+//! Pooling code generation.
+//!
+//! **Max pooling** drives the pool unit's MAX instruction: lanes are 16
+//! output columns (register lane stride = stride × c_pad over the
+//! interleaved canvas), one MAX per window tap, writeback of the
+//! retained vector with a partial lane count on the ragged last group.
+//!
+//! **Average pooling** follows §2's prescription — "implemented as a
+//! CONV with a single weight value of inverse of window size" — lowered
+//! depthwise onto INDP MACs with per-vMAC *diagonal* weight blocks: lane
+//! `l` of vMAC `v` holds 1/(kh·kw) at trace step `v·16+l` and zero
+//! elsewhere, so one 64-step trace accumulates 64 channel means.
+
+use super::emit::*;
+use crate::arch::SnowflakeConfig;
+use crate::compiler::balance::{StreamClass, UnitAllocator};
+use crate::compiler::decide::{AvgPlan, PoolPlan};
+use crate::compiler::layout::Canvas;
+use crate::compiler::tile::{map_tiles, MapTile};
+use crate::compiler::CompileOptions;
+use crate::isa::instr::{Instr, LdTarget, MacFlags, Program, VmovSel};
+
+pub struct PoolCtx<'a> {
+    pub cfg: &'a SnowflakeConfig,
+    pub opts: &'a CompileOptions,
+    pub in_cv: Canvas,
+    pub out_cv: Canvas,
+}
+
+fn emit_pool_maps_loads(
+    e: &mut Emitter,
+    ctx: &PoolCtx,
+    d: &PoolPlan,
+    tile: &MapTile,
+    alloc: &mut UnitAllocator,
+) {
+    // Spill rows: the 16-lane strided read of the last x-group can run
+    // into the following canvas rows.
+    let strip_rows = tile.in_rows(d.kh, d.stride) + d.spill;
+    let strip_words = strip_rows * ctx.in_cv.row_words();
+    let bank_base = tile.bank * ctx.cfg.mbuf_bank_words();
+    assert!(strip_words <= ctx.cfg.mbuf_bank_words(), "pool strip exceeds MBuf bank");
+    let split = alloc.map_split().min(strip_words.div_ceil(64));
+    for cu in 0..ctx.cfg.n_cus {
+        let cy0 = tile.cu_oy0(cu) * d.stride + (ctx.in_cv.mp - d.pad);
+        let mem0 = ctx.in_cv.raw_row(cy0);
+        let piece = strip_words.div_ceil(split);
+        let mut off = 0usize;
+        while off < strip_words {
+            let len = piece.min(strip_words - off);
+            let unit = alloc.unit_for(StreamClass::Maps, len);
+            e.movi(R_LDTMP, (bank_base + off) as i64);
+            e.movi(R_T0, (mem0 + off) as i64);
+            e.movi(R_T1, len as i64);
+            e.e(Instr::Ld {
+                target: LdTarget::MBuf { cu: cu as u8, bank: tile.bank as u8 },
+                broadcast: false,
+                unit,
+                rd: R_LDTMP,
+                rs1: R_T0,
+                rs2: R_T1,
+            });
+            off += len;
+        }
+    }
+}
+
+/// Emit a max-pool layer: one block per map tile.
+pub fn emit_maxpool(ctx: &PoolCtx, d: &PoolPlan, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let tiles = map_tiles(d.h_out, d.rows_per_cu, cfg);
+    let row_words_in = ctx.in_cv.row_words() as i64;
+    let row_words_out = ctx.out_cv.row_words() as i64;
+    let mut blocks = Vec::new();
+
+    // Prologue: constants + tile 0 strips.
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    e.movi(R_ROWW_IN, row_words_in);
+    e.movi(R_XADV, (d.stride * d.c_pad) as i64); // lane stride register
+    e.movi(R_YADV, d.stride as i64 * row_words_in);
+    e.movi(R_ROWW_OUT, row_words_out);
+    e.movi(28, ctx.out_cv.c_pad as i64); // writeback lane stride: columns
+    emit_pool_maps_loads(&mut e, ctx, d, &tiles[0], alloc);
+    blocks.push(e.prog);
+
+    for (t, tile) in tiles.iter().enumerate() {
+        let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+        if t + 1 < tiles.len() {
+            emit_pool_maps_loads(&mut e, ctx, d, &tiles[t + 1], alloc);
+        }
+        let bank_base = (tile.bank * cfg.mbuf_bank_words()) as i64;
+        let col_off = ((ctx.in_cv.mp - d.pad) * d.c_pad) as i64;
+        e.movi(R_MROW, bank_base + col_off);
+        e.movi(R_OUTBASE, ctx.out_cv.addr_u(0, tile.oy0, 0) as i64);
+        e.movi(31, tile.rows_per_cu as i64 * row_words_out);
+        e.counted_loop(
+            R_YC,
+            R_YL,
+            tile.rows_per_cu,
+            |e| {
+                // Channel loop: R_MWIN walks +1 per channel, R_OUT too.
+                e.e(Instr::Add { rd: R_MWIN, rs1: R_MROW, rs2: 0 });
+                e.e(Instr::Add { rd: R_OUT, rs1: R_OUTBASE, rs2: 0 });
+                e.counted_loop(
+                    R_XC,
+                    R_XL,
+                    d.c,
+                    |e| {
+                        // x-groups unrolled: lanes = output columns.
+                        for xg in 0..d.x_groups {
+                            let lanes_left = d.w_out - xg * 16;
+                            let wb_lanes = if lanes_left >= 16 { 0 } else { lanes_left as u8 };
+                            // Tap base for this group.
+                            e.addi(
+                                R_MTRACE,
+                                R_MWIN,
+                                (xg * 16 * d.stride * d.c_pad) as i64,
+                            );
+                            e.addi(R_T1, R_OUT, (xg * 16) as i64 * ctx.out_cv.c_pad as i64);
+                            for fy in 0..d.kh {
+                                for fx in 0..d.kw {
+                                    let first = fy == 0 && fx == 0;
+                                    let last = fy == d.kh - 1 && fx == d.kw - 1;
+                                    e.e(Instr::Max {
+                                        rd: R_T1,
+                                        rs1: R_MTRACE,
+                                        rs2: R_XADV,
+                                        wb_lanes,
+                                        flags: MacFlags {
+                                            reset: first,
+                                            writeback: last,
+                                            relu: false,
+                                            bypass: false,
+                                        },
+                                    });
+                                    if !last {
+                                        if fx + 1 < d.kw {
+                                            e.addi(R_MTRACE, R_MTRACE, d.c_pad as i64);
+                                        } else {
+                                            e.addi(
+                                                R_MTRACE,
+                                                R_MTRACE,
+                                                row_words_in - ((d.kw - 1) * d.c_pad) as i64,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    },
+                    |e, _| {
+                        e.e(Instr::Addi { rd: R_MWIN, rs1: R_MWIN, imm: 1 });
+                        e.e(Instr::Addi { rd: R_OUT, rs1: R_OUT, imm: 1 });
+                    },
+                );
+            },
+            |e, _| {
+                e.e(Instr::Add { rd: R_MROW, rs1: R_MROW, rs2: R_YADV });
+                e.e(Instr::Add { rd: R_OUTBASE, rs1: R_OUTBASE, rs2: R_ROWW_OUT });
+            },
+        );
+        blocks.push(e.prog);
+    }
+    blocks
+}
+
+pub struct AvgCtx<'a> {
+    pub cfg: &'a SnowflakeConfig,
+    pub opts: &'a CompileOptions,
+    pub in_cv: Canvas,
+    pub out_cv: Canvas,
+    pub weights_addr: usize,
+    pub zero_addr: usize,
+}
+
+/// Emit an average-pool layer (depthwise INDP lowering). All CUs
+/// compute the same chunks redundantly (r31 = 0) — the layer is tiny.
+pub fn emit_avgpool(ctx: &AvgCtx, d: &AvgPlan, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let row_words_in = ctx.in_cv.row_words() as i64;
+    let mut blocks = Vec::new();
+
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    // Whole input canvas -> MBuf bank 0 (broadcast) when it fits; the
+    // oversized case (e.g. 7x7x2048) gathers per-chunk pieces instead.
+    let in_words = ctx.in_cv.words();
+    let resident = in_words <= cfg.mbuf_bank_words();
+    if resident {
+        let unit = alloc.unit_for(StreamClass::Maps, in_words);
+        e.movi(R_LDTMP, 0);
+        e.movi(R_T0, ctx.in_cv.base as i64);
+        e.movi(R_T1, in_words as i64);
+        e.e(Instr::Ld {
+            target: LdTarget::MBuf { cu: 0, bank: 0 },
+            broadcast: true,
+            unit,
+            rd: R_LDTMP,
+            rs1: R_T0,
+            rs2: R_T1,
+        });
+    }
+    // Diagonal weight blocks (one per vMAC, 1024 words each) -> region 0.
+    e.movi(R_T1, 1024);
+    e.movi(R_LDTMP, 0);
+    for v in 0..cfg.vmacs_per_cu {
+        let unit = alloc.unit_for(StreamClass::Weights, 1024);
+        e.movi(R_T0, (ctx.weights_addr + v * 1024) as i64);
+        e.e(Instr::Ld {
+            target: LdTarget::WBuf { cu: 0, vmac: v as u8 },
+            broadcast: true,
+            unit,
+            rd: R_LDTMP,
+            rs1: R_T0,
+            rs2: R_T1,
+        });
+    }
+    // Zero biases: 64 zero words -> BBuf, VMOV wide.
+    {
+        let unit = alloc.unit_for(StreamClass::Bias, 64);
+        e.movi(R_T0, ctx.zero_addr as i64);
+        e.movi(R_T1, 64);
+        e.movi(R_LDTMP, 0);
+        e.e(Instr::Ld {
+            target: LdTarget::BBuf { cu: 0 },
+            broadcast: true,
+            unit,
+            rd: R_LDTMP,
+            rs1: R_T0,
+            rs2: R_T1,
+        });
+        e.movi(R_T0, 0);
+        e.e(Instr::Vmov { sel: VmovSel::Bias, rs1: R_T0, wide: true });
+    }
+    e.movi(28, 1); // lanes write adjacent channels
+    e.movi(31, 0); // CUs redundant
+    blocks.push(e.prog);
+
+    // Compute blocks: split chunks across blocks to respect bank size.
+    let taps = d.kh * d.kw;
+    let per_chunk_instrs = if resident { taps * 3 + 8 } else { taps * 7 + 16 };
+    let chunks_per_block = ((cfg.icache_bank_instrs - 16) / per_chunk_instrs).max(1);
+    let mut chunk = 0usize;
+    while chunk < d.chunks * d.h_out * d.w_out {
+        let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+        for _ in 0..chunks_per_block {
+            if chunk >= d.chunks * d.h_out * d.w_out {
+                break;
+            }
+            let c0 = (chunk % d.chunks) * 64;
+            let pix = chunk / d.chunks;
+            let (oy, ox) = (pix / d.w_out, pix % d.w_out);
+            let iy0 = oy * d.stride + ctx.in_cv.mp;
+            let ix0 = ox * d.stride + ctx.in_cv.mp;
+            if !resident {
+                // Gather path: DMA each tap's 64-word channel slice into
+                // a packed MBuf staging area [tap*64 ..].
+                e.movi(R_T1, 64);
+                for (t, (fy, fx)) in
+                    (0..d.kh).flat_map(|fy| (0..d.kw).map(move |fx| (fy, fx))).enumerate()
+                {
+                    let src = ctx.in_cv.base
+                        + (iy0 + fy) * ctx.in_cv.row_words()
+                        + (ix0 + fx) * d.c_pad
+                        + c0;
+                    let unit = alloc.unit_for(StreamClass::Maps, 64);
+                    e.movi(R_LDTMP, (t * 64) as i64);
+                    e.movi(R_T0, src as i64);
+                    e.e(Instr::Ld {
+                        target: LdTarget::MBuf { cu: 0, bank: 0 },
+                        broadcast: true,
+                        unit,
+                        rd: R_LDTMP,
+                        rs1: R_T0,
+                        rs2: R_T1,
+                    });
+                }
+            }
+            // MBuf address of the first tap.
+            let m0 = if resident {
+                (iy0 as i64) * row_words_in + ((ix0 * d.c_pad + c0) as i64)
+            } else {
+                0
+            };
+            e.movi(R_MTRACE, m0);
+            e.movi(R_OUT, ctx.out_cv.addr_u(c0, oy, ox) as i64);
+            e.movi(R_WTRACE, 0);
+            for fy in 0..d.kh {
+                for fx in 0..d.kw {
+                    let first = fy == 0 && fx == 0;
+                    let last = fy == d.kh - 1 && fx == d.kw - 1;
+                    e.e(Instr::Mac {
+                        coop: false,
+                        rd: R_OUT,
+                        rs1: R_MTRACE,
+                        rs2: R_WTRACE,
+                        len: 64,
+                        flags: MacFlags {
+                            reset: first,
+                            writeback: last,
+                            relu: false,
+                            bypass: false,
+                        },
+                    });
+                    if !last {
+                        if !resident {
+                            e.addi(R_MTRACE, R_MTRACE, 64);
+                        } else if fx + 1 < d.kw {
+                            e.addi(R_MTRACE, R_MTRACE, d.c_pad as i64);
+                        } else {
+                            e.addi(
+                                R_MTRACE,
+                                R_MTRACE,
+                                row_words_in - ((d.kw - 1) * d.c_pad) as i64,
+                            );
+                        }
+                    }
+                }
+            }
+            chunk += 1;
+        }
+        blocks.push(e.prog);
+    }
+    blocks
+}

@@ -1,0 +1,583 @@
+//! Step 3 of model parsing (§5.1): per-layer decision variables from
+//! the shared hardware parameter object — COOP/INDP mode, loop
+//! rearrangement (Mloop vs Kloop, §6.2), tile size limits from buffer
+//! capacities, and trace segmentation from the instruction-latency
+//! constraints.
+//!
+//! Mode note (DESIGN.md §ISA-reconstruction): with the channel-
+//! interleaved canvas layout every convolution — including the 3-channel
+//! first layer — maps efficiently onto COOP traces (channels pad to 4,
+//! window rows pad to whole vector words), so the compiler emits COOP
+//! for all convolutions and fully-connected layers and reserves INDP for
+//! the depthwise average-pool lowering, where the 16-lane diagonal
+//! weight block computes 64 channel means per trace group.
+
+use super::layout::{c_pad, Lowered};
+use super::{CompileError, CompileOptions, LoopOrder};
+use crate::arch::SnowflakeConfig;
+use crate::model::layer::Shape;
+
+/// Largest trace segment in scalar words. The len field allows 255
+/// vector words (4080 scalars); segment-advance bookkeeping uses 12-bit
+/// ADDI immediates, capping segments at 2032 (127 vector words).
+pub const MAX_SEG: usize = 2032;
+
+/// Conv/FC trace geometry (pure function of shapes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Geom {
+    /// Window-row read length in scalars, padded to whole vector words.
+    pub row_read: usize,
+    /// Segment lengths (sum == row_read, each ≤ MAX_SEG, multiples of 16).
+    pub segs: Vec<usize>,
+    /// Extra interior columns the padded trace reads past the margin.
+    pub in_w_slack: usize,
+}
+
+/// Split `total` into ≤cap segments that are multiples of 16.
+fn split_segs(total: usize, cap: usize) -> Vec<usize> {
+    debug_assert!(total % 16 == 0);
+    let n = total.div_ceil(cap);
+    let per = (total / n).div_ceil(16) * 16;
+    let mut out = Vec::with_capacity(n);
+    let mut left = total;
+    while left > 0 {
+        let s = per.min(left);
+        out.push(s);
+        left -= s;
+    }
+    out
+}
+
+/// Trace geometry for a conv-like window over an interleaved canvas.
+pub fn conv_geometry(in_shape: Shape, kw: usize, stride: usize, pad: usize, w_out: usize) -> Geom {
+    let cp = c_pad(in_shape.c);
+    let row_scalars = kw * cp;
+    let row_read = row_scalars.div_ceil(16) * 16;
+    let segs = split_segs(row_read, MAX_SEG);
+    // Padded-trace overreach past the row end wraps into the next strip
+    // row (harmless: the extra words multiply zero weights), so no
+    // canvas column slack is needed — only strip spill rows.
+    let _ = (stride, pad, w_out);
+    Geom { row_read, segs, in_w_slack: 0 }
+}
+
+/// Spill rows a conv strip needs beyond its windows (the padded trace
+/// of the last window reads into the following row).
+pub const CONV_SPILL_ROWS: usize = 1;
+
+/// Spill rows a pool strip needs: the 16-lane strided read of the last
+/// x-group can run up to `15*stride + kw` columns past the row end.
+pub fn pool_spill_rows(stride: usize, kw: usize, w_canvas: usize) -> usize {
+    (15 * stride + kw).div_ceil(w_canvas.max(1)).max(1)
+}
+
+/// Pool lane reads never require canvas column slack (garbage lanes are
+/// masked by `wb_lanes`); kept for call-site symmetry.
+pub fn pool_geometry(_in_shape: Shape, _kw: usize, _stride: usize, _pad: usize, _w_out: usize) -> usize {
+    0
+}
+
+/// Per-op compiled plan (decision variables + derived tiling).
+#[derive(Clone, Debug)]
+pub enum OpPlan {
+    Conv(ConvPlan),
+    MaxPool(PoolPlan),
+    AvgPool(AvgPlan),
+    Fc(FcPlan),
+}
+
+#[derive(Clone, Debug)]
+pub struct ConvPlan {
+    pub c_pad_in: usize,
+    pub c_pad_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub geom: Geom,
+    /// Arranged words of one kernel (kh × row_read).
+    pub kernel_words: usize,
+    /// Kernel groups of 4 (one per vMAC), padded.
+    pub k_groups: usize,
+    pub rows_per_cu: usize,
+    pub n_tiles: usize,
+    pub order: LoopOrder,
+    /// Kernel group fits a WBuf region → double-buffered group loads.
+    pub dbuf_w: bool,
+    pub has_bypass: bool,
+    pub relu: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct PoolPlan {
+    pub c: usize,
+    pub c_pad: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub x_groups: usize,
+    pub rows_per_cu: usize,
+    pub n_tiles: usize,
+    /// Strip spill rows (lane overreach).
+    pub spill: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct AvgPlan {
+    pub c: usize,
+    pub c_pad: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    /// 64-channel chunks.
+    pub chunks: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct FcPlan {
+    pub in_features: usize,
+    pub out_features: usize,
+    pub k_groups: usize,
+    /// Weight-chunk segment lengths (≤ wbuf region, multiples of 16).
+    pub chunks: Vec<usize>,
+    pub relu: bool,
+}
+
+impl OpPlan {
+    pub fn rows_per_cu(&self) -> usize {
+        match self {
+            OpPlan::Conv(p) => p.rows_per_cu,
+            OpPlan::MaxPool(p) => p.rows_per_cu,
+            _ => 1,
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        match self {
+            OpPlan::Conv(p) => p.n_tiles,
+            OpPlan::MaxPool(p) => p.n_tiles,
+            _ => 1,
+        }
+    }
+
+    pub fn pad(&self) -> usize {
+        match self {
+            OpPlan::Conv(p) => p.pad,
+            OpPlan::MaxPool(p) => p.pad,
+            _ => 0,
+        }
+    }
+
+    /// Input rows (margin-inclusive) consumed when `rows_out` output
+    /// rows are produced — for canvas slack sizing.
+    pub fn in_rows_needed(&self, rows_out: usize) -> usize {
+        match self {
+            OpPlan::Conv(p) => {
+                if rows_out == 0 {
+                    0
+                } else {
+                    (rows_out - 1) * p.stride + p.kh + CONV_SPILL_ROWS
+                }
+            }
+            OpPlan::MaxPool(p) => {
+                if rows_out == 0 {
+                    0
+                } else {
+                    (rows_out - 1) * p.stride + p.kh + p.spill
+                }
+            }
+            OpPlan::AvgPool(p) => (p.h_out - 1) * p.stride + p.kh,
+            OpPlan::Fc(_) => 1,
+        }
+    }
+
+    /// Extra input-canvas columns needed (trace/lane overreach).
+    pub fn in_w_slack(&self) -> usize {
+        match self {
+            OpPlan::Conv(p) => p.geom.in_w_slack,
+            OpPlan::MaxPool(p) => {
+                pool_geometry(
+                    Shape::new(p.c, p.h_out * p.stride, p.w_out * p.stride),
+                    p.kw,
+                    p.stride,
+                    p.pad,
+                    p.w_out,
+                )
+            }
+            _ => 0,
+        }
+    }
+
+    /// (weights, bias) DRAM words to reserve.
+    pub fn weight_bias_words(&self) -> (usize, usize) {
+        match self {
+            OpPlan::Conv(p) => {
+                // One dummy prefetch group beyond the last (§ codegen:
+                // the steady-state prefetch reads one group ahead).
+                ((p.k_groups + 1) * 4 * p.kernel_words, p.k_groups * 4)
+            }
+            OpPlan::Fc(p) => {
+                // FC distributes 16 kernels across the machine (4 per-CU
+                // vMACs x 4 CUs — the paper's "16 weight LDs"), plus one
+                // dummy prefetch group.
+                let kw: usize = p.chunks.iter().sum();
+                ((p.k_groups + 1) * 16 * kw, p.k_groups * 16)
+            }
+            OpPlan::AvgPool(_) => (4 * 64 * 16, 0), // 4 per-vMAC diagonal blocks
+            OpPlan::MaxPool(_) => (0, 0),
+        }
+    }
+}
+
+/// Step-3 decision for one lowered op.
+pub fn decide(
+    op: &Lowered,
+    in_shape: Shape,
+    out_shape: Shape,
+    in_mp: usize,
+    in_w_slack_canvas: usize,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<OpPlan, CompileError> {
+    let bank = cfg.mbuf_bank_words();
+    let w_canvas_in = in_shape.w + 2 * in_mp + in_w_slack_canvas;
+    let row_words_in = w_canvas_in * c_pad(in_shape.c);
+
+    match *op {
+        Lowered::Conv { in_ch, out_ch, kh, kw, stride, pad, bypass, relu, .. } => {
+            let geom = conv_geometry(in_shape, kw, stride, pad, out_shape.w);
+            let kernel_words = kh * geom.row_read;
+            if kernel_words > cfg.wbuf_words() {
+                return Err(CompileError(format!(
+                    "kernel {}x{}x{} = {} words exceeds WBuf ({}); partial-kernel \
+                     accumulation passes are not reconstructed",
+                    kh,
+                    kw,
+                    in_ch,
+                    kernel_words,
+                    cfg.wbuf_words()
+                )));
+            }
+            let dbuf_w = kernel_words <= cfg.wbuf_region_words();
+            let k_groups = out_ch.div_ceil(4);
+            // MBuf constraint: per-CU input strip (+ spill row).
+            let max_in_rows = (bank / row_words_in).saturating_sub(CONV_SPILL_ROWS);
+            if max_in_rows < kh {
+                return Err(CompileError(format!(
+                    "one window ({kh} rows × {row_words_in} words) exceeds an MBuf bank"
+                )));
+            }
+            if out_shape.h < cfg.n_cus {
+                return Err(CompileError(format!(
+                    "conv output height {} below the CU count {}",
+                    out_shape.h, cfg.n_cus
+                )));
+            }
+            let mut rows_per_cu = ((max_in_rows - kh) / stride + 1).max(1);
+            // BBuf constraint when a bypass strip must stage alongside
+            // the biases (margin-inclusive rows of the output canvas).
+            if bypass.is_some() {
+                let row_words_out = (out_shape.w + 2 * in_mp + 8) * c_pad(out_shape.c);
+                let budget = cfg.bbuf_words().saturating_sub(k_groups * 4);
+                rows_per_cu = rows_per_cu.min((budget / row_words_out).max(1));
+            }
+            // Floor division: the tile span must not exceed h_out (the
+            // last tile shifts back and recomputes instead of writing
+            // garbage into the consumer's padding margin).
+            rows_per_cu = rows_per_cu.min((out_shape.h / cfg.n_cus).max(1));
+            let n_tiles = out_shape.h.div_ceil(rows_per_cu * cfg.n_cus);
+
+            // §6.2 loop rearrangement: pick the order with less traffic.
+            // Mloop keeps a 16-kernel machine set resident (4 CUs x 4
+            // vMACs) and re-sends map tiles per set; Kloop keeps map
+            // strips resident and re-streams kernels per tile.
+            let strip_words = ((rows_per_cu - 1) * stride + kh) * row_words_in;
+            let maps_once = n_tiles as u64 * cfg.n_cus as u64 * strip_words as u64;
+            let kernels_once = k_groups as u64 * 4 * kernel_words as u64;
+            let k_sets = out_ch.div_ceil(16) as u64;
+            let kloop_traffic = maps_once + kernels_once * n_tiles.max(1) as u64;
+            let mloop_traffic = maps_once * if n_tiles > 1 { k_sets } else { 1 } + kernels_once;
+            let order = opts.force_loop_order.unwrap_or(if kloop_traffic <= mloop_traffic {
+                LoopOrder::Kloop
+            } else {
+                LoopOrder::Mloop
+            });
+
+            Ok(OpPlan::Conv(ConvPlan {
+                c_pad_in: c_pad(in_shape.c),
+                c_pad_out: c_pad(out_shape.c),
+                kh,
+                kw,
+                stride,
+                pad,
+                h_out: out_shape.h,
+                w_out: out_shape.w,
+                geom,
+                kernel_words,
+                k_groups,
+                rows_per_cu,
+                n_tiles,
+                order,
+                dbuf_w,
+                has_bypass: bypass.is_some(),
+                relu,
+            }))
+        }
+        Lowered::MaxPool { kh, kw, stride, pad, .. } => {
+            let spill = pool_spill_rows(stride, kw, w_canvas_in);
+            let max_in_rows = (bank / row_words_in).saturating_sub(spill);
+            if max_in_rows < kh {
+                return Err(CompileError("maxpool window exceeds an MBuf bank".into()));
+            }
+            if out_shape.h < cfg.n_cus {
+                return Err(CompileError(format!(
+                    "maxpool output height {} below the CU count {}",
+                    out_shape.h, cfg.n_cus
+                )));
+            }
+            let mut rows_per_cu = ((max_in_rows - kh) / stride + 1).max(1);
+            rows_per_cu = rows_per_cu.min((out_shape.h / cfg.n_cus).max(1));
+            let n_tiles = out_shape.h.div_ceil(rows_per_cu * cfg.n_cus);
+            Ok(OpPlan::MaxPool(PoolPlan {
+                c: in_shape.c,
+                c_pad: c_pad(in_shape.c),
+                kh,
+                kw,
+                stride,
+                pad,
+                h_out: out_shape.h,
+                w_out: out_shape.w,
+                x_groups: out_shape.w.div_ceil(16),
+                rows_per_cu,
+                n_tiles,
+                spill,
+            }))
+        }
+        Lowered::AvgPool { kh, kw, stride, pad, .. } => {
+            if pad != 0 {
+                return Err(CompileError("padded avgpool is not supported".into()));
+            }
+            if c_pad(in_shape.c) % 64 != 0 {
+                return Err(CompileError(format!(
+                    "avgpool needs channels in multiples of 64 (got {})",
+                    in_shape.c
+                )));
+            }
+            Ok(OpPlan::AvgPool(AvgPlan {
+                c: in_shape.c,
+                c_pad: c_pad(in_shape.c),
+                kh,
+                kw,
+                stride,
+                h_out: out_shape.h,
+                w_out: out_shape.w,
+                chunks: c_pad(in_shape.c) / 64,
+            }))
+        }
+        Lowered::Fc { in_features, out_features, relu, .. } => {
+            let cp = c_pad(in_shape.c);
+            let flat = in_shape.h * in_shape.w * cp;
+            if flat != in_features && !(in_shape.h == 1 && in_shape.w == 1 && cp >= in_features) {
+                return Err(CompileError(format!(
+                    "fc expects a canvas-flattenable input: h*w*c_pad = {flat} vs in_features \
+                     {in_features}"
+                )));
+            }
+            let feat = in_features.div_ceil(16) * 16;
+            let cap = MAX_SEG.min(cfg.wbuf_region_words());
+            Ok(OpPlan::Fc(FcPlan {
+                in_features: feat,
+                out_features,
+                // Groups of 16 kernels (4 CUs x 4 vMACs).
+                k_groups: out_features.div_ceil(16),
+                chunks: split_segs(feat, cap),
+                relu,
+            }))
+        }
+    }
+}
+
+/// §6.2 / Figure 4: required off-chip bandwidth (GB/s) of a conv layer
+/// under a given loop order, at ideal compute speed. Traffic is the
+/// loop-order-dependent load volume; time is the MAC-bound execution of
+/// the layer on the full machine.
+pub fn required_bandwidth_gbs(
+    p: &ConvPlan,
+    in_shape: Shape,
+    cfg: &SnowflakeConfig,
+    order: LoopOrder,
+) -> f64 {
+    let row_words_in = (in_shape.w + 2 * p.pad) * p.c_pad_in;
+    let strip_words = ((p.rows_per_cu - 1) * p.stride + p.kh) * row_words_in;
+    let maps_once = (p.n_tiles * cfg.n_cus * strip_words) as f64;
+    let kernels_once = (p.k_groups * 4 * p.kernel_words) as f64;
+    let k_sets = (p.k_groups as f64 / 4.0).ceil(); // 16-kernel machine sets
+    let traffic_words = match order {
+        LoopOrder::Kloop => maps_once + kernels_once * p.n_tiles.max(1) as f64,
+        LoopOrder::Mloop => {
+            maps_once * if p.n_tiles > 1 { k_sets } else { 1.0 } + kernels_once
+        }
+    };
+    let stores = (p.h_out * p.w_out * p.c_pad_out) as f64;
+    let traffic_bytes = (traffic_words + stores) * cfg.word_bytes as f64;
+    // Ideal compute time: every window costs kh*row_read/16 vector
+    // cycles per 4-kernel group, across n_cus CUs.
+    let windows = (p.h_out * p.w_out) as f64;
+    let cycles_per_window = (p.kh * p.geom.row_read / 16) as f64;
+    let cycles = windows * cycles_per_window * p.k_groups as f64 / cfg.n_cus as f64;
+    let seconds = cycles / (cfg.clock_mhz * 1e6);
+    traffic_bytes / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_pads_rows_to_vector_words() {
+        // conv1 AlexNet: 11x11x3 -> c_pad 4, row 44 -> 48.
+        let g = conv_geometry(Shape::new(3, 224, 224), 11, 4, 2, 55);
+        assert_eq!(g.row_read, 48);
+        assert_eq!(g.segs, vec![48]);
+        assert_eq!(g.in_w_slack, 0);
+        // 3x3x512: row 1536, one segment.
+        let g = conv_geometry(Shape::new(512, 14, 14), 3, 1, 1, 14);
+        assert_eq!(g.row_read, 1536);
+        assert_eq!(g.segs, vec![1536]);
+    }
+
+    #[test]
+    fn big_rows_split_into_segments() {
+        let segs = split_segs(9216, MAX_SEG);
+        assert_eq!(segs.iter().sum::<usize>(), 9216);
+        assert!(segs.iter().all(|s| *s <= MAX_SEG && s % 16 == 0));
+        assert_eq!(segs.len(), 5);
+    }
+
+    #[test]
+    fn decisions_for_alexnet_conv2() {
+        let cfg = SnowflakeConfig::default();
+        let op = Lowered::Conv {
+            node: 0,
+            src: None,
+            bypass: None,
+            in_ch: 64,
+            out_ch: 192,
+            kh: 5,
+            kw: 5,
+            stride: 1,
+            pad: 2,
+            relu: true,
+        };
+        let p = decide(
+            &op,
+            Shape::new(64, 27, 27),
+            Shape::new(192, 27, 27),
+            2,
+            0,
+            &cfg,
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let OpPlan::Conv(c) = p else { panic!() };
+        assert_eq!(c.kernel_words, 5 * 5 * 64);
+        assert_eq!(c.k_groups, 48);
+        assert!(c.dbuf_w);
+        // 27 rows over 4 CUs: floor(27/4) = 6 rows per CU, two tiles
+        // (the second shifted back by 3 rows).
+        assert_eq!(c.rows_per_cu, 6);
+        assert_eq!(c.n_tiles, 2);
+        assert_eq!(c.order, LoopOrder::Kloop); // 1 tile: orders tie -> Kloop
+    }
+
+    #[test]
+    fn bandwidth_model_orders_kloop_under_mloop_for_huge_kernels() {
+        // Fig 4 G/H-style layer: 14x14, 1x1, 1024 -> 2048, stride 2.
+        let cfg = SnowflakeConfig::default();
+        let op = Lowered::Conv {
+            node: 0,
+            src: None,
+            bypass: None,
+            in_ch: 1024,
+            out_ch: 2048,
+            kh: 1,
+            kw: 1,
+            stride: 2,
+            pad: 0,
+            relu: false,
+        };
+        let p = decide(
+            &op,
+            Shape::new(1024, 14, 14),
+            Shape::new(2048, 7, 7),
+            0,
+            0,
+            &cfg,
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let OpPlan::Conv(c) = p else { panic!() };
+        let bw_m = required_bandwidth_gbs(&c, Shape::new(1024, 14, 14), &cfg, LoopOrder::Mloop);
+        let bw_k = required_bandwidth_gbs(&c, Shape::new(1024, 14, 14), &cfg, LoopOrder::Kloop);
+        // Kernel-dominated layer: resending maps per kernel tile explodes
+        // only if the maps don't fit — here they do (1 tile), so the
+        // interesting assertion is that required bandwidth is high and
+        // Kloop <= Mloop.
+        assert!(bw_k <= bw_m + 1e-9, "kloop {bw_k} vs mloop {bw_m}");
+        assert!(bw_k > 1.0, "{bw_k}");
+    }
+
+    #[test]
+    fn fc_plan_chunks_within_region() {
+        let cfg = SnowflakeConfig::default();
+        let op = Lowered::Fc { node: 0, src: None, in_features: 9216, out_features: 4096, relu: true };
+        let p = decide(
+            &op,
+            Shape::new(256, 6, 6),
+            Shape::new(4096, 1, 1),
+            0,
+            0,
+            &cfg,
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let OpPlan::Fc(f) = p else { panic!() };
+        assert_eq!(f.k_groups, 256);
+        assert!(f.chunks.iter().all(|c| *c <= cfg.wbuf_region_words()));
+        assert_eq!(f.chunks.iter().sum::<usize>(), 9216);
+    }
+
+    #[test]
+    fn oversized_kernel_rejected() {
+        let cfg = SnowflakeConfig::default();
+        let op = Lowered::Conv {
+            node: 0,
+            src: None,
+            bypass: None,
+            in_ch: 2048,
+            out_ch: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            relu: false,
+        };
+        let r = decide(
+            &op,
+            Shape::new(2048, 7, 7),
+            Shape::new(64, 7, 7),
+            1,
+            0,
+            &cfg,
+            &CompileOptions::default(),
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Instruction deployment (§5.3): arrange and place weights, biases,
+//! the input image and the encoded instruction stream into (simulated)
+//! CMA memory, exactly as the workload breakdown decided — "the weights
+//! and bias need to be arranged differently based on the workload break
+//! down and the compute decision made earlier" — and read results back
+//! from the device layout.
+
+use super::decide::OpPlan;
+use super::layout::{Canvas, Lowered};
+use super::CompiledModel;
+use crate::fixed::QFormat;
+use crate::isa::encode::to_mem_words;
+use crate::model::graph::Graph;
+use crate::model::weights::Weights;
+use crate::sim::Machine;
+use crate::tensor::Tensor;
+
+/// Write a CHW f32 tensor into its interleaved padded canvas.
+pub fn write_canvas(m: &mut Machine, cv: &Canvas, t: &Tensor<f32>, fmt: QFormat) {
+    assert_eq!(t.shape, vec![cv.c, cv.h, cv.w], "tensor/canvas mismatch");
+    for y in 0..cv.h {
+        for x in 0..cv.w {
+            for c in 0..cv.c {
+                m.memory[cv.addr(c, y, x)] = fmt.quantize(t.at3(c, y, x));
+            }
+        }
+    }
+}
+
+/// Read a canvas interior back into a CHW i16 tensor.
+pub fn read_canvas(m: &Machine, cv: &Canvas) -> Tensor<i16> {
+    let mut t = Tensor::zeros(&[cv.c, cv.h, cv.w]);
+    for y in 0..cv.h {
+        for x in 0..cv.w {
+            for c in 0..cv.c {
+                t.set3(c, y, x, m.memory[cv.addr(c, y, x)]);
+            }
+        }
+    }
+    t
+}
+
+/// Arrange one conv kernel into its device trace order:
+/// `[fy][fx·c_pad + c]` rows padded to `row_read`.
+fn arrange_conv_kernel(
+    out: &mut [i16],
+    w: &Tensor<f32>,
+    k: usize,
+    kh: usize,
+    kw: usize,
+    in_ch: usize,
+    c_pad_in: usize,
+    row_read: usize,
+    fmt: QFormat,
+) {
+    for fy in 0..kh {
+        for fx in 0..kw {
+            for c in 0..in_ch {
+                out[fy * row_read + fx * c_pad_in + c] = fmt.quantize(w.at4(k, c, fy, fx));
+            }
+        }
+    }
+}
+
+/// Place everything: weights/biases (arranged), input image, program.
+pub fn deploy(
+    m: &mut Machine,
+    compiled: &CompiledModel,
+    graph: &Graph,
+    weights: &Weights,
+    input: &Tensor<f32>,
+) {
+    let plan = &compiled.plan;
+    let fmt = plan.fmt;
+    assert!(m.memory.len() >= plan.mem_words, "machine DRAM too small for the plan");
+
+    // Input image.
+    write_canvas(m, &plan.input_canvas, input, fmt);
+    let _ = graph;
+
+    for lp in &plan.layers {
+        match (&lp.op, &lp.decision) {
+            (Lowered::Conv { node, in_ch, out_ch, kh, kw, bypass, .. }, OpPlan::Conv(d)) => {
+                // The graph node holding this conv's parameters: the
+                // lowered node id is the residual's for fused convs, but
+                // weights belong to the conv node itself.
+                let wnode = match bypass {
+                    Some(_) => {
+                        // Find the conv feeding the residual: it is the
+                        // unique weighted node whose out canvas == node.
+                        graph.nodes[*node].inputs[0]
+                    }
+                    None => *node,
+                };
+                let w = weights.weight(wnode);
+                let b = weights.bias(wnode);
+                let mut image = vec![0i16; lp.weights_words];
+                for k in 0..(d.k_groups + 1) * 4 {
+                    if k < *out_ch {
+                        arrange_conv_kernel(
+                            &mut image[k * d.kernel_words..(k + 1) * d.kernel_words],
+                            w,
+                            k,
+                            *kh,
+                            *kw,
+                            *in_ch,
+                            d.c_pad_in,
+                            d.geom.row_read,
+                            fmt,
+                        );
+                    }
+                }
+                m.write_words(lp.weights_addr, &image);
+                let mut bias = vec![0i16; lp.bias_words];
+                for k in 0..*out_ch {
+                    bias[k] = fmt.quantize(b.data[k]);
+                }
+                m.write_words(lp.bias_addr, &bias);
+            }
+            (Lowered::Fc { node, in_features, out_features, .. }, OpPlan::Fc(d)) => {
+                let w = weights.weight(*node);
+                let b = weights.bias(*node);
+                let in_cv = plan.in_canvas(&lp.op);
+                let feat: usize = d.chunks.iter().sum();
+                // Device feature index -> logical input index (CHW
+                // flatten through the interleaved canvas order).
+                let dev_to_logical = |f: usize| -> Option<usize> {
+                    let c = f % in_cv.c_pad;
+                    let xy = f / in_cv.c_pad;
+                    let (y, x) = (xy / in_cv.w, xy % in_cv.w);
+                    if c < in_cv.c && y < in_cv.h {
+                        let idx = c * in_cv.h * in_cv.w + y * in_cv.w + x;
+                        (idx < *in_features).then_some(idx)
+                    } else {
+                        None
+                    }
+                };
+                let mut image = vec![0i16; lp.weights_words];
+                let group_words = 16 * feat;
+                for kg in 0..d.k_groups + 1 {
+                    let mut off = kg * group_words;
+                    let mut chunk_off = 0usize;
+                    for &chunk in &d.chunks {
+                        for cu in 0..4 {
+                            for v in 0..4 {
+                                let k = kg * 16 + cu * 4 + v;
+                                for i in 0..chunk {
+                                    let f = chunk_off + i;
+                                    let val = if k < *out_features {
+                                        dev_to_logical(f)
+                                            .map(|l| fmt.quantize(w.data[k * in_features + l]))
+                                            .unwrap_or(0)
+                                    } else {
+                                        0
+                                    };
+                                    image[off + i] = val;
+                                }
+                                off += chunk;
+                            }
+                        }
+                        chunk_off += chunk;
+                    }
+                }
+                m.write_words(lp.weights_addr, &image);
+                // Bias arranged [cu][kg][v].
+                let mut bias = vec![0i16; lp.bias_words];
+                let slice = d.k_groups * 4;
+                for cu in 0..4 {
+                    for kg in 0..d.k_groups {
+                        for v in 0..4 {
+                            let k = kg * 16 + cu * 4 + v;
+                            if k < *out_features {
+                                bias[cu * slice + kg * 4 + v] = fmt.quantize(b.data[k]);
+                            }
+                        }
+                    }
+                }
+                m.write_words(lp.bias_addr, &bias);
+            }
+            (Lowered::AvgPool { kh, kw, .. }, OpPlan::AvgPool(_)) => {
+                // Per-vMAC diagonal blocks: lane l of vMAC v holds
+                // 1/(kh*kw) at step v*16+l.
+                let inv = fmt.quantize(1.0 / (*kh * *kw) as f32);
+                let mut image = vec![0i16; 4 * 64 * 16];
+                for v in 0..4 {
+                    for l in 0..16 {
+                        let t = v * 16 + l;
+                        image[v * 1024 + t * 16 + l] = inv;
+                    }
+                }
+                m.write_words(lp.weights_addr, &image);
+            }
+            _ => {}
+        }
+    }
+
+    // Encoded instruction stream image (for icache streaming).
+    let image = to_mem_words(&compiled.program.instrs);
+    m.write_words(plan.program_addr, &image);
+}
+
+/// Build a machine sized for the plan, deploy, and return it ready to
+/// run (program loaded, banks preloaded).
+pub fn make_machine(
+    compiled: &CompiledModel,
+    graph: &Graph,
+    weights: &Weights,
+    input: &Tensor<f32>,
+) -> Machine {
+    let cfg = crate::arch::SnowflakeConfig::default();
+    make_machine_with(compiled, graph, weights, input, cfg)
+}
+
+/// As [`make_machine`] with an explicit hardware configuration.
+pub fn make_machine_with(
+    compiled: &CompiledModel,
+    graph: &Graph,
+    weights: &Weights,
+    input: &Tensor<f32>,
+    cfg: crate::arch::SnowflakeConfig,
+) -> Machine {
+    let mut m = Machine::new(cfg, compiled.plan.fmt, compiled.plan.mem_words);
+    deploy(&mut m, compiled, graph, weights, input);
+    m.load_program(compiled.program.instrs.clone());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_8;
+
+    #[test]
+    fn canvas_roundtrip() {
+        let cv = Canvas { base: 10, c: 3, h: 4, w: 5, c_pad: 4, mp: 1, h_slack: 2, w_slack: 1 };
+        let mut m = Machine::new(crate::arch::SnowflakeConfig::default(), Q8_8, 10 + cv.words());
+        let mut t = Tensor::zeros(&[3, 4, 5]);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = (i as f32) * 0.125 - 3.0;
+        }
+        write_canvas(&mut m, &cv, &t, Q8_8);
+        let back = read_canvas(&m, &cv);
+        assert_eq!(back.data, t.quantize(Q8_8).data);
+        // Margins stay zero.
+        assert_eq!(m.memory[cv.base], 0);
+    }
+
+    #[test]
+    fn conv_kernel_arrangement() {
+        let mut w = Tensor::zeros(&[2, 3, 2, 2]);
+        w.set4(1, 2, 1, 0, 1.0);
+        let row_read = 16; // kw*c_pad = 2*4 = 8 -> padded 16
+        let mut out = vec![0i16; 2 * row_read];
+        arrange_conv_kernel(&mut out, &w, 1, 2, 2, 3, 4, row_read, Q8_8);
+        // (fy=1, fx=0, c=2) -> out[1*16 + 0*4 + 2].
+        assert_eq!(out[16 + 2], Q8_8.quantize(1.0));
+        assert_eq!(out.iter().filter(|&&v| v != 0).count(), 1);
+    }
+}

@@ -1,0 +1,569 @@
+//! Memory layout planning: layer lowering, device data layout and the
+//! CMA-style region allocator (§5.3: "All data need to be placed into
+//! CMA allocated region of memory. Different regions in CMA are
+//! allocated according to layer dependencies").
+//!
+//! ## Device data layout
+//!
+//! Activations live in DRAM as **interleaved padded canvases**: element
+//! `(c, y, x)` of a C×H×W tensor sits at
+//! `base + ((y + mp) * w_canvas + (x + mp)) * c_pad + c`, where
+//! `c_pad` rounds channels up (to 16, or to 4 below 16) and `mp` is the
+//! maximum spatial padding any consumer needs. Zero margins make every
+//! convolution window a *contiguous trace* (the paper's §2 "trace: any
+//! contiguous sequence of multiply and accumulate") regardless of
+//! padding, and channel interleaving makes one 16-lane vector word = 16
+//! channels of one pixel — the COOP vMAC's natural diet. Storing the
+//! overlap/margin once in DRAM mirrors the paper's storing of
+//! overlapped regions (§2, vs [1]'s augmented tiles).
+
+use super::decide::{self, OpPlan};
+use super::{CompileError, CompileOptions};
+use crate::arch::SnowflakeConfig;
+use crate::fixed::QFormat;
+use crate::model::graph::Graph;
+use crate::model::layer::LayerKind;
+use std::collections::BTreeMap;
+
+/// Channel padding rule: vector-lane multiple for real layers, 4 for
+/// the tiny network input (3 channels).
+pub fn c_pad(c: usize) -> usize {
+    if c >= 16 {
+        c.div_ceil(16) * 16
+    } else {
+        c.div_ceil(4) * 4
+    }
+}
+
+/// An activation canvas in DRAM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Canvas {
+    pub base: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_pad: usize,
+    /// Margin (max consumer pad) on top/left/bottom/right.
+    pub mp: usize,
+    /// Extra rows below the margin for tiling overshoot.
+    pub h_slack: usize,
+    /// Extra columns right of the margin for padded-trace overreach.
+    pub w_slack: usize,
+}
+
+impl Canvas {
+    pub fn w_canvas(&self) -> usize {
+        self.w + 2 * self.mp + self.w_slack
+    }
+
+    pub fn h_canvas(&self) -> usize {
+        self.h + 2 * self.mp + self.h_slack
+    }
+
+    pub fn words(&self) -> usize {
+        self.w_canvas() * self.h_canvas() * self.c_pad
+    }
+
+    /// DRAM word address of interior element (c, y, x).
+    pub fn addr(&self, c: usize, y: usize, x: usize) -> usize {
+        debug_assert!(c < self.c_pad && y < self.h && x < self.w);
+        self.addr_u(c, y, x)
+    }
+
+    /// Interior addressing without bounds assertions (tiling overshoot
+    /// rows land in the allocated slack).
+    pub fn addr_u(&self, c: usize, y: usize, x: usize) -> usize {
+        self.base + ((y + self.mp) * self.w_canvas() + (x + self.mp)) * self.c_pad + c
+    }
+
+    /// DRAM word address of canvas row `cy` (no margin offset), col 0.
+    pub fn raw_row(&self, cy: usize) -> usize {
+        self.base + cy * self.w_canvas() * self.c_pad
+    }
+
+    /// Words per canvas row.
+    pub fn row_words(&self) -> usize {
+        self.w_canvas() * self.c_pad
+    }
+}
+
+/// A lowered operation: graph nodes after fusing ResidualAdd into its
+/// producing conv (§2 Residual addition: "add those bypass values as
+/// output results are being produced by a CONV").
+#[derive(Clone, Debug)]
+pub enum Lowered {
+    Conv {
+        node: usize,
+        /// Producer node (None = network input).
+        src: Option<usize>,
+        /// Bypass tensor node (fused residual add).
+        bypass: Option<usize>,
+        in_ch: usize,
+        out_ch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+    },
+    MaxPool { node: usize, src: Option<usize>, kh: usize, kw: usize, stride: usize, pad: usize },
+    AvgPool { node: usize, src: Option<usize>, kh: usize, kw: usize, stride: usize, pad: usize },
+    Fc { node: usize, src: Option<usize>, in_features: usize, out_features: usize, relu: bool },
+}
+
+impl Lowered {
+    /// Graph node whose output canvas this op writes.
+    pub fn out_node(&self) -> usize {
+        match *self {
+            Lowered::Conv { node, bypass, .. } => {
+                // Fused conv writes the *residual node's* canvas.
+                if bypass.is_some() {
+                    node
+                } else {
+                    node
+                }
+            }
+            Lowered::MaxPool { node, .. }
+            | Lowered::AvgPool { node, .. }
+            | Lowered::Fc { node, .. } => node,
+        }
+    }
+
+    pub fn src(&self) -> Option<usize> {
+        match *self {
+            Lowered::Conv { src, .. }
+            | Lowered::MaxPool { src, .. }
+            | Lowered::AvgPool { src, .. }
+            | Lowered::Fc { src, .. } => src,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lowered::Conv { bypass: Some(_), .. } => "conv+res",
+            Lowered::Conv { .. } => "conv",
+            Lowered::MaxPool { .. } => "maxpool",
+            Lowered::AvgPool { .. } => "avgpool",
+            Lowered::Fc { .. } => "fc",
+        }
+    }
+}
+
+/// Lower the graph: fuse residual adds, reject layers the hardware has
+/// no path for.
+pub fn lower(graph: &Graph) -> Result<Vec<Lowered>, CompileError> {
+    // Which conv feeds which residual (conv must be input[0] and only
+    // consumed by the residual).
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); graph.nodes.len()];
+    for n in &graph.nodes {
+        for &p in &n.inputs {
+            consumers[p].push(n.id);
+        }
+    }
+    let mut fused_into: BTreeMap<usize, usize> = BTreeMap::new(); // conv -> residual node
+    for n in &graph.nodes {
+        if let LayerKind::ResidualAdd { .. } = n.kind {
+            let main = n.inputs[0];
+            let fusable = matches!(graph.nodes[main].kind, LayerKind::Conv { .. })
+                && consumers[main].len() == 1;
+            if !fusable {
+                return Err(CompileError(format!(
+                    "residual node {} cannot be fused into its producer (node {}): the hardware \
+                     adds bypass values only on CONV writeback",
+                    n.id, main
+                )));
+            }
+            fused_into.insert(main, n.id);
+        }
+    }
+
+    let mut out = Vec::new();
+    for n in &graph.nodes {
+        let src = n.inputs.first().copied();
+        match n.kind {
+            LayerKind::Conv { relu, .. } => {
+                if fused_into.contains_key(&n.id) {
+                    // Emitted at the residual node's position so every
+                    // input (notably the bypass, e.g. a downsample conv)
+                    // is computed first.
+                    if relu {
+                        return Err(CompileError(format!(
+                            "conv node {} has relu before a fused residual add",
+                            n.id
+                        )));
+                    }
+                    continue;
+                }
+                let LayerKind::Conv { in_ch, out_ch, kh, kw, stride, pad, relu } = n.kind else {
+                    unreachable!()
+                };
+                out.push(Lowered::Conv {
+                    node: n.id,
+                    src,
+                    bypass: None,
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    relu,
+                });
+            }
+            LayerKind::MaxPool { kh, kw, stride, pad } => {
+                out.push(Lowered::MaxPool { node: n.id, src, kh, kw, stride, pad })
+            }
+            LayerKind::AvgPool { kh, kw, stride, pad } => {
+                out.push(Lowered::AvgPool { node: n.id, src, kh, kw, stride, pad })
+            }
+            LayerKind::Fc { in_features, out_features, relu } => {
+                out.push(Lowered::Fc { node: n.id, src, in_features, out_features, relu })
+            }
+            LayerKind::ResidualAdd { relu } => {
+                // The fused conv runs here, writing this node's canvas.
+                let conv = n.inputs[0];
+                let LayerKind::Conv { in_ch, out_ch, kh, kw, stride, pad, .. } =
+                    graph.nodes[conv].kind
+                else {
+                    unreachable!("fusability checked above")
+                };
+                out.push(Lowered::Conv {
+                    node: n.id,
+                    src: graph.nodes[conv].inputs.first().copied(),
+                    bypass: Some(n.inputs[1]),
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    relu,
+                });
+            }
+            LayerKind::Relu => {
+                return Err(CompileError(format!(
+                    "standalone relu node {} survived parsing; the hardware applies ReLU on \
+                     writeback only",
+                    n.id
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Per-lowered-op plan entry.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub op: Lowered,
+    pub decision: OpPlan,
+    /// DRAM base of arranged weights (0 words if none).
+    pub weights_addr: usize,
+    pub weights_words: usize,
+    /// DRAM base of bias array.
+    pub bias_addr: usize,
+    pub bias_words: usize,
+}
+
+/// The full memory plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub fmt: QFormat,
+    pub input_canvas: Canvas,
+    /// node id -> output canvas.
+    pub canvases: BTreeMap<usize, Canvas>,
+    pub layers: Vec<LayerPlan>,
+    /// 64 guaranteed-zero words (avgpool bias clear etc).
+    pub zero_addr: usize,
+    /// Where the encoded instruction stream goes (codegen fills length).
+    pub program_addr: usize,
+    /// Total DRAM words (after codegen adds the stream image).
+    pub mem_words: usize,
+    /// Peak activation words (reporting; exercised by region reuse).
+    pub activation_words: usize,
+}
+
+impl Plan {
+    /// Canvas a lowered op reads (input canvas when src is None).
+    pub fn in_canvas(&self, op: &Lowered) -> Canvas {
+        match op.src() {
+            None => self.input_canvas,
+            Some(p) => self.canvases[&p],
+        }
+    }
+
+    pub fn out_canvas(&self, op: &Lowered) -> Canvas {
+        self.canvases[&op.out_node()]
+    }
+}
+
+/// Build the plan: lower, decide, size canvases (margins + slack),
+/// allocate regions, place weights/biases.
+pub fn plan(
+    graph: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<Plan, CompileError> {
+    let lowered = lower(graph)?;
+    let shapes = graph.shapes();
+
+    // Consumer pads per producing node (margins).
+    let mut mp: BTreeMap<Option<usize>, usize> = BTreeMap::new();
+    for op in &lowered {
+        let p = match *op {
+            Lowered::Conv { pad, .. } => pad,
+            Lowered::MaxPool { pad, .. } | Lowered::AvgPool { pad, .. } => pad,
+            Lowered::Fc { .. } => 0,
+        };
+        let e = mp.entry(op.src()).or_insert(0);
+        *e = (*e).max(p);
+    }
+
+    // Shapes per lowered op.
+    let in_shape = |op: &Lowered| match op.src() {
+        None => graph.input,
+        Some(p) => shapes[p],
+    };
+
+    // Column-slack pre-pass (pure geometry): padded traces / strided
+    // lane reads may overrun the input canvas width.
+    let mut w_slack: BTreeMap<Option<usize>, usize> = BTreeMap::new();
+    for op in &lowered {
+        let is_ = in_shape(op);
+        let os_ = shapes[op.out_node()];
+        let sl = match *op {
+            Lowered::Conv { kw, stride, pad, .. } => {
+                decide::conv_geometry(is_, kw, stride, pad, os_.w).in_w_slack
+            }
+            Lowered::MaxPool { kw, stride, pad, .. } => {
+                decide::pool_geometry(is_, kw, stride, pad, os_.w)
+            }
+            _ => 0,
+        };
+        let e = w_slack.entry(op.src()).or_insert(0);
+        *e = (*e).max(sl);
+    }
+
+    // Decisions (step 3) given final canvas geometry.
+    let mut decisions = Vec::new();
+    for op in &lowered {
+        let is_ = in_shape(op);
+        let os_ = shapes[op.out_node()];
+        let in_mp = *mp.get(&op.src()).unwrap_or(&0);
+        let in_ws = *w_slack.get(&op.src()).unwrap_or(&0);
+        decisions.push(decide::decide(op, is_, os_, in_mp, in_ws, cfg, opts)?);
+    }
+
+    // Row-slack pass: writer overshoot rows + consumer overread.
+    let mut h_slack: BTreeMap<Option<usize>, usize> = BTreeMap::new();
+    for (op, d) in lowered.iter().zip(&decisions) {
+        // Writer overshoot on the *output* canvas.
+        let os_ = shapes[op.out_node()];
+        let written_rows = d.n_tiles() * d.rows_per_cu() * cfg.n_cus;
+        let over = written_rows.saturating_sub(os_.h);
+        let e = h_slack.entry(Some(op.out_node())).or_insert(0);
+        *e = (*e).max(over);
+        // Reader overread on the *input* canvas: rows needed by the last
+        // (overshooting) output row.
+        let is_ = in_shape(op);
+        let need_rows = d.in_rows_needed(written_rows);
+        let over_in = need_rows.saturating_sub(is_.h + 2 * d.pad());
+        let e = h_slack.entry(op.src()).or_insert(0);
+        *e = (*e).max(over_in);
+        // A fused bypass reads one row of its canvas per output row,
+        // including overshoot rows.
+        if let Lowered::Conv { bypass: Some(b), .. } = op {
+            let e = h_slack.entry(Some(*b)).or_insert(0);
+            *e = (*e).max(over);
+        }
+    }
+
+    // Region allocation (bump; optional reuse of Sequential regions).
+    let mut cursor = 64usize; // leave page 0 for the zero region
+    let zero_addr = 0usize;
+    let mut alloc = |words: usize| {
+        let base = cursor;
+        cursor += words.div_ceil(64) * 64;
+        base
+    };
+
+    let mk_canvas = |base: usize, c: usize, h: usize, w: usize, src: Option<usize>| Canvas {
+        base,
+        c,
+        h,
+        w,
+        c_pad: c_pad(c),
+        mp: *mp.get(&src).unwrap_or(&0),
+        h_slack: *h_slack.get(&src).unwrap_or(&0) + 1, // +1 pool spill row
+        w_slack: *w_slack.get(&src).unwrap_or(&0),
+    };
+
+    // Input canvas.
+    let mut input_canvas = mk_canvas(0, graph.input.c, graph.input.h, graph.input.w, None);
+    input_canvas.base = alloc(input_canvas.words());
+
+    // Node canvases. With reuse on, a Sequential node's region is freed
+    // after its last consumer and recycled (simple free-list).
+    let mut canvases: BTreeMap<usize, Canvas> = BTreeMap::new();
+    let mut free: Vec<(usize, usize)> = Vec::new(); // (base, words)
+    let mut last_use: BTreeMap<usize, usize> = BTreeMap::new();
+    for n in &graph.nodes {
+        for &p in &n.inputs {
+            last_use.insert(p, n.id);
+        }
+    }
+    let mut activation_words = input_canvas.words();
+    let out_nodes: Vec<usize> = lowered.iter().map(|o| o.out_node()).collect();
+    for (op, _) in lowered.iter().zip(&decisions) {
+        let node = op.out_node();
+        let s = shapes[node];
+        let mut cv = mk_canvas(0, s.c, s.h, s.w, Some(node));
+        let words = cv.words();
+        cv.base = if opts.reuse_regions {
+            match free.iter().position(|&(_, w)| w >= words) {
+                Some(i) => {
+                    let (base, w) = free.remove(i);
+                    if w > words {
+                        free.push((base + words, w - words));
+                    }
+                    base
+                }
+                None => alloc(words),
+            }
+        } else {
+            alloc(words)
+        };
+        activation_words += words;
+        canvases.insert(node, cv);
+        if opts.reuse_regions {
+            // Free canvases whose last consumer is this node.
+            for (&p, &lu) in last_use.iter() {
+                if lu == node && p != node {
+                    if let Some(c) = canvases.get(&p) {
+                        // Never free a canvas another pending op reads.
+                        let still_needed = out_nodes
+                            .iter()
+                            .zip(&lowered)
+                            .any(|(&on, o)| on > node && o.src() == Some(p));
+                        if !still_needed {
+                            free.push((c.base, c.words()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Weights + biases.
+    let mut layers = Vec::new();
+    for (op, d) in lowered.iter().zip(decisions) {
+        let (w_words, b_words) = d.weight_bias_words();
+        let weights_addr = if w_words > 0 { alloc(w_words) } else { 0 };
+        let bias_addr = if b_words > 0 { alloc(b_words) } else { 0 };
+        layers.push(LayerPlan {
+            op: op.clone(),
+            decision: d,
+            weights_addr,
+            weights_words: w_words,
+            bias_addr,
+            bias_words: b_words,
+        });
+    }
+
+    let program_addr = alloc(0);
+    Ok(Plan {
+        fmt: opts.fmt,
+        input_canvas,
+        canvases,
+        layers,
+        zero_addr,
+        program_addr,
+        mem_words: program_addr, // codegen extends by the stream image
+        activation_words,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn c_pad_rules() {
+        assert_eq!(c_pad(3), 4);
+        assert_eq!(c_pad(4), 4);
+        assert_eq!(c_pad(15), 16);
+        assert_eq!(c_pad(16), 16);
+        assert_eq!(c_pad(17), 32);
+        assert_eq!(c_pad(192), 192);
+        assert_eq!(c_pad(1000), 1008);
+    }
+
+    #[test]
+    fn canvas_addressing() {
+        let cv = Canvas { base: 100, c: 3, h: 4, w: 5, c_pad: 4, mp: 1, h_slack: 0, w_slack: 0 };
+        assert_eq!(cv.w_canvas(), 7);
+        assert_eq!(cv.h_canvas(), 6);
+        assert_eq!(cv.words(), 7 * 6 * 4);
+        // (0,0,0) sits one margin row + one margin col in.
+        assert_eq!(cv.addr(0, 0, 0), 100 + (7 + 1) * 4);
+        assert_eq!(cv.addr(2, 3, 4), 100 + ((3 + 1) * 7 + 5) * 4 + 2);
+    }
+
+    #[test]
+    fn lowering_fuses_residuals() {
+        let g = zoo::resnet18();
+        let l = lower(&g).unwrap();
+        let fused = l.iter().filter(|o| o.name() == "conv+res").count();
+        assert_eq!(fused, 8); // one per basic block
+        // No lowered op for the residual nodes themselves.
+        assert_eq!(
+            l.len(),
+            g.nodes.len() - 8,
+            "residuals folded into their convs"
+        );
+    }
+
+    #[test]
+    fn alexnet_plan_allocates_disjoint_regions() {
+        let g = zoo::alexnet_owt();
+        let cfg = SnowflakeConfig::default();
+        let p = plan(&g, &cfg, &CompileOptions::default()).unwrap();
+        // All canvases + weight regions disjoint.
+        let mut spans: Vec<(usize, usize, String)> = Vec::new();
+        spans.push((p.input_canvas.base, p.input_canvas.words(), "input".into()));
+        for (n, c) in &p.canvases {
+            spans.push((c.base, c.words(), format!("canvas{n}")));
+        }
+        for l in &p.layers {
+            if l.weights_words > 0 {
+                spans.push((l.weights_addr, l.weights_words, format!("w{}", l.op.out_node())));
+                spans.push((l.bias_addr, l.bias_words, format!("b{}", l.op.out_node())));
+            }
+        }
+        spans.sort();
+        for pair in spans.windows(2) {
+            assert!(
+                pair[0].0 + pair[0].1 <= pair[1].0,
+                "{} overlaps {}",
+                pair[0].2,
+                pair[1].2
+            );
+        }
+        assert!(p.mem_words > 0);
+    }
+
+    #[test]
+    fn reuse_regions_shrinks_footprint() {
+        let g = zoo::alexnet_owt();
+        let cfg = SnowflakeConfig::default();
+        let p1 = plan(&g, &cfg, &CompileOptions::default()).unwrap();
+        let p2 = plan(
+            &g,
+            &cfg,
+            &CompileOptions { reuse_regions: true, ..Default::default() },
+        )
+        .unwrap();
+        assert!(p2.mem_words < p1.mem_words, "{} !< {}", p2.mem_words, p1.mem_words);
+    }
+}

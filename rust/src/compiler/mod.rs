@@ -1,0 +1,147 @@
+//! The Snowflake compiler — the paper's contribution (§5).
+//!
+//! Three tasks, mirroring §5's structure:
+//!
+//! 1. **Model parsing** (§5.1): [`crate::model`] supplies steps 1–2
+//!    (layer objects + dependency labels); [`decide`] is step 3 (mode,
+//!    loop order, tile limits from the shared hardware parameter
+//!    object); [`tile`] is step 4 (row-strip map tiles, single-kernel
+//!    weight tiles, channel/row chunking); the per-tile operation lists
+//!    of step 5 live inside [`codegen`]'s emitters.
+//! 2. **Instruction generation** (§5.2): [`codegen`] emits per-tile
+//!    instruction blocks, predicts block sizes against the icache bank
+//!    constraint, packs blocks into banks with the double-buffered
+//!    icache load prologues, fills branch delay slots and runs the
+//!    [`crate::isa::verify`] pass. [`balance`] assigns LD instructions
+//!    to the four load units (§6.3).
+//! 3. **Instruction deployment** (§5.3): [`layout`] places canvases,
+//!    weights, biases and the encoded stream in (simulated) CMA memory;
+//!    [`deploy`] arranges and writes the data per the COOP/INDP decision
+//!    and reads results back.
+//!
+//! [`hand`] holds the hand-optimized baseline streams for Table 1.
+
+pub mod balance;
+pub mod codegen;
+pub mod decide;
+pub mod deploy;
+pub mod hand;
+pub mod layout;
+pub mod tile;
+
+use crate::arch::SnowflakeConfig;
+use crate::fixed::QFormat;
+use crate::isa::instr::Program;
+use crate::model::graph::Graph;
+
+/// Loop-rearrangement choice (§6.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// Maps data re-sent per kernel tile (kernels resident).
+    Mloop,
+    /// Kernel data re-sent per map tile (maps resident).
+    Kloop,
+}
+
+/// MAC operating mode (§4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MacMode {
+    Coop,
+    Indp,
+}
+
+/// Load-balancing policy for LD unit assignment (§6.3 / Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BalancePolicy {
+    /// Greedy least-loaded-unit assignment with map loads split into
+    /// `split` pieces (1 = no splitting). Higher split = finer balance.
+    Greedy { split: usize },
+    /// The paper's worst case: kernels and maps each pinned to two units.
+    TwoUnits,
+    /// Everything on one unit (degenerate baseline).
+    OneUnit,
+}
+
+impl Default for BalancePolicy {
+    fn default() -> Self {
+        BalancePolicy::Greedy { split: 2 }
+    }
+}
+
+/// Compiler options.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    pub fmt: QFormat,
+    pub balance: BalancePolicy,
+    /// Force a loop order for every conv (None = per-layer §6.2 decision).
+    pub force_loop_order: Option<LoopOrder>,
+    /// Fill branch delay slots with useful tail instructions (the
+    /// hand-optimization of Table 1); false pads with no-ops.
+    pub smart_delay_slots: bool,
+    /// Reuse output regions of `Sequential` nodes (step-2 labels).
+    pub reuse_regions: bool,
+    /// Skip FC layers in generated code (the paper excludes FC from
+    /// reported execution time; compilation of FC is still supported).
+    pub skip_fc: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            fmt: crate::fixed::Q8_8,
+            balance: BalancePolicy::default(),
+            force_loop_order: None,
+            smart_delay_slots: false,
+            reuse_regions: false,
+            skip_fc: false,
+        }
+    }
+}
+
+/// Compilation failure.
+#[derive(Debug, Clone)]
+pub struct CompileError(pub String);
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "compile error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// A compiled model: the instruction stream plus the memory plan needed
+/// to deploy weights/input and read results back.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub program: Program,
+    pub plan: layout::Plan,
+    /// Per-layer instruction ranges (reporting/debug).
+    pub layer_ranges: Vec<(usize, String, std::ops::Range<usize>)>,
+    /// Generated instructions before bank padding (the count Table 1
+    /// compares; `program.len()` includes alignment/spare-bank HALTs).
+    pub code_len: usize,
+}
+
+/// Compile a model graph for the given hardware configuration.
+pub fn compile(
+    graph: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<CompiledModel, CompileError> {
+    graph.validate().map_err(CompileError)?;
+    let plan = layout::plan(graph, cfg, opts)?;
+    codegen::generate(graph, cfg, opts, plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_default() {
+        let o = CompileOptions::default();
+        assert_eq!(o.balance, BalancePolicy::Greedy { split: 2 });
+        assert!(o.force_loop_order.is_none());
+    }
+}

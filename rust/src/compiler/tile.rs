@@ -1,0 +1,119 @@
+//! Step 4 of model parsing (§5.1): workload breakdown into buffer-sized
+//! tiles. "The maps are decomposed in tiles with output row granularity"
+//! — a map tile is a group of output-row strips, one strip per CU;
+//! "Weights are decomposed in tiles with single kernel granularity" — a
+//! kernel tile is a group of 4 kernels (one per vMAC).
+
+use crate::arch::SnowflakeConfig;
+
+/// One map tile: each CU produces `rows_per_cu` consecutive output rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MapTile {
+    pub index: usize,
+    /// First output row of CU 0's strip.
+    pub oy0: usize,
+    pub rows_per_cu: usize,
+    /// MBuf bank this tile's strips load into (double buffering).
+    pub bank: usize,
+}
+
+impl MapTile {
+    /// First output row of a given CU's strip.
+    pub fn cu_oy0(&self, cu: usize) -> usize {
+        self.oy0 + cu * self.rows_per_cu
+    }
+
+    /// Input rows each strip spans for a (kh, stride) window op.
+    pub fn in_rows(&self, kh: usize, stride: usize) -> usize {
+        (self.rows_per_cu - 1) * stride + kh
+    }
+}
+
+/// Decompose `h_out` output rows into map tiles. The caller guarantees
+/// `span = rows_per_cu * n_cus <= h_out`; the final tile is shifted
+/// *backwards* to end exactly at the last row — overlapping rows are
+/// recomputed (idempotent writes) instead of overshooting into the
+/// consumer's zero-padding margin.
+pub fn map_tiles(h_out: usize, base_rows: usize, cfg: &SnowflakeConfig) -> Vec<MapTile> {
+    assert!(cfg.n_cus <= h_out, "output rows {h_out} below CU count");
+    let mut tiles = Vec::new();
+    let mut next = 0usize;
+    let mut i = 0usize;
+    while next < h_out {
+        let remaining = h_out - next;
+        // Shrink the tail tile instead of recomputing a full span.
+        let rows = base_rows.min(remaining.div_ceil(cfg.n_cus)).max(1);
+        let span = rows * cfg.n_cus;
+        let oy0 = if next + span <= h_out { next } else { h_out - span };
+        tiles.push(MapTile { index: i, oy0, rows_per_cu: rows, bank: i % cfg.mbuf_banks });
+        next = oy0 + span;
+        i += 1;
+    }
+    tiles
+}
+
+/// One kernel tile: 4 consecutive kernels (output channels), one per
+/// vMAC; `region` is the WBuf double-buffer region it occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelTile {
+    pub index: usize,
+    pub k0: usize,
+}
+
+/// Kernel tiles for `k_groups` groups of 4.
+pub fn kernel_tiles(k_groups: usize) -> Vec<KernelTile> {
+    (0..k_groups).map(|i| KernelTile { index: i, k0: i * 4 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_cover_all_rows_without_overshoot() {
+        let cfg = SnowflakeConfig::default();
+        // 27 rows, base 6: full tile (24 rows) + 1-row tail shifted to
+        // end exactly at 27 (one overlap row, not 21).
+        let tiles = map_tiles(27, 6, &cfg);
+        assert_eq!(tiles.len(), 2);
+        assert_eq!(tiles[0].oy0, 0);
+        assert_eq!(tiles[0].rows_per_cu, 6);
+        assert_eq!(tiles[1].rows_per_cu, 1);
+        assert_eq!(tiles[1].oy0, 23);
+        let total: usize = tiles.iter().map(|t| t.rows_per_cu * 4).sum();
+        assert_eq!(total, 28); // only 1 redundant row
+        // Even-ish split: three full tiles + a shrunken 2-row tail.
+        let tiles = map_tiles(56, 4, &cfg);
+        assert_eq!(tiles.len(), 4);
+        assert_eq!(tiles[1].oy0, 16);
+        assert_eq!(tiles[1].bank, 1);
+        assert_eq!(tiles[2].bank, 0);
+        assert_eq!(tiles[3].rows_per_cu, 2);
+        assert_eq!(tiles[3].oy0 + 2 * 4, 56);
+        let total: usize = tiles.iter().map(|t| t.rows_per_cu * 4).sum();
+        assert_eq!(total, 56); // zero redundancy on this shape
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_rows_panics() {
+        let cfg = SnowflakeConfig::default();
+        map_tiles(3, 2, &cfg);
+    }
+
+    #[test]
+    fn strip_row_math() {
+        let t = MapTile { index: 0, oy0: 0, rows_per_cu: 7, bank: 0 };
+        // 7 output rows, 5x5 stride 1 -> 11 input rows.
+        assert_eq!(t.in_rows(5, 1), 11);
+        // stride 2, 3x3 -> 15.
+        assert_eq!(t.in_rows(3, 2), 15);
+    }
+
+    #[test]
+    fn kernel_tiles_step_by_four() {
+        let ks = kernel_tiles(48);
+        assert_eq!(ks.len(), 48);
+        assert_eq!(ks[47].k0, 188);
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT golden-model cross-check: execute the AOT artifacts (L2 jax
+//! graphs with the L1 Pallas kernel inlined) from rust and compare them
+//! word-for-word against [`crate::refimpl`] — closing the loop between
+//! the python build path and the rust run path. Shapes mirror
+//! `python/compile/model.py`.
+
+use crate::fixed::Q8_8;
+use crate::refimpl::conv::{conv_q, residual_q};
+use crate::runtime::{artifacts_dir, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+fn rand_q(rng: &mut Rng, shape: &[usize], amp: f32) -> Tensor<i16> {
+    let mut t = Tensor::zeros(shape);
+    for v in t.data.iter_mut() {
+        *v = Q8_8.quantize(rng.f32_range(-amp, amp));
+    }
+    t
+}
+
+/// Run every artifact check; returns a summary line on success.
+pub fn run_golden() -> Result<String> {
+    let dir = artifacts_dir();
+    if !dir.join("conv3x3_q88.hlo.txt").exists() {
+        bail!(
+            "artifacts not found in {dir:?}; run `make artifacts` (python build path) first"
+        );
+    }
+    let rt = Runtime::cpu().context("PJRT client")?;
+    let mut rng = Rng::new(20260711);
+    let mut checked = 0usize;
+
+    // conv3x3: x[16,12,12], w[8,16,3,3], b[8], pad 1, relu.
+    {
+        let art = rt.load_hlo_text(&dir.join("conv3x3_q88.hlo.txt"))?;
+        let x = rand_q(&mut rng, &[16, 12, 12], 2.0);
+        let w = rand_q(&mut rng, &[8, 16, 3, 3], 0.5);
+        let b = rand_q(&mut rng, &[8], 0.5);
+        let out = art.run_i16(&[
+            (&x.data, &x.shape),
+            (&w.data, &w.shape),
+            (&b.data, &b.shape),
+        ])?;
+        let want = conv_q(&x, &w, &b, 1, 1, true, None, Q8_8);
+        if out[0] != want.data {
+            let diffs = out[0].iter().zip(&want.data).filter(|(a, b)| a != b).count();
+            bail!("conv3x3 golden mismatch: {diffs}/{} words", want.len());
+        }
+        checked += 1;
+    }
+
+    // conv1x1 stride 2: x[32,10,10], w[16,32,1,1], b[16].
+    {
+        let art = rt.load_hlo_text(&dir.join("conv1x1_q88.hlo.txt"))?;
+        let x = rand_q(&mut rng, &[32, 10, 10], 2.0);
+        let w = rand_q(&mut rng, &[16, 32, 1, 1], 0.5);
+        let b = rand_q(&mut rng, &[16], 0.5);
+        let out = art.run_i16(&[
+            (&x.data, &x.shape),
+            (&w.data, &w.shape),
+            (&b.data, &b.shape),
+        ])?;
+        let want = conv_q(&x, &w, &b, 2, 0, false, None, Q8_8);
+        if out[0] != want.data {
+            bail!("conv1x1 golden mismatch");
+        }
+        checked += 1;
+    }
+
+    // Identity residual block: x[16,8,8], two 3x3 convs + bypass + relu.
+    {
+        let art = rt.load_hlo_text(&dir.join("block_q88.hlo.txt"))?;
+        let x = rand_q(&mut rng, &[16, 8, 8], 1.5);
+        let w1 = rand_q(&mut rng, &[16, 16, 3, 3], 0.3);
+        let b1 = rand_q(&mut rng, &[16], 0.3);
+        let w2 = rand_q(&mut rng, &[16, 16, 3, 3], 0.3);
+        let b2 = rand_q(&mut rng, &[16], 0.3);
+        let out = art.run_i16(&[
+            (&x.data, &x.shape),
+            (&w1.data, &w1.shape),
+            (&b1.data, &b1.shape),
+            (&w2.data, &w2.shape),
+            (&b2.data, &b2.shape),
+        ])?;
+        let h = conv_q(&x, &w1, &b1, 1, 1, true, None, Q8_8);
+        let h = conv_q(&h, &w2, &b2, 1, 1, false, None, Q8_8);
+        let want = residual_q(&h, &x, true);
+        if out[0] != want.data {
+            bail!("residual block golden mismatch");
+        }
+        checked += 1;
+    }
+
+    // maxpool 2x2/2 on int16.
+    {
+        let art = rt.load_hlo_text(&dir.join("maxpool_q88.hlo.txt"))?;
+        let x = rand_q(&mut rng, &[16, 12, 12], 2.0);
+        let out = art.run_i16(&[(&x.data, &x.shape)])?;
+        let want = crate::refimpl::pool::maxpool_q(&x, 2, 2, 2, 0);
+        if out[0] != want.data {
+            bail!("maxpool golden mismatch");
+        }
+        checked += 1;
+    }
+
+    Ok(format!(
+        "golden: {checked} artifacts bit-exact vs refimpl on {} ({} platform)",
+        dir.display(),
+        rt.platform()
+    ))
+}

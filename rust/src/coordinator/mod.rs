@@ -1,0 +1,9 @@
+//! Coordination layer: end-to-end drivers behind the CLI, the paper-
+//! table generators (Tables 1–3, Figure 4, the §5.3 accuracy profile)
+//! and the PJRT golden-model cross-check.
+
+pub mod driver;
+pub mod golden;
+pub mod report;
+
+pub use driver::{run_model, validate_model, RunOutcome};

@@ -1,0 +1,399 @@
+//! Paper-table generators. Each function returns structured rows (used
+//! by benches and tests) and can print the table in the paper's format.
+//! DESIGN.md's experiment index maps each to its source (E1–E7).
+
+use crate::arch::SnowflakeConfig;
+use crate::compiler::{decide, layout, BalancePolicy, CompileOptions, LoopOrder};
+use crate::fixed::{QFormat, Q5_11, Q8_8};
+use crate::model::graph::Graph;
+use crate::model::layer::{LayerKind, Shape};
+use crate::model::weights::{synthetic_input, Weights};
+use crate::model::zoo;
+use crate::refimpl;
+use crate::util::rng::Rng;
+
+use super::driver::run_model;
+
+// ---------------------------------------------------------------------
+// Table 1: hand vs auto
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub layer: String,
+    pub hand_ms: f64,
+    pub auto_ms: f64,
+    pub hand_instrs: usize,
+    pub auto_instrs: usize,
+}
+
+/// E1/E6: hand-optimized vs auto-generated code on the Table 1 layers.
+pub fn table1(cfg: &SnowflakeConfig, seed: u64) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for g in zoo::table1_layers() {
+        let hand_opts = CompileOptions { smart_delay_slots: true, ..Default::default() };
+        let auto_opts = CompileOptions::default();
+        let hand_run = run_model(&g, cfg, &hand_opts, seed).expect("hand run");
+        let auto_run = run_model(&g, cfg, &auto_opts, seed).expect("auto run");
+        rows.push(Table1Row {
+            layer: g.name.clone(),
+            hand_ms: hand_run.stats.time_ms(cfg),
+            auto_ms: auto_run.stats.time_ms(cfg),
+            hand_instrs: hand_run.compiled.code_len,
+            auto_instrs: auto_run.compiled.code_len,
+        });
+    }
+    rows
+}
+
+pub fn print_table1(rows: &[Table1Row]) {
+    println!("Table 1: hand optimized code (hand) versus auto-generated instructions (auto)");
+    println!("{:<24} {:>6} {:>11} {:>8}", "Layer", "Code", "Time [ms]", "Instrs");
+    let mut dhand = 0usize;
+    let mut dauto = 0usize;
+    for r in rows {
+        println!("{:<24} {:>6} {:>11.3} {:>8}", r.layer, "Hand", r.hand_ms, r.hand_instrs);
+        println!("{:<24} {:>6} {:>11.3} {:>8}", "", "Auto", r.auto_ms, r.auto_instrs);
+        dhand += r.hand_instrs;
+        dauto += r.auto_instrs;
+    }
+    println!("(auto - hand) instruction delta over all layers: {}", dauto as i64 - dhand as i64);
+}
+
+// ---------------------------------------------------------------------
+// Table 2: model results
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub model: String,
+    pub exec_ms: f64,
+    pub bw_gbs: f64,
+    pub fps: f64,
+    pub cu_util: f64,
+    pub instrs: usize,
+}
+
+/// E2/E7: full-model execution time and bandwidth (FC excluded, as the
+/// paper does: "Execution time for all models does not account for FC
+/// layer times").
+pub fn table2(cfg: &SnowflakeConfig, models: &[&str], seed: u64) -> Vec<Table2Row> {
+    let mut rows = Vec::new();
+    for name in models {
+        let g = zoo::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+        let opts = CompileOptions { skip_fc: true, ..Default::default() };
+        let out = run_model(&g, cfg, &opts, seed).expect("model run");
+        let ms = out.stats.time_ms(cfg);
+        rows.push(Table2Row {
+            model: g.name.clone(),
+            exec_ms: ms,
+            bw_gbs: out.stats.bandwidth_gbs(cfg),
+            fps: 1000.0 / ms,
+            cu_util: out.stats.cu_utilization(),
+            instrs: out.compiled.code_len,
+        });
+    }
+    rows
+}
+
+pub fn print_table2(rows: &[Table2Row]) {
+    println!("Table 2: results for models using Snowflake's compiler");
+    println!(
+        "{:<14} {:>14} {:>10} {:>8} {:>8} {:>8}",
+        "Model", "Exec. Time[ms]", "BW [GB/s]", "fps", "util%", "instrs"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>14.2} {:>10.2} {:>8.1} {:>8.1} {:>8}",
+            r.model,
+            r.exec_ms,
+            r.bw_gbs,
+            r.fps,
+            r.cu_util * 100.0,
+            r.instrs
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 3: speedup vs load imbalance
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub policy: String,
+    pub imbalance_pct: f64,
+    pub exec_ms: f64,
+    pub speedup: f64,
+}
+
+/// The Table 3 layer: CONV 1×1, 1024 in, 2048 out, stride 2 (a ResNet50
+/// layer4 downsample, 14×14 input).
+pub fn table3_layer() -> Graph {
+    let mut g = Graph::new("14x14,1x1,1024,2048,2,0", Shape::new(1024, 14, 14));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 1024, out_ch: 2048, kh: 1, kw: 1, stride: 2, pad: 0, relu: false },
+        "conv",
+    );
+    g
+}
+
+/// E3: run the Table 3 conv under balance policies from finest to the
+/// paper's worst case; speedup is measured against the slowest run.
+pub fn table3(cfg: &SnowflakeConfig, seed: u64) -> Vec<Table3Row> {
+    let g = table3_layer();
+    let policies: Vec<(String, BalancePolicy)> = vec![
+        ("greedy/4".into(), BalancePolicy::Greedy { split: 4 }),
+        ("greedy/2".into(), BalancePolicy::Greedy { split: 2 }),
+        ("greedy/1".into(), BalancePolicy::Greedy { split: 1 }),
+        ("two-units".into(), BalancePolicy::TwoUnits),
+        ("one-unit".into(), BalancePolicy::OneUnit),
+    ];
+    let mut rows = Vec::new();
+    for (name, p) in policies {
+        let opts = CompileOptions { balance: p, ..Default::default() };
+        let out = run_model(&g, cfg, &opts, seed).expect("table3 run");
+        rows.push(Table3Row {
+            policy: name,
+            imbalance_pct: out.stats.load_imbalance_pct(),
+            exec_ms: out.stats.time_ms(cfg),
+            speedup: 0.0,
+        });
+    }
+    let worst = rows.iter().map(|r| r.exec_ms).fold(0.0f64, f64::max);
+    for r in rows.iter_mut() {
+        r.speedup = worst / r.exec_ms;
+    }
+    rows
+}
+
+pub fn print_table3(rows: &[Table3Row]) {
+    println!("Table 3: speed up versus load imbalance (CONV 1x1, 1024->2048, stride 2)");
+    println!("{:<12} {:>16} {:>11} {:>9}", "Policy", "Load Balance [%]", "Time [ms]", "Speed up");
+    for r in rows {
+        println!(
+            "{:<12} {:>16.0} {:>11.3} {:>9.3}",
+            r.policy, r.imbalance_pct, r.exec_ms, r.speedup
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figure 4: Mloop vs Kloop required bandwidth
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub tag: char,
+    pub layer: String,
+    pub mloop_gbs: f64,
+    pub kloop_gbs: f64,
+}
+
+/// E4: required memory bandwidth per loop order for 8 conv examples
+/// (A, B from AlexNet; C–F from ResNet18/50 middles; G, H the big
+/// ResNet50 layers whose Mloop demand exceeds the board's 4.2 GB/s).
+pub fn fig4(cfg: &SnowflakeConfig) -> Vec<Fig4Row> {
+    // (input hxw, k, in_ch, out_ch, stride, pad)
+    let shapes: [(usize, usize, usize, usize, usize, usize); 8] = [
+        (27, 5, 64, 192, 1, 2),    // A: AlexNet conv2
+        (13, 3, 384, 256, 1, 1),   // B: AlexNet conv4
+        (56, 3, 64, 64, 1, 1),     // C: ResNet18 layer1
+        (28, 3, 128, 128, 1, 1),   // D: ResNet18 layer2
+        (14, 3, 256, 256, 1, 1),   // E: ResNet18 layer3
+        (28, 3, 256, 256, 1, 1),   // F: ResNet50 layer2-scale conv
+        (14, 1, 1024, 2048, 2, 0), // G: ResNet50 layer4 downsample
+        (7, 1, 2048, 512, 1, 0),   // H: ResNet50 layer4 bottleneck reduce
+    ];
+    let mut rows = Vec::new();
+    for (i, &(n, k, ic, oc, s, p)) in shapes.iter().enumerate() {
+        let in_shape = Shape::new(ic, n, n);
+        let kind =
+            LayerKind::Conv { in_ch: ic, out_ch: oc, kh: k, kw: k, stride: s, pad: p, relu: false };
+        let out = kind.out_shape(in_shape);
+        let op = layout::Lowered::Conv {
+            node: 0,
+            src: None,
+            bypass: None,
+            in_ch: ic,
+            out_ch: oc,
+            kh: k,
+            kw: k,
+            stride: s,
+            pad: p,
+            relu: false,
+        };
+        let d = decide::decide(&op, in_shape, out, p, 0, cfg, &CompileOptions::default())
+            .expect("decide");
+        let decide::OpPlan::Conv(c) = d else { unreachable!() };
+        rows.push(Fig4Row {
+            tag: (b'A' + i as u8) as char,
+            layer: format!("{n}x{n},{k}x{k},{ic},{oc},{s},{p}"),
+            mloop_gbs: decide::required_bandwidth_gbs(&c, in_shape, cfg, LoopOrder::Mloop),
+            kloop_gbs: decide::required_bandwidth_gbs(&c, in_shape, cfg, LoopOrder::Kloop),
+        });
+    }
+    rows
+}
+
+pub fn print_fig4(rows: &[Fig4Row], cfg: &SnowflakeConfig) {
+    println!("Figure 4: required memory bandwidth in Mloop or Kloop mode");
+    println!("(board limit {:.1} GB/s)", cfg.bandwidth_gbs());
+    println!("{:<3} {:<24} {:>12} {:>12}", "", "CONV", "Mloop GB/s", "Kloop GB/s");
+    for r in rows {
+        let mark = |v: f64| if v > cfg.bandwidth_gbs() { " *over*" } else { "" };
+        println!(
+            "{:<3} {:<24} {:>12.2}{} {:>11.2}{}",
+            r.tag,
+            r.layer,
+            r.mloop_gbs,
+            mark(r.mloop_gbs),
+            r.kloop_gbs,
+            mark(r.kloop_gbs)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// §5.3 accuracy: fp32 vs Q8.8 vs Q5.11
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct AccuracyRow {
+    pub format: String,
+    pub top1_agree: f64,
+    pub top5_agree: f64,
+}
+
+fn topk(data: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    idx.sort_by(|&a, &b| data[b].partial_cmp(&data[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// A small classification CNN for the quantization-accuracy experiment
+/// (the ImageNet substitution, DESIGN.md §Substitutions).
+pub fn accuracy_net() -> Graph {
+    let mut g = Graph::new("acc_net", Shape::new(3, 32, 32));
+    g.push_seq(LayerKind::Conv { in_ch: 3, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true }, "c1");
+    g.push_seq(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, "p1");
+    g.push_seq(LayerKind::Conv { in_ch: 16, out_ch: 32, kh: 3, kw: 3, stride: 1, pad: 1, relu: true }, "c2");
+    g.push_seq(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, "p2");
+    g.push_seq(LayerKind::Conv { in_ch: 32, out_ch: 64, kh: 3, kw: 3, stride: 1, pad: 1, relu: true }, "c3");
+    g.push_seq(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, "p3");
+    g.push_seq(LayerKind::Fc { in_features: 64 * 4 * 4, out_features: 100, relu: false }, "fc");
+    g.validate().unwrap();
+    g
+}
+
+/// E5: top-1/top-5 *agreement* with the fp32 reference over `n` random
+/// inputs, for Q8.8 and Q5.11 — reproducing the paper's ordering
+/// (fp32 > Q5.11 > Q8.8 on ImageNet top-5: 89 / 88 / 84 %).
+pub fn accuracy(n: usize, seed: u64) -> Vec<AccuracyRow> {
+    let g = accuracy_net();
+    let w = Weights::init(&g, seed);
+    let mut rng = Rng::new(seed ^ 0xacc);
+    let mut agree: std::collections::BTreeMap<&str, (usize, usize)> = Default::default();
+    for _ in 0..n {
+        let mut x = crate::tensor::Tensor::zeros(&[3, 32, 32]);
+        for v in x.data.iter_mut() {
+            *v = rng.f32_range(-1.0, 1.0);
+        }
+        let reff = refimpl::forward_f32(&g, &w, &x);
+        let logits_f = &reff.last().unwrap().data;
+        let t1 = topk(logits_f, 1);
+        for (name, fmt) in [("Q8.8", Q8_8), ("Q5.11", Q5_11)] {
+            let q = refimpl::forward_q(&g, &w, &x, fmt);
+            let logits_q: Vec<f32> = fmt.dequantize_slice(&q.last().unwrap().data);
+            let q1 = topk(&logits_q, 1);
+            let q5 = topk(&logits_q, 5);
+            let e = agree.entry(name).or_insert((0, 0));
+            if q1[0] == t1[0] {
+                e.0 += 1;
+            }
+            if q5.contains(&t1[0]) {
+                e.1 += 1;
+            }
+        }
+    }
+    let mut rows = vec![AccuracyRow {
+        format: "float32".into(),
+        top1_agree: 1.0,
+        top5_agree: 1.0,
+    }];
+    for (name, fmt) in [("Q5.11", Q5_11), ("Q8.8", Q8_8)] {
+        let _ = fmt;
+        let (a1, a5) = agree[name];
+        rows.push(AccuracyRow {
+            format: name.into(),
+            top1_agree: a1 as f64 / n as f64,
+            top5_agree: a5 as f64 / n as f64,
+        });
+    }
+    rows
+}
+
+pub fn print_accuracy(rows: &[AccuracyRow]) {
+    println!("Quantization profile (§5.3 substitution): agreement with fp32 on a random CNN");
+    println!("{:<10} {:>12} {:>12}", "Format", "top-1 agree", "top-5 agree");
+    for r in rows {
+        println!("{:<10} {:>11.1}% {:>11.1}%", r.format, r.top1_agree * 100.0, r.top5_agree * 100.0);
+    }
+}
+
+/// Quantization error (RMS) per format — a finer-grained secondary
+/// metric for the accuracy experiment.
+pub fn quantization_rms(fmt: QFormat, seed: u64) -> f64 {
+    let g = accuracy_net();
+    let w = Weights::init(&g, seed);
+    let x = synthetic_input(&g, seed);
+    let f = refimpl::forward_f32(&g, &w, &x);
+    let q = refimpl::forward_q(&g, &w, &x, fmt);
+    let a = &f.last().unwrap().data;
+    let b = fmt.dequantize_slice(&q.last().unwrap().data);
+    let mse: f64 = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64;
+    mse.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_holds() {
+        let cfg = SnowflakeConfig::default();
+        let rows = fig4(&cfg);
+        assert_eq!(rows.len(), 8);
+        // A and B (AlexNet) stay under the limit in both modes.
+        for r in &rows[..2] {
+            assert!(r.kloop_gbs < cfg.bandwidth_gbs(), "{}: {}", r.tag, r.kloop_gbs);
+        }
+        // G exceeds the limit in Mloop but not (or less) in Kloop.
+        let g = &rows[6];
+        assert!(g.mloop_gbs > cfg.bandwidth_gbs(), "G mloop {}", g.mloop_gbs);
+        assert!(g.kloop_gbs < g.mloop_gbs, "G kloop {} !< mloop {}", g.kloop_gbs, g.mloop_gbs);
+    }
+
+    #[test]
+    fn quantization_rms_ordering() {
+        let r88 = quantization_rms(Q8_8, 5);
+        let r511 = quantization_rms(Q5_11, 5);
+        assert!(r511 < r88, "Q5.11 rms {r511} !< Q8.8 rms {r88}");
+    }
+
+    #[test]
+    fn accuracy_ordering_holds() {
+        let rows = accuracy(16, 3);
+        assert_eq!(rows[0].format, "float32");
+        let q511 = rows.iter().find(|r| r.format == "Q5.11").unwrap();
+        let q88 = rows.iter().find(|r| r.format == "Q8.8").unwrap();
+        assert!(q511.top5_agree >= q88.top5_agree);
+        assert!(q511.top5_agree > 0.5);
+    }
+}

@@ -1,0 +1,235 @@
+//! Fixed-point arithmetic — the data type of the whole machine.
+//!
+//! Snowflake computes in 16-bit fixed point; the paper uses **Q8.8**
+//! (8 integer bits, 8 fractional bits) for the hardware and validates a
+//! **Q5.11** variant for accuracy (§5.3). This module implements generic
+//! Qm.n over 16-bit storage with the exact datapath the simulator's MAC
+//! units use: `i16 × i16 → i32` products, 32-bit accumulation, and a
+//! rounding, saturating writeback shift.
+
+use std::fmt;
+
+/// A 16-bit fixed point format with `frac` fractional bits (Q(16-frac).frac).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct QFormat {
+    pub frac: u32,
+}
+
+/// The paper's hardware format: Q8.8.
+pub const Q8_8: QFormat = QFormat { frac: 8 };
+/// The paper's higher-precision profile: Q5.11.
+pub const Q5_11: QFormat = QFormat { frac: 11 };
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", 16 - self.frac, self.frac)
+    }
+}
+
+impl QFormat {
+    pub const fn new(frac: u32) -> Self {
+        assert!(frac < 16);
+        QFormat { frac }
+    }
+
+    /// Scale factor 2^frac.
+    #[inline]
+    pub fn scale(self) -> f32 {
+        (1i32 << self.frac) as f32
+    }
+
+    /// Largest representable value.
+    pub fn max_value(self) -> f32 {
+        i16::MAX as f32 / self.scale()
+    }
+
+    /// Smallest representable value.
+    pub fn min_value(self) -> f32 {
+        i16::MIN as f32 / self.scale()
+    }
+
+    /// Quantize an f32 to the stored i16: round to nearest (ties away
+    /// from zero), saturate to the representable range.
+    #[inline]
+    pub fn quantize(self, x: f32) -> i16 {
+        let scaled = x * self.scale();
+        let rounded = if scaled >= 0.0 { scaled + 0.5 } else { scaled - 0.5 };
+        if rounded >= i16::MAX as f32 {
+            i16::MAX
+        } else if rounded <= i16::MIN as f32 {
+            i16::MIN
+        } else {
+            rounded as i16
+        }
+    }
+
+    /// Recover the f32 value of a stored word.
+    #[inline]
+    pub fn dequantize(self, q: i16) -> f32 {
+        q as f32 / self.scale()
+    }
+
+    /// The MAC datapath's writeback: take a 32-bit accumulator holding a
+    /// sum of `i16×i16` products (scale 2^(2·frac)), shift back to scale
+    /// 2^frac with round-to-nearest, saturate to i16.
+    ///
+    /// This exact function is shared by the simulator ([`crate::sim`]),
+    /// the reference implementation ([`crate::refimpl`]) and mirrored by
+    /// the Pallas kernel (`python/compile/kernels/conv_q88.py`), so all
+    /// three produce bit-identical results.
+    #[inline]
+    pub fn writeback(self, acc: i64) -> i16 {
+        let half = 1i64 << (self.frac - 1);
+        // Round to nearest, ties toward +inf (cheap in hardware: add half
+        // then arithmetic shift).
+        let shifted = (acc + half) >> self.frac;
+        saturate_i16(shifted)
+    }
+
+    /// Quantize a whole f32 slice.
+    pub fn quantize_slice(self, xs: &[f32]) -> Vec<i16> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize a whole i16 slice.
+    pub fn dequantize_slice(self, qs: &[i16]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q)).collect()
+    }
+
+    /// Quantization step (smallest positive representable increment).
+    pub fn epsilon(self) -> f32 {
+        1.0 / self.scale()
+    }
+}
+
+/// Saturate a 64-bit value into i16 range.
+#[inline]
+pub fn saturate_i16(v: i64) -> i16 {
+    if v > i16::MAX as i64 {
+        i16::MAX
+    } else if v < i16::MIN as i64 {
+        i16::MIN
+    } else {
+        v as i16
+    }
+}
+
+/// One multiply-accumulate step of the MAC datapath.
+#[inline]
+pub fn mac_step(acc: i64, a: i16, b: i16) -> i64 {
+    acc + (a as i64) * (b as i64)
+}
+
+/// Saturating Q addition of two stored words (used by the residual-add
+/// path: bypass values are added post-writeback in the same format).
+#[inline]
+pub fn sat_add(a: i16, b: i16) -> i16 {
+    a.saturating_add(b)
+}
+
+/// ReLU on a stored word.
+#[inline]
+pub fn relu_q(a: i16) -> i16 {
+    a.max(0)
+}
+
+/// Element-wise max (the pool unit's comparator).
+#[inline]
+pub fn max_q(a: i16, b: i16) -> i16 {
+    a.max(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn q88_basics() {
+        assert_eq!(Q8_8.quantize(1.0), 256);
+        assert_eq!(Q8_8.quantize(-1.0), -256);
+        assert_eq!(Q8_8.quantize(0.5), 128);
+        assert_eq!(Q8_8.dequantize(256), 1.0);
+        assert_eq!(format!("{Q8_8}"), "Q8.8");
+        assert_eq!(format!("{Q5_11}"), "Q5.11");
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Q8_8.quantize(1000.0), i16::MAX);
+        assert_eq!(Q8_8.quantize(-1000.0), i16::MIN);
+        assert_eq!(Q5_11.quantize(20.0), i16::MAX);
+        assert_eq!(saturate_i16(1 << 40), i16::MAX);
+        assert_eq!(saturate_i16(-(1 << 40)), i16::MIN);
+    }
+
+    #[test]
+    fn rounding_ties() {
+        // 0.001953125 = 0.5 * eps(Q8.8): rounds away from zero.
+        assert_eq!(Q8_8.quantize(0.5 / 256.0), 1);
+        assert_eq!(Q8_8.quantize(-0.5 / 256.0), -1);
+    }
+
+    #[test]
+    fn writeback_matches_float_mac() {
+        // 1.0 * 1.5 accumulated at double scale must write back as 1.5.
+        let a = Q8_8.quantize(1.0);
+        let b = Q8_8.quantize(1.5);
+        let acc = mac_step(0, a, b);
+        assert_eq!(Q8_8.writeback(acc), Q8_8.quantize(1.5));
+    }
+
+    #[test]
+    fn writeback_saturates() {
+        let a = Q8_8.quantize(100.0);
+        let mut acc = 0i64;
+        for _ in 0..100 {
+            acc = mac_step(acc, a, a);
+        }
+        assert_eq!(Q8_8.writeback(acc), i16::MAX);
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bound() {
+        for_cases(200, 11, |rng| {
+            let fmt = if rng.bool() { Q8_8 } else { Q5_11 };
+            let x = rng.f32_range(fmt.min_value(), fmt.max_value());
+            let err = (fmt.dequantize(fmt.quantize(x)) - x).abs();
+            assert!(err <= fmt.epsilon() * 0.5 + 1e-6, "{fmt}: x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn q511_finer_than_q88() {
+        assert!(Q5_11.epsilon() < Q8_8.epsilon());
+        assert!(Q5_11.max_value() < Q8_8.max_value());
+    }
+
+    #[test]
+    fn relu_and_max() {
+        assert_eq!(relu_q(-5), 0);
+        assert_eq!(relu_q(5), 5);
+        assert_eq!(max_q(-3, 7), 7);
+        assert_eq!(sat_add(i16::MAX, 1), i16::MAX);
+        assert_eq!(sat_add(i16::MIN, -1), i16::MIN);
+    }
+
+    #[test]
+    fn mac_trace_matches_f64_reference() {
+        // Property: MAC trace over random Q8.8 values matches an f64
+        // computation within one writeback quantization step.
+        for_cases(100, 5, |rng| {
+            let n = rng.range(1, 64);
+            let mut acc = 0i64;
+            let mut reff = 0.0f64;
+            for _ in 0..n {
+                let a = Q8_8.quantize(rng.f32_range(-2.0, 2.0));
+                let b = Q8_8.quantize(rng.f32_range(-2.0, 2.0));
+                acc = mac_step(acc, a, b);
+                reff += Q8_8.dequantize(a) as f64 * Q8_8.dequantize(b) as f64;
+            }
+            let got = Q8_8.dequantize(Q8_8.writeback(acc)) as f64;
+            assert!((got - reff).abs() <= Q8_8.epsilon() as f64, "got={got} ref={reff}");
+        });
+    }
+}

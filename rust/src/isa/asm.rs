@@ -1,0 +1,349 @@
+//! Assembly text format: disassembler + assembler with labels.
+//!
+//! The compiler emits [`super::instr::Program`]s directly; this textual
+//! form exists for the hand-written baseline streams (Table 1), debug
+//! dumps (`repro compile --emit-asm`) and tests.
+//!
+//! Syntax (one instruction per line, `;` starts a comment, `name:` is a
+//! label, `@name` a label reference in branch offsets):
+//!
+//! ```text
+//! movi r1, 128
+//! loop:
+//! mac coop r5, r6, r7, len=12, wb, relu
+//! addi r6, r6, 16
+//! ble r1, r2, @loop
+//! max r5, r6, r7, lanes=0, wb
+//! vmov bias, r3
+//! ld mbuf bcast u=0 cu=0 bank=1 buf=r1, mem=r2, len=r3
+//! halt
+//! ```
+
+use super::instr::{Instr, LdTarget, MacFlags, Program, VmovSel};
+use std::collections::BTreeMap;
+
+/// Disassemble one instruction.
+pub fn disasm(i: &Instr) -> String {
+    use Instr::*;
+    fn flags_str(f: &MacFlags) -> String {
+        let mut s = String::new();
+        if f.writeback {
+            s.push_str(", wb");
+        }
+        if f.relu {
+            s.push_str(", relu");
+        }
+        if f.bypass {
+            s.push_str(", bypass");
+        }
+        if f.reset {
+            s.push_str(", reset");
+        }
+        s
+    }
+    match *i {
+        Mov { rd, rs1, sh } => format!("mov r{rd}, r{rs1}, {sh}"),
+        Movi { rd, imm } => format!("movi r{rd}, {imm}"),
+        Add { rd, rs1, rs2 } => format!("add r{rd}, r{rs1}, r{rs2}"),
+        Addi { rd, rs1, imm } => format!("addi r{rd}, r{rs1}, {imm}"),
+        Mul { rd, rs1, rs2 } => format!("mul r{rd}, r{rs1}, r{rs2}"),
+        Muli { rd, rs1, imm } => format!("muli r{rd}, r{rs1}, {imm}"),
+        Mac { coop, rd, rs1, rs2, len, flags } => format!(
+            "mac {} r{rd}, r{rs1}, r{rs2}, len={len}{}",
+            if coop { "coop" } else { "indp" },
+            flags_str(&flags)
+        ),
+        Max { rd, rs1, rs2, wb_lanes, flags } => {
+            format!("max r{rd}, r{rs1}, r{rs2}, lanes={wb_lanes}{}", flags_str(&flags))
+        }
+        Vmov { sel, rs1, wide } => format!(
+            "vmov {}{}, r{rs1}",
+            if matches!(sel, VmovSel::Bias) { "bias" } else { "bypass" },
+            if wide { " wide" } else { "" }
+        ),
+        Ble { rs1, rs2, off } => format!("ble r{rs1}, r{rs2}, {off}"),
+        Bgt { rs1, rs2, off } => format!("bgt r{rs1}, r{rs2}, {off}"),
+        Beq { rs1, rs2, off } => format!("beq r{rs1}, r{rs2}, {off}"),
+        Ld { target, broadcast, unit, rd, rs1, rs2 } => {
+            let bc = if broadcast { " bcast" } else { "" };
+            let tgt = match target {
+                LdTarget::WBuf { cu, vmac } => format!("wbuf{bc} u={unit} cu={cu} v={vmac}"),
+                LdTarget::MBuf { cu, bank } => format!("mbuf{bc} u={unit} cu={cu} bank={bank}"),
+                LdTarget::BBuf { cu } => format!("bbuf{bc} u={unit} cu={cu}"),
+                LdTarget::ICache { bank } => format!("icache{bc} u={unit} bank={bank}"),
+            };
+            format!("ld {tgt} buf=r{rd}, mem=r{rs1}, len=r{rs2}")
+        }
+        Halt => "halt".to_string(),
+    }
+}
+
+/// Disassemble a program, with comments and instruction indices.
+pub fn disasm_program(p: &Program) -> String {
+    let mut out = String::new();
+    for (idx, i) in p.instrs.iter().enumerate() {
+        let line = disasm(i);
+        match &p.comments[idx] {
+            Some(c) => out.push_str(&format!("{idx:5}  {line:<52} ; {c}\n")),
+            None => out.push_str(&format!("{idx:5}  {line}\n")),
+        }
+    }
+    out
+}
+
+fn parse_reg(tok: &str) -> Result<u8, String> {
+    let t = tok.trim().trim_end_matches(',');
+    let n = t
+        .strip_prefix('r')
+        .ok_or(format!("expected register, got '{t}'"))?
+        .parse::<u8>()
+        .map_err(|_| format!("bad register '{t}'"))?;
+    if n >= 32 {
+        return Err(format!("register r{n} out of range"));
+    }
+    Ok(n)
+}
+
+fn parse_int(tok: &str) -> Result<i64, String> {
+    tok.trim().trim_end_matches(',').parse::<i64>().map_err(|_| format!("bad integer '{tok}'"))
+}
+
+fn kv<'a>(toks: &'a [&'a str], key: &str) -> Option<&'a str> {
+    toks.iter().find_map(|t| t.trim_end_matches(',').strip_prefix(&format!("{key}=")))
+}
+
+/// Assemble a program from text. Labels resolve to branch offsets
+/// relative to the *following* instruction? No — offsets are relative to
+/// the branch's own PC (`PC += off` when taken), matching the simulator.
+pub fn assemble(text: &str) -> Result<Program, String> {
+    // Pass 1: collect labels at instruction indices.
+    let mut labels: BTreeMap<String, usize> = BTreeMap::new();
+    let mut lines: Vec<(usize, String)> = Vec::new(); // (line_no, content)
+    let mut idx = 0usize;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split(';').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_suffix(':') {
+            let name = name.trim();
+            if labels.insert(name.to_string(), idx).is_some() {
+                return Err(format!("line {}: duplicate label '{name}'", ln + 1));
+            }
+            continue;
+        }
+        lines.push((ln + 1, line.to_string()));
+        idx += 1;
+    }
+
+    // Pass 2: parse instructions.
+    let mut prog = Program::new();
+    for (pc, (ln, line)) in lines.iter().enumerate() {
+        let err = |m: String| format!("line {ln}: {m}");
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let flags_from = |toks: &[&str]| MacFlags {
+            writeback: toks.iter().any(|t| t.trim_end_matches(',') == "wb"),
+            relu: toks.iter().any(|t| t.trim_end_matches(',') == "relu"),
+            bypass: toks.iter().any(|t| t.trim_end_matches(',') == "bypass"),
+            reset: toks.iter().any(|t| t.trim_end_matches(',') == "reset"),
+        };
+        let branch_off = |tok: &str| -> Result<i16, String> {
+            let t = tok.trim_end_matches(',');
+            if let Some(name) = t.strip_prefix('@') {
+                let target = *labels.get(name).ok_or(format!("unknown label '{name}'"))?;
+                Ok(target as i64 as i16 - pc as i16)
+            } else {
+                Ok(parse_int(t)? as i16)
+            }
+        };
+        let i = match toks[0] {
+            "mov" => Instr::Mov {
+                rd: parse_reg(toks[1]).map_err(&err)?,
+                rs1: parse_reg(toks[2]).map_err(&err)?,
+                sh: parse_int(toks[3]).map_err(&err)? as u8,
+            },
+            "movi" => Instr::Movi {
+                rd: parse_reg(toks[1]).map_err(&err)?,
+                imm: parse_int(toks[2]).map_err(&err)? as i32,
+            },
+            "add" | "mul" => {
+                let (rd, rs1, rs2) = (
+                    parse_reg(toks[1]).map_err(&err)?,
+                    parse_reg(toks[2]).map_err(&err)?,
+                    parse_reg(toks[3]).map_err(&err)?,
+                );
+                if toks[0] == "add" {
+                    Instr::Add { rd, rs1, rs2 }
+                } else {
+                    Instr::Mul { rd, rs1, rs2 }
+                }
+            }
+            "addi" | "muli" => {
+                let (rd, rs1, imm) = (
+                    parse_reg(toks[1]).map_err(&err)?,
+                    parse_reg(toks[2]).map_err(&err)?,
+                    parse_int(toks[3]).map_err(&err)? as i16,
+                );
+                if toks[0] == "addi" {
+                    Instr::Addi { rd, rs1, imm }
+                } else {
+                    Instr::Muli { rd, rs1, imm }
+                }
+            }
+            "mac" => {
+                let coop = match toks[1] {
+                    "coop" => true,
+                    "indp" => false,
+                    other => return Err(err(format!("mac mode must be coop/indp, got '{other}'"))),
+                };
+                Instr::Mac {
+                    coop,
+                    rd: parse_reg(toks[2]).map_err(&err)?,
+                    rs1: parse_reg(toks[3]).map_err(&err)?,
+                    rs2: parse_reg(toks[4]).map_err(&err)?,
+                    len: kv(&toks, "len")
+                        .ok_or(err("mac needs len=".into()))?
+                        .parse()
+                        .map_err(|_| err("bad len".into()))?,
+                    flags: flags_from(&toks),
+                }
+            }
+            "max" => Instr::Max {
+                rd: parse_reg(toks[1]).map_err(&err)?,
+                rs1: parse_reg(toks[2]).map_err(&err)?,
+                rs2: parse_reg(toks[3]).map_err(&err)?,
+                wb_lanes: kv(&toks, "lanes")
+                    .ok_or(err("max needs lanes=".into()))?
+                    .parse()
+                    .map_err(|_| err("bad lanes".into()))?,
+                flags: flags_from(&toks),
+            },
+            "vmov" => {
+                let wide = toks.iter().any(|t| t.trim_end_matches(',') == "wide");
+                let reg_tok = if wide { toks[3] } else { toks[2] };
+                Instr::Vmov {
+                    sel: match toks[1].trim_end_matches(',') {
+                        "bias" => VmovSel::Bias,
+                        "bypass" => VmovSel::Bypass,
+                        other => {
+                            return Err(err(format!(
+                                "vmov select must be bias/bypass, got '{other}'"
+                            )))
+                        }
+                    },
+                    rs1: parse_reg(reg_tok).map_err(&err)?,
+                    wide,
+                }
+            }
+            "ble" | "bgt" | "beq" => {
+                let rs1 = parse_reg(toks[1]).map_err(&err)?;
+                let rs2 = parse_reg(toks[2]).map_err(&err)?;
+                let off = branch_off(toks[3]).map_err(&err)?;
+                match toks[0] {
+                    "ble" => Instr::Ble { rs1, rs2, off },
+                    "bgt" => Instr::Bgt { rs1, rs2, off },
+                    _ => Instr::Beq { rs1, rs2, off },
+                }
+            }
+            "ld" => {
+                let broadcast = toks.contains(&"bcast");
+                let unit: u8 = kv(&toks, "u")
+                    .ok_or(err("ld needs u=".into()))?
+                    .parse()
+                    .map_err(|_| err("bad unit".into()))?;
+                let cu: u8 = kv(&toks, "cu").map(|s| s.parse().unwrap_or(0)).unwrap_or(0);
+                let target = match toks[1] {
+                    "wbuf" => LdTarget::WBuf {
+                        cu,
+                        vmac: kv(&toks, "v").map(|s| s.parse().unwrap_or(0)).unwrap_or(0),
+                    },
+                    "mbuf" => LdTarget::MBuf {
+                        cu,
+                        bank: kv(&toks, "bank").map(|s| s.parse().unwrap_or(0)).unwrap_or(0),
+                    },
+                    "bbuf" => LdTarget::BBuf { cu },
+                    "icache" => LdTarget::ICache {
+                        bank: kv(&toks, "bank").map(|s| s.parse().unwrap_or(0)).unwrap_or(0),
+                    },
+                    other => return Err(err(format!("unknown ld target '{other}'"))),
+                };
+                let reg_of = |key: &str| -> Result<u8, String> {
+                    parse_reg(kv(&toks, key).ok_or(format!("ld needs {key}="))?)
+                };
+                Instr::Ld {
+                    target,
+                    broadcast,
+                    unit,
+                    rd: reg_of("buf").map_err(&err)?,
+                    rs1: reg_of("mem").map_err(&err)?,
+                    rs2: reg_of("len").map_err(&err)?,
+                }
+            }
+            "halt" => Instr::Halt,
+            other => return Err(err(format!("unknown mnemonic '{other}'"))),
+        };
+        prog.push(i);
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::{decode, encode};
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn asm_roundtrip_property() {
+        for_cases(300, 12, |rng| {
+            let i = crate::isa::encode::random_instr(rng);
+            let text = disasm(&i);
+            let p = assemble(&text).unwrap_or_else(|e| panic!("asm '{text}': {e}"));
+            assert_eq!(p.instrs.len(), 1, "{text}");
+            assert_eq!(p.instrs[0], i, "{text}");
+        });
+    }
+
+    #[test]
+    fn labels_resolve_backward_and_forward() {
+        let p = assemble(
+            "movi r1, 0\n\
+             loop:\n\
+             addi r1, r1, 1\n\
+             ble r1, r2, @loop\n\
+             beq r0, r0, @done\n\
+             movi r3, 9\n\
+             done:\n\
+             halt\n",
+        )
+        .unwrap();
+        // ble at pc=2, loop at pc=1 -> off -1; beq at pc=3, done at 5 -> +2.
+        assert_eq!(p.instrs[2], Instr::Ble { rs1: 1, rs2: 2, off: -1 });
+        assert_eq!(p.instrs[3], Instr::Beq { rs1: 0, rs2: 0, off: 2 });
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let p = assemble("; header\n\n  movi r1, 3 ; set\n\nhalt\n").unwrap();
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = assemble("movi r1, 3\nbadop r1\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(assemble("movi r99, 3").is_err());
+        assert!(assemble("ble r1, r2, @nowhere").is_err());
+        assert!(assemble("foo:\nfoo:\nhalt").is_err());
+    }
+
+    #[test]
+    fn binary_text_binary_consistency() {
+        for_cases(200, 77, |rng| {
+            let i = crate::isa::encode::random_instr(rng);
+            let via_text = assemble(&disasm(&i)).unwrap().instrs[0];
+            let via_bits = decode(encode(&i)).unwrap();
+            assert_eq!(via_text, via_bits);
+        });
+    }
+}

@@ -1,0 +1,323 @@
+//! Binary encoding — 32-bit instruction words.
+//!
+//! Field layout (§4: "4 bit operand code, 1 bit mode select, 5 bit
+//! register selects … and a immediate field"):
+//!
+//! ```text
+//! common:  op[31:28] mode[27] rd[26:22] rs1[21:17] rs2[16:12] imm12[11:0]
+//! MOVI:    op[31:28] rd[27:23] imm23[22:0]                 (23-bit signed)
+//! ```
+//!
+//! MAC imm12: `len[7:0] wb[8] relu[9] bypass[10] reset[11]`, mode = COOP.
+//! MAX imm12: `wb_lanes[7:4] wb[8] reset[11]` (lane stride in rs2).
+//! VMOV imm12: `sel[0]` (0 = bias, 1 = bypass), mode = wide (INDP).
+//! LD imm12: `unit[1:0] kind[3:2] sel[5:4] cu[7:6]`, mode = broadcast;
+//! kind: 0 = WBuf(sel = vmac), 1 = MBuf(sel = bank), 2 = BBuf, 3 = ICache.
+
+use super::instr::{Instr, LdTarget, MacFlags, VmovSel};
+
+const OP_MOV: u32 = 0;
+const OP_MOVI: u32 = 1;
+const OP_ADD: u32 = 2;
+const OP_ADDI: u32 = 3;
+const OP_MUL: u32 = 4;
+const OP_MULI: u32 = 5;
+const OP_MAC: u32 = 6;
+const OP_MAX: u32 = 7;
+const OP_VMOV: u32 = 8;
+const OP_BLE: u32 = 9;
+const OP_BGT: u32 = 10;
+const OP_BEQ: u32 = 11;
+const OP_LD: u32 = 12;
+const OP_HALT: u32 = 15;
+
+fn common(op: u32, mode: u32, rd: u8, rs1: u8, rs2: u8, imm12: u32) -> u32 {
+    debug_assert!(rd < 32 && rs1 < 32 && rs2 < 32 && imm12 < (1 << 12) && mode < 2);
+    (op << 28) | (mode << 27) | ((rd as u32) << 22) | ((rs1 as u32) << 17) | ((rs2 as u32) << 12) | imm12
+}
+
+fn imm12_of(i: i16) -> u32 {
+    debug_assert!((-2048..=2047).contains(&i), "imm12 out of range: {i}");
+    (i as i32 as u32) & 0xfff
+}
+
+fn sext12(v: u32) -> i16 {
+    (((v & 0xfff) as i32) << 20 >> 20) as i16
+}
+
+fn sext23(v: u32) -> i32 {
+    ((v & 0x7f_ffff) as i32) << 9 >> 9
+}
+
+/// Encode an instruction into its 32-bit word.
+pub fn encode(i: &Instr) -> u32 {
+    use Instr::*;
+    match *i {
+        Mov { rd, rs1, sh } => common(OP_MOV, 0, rd, rs1, 0, sh as u32 & 0x1f),
+        Movi { rd, imm } => {
+            debug_assert!((-(1 << 22)..(1 << 22)).contains(&imm), "imm23 out of range: {imm}");
+            (OP_MOVI << 28) | ((rd as u32) << 23) | ((imm as u32) & 0x7f_ffff)
+        }
+        Add { rd, rs1, rs2 } => common(OP_ADD, 0, rd, rs1, rs2, 0),
+        Addi { rd, rs1, imm } => common(OP_ADDI, 0, rd, rs1, 0, imm12_of(imm)),
+        Mul { rd, rs1, rs2 } => common(OP_MUL, 0, rd, rs1, rs2, 0),
+        Muli { rd, rs1, imm } => common(OP_MULI, 0, rd, rs1, 0, imm12_of(imm)),
+        Mac { coop, rd, rs1, rs2, len, flags } => {
+            let imm = (len as u32)
+                | ((flags.writeback as u32) << 8)
+                | ((flags.relu as u32) << 9)
+                | ((flags.bypass as u32) << 10)
+                | ((flags.reset as u32) << 11);
+            common(OP_MAC, coop as u32, rd, rs1, rs2, imm)
+        }
+        Max { rd, rs1, rs2, wb_lanes, flags } => {
+            debug_assert!(wb_lanes <= 16, "max wb_lanes 0..=16, got {wb_lanes}");
+            let imm = (((wb_lanes & 0xf) as u32) << 4)
+                | ((flags.writeback as u32) << 8)
+                | ((flags.reset as u32) << 11);
+            common(OP_MAX, 0, rd, rs1, rs2, imm)
+        }
+        Vmov { sel, rs1, wide } => common(
+            OP_VMOV,
+            wide as u32,
+            0,
+            rs1,
+            0,
+            matches!(sel, VmovSel::Bypass) as u32,
+        ),
+        Ble { rs1, rs2, off } => common(OP_BLE, 0, 0, rs1, rs2, imm12_of(off)),
+        Bgt { rs1, rs2, off } => common(OP_BGT, 0, 0, rs1, rs2, imm12_of(off)),
+        Beq { rs1, rs2, off } => common(OP_BEQ, 0, 0, rs1, rs2, imm12_of(off)),
+        Ld { target, broadcast, unit, rd, rs1, rs2 } => {
+            debug_assert!(unit < 4);
+            let (kind, sel, cu) = match target {
+                LdTarget::WBuf { cu, vmac } => (0u32, vmac as u32, cu as u32),
+                LdTarget::MBuf { cu, bank } => (1, bank as u32, cu as u32),
+                LdTarget::BBuf { cu } => (2, 0, cu as u32),
+                LdTarget::ICache { bank } => (3, bank as u32, 0),
+            };
+            debug_assert!(sel < 4 && cu < 4);
+            let imm = (unit as u32) | (kind << 2) | (sel << 4) | (cu << 6);
+            common(OP_LD, broadcast as u32, rd, rs1, rs2, imm)
+        }
+        Halt => OP_HALT << 28,
+    }
+}
+
+/// Decode a 32-bit word back into an instruction.
+pub fn decode(w: u32) -> Result<Instr, String> {
+    let op = w >> 28;
+    let mode = (w >> 27) & 1;
+    let rd = ((w >> 22) & 0x1f) as u8;
+    let rs1 = ((w >> 17) & 0x1f) as u8;
+    let rs2 = ((w >> 12) & 0x1f) as u8;
+    let imm = w & 0xfff;
+    Ok(match op {
+        OP_MOV => Instr::Mov { rd, rs1, sh: (imm & 0x1f) as u8 },
+        OP_MOVI => Instr::Movi { rd: ((w >> 23) & 0x1f) as u8, imm: sext23(w) },
+        OP_ADD => Instr::Add { rd, rs1, rs2 },
+        OP_ADDI => Instr::Addi { rd, rs1, imm: sext12(imm) },
+        OP_MUL => Instr::Mul { rd, rs1, rs2 },
+        OP_MULI => Instr::Muli { rd, rs1, imm: sext12(imm) },
+        OP_MAC => Instr::Mac {
+            coop: mode == 1,
+            rd,
+            rs1,
+            rs2,
+            len: (imm & 0xff) as u8,
+            flags: MacFlags {
+                writeback: imm & (1 << 8) != 0,
+                relu: imm & (1 << 9) != 0,
+                bypass: imm & (1 << 10) != 0,
+                reset: imm & (1 << 11) != 0,
+            },
+        },
+        OP_MAX => Instr::Max {
+            rd,
+            rs1,
+            rs2,
+            wb_lanes: ((imm >> 4) & 0xf) as u8,
+            flags: MacFlags {
+                writeback: imm & (1 << 8) != 0,
+                relu: false,
+                bypass: false,
+                reset: imm & (1 << 11) != 0,
+            },
+        },
+        OP_VMOV => Instr::Vmov {
+            sel: if imm & 1 == 1 { VmovSel::Bypass } else { VmovSel::Bias },
+            rs1,
+            wide: mode == 1,
+        },
+        OP_BLE => Instr::Ble { rs1, rs2, off: sext12(imm) },
+        OP_BGT => Instr::Bgt { rs1, rs2, off: sext12(imm) },
+        OP_BEQ => Instr::Beq { rs1, rs2, off: sext12(imm) },
+        OP_LD => {
+            let unit = (imm & 3) as u8;
+            let kind = (imm >> 2) & 3;
+            let sel = ((imm >> 4) & 3) as u8;
+            let cu = ((imm >> 6) & 3) as u8;
+            let target = match kind {
+                0 => LdTarget::WBuf { cu, vmac: sel },
+                1 => LdTarget::MBuf { cu, bank: sel },
+                2 => LdTarget::BBuf { cu },
+                _ => LdTarget::ICache { bank: sel },
+            };
+            Instr::Ld { target, broadcast: mode == 1, unit, rd, rs1, rs2 }
+        }
+        OP_HALT => Instr::Halt,
+        other => return Err(format!("unknown opcode {other} in word {w:#010x}")),
+    })
+}
+
+/// Encode a whole stream to memory words (two 16-bit words per
+/// instruction, low half first — what LD-to-icache reads from DRAM).
+pub fn to_mem_words(instrs: &[Instr]) -> Vec<i16> {
+    let mut out = Vec::with_capacity(instrs.len() * 2);
+    for i in instrs {
+        let w = encode(i);
+        out.push((w & 0xffff) as i16);
+        out.push((w >> 16) as i16);
+    }
+    out
+}
+
+/// Decode instructions back from memory words.
+pub fn from_mem_words(words: &[i16]) -> Result<Vec<Instr>, String> {
+    if words.len() % 2 != 0 {
+        return Err("odd word count".into());
+    }
+    words
+        .chunks(2)
+        .map(|c| decode(((c[1] as u16 as u32) << 16) | (c[0] as u16 as u32)))
+        .collect()
+}
+
+/// Generate a random valid instruction (shared by codec/asm/verify tests).
+#[cfg(test)]
+pub(crate) fn random_instr(rng: &mut crate::util::rng::Rng) -> Instr {
+    use crate::util::rng::Rng;
+    fn inner(rng: &mut Rng) -> Instr {
+        let reg = |r: &mut Rng| r.range(0, 32) as u8;
+        let flags = |r: &mut Rng| MacFlags {
+            writeback: r.bool(),
+            relu: r.bool(),
+            bypass: r.bool(),
+            reset: r.bool(),
+        };
+        match rng.range(0, 14) {
+            0 => Instr::Mov { rd: reg(rng), rs1: reg(rng), sh: rng.range(0, 32) as u8 },
+            1 => Instr::Movi { rd: reg(rng), imm: rng.range(0, 1 << 23) as i32 - (1 << 22) },
+            2 => Instr::Add { rd: reg(rng), rs1: reg(rng), rs2: reg(rng) },
+            3 => Instr::Addi { rd: reg(rng), rs1: reg(rng), imm: rng.range(0, 4096) as i16 - 2048 },
+            4 => Instr::Mul { rd: reg(rng), rs1: reg(rng), rs2: reg(rng) },
+            5 => Instr::Muli { rd: reg(rng), rs1: reg(rng), imm: rng.range(0, 4096) as i16 - 2048 },
+            6 => Instr::Mac {
+                coop: rng.bool(),
+                rd: reg(rng),
+                rs1: reg(rng),
+                rs2: reg(rng),
+                len: rng.range(1, 256) as u8,
+                flags: flags(rng),
+            },
+            7 => Instr::Max {
+                rd: reg(rng),
+                rs1: reg(rng),
+                rs2: reg(rng),
+                wb_lanes: rng.range(0, 16) as u8,
+                flags: MacFlags { relu: false, bypass: false, ..flags(rng) },
+            },
+            8 => Instr::Vmov {
+                sel: if rng.bool() { VmovSel::Bias } else { VmovSel::Bypass },
+                rs1: reg(rng),
+                wide: rng.bool(),
+            },
+            9 => Instr::Ble { rs1: reg(rng), rs2: reg(rng), off: rng.range(0, 4096) as i16 - 2048 },
+            10 => Instr::Bgt { rs1: reg(rng), rs2: reg(rng), off: rng.range(0, 4096) as i16 - 2048 },
+            11 => Instr::Beq { rs1: reg(rng), rs2: reg(rng), off: rng.range(0, 4096) as i16 - 2048 },
+            12 => {
+                let cu = rng.range(0, 4) as u8;
+                let target = match rng.range(0, 4) {
+                    0 => LdTarget::WBuf { cu, vmac: rng.range(0, 4) as u8 },
+                    1 => LdTarget::MBuf { cu, bank: rng.range(0, 2) as u8 },
+                    2 => LdTarget::BBuf { cu },
+                    _ => LdTarget::ICache { bank: rng.range(0, 2) as u8 },
+                };
+                Instr::Ld {
+                    target,
+                    broadcast: rng.bool(),
+                    unit: rng.range(0, 4) as u8,
+                    rd: reg(rng),
+                    rs1: reg(rng),
+                    rs2: reg(rng),
+                }
+            }
+            _ => Instr::Halt,
+        }
+    }
+    inner(rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_property() {
+        for_cases(500, 99, |rng| {
+            let i = random_instr(rng);
+            // ICache target loses cu in encoding (always broadcast);
+            // normalize before compare.
+            let i = match i {
+                Instr::Ld { target: LdTarget::ICache { bank }, unit, rd, rs1, rs2, broadcast } => {
+                    Instr::Ld { target: LdTarget::ICache { bank }, unit, rd, rs1, rs2, broadcast }
+                }
+                other => other,
+            };
+            let back = decode(encode(&i)).unwrap();
+            assert_eq!(back, i, "word {:#010x}", encode(&i));
+        });
+    }
+
+    #[test]
+    fn known_encodings_stable() {
+        // Pin a few words so the binary format can't drift silently.
+        assert_eq!(encode(&Instr::Halt), 0xf000_0000);
+        assert_eq!(encode(&Instr::Movi { rd: 1, imm: 5 }), 0x1080_0005);
+        assert_eq!(encode(&Instr::Add { rd: 1, rs1: 2, rs2: 3 }), 0x2044_3000);
+    }
+
+    #[test]
+    fn movi_sign_extension() {
+        let i = Instr::Movi { rd: 3, imm: -1 };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+        let j = Instr::Movi { rd: 3, imm: -(1 << 22) };
+        assert_eq!(decode(encode(&j)).unwrap(), j);
+    }
+
+    #[test]
+    fn branch_offset_sign_extension() {
+        let i = Instr::Ble { rs1: 1, rs2: 2, off: -2048 };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+        let j = Instr::Bgt { rs1: 1, rs2: 2, off: 2047 };
+        assert_eq!(decode(encode(&j)).unwrap(), j);
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        assert!(decode(0xd000_0000).is_err()); // opcode 13 unused
+        assert!(decode(0xe000_0000).is_err()); // opcode 14 unused
+    }
+
+    #[test]
+    fn mem_words_roundtrip() {
+        let mut rng = Rng::new(4);
+        let instrs: Vec<Instr> = (0..64).map(|_| random_instr(&mut rng)).collect();
+        let words = to_mem_words(&instrs);
+        assert_eq!(words.len(), 128);
+        assert_eq!(from_mem_words(&words).unwrap(), instrs);
+        assert!(from_mem_words(&words[..3]).is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Instruction structures — the canonical in-memory form.
+//!
+//! Register conventions (static assignment, §5.2 "register assignment is
+//! statically defined"):
+//! * `r0`  — hardwired zero.
+//! * `r28` — per-vMAC output stride (words): distance between the output
+//!   words produced by adjacent vMACs / INDP lanes (= out_h·out_w for
+//!   CHW output).
+//! * `r29` — scratch for loop bookkeeping.
+//! * `r30` — reserved scratch (historically a per-CU load stride; per-CU
+//!   loads now carry explicit addresses, matching the paper's "16 weight
+//!   LDs" on a 4-CU system).
+//! * `r31` — per-CU *output* stride: offset added per CU id to MAC/MAX
+//!   writeback addresses.
+
+pub type Reg = u8; // 0..=31
+
+pub const R_ZERO: Reg = 0;
+pub const R_VMAC_STRIDE: Reg = 28;
+pub const R_SCRATCH: Reg = 29;
+pub const R_CU_LOAD_STRIDE: Reg = 30;
+pub const R_CU_OUT_STRIDE: Reg = 31;
+
+/// Flags carried in a MAC/MAX immediate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct MacFlags {
+    /// Close the window: saturate accumulator (plus bias), apply
+    /// optional bypass/ReLU, store to main memory.
+    pub writeback: bool,
+    /// ReLU on writeback.
+    pub relu: bool,
+    /// Add the VMOV-preloaded bypass vector on writeback (residual).
+    pub bypass: bool,
+    /// Reset the accumulator before accumulating (window start).
+    pub reset: bool,
+}
+
+impl MacFlags {
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// LD destination (imm[3:2] of the LD encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LdTarget {
+    /// Weight scratchpad of vMAC `vmac` (of CU `cu`, or all CUs when
+    /// broadcast).
+    WBuf { cu: u8, vmac: u8 },
+    /// Maps scratchpad bank `bank` (of CU `cu`, or all CUs when
+    /// broadcast).
+    MBuf { cu: u8, bank: u8 },
+    /// Bias/bypass buffer (of CU `cu`, or all CUs when broadcast).
+    BBuf { cu: u8 },
+    /// Instruction cache bank `bank` (always broadcast — one control
+    /// pipeline). Length register counts *instructions*.
+    ICache { bank: u8 },
+}
+
+/// VMOV destination select (imm[0]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VmovSel {
+    /// Preload each vMAC accumulator with its bias value.
+    Bias,
+    /// Load the bypass vector used by writeback-with-bypass.
+    Bypass,
+}
+
+/// One Snowflake instruction (reconstruction per DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// `R[rd] = R[rs1] << sh` (data movement with optional shift).
+    Mov { rd: Reg, rs1: Reg, sh: u8 },
+    /// `R[rd] = sext(imm23)`.
+    Movi { rd: Reg, imm: i32 },
+    /// `R[rd] = R[rs1] + R[rs2]`.
+    Add { rd: Reg, rs1: Reg, rs2: Reg },
+    /// `R[rd] = R[rs1] + sext(imm12)`.
+    Addi { rd: Reg, rs1: Reg, imm: i16 },
+    /// `R[rd] = R[rs1] * R[rs2]`.
+    Mul { rd: Reg, rs1: Reg, rs2: Reg },
+    /// `R[rd] = R[rs1] * sext(imm12)`.
+    Muli { rd: Reg, rs1: Reg, imm: i16 },
+    /// Vector multiply-accumulate over a trace of `len` steps.
+    ///
+    /// COOP (`coop = true`): each step consumes one 16-word vector from
+    /// the CU's MBuf at `R[rs1]` and one from each vMAC's WBuf at
+    /// `R[rs2]`; the gather adder reduces lanes, each vMAC accumulates
+    /// one scalar. Writeback stores one word per vMAC at
+    /// `R[rd] + cu·R[31] + vmac·R[28]`.
+    ///
+    /// INDP (`coop = false`): each step broadcasts one MBuf word
+    /// (`R[rs1] + step`) to 16 lanes holding 16 different kernels
+    /// (WBuf word `R[rs2] + step·16 + lane`); every lane accumulates its
+    /// own scalar. Writeback stores 16 words per vMAC at
+    /// `R[rd] + cu·R[31] + (vmac·16 + lane)·R[28]`.
+    Mac { coop: bool, rd: Reg, rs1: Reg, rs2: Reg, len: u8, flags: MacFlags },
+    /// Pool-unit vector max: lane `l` compares the MBuf word at
+    /// `R[rs1] + l·R[rs2]` against the retained vector (the register
+    /// stride lets one instruction serve any pooling stride and the
+    /// channel-interleaved device layout). Writeback stores the first
+    /// `wb_lanes` retained words (0 = all 16) at
+    /// `R[rd] + cu·R[31] + lane·R[28]` and resets retention.
+    Max { rd: Reg, rs1: Reg, rs2: Reg, wb_lanes: u8, flags: MacFlags },
+    /// Fetch from the CU's bias/bypass buffer at `R[rs1]` into the
+    /// selected compute-unit operand register. `wide = false` fetches 4
+    /// words (one per vMAC — COOP), `wide = true` 64 (INDP lanes).
+    Vmov { sel: VmovSel, rs1: Reg, wide: bool },
+    /// Branch if `R[rs1] <= R[rs2]` (PC-relative, 4 delay slots).
+    Ble { rs1: Reg, rs2: Reg, off: i16 },
+    /// Branch if `R[rs1] > R[rs2]`.
+    Bgt { rs1: Reg, rs2: Reg, off: i16 },
+    /// Branch if `R[rs1] == R[rs2]`.
+    Beq { rs1: Reg, rs2: Reg, off: i16 },
+    /// DMA a stream of `R[rs2]` words from main memory `R[rs1]` into
+    /// `target` at buffer address `R[rd]`, on load unit `unit`.
+    /// Broadcast loads send one stream to the same buffer of all CUs;
+    /// per-CU distinct data takes one LD per CU (the paper's "16 weight
+    /// LDs" in a 4-CU system).
+    Ld { target: LdTarget, broadcast: bool, unit: u8, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Stop the machine (ours; see DESIGN.md).
+    Halt,
+}
+
+impl Instr {
+    /// Is this a vector (CU-occupying) instruction?
+    pub fn is_vector(&self) -> bool {
+        matches!(self, Instr::Mac { .. } | Instr::Max { .. } | Instr::Vmov { .. })
+    }
+
+    pub fn is_branch(&self) -> bool {
+        matches!(self, Instr::Ble { .. } | Instr::Bgt { .. } | Instr::Beq { .. })
+    }
+
+    /// Registers this instruction reads.
+    pub fn reads(&self) -> Vec<Reg> {
+        use Instr::*;
+        match *self {
+            Mov { rs1, .. } => vec![rs1],
+            Movi { .. } | Halt => vec![],
+            Add { rs1, rs2, .. } | Mul { rs1, rs2, .. } => vec![rs1, rs2],
+            Addi { rs1, .. } | Muli { rs1, .. } => vec![rs1],
+            Mac { rd, rs1, rs2, flags, .. } => {
+                let mut r = vec![rs1, rs2];
+                if flags.writeback {
+                    r.extend([rd, R_VMAC_STRIDE, R_CU_OUT_STRIDE]);
+                }
+                r
+            }
+            Max { rd, rs1, rs2, flags, .. } => {
+                let mut r = vec![rs1, rs2];
+                if flags.writeback {
+                    r.extend([rd, R_VMAC_STRIDE, R_CU_OUT_STRIDE]);
+                }
+                r
+            }
+            Vmov { rs1, .. } => vec![rs1],
+            Ble { rs1, rs2, .. } | Bgt { rs1, rs2, .. } | Beq { rs1, rs2, .. } => vec![rs1, rs2],
+            Ld { rd, rs1, rs2, .. } => vec![rd, rs1, rs2],
+        }
+    }
+
+    /// Register this instruction writes (scalar register file only).
+    pub fn writes(&self) -> Option<Reg> {
+        use Instr::*;
+        match *self {
+            Mov { rd, .. } | Movi { rd, .. } | Add { rd, .. } | Addi { rd, .. }
+            | Mul { rd, .. } | Muli { rd, .. } => Some(rd),
+            _ => None,
+        }
+    }
+
+    /// Mnemonic for reports.
+    pub fn mnemonic(&self) -> &'static str {
+        use Instr::*;
+        match self {
+            Mov { .. } => "mov",
+            Movi { .. } => "movi",
+            Add { .. } => "add",
+            Addi { .. } => "addi",
+            Mul { .. } => "mul",
+            Muli { .. } => "muli",
+            Mac { .. } => "mac",
+            Max { .. } => "max",
+            Vmov { .. } => "vmov",
+            Ble { .. } => "ble",
+            Bgt { .. } => "bgt",
+            Beq { .. } => "beq",
+            Ld { .. } => "ld",
+            Halt => "halt",
+        }
+    }
+}
+
+/// An instruction stream plus metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    /// Optional per-instruction comments (assembler/debugging).
+    pub comments: Vec<Option<String>>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Program::default()
+    }
+
+    pub fn push(&mut self, i: Instr) -> usize {
+        self.instrs.push(i);
+        self.comments.push(None);
+        self.instrs.len() - 1
+    }
+
+    pub fn push_commented(&mut self, i: Instr, c: &str) -> usize {
+        self.instrs.push(i);
+        self.comments.push(Some(c.to_string()));
+        self.instrs.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Append another program.
+    pub fn extend(&mut self, other: &Program) {
+        self.instrs.extend_from_slice(&other.instrs);
+        self.comments.extend_from_slice(&other.comments);
+    }
+
+    /// Count instructions per mnemonic (reports, Table 1 instr counts).
+    pub fn histogram(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for i in &self.instrs {
+            *h.entry(i.mnemonic()).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_writes() {
+        let i = Instr::Add { rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(i.reads(), vec![2, 3]);
+        assert_eq!(i.writes(), Some(1));
+        let m = Instr::Mac {
+            coop: true,
+            rd: 5,
+            rs1: 6,
+            rs2: 7,
+            len: 4,
+            flags: MacFlags { writeback: true, ..MacFlags::none() },
+        };
+        assert!(m.reads().contains(&R_CU_OUT_STRIDE));
+        assert_eq!(m.writes(), None);
+        assert!(m.is_vector());
+        assert!(!m.is_branch());
+    }
+
+    #[test]
+    fn ld_reads_its_registers() {
+        let ld = Instr::Ld {
+            target: LdTarget::MBuf { cu: 0, bank: 0 },
+            broadcast: true,
+            unit: 0,
+            rd: 1,
+            rs1: 2,
+            rs2: 3,
+        };
+        assert_eq!(ld.reads(), vec![1, 2, 3]);
+        assert_eq!(ld.writes(), None);
+    }
+
+    #[test]
+    fn program_histogram() {
+        let mut p = Program::new();
+        p.push(Instr::Movi { rd: 1, imm: 0 });
+        p.push(Instr::Movi { rd: 2, imm: 1 });
+        p.push(Instr::Halt);
+        let h = p.histogram();
+        assert_eq!(h["movi"], 2);
+        assert_eq!(h["halt"], 1);
+        assert_eq!(p.len(), 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! Snowflake's custom instruction set (§4 of the paper).
+//!
+//! 13 instructions — MOV, MOVI, ADD, ADDI, MUL, MULI, MAC, MAX, VMOV,
+//! BLE, BGT, BEQ, LD — in four categories (data movement, compute, flow
+//! control, memory access); 32-bit encodings with a 4-bit opcode, 1-bit
+//! mode select, three 5-bit register selects and an immediate field
+//! (plus our explicit HALT, see DESIGN.md). The paper defers exact
+//! semantics to the Snowflake hardware paper [7]; our reconstruction is
+//! specified in DESIGN.md §ISA-reconstruction and shared bit-for-bit by
+//! the binary codec ([`encode`]), the assembler ([`asm`]), the stream
+//! verifier ([`verify`]) and the simulator ([`crate::sim`]).
+
+pub mod asm;
+pub mod encode;
+pub mod instr;
+pub mod verify;
+
+pub use instr::{Instr, LdTarget, MacFlags, Program, Reg, VmovSel};

@@ -1,0 +1,228 @@
+//! Instruction stream verifier.
+//!
+//! Enforces the architectural constraints the paper states the compiler
+//! must respect (§3.1, §4, §5.1):
+//!
+//! * branch targets stay inside the instruction-cache bank of the branch
+//!   — "branching across instruction banks is not permitted" — except
+//!   the canonical bank-advance jump that lands exactly on the other
+//!   bank's first slot;
+//! * at most **one** true-RAW-dependent instruction pair inside the 4
+//!   branch delay slots (§4 Flow control);
+//! * MAC trace length ≥ 1, MAX writeback lane count ≤ 16, LD unit < 4,
+//!   register indices < 32 (by construction of `Reg`), shift < 32;
+//! * writes to the hardwired/reserved registers r0 are rejected.
+//!
+//! The compiler runs this on every emitted bank as a safety net; tests
+//! run it on every generated stream.
+
+use super::instr::{Instr, R_ZERO};
+use crate::arch::SnowflakeConfig;
+
+/// A verification diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub pc: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pc {}: {}", self.pc, self.message)
+    }
+}
+
+/// Verify a full instruction stream laid out from icache slot 0.
+/// `stream_pos(pc) = pc % (banks * bank_size)` gives the icache slot; the
+/// stream may be longer than the cache (banks are reloaded in flight),
+/// and bank boundaries repeat every `bank_size` slots.
+pub fn verify(instrs: &[Instr], cfg: &SnowflakeConfig) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let bank = cfg.icache_bank_instrs;
+    let slots = cfg.branch_delay_slots;
+
+    for (pc, i) in instrs.iter().enumerate() {
+        // -- per-instruction field constraints --------------------------
+        match *i {
+            Instr::Mov { sh, .. } if sh >= 32 => {
+                out.push(Violation { pc, message: format!("mov shift {sh} out of range") });
+            }
+            Instr::Mac { len, .. } if len == 0 => {
+                out.push(Violation { pc, message: "mac trace length 0".into() });
+            }
+            Instr::Max { wb_lanes, .. } if wb_lanes > 16 => {
+                out.push(Violation { pc, message: format!("max wb_lanes {wb_lanes} out of range") });
+            }
+            Instr::Ld { unit, .. } if unit as usize >= cfg.n_load_units => {
+                out.push(Violation { pc, message: format!("load unit {unit} out of range") });
+            }
+            _ => {}
+        }
+        if i.writes() == Some(R_ZERO) {
+            out.push(Violation { pc, message: "write to hardwired r0".into() });
+        }
+
+        // -- branch constraints ------------------------------------------
+        if let Instr::Ble { off, .. } | Instr::Bgt { off, .. } | Instr::Beq { off, .. } = *i {
+            let target = pc as i64 + off as i64;
+            if target < 0 || target as usize >= instrs.len() {
+                out.push(Violation { pc, message: format!("branch target {target} out of stream") });
+            } else {
+                let t = target as usize;
+                let same_bank = t / bank == pc / bank;
+                let bank_start = t % bank == 0;
+                if !same_bank && !bank_start {
+                    out.push(Violation {
+                        pc,
+                        message: format!(
+                            "branch crosses bank boundary (pc bank {}, target {} in bank {})",
+                            pc / bank,
+                            t,
+                            t / bank
+                        ),
+                    });
+                }
+            }
+
+            // Delay-slot RAW rule: at most one true-dependent pair among
+            // the `slots` instructions after the branch.
+            let mut raw_pairs = 0;
+            let window_end = (pc + 1 + slots).min(instrs.len());
+            for a in pc + 1..window_end {
+                if let Some(w) = instrs[a].writes() {
+                    for b in a + 1..window_end {
+                        if instrs[b].reads().contains(&w) {
+                            raw_pairs += 1;
+                            break; // count each writer once
+                        }
+                    }
+                }
+            }
+            if raw_pairs > 1 {
+                out.push(Violation {
+                    pc,
+                    message: format!("{raw_pairs} RAW-dependent pairs in branch delay slots (max 1)"),
+                });
+            }
+            // Branches inside delay slots are not representable in a
+            // 4-stage-overlap pipeline; reject nested branches.
+            for a in pc + 1..window_end {
+                if instrs[a].is_branch() {
+                    out.push(Violation { pc: a, message: "branch inside branch delay slots".into() });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: panic with a readable report when a stream is invalid.
+pub fn assert_valid(instrs: &[Instr], cfg: &SnowflakeConfig) {
+    let v = verify(instrs, cfg);
+    if !v.is_empty() {
+        let report: Vec<String> = v.iter().take(10).map(|x| x.to_string()).collect();
+        panic!("invalid instruction stream ({} violations):\n{}", v.len(), report.join("\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::MacFlags;
+
+    fn cfg() -> SnowflakeConfig {
+        SnowflakeConfig::default()
+    }
+
+    #[test]
+    fn clean_stream_passes() {
+        let p = vec![
+            Instr::Movi { rd: 1, imm: 4 },
+            Instr::Movi { rd: 2, imm: 0 },
+            Instr::Addi { rd: 2, rs1: 2, imm: 1 },
+            Instr::Ble { rs1: 2, rs2: 1, off: -1 },
+            Instr::Addi { rd: 3, rs1: 0, imm: 0 },
+            Instr::Addi { rd: 4, rs1: 0, imm: 0 },
+            Instr::Addi { rd: 5, rs1: 0, imm: 0 },
+            Instr::Addi { rd: 6, rs1: 0, imm: 0 },
+            Instr::Halt,
+        ];
+        assert!(verify(&p, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn rejects_r0_write() {
+        let p = vec![Instr::Movi { rd: 0, imm: 1 }, Instr::Halt];
+        assert_eq!(verify(&p, &cfg()).len(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_len_mac() {
+        let p = vec![
+            Instr::Mac { coop: true, rd: 1, rs1: 2, rs2: 3, len: 0, flags: MacFlags::none() },
+            Instr::Halt,
+        ];
+        assert!(!verify(&p, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn rejects_out_of_stream_branch() {
+        let p = vec![Instr::Beq { rs1: 0, rs2: 0, off: 100 }, Instr::Halt];
+        assert!(!verify(&p, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn rejects_cross_bank_branch_but_allows_bank_start() {
+        let mut p = vec![Instr::Addi { rd: 1, rs1: 0, imm: 0 }; 1030];
+        p.push(Instr::Halt);
+        // Branch at pc 510 to 520 stays in bank 0? bank=512: 510 and 520
+        // same bank -> fine. Branch at 510 to 514 crosses? 514/512=1 !=
+        // 510/512=0 and 514 % 512 != 0 -> violation.
+        p[510] = Instr::Beq { rs1: 0, rs2: 0, off: 4 };
+        let v = verify(&p, &cfg());
+        assert!(v.iter().any(|x| x.message.contains("crosses bank")), "{v:?}");
+        // Branch landing exactly on bank 1 start (pc 512) is allowed.
+        p[510] = Instr::Beq { rs1: 0, rs2: 0, off: 2 };
+        let v = verify(&p, &cfg());
+        assert!(!v.iter().any(|x| x.message.contains("crosses bank")), "{v:?}");
+    }
+
+    #[test]
+    fn delay_slot_raw_limit() {
+        // Two RAW pairs in the 4 slots after the branch -> violation.
+        let p = vec![
+            Instr::Beq { rs1: 0, rs2: 0, off: 5 },
+            Instr::Movi { rd: 1, imm: 1 },
+            Instr::Addi { rd: 2, rs1: 1, imm: 0 }, // pair 1 (r1)
+            Instr::Movi { rd: 3, imm: 1 },
+            Instr::Addi { rd: 4, rs1: 3, imm: 0 }, // pair 2 (r3)
+            Instr::Halt,
+        ];
+        let v = verify(&p, &cfg());
+        assert!(v.iter().any(|x| x.message.contains("RAW")), "{v:?}");
+        // One pair is fine.
+        let p2 = vec![
+            Instr::Beq { rs1: 0, rs2: 0, off: 5 },
+            Instr::Movi { rd: 1, imm: 1 },
+            Instr::Addi { rd: 2, rs1: 1, imm: 0 },
+            Instr::Movi { rd: 3, imm: 1 },
+            Instr::Movi { rd: 4, imm: 1 },
+            Instr::Halt,
+        ];
+        assert!(verify(&p2, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn rejects_branch_in_delay_slots() {
+        let p = vec![
+            Instr::Beq { rs1: 0, rs2: 0, off: 5 },
+            Instr::Beq { rs1: 0, rs2: 0, off: 4 },
+            Instr::Movi { rd: 1, imm: 1 },
+            Instr::Movi { rd: 2, imm: 1 },
+            Instr::Movi { rd: 3, imm: 1 },
+            Instr::Halt,
+        ];
+        let v = verify(&p, &cfg());
+        assert!(v.iter().any(|x| x.message.contains("delay slots")), "{v:?}");
+    }
+}

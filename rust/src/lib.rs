@@ -1,0 +1,38 @@
+//! # Snowflake compiler reproduction
+//!
+//! Reproduction of *"Compiling Deep Learning Models for Custom Hardware
+//! Accelerators"* (Chang, Zaidy, Culurciello, Gokhale — 2017): a compiler
+//! from high-level CNN model descriptions down to the custom RISC-like
+//! instruction set of the Snowflake FPGA accelerator, together with a
+//! cycle-level simulator of the accelerator (our substitution for the
+//! Xilinx Zynq XC7Z045 testbed) and a PJRT-based golden-model runtime
+//! that executes AOT-compiled jax/Pallas fixed-point kernels from rust.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * [`compiler`] — the paper's contribution: model parsing, workload
+//!   breakdown, loop rearrangement (Mloop/Kloop), communication load
+//!   balancing, instruction generation, deployment.
+//! * [`sim`] — the Snowflake hardware substrate: control pipeline, compute
+//!   clusters, scratchpad buffers, DMA load units, cycle-accurate timing.
+//! * [`isa`] — the 13-instruction custom ISA: encoding, assembly text,
+//!   stream verification.
+//! * [`model`] — model IR, JSON description format, shape inference and
+//!   the AlexNetOWT / ResNet18 / ResNet50 zoo.
+//! * [`refimpl`] — fp32 and fixed-point reference layer implementations
+//!   (the paper's §5.3 validation path).
+//! * [`runtime`] — PJRT client wrapper: load `artifacts/*.hlo.txt`
+//!   produced by the python build path and execute them natively.
+//! * [`coordinator`] — end-to-end drivers, metrics and report tables.
+//! * [`fixed`], [`tensor`], [`util`], [`arch`] — substrates.
+
+pub mod arch;
+pub mod compiler;
+pub mod coordinator;
+pub mod fixed;
+pub mod isa;
+pub mod model;
+pub mod refimpl;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

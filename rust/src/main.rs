@@ -1,0 +1,168 @@
+//! `repro` — the Snowflake compiler reproduction CLI.
+//!
+//! Subcommands (see README):
+//!   compile    compile a model, print summary / asm
+//!   run        compile + simulate, print stats
+//!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
+//!   table1|table2|table3|fig4|accuracy   regenerate the paper results
+//!   golden     cross-check conv outputs against the PJRT artifacts
+//!   info       hardware configuration
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{compile, BalancePolicy, CompileOptions};
+use snowflake::coordinator::{driver, report};
+use snowflake::fixed::{Q5_11, Q8_8};
+use snowflake::isa::asm::disasm_program;
+use snowflake::model::{parser, zoo};
+use snowflake::util::cli::Args;
+
+fn load_model(args: &Args) -> snowflake::model::graph::Graph {
+    if let Some(path) = args.opt("model-file") {
+        let text = std::fs::read_to_string(path).expect("read model file");
+        return parser::parse_model(&text).expect("parse model");
+    }
+    let name = args.opt_or("model", "alexnet");
+    zoo::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (alexnet, resnet18, resnet50)");
+        std::process::exit(2);
+    })
+}
+
+fn options(args: &Args) -> CompileOptions {
+    let balance = match args.opt_or("balance", "greedy2") {
+        "greedy1" => BalancePolicy::Greedy { split: 1 },
+        "greedy2" => BalancePolicy::Greedy { split: 2 },
+        "greedy4" => BalancePolicy::Greedy { split: 4 },
+        "two-units" => BalancePolicy::TwoUnits,
+        "one-unit" => BalancePolicy::OneUnit,
+        other => {
+            eprintln!("unknown balance policy '{other}'");
+            std::process::exit(2);
+        }
+    };
+    CompileOptions {
+        fmt: if args.opt_or("format", "q8.8") == "q5.11" { Q5_11 } else { Q8_8 },
+        balance,
+        smart_delay_slots: args.flag("hand"),
+        reuse_regions: args.flag("reuse-regions"),
+        skip_fc: !args.flag("with-fc"),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let flags = ["hand", "reuse-regions", "with-fc", "emit-asm", "fast", "verbose"];
+    let args = Args::from_env(&flags);
+    let cfg = SnowflakeConfig::default();
+    let seed = args.opt_u64("seed", 42);
+
+    match args.subcommand.as_deref() {
+        Some("info") => {
+            println!("Snowflake configuration (paper §3):");
+            println!("  {} CUs x {} vMACs x {} MACs = {} processing units", cfg.n_cus, cfg.vmacs_per_cu, cfg.macs_per_vmac, cfg.total_macs());
+            println!("  clock {} MHz, peak {} Gop/s", cfg.clock_mhz, cfg.peak_gops());
+            println!("  MBuf {}x{} KB, WBuf {} KB/vMAC, BBuf {} KB, icache {}x{} instrs", cfg.mbuf_banks, cfg.mbuf_bank_bytes / 1024, cfg.wbuf_bytes / 1024, cfg.bbuf_bytes / 1024, cfg.icache_banks, cfg.icache_bank_instrs);
+            println!("  {} load units sharing {:.1} GB/s", cfg.n_load_units, cfg.bandwidth_gbs());
+        }
+        Some("compile") => {
+            let g = load_model(&args);
+            let opts = options(&args);
+            let t0 = std::time::Instant::now();
+            let compiled = compile(&g, &cfg, &opts).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            eprintln!(
+                "{}: {} instructions in {:?} ({} layers, plan {:.1} MB)",
+                g.name,
+                compiled.program.len(),
+                t0.elapsed(),
+                compiled.plan.layers.len(),
+                compiled.plan.mem_words as f64 * 2.0 / 1e6
+            );
+            for (li, name, range) in &compiled.layer_ranges {
+                eprintln!("  layer {li:>3} {name:<10} pc {:>6}..{:<6}", range.start, range.end);
+            }
+            if args.flag("emit-asm") {
+                print!("{}", disasm_program(&compiled.program));
+            }
+            let hist = compiled.program.histogram();
+            eprintln!("instruction mix: {hist:?}");
+        }
+        Some("run") => {
+            let g = load_model(&args);
+            let out = driver::run_model(&g, &cfg, &options(&args), seed).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            println!("{}: {}", g.name, out.stats.summary(&cfg));
+            println!(
+                "{:.2} ms/frame = {:.1} fps, {:.2} GB/s, {:.1} Gop/s achieved",
+                out.stats.time_ms(&cfg),
+                1000.0 / out.stats.time_ms(&cfg),
+                out.stats.bandwidth_gbs(&cfg),
+                out.stats.achieved_gops(&cfg)
+            );
+        }
+        Some("validate") => {
+            let g = load_model(&args);
+            let (out, rows) =
+                driver::validate_model(&g, &cfg, &options(&args), seed).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                });
+            println!("{}: {}", g.name, out.stats.summary(&cfg));
+            let mut bad = 0usize;
+            for (name, words, diffs) in &rows {
+                if *diffs > 0 {
+                    bad += 1;
+                }
+                println!("  {:<16} {:>9} words  {:>6} mismatches", name, words, diffs);
+            }
+            if bad == 0 {
+                println!("all {} layers bit-exact vs the {} reference", rows.len(), out.compiled.plan.fmt);
+            } else {
+                eprintln!("{bad} layers FAILED validation");
+                std::process::exit(1);
+            }
+        }
+        Some("table1") => report::print_table1(&report::table1(&cfg, seed)),
+        Some("table2") => {
+            let models: Vec<&str> = if args.flag("fast") {
+                vec!["alexnet", "resnet18"]
+            } else {
+                vec!["alexnet", "resnet18", "resnet50"]
+            };
+            report::print_table2(&report::table2(&cfg, &models, seed));
+        }
+        Some("table3") => report::print_table3(&report::table3(&cfg, seed)),
+        Some("fig4") => report::print_fig4(&report::fig4(&cfg), &cfg),
+        Some("accuracy") => {
+            let n = args.opt_usize("inputs", 48);
+            report::print_accuracy(&report::accuracy(n, seed));
+        }
+        Some("golden") => {
+            // PJRT cross-check: run the conv validator artifact against
+            // the rust reference implementation.
+            match snowflake::coordinator::golden::run_golden() {
+                Ok(msg) => println!("{msg}"),
+                Err(e) => {
+                    eprintln!("golden check failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            eprintln!(
+                "usage: repro <info|compile|run|validate|table1|table2|table3|fig4|accuracy|golden>\n\
+                 \x20  --model alexnet|resnet18|resnet50   --model-file model.json\n\
+                 \x20  --balance greedy1|greedy2|greedy4|two-units|one-unit\n\
+                 \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Model graph: ordered layer list + inter-layer relations.
+//!
+//! Mirrors §5.1 steps 1–2: layers are serialized into an execution-order
+//! list ("Snowflake will process each element in the list in sequence");
+//! a second scan derives each layer's *dependency label* — whether it is
+//! only connected to its immediate neighbours or participates in a
+//! parallel path (ResNet bypass), which decides main-memory region
+//! sharing at deployment.
+
+use super::layer::{LayerKind, Shape};
+
+pub type NodeId = usize;
+
+/// One node in the model graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: LayerKind,
+    /// Producer node ids; empty = reads the network input.
+    /// ResidualAdd has two inputs: `[main_path, bypass]`.
+    pub inputs: Vec<NodeId>,
+    pub name: String,
+}
+
+/// Dependency label (§5.1 step 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DepLabel {
+    /// Connected only to the previous and next layer in list order.
+    Sequential,
+    /// Output is consumed by more than one layer, or by a layer other
+    /// than the immediate successor (start of a bypass).
+    Shared,
+}
+
+/// A full model: execution-ordered nodes + input shape.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input: Shape,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str, input: Shape) -> Self {
+        Graph { name: name.to_string(), input, nodes: Vec::new() }
+    }
+
+    /// Append a node reading from `inputs` (empty = network input).
+    pub fn push(&mut self, kind: LayerKind, inputs: Vec<NodeId>, name: &str) -> NodeId {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "node {name} reads from future node {i}");
+        }
+        self.nodes.push(Node { id, kind, inputs, name: name.to_string() });
+        id
+    }
+
+    /// Append a node reading from the previous node (or network input).
+    pub fn push_seq(&mut self, kind: LayerKind, name: &str) -> NodeId {
+        let inputs = if self.nodes.is_empty() { vec![] } else { vec![self.nodes.len() - 1] };
+        self.push(kind, inputs, name)
+    }
+
+    /// Input shape of a node (shape of its first producer's output).
+    pub fn in_shape(&self, id: NodeId) -> Shape {
+        let shapes = self.shapes();
+        match self.nodes[id].inputs.first() {
+            None => self.input,
+            Some(&p) => shapes[p],
+        }
+    }
+
+    /// Output shapes of every node, in node order.
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut out: Vec<Shape> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let input = match node.inputs.first() {
+                None => self.input,
+                Some(&p) => out[p],
+            };
+            out.push(node.kind.out_shape(input));
+        }
+        out
+    }
+
+    /// §5.1 step 2: dependency label per node. A node is `Shared` when
+    /// its output is consumed by ≠1 nodes, or by a non-adjacent node.
+    pub fn dep_labels(&self) -> Vec<DepLabel> {
+        let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); self.nodes.len()];
+        for node in &self.nodes {
+            for &p in &node.inputs {
+                consumers[p].push(node.id);
+            }
+        }
+        consumers
+            .iter()
+            .enumerate()
+            .map(|(id, cs)| {
+                let last = id + 1 == self.nodes.len();
+                let seq = match cs.as_slice() {
+                    [] => last, // dangling non-final nodes are "shared" (kept alive)
+                    [one] => *one == id + 1,
+                    _ => false,
+                };
+                if seq { DepLabel::Sequential } else { DepLabel::Shared }
+            })
+            .collect()
+    }
+
+    /// Structural validation: residual-adds have exactly 2 inputs with
+    /// matching shapes, conv channel counts match producers, every
+    /// non-final node is consumed.
+    pub fn validate(&self) -> Result<(), String> {
+        let shapes = self.shapes();
+        let mut consumed = vec![false; self.nodes.len()];
+        for node in &self.nodes {
+            for &p in &node.inputs {
+                consumed[p] = true;
+            }
+            let in_shape = match node.inputs.first() {
+                None => self.input,
+                Some(&p) => shapes[p],
+            };
+            match &node.kind {
+                LayerKind::ResidualAdd { .. } => {
+                    if node.inputs.len() != 2 {
+                        return Err(format!(
+                            "residual node {} ({}) needs 2 inputs, has {}",
+                            node.id,
+                            node.name,
+                            node.inputs.len()
+                        ));
+                    }
+                    let a = shapes[node.inputs[0]];
+                    let b = shapes[node.inputs[1]];
+                    if a != b {
+                        return Err(format!(
+                            "residual node {} input shapes differ: {a} vs {b}",
+                            node.id
+                        ));
+                    }
+                }
+                LayerKind::Conv { in_ch, .. } => {
+                    if node.inputs.len() > 1 {
+                        return Err(format!("conv node {} has >1 input", node.id));
+                    }
+                    if *in_ch != in_shape.c {
+                        return Err(format!(
+                            "conv node {} ({}) expects {} channels, producer gives {}",
+                            node.id, node.name, in_ch, in_shape.c
+                        ));
+                    }
+                }
+                LayerKind::Fc { in_features, .. } => {
+                    if *in_features != in_shape.numel() {
+                        return Err(format!(
+                            "fc node {} expects {} features, producer gives {}",
+                            node.id,
+                            in_features,
+                            in_shape.numel()
+                        ));
+                    }
+                }
+                _ => {
+                    if node.inputs.len() > 1 {
+                        return Err(format!("node {} has >1 input", node.id));
+                    }
+                }
+            }
+        }
+        for (id, c) in consumed.iter().enumerate() {
+            if !c && id + 1 != self.nodes.len() {
+                return Err(format!("node {id} ({}) is never consumed", self.nodes[id].name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> u64 {
+        let shapes = self.shapes();
+        self.nodes
+            .iter()
+            .map(|n| {
+                let input = match n.inputs.first() {
+                    None => self.input,
+                    Some(&p) => shapes[p],
+                };
+                n.kind.macs(input)
+            })
+            .sum()
+    }
+
+    /// Total parameter words.
+    pub fn total_params(&self) -> usize {
+        self.nodes.iter().map(|n| n.kind.param_words()).sum()
+    }
+
+    /// Nodes of a given coarse type, for reporting.
+    pub fn count_kind(&self, name: &str) -> usize {
+        self.nodes.iter().filter(|n| n.kind.name() == name).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_resnet_block() -> Graph {
+        let mut g = Graph::new("block", Shape::new(8, 8, 8));
+        let c1 = g.push(
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            vec![],
+            "c1",
+        );
+        let c2 = g.push(
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            vec![c1],
+            "c2",
+        );
+        let c3 = g.push(
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+            vec![c2],
+            "c3",
+        );
+        g.push(LayerKind::ResidualAdd { relu: true }, vec![c3, c1], "add");
+        g
+    }
+
+    #[test]
+    fn shapes_chain() {
+        let g = tiny_resnet_block();
+        let shapes = g.shapes();
+        assert!(shapes.iter().all(|s| *s == Shape::new(8, 8, 8)));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn dep_labels_mark_bypass_source() {
+        let g = tiny_resnet_block();
+        let labels = g.dep_labels();
+        // c1 feeds c2 AND the residual -> Shared.
+        assert_eq!(labels[0], DepLabel::Shared);
+        assert_eq!(labels[1], DepLabel::Sequential);
+        // c3 feeds only the residual (its immediate successor) -> Sequential.
+        assert_eq!(labels[2], DepLabel::Sequential);
+        assert_eq!(labels[3], DepLabel::Sequential);
+    }
+
+    #[test]
+    fn validate_catches_channel_mismatch() {
+        let mut g = Graph::new("bad", Shape::new(3, 8, 8));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 4, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+            "c",
+        );
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_shape_mismatch_residual() {
+        let mut g = Graph::new("bad", Shape::new(4, 8, 8));
+        let a = g.push_seq(
+            LayerKind::Conv { in_ch: 4, out_ch: 4, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+            "a",
+        );
+        let b = g.push(
+            LayerKind::Conv { in_ch: 4, out_ch: 4, kh: 3, kw: 3, stride: 2, pad: 1, relu: false },
+            vec![a],
+            "b",
+        );
+        g.push(LayerKind::ResidualAdd { relu: false }, vec![b, a], "add");
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_rejects_forward_reference() {
+        let mut g = Graph::new("bad", Shape::new(3, 8, 8));
+        g.push(LayerKind::Relu, vec![5], "r");
+    }
+
+    #[test]
+    fn macs_and_params_accumulate() {
+        let g = tiny_resnet_block();
+        assert!(g.total_macs() > 0);
+        assert_eq!(g.total_params(), 3 * (8 * 8 * 3 * 3 + 8));
+    }
+}

@@ -1,0 +1,215 @@
+//! Layer types and shape arithmetic (§2 of the paper: CONV, activation,
+//! max/avg pooling, residual addition, fully connected).
+
+use std::fmt;
+
+/// Activation volume shape: channels × height × width.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Shape { c, h, w }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        [self.c, self.h, self.w]
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// One layer of a CNN model, as parsed from the model description.
+///
+/// ReLU is a *fused flag* on Conv/FC rather than a separate node: the
+/// hardware applies it on MAC writeback (§4 — there is no explicit store
+/// instruction; activation happens as results stream out), and the model
+/// parser folds standalone ReLU entries into their producer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+    },
+    MaxPool {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    AvgPool {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Fully connected; executed as a 1×1 CONV over a 1×1 spatial map
+    /// (the paper's uniform trace representation covers both).
+    Fc {
+        in_features: usize,
+        out_features: usize,
+        relu: bool,
+    },
+    /// Element-wise residual addition of two inputs (ResNet bypass).
+    /// Optionally fused ReLU after the addition.
+    ResidualAdd { relu: bool },
+    /// Standalone ReLU (kept only when it cannot be fused).
+    Relu,
+}
+
+impl LayerKind {
+    /// Short opcode-like name used in reports and asm comments.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::MaxPool { .. } => "maxpool",
+            LayerKind::AvgPool { .. } => "avgpool",
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::ResidualAdd { .. } => "residual",
+            LayerKind::Relu => "relu",
+        }
+    }
+
+    /// Output shape given the (first) input shape. Pool/conv use floor
+    /// division like Torch7's SpatialConvolution/SpatialMaxPooling.
+    pub fn out_shape(&self, input: Shape) -> Shape {
+        match *self {
+            LayerKind::Conv { out_ch, kh, kw, stride, pad, .. } => Shape {
+                c: out_ch,
+                h: conv_out(input.h, kh, stride, pad),
+                w: conv_out(input.w, kw, stride, pad),
+            },
+            LayerKind::MaxPool { kh, kw, stride, pad }
+            | LayerKind::AvgPool { kh, kw, stride, pad } => Shape {
+                c: input.c,
+                h: conv_out(input.h, kh, stride, pad),
+                w: conv_out(input.w, kw, stride, pad),
+            },
+            LayerKind::Fc { out_features, .. } => Shape { c: out_features, h: 1, w: 1 },
+            LayerKind::ResidualAdd { .. } | LayerKind::Relu => input,
+        }
+    }
+
+    /// Multiply-accumulate operations to evaluate this layer once.
+    pub fn macs(&self, input: Shape) -> u64 {
+        let out = self.out_shape(input);
+        match *self {
+            LayerKind::Conv { in_ch, kh, kw, .. } => {
+                (out.c * out.h * out.w) as u64 * (in_ch * kh * kw) as u64
+            }
+            LayerKind::Fc { in_features, out_features, .. } => {
+                in_features as u64 * out_features as u64
+            }
+            LayerKind::AvgPool { kh, kw, .. } => out.numel() as u64 * (kh * kw) as u64,
+            // Comparisons / adds, counted as one op per element-window.
+            LayerKind::MaxPool { kh, kw, .. } => out.numel() as u64 * (kh * kw) as u64,
+            LayerKind::ResidualAdd { .. } => out.numel() as u64,
+            LayerKind::Relu => out.numel() as u64,
+        }
+    }
+
+    /// Parameter words (weights + biases) of this layer.
+    pub fn param_words(&self) -> usize {
+        match *self {
+            LayerKind::Conv { in_ch, out_ch, kh, kw, .. } => out_ch * (in_ch * kh * kw) + out_ch,
+            LayerKind::Fc { in_features, out_features, .. } => {
+                out_features * in_features + out_features
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn has_weights(&self) -> bool {
+        self.param_words() > 0
+    }
+
+    /// Paper-style conv descriptor: "27x27,5x5,64,192,1,2"
+    /// (input size, kernel size, in planes, out planes, stride, pad).
+    pub fn describe(&self, input: Shape) -> String {
+        match *self {
+            LayerKind::Conv { in_ch, out_ch, kh, kw, stride, pad, .. } => format!(
+                "{}x{},{}x{},{},{},{},{}",
+                input.h, input.w, kh, kw, in_ch, out_ch, stride, pad
+            ),
+            _ => format!("{} on {}", self.name(), input),
+        }
+    }
+}
+
+/// Output extent of a strided, padded window op (floor semantics).
+pub fn conv_out(n: usize, k: usize, stride: usize, pad: usize) -> usize {
+    assert!(n + 2 * pad >= k, "window {k} larger than padded input {n}+2*{pad}");
+    (n + 2 * pad - k) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_conv1_shape() {
+        // 224x224 input, 11x11 stride 4 pad 2 -> 55x55.
+        let l = LayerKind::Conv { in_ch: 3, out_ch: 64, kh: 11, kw: 11, stride: 4, pad: 2, relu: true };
+        let out = l.out_shape(Shape::new(3, 224, 224));
+        assert_eq!(out, Shape::new(64, 55, 55));
+    }
+
+    #[test]
+    fn pool_shape() {
+        let l = LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 0 };
+        assert_eq!(l.out_shape(Shape::new(64, 55, 55)), Shape::new(64, 27, 27));
+        assert_eq!(l.out_shape(Shape::new(192, 27, 27)), Shape::new(192, 13, 13));
+    }
+
+    #[test]
+    fn fc_shape_and_params() {
+        let l = LayerKind::Fc { in_features: 9216, out_features: 4096, relu: true };
+        assert_eq!(l.out_shape(Shape::new(256, 6, 6)), Shape::new(4096, 1, 1));
+        assert_eq!(l.param_words(), 9216 * 4096 + 4096);
+    }
+
+    #[test]
+    fn conv_macs() {
+        // conv2 of AlexNet: 27x27 out, 5x5x64 kernel window, 192 kernels.
+        let l = LayerKind::Conv { in_ch: 64, out_ch: 192, kh: 5, kw: 5, stride: 1, pad: 2, relu: true };
+        let macs = l.macs(Shape::new(64, 27, 27));
+        assert_eq!(macs, (192 * 27 * 27) as u64 * (64 * 5 * 5) as u64);
+    }
+
+    #[test]
+    fn residual_passthrough() {
+        let l = LayerKind::ResidualAdd { relu: true };
+        let s = Shape::new(256, 14, 14);
+        assert_eq!(l.out_shape(s), s);
+        assert_eq!(l.param_words(), 0);
+    }
+
+    #[test]
+    fn describe_matches_paper_format() {
+        let l = LayerKind::Conv { in_ch: 64, out_ch: 192, kh: 5, kw: 5, stride: 1, pad: 2, relu: false };
+        assert_eq!(l.describe(Shape::new(64, 27, 27)), "27x27,5x5,64,192,1,2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_window_panics() {
+        conv_out(2, 5, 1, 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Model intermediate representation.
+//!
+//! The paper's compiler starts from Torch7 model files read through
+//! Thnets (§5.1 step 1). Torch7 is unavailable; our substitution is a
+//! JSON model-description format carrying the same information — an
+//! ordered list of layer objects plus the inter-layer relations needed
+//! to label parallel paths (step 2). See `parser` for the format,
+//! `zoo` for AlexNetOWT / ResNet18 / ResNet50 builders and `weights`
+//! for deterministic synthetic parameter generation.
+
+pub mod graph;
+pub mod layer;
+pub mod parser;
+pub mod weights;
+pub mod zoo;
+
+pub use graph::{Graph, Node, NodeId};
+pub use layer::{LayerKind, Shape};
+pub use weights::Weights;

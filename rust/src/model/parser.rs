@@ -1,0 +1,324 @@
+//! JSON model-description format (the Torch7/Thnets substitution).
+//!
+//! §5.1 step 1: "loads the parameters of each layer in the model into a
+//! layer object … serialized into a doubly linked list". This module
+//! reads/writes that serialized form. Standalone `relu` entries are
+//! folded into their producer conv/fc (the hardware applies ReLU on
+//! writeback), mirroring how the paper's parser absorbs activation
+//! modules.
+//!
+//! Format:
+//! ```json
+//! {
+//!   "name": "alexnet_owt",
+//!   "input": [3, 224, 224],
+//!   "layers": [
+//!     {"type": "conv", "name": "conv1", "in_ch": 3, "out_ch": 64,
+//!      "kh": 11, "kw": 11, "stride": 4, "pad": 2, "inputs": []},
+//!     {"type": "relu", "inputs": [0]},
+//!     {"type": "maxpool", "kh": 3, "kw": 3, "stride": 2, "pad": 0, "inputs": [1]},
+//!     {"type": "residual", "inputs": [7, 4]}
+//!   ]
+//! }
+//! ```
+//! `inputs` may be omitted for purely sequential layers.
+
+use super::graph::Graph;
+use super::layer::{LayerKind, Shape};
+use crate::util::json::Json;
+
+/// Parse a model description. Folds foldable ReLUs.
+pub fn parse_model(text: &str) -> Result<Graph, String> {
+    let root = Json::parse(text).map_err(|e| e.to_string())?;
+    let name = root.get("name").as_str().unwrap_or("model").to_string();
+    let input = root
+        .get("input")
+        .as_arr()
+        .filter(|a| a.len() == 3)
+        .ok_or("missing/invalid \"input\": expected [c, h, w]")?;
+    let dims: Vec<usize> = input
+        .iter()
+        .map(|v| v.as_usize().ok_or("input dims must be non-negative integers"))
+        .collect::<Result<_, _>>()?;
+    let input = Shape::new(dims[0], dims[1], dims[2]);
+
+    let layers = root.get("layers").as_arr().ok_or("missing \"layers\" array")?;
+
+    // First pass: raw kinds and inputs as written.
+    struct Raw {
+        kind: LayerKind,
+        inputs: Vec<usize>,
+        name: String,
+    }
+    let mut raw: Vec<Raw> = Vec::with_capacity(layers.len());
+    for (i, l) in layers.iter().enumerate() {
+        let ty = l.get("type").as_str().ok_or(format!("layer {i}: missing \"type\""))?;
+        let geti = |key: &str| -> Result<usize, String> {
+            l.get(key).as_usize().ok_or(format!("layer {i} ({ty}): missing \"{key}\""))
+        };
+        let geti_or = |key: &str, default: usize| l.get(key).as_usize().unwrap_or(default);
+        let kind = match ty {
+            "conv" => LayerKind::Conv {
+                in_ch: geti("in_ch")?,
+                out_ch: geti("out_ch")?,
+                kh: geti("kh")?,
+                kw: geti_or("kw", geti("kh")?),
+                stride: geti_or("stride", 1),
+                pad: geti_or("pad", 0),
+                relu: l.get("relu").as_bool().unwrap_or(false),
+            },
+            "maxpool" => LayerKind::MaxPool {
+                kh: geti("kh")?,
+                kw: geti_or("kw", geti("kh")?),
+                stride: geti_or("stride", 1),
+                pad: geti_or("pad", 0),
+            },
+            "avgpool" => LayerKind::AvgPool {
+                kh: geti("kh")?,
+                kw: geti_or("kw", geti("kh")?),
+                stride: geti_or("stride", 1),
+                pad: geti_or("pad", 0),
+            },
+            "fc" | "linear" => LayerKind::Fc {
+                in_features: geti("in_features")?,
+                out_features: geti("out_features")?,
+                relu: l.get("relu").as_bool().unwrap_or(false),
+            },
+            "residual" | "add" => LayerKind::ResidualAdd {
+                relu: l.get("relu").as_bool().unwrap_or(false),
+            },
+            "relu" => LayerKind::Relu,
+            other => return Err(format!("layer {i}: unknown type \"{other}\"")),
+        };
+        let inputs = match l.get("inputs").as_arr() {
+            Some(a) => a
+                .iter()
+                .map(|v| v.as_usize().ok_or(format!("layer {i}: bad input id")))
+                .collect::<Result<Vec<_>, _>>()?,
+            None => {
+                if i == 0 {
+                    vec![]
+                } else {
+                    vec![i - 1]
+                }
+            }
+        };
+        let lname = l.get("name").as_str().unwrap_or(&format!("layer{i}")).to_string();
+        raw.push(Raw { kind, inputs, name: lname });
+    }
+
+    // Second pass: fold ReLU nodes whose single producer is conv/fc/residual
+    // and that are that producer's only consumer. remap[i] = new id of raw i.
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); raw.len()];
+    for (i, r) in raw.iter().enumerate() {
+        for &p in &r.inputs {
+            if p >= i {
+                return Err(format!("layer {i}: input {p} is not an earlier layer"));
+            }
+            consumers[p].push(i);
+        }
+    }
+    let mut fold_into: Vec<Option<usize>> = vec![None; raw.len()];
+    for (i, r) in raw.iter().enumerate() {
+        if matches!(r.kind, LayerKind::Relu) && r.inputs.len() == 1 {
+            let p = r.inputs[0];
+            let fusable = matches!(
+                raw[p].kind,
+                LayerKind::Conv { .. } | LayerKind::Fc { .. } | LayerKind::ResidualAdd { .. }
+            );
+            if fusable && consumers[p].len() == 1 {
+                fold_into[i] = Some(p);
+            }
+        }
+    }
+
+    let mut g = Graph::new(&name, input);
+    let mut remap: Vec<usize> = vec![usize::MAX; raw.len()];
+    for (i, r) in raw.iter().enumerate() {
+        if let Some(p) = fold_into[i] {
+            // The folded relu aliases its producer's node.
+            remap[i] = remap[p];
+            continue;
+        }
+        let mut kind = r.kind.clone();
+        // If any consumer is a folded relu pointing at us, set the flag.
+        let fused_relu = consumers
+            .get(i)
+            .map(|cs| cs.iter().any(|&c| fold_into[c] == Some(i)))
+            .unwrap_or(false);
+        if fused_relu {
+            match &mut kind {
+                LayerKind::Conv { relu, .. }
+                | LayerKind::Fc { relu, .. }
+                | LayerKind::ResidualAdd { relu } => *relu = true,
+                _ => {}
+            }
+        }
+        let inputs: Vec<usize> = r.inputs.iter().map(|&p| remap[p]).collect();
+        if inputs.iter().any(|&p| p == usize::MAX) {
+            return Err(format!("layer {i}: internal remap failure"));
+        }
+        remap[i] = g.push(kind, inputs, &r.name);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+/// Serialize a graph back to the JSON description.
+pub fn dump_model(g: &Graph) -> String {
+    let layers: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("name", Json::str(&n.name)),
+                ("inputs", Json::arr(n.inputs.iter().map(|&i| Json::num(i as f64)))),
+            ];
+            match &n.kind {
+                LayerKind::Conv { in_ch, out_ch, kh, kw, stride, pad, relu } => {
+                    fields.push(("type", Json::str("conv")));
+                    fields.push(("in_ch", Json::num(*in_ch as f64)));
+                    fields.push(("out_ch", Json::num(*out_ch as f64)));
+                    fields.push(("kh", Json::num(*kh as f64)));
+                    fields.push(("kw", Json::num(*kw as f64)));
+                    fields.push(("stride", Json::num(*stride as f64)));
+                    fields.push(("pad", Json::num(*pad as f64)));
+                    fields.push(("relu", Json::Bool(*relu)));
+                }
+                LayerKind::MaxPool { kh, kw, stride, pad } => {
+                    fields.push(("type", Json::str("maxpool")));
+                    fields.push(("kh", Json::num(*kh as f64)));
+                    fields.push(("kw", Json::num(*kw as f64)));
+                    fields.push(("stride", Json::num(*stride as f64)));
+                    fields.push(("pad", Json::num(*pad as f64)));
+                }
+                LayerKind::AvgPool { kh, kw, stride, pad } => {
+                    fields.push(("type", Json::str("avgpool")));
+                    fields.push(("kh", Json::num(*kh as f64)));
+                    fields.push(("kw", Json::num(*kw as f64)));
+                    fields.push(("stride", Json::num(*stride as f64)));
+                    fields.push(("pad", Json::num(*pad as f64)));
+                }
+                LayerKind::Fc { in_features, out_features, relu } => {
+                    fields.push(("type", Json::str("fc")));
+                    fields.push(("in_features", Json::num(*in_features as f64)));
+                    fields.push(("out_features", Json::num(*out_features as f64)));
+                    fields.push(("relu", Json::Bool(*relu)));
+                }
+                LayerKind::ResidualAdd { relu } => {
+                    fields.push(("type", Json::str("residual")));
+                    fields.push(("relu", Json::Bool(*relu)));
+                }
+                LayerKind::Relu => fields.push(("type", Json::str("relu"))),
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(&g.name)),
+        (
+            "input",
+            Json::arr([
+                Json::num(g.input.c as f64),
+                Json::num(g.input.h as f64),
+                Json::num(g.input.w as f64),
+            ]),
+        ),
+        ("layers", Json::Arr(layers)),
+    ])
+    .pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn parse_minimal_conv() {
+        let g = parse_model(
+            r#"{"name":"m","input":[3,8,8],"layers":[
+                {"type":"conv","in_ch":3,"out_ch":4,"kh":3,"pad":1}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.shapes()[0], Shape::new(4, 8, 8));
+    }
+
+    #[test]
+    fn relu_folding() {
+        let g = parse_model(
+            r#"{"input":[3,8,8],"layers":[
+                {"type":"conv","in_ch":3,"out_ch":4,"kh":3,"pad":1},
+                {"type":"relu"},
+                {"type":"maxpool","kh":2,"stride":2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        assert!(matches!(g.nodes[0].kind, LayerKind::Conv { relu: true, .. }));
+        // maxpool's input remapped to the conv.
+        assert_eq!(g.nodes[1].inputs, vec![0]);
+    }
+
+    #[test]
+    fn relu_not_folded_when_producer_shared() {
+        // conv feeds both relu and a residual -> relu must stay standalone.
+        let g = parse_model(
+            r#"{"input":[4,8,8],"layers":[
+                {"type":"conv","in_ch":4,"out_ch":4,"kh":3,"pad":1},
+                {"type":"relu","inputs":[0]},
+                {"type":"conv","in_ch":4,"out_ch":4,"kh":3,"pad":1,"inputs":[1]},
+                {"type":"residual","inputs":[2,0]}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.nodes.len(), 4);
+        assert!(matches!(g.nodes[0].kind, LayerKind::Conv { relu: false, .. }));
+        assert!(matches!(g.nodes[1].kind, LayerKind::Relu));
+    }
+
+    #[test]
+    fn roundtrip_zoo_models() {
+        for g in [zoo::alexnet_owt(), zoo::resnet18(), zoo::resnet50()] {
+            let text = dump_model(&g);
+            let back = parse_model(&text).unwrap();
+            assert_eq!(back.nodes.len(), g.nodes.len(), "{}", g.name);
+            assert_eq!(back.input, g.input);
+            assert_eq!(back.shapes(), g.shapes(), "{}", g.name);
+            for (a, b) in g.nodes.iter().zip(&back.nodes) {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.inputs, b.inputs);
+            }
+        }
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse_model("{").is_err());
+        assert!(parse_model(r#"{"layers":[]}"#).is_err()); // no input
+        assert!(parse_model(r#"{"input":[3,8,8],"layers":[{"type":"warp"}]}"#).is_err());
+        assert!(parse_model(
+            r#"{"input":[3,8,8],"layers":[{"type":"conv","in_ch":3,"out_ch":4,"kh":3,"inputs":[5]}]}"#
+        )
+        .is_err());
+        // channel mismatch caught by validate
+        assert!(parse_model(
+            r#"{"input":[3,8,8],"layers":[{"type":"conv","in_ch":7,"out_ch":4,"kh":3}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn implicit_sequential_inputs() {
+        let g = parse_model(
+            r#"{"input":[3,8,8],"layers":[
+                {"type":"conv","in_ch":3,"out_ch":4,"kh":1},
+                {"type":"conv","in_ch":4,"out_ch":4,"kh":1}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.nodes[1].inputs, vec![0]);
+    }
+}

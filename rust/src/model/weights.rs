@@ -1,0 +1,132 @@
+//! Deterministic synthetic model parameters.
+//!
+//! ImageNet-pretrained Torch7 weights are unavailable offline; the
+//! substitution (DESIGN.md §Substitutions) is seeded He-style random
+//! weights. Every experiment that touches numerics (golden validation,
+//! quantization accuracy) uses these, so rust, the simulator and the
+//! python/jax build path all see bit-identical parameters (python reads
+//! the same values through the artifact test fixtures).
+
+use super::graph::Graph;
+use super::layer::LayerKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Per-layer parameters in fp32 (quantized on demand).
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    /// node id -> KCHW weight tensor (FC stored as [out, in, 1, 1]).
+    pub weights: BTreeMap<usize, Tensor<f32>>,
+    /// node id -> bias vector [out].
+    pub biases: BTreeMap<usize, Tensor<f32>>,
+}
+
+impl Weights {
+    /// He-normal init, scaled so Q8.8 activations stay in range through
+    /// deep stacks (important: saturation would otherwise dominate the
+    /// quantization-accuracy experiment).
+    pub fn init(graph: &Graph, seed: u64) -> Weights {
+        let mut w = Weights::default();
+        let mut rng = Rng::new(seed);
+        for node in &graph.nodes {
+            match node.kind {
+                LayerKind::Conv { in_ch, out_ch, kh, kw, .. } => {
+                    let fan_in = (in_ch * kh * kw) as f32;
+                    let sigma = (2.0 / fan_in).sqrt();
+                    let mut t = Tensor::zeros(&[out_ch, in_ch, kh, kw]);
+                    rng.fill_normal(&mut t.data, sigma);
+                    let mut b = Tensor::zeros(&[out_ch]);
+                    rng.fill_normal(&mut b.data, 0.05);
+                    w.weights.insert(node.id, t);
+                    w.biases.insert(node.id, b);
+                }
+                LayerKind::Fc { in_features, out_features, .. } => {
+                    let sigma = (2.0 / in_features as f32).sqrt();
+                    let mut t = Tensor::zeros(&[out_features, in_features, 1, 1]);
+                    rng.fill_normal(&mut t.data, sigma);
+                    let mut b = Tensor::zeros(&[out_features]);
+                    rng.fill_normal(&mut b.data, 0.05);
+                    w.weights.insert(node.id, t);
+                    w.biases.insert(node.id, b);
+                }
+                _ => {}
+            }
+        }
+        w
+    }
+
+    pub fn weight(&self, node: usize) -> &Tensor<f32> {
+        self.weights.get(&node).unwrap_or_else(|| panic!("no weights for node {node}"))
+    }
+
+    pub fn bias(&self, node: usize) -> &Tensor<f32> {
+        self.biases.get(&node).unwrap_or_else(|| panic!("no bias for node {node}"))
+    }
+
+    /// Total parameter words stored.
+    pub fn total_words(&self) -> usize {
+        self.weights.values().map(|t| t.len()).sum::<usize>()
+            + self.biases.values().map(|t| t.len()).sum::<usize>()
+    }
+}
+
+/// Deterministic synthetic input image in roughly [-1, 1].
+pub fn synthetic_input(graph: &Graph, seed: u64) -> Tensor<f32> {
+    let mut rng = Rng::new(seed ^ 0x1234_5678_9abc_def0);
+    let s = graph.input;
+    let mut t = Tensor::zeros(&[s.c, s.h, s.w]);
+    for v in t.data.iter_mut() {
+        *v = rng.f32_range(-1.0, 1.0);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn deterministic() {
+        let g = zoo::alexnet_owt();
+        let a = Weights::init(&g, 42);
+        let b = Weights::init(&g, 42);
+        assert_eq!(a.weight(0).data, b.weight(0).data);
+        let c = Weights::init(&g, 43);
+        assert_ne!(a.weight(0).data, c.weight(0).data);
+    }
+
+    #[test]
+    fn covers_all_weighted_layers() {
+        let g = zoo::resnet18();
+        let w = Weights::init(&g, 1);
+        for node in &g.nodes {
+            if node.kind.has_weights() {
+                assert!(w.weights.contains_key(&node.id), "missing node {}", node.id);
+                assert!(w.biases.contains_key(&node.id));
+            }
+        }
+        assert_eq!(w.total_words(), g.total_params());
+    }
+
+    #[test]
+    fn weight_scale_is_sane_for_q88() {
+        use crate::fixed::Q8_8;
+        let g = zoo::alexnet_owt();
+        let w = Weights::init(&g, 7);
+        // He init for 3x3x256 fan-in gives sigma ~0.03; nearly all values
+        // must be representable in Q8.8 without saturation.
+        let t = w.weight(6); // conv5
+        let sat = t.data.iter().filter(|&&v| v.abs() > Q8_8.max_value()).count();
+        assert_eq!(sat, 0);
+    }
+
+    #[test]
+    fn synthetic_input_matches_shape() {
+        let g = zoo::alexnet_owt();
+        let x = synthetic_input(&g, 3);
+        assert_eq!(x.shape, vec![3, 224, 224]);
+        assert!(x.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+}

@@ -1,0 +1,206 @@
+//! Model zoo: the three networks the paper benchmarks (Table 2).
+//!
+//! * **AlexNetOWT** — the single-tower "one weird trick" AlexNet [13];
+//!   its conv2–conv5 are exactly the Table 1 layers.
+//! * **ResNet18 / ResNet50** [9] — basic-block and bottleneck residual
+//!   networks; the bypass paths exercise step-2 dependency labels,
+//!   VMOV-based residual addition and the Kloop-forcing 1×1 layers of
+//!   Figure 4.
+
+use super::graph::{Graph, NodeId};
+use super::layer::{LayerKind, Shape};
+
+fn conv(in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize, relu: bool) -> LayerKind {
+    LayerKind::Conv { in_ch, out_ch, kh: k, kw: k, stride, pad, relu }
+}
+
+/// AlexNetOWT for 3×224×224 input.
+pub fn alexnet_owt() -> Graph {
+    let mut g = Graph::new("alexnet_owt", Shape::new(3, 224, 224));
+    g.push_seq(conv(3, 64, 11, 4, 2, true), "conv1");
+    g.push_seq(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 0 }, "pool1");
+    g.push_seq(conv(64, 192, 5, 1, 2, true), "conv2");
+    g.push_seq(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 0 }, "pool2");
+    g.push_seq(conv(192, 384, 3, 1, 1, true), "conv3");
+    g.push_seq(conv(384, 256, 3, 1, 1, true), "conv4");
+    g.push_seq(conv(256, 256, 3, 1, 1, true), "conv5");
+    g.push_seq(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 0 }, "pool5");
+    g.push_seq(LayerKind::Fc { in_features: 256 * 6 * 6, out_features: 4096, relu: true }, "fc6");
+    g.push_seq(LayerKind::Fc { in_features: 4096, out_features: 4096, relu: true }, "fc7");
+    g.push_seq(LayerKind::Fc { in_features: 4096, out_features: 1000, relu: false }, "fc8");
+    g.validate().expect("alexnet_owt must validate");
+    g
+}
+
+/// One ResNet basic block (two 3×3 convs + identity/projection bypass).
+fn basic_block(g: &mut Graph, input: NodeId, in_ch: usize, out_ch: usize, stride: usize, tag: &str) -> NodeId {
+    let c1 = g.push(conv(in_ch, out_ch, 3, stride, 1, true), vec![input], &format!("{tag}.conv1"));
+    let c2 = g.push(conv(out_ch, out_ch, 3, 1, 1, false), vec![c1], &format!("{tag}.conv2"));
+    let bypass = if stride != 1 || in_ch != out_ch {
+        g.push(conv(in_ch, out_ch, 1, stride, 0, false), vec![input], &format!("{tag}.down"))
+    } else {
+        input
+    };
+    g.push(LayerKind::ResidualAdd { relu: true }, vec![c2, bypass], &format!("{tag}.add"))
+}
+
+/// One ResNet bottleneck block (1×1 reduce, 3×3, 1×1 expand + bypass).
+fn bottleneck(g: &mut Graph, input: NodeId, in_ch: usize, mid_ch: usize, stride: usize, tag: &str) -> NodeId {
+    let out_ch = mid_ch * 4;
+    let c1 = g.push(conv(in_ch, mid_ch, 1, 1, 0, true), vec![input], &format!("{tag}.conv1"));
+    let c2 = g.push(conv(mid_ch, mid_ch, 3, stride, 1, true), vec![c1], &format!("{tag}.conv2"));
+    let c3 = g.push(conv(mid_ch, out_ch, 1, 1, 0, false), vec![c2], &format!("{tag}.conv3"));
+    let bypass = if stride != 1 || in_ch != out_ch {
+        g.push(conv(in_ch, out_ch, 1, stride, 0, false), vec![input], &format!("{tag}.down"))
+    } else {
+        input
+    };
+    g.push(LayerKind::ResidualAdd { relu: true }, vec![c3, bypass], &format!("{tag}.add"))
+}
+
+/// ResNet18 for 3×224×224 input.
+pub fn resnet18() -> Graph {
+    let mut g = Graph::new("resnet18", Shape::new(3, 224, 224));
+    let stem = g.push_seq(conv(3, 64, 7, 2, 3, true), "conv1");
+    let mut cur = g.push(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 1 }, vec![stem], "pool1");
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 64, 1), (64, 128, 2), (128, 256, 2), (256, 512, 2)];
+    for (s, &(in_ch, out_ch, stride)) in stages.iter().enumerate() {
+        cur = basic_block(&mut g, cur, in_ch, out_ch, stride, &format!("layer{}.0", s + 1));
+        cur = basic_block(&mut g, cur, out_ch, out_ch, 1, &format!("layer{}.1", s + 1));
+    }
+    cur = g.push(LayerKind::AvgPool { kh: 7, kw: 7, stride: 1, pad: 0 }, vec![cur], "avgpool");
+    g.push(LayerKind::Fc { in_features: 512, out_features: 1000, relu: false }, vec![cur], "fc");
+    g.validate().expect("resnet18 must validate");
+    g
+}
+
+/// ResNet50 for 3×224×224 input.
+pub fn resnet50() -> Graph {
+    let mut g = Graph::new("resnet50", Shape::new(3, 224, 224));
+    let stem = g.push_seq(conv(3, 64, 7, 2, 3, true), "conv1");
+    let mut cur = g.push(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 1 }, vec![stem], "pool1");
+    let stages: [(usize, usize, usize); 4] = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
+    let mut in_ch = 64;
+    for (s, &(mid, blocks, stride)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let st = if b == 0 { stride } else { 1 };
+            cur = bottleneck(&mut g, cur, in_ch, mid, st, &format!("layer{}.{}", s + 1, b));
+            in_ch = mid * 4;
+        }
+    }
+    cur = g.push(LayerKind::AvgPool { kh: 7, kw: 7, stride: 1, pad: 0 }, vec![cur], "avgpool");
+    g.push(LayerKind::Fc { in_features: 2048, out_features: 1000, relu: false }, vec![cur], "fc");
+    g.validate().expect("resnet50 must validate");
+    g
+}
+
+/// The four Table 1 AlexNet conv layers as standalone single-layer graphs
+/// (input size, kernel, in planes, out planes, stride, pad).
+pub fn table1_layers() -> Vec<Graph> {
+    let specs: [(usize, usize, usize, usize, usize, usize); 4] = [
+        (27, 5, 64, 192, 1, 2),
+        (13, 3, 192, 384, 1, 1),
+        (13, 3, 384, 256, 1, 1),
+        (13, 3, 256, 256, 1, 1),
+    ];
+    specs
+        .iter()
+        .map(|&(n, k, ic, oc, s, p)| {
+            let mut g = Graph::new(&format!("{n}x{n},{k}x{k},{ic},{oc},{s},{p}"), Shape::new(ic, n, n));
+            g.push_seq(conv(ic, oc, k, s, p, true), "conv");
+            g
+        })
+        .collect()
+}
+
+/// Lookup by name (CLI entry point).
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "alexnet" | "alexnet_owt" => Some(alexnet_owt()),
+        "resnet18" => Some(resnet18()),
+        "resnet50" => Some(resnet50()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_shapes_match_paper() {
+        let g = alexnet_owt();
+        let shapes = g.shapes();
+        // conv1 -> 64x55x55, pool1 -> 64x27x27, conv2 -> 192x27x27,
+        // pool2 -> 192x13x13, conv5 -> 256x13x13, pool5 -> 256x6x6.
+        assert_eq!(shapes[0], Shape::new(64, 55, 55));
+        assert_eq!(shapes[1], Shape::new(64, 27, 27));
+        assert_eq!(shapes[2], Shape::new(192, 27, 27));
+        assert_eq!(shapes[3], Shape::new(192, 13, 13));
+        assert_eq!(shapes[6], Shape::new(256, 13, 13));
+        assert_eq!(shapes[7], Shape::new(256, 6, 6));
+        assert_eq!(shapes.last().unwrap(), &Shape::new(1000, 1, 1));
+    }
+
+    #[test]
+    fn alexnet_macs_scale() {
+        // AlexNetOWT conv layers ~0.66 GMAC, FC ~0.059 GMAC.
+        let g = alexnet_owt();
+        let total = g.total_macs();
+        assert!(total > 600_000_000 && total < 850_000_000, "got {total}");
+    }
+
+    #[test]
+    fn resnet18_structure() {
+        let g = resnet18();
+        assert_eq!(g.count_kind("conv"), 20); // 16 block convs + 3 downsamples + stem
+        assert_eq!(g.count_kind("residual"), 8);
+        let shapes = g.shapes();
+        assert_eq!(shapes.last().unwrap(), &Shape::new(1000, 1, 1));
+        // total ~1.8 GMAC
+        let total = g.total_macs();
+        assert!(total > 1_500_000_000 && total < 2_100_000_000, "got {total}");
+    }
+
+    #[test]
+    fn resnet50_structure() {
+        let g = resnet50();
+        assert_eq!(g.count_kind("residual"), 16);
+        assert_eq!(g.count_kind("conv"), 1 + 16 * 3 + 4); // stem + block convs + downsamples
+        let total = g.total_macs();
+        // ~4.1 GMAC
+        assert!(total > 3_500_000_000 && total < 4_500_000_000, "got {total}");
+        // ~25.5 M params
+        let params = g.total_params();
+        assert!(params > 23_000_000 && params < 28_000_000, "got {params}");
+    }
+
+    #[test]
+    fn table1_layer_descriptors() {
+        let layers = table1_layers();
+        assert_eq!(layers.len(), 4);
+        assert_eq!(layers[0].name, "27x27,5x5,64,192,1,2");
+        for g in &layers {
+            assert!(g.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("alexnet").is_some());
+        assert!(by_name("resnet18").is_some());
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn resnet_bypass_labels_are_shared() {
+        use crate::model::graph::DepLabel;
+        let g = resnet18();
+        let labels = g.dep_labels();
+        // Every residual block start must be Shared (feeds block + bypass).
+        let shared = labels.iter().filter(|&&l| l == DepLabel::Shared).count();
+        assert!(shared >= 8, "expected >=8 shared nodes, got {shared}");
+    }
+}

@@ -1,0 +1,315 @@
+//! Spatial convolution references (fp32 and fixed point).
+
+use crate::fixed::{mac_step, relu_q, sat_add, QFormat};
+use crate::model::layer::conv_out;
+use crate::tensor::Tensor;
+
+/// fp32 convolution, CHW input, KCHW weights, zero padding.
+/// `bypass` (same shape as output) is added before the optional ReLU —
+/// the fused residual path.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_f32(
+    input: &Tensor<f32>,
+    weight: &Tensor<f32>,
+    bias: &Tensor<f32>,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    bypass: Option<&Tensor<f32>>,
+) -> Tensor<f32> {
+    let (ci, hi, wi) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (k, ck, kh, kw) = (weight.shape[0], weight.shape[1], weight.shape[2], weight.shape[3]);
+    assert_eq!(ci, ck, "channel mismatch");
+    assert_eq!(bias.len(), k);
+    let ho = conv_out(hi, kh, stride, pad);
+    let wo = conv_out(wi, kw, stride, pad);
+    if let Some(bp) = bypass {
+        assert_eq!(bp.shape, vec![k, ho, wo]);
+    }
+    let mut out = Tensor::zeros(&[k, ho, wo]);
+    for ko in 0..k {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = bias.data[ko];
+                for c in 0..ci {
+                    for fy in 0..kh {
+                        let iy = (oy * stride + fy) as isize - pad as isize;
+                        if iy < 0 || iy >= hi as isize {
+                            continue;
+                        }
+                        for fx in 0..kw {
+                            let ix = (ox * stride + fx) as isize - pad as isize;
+                            if ix < 0 || ix >= wi as isize {
+                                continue;
+                            }
+                            acc += input.at3(c, iy as usize, ix as usize)
+                                * weight.at4(ko, c, fy, fx);
+                        }
+                    }
+                }
+                if let Some(bp) = bypass {
+                    acc += bp.at3(ko, oy, ox);
+                }
+                if relu {
+                    acc = acc.max(0.0);
+                }
+                out.set3(ko, oy, ox, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Fixed-point convolution with the exact Snowflake MAC datapath:
+/// i16×i16 products accumulated in 64-bit at scale 2^(2·frac), bias
+/// pre-loaded into the accumulator at the same scale, rounding
+/// saturating writeback, then bypass add (saturating, post-writeback)
+/// and ReLU — the order the hardware applies them (§4 VMOV/MAC).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_q(
+    input: &Tensor<i16>,
+    weight: &Tensor<i16>,
+    bias: &Tensor<i16>,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    bypass: Option<&Tensor<i16>>,
+    fmt: QFormat,
+) -> Tensor<i16> {
+    let (ci, hi, wi) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (k, ck, kh, kw) = (weight.shape[0], weight.shape[1], weight.shape[2], weight.shape[3]);
+    assert_eq!(ci, ck, "channel mismatch");
+    assert_eq!(bias.len(), k);
+    let ho = conv_out(hi, kh, stride, pad);
+    let wo = conv_out(wi, kw, stride, pad);
+    if let Some(bp) = bypass {
+        assert_eq!(bp.shape, vec![k, ho, wo]);
+    }
+    let mut out = Tensor::zeros(&[k, ho, wo]);
+    for ko in 0..k {
+        // Bias enters the accumulator pre-shifted to product scale —
+        // exactly what VMOV-ing the bias into the MAC accumulator does.
+        let bias_acc = (bias.data[ko] as i64) << fmt.frac;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = bias_acc;
+                for c in 0..ci {
+                    for fy in 0..kh {
+                        let iy = (oy * stride + fy) as isize - pad as isize;
+                        if iy < 0 || iy >= hi as isize {
+                            continue;
+                        }
+                        for fx in 0..kw {
+                            let ix = (ox * stride + fx) as isize - pad as isize;
+                            if ix < 0 || ix >= wi as isize {
+                                continue;
+                            }
+                            acc = mac_step(
+                                acc,
+                                input.at3(c, iy as usize, ix as usize),
+                                weight.at4(ko, c, fy, fx),
+                            );
+                        }
+                    }
+                }
+                let mut v = fmt.writeback(acc);
+                if let Some(bp) = bypass {
+                    v = sat_add(v, bp.at3(ko, oy, ox));
+                }
+                if relu {
+                    v = relu_q(v);
+                }
+                out.set3(ko, oy, ox, v);
+            }
+        }
+    }
+    out
+}
+
+/// Element-wise residual add (standalone node form).
+pub fn residual_q(a: &Tensor<i16>, b: &Tensor<i16>, relu: bool) -> Tensor<i16> {
+    assert_eq!(a.shape, b.shape);
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let v = sat_add(x, y);
+            if relu {
+                relu_q(v)
+            } else {
+                v
+            }
+        })
+        .collect();
+    Tensor { shape: a.shape.clone(), data }
+}
+
+/// fp32 residual add.
+pub fn residual_f32(a: &Tensor<f32>, b: &Tensor<f32>, relu: bool) -> Tensor<f32> {
+    assert_eq!(a.shape, b.shape);
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let v = x + y;
+            if relu {
+                v.max(0.0)
+            } else {
+                v
+            }
+        })
+        .collect();
+    Tensor { shape: a.shape.clone(), data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_8;
+    use crate::util::prop::for_cases;
+    use crate::util::rng::Rng;
+
+    fn rand_t3(rng: &mut Rng, c: usize, h: usize, w: usize, amp: f32) -> Tensor<f32> {
+        let mut t = Tensor::zeros(&[c, h, w]);
+        for v in t.data.iter_mut() {
+            *v = rng.f32_range(-amp, amp);
+        }
+        t
+    }
+
+    fn rand_t4(rng: &mut Rng, k: usize, c: usize, kh: usize, kw: usize, amp: f32) -> Tensor<f32> {
+        let mut t = Tensor::zeros(&[k, c, kh, kw]);
+        for v in t.data.iter_mut() {
+            *v = rng.f32_range(-amp, amp);
+        }
+        t
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 conv with identity weights returns the input (fp32).
+        let mut rng = Rng::new(1);
+        let x = rand_t3(&mut rng, 3, 4, 4, 1.0);
+        let mut w = Tensor::zeros(&[3, 3, 1, 1]);
+        for c in 0..3 {
+            w.set4(c, c, 0, 0, 1.0);
+        }
+        let b = Tensor::zeros(&[3]);
+        let y = conv_f32(&x, &w, &b, 1, 0, false, None);
+        assert!(x.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn known_3x3_sum() {
+        // All-ones 3x3 kernel over all-ones 1-channel input, no pad:
+        // every interior output = 9.
+        let x = Tensor::from_vec(&[1, 4, 4], vec![1.0; 16]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        let y = conv_f32(&x, &w, &b, 1, 0, false, None);
+        assert_eq!(y.shape, vec![1, 2, 2]);
+        assert!(y.data.iter().all(|&v| (v - 9.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn padding_zeros_edges() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        let y = conv_f32(&x, &w, &b, 1, 1, false, None);
+        assert_eq!(y.shape, vec![1, 2, 2]);
+        // Corner sees 4 ones.
+        assert!((y.at3(0, 0, 0) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stride_subsamples() {
+        let x = Tensor::from_vec(&[1, 5, 5], (0..25).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        let y = conv_f32(&x, &w, &b, 2, 0, false, None);
+        assert_eq!(y.shape, vec![1, 3, 3]);
+        assert_eq!(y.at3(0, 1, 1), 12.0);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::from_vec(&[1, 1, 1], vec![1.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![-2.0]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        let y = conv_f32(&x, &w, &b, 1, 0, true, None);
+        assert_eq!(y.data[0], 0.0);
+    }
+
+    #[test]
+    fn q_conv_tracks_f32_within_quantization_noise() {
+        for_cases(25, 21, |rng| {
+            let (c, h, w) = (rng.range(1, 5), rng.range(3, 8), rng.range(3, 8));
+            let k = rng.range(1, 5);
+            let ks = *[1usize, 3].get(rng.range(0, 2)).unwrap();
+            let stride = rng.range(1, 3);
+            let pad = rng.range(0, ks / 2 + 1);
+            if h + 2 * pad < ks || w + 2 * pad < ks {
+                return;
+            }
+            let x = rand_t3(rng, c, h, w, 1.0);
+            let wt = rand_t4(rng, k, c, ks, ks, 0.3);
+            let mut b = Tensor::zeros(&[k]);
+            for v in b.data.iter_mut() {
+                *v = rng.f32_range(-0.2, 0.2);
+            }
+            let yf = conv_f32(&x, &wt, &b, stride, pad, true, None);
+            let yq = conv_q(
+                &x.quantize(Q8_8),
+                &wt.quantize(Q8_8),
+                &b.quantize(Q8_8),
+                stride,
+                pad,
+                true,
+                None,
+                Q8_8,
+            );
+            let yq_f = yq.dequantize(Q8_8);
+            // Error budget: per-term quantization noise ~ eps * sqrt(taps).
+            let taps = (c * ks * ks) as f32;
+            let tol = Q8_8.epsilon() * (taps.sqrt() * 2.0 + 2.0);
+            assert!(
+                yf.max_abs_diff(&yq_f) <= tol,
+                "diff {} > tol {tol}",
+                yf.max_abs_diff(&yq_f)
+            );
+        });
+    }
+
+    #[test]
+    fn bypass_applied_after_writeback() {
+        let x = Tensor::from_vec(&[1, 1, 1], vec![1.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        let bp = Tensor::from_vec(&[1, 1, 1], vec![Q8_8.quantize(2.5)]);
+        let y = conv_q(
+            &x.quantize(Q8_8),
+            &w.quantize(Q8_8),
+            &b.quantize(Q8_8),
+            1,
+            0,
+            false,
+            Some(&bp),
+            Q8_8,
+        );
+        assert_eq!(y.data[0], Q8_8.quantize(3.5));
+    }
+
+    #[test]
+    fn residual_saturates() {
+        let a = Tensor::from_vec(&[1], vec![i16::MAX]);
+        let b = Tensor::from_vec(&[1], vec![100i16]);
+        assert_eq!(residual_q(&a, &b, false).data[0], i16::MAX);
+        let c = Tensor::from_vec(&[1], vec![-50i16]);
+        assert_eq!(residual_q(&a, &c, true).data[0], i16::MAX - 50);
+        let d = Tensor::from_vec(&[1], vec![i16::MIN]);
+        assert_eq!(residual_q(&d, &c, true).data[0], 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Fully connected layer references.
+//!
+//! §2: an FC layer is "a data movement intensive operation … memory
+//! bandwidth is a bottleneck". On Snowflake it executes as a 1×1 CONV
+//! over a flattened 1×1 map — the paper's uniform *trace* representation
+//! — so the fixed-point path here is a single long MAC trace per output
+//! feature with the standard writeback.
+
+use crate::fixed::{mac_step, relu_q, QFormat};
+use crate::tensor::Tensor;
+
+/// fp32 FC: `weight` is [out, in, 1, 1] (KCHW like conv), input is any
+/// shape with `numel == in`.
+pub fn fc_f32(input: &Tensor<f32>, weight: &Tensor<f32>, bias: &Tensor<f32>, relu: bool) -> Tensor<f32> {
+    let out_f = weight.shape[0];
+    let in_f = weight.shape[1];
+    assert_eq!(input.len(), in_f, "fc input numel mismatch");
+    assert_eq!(bias.len(), out_f);
+    let mut out = Tensor::zeros(&[out_f, 1, 1]);
+    for o in 0..out_f {
+        let row = &weight.data[o * in_f..(o + 1) * in_f];
+        let mut acc = bias.data[o];
+        for (x, w) in input.data.iter().zip(row) {
+            acc += x * w;
+        }
+        if relu {
+            acc = acc.max(0.0);
+        }
+        out.data[o] = acc;
+    }
+    out
+}
+
+/// Fixed-point FC with the MAC datapath.
+pub fn fc_q(
+    input: &Tensor<i16>,
+    weight: &Tensor<i16>,
+    bias: &Tensor<i16>,
+    relu: bool,
+    fmt: QFormat,
+) -> Tensor<i16> {
+    let out_f = weight.shape[0];
+    let in_f = weight.shape[1];
+    assert_eq!(input.len(), in_f, "fc input numel mismatch");
+    assert_eq!(bias.len(), out_f);
+    let mut out = Tensor::zeros(&[out_f, 1, 1]);
+    for o in 0..out_f {
+        let row = &weight.data[o * in_f..(o + 1) * in_f];
+        let mut acc = (bias.data[o] as i64) << fmt.frac;
+        for (&x, &w) in input.data.iter().zip(row) {
+            acc = mac_step(acc, x, w);
+        }
+        let mut v = fmt.writeback(acc);
+        if relu {
+            v = relu_q(v);
+        }
+        out.data[o] = v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_8;
+    use crate::util::prop::for_cases;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_dot_product() {
+        let x = Tensor::from_vec(&[3, 1, 1], vec![1.0, 2.0, 3.0]);
+        let w = Tensor::from_vec(&[2, 3, 1, 1], vec![1.0, 0.0, 0.0, 0.5, 0.5, 0.5]);
+        let b = Tensor::from_vec(&[2], vec![0.0, 1.0]);
+        let y = fc_f32(&x, &w, &b, false);
+        assert_eq!(y.data, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn relu_applies() {
+        let x = Tensor::from_vec(&[1, 1, 1], vec![1.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![-1.0]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        assert_eq!(fc_f32(&x, &w, &b, true).data[0], 0.0);
+        let yq = fc_q(&x.quantize(Q8_8), &w.quantize(Q8_8), &b.quantize(Q8_8), true, Q8_8);
+        assert_eq!(yq.data[0], 0);
+    }
+
+    #[test]
+    fn q_matches_f32_within_noise() {
+        for_cases(30, 41, |rng| {
+            let in_f = rng.range(4, 128);
+            let out_f = rng.range(1, 16);
+            let mut x = Tensor::zeros(&[in_f, 1, 1]);
+            let mut rngc = rng.clone();
+            for v in x.data.iter_mut() {
+                *v = rngc.f32_range(-1.0, 1.0);
+            }
+            let mut w = Tensor::zeros(&[out_f, in_f, 1, 1]);
+            for v in w.data.iter_mut() {
+                *v = rngc.f32_range(-0.2, 0.2);
+            }
+            let mut b = Tensor::zeros(&[out_f]);
+            for v in b.data.iter_mut() {
+                *v = rngc.f32_range(-0.5, 0.5);
+            }
+            let yf = fc_f32(&x, &w, &b, false);
+            let yq = fc_q(&x.quantize(Q8_8), &w.quantize(Q8_8), &b.quantize(Q8_8), false, Q8_8)
+                .dequantize(Q8_8);
+            let tol = Q8_8.epsilon() * ((in_f as f32).sqrt() * 2.0 + 2.0);
+            assert!(yf.max_abs_diff(&yq) <= tol);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let x = Tensor::from_vec(&[2, 1, 1], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[1, 3, 1, 1], vec![1.0, 1.0, 1.0]);
+        let b = Tensor::from_vec(&[1], vec![0.0]);
+        fc_f32(&x, &w, &b, false);
+    }
+}

@@ -1,0 +1,196 @@
+//! Whole-graph forward passes (layer-by-layer validation, §5.3).
+
+use super::{conv, fc, pool};
+use crate::fixed::QFormat;
+use crate::model::graph::Graph;
+use crate::model::layer::LayerKind;
+use crate::model::weights::Weights;
+use crate::tensor::Tensor;
+
+/// fp32 forward pass; returns every node's output in node order.
+pub fn forward_f32(g: &Graph, w: &Weights, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    let mut outs: Vec<Tensor<f32>> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let x = match node.inputs.first() {
+            None => input,
+            Some(&p) => &outs[p],
+        };
+        let y = match &node.kind {
+            LayerKind::Conv { stride, pad, relu, .. } => conv::conv_f32(
+                x,
+                w.weight(node.id),
+                w.bias(node.id),
+                *stride,
+                *pad,
+                *relu,
+                None,
+            ),
+            LayerKind::MaxPool { kh, kw, stride, pad } => pool::maxpool_f32(x, *kh, *kw, *stride, *pad),
+            LayerKind::AvgPool { kh, kw, stride, pad } => pool::avgpool_f32(x, *kh, *kw, *stride, *pad),
+            LayerKind::Fc { relu, .. } => {
+                let flat = Tensor::from_vec(&[x.len(), 1, 1], x.data.clone());
+                fc::fc_f32(&flat, w.weight(node.id), w.bias(node.id), *relu)
+            }
+            LayerKind::ResidualAdd { relu } => {
+                conv::residual_f32(&outs[node.inputs[0]], &outs[node.inputs[1]], *relu)
+            }
+            LayerKind::Relu => Tensor {
+                shape: x.shape.clone(),
+                data: x.data.iter().map(|v| v.max(0.0)).collect(),
+            },
+        };
+        outs.push(y);
+    }
+    outs
+}
+
+/// Fixed-point forward pass in format `fmt`; weights/input quantized on
+/// entry, every intermediate stays in i16 (exactly what the hardware
+/// keeps in DRAM between layers).
+pub fn forward_q(g: &Graph, w: &Weights, input: &Tensor<f32>, fmt: QFormat) -> Vec<Tensor<i16>> {
+    let xq = input.quantize(fmt);
+    let mut outs: Vec<Tensor<i16>> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let x = match node.inputs.first() {
+            None => &xq,
+            Some(&p) => &outs[p],
+        };
+        let y = match &node.kind {
+            LayerKind::Conv { stride, pad, relu, .. } => conv::conv_q(
+                x,
+                &w.weight(node.id).quantize(fmt),
+                &w.bias(node.id).quantize(fmt),
+                *stride,
+                *pad,
+                *relu,
+                None,
+                fmt,
+            ),
+            LayerKind::MaxPool { kh, kw, stride, pad } => pool::maxpool_q(x, *kh, *kw, *stride, *pad),
+            LayerKind::AvgPool { kh, kw, stride, pad } => {
+                pool::avgpool_q(x, *kh, *kw, *stride, *pad, fmt)
+            }
+            LayerKind::Fc { relu, .. } => {
+                let flat = Tensor::from_vec(&[x.len(), 1, 1], x.data.clone());
+                fc::fc_q(
+                    &flat,
+                    &w.weight(node.id).quantize(fmt),
+                    &w.bias(node.id).quantize(fmt),
+                    *relu,
+                    fmt,
+                )
+            }
+            LayerKind::ResidualAdd { relu } => {
+                conv::residual_q(&outs[node.inputs[0]], &outs[node.inputs[1]], *relu)
+            }
+            LayerKind::Relu => Tensor {
+                shape: x.shape.clone(),
+                data: x.data.iter().map(|&v| v.max(0)).collect(),
+            },
+        };
+        outs.push(y);
+    }
+    outs
+}
+
+/// Single node output (fp32), given already-computed producer outputs.
+pub fn node_output_f32(g: &Graph, w: &Weights, input: &Tensor<f32>, node: usize) -> Tensor<f32> {
+    forward_f32(g, w, input).swap_remove(node)
+}
+
+/// Single node output (fixed point).
+pub fn node_output_q(
+    g: &Graph,
+    w: &Weights,
+    input: &Tensor<f32>,
+    node: usize,
+    fmt: QFormat,
+) -> Tensor<i16> {
+    forward_q(g, w, input, fmt).swap_remove(node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q5_11, Q8_8};
+    use crate::model::weights::synthetic_input;
+    use crate::model::zoo;
+    use crate::model::layer::Shape;
+
+    fn tiny_net() -> Graph {
+        let mut g = Graph::new("tiny", Shape::new(3, 16, 16));
+        let c1 = g.push_seq(
+            LayerKind::Conv { in_ch: 3, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c1",
+        );
+        let p = g.push(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, vec![c1], "p");
+        let c2 = g.push(
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+            vec![p],
+            "c2",
+        );
+        let add = g.push(LayerKind::ResidualAdd { relu: true }, vec![c2, p], "add");
+        let ap = g.push(LayerKind::AvgPool { kh: 8, kw: 8, stride: 1, pad: 0 }, vec![add], "ap");
+        g.push(LayerKind::Fc { in_features: 8, out_features: 4, relu: false }, vec![ap], "fc");
+        g.validate().unwrap();
+        g
+    }
+
+    #[test]
+    fn shapes_agree_with_graph_inference() {
+        let g = tiny_net();
+        let w = Weights::init(&g, 5);
+        let x = synthetic_input(&g, 5);
+        let outs = forward_f32(&g, &w, &x);
+        for (o, s) in outs.iter().zip(g.shapes()) {
+            assert_eq!(o.shape, vec![s.c, s.h, s.w]);
+        }
+    }
+
+    #[test]
+    fn q_tracks_f32_through_whole_net() {
+        let g = tiny_net();
+        let w = Weights::init(&g, 5);
+        let x = synthetic_input(&g, 5);
+        let yf = forward_f32(&g, &w, &x);
+        let yq = forward_q(&g, &w, &x, Q8_8);
+        let last_f = yf.last().unwrap();
+        let last_q = yq.last().unwrap().dequantize(Q8_8);
+        // Error accumulates across layers; just require closeness.
+        assert!(last_f.max_abs_diff(&last_q) < 0.25, "{}", last_f.max_abs_diff(&last_q));
+    }
+
+    #[test]
+    fn q511_is_more_accurate_than_q88() {
+        let g = tiny_net();
+        let w = Weights::init(&g, 6);
+        let x = synthetic_input(&g, 6);
+        let yf = forward_f32(&g, &w, &x);
+        let e88 = yf
+            .last()
+            .unwrap()
+            .max_abs_diff(&forward_q(&g, &w, &x, Q8_8).last().unwrap().dequantize(Q8_8));
+        let e511 = yf
+            .last()
+            .unwrap()
+            .max_abs_diff(&forward_q(&g, &w, &x, Q5_11).last().unwrap().dequantize(Q5_11));
+        assert!(e511 < e88, "Q5.11 err {e511} !< Q8.8 err {e88}");
+    }
+
+    #[test]
+    fn alexnet_first_layers_run() {
+        // Truncated AlexNet (first 4 nodes) to keep test time sane.
+        let full = zoo::alexnet_owt();
+        let mut g = Graph::new("alexnet_head", full.input);
+        for node in &full.nodes[..4] {
+            g.push(node.kind.clone(), node.inputs.clone(), &node.name);
+        }
+        let w = Weights::init(&g, 9);
+        let x = synthetic_input(&g, 9);
+        let outs = forward_q(&g, &w, &x, Q8_8);
+        assert_eq!(outs.last().unwrap().shape, vec![192, 13, 13]);
+        // Non-degenerate output.
+        let nonzero = outs.last().unwrap().data.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero > 1000);
+    }
+}

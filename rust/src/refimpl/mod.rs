@@ -1,0 +1,19 @@
+//! Reference layer implementations.
+//!
+//! §5.3: "for validation purposes, we wrote a software implementation of
+//! the model's layers using Q8.8 to simulate Snowflake's compute
+//! operations. Result checking allows layer by layer validation." This
+//! module is that software implementation, in two flavours:
+//!
+//! * fp32 — numerical ground truth (and the fp32 row of the accuracy
+//!   experiment);
+//! * Qm.n fixed point — bit-exact model of the Snowflake MAC datapath
+//!   ([`crate::fixed`]), used to validate the simulator's outputs word
+//!   by word and mirrored by the Pallas kernel on the python side.
+
+pub mod conv;
+pub mod fc;
+pub mod forward;
+pub mod pool;
+
+pub use forward::{forward_f32, forward_q, node_output_f32, node_output_q};

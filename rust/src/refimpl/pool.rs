@@ -1,0 +1,221 @@
+//! Max / average pooling references.
+//!
+//! Max pooling maps to the hardware MAX instruction (element-wise
+//! comparison with a retained vector). Average pooling is implemented —
+//! exactly as §2 prescribes — as a CONV with a single weight value of
+//! 1/window, so the fixed-point path reuses the MAC datapath and
+//! reproduces the same rounding the hardware would.
+
+use crate::fixed::{mac_step, max_q, QFormat};
+use crate::model::layer::conv_out;
+use crate::tensor::Tensor;
+
+/// fp32 max pooling with zero padding (padded cells use -inf so they
+/// never win; matches Torch7 semantics for positive-padded pooling).
+pub fn maxpool_f32(input: &Tensor<f32>, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor<f32> {
+    let (c, hi, wi) = (input.shape[0], input.shape[1], input.shape[2]);
+    let ho = conv_out(hi, kh, stride, pad);
+    let wo = conv_out(wi, kw, stride, pad);
+    let mut out = Tensor::zeros(&[c, ho, wo]);
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut m = f32::NEG_INFINITY;
+                for fy in 0..kh {
+                    let iy = (oy * stride + fy) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        continue;
+                    }
+                    for fx in 0..kw {
+                        let ix = (ox * stride + fx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        m = m.max(input.at3(ch, iy as usize, ix as usize));
+                    }
+                }
+                out.set3(ch, oy, ox, m);
+            }
+        }
+    }
+    out
+}
+
+/// Fixed-point max pooling (the MAX instruction's retained-vector compare).
+pub fn maxpool_q(input: &Tensor<i16>, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor<i16> {
+    let (c, hi, wi) = (input.shape[0], input.shape[1], input.shape[2]);
+    let ho = conv_out(hi, kh, stride, pad);
+    let wo = conv_out(wi, kw, stride, pad);
+    let mut out = Tensor::zeros(&[c, ho, wo]);
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut m = i16::MIN;
+                for fy in 0..kh {
+                    let iy = (oy * stride + fy) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        continue;
+                    }
+                    for fx in 0..kw {
+                        let ix = (ox * stride + fx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        m = max_q(m, input.at3(ch, iy as usize, ix as usize));
+                    }
+                }
+                out.set3(ch, oy, ox, m);
+            }
+        }
+    }
+    out
+}
+
+/// fp32 average pooling (window mean, zero-padded cells count in the
+/// divisor — conv-with-constant-weight semantics, as the hardware does it).
+pub fn avgpool_f32(input: &Tensor<f32>, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor<f32> {
+    let (c, hi, wi) = (input.shape[0], input.shape[1], input.shape[2]);
+    let ho = conv_out(hi, kh, stride, pad);
+    let wo = conv_out(wi, kw, stride, pad);
+    let inv = 1.0 / (kh * kw) as f32;
+    let mut out = Tensor::zeros(&[c, ho, wo]);
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0.0;
+                for fy in 0..kh {
+                    let iy = (oy * stride + fy) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        continue;
+                    }
+                    for fx in 0..kw {
+                        let ix = (ox * stride + fx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        acc += input.at3(ch, iy as usize, ix as usize);
+                    }
+                }
+                out.set3(ch, oy, ox, acc * inv);
+            }
+        }
+    }
+    out
+}
+
+/// Fixed-point average pooling as a MAC trace with the quantized 1/window
+/// weight — bit-exact with what the compiled CONV does on hardware.
+pub fn avgpool_q(
+    input: &Tensor<i16>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    fmt: QFormat,
+) -> Tensor<i16> {
+    let (c, hi, wi) = (input.shape[0], input.shape[1], input.shape[2]);
+    let ho = conv_out(hi, kh, stride, pad);
+    let wo = conv_out(wi, kw, stride, pad);
+    let inv_w = fmt.quantize(1.0 / (kh * kw) as f32);
+    let mut out = Tensor::zeros(&[c, ho, wo]);
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0i64;
+                for fy in 0..kh {
+                    let iy = (oy * stride + fy) as isize - pad as isize;
+                    if iy < 0 || iy >= hi as isize {
+                        continue;
+                    }
+                    for fx in 0..kw {
+                        let ix = (ox * stride + fx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        acc = mac_step(acc, input.at3(ch, iy as usize, ix as usize), inv_w);
+                    }
+                }
+                out.set3(ch, oy, ox, fmt.writeback(acc));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_8;
+    use crate::util::prop::for_cases;
+    use crate::util::rng::Rng;
+
+    fn rand_t3(rng: &mut Rng, c: usize, h: usize, w: usize) -> Tensor<f32> {
+        let mut t = Tensor::zeros(&[c, h, w]);
+        for v in t.data.iter_mut() {
+            *v = rng.f32_range(-2.0, 2.0);
+        }
+        t
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 5.0, -3.0, 2.0]);
+        let y = maxpool_f32(&x, 2, 2, 2, 0);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn maxpool_3x3_stride2_shape() {
+        let x: Tensor<f32> = Tensor::zeros(&[64, 55, 55]);
+        let y = maxpool_f32(&x, 3, 3, 2, 0);
+        assert_eq!(y.shape, vec![64, 27, 27]);
+    }
+
+    #[test]
+    fn maxpool_q_matches_f32() {
+        for_cases(30, 31, |rng| {
+            let (c, h, w) = (rng.range(1, 4), rng.range(4, 9), rng.range(4, 9));
+            let x = rand_t3(rng, c, h, w);
+            let stride = rng.range(1, 3);
+            let pad = rng.range(0, 2);
+            if h + 2 * pad < 3 || w + 2 * pad < 3 {
+                return;
+            }
+            let yf = maxpool_f32(&x, 3, 3, stride, pad);
+            let yq = maxpool_q(&x.quantize(Q8_8), 3, 3, stride, pad);
+            // Max commutes with monotone quantization.
+            assert_eq!(yq.data, yf.quantize(Q8_8).data);
+        });
+    }
+
+    #[test]
+    fn avgpool_known() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = avgpool_f32(&x, 2, 2, 2, 0);
+        assert_eq!(y.data, vec![2.5]);
+    }
+
+    #[test]
+    fn avgpool_q_tracks_f32() {
+        for_cases(30, 33, |rng| {
+            let (c, h, w) = (rng.range(1, 4), rng.range(7, 10), rng.range(7, 10));
+            let x = rand_t3(rng, c, h, w);
+            let yf = avgpool_f32(&x, 7, 7, 1, 0);
+            let yq = avgpool_q(&x.quantize(Q8_8), 7, 7, 1, 0, Q8_8).dequantize(Q8_8);
+            // 49 taps of eps-level noise.
+            let tol = Q8_8.epsilon() * 8.0;
+            assert!(yf.max_abs_diff(&yq) <= tol, "{}", yf.max_abs_diff(&yq));
+        });
+    }
+
+    #[test]
+    fn maxpool_padding_never_wins() {
+        // All-negative input with padding: padded cells are skipped, so
+        // outputs stay negative (not clamped to 0).
+        let x = Tensor::from_vec(&[1, 2, 2], vec![-1.0f32; 4]);
+        let y = maxpool_f32(&x, 3, 3, 2, 1);
+        assert!(y.data.iter().all(|&v| v == -1.0));
+        let yq = maxpool_q(&x.quantize(Q8_8), 3, 3, 2, 1);
+        assert!(yq.data.iter().all(|&v| v == Q8_8.quantize(-1.0)));
+    }
+}

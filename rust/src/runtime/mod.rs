@@ -1,0 +1,97 @@
+//! PJRT runtime: load AOT-compiled XLA computations (HLO **text**
+//! produced by `python/compile/aot.py`) and execute them natively from
+//! rust — the golden numerical model (L1 Pallas kernel + L2 jax graph)
+//! on the run path with Python long gone.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled artifact ready to execute on the CPU PJRT client.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// PJRT client wrapper; create once, load many artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact file and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+        Ok(Artifact {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl Artifact {
+    /// Execute with i16 tensors. The `xla` crate's literal API speaks
+    /// int32, so the AOT exports take/return int32 and cast to the int16
+    /// datapath internally; this wrapper widens/narrows losslessly.
+    pub fn run_i16(&self, inputs: &[(&[i16], &[usize])]) -> Result<Vec<Vec<i16>>> {
+        let widened: Vec<(Vec<i32>, &[usize])> = inputs
+            .iter()
+            .map(|(data, shape)| (data.iter().map(|&v| v as i32).collect(), *shape))
+            .collect();
+        let lits: Vec<xla::Literal> = widened
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.to_tuple()?;
+        tuple
+            .into_iter()
+            .map(|l| {
+                Ok(l.to_vec::<i32>()
+                    .context("read output")?
+                    .into_iter()
+                    .map(|v| v as i16)
+                    .collect())
+            })
+            .collect()
+    }
+
+    /// Execute with f32 tensors.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        tuple.into_iter().map(|l| l.to_vec::<f32>().context("read output")).collect()
+    }
+}
+
+/// Default artifact directory (built by `make artifacts`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SNOWFLAKE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,215 @@
+//! Compute-unit state: scratchpad buffers, vMAC accumulators, the pool
+//! unit's retained vector and the pending-vector-instruction queue.
+//!
+//! One `Cu` models §3's compute unit: 4 vMACs sharing a maps buffer,
+//! each with a private weight buffer, plus our bias/bypass buffer (the
+//! landing zone for VMOV operands). All operand registers of a vector
+//! instruction are resolved at dispatch (§3.1: the dispatch stage issues
+//! the register-file read), so queued ops carry concrete addresses.
+
+use super::scoreboard::RegionBoard;
+use crate::arch::SnowflakeConfig;
+use crate::isa::instr::{MacFlags, VmovSel};
+use std::collections::VecDeque;
+
+/// A vector instruction after dispatch: all register operands resolved.
+#[derive(Clone, Copy, Debug)]
+pub enum VecOp {
+    Mac {
+        coop: bool,
+        out_addr: i64,
+        m_addr: i64,
+        w_addr: i64,
+        len: u32,
+        flags: MacFlags,
+        /// R[28] at dispatch: output stride between vMACs / lanes.
+        vmac_stride: i64,
+        /// R[31] at dispatch: output stride between CUs.
+        cu_stride: i64,
+    },
+    Max {
+        out_addr: i64,
+        m_addr: i64,
+        lane_stride: i64,
+        wb_lanes: u32,
+        flags: MacFlags,
+        vmac_stride: i64,
+        cu_stride: i64,
+    },
+    Vmov { sel: VmovSel, wide: bool, addr: i64 },
+}
+
+impl VecOp {
+    /// Occupancy of the CU in cycles.
+    pub fn duration(&self, cfg: &SnowflakeConfig) -> u64 {
+        match self {
+            VecOp::Mac { len, flags, .. } => {
+                *len as u64 + if flags.writeback { cfg.gather_cycles } else { 0 }
+            }
+            VecOp::Max { .. } | VecOp::Vmov { .. } => 1,
+        }
+    }
+}
+
+/// A queued op plus the scoreboard generations it observed at dispatch
+/// (coherence check — §5.2: the compiler must guarantee previously
+/// issued vector instructions are done with a bank before reloading it).
+#[derive(Clone, Debug)]
+pub struct QueuedOp {
+    pub op: VecOp,
+    /// (region id, generation at dispatch) for every region read.
+    pub gens: Vec<(usize, u64)>,
+}
+
+/// One compute unit.
+pub struct Cu {
+    pub mbuf: Vec<i16>,
+    /// One weight buffer per vMAC.
+    pub wbuf: Vec<Vec<i16>>,
+    pub bbuf: Vec<i16>,
+    /// vMAC accumulators, 16 INDP lanes each (COOP uses lane 0).
+    pub acc: Vec<[i64; 16]>,
+    /// Bias preload (accumulator-scale) set by VMOV bias.
+    pub bias: Vec<[i64; 16]>,
+    /// Bypass operand set by VMOV bypass.
+    pub bypass: Vec<[i16; 16]>,
+    /// Pool unit retained vector.
+    pub retained: [i16; 16],
+    /// Pending vector instructions ("trace buffer").
+    pub queue: VecDeque<QueuedOp>,
+    /// Cycle at which the current op finishes (busy while now < this).
+    pub busy_until: u64,
+}
+
+impl Cu {
+    pub fn new(cfg: &SnowflakeConfig) -> Self {
+        Cu {
+            mbuf: vec![0; cfg.mbuf_bank_words() * cfg.mbuf_banks],
+            wbuf: vec![vec![0; cfg.wbuf_words()]; cfg.vmacs_per_cu],
+            bbuf: vec![0; cfg.bbuf_words()],
+            acc: vec![[0; 16]; cfg.vmacs_per_cu],
+            bias: vec![[0; 16]; cfg.vmacs_per_cu],
+            bypass: vec![[0; 16]; cfg.vmacs_per_cu],
+            retained: [i16::MIN; 16],
+            queue: VecDeque::new(),
+            busy_until: 0,
+        }
+    }
+}
+
+/// Region ids for the per-CU scoreboard. Layout (per CU):
+/// `[mbuf bank 0, mbuf bank 1, wbuf v0 r0, wbuf v0 r1, …, wbuf v3 r1, bbuf]`.
+pub fn region_count(cfg: &SnowflakeConfig) -> usize {
+    cfg.mbuf_banks + cfg.vmacs_per_cu * 2 + 1
+}
+
+pub fn mbuf_region(cfg: &SnowflakeConfig, addr: i64) -> usize {
+    let bank = (addr as usize / cfg.mbuf_bank_words()).min(cfg.mbuf_banks - 1);
+    bank
+}
+
+pub fn wbuf_region(cfg: &SnowflakeConfig, vmac: usize, addr: i64) -> usize {
+    let half = cfg.wbuf_words() / 2;
+    let r = (addr as usize / half).min(1);
+    cfg.mbuf_banks + vmac * 2 + r
+}
+
+pub fn bbuf_region(cfg: &SnowflakeConfig) -> usize {
+    cfg.mbuf_banks + cfg.vmacs_per_cu * 2
+}
+
+/// Regions a resolved op reads (for scoreboard checks).
+pub fn op_regions(cfg: &SnowflakeConfig, op: &VecOp) -> Vec<usize> {
+    match *op {
+        VecOp::Mac { coop, m_addr, w_addr, len, .. } => {
+            let mut rs = Vec::with_capacity(4);
+            let m_words = if coop { len as i64 * 16 } else { len as i64 };
+            rs.push(mbuf_region(cfg, m_addr));
+            let end_region = mbuf_region(cfg, m_addr + m_words.max(1) - 1);
+            if end_region != rs[0] {
+                rs.push(end_region);
+            }
+            // Weights: every vMAC reads the same offsets of its own wbuf;
+            // the (vmac, region) pairs share a region index per vmac.
+            let w_words = len as i64 * 16;
+            for v in 0..cfg.vmacs_per_cu {
+                let a = wbuf_region(cfg, v, w_addr);
+                let b = wbuf_region(cfg, v, w_addr + w_words.max(1) - 1);
+                rs.push(a);
+                if b != a {
+                    rs.push(b);
+                }
+            }
+            rs
+        }
+        VecOp::Max { m_addr, lane_stride, .. } => {
+            let mut rs = vec![mbuf_region(cfg, m_addr)];
+            let last = m_addr + lane_stride * 15;
+            let b = mbuf_region(cfg, last.max(m_addr));
+            if b != rs[0] {
+                rs.push(b);
+            }
+            rs
+        }
+        VecOp::Vmov { .. } => vec![bbuf_region(cfg)],
+    }
+}
+
+/// Snapshot scoreboard generations for the regions an op reads.
+pub fn observe_gens(board: &RegionBoard, regions: &[usize]) -> Vec<(usize, u64)> {
+    regions.iter().map(|&r| (r, board.generation(r))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_layout() {
+        let cfg = SnowflakeConfig::default();
+        assert_eq!(region_count(&cfg), 2 + 8 + 1);
+        assert_eq!(mbuf_region(&cfg, 0), 0);
+        assert_eq!(mbuf_region(&cfg, 32 * 1024), 1);
+        assert_eq!(wbuf_region(&cfg, 0, 0), 2);
+        assert_eq!(wbuf_region(&cfg, 0, 4096), 3);
+        assert_eq!(wbuf_region(&cfg, 3, 4095), 8);
+        assert_eq!(bbuf_region(&cfg), 10);
+    }
+
+    #[test]
+    fn mac_regions_cover_span() {
+        let cfg = SnowflakeConfig::default();
+        let op = VecOp::Mac {
+            coop: true,
+            out_addr: 0,
+            m_addr: 32 * 1024 - 8, // straddles both mbuf banks
+            w_addr: 4088,          // straddles both wbuf regions
+            len: 2,
+            flags: MacFlags::none(),
+            vmac_stride: 1,
+            cu_stride: 0,
+        };
+        let rs = op_regions(&cfg, &op);
+        assert!(rs.contains(&0) && rs.contains(&1), "{rs:?}");
+        // vmac 0 regions 2 and 3 both touched.
+        assert!(rs.contains(&2) && rs.contains(&3), "{rs:?}");
+    }
+
+    #[test]
+    fn durations() {
+        let cfg = SnowflakeConfig::default();
+        let mac = VecOp::Mac {
+            coop: true,
+            out_addr: 0,
+            m_addr: 0,
+            w_addr: 0,
+            len: 20,
+            flags: MacFlags { writeback: true, ..MacFlags::none() },
+            vmac_stride: 1,
+            cu_stride: 0,
+        };
+        assert_eq!(mac.duration(&cfg), 20 + cfg.gather_cycles);
+        let vmov = VecOp::Vmov { sel: VmovSel::Bias, wide: false, addr: 0 };
+        assert_eq!(vmov.duration(&cfg), 1);
+    }
+}

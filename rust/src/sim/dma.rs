@@ -1,0 +1,284 @@
+//! DMA load/store modelling: 4 load units sharing the board's AXI
+//! bandwidth (§3: "4 load/store units that access the host main memory
+//! through DMA using AXI protocol"; §6.2/§6.3: the 4.2 GB/s budget and
+//! its balance across units are first-order effects).
+//!
+//! Each active stream pays a fixed descriptor-setup latency, then the
+//! per-cycle AXI byte budget is fair-shared across all transferring
+//! streams plus the writeback drain. Completion events are returned to
+//! the machine, which applies the functional copy and releases the
+//! scoreboard region.
+
+use super::cu::Cu;
+use crate::arch::SnowflakeConfig;
+use std::collections::VecDeque;
+
+/// Where a stream lands.
+#[derive(Clone, Debug)]
+pub enum StreamDest {
+    /// Scratchpad fill: same buffer/address in every listed CU
+    /// (singleton = per-CU load, all CUs = broadcast).
+    Buffer {
+        cus: Vec<u8>,
+        kind: BufKind,
+        buf_addr: i64,
+        /// Region index (see `cu::op_regions`) for scoreboard release.
+        region: usize,
+        /// Fill generation per target CU (parallel to `cus`).
+        gens: Vec<u64>,
+    },
+    /// Instruction cache chunk load.
+    ICache { chunk: usize, bank: usize },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufKind {
+    WBuf(u8),
+    MBuf,
+    BBuf,
+}
+
+/// One DMA stream.
+#[derive(Clone, Debug)]
+pub struct Stream {
+    pub dest: StreamDest,
+    pub mem_addr: i64,
+    pub len_words: u64,
+    pub setup_left: u64,
+    pub bytes_left: f64,
+    pub unit: usize,
+}
+
+/// One load unit: an active stream plus a short descriptor queue.
+#[derive(Default)]
+pub struct LoadUnit {
+    pub active: Option<Stream>,
+    pub queue: VecDeque<Stream>,
+}
+
+impl LoadUnit {
+    const QUEUE_DEPTH: usize = 2;
+
+    pub fn can_accept(&self) -> bool {
+        self.queue.len() < Self::QUEUE_DEPTH
+    }
+
+    pub fn busy(&self) -> bool {
+        self.active.is_some() || !self.queue.is_empty()
+    }
+}
+
+/// The DMA subsystem: load units + store drain queue.
+pub struct Dma {
+    pub units: Vec<LoadUnit>,
+    /// Writeback bytes waiting to drain to DRAM.
+    pub store_bytes: f64,
+    /// CU writebacks stall when the store queue exceeds this.
+    pub store_cap_bytes: f64,
+    word_bytes: f64,
+    setup_cycles: u64,
+}
+
+impl Dma {
+    pub fn new(cfg: &SnowflakeConfig) -> Self {
+        Dma {
+            units: (0..cfg.n_load_units).map(|_| LoadUnit::default()).collect(),
+            store_bytes: 0.0,
+            store_cap_bytes: 8192.0,
+            word_bytes: cfg.word_bytes as f64,
+            setup_cycles: cfg.dma_setup_cycles,
+        }
+    }
+
+    /// Enqueue a stream on its unit. Caller must have checked
+    /// `can_accept`.
+    pub fn push(&mut self, mut s: Stream) {
+        s.setup_left = self.setup_cycles;
+        s.bytes_left = s.len_words as f64 * self.word_bytes;
+        let unit = s.unit;
+        self.units[unit].queue.push_back(s);
+    }
+
+    pub fn store_full(&self) -> bool {
+        self.store_bytes >= self.store_cap_bytes
+    }
+
+    pub fn idle(&self) -> bool {
+        self.units.iter().all(|u| !u.busy()) && self.store_bytes < 1.0
+    }
+
+    /// Advance one cycle; returns streams that completed this cycle.
+    /// `axi_bytes` is the total byte budget for the cycle.
+    pub fn tick(&mut self, axi_bytes: f64) -> Vec<Stream> {
+        // Promote queued streams into idle units.
+        for u in self.units.iter_mut() {
+            if u.active.is_none() {
+                u.active = u.queue.pop_front();
+            }
+        }
+        // Count participants in the bandwidth share: transferring loads
+        // (setup done) + the store drain when non-empty.
+        let mut transferring = 0usize;
+        for u in &self.units {
+            if let Some(s) = &u.active {
+                if s.setup_left == 0 {
+                    transferring += 1;
+                }
+            }
+        }
+        let storing = self.store_bytes > 0.0;
+        let participants = transferring + storing as usize;
+        let share = if participants > 0 { axi_bytes / participants as f64 } else { 0.0 };
+
+        let mut done = Vec::new();
+        for u in self.units.iter_mut() {
+            if let Some(s) = u.active.as_mut() {
+                if s.setup_left > 0 {
+                    s.setup_left -= 1;
+                } else {
+                    s.bytes_left -= share;
+                    if s.bytes_left <= 0.0 {
+                        done.push(u.active.take().unwrap());
+                        // Next queued stream starts next cycle.
+                    }
+                }
+            }
+        }
+        if storing {
+            self.store_bytes = (self.store_bytes - share).max(0.0);
+        }
+        done
+    }
+}
+
+/// Apply a completed buffer stream's functional copy: DRAM -> scratchpads.
+pub fn apply_copy(stream: &Stream, memory: &[i16], cus: &mut [Cu]) {
+    if let StreamDest::Buffer { cus: targets, kind, buf_addr, .. } = &stream.dest {
+        let src_lo = stream.mem_addr as usize;
+        let src_hi = src_lo + stream.len_words as usize;
+        let src = &memory[src_lo..src_hi];
+        for &c in targets {
+            let cu = &mut cus[c as usize];
+            let dst = match kind {
+                BufKind::WBuf(v) => &mut cu.wbuf[*v as usize],
+                BufKind::MBuf => &mut cu.mbuf,
+                BufKind::BBuf => &mut cu.bbuf,
+            };
+            let lo = *buf_addr as usize;
+            dst[lo..lo + src.len()].copy_from_slice(src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SnowflakeConfig {
+        SnowflakeConfig { dma_setup_cycles: 2, ..Default::default() }
+    }
+
+    fn stream(unit: usize, words: u64) -> Stream {
+        Stream {
+            dest: StreamDest::ICache { chunk: 0, bank: 0 },
+            mem_addr: 0,
+            len_words: words,
+            setup_left: 0,
+            bytes_left: 0.0,
+            unit,
+        }
+    }
+
+    #[test]
+    fn single_stream_timing() {
+        let c = cfg();
+        let mut d = Dma::new(&c);
+        d.push(stream(0, 168)); // 336 bytes @ 16.8 B/c = 20 cycles + 2 setup
+        let mut cycles = 0;
+        loop {
+            cycles += 1;
+            if !d.tick(c.axi_bytes_per_cycle).is_empty() {
+                break;
+            }
+            assert!(cycles < 1000);
+        }
+        // 1 promote cycle overlap: setup starts the same cycle it's
+        // promoted; expect 2 setup + 20 transfer = 22.
+        assert_eq!(cycles, 22);
+        assert!(d.idle());
+    }
+
+    #[test]
+    fn bandwidth_is_shared() {
+        let c = cfg();
+        // Two equal streams on different units take ~2x as long as one.
+        let mut d = Dma::new(&c);
+        d.push(stream(0, 168));
+        d.push(stream(1, 168));
+        let mut done = 0;
+        let mut cycles = 0;
+        while done < 2 {
+            cycles += 1;
+            done += d.tick(c.axi_bytes_per_cycle).len();
+            assert!(cycles < 1000);
+        }
+        // ~2x a single stream (q-promotion staggers by a cycle).
+        assert!((42..=44).contains(&cycles), "{cycles}");
+    }
+
+    #[test]
+    fn queue_depth_limits() {
+        let c = cfg();
+        let mut d = Dma::new(&c);
+        assert!(d.units[0].can_accept());
+        d.push(stream(0, 16));
+        d.push(stream(0, 16));
+        assert!(!d.units[0].can_accept());
+        // After a tick the first stream becomes active, freeing a slot.
+        d.tick(c.axi_bytes_per_cycle);
+        assert!(d.units[0].can_accept());
+    }
+
+    #[test]
+    fn store_drain_shares_bandwidth() {
+        let c = cfg();
+        let mut d = Dma::new(&c);
+        d.store_bytes = 168.0;
+        d.push(stream(0, 168));
+        // While both a load and the store drain are active they each get
+        // half of 16.8 B/cycle.
+        let mut cycles = 0;
+        while !d.idle() {
+            d.tick(c.axi_bytes_per_cycle);
+            cycles += 1;
+            assert!(cycles < 100);
+        }
+        // store: 168 bytes at 8.4 -> 20 cycles; load setup 2 then shares.
+        assert!(cycles >= 20, "{cycles}");
+    }
+
+    #[test]
+    fn apply_copy_broadcast() {
+        let c = SnowflakeConfig::default();
+        let mut cus: Vec<Cu> = (0..2).map(|_| Cu::new(&c)).collect();
+        let memory: Vec<i16> = (0..100).collect();
+        let s = Stream {
+            dest: StreamDest::Buffer {
+                cus: vec![0, 1],
+                kind: BufKind::MBuf,
+                buf_addr: 10,
+                region: 0,
+                gens: vec![1, 1],
+            },
+            mem_addr: 5,
+            len_words: 8,
+            setup_left: 0,
+            bytes_left: 0.0,
+            unit: 0,
+        };
+        apply_copy(&s, &memory, &mut cus);
+        for cu in &cus {
+            assert_eq!(&cu.mbuf[10..18], &[5, 6, 7, 8, 9, 10, 11, 12]);
+        }
+    }
+}

@@ -1,0 +1,703 @@
+//! Cycle-level Snowflake simulator — the substitution for the paper's
+//! Xilinx Zynq XC7Z045 testbed (DESIGN.md §Substitutions).
+//!
+//! Models, per §3/§3.1/§4:
+//! * the 5-stage control pipeline's *visible* timing: 1 instruction
+//!   issued per cycle, 2-cycle scalar execute (RAW ⇒ decode stall),
+//!   4-cycle branches with 4 delay slots;
+//! * 4 CUs × 4 vMACs × 16 MACs consuming vector instructions from
+//!   per-CU queues (starved queue = CU stall, §5.2);
+//! * double-banked 64 KB maps buffers, 8 KB per-vMAC weight buffers,
+//!   bias/bypass buffers, with region scoreboards gating compute on DMA
+//!   completion (double buffering);
+//! * a double-banked 512-instruction icache with in-flight bank reloads;
+//! * 4 DMA load units fair-sharing the 4.2 GB/s AXI budget, plus a
+//!   writeback drain ([`dma`]);
+//! * the full *functional* semantics of every instruction, so compiled
+//!   programs produce real output maps in simulated DRAM that are
+//!   checked word-for-word against [`crate::refimpl`] and the PJRT
+//!   golden model.
+
+pub mod cu;
+pub mod dma;
+pub mod scoreboard;
+pub mod stats;
+
+use crate::arch::SnowflakeConfig;
+use crate::fixed::{relu_q, sat_add, QFormat};
+use crate::isa::instr::{Instr, LdTarget, VmovSel};
+use cu::{observe_gens, op_regions, Cu, QueuedOp, VecOp};
+use dma::{apply_copy, BufKind, Dma, Stream, StreamDest};
+use scoreboard::RegionBoard;
+use stats::Stats;
+
+/// Simulation failure: a program bug the hardware would not forgive.
+#[derive(Debug, Clone)]
+pub struct SimError {
+    pub cycle: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cycle {}: {}", self.cycle, self.message)
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// The simulated machine.
+pub struct Machine {
+    pub cfg: SnowflakeConfig,
+    pub fmt: QFormat,
+    pub memory: Vec<i16>,
+    pub regs: [i64; 32],
+    reg_ready: [u64; 32],
+
+    stream: Vec<Instr>,
+    loaded_chunk: Vec<i64>,
+    pc: usize,
+    halted: bool,
+    /// (target pc, delay slots still to issue, taken).
+    branch: Option<(i64, u8, bool)>,
+
+    pub cus: Vec<Cu>,
+    boards: Vec<RegionBoard>,
+    dma: Dma,
+    pub stats: Stats,
+    /// Cycles without forward progress before declaring deadlock.
+    pub watchdog: u64,
+    now: u64,
+    progress_mark: u64,
+    last_progress: u64,
+}
+
+impl Machine {
+    /// Create a machine with `mem_words` of DRAM.
+    pub fn new(cfg: SnowflakeConfig, fmt: QFormat, mem_words: usize) -> Self {
+        let cus = (0..cfg.n_cus).map(|_| Cu::new(&cfg)).collect();
+        let boards = (0..cfg.n_cus).map(|_| RegionBoard::new(cu::region_count(&cfg))).collect();
+        Machine {
+            fmt,
+            memory: vec![0; mem_words],
+            regs: [0; 32],
+            reg_ready: [0; 32],
+            stream: Vec::new(),
+            loaded_chunk: vec![-1; cfg.icache_banks],
+            pc: 0,
+            halted: false,
+            branch: None,
+            cus,
+            boards,
+            dma: Dma::new(&cfg),
+            stats: Stats::new(&cfg),
+            watchdog: 8_000_000,
+            now: 0,
+            progress_mark: 0,
+            last_progress: 0,
+            cfg,
+        }
+    }
+
+    /// Write words into DRAM (deployment).
+    pub fn write_words(&mut self, addr: usize, words: &[i16]) {
+        self.memory[addr..addr + words.len()].copy_from_slice(words);
+    }
+
+    /// Read words back (result extraction).
+    pub fn read_words(&self, addr: usize, len: usize) -> &[i16] {
+        &self.memory[addr..addr + len]
+    }
+
+    /// Load a program: the decoded stream plus its encoded image already
+    /// placed in DRAM by the deployer. Banks 0..icache_banks are
+    /// preloaded (the paper's initial configuration-register load).
+    pub fn load_program(&mut self, stream: Vec<Instr>) {
+        for b in 0..self.cfg.icache_banks {
+            self.loaded_chunk[b] = b as i64;
+        }
+        self.stream = stream;
+        self.pc = 0;
+        self.halted = false;
+    }
+
+    /// Run to completion. Returns stats on success.
+    pub fn run(&mut self) -> Result<Stats, SimError> {
+        let watchdog = self.watchdog;
+        let mut idle_window = 0u64;
+        loop {
+            // 1. DMA completions (data ready the same cycle).
+            let done = self.dma.tick(self.cfg.axi_bytes_per_cycle);
+            for s in done {
+                self.complete_stream(&s);
+                self.progress_mark += 1;
+            }
+            // 2. Issue stage.
+            self.issue()?;
+            // 3. CU execution.
+            self.tick_cus()?;
+
+            self.now += 1;
+            self.stats.cycles = self.now;
+
+            if self.halted && self.all_cus_drained() && self.dma.idle() {
+                return Ok(self.stats.clone());
+            }
+            if self.progress_mark != self.last_progress {
+                self.last_progress = self.progress_mark;
+                idle_window = 0;
+            } else {
+                idle_window += 1;
+                if idle_window > watchdog {
+                    return Err(self.deadlock_report());
+                }
+            }
+        }
+    }
+
+    fn deadlock_report(&self) -> SimError {
+        let mut msg = format!(
+            "no forward progress: pc={} halted={} loaded_chunks={:?}",
+            self.pc, self.halted, self.loaded_chunk
+        );
+        for (i, c) in self.cus.iter().enumerate() {
+            msg.push_str(&format!(" cu{i}[queue={} busy_until={}]", c.queue.len(), c.busy_until));
+            if let Some(q) = c.queue.front() {
+                msg.push_str(&format!(" front={:?}", q.op));
+            }
+        }
+        SimError { cycle: self.now, message: msg }
+    }
+
+    fn all_cus_drained(&self) -> bool {
+        self.cus.iter().all(|c| c.queue.is_empty() && c.busy_until <= self.now)
+    }
+
+    // ------------------------------------------------------------------
+    // Issue stage
+    // ------------------------------------------------------------------
+
+    fn issue(&mut self) -> Result<(), SimError> {
+        if self.halted {
+            return Ok(());
+        }
+        // Fetch: icache chunk check.
+        let bank_sz = self.cfg.icache_bank_instrs;
+        let chunk = self.pc / bank_sz;
+        let bank = chunk % self.cfg.icache_banks;
+        if self.loaded_chunk[bank] != chunk as i64 {
+            self.stats.stall_fetch += 1;
+            return Ok(());
+        }
+        if self.pc >= self.stream.len() {
+            return Err(SimError {
+                cycle: self.now,
+                message: format!(
+                    "pc {} ran off the end of the stream ({})",
+                    self.pc,
+                    self.stream.len()
+                ),
+            });
+        }
+        let instr = self.stream[self.pc];
+
+        // Register-read interlock (2-cycle scalar execute).
+        for r in instr.reads() {
+            if self.reg_ready[r as usize] > self.now {
+                self.stats.stall_raw += 1;
+                return Ok(());
+            }
+        }
+
+        let issued = match instr {
+            Instr::Mov { .. }
+            | Instr::Movi { .. }
+            | Instr::Add { .. }
+            | Instr::Addi { .. }
+            | Instr::Mul { .. }
+            | Instr::Muli { .. } => {
+                self.exec_scalar(&instr);
+                self.stats.issued_scalar += 1;
+                true
+            }
+            Instr::Ble { rs1, rs2, off } => {
+                self.issue_branch(self.regs[rs1 as usize] <= self.regs[rs2 as usize], off)
+            }
+            Instr::Bgt { rs1, rs2, off } => {
+                self.issue_branch(self.regs[rs1 as usize] > self.regs[rs2 as usize], off)
+            }
+            Instr::Beq { rs1, rs2, off } => {
+                self.issue_branch(self.regs[rs1 as usize] == self.regs[rs2 as usize], off)
+            }
+            Instr::Mac { .. } | Instr::Max { .. } | Instr::Vmov { .. } => {
+                if self.cus.iter().any(|c| c.queue.len() >= self.cfg.vector_queue_depth) {
+                    self.stats.stall_queue_full += 1;
+                    false
+                } else {
+                    self.dispatch_vector(&instr);
+                    self.stats.issued_vector += 1;
+                    true
+                }
+            }
+            Instr::Ld { .. } => self.dispatch_ld(&instr)?,
+            Instr::Halt => {
+                self.halted = true;
+                true
+            }
+        };
+
+        if issued {
+            self.stats.issued += 1;
+            self.progress_mark += 1;
+            self.pc += 1;
+            // Branch delay-slot bookkeeping: a branch sets slots; each
+            // subsequently issued instruction consumes one.
+            if let Some((target, slots, taken)) = self.branch {
+                if slots == 0 {
+                    // The branch instruction itself (just issued).
+                    self.branch = Some((target, self.cfg.branch_delay_slots as u8, taken));
+                } else {
+                    let left = slots - 1;
+                    if left == 0 {
+                        if taken {
+                            self.pc = target as usize;
+                        }
+                        self.branch = None;
+                    } else {
+                        self.branch = Some((target, left, taken));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn issue_branch(&mut self, taken: bool, off: i16) -> bool {
+        debug_assert!(self.branch.is_none(), "branch in delay slots (verifier bug)");
+        let target = self.pc as i64 + off as i64;
+        self.branch = Some((target, 0, taken));
+        self.stats.issued_branch += 1;
+        true
+    }
+
+    fn exec_scalar(&mut self, i: &Instr) {
+        let (rd, val) = match *i {
+            Instr::Mov { rd, rs1, sh } => (rd, self.regs[rs1 as usize] << sh),
+            Instr::Movi { rd, imm } => (rd, imm as i64),
+            Instr::Add { rd, rs1, rs2 } => (rd, self.regs[rs1 as usize] + self.regs[rs2 as usize]),
+            Instr::Addi { rd, rs1, imm } => (rd, self.regs[rs1 as usize] + imm as i64),
+            Instr::Mul { rd, rs1, rs2 } => (rd, self.regs[rs1 as usize] * self.regs[rs2 as usize]),
+            Instr::Muli { rd, rs1, imm } => (rd, self.regs[rs1 as usize] * imm as i64),
+            _ => unreachable!(),
+        };
+        if rd != 0 {
+            self.regs[rd as usize] = val;
+            self.reg_ready[rd as usize] = self.now + self.cfg.scalar_exec_cycles;
+        }
+    }
+
+    fn dispatch_vector(&mut self, i: &Instr) {
+        let op = match *i {
+            Instr::Mac { coop, rd, rs1, rs2, len, flags } => VecOp::Mac {
+                coop,
+                out_addr: self.regs[rd as usize],
+                m_addr: self.regs[rs1 as usize],
+                w_addr: self.regs[rs2 as usize],
+                len: len as u32,
+                flags,
+                vmac_stride: self.regs[28],
+                cu_stride: self.regs[31],
+            },
+            Instr::Max { rd, rs1, rs2, wb_lanes, flags } => VecOp::Max {
+                out_addr: self.regs[rd as usize],
+                m_addr: self.regs[rs1 as usize],
+                lane_stride: self.regs[rs2 as usize],
+                wb_lanes: if wb_lanes == 0 { 16 } else { wb_lanes as u32 },
+                flags,
+                vmac_stride: self.regs[28],
+                cu_stride: self.regs[31],
+            },
+            Instr::Vmov { sel, rs1, wide } => {
+                VecOp::Vmov { sel, wide, addr: self.regs[rs1 as usize] }
+            }
+            _ => unreachable!(),
+        };
+        let regions = op_regions(&self.cfg, &op);
+        for c in 0..self.cus.len() {
+            let gens = observe_gens(&self.boards[c], &regions);
+            self.cus[c].queue.push_back(QueuedOp { op, gens });
+        }
+    }
+
+    /// Would a load into `region` of the given CUs overwrite data that a
+    /// still-queued vector instruction needs? (The load unit's region
+    /// interlock: §5.2's coherence rule in hardware form.)
+    fn region_in_use(&self, cus_mask: Option<u8>, region: usize) -> bool {
+        for (c, cu) in self.cus.iter().enumerate() {
+            if let Some(only) = cus_mask {
+                if c != only as usize {
+                    continue;
+                }
+            }
+            for q in &cu.queue {
+                if q.gens.iter().any(|&(r, _)| r == region) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn dispatch_ld(&mut self, i: &Instr) -> Result<bool, SimError> {
+        let Instr::Ld { target, broadcast, unit, rd, rs1, rs2 } = *i else { unreachable!() };
+        if !self.dma.units[unit as usize].can_accept() {
+            self.stats.stall_ld_unit += 1;
+            return Ok(false);
+        }
+        // Region interlock: stall the LD while queued (not yet started)
+        // vector instructions still reference the target region.
+        {
+            let buf_addr = self.regs[rd as usize];
+            let only = if broadcast { None } else { Some(match target {
+                LdTarget::WBuf { cu, .. } | LdTarget::MBuf { cu, .. } | LdTarget::BBuf { cu } => cu,
+                LdTarget::ICache { .. } => 0,
+            }) };
+            let region = match target {
+                LdTarget::WBuf { vmac, .. } => Some(cu::wbuf_region(&self.cfg, vmac as usize, buf_addr.max(0))),
+                LdTarget::MBuf { .. } => Some(cu::mbuf_region(&self.cfg, buf_addr.max(0))),
+                LdTarget::BBuf { .. } => Some(cu::bbuf_region(&self.cfg)),
+                LdTarget::ICache { .. } => None,
+            };
+            if let Some(r) = region {
+                // RAW side: queued vector instructions still need it.
+                if self.region_in_use(only, r) {
+                    self.stats.stall_coherence += 1;
+                    return Ok(false);
+                }
+                // WAW side: an in-flight fill overlapping the same words.
+                let (lo, hi) = (buf_addr, buf_addr + self.regs[rs2 as usize].max(0));
+                let waw = self.boards.iter().enumerate().any(|(c, b)| {
+                    only.map_or(true, |o| c == o as usize) && b.overlaps_outstanding(r, lo, hi)
+                });
+                if waw {
+                    self.stats.stall_coherence += 1;
+                    return Ok(false);
+                }
+            }
+        }
+        let buf_addr = self.regs[rd as usize];
+        let mem_addr = self.regs[rs1 as usize];
+        let len = self.regs[rs2 as usize];
+        if len <= 0 {
+            return Err(SimError {
+                cycle: self.now,
+                message: format!("LD with non-positive length {len} at pc {}", self.pc),
+            });
+        }
+
+        let all_cus = || (0..self.cfg.n_cus as u8).collect::<Vec<u8>>();
+        let (dest, len_words) = match target {
+            LdTarget::ICache { .. } => {
+                let chunk = (buf_addr as usize) / self.cfg.icache_bank_instrs;
+                let bank = chunk % self.cfg.icache_banks;
+                // Invalidate the bank while the reload is in flight.
+                self.loaded_chunk[bank] = -1;
+                (StreamDest::ICache { chunk, bank }, len as u64 * 2)
+            }
+            LdTarget::WBuf { cu, vmac } => {
+                let cus = if broadcast { all_cus() } else { vec![cu] };
+                let region = cu::wbuf_region(&self.cfg, vmac as usize, buf_addr);
+                self.check_buf_bounds("wbuf", buf_addr, len, self.cfg.wbuf_words())?;
+                let gens: Vec<u64> = cus
+                    .iter()
+                    .map(|&c| self.boards[c as usize].begin_fill(region, buf_addr, buf_addr + len))
+                    .collect();
+                (
+                    StreamDest::Buffer { cus, kind: BufKind::WBuf(vmac), buf_addr, region, gens },
+                    len as u64,
+                )
+            }
+            LdTarget::MBuf { cu, .. } => {
+                let cus = if broadcast { all_cus() } else { vec![cu] };
+                let region = cu::mbuf_region(&self.cfg, buf_addr);
+                self.check_buf_bounds(
+                    "mbuf",
+                    buf_addr,
+                    len,
+                    self.cfg.mbuf_bank_words() * self.cfg.mbuf_banks,
+                )?;
+                let gens: Vec<u64> = cus
+                    .iter()
+                    .map(|&c| self.boards[c as usize].begin_fill(region, buf_addr, buf_addr + len))
+                    .collect();
+                (
+                    StreamDest::Buffer { cus, kind: BufKind::MBuf, buf_addr, region, gens },
+                    len as u64,
+                )
+            }
+            LdTarget::BBuf { cu } => {
+                let cus = if broadcast { all_cus() } else { vec![cu] };
+                let region = cu::bbuf_region(&self.cfg);
+                self.check_buf_bounds("bbuf", buf_addr, len, self.cfg.bbuf_words())?;
+                let gens: Vec<u64> = cus
+                    .iter()
+                    .map(|&c| self.boards[c as usize].begin_fill(region, buf_addr, buf_addr + len))
+                    .collect();
+                (
+                    StreamDest::Buffer { cus, kind: BufKind::BBuf, buf_addr, region, gens },
+                    len as u64,
+                )
+            }
+        };
+        if mem_addr < 0 || (mem_addr as usize + len_words as usize) > self.memory.len() {
+            return Err(SimError {
+                cycle: self.now,
+                message: format!(
+                    "LD out of DRAM bounds: addr={mem_addr} len={len_words} mem={}",
+                    self.memory.len()
+                ),
+            });
+        }
+        let bytes = len_words * self.cfg.word_bytes as u64;
+        self.stats.unit_bytes[unit as usize] += bytes;
+        self.dma.push(Stream {
+            dest,
+            mem_addr,
+            len_words,
+            setup_left: 0,
+            bytes_left: 0.0,
+            unit: unit as usize,
+        });
+        self.stats.issued_ld += 1;
+        Ok(true)
+    }
+
+    fn check_buf_bounds(&self, name: &str, addr: i64, len: i64, cap: usize) -> Result<(), SimError> {
+        if addr < 0 || (addr + len) as usize > cap {
+            return Err(SimError {
+                cycle: self.now,
+                message: format!("LD {name} out of bounds: addr={addr} len={len} cap={cap}"),
+            });
+        }
+        Ok(())
+    }
+
+    fn complete_stream(&mut self, s: &Stream) {
+        match &s.dest {
+            StreamDest::ICache { chunk, bank } => {
+                self.loaded_chunk[*bank] = *chunk as i64;
+                self.stats.icache_loads += 1;
+            }
+            StreamDest::Buffer { cus, region, gens, .. } => {
+                apply_copy(s, &self.memory, &mut self.cus);
+                for (&c, &g) in cus.iter().zip(gens) {
+                    self.boards[c as usize].set_ready(*region, g, self.now);
+                }
+            }
+        }
+        self.stats.unit_streams[s.unit] += 1;
+    }
+
+    // ------------------------------------------------------------------
+    // CU execution
+    // ------------------------------------------------------------------
+
+    fn tick_cus(&mut self) -> Result<(), SimError> {
+        for c in 0..self.cus.len() {
+            if self.cus[c].busy_until > self.now {
+                self.stats.cu_busy[c] += 1;
+                continue;
+            }
+            let Some(front) = self.cus[c].queue.front() else {
+                if !self.halted {
+                    self.stats.cu_starved[c] += 1;
+                }
+                continue;
+            };
+            // Scoreboard + coherence (§5.2). For each region this op
+            // reads, with `g` = generation at dispatch:
+            //  * a *newer completed* fill means the data was overwritten
+            //    before this reader started — the hazard the compiler
+            //    must prevent;
+            //  * same generation: wait for the fill to land;
+            //  * newer fill still in flight: old data intact — proceed.
+            let mut wait = false;
+            for &(r, g) in &front.gens {
+                let board = &self.boards[c];
+                if board.overwritten_after(r, g) {
+                    return Err(SimError {
+                        cycle: self.now,
+                        message: format!(
+                            "coherence hazard on cu{c} region {r}: buffer reloaded and filled \
+                             before a previously issued vector instruction consumed it"
+                        ),
+                    });
+                }
+                if !board.done_upto(r, g) {
+                    wait = true;
+                }
+            }
+            if wait {
+                self.stats.cu_data_stall[c] += 1;
+                continue;
+            }
+            let needs_store = match &front.op {
+                VecOp::Mac { flags, .. } => flags.writeback,
+                VecOp::Max { flags, .. } => flags.writeback,
+                VecOp::Vmov { .. } => false,
+            };
+            if needs_store && self.dma.store_full() {
+                self.stats.cu_store_stall[c] += 1;
+                continue;
+            }
+            let q = self.cus[c].queue.pop_front().unwrap();
+            let dur = q.op.duration(&self.cfg);
+            self.cus[c].busy_until = self.now + dur;
+            self.stats.cu_busy[c] += 1; // this cycle; the rest count above
+            self.progress_mark += 1;
+            self.exec_vec(c, &q.op)?;
+        }
+        Ok(())
+    }
+
+    fn exec_vec(&mut self, c: usize, op: &VecOp) -> Result<(), SimError> {
+        let lanes = self.cfg.macs_per_vmac;
+        let vmacs = self.cfg.vmacs_per_cu;
+        match *op {
+            VecOp::Mac { coop, out_addr, m_addr, w_addr, len, flags, vmac_stride, cu_stride } => {
+                let m_words = if coop { len as usize * lanes } else { len as usize };
+                let w_words = len as usize * lanes;
+                let mlen = self.cus[c].mbuf.len();
+                let wlen = self.cus[c].wbuf[0].len();
+                if m_addr < 0 || m_addr as usize + m_words > mlen {
+                    return Err(self.oob(c, "MAC mbuf", m_addr, m_words));
+                }
+                if w_addr < 0 || w_addr as usize + w_words > wlen {
+                    return Err(self.oob(c, "MAC wbuf", w_addr, w_words));
+                }
+                let cu = &mut self.cus[c];
+                for v in 0..vmacs {
+                    if flags.reset {
+                        cu.acc[v] = cu.bias[v];
+                    }
+                    let w = &cu.wbuf[v][w_addr as usize..w_addr as usize + w_words];
+                    let m = &cu.mbuf[m_addr as usize..m_addr as usize + m_words];
+                    if coop {
+                        let mut acc = cu.acc[v][0];
+                        for (mv, wv) in m.iter().zip(w) {
+                            acc += *mv as i64 * *wv as i64;
+                        }
+                        cu.acc[v][0] = acc;
+                    } else {
+                        for (t, mv) in m.iter().enumerate() {
+                            let wrow = &w[t * lanes..(t + 1) * lanes];
+                            for (l, wv) in wrow.iter().enumerate() {
+                                cu.acc[v][l] += *mv as i64 * *wv as i64;
+                            }
+                        }
+                    }
+                }
+                self.stats.mac_ops += (len as u64) * lanes as u64 * vmacs as u64;
+                if flags.writeback {
+                    let out_lanes = if coop { 1 } else { lanes };
+                    let mut stores: Vec<(i64, i16)> = Vec::with_capacity(vmacs * out_lanes);
+                    let cu = &self.cus[c];
+                    for v in 0..vmacs {
+                        for l in 0..out_lanes {
+                            let mut val = self.fmt.writeback(cu.acc[v][l]);
+                            if flags.bypass {
+                                val = sat_add(val, cu.bypass[v][l]);
+                            }
+                            if flags.relu {
+                                val = relu_q(val);
+                            }
+                            let idx = (v * out_lanes + l) as i64;
+                            let addr = out_addr + c as i64 * cu_stride + idx * vmac_stride;
+                            stores.push((addr, val));
+                        }
+                    }
+                    self.apply_stores(c, &stores)?;
+                }
+            }
+            VecOp::Max { out_addr, m_addr, lane_stride, wb_lanes, flags, vmac_stride, cu_stride } => {
+                let mlen = self.cus[c].mbuf.len() as i64;
+                let last = m_addr + lane_stride * (lanes as i64 - 1);
+                if m_addr < 0 || last < 0 || m_addr >= mlen || last >= mlen {
+                    return Err(self.oob(c, "MAX mbuf", m_addr, lanes));
+                }
+                let cu = &mut self.cus[c];
+                if flags.reset {
+                    cu.retained = [i16::MIN; 16];
+                }
+                for l in 0..lanes {
+                    let v = cu.mbuf[(m_addr + l as i64 * lane_stride) as usize];
+                    if v > cu.retained[l] {
+                        cu.retained[l] = v;
+                    }
+                }
+                self.stats.max_ops += lanes as u64;
+                if flags.writeback {
+                    let retained = self.cus[c].retained;
+                    let stores: Vec<(i64, i16)> = (0..wb_lanes as usize)
+                        .map(|l| {
+                            (out_addr + c as i64 * cu_stride + l as i64 * vmac_stride, retained[l])
+                        })
+                        .collect();
+                    self.apply_stores(c, &stores)?;
+                    self.cus[c].retained = [i16::MIN; 16];
+                }
+            }
+            VecOp::Vmov { sel, wide, addr } => {
+                let need = if wide { vmacs * lanes } else { vmacs };
+                let blen = self.cus[c].bbuf.len();
+                if addr < 0 || addr as usize + need > blen {
+                    return Err(self.oob(c, "VMOV bbuf", addr, need));
+                }
+                let frac = self.fmt.frac;
+                let cu = &mut self.cus[c];
+                for v in 0..vmacs {
+                    for l in 0..lanes {
+                        let word = if wide {
+                            cu.bbuf[addr as usize + v * lanes + l]
+                        } else if l == 0 {
+                            cu.bbuf[addr as usize + v]
+                        } else {
+                            0
+                        };
+                        match sel {
+                            VmovSel::Bias => cu.bias[v][l] = (word as i64) << frac,
+                            VmovSel::Bypass => cu.bypass[v][l] = word,
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_stores(&mut self, c: usize, stores: &[(i64, i16)]) -> Result<(), SimError> {
+        for &(addr, val) in stores {
+            if addr < 0 || addr as usize >= self.memory.len() {
+                return Err(SimError {
+                    cycle: self.now,
+                    message: format!("cu{c} writeback out of DRAM bounds: addr={addr}"),
+                });
+            }
+            self.memory[addr as usize] = val;
+        }
+        let bytes = (stores.len() * self.cfg.word_bytes) as f64;
+        self.dma.store_bytes += bytes;
+        self.stats.bytes_stored += bytes as u64;
+        Ok(())
+    }
+
+    fn oob(&self, c: usize, what: &str, addr: i64, len: usize) -> SimError {
+        SimError {
+            cycle: self.now,
+            message: format!("cu{c} {what} read out of bounds: addr={addr} len={len}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

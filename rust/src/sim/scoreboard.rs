@@ -1,0 +1,145 @@
+//! Buffer-region scoreboard: tracks DMA fills per scratchpad region,
+//! giving the load/compute overlap its timing teeth (double buffering,
+//! §3) and the coherence rule its functional teeth (§5.2).
+//!
+//! Coherence semantics (hardware-realistic): a vector op that observed
+//! fill-generation `g` at dispatch
+//! * must wait until **every** fill with generation ≤ `g` has landed
+//!   (fills may complete out of order when strips are split across load
+//!   units for balance, §6.3);
+//! * may start while *newer* fills are still in flight — it reads the
+//!   old data, which is intact until the newer DMA completes;
+//! * is corrupted exactly when a fill with generation > `g` has already
+//!   completed — the hazard the compiler must prevent and the machine
+//!   reports.
+
+/// Per-CU set of buffer regions.
+#[derive(Clone, Debug)]
+pub struct RegionBoard {
+    /// Fills dispatched so far (generation counter).
+    started: Vec<u64>,
+    /// Fills still in flight, per region: (generation, lo, hi) buffer
+    /// word ranges (short lists).
+    outstanding: Vec<Vec<(u64, i64, i64)>>,
+    /// Highest completed generation.
+    max_completed: Vec<u64>,
+}
+
+impl RegionBoard {
+    pub fn new(regions: usize) -> Self {
+        RegionBoard {
+            started: vec![0; regions],
+            outstanding: vec![Vec::new(); regions],
+            max_completed: vec![0; regions],
+        }
+    }
+
+    /// A load into `region` over buffer words `[lo, hi)` was dispatched.
+    /// Returns its generation.
+    pub fn begin_fill(&mut self, region: usize, lo: i64, hi: i64) -> u64 {
+        self.started[region] += 1;
+        let gen = self.started[region];
+        self.outstanding[region].push((gen, lo, hi));
+        gen
+    }
+
+    /// The DMA stream of generation `gen` filling `region` completed.
+    pub fn set_ready(&mut self, region: usize, gen: u64, _cycle: u64) {
+        self.outstanding[region].retain(|&(g, _, _)| g != gen);
+        if gen > self.max_completed[region] {
+            self.max_completed[region] = gen;
+        }
+    }
+
+    /// All fills with generation ≤ `gen` have landed.
+    pub fn done_upto(&self, region: usize, gen: u64) -> bool {
+        self.outstanding[region].iter().all(|&(g, _, _)| g > gen)
+    }
+
+    /// A fill newer than `gen` has already completed (reader corrupted).
+    pub fn overwritten_after(&self, region: usize, gen: u64) -> bool {
+        self.max_completed[region] > gen
+    }
+
+    /// An in-flight fill overlaps `[lo, hi)` (WAW interlock: a new DMA
+    /// must not start over words another is still writing, or completion
+    /// order would scramble the data — disjoint concurrent fills of one
+    /// region are fine, e.g. a maps strip split across units, §6.3).
+    pub fn overlaps_outstanding(&self, region: usize, lo: i64, hi: i64) -> bool {
+        self.outstanding[region].iter().any(|&(_, l, h)| lo < h && l < hi)
+    }
+
+    pub fn generation(&self, region: usize) -> u64 {
+        self.started[region]
+    }
+
+    pub fn regions(&self) -> usize {
+        self.started.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_order_completion_gates_readers() {
+        let mut b = RegionBoard::new(1);
+        let g1 = b.begin_fill(0, 0, 10);
+        let g2 = b.begin_fill(0, 10, 20);
+        // Reader observed g2 (needs both pieces). Newer piece lands
+        // first: still not done up to g2.
+        b.set_ready(0, g2, 10);
+        assert!(!b.done_upto(0, g2));
+        // Older piece lands: now done.
+        b.set_ready(0, g1, 20);
+        assert!(b.done_upto(0, g2));
+        assert!(!b.overwritten_after(0, g2));
+    }
+
+    #[test]
+    fn overwrite_detection() {
+        let mut b = RegionBoard::new(1);
+        let g1 = b.begin_fill(0, 0, 10);
+        assert!(b.done_upto(0, 0)); // reader from before any fill
+        b.set_ready(0, g1, 5);
+        // A reader that observed gen 0 now sees overwritten data.
+        assert!(b.overwritten_after(0, 0));
+        assert!(!b.overwritten_after(0, g1));
+    }
+
+    #[test]
+    fn in_flight_newer_fill_does_not_block_old_reader() {
+        let mut b = RegionBoard::new(1);
+        let g1 = b.begin_fill(0, 0, 10);
+        b.set_ready(0, g1, 5);
+        let _g2 = b.begin_fill(0, 0, 10);
+        // Old reader (gen g1): done up to g1 (g2 in flight doesn't gate),
+        // not overwritten (g2 not completed).
+        assert!(b.done_upto(0, g1));
+        assert!(!b.overwritten_after(0, g1));
+    }
+
+    #[test]
+    fn waw_overlap_detection() {
+        let mut b = RegionBoard::new(1);
+        let g = b.begin_fill(0, 100, 200);
+        assert!(b.overlaps_outstanding(0, 150, 160));
+        assert!(b.overlaps_outstanding(0, 0, 101));
+        assert!(!b.overlaps_outstanding(0, 200, 300));
+        assert!(!b.overlaps_outstanding(0, 0, 100));
+        b.set_ready(0, g, 9);
+        assert!(!b.overlaps_outstanding(0, 150, 160));
+    }
+
+    #[test]
+    fn generation_counts_dispatches() {
+        let mut b = RegionBoard::new(2);
+        assert_eq!(b.generation(1), 0);
+        b.begin_fill(1, 0, 4);
+        b.begin_fill(1, 4, 8);
+        assert_eq!(b.generation(1), 2);
+        assert_eq!(b.generation(0), 0);
+        assert_eq!(b.regions(), 2);
+    }
+}

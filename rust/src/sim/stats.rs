@@ -1,0 +1,169 @@
+//! Simulation statistics: cycles, stall breakdown, DMA traffic.
+//!
+//! These counters are the raw material for every paper table: execution
+//! time (Tables 1–2) comes from `cycles` at 250 MHz, bandwidth (Table 2,
+//! Fig 4) from `bytes_loaded + bytes_stored` over the run, and load
+//! imbalance (Table 3) from `unit_bytes`.
+
+use crate::arch::SnowflakeConfig;
+
+/// Counters accumulated over one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    /// Total machine cycles until completion.
+    pub cycles: u64,
+    /// Instructions issued, total and per category.
+    pub issued: u64,
+    pub issued_scalar: u64,
+    pub issued_vector: u64,
+    pub issued_branch: u64,
+    pub issued_ld: u64,
+
+    /// Issue-stage stall cycles by cause.
+    pub stall_fetch: u64,
+    pub stall_raw: u64,
+    pub stall_queue_full: u64,
+    pub stall_ld_unit: u64,
+    /// LD stalled by the region interlock (coherence rule, §5.2).
+    pub stall_coherence: u64,
+
+    /// Per-CU busy cycles (executing a vector op).
+    pub cu_busy: Vec<u64>,
+    /// Per-CU cycles stalled waiting for buffer data (scoreboard).
+    pub cu_data_stall: Vec<u64>,
+    /// Per-CU cycles stalled because the store queue was full.
+    pub cu_store_stall: Vec<u64>,
+    /// Per-CU idle-with-empty-queue cycles ("not enough MAC/MAX issued").
+    pub cu_starved: Vec<u64>,
+
+    /// DMA bytes loaded, per load unit (imbalance metric, Table 3).
+    pub unit_bytes: Vec<u64>,
+    /// Total bytes stored by writebacks.
+    pub bytes_stored: u64,
+    /// Completed DMA streams per unit.
+    pub unit_streams: Vec<u64>,
+    /// Instruction-cache bank loads completed.
+    pub icache_loads: u64,
+
+    /// Scalar MAC operations actually performed (useful-work check).
+    pub mac_ops: u64,
+    /// Vector-compare operations performed.
+    pub max_ops: u64,
+}
+
+impl Stats {
+    pub fn new(cfg: &SnowflakeConfig) -> Self {
+        Stats {
+            cu_busy: vec![0; cfg.n_cus],
+            cu_data_stall: vec![0; cfg.n_cus],
+            cu_store_stall: vec![0; cfg.n_cus],
+            cu_starved: vec![0; cfg.n_cus],
+            unit_bytes: vec![0; cfg.n_load_units],
+            unit_streams: vec![0; cfg.n_load_units],
+            ..Default::default()
+        }
+    }
+
+    pub fn bytes_loaded(&self) -> u64 {
+        self.unit_bytes.iter().sum()
+    }
+
+    /// Total off-chip traffic (loads + stores).
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_loaded() + self.bytes_stored
+    }
+
+    /// Execution time in milliseconds at the configured clock.
+    pub fn time_ms(&self, cfg: &SnowflakeConfig) -> f64 {
+        cfg.cycles_to_ms(self.cycles)
+    }
+
+    /// Achieved off-chip bandwidth in GB/s over the run.
+    pub fn bandwidth_gbs(&self, cfg: &SnowflakeConfig) -> f64 {
+        cfg.achieved_gbs(self.bytes_moved(), self.cycles)
+    }
+
+    /// Percent load imbalance (Table 3, eq. 1):
+    /// `C_L = (L_max / mean(L) - 1) × 100%`.
+    pub fn load_imbalance_pct(&self) -> f64 {
+        let n = self.unit_bytes.len().max(1) as f64;
+        let total: u64 = self.unit_bytes.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / n;
+        let max = *self.unit_bytes.iter().max().unwrap() as f64;
+        (max / mean - 1.0) * 100.0
+    }
+
+    /// Average CU utilization in [0, 1].
+    pub fn cu_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.cu_busy.iter().sum();
+        busy as f64 / (self.cycles as f64 * self.cu_busy.len() as f64)
+    }
+
+    /// Achieved arithmetic throughput in Gop/s (2 ops per MAC).
+    pub fn achieved_gops(&self, cfg: &SnowflakeConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        (self.mac_ops * 2) as f64 / self.cycles as f64 * cfg.clock_mhz / 1000.0
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self, cfg: &SnowflakeConfig) -> String {
+        format!(
+            "cycles={} ({:.3} ms)  issued={}  bw={:.2} GB/s  util={:.1}%  imbalance={:.0}%  \
+             stalls[fetch={} raw={} qfull={} ld={}]",
+            self.cycles,
+            self.time_ms(cfg),
+            self.issued,
+            self.bandwidth_gbs(cfg),
+            self.cu_utilization() * 100.0,
+            self.load_imbalance_pct(),
+            self.stall_fetch,
+            self.stall_raw,
+            self.stall_queue_full,
+            self.stall_ld_unit,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_formula() {
+        let cfg = SnowflakeConfig::default();
+        let mut s = Stats::new(&cfg);
+        // Perfectly balanced -> 0%.
+        s.unit_bytes = vec![100, 100, 100, 100];
+        assert!((s.load_imbalance_pct() - 0.0).abs() < 1e-9);
+        // One unit does everything: max=400, mean=100 -> 300%.
+        s.unit_bytes = vec![400, 0, 0, 0];
+        assert!((s.load_imbalance_pct() - 300.0).abs() < 1e-9);
+        // Paper-style mild imbalance.
+        s.unit_bytes = vec![120, 100, 100, 80];
+        assert!((s.load_imbalance_pct() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let cfg = SnowflakeConfig::default();
+        let mut s = Stats::new(&cfg);
+        s.cycles = 250_000; // 1 ms
+        s.unit_bytes = vec![1_000_000, 0, 0, 0];
+        s.bytes_stored = 50_000;
+        assert!((s.time_ms(&cfg) - 1.0).abs() < 1e-12);
+        let gbs = s.bandwidth_gbs(&cfg);
+        assert!((gbs - 1.05).abs() < 1e-9, "{gbs}"); // 1.05 MB / ms
+        s.mac_ops = 256 * 250_000;
+        assert!((s.achieved_gops(&cfg) - 128.0).abs() < 1e-9);
+        s.cu_busy = vec![125_000; 4];
+        assert!((s.cu_utilization() - 0.5).abs() < 1e-12);
+    }
+}

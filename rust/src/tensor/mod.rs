@@ -1,0 +1,177 @@
+//! Dense CHW tensors.
+//!
+//! Snowflake processes one image at a time (the paper reports single-frame
+//! latency), so the canonical activation layout is CHW ("maps": z = channel,
+//! then rows, then columns) and the weight layout is KCHW (kernels ×
+//! channels × window). Generic over the element type so fp32 reference and
+//! Q-format paths share code.
+
+use std::fmt;
+
+/// A dense tensor with explicit shape, row-major over the given dims.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?} ({} elems)", self.shape, self.data.len())
+    }
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of dims.
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// CHW accessor for rank-3 tensors.
+    #[inline]
+    pub fn at3(&self, c: usize, y: usize, x: usize) -> T {
+        debug_assert_eq!(self.rank(), 3);
+        let (_cs, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, y: usize, x: usize, v: T) {
+        debug_assert_eq!(self.rank(), 3);
+        let (_cs, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x] = v;
+    }
+
+    /// KCHW accessor for rank-4 tensors (kernels).
+    #[inline]
+    pub fn at4(&self, k: usize, c: usize, y: usize, x: usize) -> T {
+        debug_assert_eq!(self.rank(), 4);
+        let (cs, h, w) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((k * cs + c) * h + y) * w + x]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, k: usize, c: usize, y: usize, x: usize, v: T) {
+        debug_assert_eq!(self.rank(), 4);
+        let (cs, h, w) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((k * cs + c) * h + y) * w + x] = v;
+    }
+}
+
+impl Tensor<f32> {
+    /// Quantize to a fixed-point tensor.
+    pub fn quantize(&self, fmt: crate::fixed::QFormat) -> Tensor<i16> {
+        Tensor { shape: self.shape.clone(), data: fmt.quantize_slice(&self.data) }
+    }
+
+    /// Max absolute elementwise difference vs another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl Tensor<i16> {
+    /// Dequantize to fp32.
+    pub fn dequantize(&self, fmt: crate::fixed::QFormat) -> Tensor<f32> {
+        Tensor { shape: self.shape.clone(), data: fmt.dequantize_slice(&self.data) }
+    }
+
+    /// Count of elements that differ from `other`.
+    pub fn count_diff(&self, other: &Tensor<i16>) -> usize {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(&other.data).filter(|(a, b)| a != b).count()
+    }
+
+    /// Max absolute difference in raw fixed-point steps.
+    pub fn max_step_diff(&self, other: &Tensor<i16>) -> i32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as i32 - *b as i32).abs())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_8;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: Tensor<i16> = Tensor::zeros(&[3, 4, 5]);
+        assert_eq!(t.len(), 60);
+        assert_eq!(t.rank(), 3);
+        assert_eq!(t.at3(2, 3, 4), 0);
+    }
+
+    #[test]
+    fn chw_indexing() {
+        let mut t: Tensor<i16> = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 42);
+        assert_eq!(t.at3(1, 2, 3), 42);
+        // Same element via flat layout.
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 42);
+    }
+
+    #[test]
+    fn kchw_indexing() {
+        let mut t: Tensor<i16> = Tensor::zeros(&[2, 3, 2, 2]);
+        t.set4(1, 2, 1, 0, 7);
+        assert_eq!(t.at4(1, 2, 1, 0), 7);
+        assert_eq!(t.data[((1 * 3 + 2) * 2 + 1) * 2 + 0], 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1i16, 2, 3]);
+    }
+
+    #[test]
+    fn quantize_roundtrip() {
+        let t = Tensor::from_vec(&[2, 1, 2], vec![0.5f32, -1.25, 3.0, 0.0]);
+        let q = t.quantize(Q8_8);
+        let back = q.dequantize(Q8_8);
+        assert!(t.max_abs_diff(&back) <= Q8_8.epsilon() * 0.5);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[3], vec![1i16, 2, 3]);
+        let b = Tensor::from_vec(&[3], vec![1i16, 4, 0]);
+        assert_eq!(a.count_diff(&b), 2);
+        assert_eq!(a.max_step_diff(&b), 3);
+    }
+}

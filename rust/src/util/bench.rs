@@ -1,0 +1,114 @@
+//! Micro-benchmark harness (no `criterion` in the offline vendor set).
+//!
+//! Design: warmup iterations, then timed samples; report min / median /
+//! mean / p95 wall-clock. Benches in `rust/benches/*.rs` use
+//! `harness = false` and drive this directly, printing both the timing
+//! lines and the paper-table rows they regenerate.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} samples={:<3} min={:>10?} median={:>10?} mean={:>10?} p95={:>10?}",
+            self.name, self.samples, self.min, self.median, self.mean, self.p95
+        );
+    }
+}
+
+/// Benchmark runner with configurable warmup/sample counts.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Soft wall-clock cap for the whole measurement of one bench.
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, samples: 10, max_total: Duration::from_secs(20) }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, samples: 5, max_total: Duration::from_secs(10) }
+    }
+
+    /// Time `f` and return the summary (also printed).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start_all = Instant::now();
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+            if start_all.elapsed() > self.max_total && times.len() >= 3 {
+                break;
+            }
+        }
+        times.sort();
+        let n = times.len();
+        let total: Duration = times.iter().sum();
+        let summary = Summary {
+            name: name.to_string(),
+            samples: n,
+            min: times[0],
+            median: times[n / 2],
+            mean: total / n as u32,
+            p95: times[(n * 95 / 100).min(n - 1)],
+        };
+        summary.print();
+        summary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher { warmup: 1, samples: 4, max_total: Duration::from_secs(5) };
+        let mut count = 0usize;
+        let s = b.run("noop", || {
+            count += 1;
+            black_box(count);
+        });
+        assert_eq!(count, 5); // 1 warmup + 4 samples
+        assert_eq!(s.samples, 4);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn respects_time_cap() {
+        let b = Bencher {
+            warmup: 0,
+            samples: 1000,
+            max_total: Duration::from_millis(50),
+        };
+        let s = b.run("sleepy", || std::thread::sleep(Duration::from_millis(20)));
+        assert!(s.samples < 1000);
+        assert!(s.samples >= 3);
+    }
+}

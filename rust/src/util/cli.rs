@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `repro <subcommand> [--flag] [--key value] [positional ...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` options, `--flag`
+/// booleans and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — `argv[0]` excluded.
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = args("table1 foo bar", &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = args("run --model alexnet --verbose --steps 5", &["verbose"]);
+        assert_eq!(a.opt("model"), Some("alexnet"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("steps", 0), 5);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("run --model=resnet18", &[]);
+        assert_eq!(a.opt("model"), Some("resnet18"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args("run --fast", &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn unknown_flag_before_option() {
+        let a = args("run --quiet --n 3", &[]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("run", &[]);
+        assert_eq!(a.opt_or("model", "alexnet"), "alexnet");
+        assert_eq!(a.opt_f64("bw", 4.2), 4.2);
+        assert_eq!(a.opt_u64("seed", 42), 42);
+    }
+}

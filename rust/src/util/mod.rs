@@ -1,0 +1,9 @@
+//! Small self-contained substrates the offline build cannot pull from
+//! crates.io: a JSON parser/emitter, a deterministic PRNG, a CLI argument
+//! parser, a micro-benchmark harness and a property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

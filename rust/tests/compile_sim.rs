@@ -1,0 +1,235 @@
+//! Integration: compile → deploy → simulate → validate against the
+//! fixed-point reference (§5.3's "layer by layer validation").
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{compile, deploy, BalancePolicy, CompileOptions};
+use snowflake::fixed::Q8_8;
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::refimpl;
+use snowflake::util::rng::Rng;
+
+/// Compile+simulate a graph and compare every lowered-layer output
+/// canvas against the fixed-point reference. Returns the stats.
+fn check_graph(g: &Graph, seed: u64) -> snowflake::sim::stats::Stats {
+    let cfg = SnowflakeConfig::default();
+    let opts = CompileOptions::default();
+    let compiled = compile(g, &cfg, &opts).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    let w = Weights::init(g, seed);
+    let x = synthetic_input(g, seed);
+    let mut m = deploy::make_machine(&compiled, g, &w, &x);
+    let stats = m.run().unwrap_or_else(|e| panic!("{}: sim error: {e}", g.name));
+
+    let refs = refimpl::forward_q(g, &w, &x, Q8_8);
+    for lp in &compiled.plan.layers {
+        let node = lp.op.out_node();
+        let cv = compiled.plan.canvases[&node];
+        let got = deploy::read_canvas(&m, &cv);
+        let want = &refs[node];
+        let diff = got.count_diff(want);
+        let max_step = got.max_step_diff(want);
+        assert!(
+            diff == 0,
+            "{}: node {node} ({}): {diff}/{} words differ (max {} steps)",
+            g.name,
+            lp.op.name(),
+            want.len(),
+            max_step
+        );
+    }
+    stats
+}
+
+fn conv_graph(
+    c: usize,
+    h: usize,
+    k: usize,
+    ks: usize,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+) -> Graph {
+    let mut g = Graph::new(
+        &format!("conv{h}x{h}k{ks}c{c}o{k}s{stride}p{pad}"),
+        Shape::new(c, h, h),
+    );
+    g.push_seq(
+        LayerKind::Conv { in_ch: c, out_ch: k, kh: ks, kw: ks, stride, pad, relu },
+        "conv",
+    );
+    g
+}
+
+#[test]
+fn conv_1x1_matches_reference() {
+    check_graph(&conv_graph(16, 8, 8, 1, 1, 0, false), 1);
+}
+
+#[test]
+fn conv_3x3_pad_matches_reference() {
+    check_graph(&conv_graph(16, 10, 8, 3, 1, 1, true), 2);
+}
+
+#[test]
+fn conv_stride2_matches_reference() {
+    check_graph(&conv_graph(32, 12, 8, 3, 2, 1, true), 3);
+}
+
+#[test]
+fn conv_small_channels_matches_reference() {
+    // The 3-channel first-layer case: c_pad = 4, padded trace rows.
+    check_graph(&conv_graph(3, 16, 16, 5, 2, 2, true), 4);
+}
+
+#[test]
+fn conv_multi_tile_matches_reference() {
+    // Force multiple map tiles: tall input, many rows.
+    check_graph(&conv_graph(64, 48, 8, 3, 1, 1, true), 5);
+}
+
+#[test]
+fn conv_odd_out_channels_pad_to_group() {
+    // out_ch = 10: pad to 3 groups of 4; pad channels land in canvas
+    // channel padding.
+    check_graph(&conv_graph(16, 8, 10, 3, 1, 1, false), 6);
+}
+
+#[test]
+fn maxpool_matches_reference() {
+    let mut g = Graph::new("pool", Shape::new(16, 12, 12));
+    let c = g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 1, kw: 1, stride: 1, pad: 0, relu: true },
+        "conv",
+    );
+    g.push(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 0 }, vec![c], "pool");
+    check_graph(&g, 7);
+}
+
+#[test]
+fn maxpool_padded_matches_reference() {
+    let mut g = Graph::new("poolpad", Shape::new(16, 14, 14));
+    let c = g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 1, kw: 1, stride: 1, pad: 0, relu: true },
+        "conv",
+    );
+    g.push(LayerKind::MaxPool { kh: 3, kw: 3, stride: 2, pad: 1 }, vec![c], "pool");
+    check_graph(&g, 8);
+}
+
+#[test]
+fn residual_block_matches_reference() {
+    let mut g = Graph::new("resblock", Shape::new(16, 8, 8));
+    let c1 = g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c1",
+    );
+    let c2 = g.push(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+        vec![c1],
+        "c2",
+    );
+    g.push(LayerKind::ResidualAdd { relu: true }, vec![c2, c1], "add");
+    check_graph(&g, 9);
+}
+
+#[test]
+fn avgpool_matches_reference() {
+    let mut g = Graph::new("avg", Shape::new(64, 7, 7));
+    g.push_seq(LayerKind::AvgPool { kh: 7, kw: 7, stride: 1, pad: 0 }, "avg");
+    check_graph(&g, 10);
+}
+
+#[test]
+fn fc_matches_reference() {
+    let mut g = Graph::new("fc", Shape::new(64, 1, 1));
+    g.push_seq(LayerKind::Fc { in_features: 64, out_features: 40, relu: true }, "fc");
+    check_graph(&g, 11);
+}
+
+#[test]
+fn conv_chain_matches_reference() {
+    // Conv -> pool -> conv: exercises canvas-to-canvas flow.
+    let mut g = Graph::new("chain", Shape::new(3, 20, 20));
+    let c1 = g.push_seq(
+        LayerKind::Conv { in_ch: 3, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c1",
+    );
+    let p = g.push(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, vec![c1], "p");
+    g.push(
+        LayerKind::Conv { in_ch: 16, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        vec![p],
+        "c2",
+    );
+    check_graph(&g, 12);
+}
+
+#[test]
+fn random_conv_property() {
+    // Randomized conv shapes, all must match the reference bit-exactly.
+    let mut rng = Rng::new(2024);
+    for case in 0..6 {
+        let c = [3, 8, 16, 32][rng.range(0, 4)];
+        let k = rng.range(1, 5) * 4;
+        let ks = [1, 3, 5][rng.range(0, 3)];
+        let h = rng.range(ks + 1, 14);
+        let stride = rng.range(1, 3).min(h / 2).max(1);
+        let pad = rng.range(0, ks / 2 + 1);
+        // Output height must cover the 4 CUs (smaller maps are
+        // rejected by the compiler by design).
+        if (h + 2 * pad - ks) / stride + 1 < 4 {
+            continue;
+        }
+        let g = conv_graph(c, h, k, ks, stride, pad, rng.bool());
+        eprintln!("case {case}: {}", g.name);
+        check_graph(&g, 100 + case as u64);
+    }
+}
+
+#[test]
+fn balance_policies_all_correct() {
+    // Correctness must be invariant to the balance policy (Table 3 only
+    // changes timing).
+    let g = conv_graph(16, 10, 8, 3, 1, 1, true);
+    let cfg = SnowflakeConfig::default();
+    let w = Weights::init(&g, 20);
+    let x = synthetic_input(&g, 20);
+    let refs = refimpl::forward_q(&g, &w, &x, Q8_8);
+    for policy in [
+        BalancePolicy::Greedy { split: 1 },
+        BalancePolicy::Greedy { split: 4 },
+        BalancePolicy::TwoUnits,
+        BalancePolicy::OneUnit,
+    ] {
+        let opts = CompileOptions { balance: policy, ..Default::default() };
+        let compiled = compile(&g, &cfg, &opts).unwrap();
+        let mut m = deploy::make_machine(&compiled, &g, &w, &x);
+        m.run().unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+        let cv = compiled.plan.canvases[&0];
+        let got = deploy::read_canvas(&m, &cv);
+        assert_eq!(got.count_diff(&refs[0]), 0, "{policy:?}");
+    }
+}
+
+#[test]
+fn smart_slots_same_results_fewer_instrs() {
+    let g = conv_graph(16, 10, 8, 3, 1, 1, true);
+    let cfg = SnowflakeConfig::default();
+    let auto = compile(&g, &cfg, &CompileOptions::default()).unwrap();
+    let hand = compile(
+        &g,
+        &cfg,
+        &CompileOptions { smart_delay_slots: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(hand.program.len() <= auto.program.len());
+    let w = Weights::init(&g, 21);
+    let x = synthetic_input(&g, 21);
+    let mut ma = deploy::make_machine(&auto, &g, &w, &x);
+    let mut mh = deploy::make_machine(&hand, &g, &w, &x);
+    ma.run().unwrap();
+    mh.run().unwrap();
+    let a = deploy::read_canvas(&ma, &auto.plan.canvases[&0]);
+    let h = deploy::read_canvas(&mh, &hand.plan.canvases[&0]);
+    assert_eq!(a.count_diff(&h), 0);
+}

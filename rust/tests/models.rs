@@ -1,0 +1,65 @@
+//! Full-model integration: compile the zoo models, run them on the
+//! simulator and validate every layer against the fixed-point reference
+//! (the paper's end-to-end flow, §5.1–§5.3 + Table 2 setup).
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::fixed::Q8_8;
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::model::zoo;
+use snowflake::refimpl;
+
+fn run_model(g: &snowflake::model::graph::Graph, seed: u64) {
+    let cfg = SnowflakeConfig::default();
+    let opts = CompileOptions { skip_fc: true, ..Default::default() };
+    let compiled = compile(g, &cfg, &opts).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    let w = Weights::init(g, seed);
+    let x = synthetic_input(g, seed);
+    let mut m = deploy::make_machine(&compiled, g, &w, &x);
+    let stats = m.run().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    eprintln!("{}: {}", g.name, stats.summary(&cfg));
+
+    let refs = refimpl::forward_q(g, &w, &x, Q8_8);
+    for lp in &compiled.plan.layers {
+        if matches!(lp.op, snowflake::compiler::layout::Lowered::Fc { .. }) {
+            continue; // skipped in generation
+        }
+        let node = lp.op.out_node();
+        let cv = compiled.plan.canvases[&node];
+        let got = deploy::read_canvas(&m, &cv);
+        let want = &refs[node];
+        let diff = got.count_diff(want);
+        assert_eq!(
+            diff,
+            0,
+            "{}: node {node} ({}): {diff}/{} words differ (max step {})",
+            g.name,
+            lp.op.name(),
+            want.len(),
+            got.max_step_diff(want)
+        );
+    }
+}
+
+#[test]
+fn alexnet_owt_end_to_end() {
+    run_model(&zoo::alexnet_owt(), 42);
+}
+
+#[test]
+fn resnet18_end_to_end() {
+    run_model(&zoo::resnet18(), 43);
+}
+
+#[test]
+#[ignore = "large: run with --ignored (covered by benches/table2)"]
+fn resnet50_end_to_end() {
+    run_model(&zoo::resnet50(), 44);
+}
+
+#[test]
+fn table1_layers_compile_and_validate() {
+    for g in zoo::table1_layers() {
+        run_model(&g, 7);
+    }
+}

@@ -1,0 +1,197 @@
+//! Robustness and configuration-space tests: alternative number
+//! formats, non-default hardware configurations, the JSON model path,
+//! and failure injection (the compiler and simulator must reject bad
+//! inputs loudly, not corrupt silently).
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::fixed::{Q5_11, Q8_8};
+use snowflake::isa::instr::Instr;
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::model::parser;
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::refimpl;
+use snowflake::sim::Machine;
+
+fn small_net() -> Graph {
+    let mut g = Graph::new("small", Shape::new(16, 12, 12));
+    let c1 = g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c1",
+    );
+    let c2 = g.push(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+        vec![c1],
+        "c2",
+    );
+    g.push(LayerKind::ResidualAdd { relu: true }, vec![c2, c1], "add");
+    g
+}
+
+/// The machine is format-generic: Q5.11 runs bit-exact too (§5.3's
+/// "other number representations can be used in the system").
+#[test]
+fn q511_end_to_end_bit_exact() {
+    let g = small_net();
+    let cfg = SnowflakeConfig::default();
+    let opts = CompileOptions { fmt: Q5_11, ..Default::default() };
+    let compiled = compile(&g, &cfg, &opts).unwrap();
+    let w = Weights::init(&g, 3);
+    let x = synthetic_input(&g, 3);
+    let mut m = deploy::make_machine(&compiled, &g, &w, &x);
+    m.run().unwrap();
+    let refs = refimpl::forward_q(&g, &w, &x, Q5_11);
+    let got = deploy::read_canvas(&m, &compiled.plan.canvases[&2]);
+    assert_eq!(got.count_diff(&refs[2]), 0);
+}
+
+/// A scaled-down Snowflake (half the buffers, slower bus) must still be
+/// bit-correct — only timing may change. This is the §5.1 point of the
+/// shared hardware parameter object: retargeting is a config edit.
+#[test]
+fn smaller_machine_still_correct() {
+    let g = small_net();
+    let cfg = SnowflakeConfig {
+        mbuf_bank_bytes: 32 * 1024,
+        wbuf_bytes: 8 * 1024,
+        bbuf_bytes: 32 * 1024,
+        axi_bytes_per_cycle: 8.4,
+        vector_queue_depth: 8,
+        ..Default::default()
+    };
+    let opts = CompileOptions::default();
+    let compiled = compile(&g, &cfg, &opts).unwrap();
+    let w = Weights::init(&g, 5);
+    let x = synthetic_input(&g, 5);
+    let mut m = deploy::make_machine_with(&compiled, &g, &w, &x, cfg.clone());
+    let stats = m.run().unwrap();
+    let refs = refimpl::forward_q(&g, &w, &x, Q8_8);
+    let got = deploy::read_canvas(&m, &compiled.plan.canvases[&2]);
+    assert_eq!(got.count_diff(&refs[2]), 0);
+
+    // Same program class on the default machine must be faster or equal
+    // (more bandwidth, bigger buffers).
+    let cfg2 = SnowflakeConfig::default();
+    let compiled2 = compile(&g, &cfg2, &opts).unwrap();
+    let mut m2 = deploy::make_machine(&compiled2, &g, &w, &x);
+    let stats2 = m2.run().unwrap();
+    assert!(stats2.cycles <= stats.cycles, "{} !<= {}", stats2.cycles, stats.cycles);
+}
+
+/// Region reuse (step-2 dependency labels) must not change results.
+#[test]
+fn region_reuse_correct_and_smaller() {
+    let g = small_net();
+    let cfg = SnowflakeConfig::default();
+    let w = Weights::init(&g, 7);
+    let x = synthetic_input(&g, 7);
+    let refs = refimpl::forward_q(&g, &w, &x, Q8_8);
+    let base = compile(&g, &cfg, &CompileOptions::default()).unwrap();
+    let reuse = compile(
+        &g,
+        &cfg,
+        &CompileOptions { reuse_regions: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(reuse.plan.mem_words <= base.plan.mem_words);
+    let mut m = deploy::make_machine(&reuse, &g, &w, &x);
+    m.run().unwrap();
+    let got = deploy::read_canvas(&m, &reuse.plan.canvases[&2]);
+    assert_eq!(got.count_diff(&refs[2]), 0);
+}
+
+/// The JSON model path: dump a zoo model, re-parse it, compile both and
+/// get identical programs.
+#[test]
+fn json_model_roundtrip_compiles_identically() {
+    let g = small_net();
+    let text = parser::dump_model(&g);
+    let g2 = parser::parse_model(&text).unwrap();
+    let cfg = SnowflakeConfig::default();
+    let a = compile(&g, &cfg, &CompileOptions::default()).unwrap();
+    let b = compile(&g2, &cfg, &CompileOptions::default()).unwrap();
+    assert_eq!(a.program.instrs, b.program.instrs);
+}
+
+// ---------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------
+
+#[test]
+fn compiler_rejects_unfusable_residual() {
+    // Residual whose main input is a pool (not a conv): no hardware path.
+    let mut g = Graph::new("bad", Shape::new(16, 8, 8));
+    let c = g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 1, kw: 1, stride: 1, pad: 0, relu: true },
+        "c",
+    );
+    let p = g.push(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, vec![c], "p");
+    let p2 = g.push(LayerKind::MaxPool { kh: 1, kw: 1, stride: 1, pad: 0 }, vec![p], "p2");
+    g.push(LayerKind::ResidualAdd { relu: false }, vec![p2, p], "add");
+    let err = compile(&g, &SnowflakeConfig::default(), &CompileOptions::default()).unwrap_err();
+    assert!(err.0.contains("residual"), "{err}");
+}
+
+#[test]
+fn compiler_rejects_tiny_output_maps() {
+    let mut g = Graph::new("tiny", Shape::new(16, 4, 4));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 2, pad: 0, relu: false },
+        "c",
+    );
+    let err = compile(&g, &SnowflakeConfig::default(), &CompileOptions::default()).unwrap_err();
+    assert!(err.0.contains("below the CU count"), "{err}");
+}
+
+#[test]
+fn sim_rejects_out_of_bounds_load() {
+    let cfg = SnowflakeConfig::default();
+    let mut m = Machine::new(cfg, Q8_8, 64);
+    m.load_program(vec![
+        Instr::Movi { rd: 1, imm: 1000 }, // beyond the 64-word DRAM
+        Instr::Movi { rd: 2, imm: 32 },
+        Instr::Movi { rd: 3, imm: 0 },
+        Instr::Ld {
+            target: snowflake::isa::instr::LdTarget::MBuf { cu: 0, bank: 0 },
+            broadcast: true,
+            unit: 0,
+            rd: 3,
+            rs1: 1,
+            rs2: 2,
+        },
+        Instr::Halt,
+    ]);
+    let err = m.run().unwrap_err();
+    assert!(err.message.contains("out of DRAM bounds"), "{err}");
+}
+
+#[test]
+fn sim_rejects_zero_length_load() {
+    let cfg = SnowflakeConfig::default();
+    let mut m = Machine::new(cfg, Q8_8, 64);
+    m.load_program(vec![
+        Instr::Ld {
+            target: snowflake::isa::instr::LdTarget::MBuf { cu: 0, bank: 0 },
+            broadcast: true,
+            unit: 0,
+            rd: 0,
+            rs1: 0,
+            rs2: 0, // r0 = 0 length
+        },
+        Instr::Halt,
+    ]);
+    let err = m.run().unwrap_err();
+    assert!(err.message.contains("non-positive length"), "{err}");
+}
+
+#[test]
+fn parser_rejects_malformed_models() {
+    for bad in [
+        r#"{"layers": []}"#,
+        r#"{"input":[3,8,8],"layers":[{"type":"conv","in_ch":3,"kh":3}]}"#,
+        r#"{"input":[3,8,8],"layers":[{"type":"residual","inputs":[0,0]}]}"#,
+    ] {
+        assert!(parser::parse_model(bad).is_err(), "{bad}");
+    }
+}

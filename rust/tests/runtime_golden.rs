@@ -1,0 +1,19 @@
+//! PJRT golden-model integration: runs the AOT artifacts (python/jax +
+//! Pallas, built by `make artifacts`) from rust and checks them against
+//! the fixed-point reference. Skips (with a loud message) when the
+//! artifacts have not been built.
+
+#[test]
+fn artifacts_match_reference_bit_exact() {
+    match snowflake::coordinator::golden::run_golden() {
+        Ok(msg) => println!("{msg}"),
+        Err(e) => {
+            let s = e.to_string();
+            if s.contains("artifacts not found") {
+                eprintln!("SKIP: {s}");
+                return;
+            }
+            panic!("{s}");
+        }
+    }
+}
