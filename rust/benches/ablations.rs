@@ -6,61 +6,41 @@
 //!   * DMA setup cost (why fine-grained loads must be balanced, not
 //!     merely scattered),
 //!   * memory-region reuse (step-2 dependency labels).
+//!
+//! The simulation variants run as one parallel sweep
+//! (`snowflake::coordinator::sweep`); the region-reuse comparison is
+//! compile-only and stays serial.
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, BalancePolicy, CompileOptions};
-use snowflake::coordinator::driver::run_model;
-use snowflake::model::graph::Graph;
-use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::compiler::{compile, CompileOptions};
+use snowflake::coordinator::report;
+use snowflake::coordinator::sweep::run_sweep_strict;
 use snowflake::model::zoo;
-
-fn layer() -> Graph {
-    let mut g = Graph::new("27x27,5x5,64,192,1,2", Shape::new(64, 27, 27));
-    g.push_seq(
-        LayerKind::Conv { in_ch: 64, out_ch: 192, kh: 5, kw: 5, stride: 1, pad: 2, relu: true },
-        "conv2",
-    );
-    g
-}
-
-fn run(cfg: &SnowflakeConfig, opts: &CompileOptions) -> (f64, usize) {
-    let out = run_model(&layer(), cfg, opts, 42).expect("run");
-    (out.stats.time_ms(cfg), out.compiled.code_len)
-}
 
 fn main() {
     let cfg = SnowflakeConfig::default();
-    let base = CompileOptions::default();
+    let jobs = report::ablation_jobs(&cfg, 42);
+    let t0 = std::time::Instant::now();
+    let outs = run_sweep_strict(&jobs, None);
     println!("{:<34} {:>10} {:>8}", "variant", "time [ms]", "instrs");
-
-    let (t0, i0) = run(&cfg, &base);
-    println!("{:<34} {:>10.3} {:>8}", "baseline (auto, greedy/2)", t0, i0);
-
-    let (t, i) = run(&cfg, &CompileOptions { smart_delay_slots: true, ..base.clone() });
-    println!("{:<34} {:>10.3} {:>8}", "smart delay slots (hand)", t, i);
-    assert!(i <= i0);
-
-    for split in [1usize, 4] {
-        let (t, i) = run(
-            &cfg,
-            &CompileOptions { balance: BalancePolicy::Greedy { split }, ..base.clone() },
+    for o in &outs {
+        println!(
+            "{:<34} {:>10.3} {:>8}",
+            o.name.strip_prefix("ablate/").unwrap_or(&o.name),
+            o.stats.time_ms(&cfg),
+            o.code_len
         );
-        println!("{:<34} {:>10.3} {:>8}", format!("maps-load split = {split}"), t, i);
     }
+    println!("({} variants swept in {:?})", outs.len(), t0.elapsed());
 
-    for depth in [4usize, 32] {
-        let c = SnowflakeConfig { vector_queue_depth: depth, ..cfg.clone() };
-        let (t, i) = run(&c, &base);
-        println!("{:<34} {:>10.3} {:>8}", format!("vector queue depth = {depth}"), t, i);
-    }
+    // Shape checks mirror the old serial bench: smart delay slots never
+    // add instructions over the baseline.
+    let baseline = &outs[0];
+    let smart = outs.iter().find(|o| o.name.contains("smart delay")).expect("smart variant");
+    assert!(smart.code_len <= baseline.code_len);
 
-    for setup in [8u64, 256] {
-        let c = SnowflakeConfig { dma_setup_cycles: setup, ..cfg.clone() };
-        let (t, i) = run(&c, &base);
-        println!("{:<34} {:>10.3} {:>8}", format!("dma setup = {setup} cycles"), t, i);
-    }
-
-    // Region reuse: whole-model memory footprint (AlexNet).
+    // Region reuse: whole-model memory footprint (AlexNet), compile-only.
+    let base = CompileOptions::default();
     let g = zoo::alexnet_owt();
     let no = compile(&g, &cfg, &CompileOptions { skip_fc: true, ..base.clone() }).unwrap();
     let yes = compile(

@@ -1,0 +1,31 @@
+//! Bench — the full paper grid in one invocation: Tables 1–3 plus the
+//! ablation variants, fanned across host threads by the parallel sweep
+//! harness (`snowflake::coordinator::sweep`). `--fast` drops ResNet50.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::coordinator::report;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let cfg = SnowflakeConfig::default();
+    let grid = report::run_grid(&cfg, 42, fast, None);
+    report::print_grid(&grid);
+
+    // Shape assertions pooled from the per-table benches, so one grid
+    // run exercises the whole set.
+    for r in &grid.table1 {
+        let ratio = r.auto_ms / r.hand_ms;
+        assert!(ratio < 1.15, "{}: auto within 15% of hand ({ratio})", r.layer);
+        assert!(r.auto_instrs >= r.hand_instrs, "{}", r.layer);
+    }
+    let t = |name: &str| grid.table2.iter().find(|r| r.model.contains(name)).map(|r| r.exec_ms);
+    if let (Some(a), Some(r18)) = (t("alexnet"), t("resnet18")) {
+        assert!(a < r18, "AlexNet must be faster than ResNet18");
+    }
+    let best = grid.table3.iter().map(|r| r.speedup).fold(0.0f64, f64::max);
+    let worst_imb = grid.table3.iter().map(|r| r.imbalance_pct).fold(0.0f64, f64::max);
+    assert!(best > 1.1, "fine balance must beat the worst case ({best})");
+    assert!(worst_imb > 50.0, "degenerate policies must show heavy imbalance");
+    assert!(!grid.ablations.is_empty());
+    println!("\ngrid OK: {} jobs verified", grid.jobs);
+}

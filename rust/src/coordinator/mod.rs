@@ -1,9 +1,13 @@
 //! Coordination layer: end-to-end drivers behind the CLI, the paper-
-//! table generators (Tables 1–3, Figure 4, the §5.3 accuracy profile)
-//! and the PJRT golden-model cross-check.
+//! table generators (Tables 1–3, Figure 4, the §5.3 accuracy profile),
+//! the batched-inference + parallel sweep harness and the PJRT
+//! golden-model cross-check (feature `pjrt`).
 
 pub mod driver;
+#[cfg(feature = "pjrt")]
 pub mod golden;
 pub mod report;
+pub mod sweep;
 
-pub use driver::{run_model, validate_model, RunOutcome};
+pub use driver::{run_batch, run_model, validate_model, BatchOutcome, RunOutcome};
+pub use sweep::{run_sweep, SweepJob, SweepOutcome};

@@ -1,6 +1,13 @@
 //! Paper-table generators. Each function returns structured rows (used
 //! by benches and tests) and can print the table in the paper's format.
 //! DESIGN.md's experiment index maps each to its source (E1–E7).
+//!
+//! All timing tables are produced through the parallel sweep harness
+//! ([`crate::coordinator::sweep`]): each table builds a list of
+//! independent jobs and fans them across host threads; [`run_grid`]
+//! concatenates every table's jobs plus the ablation variants into one
+//! sweep so the whole paper regenerates in a single invocation
+//! (`repro sweep` / `cargo bench --bench grid`).
 
 use crate::arch::SnowflakeConfig;
 use crate::compiler::{decide, layout, BalancePolicy, CompileOptions, LoopOrder};
@@ -12,7 +19,7 @@ use crate::model::zoo;
 use crate::refimpl;
 use crate::util::rng::Rng;
 
-use super::driver::run_model;
+use super::sweep::{self, SweepJob, SweepOutcome};
 
 // ---------------------------------------------------------------------
 // Table 1: hand vs auto
@@ -27,23 +34,45 @@ pub struct Table1Row {
     pub auto_instrs: usize,
 }
 
+/// Jobs behind Table 1: (hand, auto) per layer, in that order.
+pub fn table1_jobs(cfg: &SnowflakeConfig, seed: u64) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for g in zoo::table1_layers() {
+        let hand = CompileOptions { smart_delay_slots: true, ..Default::default() };
+        jobs.push(
+            SweepJob::new(format!("table1/{}/hand", g.name), g.clone(), cfg, hand).seed(seed),
+        );
+        jobs.push(
+            SweepJob::new(format!("table1/{}/auto", g.name), g, cfg, CompileOptions::default())
+                .seed(seed),
+        );
+    }
+    jobs
+}
+
+fn table1_rows(outs: &[SweepOutcome], cfg: &SnowflakeConfig) -> Vec<Table1Row> {
+    outs.chunks(2)
+        .map(|pair| {
+            let layer = pair[0]
+                .name
+                .strip_prefix("table1/")
+                .and_then(|s| s.strip_suffix("/hand"))
+                .unwrap_or(&pair[0].name)
+                .to_string();
+            Table1Row {
+                layer,
+                hand_ms: pair[0].stats.time_ms(cfg),
+                auto_ms: pair[1].stats.time_ms(cfg),
+                hand_instrs: pair[0].code_len,
+                auto_instrs: pair[1].code_len,
+            }
+        })
+        .collect()
+}
+
 /// E1/E6: hand-optimized vs auto-generated code on the Table 1 layers.
 pub fn table1(cfg: &SnowflakeConfig, seed: u64) -> Vec<Table1Row> {
-    let mut rows = Vec::new();
-    for g in zoo::table1_layers() {
-        let hand_opts = CompileOptions { smart_delay_slots: true, ..Default::default() };
-        let auto_opts = CompileOptions::default();
-        let hand_run = run_model(&g, cfg, &hand_opts, seed).expect("hand run");
-        let auto_run = run_model(&g, cfg, &auto_opts, seed).expect("auto run");
-        rows.push(Table1Row {
-            layer: g.name.clone(),
-            hand_ms: hand_run.stats.time_ms(cfg),
-            auto_ms: auto_run.stats.time_ms(cfg),
-            hand_instrs: hand_run.compiled.code_len,
-            auto_instrs: auto_run.compiled.code_len,
-        });
-    }
-    rows
+    table1_rows(&sweep::run_sweep_strict(&table1_jobs(cfg, seed), None), cfg)
 }
 
 pub fn print_table1(rows: &[Table1Row]) {
@@ -74,26 +103,39 @@ pub struct Table2Row {
     pub instrs: usize,
 }
 
-/// E2/E7: full-model execution time and bandwidth (FC excluded, as the
+/// Jobs behind Table 2, one full model per job (FC excluded, as the
 /// paper does: "Execution time for all models does not account for FC
 /// layer times").
+pub fn table2_jobs(cfg: &SnowflakeConfig, models: &[&str], seed: u64) -> Vec<SweepJob> {
+    models
+        .iter()
+        .map(|name| {
+            let g = zoo::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+            let opts = CompileOptions { skip_fc: true, ..Default::default() };
+            SweepJob::new(format!("table2/{}", g.name), g, cfg, opts).seed(seed)
+        })
+        .collect()
+}
+
+fn table2_rows(outs: &[SweepOutcome], cfg: &SnowflakeConfig) -> Vec<Table2Row> {
+    outs.iter()
+        .map(|o| {
+            let ms = o.stats.time_ms(cfg);
+            Table2Row {
+                model: o.name.strip_prefix("table2/").unwrap_or(&o.name).to_string(),
+                exec_ms: ms,
+                bw_gbs: o.stats.bandwidth_gbs(cfg),
+                fps: 1000.0 / ms,
+                cu_util: o.stats.cu_utilization(),
+                instrs: o.code_len,
+            }
+        })
+        .collect()
+}
+
+/// E2/E7: full-model execution time and bandwidth.
 pub fn table2(cfg: &SnowflakeConfig, models: &[&str], seed: u64) -> Vec<Table2Row> {
-    let mut rows = Vec::new();
-    for name in models {
-        let g = zoo::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
-        let opts = CompileOptions { skip_fc: true, ..Default::default() };
-        let out = run_model(&g, cfg, &opts, seed).expect("model run");
-        let ms = out.stats.time_ms(cfg);
-        rows.push(Table2Row {
-            model: g.name.clone(),
-            exec_ms: ms,
-            bw_gbs: out.stats.bandwidth_gbs(cfg),
-            fps: 1000.0 / ms,
-            cu_util: out.stats.cu_utilization(),
-            instrs: out.compiled.code_len,
-        });
-    }
-    rows
+    table2_rows(&sweep::run_sweep_strict(&table2_jobs(cfg, models, seed), None), cfg)
 }
 
 pub fn print_table2(rows: &[Table2Row]) {
@@ -138,33 +180,45 @@ pub fn table3_layer() -> Graph {
     g
 }
 
-/// E3: run the Table 3 conv under balance policies from finest to the
-/// paper's worst case; speedup is measured against the slowest run.
-pub fn table3(cfg: &SnowflakeConfig, seed: u64) -> Vec<Table3Row> {
-    let g = table3_layer();
-    let policies: Vec<(String, BalancePolicy)> = vec![
-        ("greedy/4".into(), BalancePolicy::Greedy { split: 4 }),
-        ("greedy/2".into(), BalancePolicy::Greedy { split: 2 }),
-        ("greedy/1".into(), BalancePolicy::Greedy { split: 1 }),
-        ("two-units".into(), BalancePolicy::TwoUnits),
-        ("one-unit".into(), BalancePolicy::OneUnit),
+/// Jobs behind Table 3: the balance policies from finest to the paper's
+/// worst case.
+pub fn table3_jobs(cfg: &SnowflakeConfig, seed: u64) -> Vec<SweepJob> {
+    let policies: Vec<(&str, BalancePolicy)> = vec![
+        ("greedy/4", BalancePolicy::Greedy { split: 4 }),
+        ("greedy/2", BalancePolicy::Greedy { split: 2 }),
+        ("greedy/1", BalancePolicy::Greedy { split: 1 }),
+        ("two-units", BalancePolicy::TwoUnits),
+        ("one-unit", BalancePolicy::OneUnit),
     ];
-    let mut rows = Vec::new();
-    for (name, p) in policies {
-        let opts = CompileOptions { balance: p, ..Default::default() };
-        let out = run_model(&g, cfg, &opts, seed).expect("table3 run");
-        rows.push(Table3Row {
-            policy: name,
-            imbalance_pct: out.stats.load_imbalance_pct(),
-            exec_ms: out.stats.time_ms(cfg),
+    policies
+        .into_iter()
+        .map(|(name, p)| {
+            let opts = CompileOptions { balance: p, ..Default::default() };
+            SweepJob::new(format!("table3/{name}"), table3_layer(), cfg, opts).seed(seed)
+        })
+        .collect()
+}
+
+fn table3_rows(outs: &[SweepOutcome], cfg: &SnowflakeConfig) -> Vec<Table3Row> {
+    let mut rows: Vec<Table3Row> = outs
+        .iter()
+        .map(|o| Table3Row {
+            policy: o.name.strip_prefix("table3/").unwrap_or(&o.name).to_string(),
+            imbalance_pct: o.stats.load_imbalance_pct(),
+            exec_ms: o.stats.time_ms(cfg),
             speedup: 0.0,
-        });
-    }
+        })
+        .collect();
     let worst = rows.iter().map(|r| r.exec_ms).fold(0.0f64, f64::max);
     for r in rows.iter_mut() {
         r.speedup = worst / r.exec_ms;
     }
     rows
+}
+
+/// E3: speedup vs measured load imbalance across balance policies.
+pub fn table3(cfg: &SnowflakeConfig, seed: u64) -> Vec<Table3Row> {
+    table3_rows(&sweep::run_sweep_strict(&table3_jobs(cfg, seed), None), cfg)
 }
 
 pub fn print_table3(rows: &[Table3Row]) {
@@ -176,6 +230,159 @@ pub fn print_table3(rows: &[Table3Row]) {
             r.policy, r.imbalance_pct, r.exec_ms, r.speedup
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Ablations + the one-invocation grid
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub variant: String,
+    pub exec_ms: f64,
+    pub instrs: usize,
+}
+
+/// The AlexNet-conv2-class layer every ablation toggles in isolation.
+pub fn ablation_layer() -> Graph {
+    let mut g = Graph::new("27x27,5x5,64,192,1,2", Shape::new(64, 27, 27));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 64, out_ch: 192, kh: 5, kw: 5, stride: 1, pad: 2, relu: true },
+        "conv2",
+    );
+    g
+}
+
+/// Jobs behind the ablation table: each DESIGN.md design choice toggled
+/// in isolation (delay-slot filling, maps-load splitting, vector-queue
+/// depth, DMA setup cost). First job is the baseline.
+pub fn ablation_jobs(cfg: &SnowflakeConfig, seed: u64) -> Vec<SweepJob> {
+    let base = CompileOptions::default();
+    let mut jobs = vec![
+        SweepJob::new("ablate/baseline (auto, greedy/2)", ablation_layer(), cfg, base.clone())
+            .seed(seed),
+        SweepJob::new(
+            "ablate/smart delay slots (hand)",
+            ablation_layer(),
+            cfg,
+            CompileOptions { smart_delay_slots: true, ..base.clone() },
+        )
+        .seed(seed),
+    ];
+    for split in [1usize, 4] {
+        jobs.push(
+            SweepJob::new(
+                format!("ablate/maps-load split = {split}"),
+                ablation_layer(),
+                cfg,
+                CompileOptions { balance: BalancePolicy::Greedy { split }, ..base.clone() },
+            )
+            .seed(seed),
+        );
+    }
+    for depth in [4usize, 32] {
+        let c = SnowflakeConfig { vector_queue_depth: depth, ..cfg.clone() };
+        jobs.push(
+            SweepJob::new(
+                format!("ablate/vector queue depth = {depth}"),
+                ablation_layer(),
+                &c,
+                base.clone(),
+            )
+            .seed(seed),
+        );
+    }
+    for setup in [8u64, 256] {
+        let c = SnowflakeConfig { dma_setup_cycles: setup, ..cfg.clone() };
+        jobs.push(
+            SweepJob::new(
+                format!("ablate/dma setup = {setup} cycles"),
+                ablation_layer(),
+                &c,
+                base.clone(),
+            )
+            .seed(seed),
+        );
+    }
+    jobs
+}
+
+fn ablation_rows(outs: &[SweepOutcome], cfg: &SnowflakeConfig) -> Vec<AblationRow> {
+    outs.iter()
+        .map(|o| AblationRow {
+            variant: o.name.strip_prefix("ablate/").unwrap_or(&o.name).to_string(),
+            exec_ms: o.stats.time_ms(cfg),
+            instrs: o.code_len,
+        })
+        .collect()
+}
+
+/// Everything [`run_grid`] produced, plus sweep telemetry.
+pub struct GridResults {
+    pub table1: Vec<Table1Row>,
+    pub table2: Vec<Table2Row>,
+    pub table3: Vec<Table3Row>,
+    pub ablations: Vec<AblationRow>,
+    pub jobs: usize,
+    pub threads: usize,
+    pub wall: std::time::Duration,
+    pub total_cycles: u64,
+}
+
+/// E1–E3 + ablations as one parallel sweep: the full paper grid in a
+/// single invocation (`repro sweep`, `cargo bench --bench grid`).
+/// `fast` drops ResNet50 from Table 2.
+pub fn run_grid(
+    cfg: &SnowflakeConfig,
+    seed: u64,
+    fast: bool,
+    threads: Option<usize>,
+) -> GridResults {
+    let models: &[&str] =
+        if fast { &["alexnet", "resnet18"] } else { &["alexnet", "resnet18", "resnet50"] };
+    let mut jobs = table1_jobs(cfg, seed);
+    let n1 = jobs.len();
+    jobs.extend(table2_jobs(cfg, models, seed));
+    let n2 = jobs.len();
+    jobs.extend(table3_jobs(cfg, seed));
+    let n3 = jobs.len();
+    jobs.extend(ablation_jobs(cfg, seed));
+
+    let t0 = std::time::Instant::now();
+    let outs = sweep::run_sweep_strict(&jobs, threads);
+    GridResults {
+        table1: table1_rows(&outs[..n1], cfg),
+        table2: table2_rows(&outs[n1..n2], cfg),
+        table3: table3_rows(&outs[n2..n3], cfg),
+        ablations: ablation_rows(&outs[n3..], cfg),
+        jobs: outs.len(),
+        threads: sweep::resolve_threads(outs.len(), threads),
+        wall: t0.elapsed(),
+        total_cycles: outs.iter().map(|o| o.stats.cycles).sum(),
+    }
+}
+
+pub fn print_grid(g: &GridResults) {
+    print_table1(&g.table1);
+    println!();
+    print_table2(&g.table2);
+    println!();
+    print_table3(&g.table3);
+    println!();
+    println!("Ablations (27x27,5x5,64,192 conv, each knob toggled in isolation):");
+    println!("{:<34} {:>10} {:>8}", "variant", "time [ms]", "instrs");
+    for r in &g.ablations {
+        println!("{:<34} {:>10.3} {:>8}", r.variant, r.exec_ms, r.instrs);
+    }
+    let secs = g.wall.as_secs_f64().max(1e-9);
+    println!(
+        "\ngrid: {} jobs on {} threads in {:.2}s — {:.1}M simulated cycles ({:.1}M cycles/s host)",
+        g.jobs,
+        g.threads,
+        secs,
+        g.total_cycles as f64 / 1e6,
+        g.total_cycles as f64 / 1e6 / secs
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -364,6 +571,41 @@ pub fn quantization_rms(fmt: QFormat, seed: u64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn grid_job_manifest() {
+        // 4 layers x (hand, auto) + 2 models (fast) + 5 policies + 8
+        // ablation variants, with stable name prefixes for splitting.
+        let cfg = SnowflakeConfig::default();
+        let t1 = table1_jobs(&cfg, 1);
+        assert_eq!(t1.len(), 8);
+        assert!(t1[0].name.starts_with("table1/") && t1[0].name.ends_with("/hand"));
+        assert!(t1[1].name.ends_with("/auto"));
+        assert_eq!(table2_jobs(&cfg, &["alexnet", "resnet18"], 1).len(), 2);
+        assert_eq!(table3_jobs(&cfg, 1).len(), 5);
+        let ab = ablation_jobs(&cfg, 1);
+        assert_eq!(ab.len(), 8);
+        assert!(ab[0].name.contains("baseline"));
+    }
+
+    #[test]
+    fn table1_via_sweep_matches_direct_runs() {
+        // The sweep-backed table must agree with straight-line driver
+        // runs (same seeds, deterministic simulation).
+        let cfg = SnowflakeConfig::default();
+        let g = &zoo::table1_layers()[0];
+        let rows = table1(&cfg, 3);
+        let auto = crate::coordinator::driver::run_model(
+            g,
+            &cfg,
+            &CompileOptions::default(),
+            3,
+        )
+        .unwrap();
+        assert_eq!(rows[0].layer, g.name);
+        assert!((rows[0].auto_ms - auto.stats.time_ms(&cfg)).abs() < 1e-12);
+        assert_eq!(rows[0].auto_instrs, auto.compiled.code_len);
+    }
 
     #[test]
     fn fig4_shape_holds() {

@@ -1,0 +1,206 @@
+//! Parallel sweep harness: fan independent (model × config × options ×
+//! balance-policy) simulations across OS threads, so a whole paper grid
+//! (Tables 1–3 + ablations) runs in one invocation at host-core
+//! throughput.
+//!
+//! Jobs are plain data — a graph, a hardware config, compiler options,
+//! a seed and a frame count — and every job is executed through
+//! [`crate::coordinator::driver::run_batch`], i.e. compiled once and
+//! simulated with the event-driven core. Results come back in job
+//! order regardless of which thread ran them, and each job's outcome
+//! is deterministic (fixed seeds, data-independent timing), so a
+//! parallel sweep is bit-identical to a serial one.
+//!
+//! Implementation note: this uses `std::thread::scope` with an atomic
+//! work index instead of `rayon` because the default build must stay
+//! dependency-free for fully offline environments (no registry access;
+//! see rust/Cargo.toml).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use super::driver;
+use crate::arch::SnowflakeConfig;
+use crate::compiler::CompileOptions;
+use crate::model::graph::Graph;
+use crate::sim::stats::Stats;
+
+/// One independent simulation of the sweep.
+pub struct SweepJob {
+    /// Identifier the caller uses to pick results out of the sweep
+    /// (e.g. "table1/conv2/hand").
+    pub name: String,
+    pub graph: Graph,
+    pub cfg: SnowflakeConfig,
+    pub opts: CompileOptions,
+    pub seed: u64,
+    /// Inference frames through one deployment (batched inference).
+    pub frames: usize,
+}
+
+impl SweepJob {
+    pub fn new(
+        name: impl Into<String>,
+        graph: Graph,
+        cfg: &SnowflakeConfig,
+        opts: CompileOptions,
+    ) -> Self {
+        SweepJob { name: name.into(), graph, cfg: cfg.clone(), opts, seed: 42, frames: 1 }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn frames(mut self, frames: usize) -> Self {
+        self.frames = frames.max(1);
+        self
+    }
+}
+
+/// What one job produced.
+pub struct SweepOutcome {
+    pub name: String,
+    /// First frame's full statistics (frames are deterministic).
+    pub stats: Stats,
+    pub per_frame_cycles: Vec<u64>,
+    /// Generated instruction count before bank padding.
+    pub code_len: usize,
+    /// Deployment footprint in memory words.
+    pub plan_words: usize,
+    /// Host wall time for compile + all frames.
+    pub wall: Duration,
+}
+
+pub type SweepResult = Result<SweepOutcome, String>;
+
+/// Worker threads used when the caller does not pin a count.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The worker count [`run_sweep`] will actually use for `jobs` jobs:
+/// requested (or one per host core), never more than there are jobs.
+pub fn resolve_threads(jobs: usize, threads: Option<usize>) -> usize {
+    threads.unwrap_or_else(default_threads).clamp(1, jobs.max(1))
+}
+
+fn execute(job: &SweepJob) -> SweepResult {
+    let t0 = Instant::now();
+    let out = driver::run_batch(&job.graph, &job.cfg, &job.opts, job.seed, job.frames.max(1))
+        .map_err(|e| format!("{}: {e}", job.name))?;
+    Ok(SweepOutcome {
+        name: job.name.clone(),
+        per_frame_cycles: out.per_frame.iter().map(|s| s.cycles).collect(),
+        stats: out.per_frame[0].clone(),
+        code_len: out.compiled.code_len,
+        plan_words: out.compiled.plan.mem_words,
+        wall: t0.elapsed(),
+    })
+}
+
+/// Run every job, `threads` at a time (default: one per host core).
+/// Results are returned in job order; a failed compile or simulation
+/// yields `Err` for that job without disturbing the others.
+pub fn run_sweep(jobs: &[SweepJob], threads: Option<usize>) -> Vec<SweepResult> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let n = resolve_threads(jobs.len(), threads);
+    if n == 1 {
+        return jobs.iter().map(execute).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut results: Vec<Option<SweepResult>> = (0..jobs.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let next = &next;
+                s.spawn(move || {
+                    let mut mine: Vec<(usize, SweepResult)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        mine.push((i, execute(&jobs[i])));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                results[i] = Some(r);
+            }
+        }
+    });
+    results.into_iter().map(|r| r.expect("every job claimed exactly once")).collect()
+}
+
+/// Convenience: run and unwrap, panicking on the first failed job
+/// (bench/table paths where any failure is fatal anyway).
+pub fn run_sweep_strict(jobs: &[SweepJob], threads: Option<usize>) -> Vec<SweepOutcome> {
+    run_sweep(jobs, threads)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("sweep job failed: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{LayerKind, Shape};
+
+    fn conv_graph(name: &str, out_ch: usize) -> Graph {
+        let mut g = Graph::new(name, Shape::new(16, 10, 10));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c",
+        );
+        g
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = SnowflakeConfig::default();
+        let jobs: Vec<SweepJob> = (0..6)
+            .map(|i| {
+                SweepJob::new(
+                    format!("j{i}"),
+                    conv_graph(&format!("g{i}"), 4 + 4 * (i % 3)),
+                    &cfg,
+                    CompileOptions::default(),
+                )
+                .seed(100 + i as u64)
+            })
+            .collect();
+        let serial = run_sweep_strict(&jobs, Some(1));
+        let parallel = run_sweep_strict(&jobs, Some(4));
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.name, p.name, "ordering must be preserved");
+            assert_eq!(s.stats.comparable(), p.stats.comparable(), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn failed_job_is_isolated() {
+        let cfg = SnowflakeConfig::default();
+        // out_ch that is valid next to a graph with an invalid shape
+        // (too few output rows for 4 CUs -> compile error).
+        let mut bad = Graph::new("bad", Shape::new(8, 4, 4));
+        bad.push_seq(
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kh: 3, kw: 3, stride: 2, pad: 0, relu: false },
+            "c",
+        );
+        let jobs = vec![
+            SweepJob::new("ok", conv_graph("g", 8), &cfg, CompileOptions::default()),
+            SweepJob::new("bad", bad, &cfg, CompileOptions::default()),
+        ];
+        let results = run_sweep(&jobs, Some(2));
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+    }
+}

@@ -22,6 +22,8 @@
 //!   (the paper's §5.3 validation path).
 //! * [`runtime`] — PJRT client wrapper: load `artifacts/*.hlo.txt`
 //!   produced by the python build path and execute them natively.
+//!   Feature-gated (`pjrt`): its `xla`/`anyhow` dependencies are not in
+//!   the offline vendor set, so the default build stubs it out.
 //! * [`coordinator`] — end-to-end drivers, metrics and report tables.
 //! * [`fixed`], [`tensor`], [`util`], [`arch`] — substrates.
 
@@ -32,6 +34,7 @@ pub mod fixed;
 pub mod isa;
 pub mod model;
 pub mod refimpl;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

@@ -91,6 +91,30 @@ fn main() {
         }
         Some("run") => {
             let g = load_model(&args);
+            let frames = args.opt_usize("batch", 1);
+            if frames > 1 {
+                // Batched inference: one compile + weight deployment,
+                // N frames through the same machine.
+                let t0 = std::time::Instant::now();
+                let out = driver::run_batch(&g, &cfg, &options(&args), seed, frames)
+                    .unwrap_or_else(|e| {
+                        eprintln!("{e}");
+                        std::process::exit(1);
+                    });
+                let total_cycles = out.total_cycles();
+                for (f, s) in out.per_frame.iter().enumerate() {
+                    println!("{} frame {f}: {}", g.name, s.summary(&cfg));
+                }
+                let ms = cfg.cycles_to_ms(total_cycles);
+                println!(
+                    "batch of {frames}: {:.2} ms total = {:.1} fps ({:.2} ms/frame), host wall {:?}",
+                    ms,
+                    frames as f64 * 1000.0 / ms,
+                    ms / frames as f64,
+                    t0.elapsed()
+                );
+                return;
+            }
             let out = driver::run_model(&g, &cfg, &options(&args), seed).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(1);
@@ -141,6 +165,7 @@ fn main() {
             let n = args.opt_usize("inputs", 48);
             report::print_accuracy(&report::accuracy(n, seed));
         }
+        #[cfg(feature = "pjrt")]
         Some("golden") => {
             // PJRT cross-check: run the conv validator artifact against
             // the rust reference implementation.
@@ -152,15 +177,32 @@ fn main() {
                 }
             }
         }
+        #[cfg(not(feature = "pjrt"))]
+        Some("golden") => {
+            eprintln!(
+                "the golden subcommand needs the `pjrt` feature, which also requires manually \
+                 adding its undeclared deps (see rust/Cargo.toml): add `xla` + `anyhow`, then \
+                 `cargo run --features pjrt`"
+            );
+            std::process::exit(2);
+        }
+        Some("sweep") => {
+            // Parallel sweep: the full Table 1–3 + ablation grid across
+            // all cores (also available as `cargo bench --bench grid`).
+            let threads = args.opt("threads").and_then(|t| t.parse().ok());
+            let fast = args.flag("fast");
+            report::print_grid(&report::run_grid(&cfg, seed, fast, threads));
+        }
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'\n");
             }
             eprintln!(
-                "usage: repro <info|compile|run|validate|table1|table2|table3|fig4|accuracy|golden>\n\
+                "usage: repro <info|compile|run|validate|table1|table2|table3|fig4|accuracy|sweep|golden>\n\
                  \x20  --model alexnet|resnet18|resnet50   --model-file model.json\n\
                  \x20  --balance greedy1|greedy2|greedy4|two-units|one-unit\n\
-                 \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast"
+                 \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
+                 \x20  --batch N (run)  --threads N (sweep)"
             );
             std::process::exit(2);
         }

@@ -51,6 +51,29 @@ impl VecOp {
     }
 }
 
+/// What a CU did in the most recently simulated cycle. The machine's
+/// CU stage records this each cycle; the event-driven core replays it
+/// in bulk over a skipped span (every skipped cycle is provably
+/// identical to the last simulated one), crediting `Stats`' per-CU
+/// busy/stall/starve counters in closed form instead of one at a time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CuPhase {
+    /// Empty queue after HALT: counts toward nothing.
+    #[default]
+    Drained,
+    /// Empty queue while the machine is live: `cu_starved`.
+    Starved,
+    /// Mid-execution (`busy_until` in the future): `cu_busy`.
+    Busy,
+    /// Popped and started an op this cycle: `cu_busy` (forward progress,
+    /// so never seen at the head of a skipped span).
+    Started,
+    /// Front op waiting on a scoreboard fill: `cu_data_stall`.
+    DataStall,
+    /// Front op's writeback blocked by the store drain: `cu_store_stall`.
+    StoreStall,
+}
+
 /// A queued op plus the scoreboard generations it observed at dispatch
 /// (coherence check — §5.2: the compiler must guarantee previously
 /// issued vector instructions are done with a bank before reloading it).
@@ -94,6 +117,30 @@ impl Cu {
             queue: VecDeque::new(),
             busy_until: 0,
         }
+    }
+
+    /// Clear all execution state for a fresh inference (batched runs
+    /// reuse one machine per deployment). Scratchpads are zeroed rather
+    /// than reallocated so a batch frame is bit-identical to a run on a
+    /// freshly constructed machine.
+    pub fn reset(&mut self) {
+        self.mbuf.fill(0);
+        for w in &mut self.wbuf {
+            w.fill(0);
+        }
+        self.bbuf.fill(0);
+        for a in &mut self.acc {
+            *a = [0; 16];
+        }
+        for b in &mut self.bias {
+            *b = [0; 16];
+        }
+        for b in &mut self.bypass {
+            *b = [0; 16];
+        }
+        self.retained = [i16::MIN; 16];
+        self.queue.clear();
+        self.busy_until = 0;
     }
 }
 

@@ -8,10 +8,32 @@
 //! streams plus the writeback drain. Completion events are returned to
 //! the machine, which applies the functional copy and releases the
 //! scoreboard region.
+//!
+//! # Integer byte accounting
+//!
+//! All payload sizes are tracked in **millibytes** (1 byte = 1000 mB),
+//! so a fractional budget like 16.8 B/cycle becomes the exact integer
+//! 16 800 mB/cycle. The budget is fair-shared by integer division; the
+//! remainder is granted one extra millibyte per cycle to the lowest-
+//! numbered transferring units first and the store drain last. Every
+//! participant therefore has a **constant** per-cycle quota while the
+//! participant set is unchanged — which is what lets the event-driven
+//! core ([`super::Machine::run`]) compute stream completion times in
+//! closed form ([`Dma::next_event`]) and skip the cycles in between
+//! ([`Dma::advance`]) with zero accumulation drift. The old `f64`
+//! `bytes_left` counter drifted by ~1e-10 per cycle, enough to move a
+//! completion by a cycle over long runs; integers make the per-cycle
+//! loop and the event-driven core agree bit-for-bit.
 
 use super::cu::Cu;
 use crate::arch::SnowflakeConfig;
 use std::collections::VecDeque;
+
+/// Millibytes per byte — the fixed-point scale of all DMA accounting.
+pub const MILLI: u64 = 1000;
+
+/// Upper bound on load units for the stack-allocated quota vector.
+pub const MAX_UNITS: usize = 16;
 
 /// Where a stream lands.
 #[derive(Clone, Debug)]
@@ -45,7 +67,8 @@ pub struct Stream {
     pub mem_addr: i64,
     pub len_words: u64,
     pub setup_left: u64,
-    pub bytes_left: f64,
+    /// Remaining payload in millibytes (exact integer accounting).
+    pub mb_left: u64,
     pub unit: usize,
 }
 
@@ -68,86 +91,194 @@ impl LoadUnit {
     }
 }
 
+/// Per-cycle millibyte quotas for the current participant set.
+struct Rates {
+    unit: [u64; MAX_UNITS],
+    store: u64,
+}
+
 /// The DMA subsystem: load units + store drain queue.
 pub struct Dma {
     pub units: Vec<LoadUnit>,
-    /// Writeback bytes waiting to drain to DRAM.
-    pub store_bytes: f64,
-    /// CU writebacks stall when the store queue exceeds this.
-    pub store_cap_bytes: f64,
-    word_bytes: f64,
+    /// Writeback millibytes waiting to drain to DRAM.
+    pub store_mb: u64,
+    /// CU writebacks stall when the store queue reaches this (millibytes).
+    pub store_cap_mb: u64,
+    budget_mb: u64,
+    word_mb: u64,
     setup_cycles: u64,
 }
 
 impl Dma {
     pub fn new(cfg: &SnowflakeConfig) -> Self {
+        assert!(cfg.n_load_units <= MAX_UNITS, "too many load units");
         Dma {
             units: (0..cfg.n_load_units).map(|_| LoadUnit::default()).collect(),
-            store_bytes: 0.0,
-            store_cap_bytes: 8192.0,
-            word_bytes: cfg.word_bytes as f64,
+            store_mb: 0,
+            store_cap_mb: 8192 * MILLI,
+            budget_mb: (cfg.axi_bytes_per_cycle * MILLI as f64).round() as u64,
+            word_mb: cfg.word_bytes as u64 * MILLI,
             setup_cycles: cfg.dma_setup_cycles,
         }
+    }
+
+    /// The shared per-cycle budget in millibytes.
+    pub fn budget_mb(&self) -> u64 {
+        self.budget_mb
     }
 
     /// Enqueue a stream on its unit. Caller must have checked
     /// `can_accept`.
     pub fn push(&mut self, mut s: Stream) {
         s.setup_left = self.setup_cycles;
-        s.bytes_left = s.len_words as f64 * self.word_bytes;
+        s.mb_left = s.len_words * self.word_mb;
         let unit = s.unit;
         self.units[unit].queue.push_back(s);
     }
 
+    /// CU writeback traffic entering the store drain.
+    pub fn push_store_bytes(&mut self, bytes: u64) {
+        self.store_mb += bytes * MILLI;
+    }
+
     pub fn store_full(&self) -> bool {
-        self.store_bytes >= self.store_cap_bytes
+        self.store_mb >= self.store_cap_mb
     }
 
     pub fn idle(&self) -> bool {
-        self.units.iter().all(|u| !u.busy()) && self.store_bytes < 1.0
+        self.units.iter().all(|u| !u.busy()) && self.store_mb == 0
+    }
+
+    /// Bytes still owed to in-flight and queued streams plus the store
+    /// drain — the scale factor of the machine's deadlock watchdog.
+    pub fn outstanding_mb(&self) -> u64 {
+        let loads: u64 = self
+            .units
+            .iter()
+            .map(|u| {
+                u.active.as_ref().map_or(0, |s| s.mb_left)
+                    + u.queue.iter().map(|s| s.mb_left).sum::<u64>()
+            })
+            .sum();
+        loads + self.store_mb
+    }
+
+    /// Fair-share quotas for the current participant set. Deterministic:
+    /// the integer budget divides evenly, and the remainder goes one
+    /// millibyte per cycle to the lowest-numbered transferring units
+    /// (the remainder is always smaller than the participant count, so
+    /// the store drain — last in line — never receives any of it).
+    /// Constant while the set is constant.
+    fn rates(&self) -> Rates {
+        let mut r = Rates { unit: [0; MAX_UNITS], store: 0 };
+        let mut transferring = [0usize; MAX_UNITS];
+        let mut n_tr = 0usize;
+        for (i, u) in self.units.iter().enumerate() {
+            if let Some(s) = &u.active {
+                if s.setup_left == 0 {
+                    transferring[n_tr] = i;
+                    n_tr += 1;
+                }
+            }
+        }
+        let storing = self.store_mb > 0;
+        let participants = (n_tr + storing as usize) as u64;
+        if participants == 0 {
+            return r;
+        }
+        let q = self.budget_mb / participants;
+        let rem = self.budget_mb % participants;
+        for (pos, &i) in transferring[..n_tr].iter().enumerate() {
+            r.unit[i] = q + ((pos as u64) < rem) as u64;
+        }
+        if storing {
+            r.store = q; // last in remainder order: rem < participants
+        }
+        r
     }
 
     /// Advance one cycle; returns streams that completed this cycle.
-    /// `axi_bytes` is the total byte budget for the cycle.
-    pub fn tick(&mut self, axi_bytes: f64) -> Vec<Stream> {
+    pub fn tick(&mut self) -> Vec<Stream> {
         // Promote queued streams into idle units.
         for u in self.units.iter_mut() {
             if u.active.is_none() {
                 u.active = u.queue.pop_front();
             }
         }
-        // Count participants in the bandwidth share: transferring loads
-        // (setup done) + the store drain when non-empty.
-        let mut transferring = 0usize;
-        for u in &self.units {
-            if let Some(s) = &u.active {
-                if s.setup_left == 0 {
-                    transferring += 1;
-                }
-            }
-        }
-        let storing = self.store_bytes > 0.0;
-        let participants = transferring + storing as usize;
-        let share = if participants > 0 { axi_bytes / participants as f64 } else { 0.0 };
-
+        // Quotas count transferring loads (setup done) + the store drain.
+        let rates = self.rates();
         let mut done = Vec::new();
-        for u in self.units.iter_mut() {
+        for (i, u) in self.units.iter_mut().enumerate() {
             if let Some(s) = u.active.as_mut() {
                 if s.setup_left > 0 {
                     s.setup_left -= 1;
                 } else {
-                    s.bytes_left -= share;
-                    if s.bytes_left <= 0.0 {
+                    s.mb_left = s.mb_left.saturating_sub(rates.unit[i]);
+                    if s.mb_left == 0 {
                         done.push(u.active.take().unwrap());
                         // Next queued stream starts next cycle.
                     }
                 }
             }
         }
-        if storing {
-            self.store_bytes = (self.store_bytes - share).max(0.0);
-        }
+        self.store_mb = self.store_mb.saturating_sub(rates.store);
         done
+    }
+
+    /// Apply `k` cycles of linear evolution in one jump: setup
+    /// countdowns and transfers at the current (constant) quotas. The
+    /// caller guarantees — via [`Dma::next_event`] — that within the
+    /// span no stream completes, no setup finishes, nothing is promoted
+    /// and the store drain crosses neither zero nor the writeback cap,
+    /// so this is exactly `k` invocations of [`Dma::tick`].
+    pub fn advance(&mut self, k: u64) {
+        let rates = self.rates();
+        for (i, u) in self.units.iter_mut().enumerate() {
+            if let Some(s) = u.active.as_mut() {
+                if s.setup_left > 0 {
+                    debug_assert!(s.setup_left >= k, "span crosses a setup completion");
+                    s.setup_left -= k.min(s.setup_left);
+                } else {
+                    let dec = rates.unit[i].saturating_mul(k);
+                    debug_assert!(s.mb_left > dec, "span crosses a stream completion");
+                    s.mb_left = s.mb_left.saturating_sub(dec);
+                }
+            }
+        }
+        self.store_mb = self.store_mb.saturating_sub(rates.store.saturating_mul(k));
+    }
+
+    /// Earliest cycle ≥ `now` at which the DMA state changes
+    /// discretely, assuming nothing new is pushed in between: a setup
+    /// finishes (the stream joins the bandwidth share), a transfer
+    /// completes, the store drain empties (leaves the share), or the
+    /// store queue first drops below the writeback cap (unblocking
+    /// stalled CUs). `now` is the next cycle the machine will tick.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        let rates = self.rates();
+        let mut best: Option<u64> = None;
+        let mut push = |c: u64| best = Some(best.map_or(c, |b: u64| b.min(c)));
+        for (i, u) in self.units.iter().enumerate() {
+            if let Some(s) = &u.active {
+                if s.setup_left > 0 {
+                    push(now + s.setup_left);
+                } else if rates.unit[i] > 0 {
+                    // Completes during the tick that takes mb_left to 0.
+                    push(now + s.mb_left.div_ceil(rates.unit[i]) - 1);
+                }
+            }
+        }
+        if self.store_mb > 0 && rates.store > 0 {
+            // First tick that sees an empty store queue (share change).
+            push(now + self.store_mb.div_ceil(rates.store));
+            if self.store_mb >= self.store_cap_mb {
+                // First cycle whose own drain brings the queue below the
+                // cap: CU writebacks stalled on `store_full` wake there.
+                let j = (self.store_mb - self.store_cap_mb) / rates.store + 1;
+                push(now + j - 1);
+            }
+        }
+        best
     }
 }
 
@@ -184,7 +315,7 @@ mod tests {
             mem_addr: 0,
             len_words: words,
             setup_left: 0,
-            bytes_left: 0.0,
+            mb_left: 0,
             unit,
         }
     }
@@ -197,7 +328,7 @@ mod tests {
         let mut cycles = 0;
         loop {
             cycles += 1;
-            if !d.tick(c.axi_bytes_per_cycle).is_empty() {
+            if !d.tick().is_empty() {
                 break;
             }
             assert!(cycles < 1000);
@@ -219,7 +350,7 @@ mod tests {
         let mut cycles = 0;
         while done < 2 {
             cycles += 1;
-            done += d.tick(c.axi_bytes_per_cycle).len();
+            done += d.tick().len();
             assert!(cycles < 1000);
         }
         // ~2x a single stream (q-promotion staggers by a cycle).
@@ -235,7 +366,7 @@ mod tests {
         d.push(stream(0, 16));
         assert!(!d.units[0].can_accept());
         // After a tick the first stream becomes active, freeing a slot.
-        d.tick(c.axi_bytes_per_cycle);
+        d.tick();
         assert!(d.units[0].can_accept());
     }
 
@@ -243,18 +374,124 @@ mod tests {
     fn store_drain_shares_bandwidth() {
         let c = cfg();
         let mut d = Dma::new(&c);
-        d.store_bytes = 168.0;
+        d.push_store_bytes(168);
         d.push(stream(0, 168));
         // While both a load and the store drain are active they each get
         // half of 16.8 B/cycle.
         let mut cycles = 0;
         while !d.idle() {
-            d.tick(c.axi_bytes_per_cycle);
+            d.tick();
             cycles += 1;
             assert!(cycles < 100);
         }
         // store: 168 bytes at 8.4 -> 20 cycles; load setup 2 then shares.
         assert!(cycles >= 20, "{cycles}");
+    }
+
+    #[test]
+    fn remainder_split_is_deterministic_and_total() {
+        // 16.8 B/cycle across 5 participants: 16800 mB -> 3360 each, no
+        // remainder; across 7-participant-style odd budgets the shares
+        // must sum to the whole budget. Use a 3-way split: 16800 / 3 =
+        // 5600 exactly; and an odd budget via a custom config.
+        let c = SnowflakeConfig { axi_bytes_per_cycle: 16.801, ..cfg() };
+        let mut d = Dma::new(&c);
+        assert_eq!(d.budget_mb(), 16801);
+        d.push(stream(0, 5000));
+        d.push(stream(1, 5000));
+        d.push_store_bytes(5000);
+        d.tick(); // promotion + setup
+        d.tick(); // setup
+        let before: u64 =
+            d.units.iter().filter_map(|u| u.active.as_ref().map(|s| s.mb_left)).sum::<u64>()
+                + d.store_mb;
+        d.tick(); // first full-transfer cycle
+        let after: u64 =
+            d.units.iter().filter_map(|u| u.active.as_ref().map(|s| s.mb_left)).sum::<u64>()
+                + d.store_mb;
+        assert_eq!(before - after, 16801, "whole budget must be consumed");
+    }
+
+    #[test]
+    fn advance_matches_ticks() {
+        // advance(k) must equal k ticks while no event occurs.
+        let c = cfg();
+        let mk = |d: &mut Dma| {
+            d.push(stream(0, 1680));
+            d.push(stream(1, 840));
+            d.push_store_bytes(600);
+            d.tick(); // promote + first setup cycle
+        };
+        let mut a = Dma::new(&c);
+        let mut b = Dma::new(&c);
+        mk(&mut a);
+        mk(&mut b);
+        // Next event: setup completes 1 cycle after the first tick
+        // (setup_left now 1); advance both to just before it.
+        let ev = a.next_event(1).unwrap();
+        assert_eq!(ev, 2); // setup_left == 1 on both actives
+        // Cannot skip anything here (span 0). Tick through setup, then
+        // compare a bulk advance against single ticks mid-transfer.
+        for _ in 0..2 {
+            a.tick();
+            b.tick();
+        }
+        // Lockstep until both streams and the store drain: `a` jumps
+        // span-by-span, `b` ticks every cycle; state must match at every
+        // event and completions must land on the same cycles.
+        let mut now: u64 = 3;
+        let mut completed = 0usize;
+        let mut guard = 0;
+        while completed < 2 {
+            if let Some(ev) = a.next_event(now) {
+                if ev > now {
+                    let k = ev - now;
+                    a.advance(k);
+                    for _ in 0..k {
+                        assert!(b.tick().is_empty(), "completion inside a span");
+                    }
+                    now = ev;
+                }
+            }
+            let da = a.tick();
+            let db = b.tick();
+            assert_eq!(da.len(), db.len(), "cycle {now}");
+            completed += da.len();
+            now += 1;
+            for (ua, ub) in a.units.iter().zip(&b.units) {
+                assert_eq!(
+                    ua.active.as_ref().map(|s| (s.setup_left, s.mb_left)),
+                    ub.active.as_ref().map(|s| (s.setup_left, s.mb_left)),
+                    "cycle {now}"
+                );
+            }
+            assert_eq!(a.store_mb, b.store_mb, "cycle {now}");
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert!(a.idle() && b.idle());
+    }
+
+    #[test]
+    fn store_cap_crossing_event() {
+        let c = cfg();
+        let mut d = Dma::new(&c);
+        d.push_store_bytes(9000); // above the 8192-byte cap
+        assert!(d.store_full());
+        let ev = d.next_event(0).expect("cap crossing");
+        // Sole participant: 16800 mB/cycle. (9000-8192)*1000 = 808000 mB
+        // over the cap -> floor(808000/16800)+1 = 49 ticks; first cycle
+        // whose own drain dips below the cap is cycle 48.
+        assert_eq!(ev, 48);
+        // The machine checks `store_full` after the cycle's drain: the
+        // checks at cycles 0..=47 still see a full queue; cycle 48 (the
+        // event) is the first whose drain dips below the cap.
+        for c in 0..48 {
+            d.tick();
+            assert!(d.store_full(), "cycle {c}");
+        }
+        d.tick();
+        assert!(!d.store_full());
     }
 
     #[test]
@@ -273,7 +510,7 @@ mod tests {
             mem_addr: 5,
             len_words: 8,
             setup_left: 0,
-            bytes_left: 0.0,
+            mb_left: 0,
             unit: 0,
         };
         apply_copy(&s, &memory, &mut cus);

@@ -12,6 +12,13 @@
 //! * is corrupted exactly when a fill with generation > `g` has already
 //!   completed — the hazard the compiler must prevent and the machine
 //!   reports.
+//!
+//! The board is purely edge-triggered — state changes only at
+//! `begin_fill` (an LD issue) and `set_ready` (a DMA completion), never
+//! with the passage of time. That property is what lets the event-driven
+//! core ([`super::Machine`]) skip whole wait spans without re-polling
+//! readiness: between two events every `done_upto`/`overlaps_outstanding`
+//! answer is provably frozen.
 
 /// Per-CU set of buffer regions.
 #[derive(Clone, Debug)]

@@ -8,7 +8,7 @@
 use crate::arch::SnowflakeConfig;
 
 /// Counters accumulated over one simulation run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Stats {
     /// Total machine cycles until completion.
     pub cycles: u64,
@@ -49,6 +49,13 @@ pub struct Stats {
     pub mac_ops: u64,
     /// Vector-compare operations performed.
     pub max_ops: u64,
+
+    /// Event-core diagnostics: wait spans jumped in closed form and the
+    /// cycles they covered. Zero under the per-cycle oracle — these two
+    /// are the only counters allowed to differ between the cores
+    /// (`tests/sim_equivalence.rs` compares everything else).
+    pub event_spans: u64,
+    pub cycles_skipped: u64,
 }
 
 impl Stats {
@@ -62,6 +69,12 @@ impl Stats {
             unit_streams: vec![0; cfg.n_load_units],
             ..Default::default()
         }
+    }
+
+    /// Copy with the event-core diagnostics cleared — the cross-core
+    /// equality the differential tests assert (`sim_equivalence.rs`).
+    pub fn comparable(&self) -> Stats {
+        Stats { event_spans: 0, cycles_skipped: 0, ..self.clone() }
     }
 
     pub fn bytes_loaded(&self) -> u64 {

@@ -436,6 +436,116 @@ fn coherence_interlock_stalls_conflicting_reload() {
     assert!(stats.stall_coherence > 0, "{}", stats.stall_coherence);
 }
 
+/// Run the same program + DRAM image under both cores; the stats and
+/// the whole DRAM must agree (the asm-level differential check; the
+/// compiled-model version lives in tests/sim_equivalence.rs).
+fn assert_cores_agree(mem_words: usize, init: &[(usize, Vec<f32>)], text: &str) -> Stats {
+    let build = |core: CoreMode| {
+        let mut m = machine(mem_words);
+        m.core = core;
+        for (addr, vals) in init {
+            write_q(&mut m, *addr, vals);
+        }
+        let s = run_asm(&mut m, text);
+        (m, s)
+    };
+    let (me, se) = build(CoreMode::EventDriven);
+    let (mc, sc) = build(CoreMode::PerCycle);
+    assert_eq!(se.cycles, sc.cycles, "cycles diverged");
+    assert_eq!(se.comparable(), sc.comparable(), "stats diverged");
+    assert_eq!(me.memory, mc.memory, "DRAM diverged");
+    se
+}
+
+#[test]
+fn event_core_matches_per_cycle_on_mac_pipeline() {
+    // Loads + long MACs + writebacks: exercises DMA sharing, queue-full
+    // stalls, CU busy spans and the store drain in one program.
+    let init = vec![(0usize, vec![0.25f32; 4096]), (8192usize, vec![0.5f32; 3200])];
+    let s = assert_cores_agree(
+        64 * 1024,
+        &init,
+        "movi r1, 0\n\
+         movi r2, 4096\n\
+         movi r3, 0\n\
+         ld mbuf bcast u=0 cu=0 bank=0 buf=r3, mem=r1, len=r2\n\
+         movi r4, 8192\n\
+         movi r7, 3200\n\
+         ld wbuf bcast u=1 cu=0 v=0 buf=r3, mem=r4, len=r7\n\
+         movi r5, 60000\n\
+         movi r28, 1\n\
+         movi r31, 16\n\
+         mac coop r5, r3, r3, len=200, wb, reset\n\
+         mac coop r5, r3, r3, len=200, wb, reset\n\
+         mac coop r5, r3, r3, len=150, wb, reset\n\
+         halt\n",
+    );
+    // The point of the event core: most of this run is skipped spans.
+    assert!(s.cycles_skipped > s.cycles / 2, "skipped {}/{}", s.cycles_skipped, s.cycles);
+    assert!(s.event_spans > 0);
+}
+
+#[test]
+fn event_core_matches_per_cycle_on_branch_loop() {
+    // Scalar loop with RAW stalls and branch delay slots: issue-bound,
+    // so spans are short but RAW events must still line up exactly.
+    let s = assert_cores_agree(
+        64,
+        &[],
+        "movi r1, 40\n\
+         movi r2, 0\n\
+         loop:\n\
+         addi r2, r2, 1\n\
+         ble r2, r1, @loop\n\
+         addi r3, r3, 1\n\
+         addi r4, r4, 1\n\
+         addi r5, r5, 1\n\
+         addi r6, r6, 1\n\
+         halt\n",
+    );
+    assert!(s.stall_raw > 0);
+}
+
+#[test]
+fn watchdog_scales_with_outstanding_dma() {
+    // A watchdog far smaller than one DMA setup+transfer must no longer
+    // deadlock the per-cycle core: the threshold now stretches by the
+    // outstanding bytes' worst-case drain time.
+    let mut m = machine(16 * 1024);
+    m.core = CoreMode::PerCycle;
+    m.watchdog = 16; // < dma_setup_cycles (64), let alone the transfer
+    write_q(&mut m, 0, &[1.0; 4096]);
+    let s = run_asm(
+        &mut m,
+        "movi r1, 0\n\
+         movi r2, 4096\n\
+         movi r3, 0\n\
+         ld mbuf bcast u=0 cu=0 bank=0 buf=r3, mem=r1, len=r2\n\
+         halt\n",
+    );
+    assert!(s.cycles > 500, "{}", s.cycles); // setup 64 + ~488 transfer
+}
+
+#[test]
+fn event_core_reports_true_deadlock_immediately() {
+    // Fetch-stalled forever with no DMA in flight: the event core finds
+    // no next event and reports right away, no watchdog spin.
+    let cfg = SnowflakeConfig::default();
+    let mut prog: Vec<Instr> = Vec::new();
+    while prog.len() < 1100 {
+        prog.push(Instr::Addi { rd: 10, rs1: 10, imm: 1 });
+    }
+    prog.push(Instr::Halt);
+    let mut m = Machine::new(cfg, Q8_8, 1024);
+    m.load_program(prog);
+    let err = m.run().unwrap_err();
+    assert!(err.message.contains("no forward progress"), "{err}");
+    // Detected as soon as the pending scalar latency drains (the ~1024
+    // RAW-interleaved issues take ~2k cycles), not after millions of
+    // watchdog cycles.
+    assert!(err.cycle < 5000, "{}", err.cycle);
+}
+
 #[test]
 fn double_buffering_overlaps_load_and_compute() {
     // Compute from mbuf bank 0 while loading bank 1: total time must be
