@@ -1,0 +1,155 @@
+//! Bench + CI gate for cost-model-driven schedule tuning.
+//!
+//! Three checks, all on AlexNetOWT and ResNet18 end-to-end (FC
+//! excluded, as Table 2):
+//!
+//! 1. **Prediction error**: the analytical model's predicted cycles per
+//!    conv layer must stay within `cost::MODEL_ERROR_BOUND` of the
+//!    event core (either direction), layer by layer.
+//! 2. **Tuning quality**: measured-tuned schedules must never be slower
+//!    than the seed heuristic (the tuner includes the heuristic
+//!    configuration among its trials, so a violation is a code bug).
+//! 3. **Absolute regression gate**: when `ci/schedule_baseline.json`
+//!    carries blessed cycle counts (deterministic; regenerate with
+//!    `repro bless-baselines`), tuned cycles exceeding the baseline
+//!    fail the run.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::cost::MODEL_ERROR_BOUND;
+use snowflake::coordinator::report;
+use snowflake::util::json::Json;
+
+/// The blessed baseline: distinguish "absent" (gate legitimately
+/// skipped) from "unparsable" (must fail loudly, not disarm the gate).
+enum Baseline {
+    Missing,
+    Corrupt(String),
+    Loaded(Json),
+}
+
+fn baseline() -> Baseline {
+    let path = std::env::var("SCHEDULE_BASELINE").unwrap_or_else(|_| {
+        format!("{}/../ci/schedule_baseline.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    match std::fs::read_to_string(&path) {
+        Err(_) => Baseline::Missing,
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => Baseline::Loaded(j),
+            Err(e) => Baseline::Corrupt(format!("{path}: {e}")),
+        },
+    }
+}
+
+fn main() {
+    let cfg = SnowflakeConfig::default();
+    let models = ["alexnet", "resnet18"];
+    let mut failures = 0usize;
+
+    // The baseline records the (seed, top_k) it was blessed with; the
+    // gate must re-measure under the same parameters to be comparable.
+    let base = baseline();
+    let (seed, top_k) = match &base {
+        Baseline::Loaded(j) => (
+            j.get("seed").as_i64().unwrap_or(42) as u64,
+            j.get("top_k").as_i64().unwrap_or(2) as usize,
+        ),
+        _ => (42, 2),
+    };
+
+    // ---- 1. per-layer prediction error -------------------------------
+    for m in &models {
+        let rows = report::prediction_error(&cfg, m, seed);
+        report::print_prediction_error(m, &rows);
+        for r in &rows {
+            if r.ratio > MODEL_ERROR_BOUND || r.ratio < 1.0 / MODEL_ERROR_BOUND {
+                eprintln!(
+                    "MODEL ERROR: {m}/{}: predicted {} vs measured {} (ratio {:.2}) outside \
+                     the {MODEL_ERROR_BOUND:.1}x bound",
+                    r.layer, r.predicted, r.measured, r.ratio
+                );
+                failures += 1;
+            }
+        }
+        println!();
+    }
+
+    // ---- 2. heuristic vs cost-model vs measured ----------------------
+    // (The heuristic/cost-model sweep legs intentionally duplicate the
+    // baselines tune_measured simulates internally: the table rows come
+    // from the standard compile path, independent of the tuner's
+    // bookkeeping.)
+    let t0 = std::time::Instant::now();
+    let rows = report::schedule_quality(&cfg, &models, seed, top_k);
+    report::print_schedule_quality(&rows);
+    println!("(schedule-quality sweep + measured tuning in {:?})", t0.elapsed());
+
+    let cycles_of = |model: &str, mode: &str| {
+        rows.iter()
+            .find(|r| r.model == model && r.mode == mode)
+            .unwrap_or_else(|| panic!("missing {model}/{mode} row"))
+            .cycles
+    };
+    for m in &models {
+        let h = cycles_of(m, "heuristic");
+        let t = cycles_of(m, "measured");
+        let a = cycles_of(m, "cost-model");
+        println!(
+            "{m}: heuristic {h} | cost-model {a} ({:+.2}%) | measured {t} ({:+.2}%)",
+            (a as f64 / h as f64 - 1.0) * 100.0,
+            (t as f64 / h as f64 - 1.0) * 100.0
+        );
+        if t > h {
+            eprintln!(
+                "TUNING REGRESSION: {m} measured-tuned {t} cycles slower than the seed \
+                 heuristic {h} — the tuner must never lose to a configuration it trials"
+            );
+            failures += 1;
+        }
+    }
+
+    // ---- 3. absolute gate vs the blessed baseline --------------------
+    match base {
+        Baseline::Corrupt(e) => {
+            eprintln!("BASELINE UNREADABLE: {e} — fix or re-bless ci/schedule_baseline.json");
+            failures += 1;
+        }
+        Baseline::Loaded(json) => {
+            let mut gated = 0usize;
+            for m in &models {
+                let base = json.get("models").get(m).get("tuned_cycles").as_i64();
+                match base {
+                    Some(base) => {
+                        gated += 1;
+                        let t = cycles_of(m, "measured");
+                        if t > base as u64 {
+                            eprintln!(
+                                "SCHEDULE REGRESSION: {m} tuned {t} cycles exceeds the blessed \
+                                 baseline {base} (ci/schedule_baseline.json)"
+                            );
+                            failures += 1;
+                        } else if t < base as u64 {
+                            println!(
+                                "{m}: tuned {t} beats the blessed baseline {base} — consider \
+                                 `repro bless-baselines`"
+                            );
+                        }
+                    }
+                    None => println!("{m}: no blessed entry; absolute gate skipped"),
+                }
+            }
+            if gated == 0 {
+                println!(
+                    "(baseline has no model entries yet; run `repro bless-baselines` to arm \
+                     the absolute gate — the relative tuned<=heuristic gate is always on)"
+                );
+            }
+        }
+        Baseline::Missing => println!("(no ci/schedule_baseline.json found; absolute gate skipped)"),
+    }
+
+    if failures > 0 {
+        eprintln!("{failures} tuning gate failure(s)");
+        std::process::exit(1);
+    }
+    println!("tuning gates passed");
+}

@@ -34,6 +34,13 @@ impl UnitAllocator {
         UnitAllocator { policy, bytes: vec![0; n_units], rr: 0 }
     }
 
+    /// Switch the assignment policy mid-stream (per-layer tuned
+    /// policies). The running byte counters are kept, so Greedy keeps
+    /// balancing across layer boundaries.
+    pub fn set_policy(&mut self, policy: BalancePolicy) {
+        self.policy = policy;
+    }
+
     /// How many pieces to split a maps stream into.
     pub fn map_split(&self) -> usize {
         match self.policy {
@@ -121,5 +128,45 @@ mod tests {
     fn split_factor_from_policy() {
         assert_eq!(UnitAllocator::new(BalancePolicy::Greedy { split: 4 }, 4).map_split(), 4);
         assert_eq!(UnitAllocator::new(BalancePolicy::OneUnit, 4).map_split(), 1);
+    }
+
+    /// Pin the Greedy selection contract: strictly least-loaded unit
+    /// wins; byte-count ties break round-robin starting after the last
+    /// winner, so equal streams rotate fairly across all units.
+    #[test]
+    fn greedy_least_loaded_and_round_robin_tie_break() {
+        let mut a = UnitAllocator::new(BalancePolicy::Greedy { split: 2 }, 4);
+        // All-zero counters: ties rotate 0, 1, 2, 3.
+        assert_eq!(a.unit_for(StreamClass::Maps, 10), 0);
+        assert_eq!(a.unit_for(StreamClass::Weights, 10), 1);
+        assert_eq!(a.unit_for(StreamClass::Weights, 10), 2);
+        assert_eq!(a.unit_for(StreamClass::Bias, 10), 3);
+        // Equal again: the rotation wraps to unit 0.
+        assert_eq!(a.unit_for(StreamClass::Maps, 10), 0);
+        // A heavy stream loads unit 1; subsequent equal-byte ties must
+        // keep rotating among the (now lighter) others…
+        assert_eq!(a.unit_for(StreamClass::Maps, 100), 1);
+        assert_eq!(a.unit_for(StreamClass::Weights, 10), 2);
+        // …and the strictly least-loaded unit (3, untouched since its
+        // first 10-word stream) wins over the rotation order.
+        assert_eq!(a.unit_for(StreamClass::Weights, 10), 3);
+        // Unit 1 (the heavy one) is only chosen again once it is no
+        // longer strictly heavier than every alternative.
+        let picks: Vec<u8> = (0..4).map(|_| a.unit_for(StreamClass::Maps, 10)).collect();
+        assert!(!picks.contains(&1), "heavy unit picked while lighter ones exist: {picks:?}");
+    }
+
+    #[test]
+    fn policy_switch_keeps_byte_counters() {
+        let mut a = UnitAllocator::new(BalancePolicy::Greedy { split: 2 }, 4);
+        a.unit_for(StreamClass::Maps, 100);
+        a.set_policy(BalancePolicy::OneUnit);
+        assert_eq!(a.map_split(), 1);
+        a.unit_for(StreamClass::Maps, 100);
+        a.set_policy(BalancePolicy::Greedy { split: 4 });
+        assert_eq!(a.map_split(), 4);
+        // Counters survived both switches: unit 0 carries 400 bytes, so
+        // greedy avoids it.
+        assert_ne!(a.unit_for(StreamClass::Maps, 10), 0);
     }
 }

@@ -1,15 +1,36 @@
-//! Convolution code generation (Kloop structure of Fig. 3): per map
-//! tile, stream kernel groups through the double-buffered weight
-//! buffers; inside, Y and X loops walk windows whose kh×segment MAC
-//! traces accumulate in the vMACs, with VMOV-staged biases and residual
-//! bypass values applied on writeback.
+//! Convolution code generation (the two loop skeletons of Fig. 3).
+//!
+//! **Kloop** (maps resident per tile): per map tile, stream kernel
+//! groups through the double-buffered weight buffers; inside, Y and X
+//! loops walk windows whose kh×segment MAC traces accumulate in the
+//! vMACs, with VMOV-staged biases and residual bypass values applied on
+//! writeback.
+//!
+//! **Mloop** (kernels streamed once, maps fully resident): available
+//! when every map strip fits its own MBuf bank simultaneously
+//! (`n_tiles ≤ mbuf_banks`) and the conv has no fused bypass. All
+//! strips are staged in the prologue; the kernel-group loop then walks
+//! the tiles *inside* each group iteration, so the kernel stream is
+//! read exactly once instead of once per tile — the §6.2 rearrangement
+//! that trades map residency for kernel-traffic elimination. The
+//! schedule tuner ([`crate::compiler::cost`]) picks between the two per
+//! layer.
+//!
+//! The two emitters deliberately share the window walk and the WBuf
+//! prefetch protocol *textually* (the Y/X loop bodies and the
+//! Muli/Add/Ld/Mov toggle sequence are the same instructions): the
+//! `counted_loop` `FnOnce` nesting makes a parameterized shared helper
+//! more tangled than the duplication it removes. Any edit to one
+//! skeleton's window walk or prefetch must be mirrored in the other —
+//! `tests/sim_equivalence.rs` and `tests/compile_sim.rs` pin both
+//! against the per-cycle core and the reference implementation.
 
 use super::emit::*;
 use crate::compiler::balance::{StreamClass, UnitAllocator};
 use crate::compiler::decide::ConvPlan;
 use crate::compiler::layout::Canvas;
 use crate::compiler::tile::{map_tiles, MapTile};
-use crate::compiler::CompileOptions;
+use crate::compiler::{CompileOptions, LoopOrder};
 use crate::arch::SnowflakeConfig;
 use crate::isa::instr::{Instr, LdTarget, MacFlags, Program, VmovSel};
 
@@ -24,14 +45,14 @@ pub struct ConvCtx<'a> {
     pub bias_addr: usize,
 }
 
-/// Emit the per-CU maps strip loads for one tile (split per the balance
-/// policy).
+/// Emit the per-CU maps strip loads for one tile (split per the
+/// layer's tuned schedule).
 fn emit_maps_loads(e: &mut Emitter, ctx: &ConvCtx, tile: &MapTile, alloc: &mut UnitAllocator) {
     let d = ctx.d;
     let strip_rows = tile.in_rows(d.kh, d.stride) + crate::compiler::decide::CONV_SPILL_ROWS;
     let strip_words = strip_rows * ctx.in_cv.row_words();
     let bank_base = tile.bank * ctx.cfg.mbuf_bank_words();
-    let split = alloc.map_split().min(strip_words.div_ceil(64));
+    let split = d.split.max(1).min(strip_words.div_ceil(64));
     for cu in 0..ctx.cfg.n_cus {
         // First canvas row of this CU's strip: output row oy maps to
         // canvas row oy*stride + (mp - pad).
@@ -158,17 +179,18 @@ fn emit_window(e: &mut Emitter, ctx: &ConvCtx) {
     }
 }
 
-/// Emit a full convolution layer: a prologue block plus one block per
-/// map tile.
+/// Emit a full convolution layer with the skeleton the schedule chose.
 pub fn emit_conv(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
-    let cfg = ctx.cfg;
-    let d = ctx.d;
-    let tiles = map_tiles(d.h_out, d.rows_per_cu, cfg);
-    let region_words = cfg.wbuf_region_words();
-    let mut blocks = Vec::new();
+    match ctx.d.order {
+        LoopOrder::Kloop => emit_conv_kloop(ctx, alloc),
+        LoopOrder::Mloop => emit_conv_mloop(ctx, alloc),
+    }
+}
 
-    // ------------------------- prologue -------------------------------
-    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+/// Shared prologue: pipeline constants plus the broadcast bias-array
+/// load. Maps staging differs per skeleton and is emitted by callers.
+fn emit_conv_prologue(e: &mut Emitter, ctx: &ConvCtx, alloc: &mut UnitAllocator) {
+    let d = ctx.d;
     let row_words_in = ctx.in_cv.row_words() as i64;
     let row_words_out = ctx.out_cv.row_words() as i64;
     e.movi(R_ROWW_IN, row_words_in);
@@ -183,27 +205,40 @@ pub fn emit_conv(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
         e.movi(R_MISC, ctx.byp_cv.unwrap().row_words() as i64);
     }
     if d.dbuf_w {
-        e.movi(R_REGION, region_words as i64);
+        e.movi(R_REGION, ctx.cfg.wbuf_region_words() as i64);
     }
     // Bias array -> BBuf[0..] (broadcast).
-    {
-        let words = d.k_groups * 4;
-        let unit = alloc.unit_for(StreamClass::Bias, words);
-        e.movi(R_LDTMP, 0);
-        e.movi(R_T0, ctx.bias_addr as i64);
-        e.movi(R_T1, words as i64);
-        e.c(
-            Instr::Ld {
-                target: LdTarget::BBuf { cu: 0 },
-                broadcast: true,
-                unit,
-                rd: R_LDTMP,
-                rs1: R_T0,
-                rs2: R_T1,
-            },
-            "bias array",
-        );
-    }
+    let words = d.k_groups * 4;
+    let unit = alloc.unit_for(StreamClass::Bias, words);
+    e.movi(R_LDTMP, 0);
+    e.movi(R_T0, ctx.bias_addr as i64);
+    e.movi(R_T1, words as i64);
+    e.c(
+        Instr::Ld {
+            target: LdTarget::BBuf { cu: 0 },
+            broadcast: true,
+            unit,
+            rd: R_LDTMP,
+            rs1: R_T0,
+            rs2: R_T1,
+        },
+        "bias array",
+    );
+}
+
+/// The Kloop skeleton: a prologue block plus one block per map tile,
+/// kernel groups streamed through the double-buffered WBuf per tile.
+fn emit_conv_kloop(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let d = ctx.d;
+    let tiles = map_tiles(d.h_out, d.rows_per_cu, cfg);
+    let region_words = cfg.wbuf_region_words();
+    let mut blocks = Vec::new();
+
+    // ------------------------- prologue -------------------------------
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    let row_words_out = ctx.out_cv.row_words() as i64;
+    emit_conv_prologue(&mut e, ctx, alloc);
     // Maps strips for tile 0.
     emit_maps_loads(&mut e, ctx, &tiles[0], alloc);
     blocks.push(e.prog);
@@ -300,5 +335,99 @@ pub fn emit_conv(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
         );
         blocks.push(e.prog);
     }
+    blocks
+}
+
+/// The Mloop skeleton: every map strip staged once (each tile in its
+/// own MBuf bank), then a single kernel-group loop whose body walks the
+/// tiles — the kernel stream is read exactly once. Requires
+/// `n_tiles <= mbuf_banks` and no fused bypass ([`crate::compiler::cost::mloop_viable`]);
+/// `decide` guarantees both before selecting this skeleton.
+fn emit_conv_mloop(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let d = ctx.d;
+    debug_assert!(!d.has_bypass, "Mloop skeleton cannot stage bypass strips");
+    let tiles = map_tiles(d.h_out, d.rows_per_cu, cfg);
+    debug_assert!(tiles.len() <= cfg.mbuf_banks, "Mloop needs every strip resident");
+    let row_words_out = ctx.out_cv.row_words() as i64;
+    let mut blocks = Vec::new();
+
+    // ---------------- prologue: constants + all map strips ------------
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    emit_conv_prologue(&mut e, ctx, alloc);
+    for tile in &tiles {
+        emit_maps_loads(&mut e, ctx, tile, alloc);
+    }
+    blocks.push(e.prog);
+
+    // ---------------- the kernel-group loop ---------------------------
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    // Kernel group 0 into region 0; the in-loop prefetch then streams
+    // groups 1..=k_groups (the last being the dummy prefetch group).
+    e.movi(R_WREG, 0);
+    e.movi(R_LDTMP, ctx.weights_addr as i64);
+    emit_kernel_group_loads(&mut e, ctx, R_WREG, alloc);
+    e.movi(R_KMEM, (ctx.weights_addr + 4 * d.kernel_words) as i64);
+    e.movi(R_BIAS, 0);
+    let col_off = ((ctx.in_cv.mp - d.pad) * d.c_pad_in) as i64;
+
+    e.counted_loop(
+        R_KC,
+        R_KL,
+        d.k_groups,
+        |e| {
+            e.e(Instr::Vmov { sel: VmovSel::Bias, rs1: R_BIAS, wide: false });
+            for tile in &tiles {
+                let bank_base = (tile.bank * cfg.mbuf_bank_words()) as i64;
+                e.movi(R_MROW, bank_base);
+                e.movi(R_OUTBASE, ctx.out_cv.addr_u(0, tile.oy0, 0) as i64);
+                e.movi(31, tile.rows_per_cu as i64 * row_words_out); // per-CU row offset
+                e.e(Instr::Add { rd: R_T1, rs1: R_OUTBASE, rs2: R_BIAS });
+                e.counted_loop(
+                    R_YC,
+                    R_YL,
+                    tile.rows_per_cu,
+                    |e| {
+                        e.addi(R_MWIN, R_MROW, col_off);
+                        e.e(Instr::Add { rd: R_OUT, rs1: R_T1, rs2: 0 });
+                        e.counted_loop(
+                            R_XC,
+                            R_XL,
+                            d.w_out,
+                            |e| emit_window(e, ctx),
+                            |e, _| {
+                                e.e(Instr::Add { rd: R_MWIN, rs1: R_MWIN, rs2: R_XADV });
+                                e.e(Instr::Add { rd: R_OUT, rs1: R_OUT, rs2: R_CPO });
+                            },
+                        );
+                    },
+                    |e, _| {
+                        e.e(Instr::Add { rd: R_MROW, rs1: R_MROW, rs2: R_YADV });
+                        e.e(Instr::Add { rd: R_T1, rs1: R_T1, rs2: R_ROWW_OUT });
+                    },
+                );
+            }
+            // Prefetch the next kernel group into the other WBuf region
+            // (dummy on the last iteration; the region interlock keeps
+            // reloads behind pending readers).
+            if d.dbuf_w {
+                e.e(Instr::Muli { rd: R_NOP, rs1: R_WREG, imm: -1 });
+                e.e(Instr::Add { rd: R_T0, rs1: R_REGION, rs2: R_NOP });
+            } else {
+                e.e(Instr::Add { rd: R_T0, rs1: 0, rs2: 0 });
+            }
+            e.e(Instr::Add { rd: R_LDTMP, rs1: R_KMEM, rs2: 0 });
+            emit_kernel_group_loads(e, ctx, R_T0, alloc);
+            e.e(Instr::Mov { rd: R_NOP, rs1: R_KW, sh: 2 });
+            e.e(Instr::Add { rd: R_KMEM, rs1: R_KMEM, rs2: R_NOP });
+            if d.dbuf_w {
+                e.e(Instr::Add { rd: R_WREG, rs1: R_T0, rs2: 0 });
+            }
+        },
+        |e, _| {
+            e.e(Instr::Addi { rd: R_BIAS, rs1: R_BIAS, imm: 4 });
+        },
+    );
+    blocks.push(e.prog);
     blocks
 }

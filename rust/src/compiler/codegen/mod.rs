@@ -38,6 +38,13 @@ pub fn generate(
     for (li, lp) in plan.layers.iter().enumerate() {
         let in_cv = plan.in_canvas(&lp.op);
         let out_cv = plan.out_canvas(&lp.op);
+        // Per-layer tuned balance policy for conv streams; non-conv
+        // layers keep the global policy. Byte counters persist across
+        // layers so Greedy balances the whole program.
+        alloc.set_policy(match &lp.decision {
+            OpPlan::Conv(d) => d.policy,
+            _ => opts.balance,
+        });
         let bs = match (&lp.op, &lp.decision) {
             (Lowered::Conv { bypass, .. }, OpPlan::Conv(d)) => {
                 let ctx = conv::ConvCtx {
@@ -91,6 +98,8 @@ pub fn generate(
     }
 
     // ---- bank packing (block-size prediction + icache prologues) -----
+    // Icache reload streams use the global policy, not the last conv's.
+    alloc.set_policy(opts.balance);
     let bank = cfg.icache_bank_instrs;
     for (bi, b) in blocks.iter().enumerate() {
         if b.len() > bank - PROLOGUE_SLOTS {

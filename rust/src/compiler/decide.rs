@@ -4,6 +4,13 @@
 //! capacities, and trace segmentation from the instruction-latency
 //! constraints.
 //!
+//! Conv schedules (loop order × `rows_per_cu` × maps split × balance
+//! policy) are picked by the cost-model search in [`super::cost`] under
+//! the default [`super::TuneMode::Analytical`]; `TuneMode::Heuristic`
+//! reproduces the seed's fixed heuristic, and explicit per-layer
+//! overrides arrive through `CompileOptions::schedules` (the measured
+//! tuner's channel, `coordinator/tune.rs`).
+//!
 //! Mode note (DESIGN.md §ISA-reconstruction): with the channel-
 //! interleaved canvas layout every convolution — including the 3-channel
 //! first layer — maps efficiently onto COOP traces (channels pad to 4,
@@ -12,8 +19,9 @@
 //! the depthwise average-pool lowering, where the 16-lane diagonal
 //! weight block computes 64 channel means per trace group.
 
+use super::cost::{self, CostEstimate, Schedule};
 use super::layout::{c_pad, Lowered};
-use super::{CompileError, CompileOptions, LoopOrder};
+use super::{CompileError, CompileOptions, LoopOrder, TuneMode};
 use crate::arch::SnowflakeConfig;
 use crate::model::layer::Shape;
 
@@ -103,7 +111,17 @@ pub struct ConvPlan {
     pub k_groups: usize,
     pub rows_per_cu: usize,
     pub n_tiles: usize,
+    /// The loop order codegen emits (already clamped to what the
+    /// skeletons support — see [`cost::effective_order`]).
     pub order: LoopOrder,
+    /// Maps-strip split factor (§6.3 pieces per per-CU strip load).
+    pub split: usize,
+    /// LD balance policy for this layer's streams.
+    pub policy: super::BalancePolicy,
+    /// Constraint cap `rows_per_cu` was chosen under (tuner bound).
+    pub max_rows: usize,
+    /// Analytical model's prediction for the chosen schedule.
+    pub predicted: CostEstimate,
     /// Kernel group fits a WBuf region → double-buffered group loads.
     pub dbuf_w: bool,
     pub has_bypass: bool,
@@ -251,7 +269,7 @@ pub fn decide(
     let row_words_in = w_canvas_in * c_pad(in_shape.c);
 
     match *op {
-        Lowered::Conv { in_ch, out_ch, kh, kw, stride, pad, bypass, relu, .. } => {
+        Lowered::Conv { node, in_ch, out_ch, kh, kw, stride, pad, bypass, relu, .. } => {
             let geom = conv_geometry(in_shape, kw, stride, pad, out_shape.w);
             let kernel_words = kh * geom.row_read;
             if kernel_words > cfg.wbuf_words() {
@@ -280,36 +298,59 @@ pub fn decide(
                     out_shape.h, cfg.n_cus
                 )));
             }
-            let mut rows_per_cu = ((max_in_rows - kh) / stride + 1).max(1);
+            let mut max_rows = ((max_in_rows - kh) / stride + 1).max(1);
             // BBuf constraint when a bypass strip must stage alongside
             // the biases (margin-inclusive rows of the output canvas).
+            let byp_row_words = (out_shape.w + 2 * in_mp + 8) * c_pad(out_shape.c);
             if bypass.is_some() {
-                let row_words_out = (out_shape.w + 2 * in_mp + 8) * c_pad(out_shape.c);
                 let budget = cfg.bbuf_words().saturating_sub(k_groups * 4);
-                rows_per_cu = rows_per_cu.min((budget / row_words_out).max(1));
+                max_rows = max_rows.min((budget / byp_row_words).max(1));
             }
             // Floor division: the tile span must not exceed h_out (the
             // last tile shifts back and recomputes instead of writing
             // garbage into the consumer's padding margin).
-            rows_per_cu = rows_per_cu.min((out_shape.h / cfg.n_cus).max(1));
-            let n_tiles = out_shape.h.div_ceil(rows_per_cu * cfg.n_cus);
+            max_rows = max_rows.min((out_shape.h / cfg.n_cus).max(1));
 
-            // §6.2 loop rearrangement: pick the order with less traffic.
-            // Mloop keeps a 16-kernel machine set resident (4 CUs x 4
-            // vMACs) and re-sends map tiles per set; Kloop keeps map
-            // strips resident and re-streams kernels per tile.
-            let strip_words = ((rows_per_cu - 1) * stride + kh) * row_words_in;
-            let maps_once = n_tiles as u64 * cfg.n_cus as u64 * strip_words as u64;
-            let kernels_once = k_groups as u64 * 4 * kernel_words as u64;
-            let k_sets = out_ch.div_ceil(16) as u64;
-            let kloop_traffic = maps_once + kernels_once * n_tiles.max(1) as u64;
-            let mloop_traffic = maps_once * if n_tiles > 1 { k_sets } else { 1 } + kernels_once;
-            let order = opts.force_loop_order.unwrap_or(if kloop_traffic <= mloop_traffic {
-                LoopOrder::Kloop
+            // Geometry context for the schedule tuner / cost model.
+            let gx = cost::ConvGeom {
+                kh,
+                stride,
+                h_out: out_shape.h,
+                w_out: out_shape.w,
+                row_words_in,
+                row_read: geom.row_read,
+                n_segs: geom.segs.len(),
+                kernel_words,
+                k_groups,
+                c_pad_out: c_pad(out_shape.c),
+                has_bypass: bypass.is_some(),
+                byp_row_words: if bypass.is_some() { byp_row_words } else { 0 },
+                max_rows,
+                dbuf_w,
+            };
+
+            // Schedule selection: explicit override > tuner > heuristic.
+            let sched: Schedule = if let Some(s) = opts.schedules.get(&node) {
+                cost::validate(s, &gx, cfg)
+                    .map_err(|e| CompileError(format!("conv node {node}: {e}")))?;
+                *s
             } else {
-                LoopOrder::Mloop
-            });
+                match opts.tune {
+                    TuneMode::Heuristic => cost::seed_heuristic(&gx, cfg, opts),
+                    TuneMode::Analytical | TuneMode::Measured { .. } => {
+                        cost::search(&gx, cfg, opts).0
+                    }
+                }
+            };
+            // force_loop_order wins over both; either way the emitted
+            // order is clamped to what the skeletons support.
+            let requested = opts.force_loop_order.unwrap_or(sched.order);
+            let order = cost::effective_order(&gx, cfg, requested, sched.rows_per_cu);
+            let sched = Schedule { order, ..sched };
+            let predicted = cost::estimate(&gx, &sched, cfg, opts.smart_delay_slots);
 
+            let rows_per_cu = sched.rows_per_cu;
+            let n_tiles = out_shape.h.div_ceil(rows_per_cu * cfg.n_cus);
             Ok(OpPlan::Conv(ConvPlan {
                 c_pad_in: c_pad(in_shape.c),
                 c_pad_out: c_pad(out_shape.c),
@@ -325,6 +366,10 @@ pub fn decide(
                 rows_per_cu,
                 n_tiles,
                 order,
+                split: sched.split(),
+                policy: sched.policy,
+                max_rows,
+                predicted,
                 dbuf_w,
                 has_bypass: bypass.is_some(),
                 relu,
@@ -461,10 +506,8 @@ mod tests {
         assert_eq!(segs.len(), 5);
     }
 
-    #[test]
-    fn decisions_for_alexnet_conv2() {
-        let cfg = SnowflakeConfig::default();
-        let op = Lowered::Conv {
+    fn conv2_op() -> Lowered {
+        Lowered::Conv {
             node: 0,
             src: None,
             bypass: None,
@@ -475,15 +518,22 @@ mod tests {
             stride: 1,
             pad: 2,
             relu: true,
-        };
+        }
+    }
+
+    #[test]
+    fn decisions_for_alexnet_conv2() {
+        // Heuristic mode pins the seed behavior exactly.
+        let cfg = SnowflakeConfig::default();
+        let opts = CompileOptions { tune: crate::compiler::TuneMode::Heuristic, ..Default::default() };
         let p = decide(
-            &op,
+            &conv2_op(),
             Shape::new(64, 27, 27),
             Shape::new(192, 27, 27),
             2,
             0,
             &cfg,
-            &CompileOptions::default(),
+            &opts,
         )
         .unwrap();
         let OpPlan::Conv(c) = p else { panic!() };
@@ -493,8 +543,107 @@ mod tests {
         // 27 rows over 4 CUs: floor(27/4) = 6 rows per CU, two tiles
         // (the second shifted back by 3 rows).
         assert_eq!(c.rows_per_cu, 6);
+        assert_eq!(c.max_rows, 6);
         assert_eq!(c.n_tiles, 2);
-        assert_eq!(c.order, LoopOrder::Kloop); // 1 tile: orders tie -> Kloop
+        assert_eq!(c.order, LoopOrder::Kloop);
+        assert_eq!(c.split, 2);
+        assert!(c.predicted.cycles > 0);
+    }
+
+    #[test]
+    fn tuned_schedule_stays_inside_constraints() {
+        // Default (analytical) mode: whatever the model picks must obey
+        // the same constraint caps the heuristic derived.
+        let cfg = SnowflakeConfig::default();
+        let p = decide(
+            &conv2_op(),
+            Shape::new(64, 27, 27),
+            Shape::new(192, 27, 27),
+            2,
+            0,
+            &cfg,
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let OpPlan::Conv(c) = p else { panic!() };
+        assert!((1..=c.max_rows).contains(&c.rows_per_cu));
+        assert!(c.split >= 1 && c.split <= 8);
+        assert_eq!(c.n_tiles, c.h_out.div_ceil(c.rows_per_cu * cfg.n_cus));
+        assert!(c.predicted.cycles > 0 && c.predicted.dram_bytes > 0);
+        // The Mloop skeleton never serves a fused-bypass conv.
+        let byp = Lowered::Conv {
+            node: 2,
+            src: Some(0),
+            bypass: Some(1),
+            in_ch: 64,
+            out_ch: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            relu: true,
+        };
+        let p = decide(
+            &byp,
+            Shape::new(64, 27, 27),
+            Shape::new(64, 27, 27),
+            1,
+            0,
+            &cfg,
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let OpPlan::Conv(c) = p else { panic!() };
+        assert_eq!(c.order, LoopOrder::Kloop);
+    }
+
+    #[test]
+    fn schedule_override_applies_and_validates() {
+        use crate::compiler::cost::Schedule;
+        use crate::compiler::BalancePolicy;
+        let cfg = SnowflakeConfig::default();
+        let mut opts = CompileOptions::default();
+        opts.schedules.insert(
+            0,
+            Schedule {
+                order: LoopOrder::Kloop,
+                rows_per_cu: 3,
+                policy: BalancePolicy::Greedy { split: 4 },
+            },
+        );
+        let p = decide(
+            &conv2_op(),
+            Shape::new(64, 27, 27),
+            Shape::new(192, 27, 27),
+            2,
+            0,
+            &cfg,
+            &opts,
+        )
+        .unwrap();
+        let OpPlan::Conv(c) = p else { panic!() };
+        assert_eq!(c.rows_per_cu, 3);
+        assert_eq!(c.split, 4);
+        assert_eq!(c.n_tiles, 3);
+        // Out-of-cap rows are rejected loudly.
+        opts.schedules.insert(
+            0,
+            Schedule {
+                order: LoopOrder::Kloop,
+                rows_per_cu: 64,
+                policy: BalancePolicy::default(),
+            },
+        );
+        let err = decide(
+            &conv2_op(),
+            Shape::new(64, 27, 27),
+            Shape::new(192, 27, 27),
+            2,
+            0,
+            &cfg,
+            &opts,
+        );
+        assert!(err.is_err());
     }
 
     #[test]

@@ -23,6 +23,7 @@
 
 pub mod balance;
 pub mod codegen;
+pub mod cost;
 pub mod decide;
 pub mod deploy;
 pub mod hand;
@@ -33,6 +34,7 @@ use crate::arch::SnowflakeConfig;
 use crate::fixed::QFormat;
 use crate::isa::instr::Program;
 use crate::model::graph::Graph;
+use std::collections::BTreeMap;
 
 /// Loop-rearrangement choice (§6.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,13 +70,58 @@ impl Default for BalancePolicy {
     }
 }
 
+/// How the compiler picks each conv layer's schedule (loop order ×
+/// tile height × maps-split × balance policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneMode {
+    /// The seed heuristic: maximize `rows_per_cu` to buffer capacity,
+    /// emit the Kloop skeleton (the only one the seed codegen produced;
+    /// its §6.2 traffic-compare annotation was never consumed — that
+    /// analysis lives on in `decide::required_bandwidth_gbs`/Figure 4),
+    /// use the global `balance` policy unchanged. Reproduces seed
+    /// emission bit-for-bit.
+    Heuristic,
+    /// Enumerate the bounded candidate space and pick the schedule with
+    /// the fewest cycles predicted by the analytical model
+    /// ([`cost::search`]). The default.
+    Analytical,
+    /// Analytical at compile time; the *measured* refinement — compile
+    /// the top-K predicted candidates per layer and simulate each — is
+    /// driven by [`crate::coordinator::tune`], which passes the winning
+    /// per-layer schedules back through [`CompileOptions::schedules`].
+    Measured {
+        /// Candidates simulated per layer (including the incumbent).
+        top_k: usize,
+    },
+}
+
+impl Default for TuneMode {
+    fn default() -> Self {
+        TuneMode::Analytical
+    }
+}
+
+/// Explicit per-layer conv schedules, keyed by lowered-op node id
+/// (`Lowered::out_node`). Entries override the tuner.
+pub type ScheduleMap = BTreeMap<usize, cost::Schedule>;
+
 /// Compiler options.
 #[derive(Clone, Debug)]
 pub struct CompileOptions {
     pub fmt: QFormat,
+    /// Balance policy for non-conv layers, and the base policy family
+    /// the conv tuner searches within (a non-Greedy policy pins every
+    /// layer to it; Greedy lets the tuner pick a per-layer split).
     pub balance: BalancePolicy,
-    /// Force a loop order for every conv (None = per-layer §6.2 decision).
+    /// Force a loop order for every conv (None = per-layer decision).
+    /// Wins over the tuner and over `schedules`; convs the Mloop
+    /// skeleton cannot serve (fused bypass, maps exceeding the MBuf
+    /// banks) still fall back to Kloop.
     pub force_loop_order: Option<LoopOrder>,
+    /// Conv schedule selection mode (see [`TuneMode`]).
+    pub tune: TuneMode,
+    /// Per-layer schedule overrides (measured tuning, debugging).
+    pub schedules: ScheduleMap,
     /// Fill branch delay slots with useful tail instructions (the
     /// hand-optimization of Table 1); false pads with no-ops.
     pub smart_delay_slots: bool,
@@ -91,6 +138,8 @@ impl Default for CompileOptions {
             fmt: crate::fixed::Q8_8,
             balance: BalancePolicy::default(),
             force_loop_order: None,
+            tune: TuneMode::default(),
+            schedules: ScheduleMap::new(),
             smart_delay_slots: false,
             reuse_regions: false,
             skip_fc: false,
@@ -143,5 +192,7 @@ mod tests {
         let o = CompileOptions::default();
         assert_eq!(o.balance, BalancePolicy::Greedy { split: 2 });
         assert!(o.force_loop_order.is_none());
+        assert_eq!(o.tune, TuneMode::Analytical);
+        assert!(o.schedules.is_empty());
     }
 }

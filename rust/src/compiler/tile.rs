@@ -52,6 +52,25 @@ pub fn map_tiles(h_out: usize, base_rows: usize, cfg: &SnowflakeConfig) -> Vec<M
     tiles
 }
 
+/// Per-tile `rows_per_cu` of the decomposition [`map_tiles`] produces,
+/// as a plain function of the shape — the cost model predicts tile
+/// structure for candidate schedules without building `MapTile`s (and
+/// without a config; `n_cus` is passed explicitly). Must stay in
+/// lockstep with [`map_tiles`]; pinned by the property test below.
+pub fn tile_rows(h_out: usize, base_rows: usize, n_cus: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut next = 0usize;
+    while next < h_out {
+        let remaining = h_out - next;
+        let rows = base_rows.min(remaining.div_ceil(n_cus)).max(1);
+        let span = rows * n_cus;
+        let oy0 = if next + span <= h_out { next } else { h_out.saturating_sub(span) };
+        out.push(rows);
+        next = oy0 + span;
+    }
+    out
+}
+
 /// One kernel tile: 4 consecutive kernels (output channels), one per
 /// vMAC; `region` is the WBuf double-buffer region it occupies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,5 +134,58 @@ mod tests {
         let ks = kernel_tiles(48);
         assert_eq!(ks.len(), 48);
         assert_eq!(ks[47].k0, 188);
+    }
+
+    /// Property test over randomized (h_out, base_rows): tiles cover
+    /// exactly `0..h_out`, the tail tile shifts back without
+    /// overshooting, banks alternate, and `tile_rows` stays in lockstep
+    /// with `map_tiles`.
+    #[test]
+    fn map_tiles_invariants_hold_under_random_shapes() {
+        crate::util::prop::for_cases(200, 0x7113, |rng| {
+            let cfg = SnowflakeConfig::default();
+            let h_out = rng.range(cfg.n_cus, 240);
+            // base_rows respects the decide() cap: at most h_out / n_cus.
+            let base_rows = rng.range(1, (h_out / cfg.n_cus).max(1) + 1);
+            let tiles = map_tiles(h_out, base_rows, &cfg);
+            assert!(!tiles.is_empty());
+
+            let mut covered = vec![false; h_out];
+            for (i, t) in tiles.iter().enumerate() {
+                // Structural invariants.
+                assert_eq!(t.index, i, "indices consecutive");
+                assert_eq!(t.bank, i % cfg.mbuf_banks, "bank alternation");
+                assert!(t.rows_per_cu >= 1 && t.rows_per_cu <= base_rows);
+                // No overshoot: the tile's span ends inside the map (the
+                // tail tile shifts *back* instead of spilling past it).
+                let span = t.rows_per_cu * cfg.n_cus;
+                assert!(
+                    t.oy0 + span <= h_out,
+                    "tile {i} [{}..{}) overshoots h_out {h_out}",
+                    t.oy0,
+                    t.oy0 + span
+                );
+                for r in t.oy0..t.oy0 + span {
+                    covered[r] = true;
+                }
+            }
+            // Exact coverage: every output row produced at least once.
+            assert!(
+                covered.iter().all(|&c| c),
+                "rows uncovered (h_out {h_out}, base {base_rows})"
+            );
+            // Non-tail tiles keep the full height and advance
+            // contiguously; only the final tile may shrink/shift back.
+            for pair in tiles.windows(2) {
+                assert_eq!(pair[0].rows_per_cu, base_rows, "only the tail tile may shrink");
+                assert!(
+                    pair[1].oy0 <= pair[0].oy0 + pair[0].rows_per_cu * cfg.n_cus,
+                    "gap between consecutive tiles"
+                );
+            }
+            // tile_rows (the cost model's view) matches map_tiles.
+            let rows: Vec<usize> = tiles.iter().map(|t| t.rows_per_cu).collect();
+            assert_eq!(rows, tile_rows(h_out, base_rows, cfg.n_cus), "tile_rows diverged");
+        });
     }
 }

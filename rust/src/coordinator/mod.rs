@@ -8,6 +8,8 @@ pub mod driver;
 pub mod golden;
 pub mod report;
 pub mod sweep;
+pub mod tune;
 
 pub use driver::{run_batch, run_model, validate_model, BatchOutcome, RunOutcome};
 pub use sweep::{run_sweep, SweepJob, SweepOutcome};
+pub use tune::{tune_measured, TuneOutcome};

@@ -13,9 +13,17 @@ use snowflake::util::rng::Rng;
 /// Compile+simulate a graph and compare every lowered-layer output
 /// canvas against the fixed-point reference. Returns the stats.
 fn check_graph(g: &Graph, seed: u64) -> snowflake::sim::stats::Stats {
+    check_graph_opts(g, seed, &CompileOptions::default())
+}
+
+/// As [`check_graph`] with explicit compiler options.
+fn check_graph_opts(
+    g: &Graph,
+    seed: u64,
+    opts: &CompileOptions,
+) -> snowflake::sim::stats::Stats {
     let cfg = SnowflakeConfig::default();
-    let opts = CompileOptions::default();
-    let compiled = compile(g, &cfg, &opts).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    let compiled = compile(g, &cfg, opts).unwrap_or_else(|e| panic!("{}: {e}", g.name));
     let w = Weights::init(g, seed);
     let x = synthetic_input(g, seed);
     let mut m = deploy::make_machine(&compiled, g, &w, &x);
@@ -183,6 +191,50 @@ fn random_conv_property() {
         let g = conv_graph(c, h, k, ks, stride, pad, rng.bool());
         eprintln!("case {case}: {}", g.name);
         check_graph(&g, 100 + case as u64);
+    }
+}
+
+/// The Mloop skeleton (maps resident, kernels streamed once) must be
+/// bit-exact against the reference on a genuinely two-tile conv, under
+/// both the forced path and an explicit schedule override.
+#[test]
+fn conv_mloop_matches_reference() {
+    use snowflake::compiler::cost::Schedule;
+    use snowflake::compiler::decide::OpPlan;
+    use snowflake::compiler::{LoopOrder, TuneMode};
+
+    // 48 output rows, capacity cap 7 -> two tiles; no bypass.
+    let g = conv_graph(64, 48, 8, 3, 1, 1, true);
+    let cfg = SnowflakeConfig::default();
+    for order in [LoopOrder::Mloop, LoopOrder::Kloop] {
+        let opts = CompileOptions {
+            force_loop_order: Some(order),
+            tune: TuneMode::Heuristic,
+            ..Default::default()
+        };
+        let compiled = compile(&g, &cfg, &opts).unwrap();
+        let OpPlan::Conv(d) = &compiled.plan.layers[0].decision else { panic!() };
+        assert_eq!(d.order, order, "skeleton not exercised");
+        check_graph_opts(&g, 31, &opts);
+    }
+
+    // Explicit overrides: tile heights / splits off the heuristic path.
+    for (order, rows, split) in [
+        (LoopOrder::Mloop, 6, 4),
+        (LoopOrder::Mloop, 7, 1),
+        (LoopOrder::Kloop, 2, 8),
+        (LoopOrder::Kloop, 5, 1),
+    ] {
+        let mut opts = CompileOptions::default();
+        opts.schedules.insert(
+            0,
+            Schedule {
+                order,
+                rows_per_cu: rows,
+                policy: snowflake::compiler::BalancePolicy::Greedy { split },
+            },
+        );
+        check_graph_opts(&g, 33, &opts);
     }
 }
 

@@ -4,7 +4,8 @@
 //! inputs loudly, not corrupt silently).
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::compiler::decide::OpPlan;
+use snowflake::compiler::{compile, deploy, CompileOptions, LoopOrder, TuneMode};
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::instr::Instr;
 use snowflake::model::graph::Graph;
@@ -60,7 +61,11 @@ fn smaller_machine_still_correct() {
         vector_queue_depth: 8,
         ..Default::default()
     };
-    let opts = CompileOptions::default();
+    // Heuristic mode for the cross-config *timing* comparison below:
+    // the tuner optimizes each machine independently, which would make
+    // "bigger machine is never slower" depend on model accuracy rather
+    // than on the machines.
+    let opts = CompileOptions { tune: TuneMode::Heuristic, ..Default::default() };
     let compiled = compile(&g, &cfg, &opts).unwrap();
     let w = Weights::init(&g, 5);
     let x = synthetic_input(&g, 5);
@@ -112,6 +117,73 @@ fn json_model_roundtrip_compiles_identically() {
     let a = compile(&g, &cfg, &CompileOptions::default()).unwrap();
     let b = compile(&g2, &cfg, &CompileOptions::default()).unwrap();
     assert_eq!(a.program.instrs, b.program.instrs);
+}
+
+/// `force_loop_order` must override the schedule tuner on the conv
+/// path, and models with FC layers must stay compilable under it (FC
+/// has no loop order; the force applies to convs only).
+#[test]
+fn force_loop_order_overrides_tuner_on_conv_and_fc() {
+    let cfg = SnowflakeConfig::default();
+    // Conv where both skeletons are genuinely available (48 output
+    // rows, capacity cap 7 -> two tiles, no bypass).
+    let mut g = Graph::new("forced", Shape::new(64, 48, 48));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 64, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    for order in [LoopOrder::Mloop, LoopOrder::Kloop] {
+        let opts = CompileOptions { force_loop_order: Some(order), ..Default::default() };
+        let compiled = compile(&g, &cfg, &opts).unwrap();
+        let OpPlan::Conv(d) = &compiled.plan.layers[0].decision else { panic!() };
+        assert_eq!(d.order, order, "forced {order:?} not honored");
+    }
+
+    // FC path: a conv+FC model compiles and runs under both forces.
+    let mut g2 = Graph::new("forced_fc", Shape::new(16, 8, 8));
+    let c = g2.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    g2.push(
+        LayerKind::Fc { in_features: 16 * 8 * 8, out_features: 32, relu: false },
+        vec![c],
+        "fc",
+    );
+    for order in [LoopOrder::Mloop, LoopOrder::Kloop] {
+        let opts = CompileOptions {
+            force_loop_order: Some(order),
+            skip_fc: false,
+            ..Default::default()
+        };
+        let compiled = compile(&g2, &cfg, &opts).unwrap();
+        // This conv is single-tile, so a forced Mloop clamps to the
+        // (identical) Kloop skeleton — documented behavior.
+        let OpPlan::Conv(d) = &compiled.plan.layers[0].decision else { panic!() };
+        assert_eq!(d.order, LoopOrder::Kloop);
+        let w = Weights::init(&g2, 13);
+        let x = synthetic_input(&g2, 13);
+        let mut m = deploy::make_machine(&compiled, &g2, &w, &x);
+        m.run().unwrap_or_else(|e| panic!("forced {order:?} with FC: {e}"));
+        let refs = refimpl::forward_q(&g2, &w, &x, Q8_8);
+        let got = deploy::read_canvas(&m, &compiled.plan.canvases[&1]);
+        assert_eq!(got.count_diff(&refs[1]), 0, "FC output wrong under forced {order:?}");
+    }
+
+    // Fused-bypass convs always clamp a forced Mloop back to Kloop.
+    let g3 = small_net();
+    let opts = CompileOptions {
+        force_loop_order: Some(LoopOrder::Mloop),
+        ..Default::default()
+    };
+    let compiled = compile(&g3, &cfg, &opts).unwrap();
+    for lp in &compiled.plan.layers {
+        if let OpPlan::Conv(d) = &lp.decision {
+            if d.has_bypass {
+                assert_eq!(d.order, LoopOrder::Kloop, "bypass conv must stay Kloop");
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

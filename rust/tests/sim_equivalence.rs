@@ -112,6 +112,34 @@ fn resnet18_block_all_balance_policies() {
     }
 }
 
+/// Tuned schedules (the default) and explicit overrides — including a
+/// genuine Mloop emission — must keep the two cores bit-identical.
+#[test]
+fn tuned_and_overridden_schedules_cores_agree() {
+    use snowflake::compiler::cost::Schedule;
+
+    let cfg = SnowflakeConfig::default();
+    // Default options = analytical tuner.
+    assert_cores_agree(&resnet18_block(), &cfg, &CompileOptions::default(), 5);
+
+    // Explicit two-tile Mloop override with a non-default split.
+    let mut g = Graph::new("mloop_override", Shape::new(64, 48, 48));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 64, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    let mut opts = CompileOptions::default();
+    opts.schedules.insert(
+        0,
+        Schedule {
+            order: LoopOrder::Mloop,
+            rows_per_cu: 6,
+            policy: BalancePolicy::Greedy { split: 4 },
+        },
+    );
+    assert_cores_agree(&g, &cfg, &opts, 3);
+}
+
 #[test]
 fn stress_config_corners() {
     // Heavy DMA setup + narrow bus + tiny vector queue: maximizes
