@@ -1,14 +1,16 @@
-//! End-to-end driver (E7): compile AlexNetOWT, run a batch of frames on
-//! the simulated Snowflake, validate each against the fixed-point
-//! reference, and report the paper's headline metrics (frames/s and
-//! off-chip bandwidth — 93.6 fps / 1.2 GB/s on the authors' testbed).
+//! End-to-end driver (E7): build AlexNetOWT once, keep it resident in
+//! an `Engine`, stream a batch of frames through the deployment,
+//! validate each against the fixed-point reference, and report the
+//! paper's headline metrics (frames/s and off-chip bandwidth — 93.6 fps
+//! / 1.2 GB/s on the authors' testbed).
 //!
 //! ```sh
 //! cargo run --release --example alexnet_e2e [-- --frames 4 --model alexnet]
 //! ```
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::compiler::{CompileOptions, Compiler};
+use snowflake::engine::Engine;
 use snowflake::model::weights::Weights;
 use snowflake::model::zoo;
 use snowflake::refimpl;
@@ -28,57 +30,53 @@ fn main() {
     let opts = CompileOptions { skip_fc: true, ..Default::default() };
 
     let t0 = std::time::Instant::now();
-    let compiled = compile(&g, &cfg, &opts).expect("compile");
+    let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).expect("build");
     println!(
-        "compiled {} in {:?}: {} instructions, {} layers, {:.1} MB plan",
+        "built {} in {:?}: {} instructions, {} layers, {:.1} MB plan",
         g.name,
         t0.elapsed(),
-        compiled.program.len(),
-        compiled.plan.layers.len(),
-        compiled.plan.mem_words as f64 * 2.0 / 1e6
+        artifact.compiled.program.len(),
+        artifact.compiled.plan.layers.len(),
+        artifact.compiled.plan.mem_words as f64 * 2.0 / 1e6
     );
+    let last_node = artifact.output_node.expect("model has generated layers");
+    let fmt = artifact.compiled.plan.fmt;
 
+    // Deploy once (weights + program resident), then serve frames
+    // through the same machine — the paper's §5.3 deployment model.
     let w = Weights::init(&g, seed);
-    let mut rng = Rng::new(seed);
-    let mut total_cycles = 0u64;
-    let mut total_bytes = 0u64;
-    let last_node = compiled
-        .plan
-        .layers
-        .iter()
-        .filter(|l| !matches!(l.op, snowflake::compiler::layout::Lowered::Fc { .. }))
-        .map(|l| l.op.out_node())
-        .max()
-        .unwrap();
+    let mut engine = Engine::new(cfg.clone());
+    let h = engine.load_with(artifact, &w).expect("load");
 
+    let mut rng = Rng::new(seed);
+    let mut total_bytes = 0u64;
     for f in 0..frames {
         let mut x = Tensor::zeros(&[g.input.c, g.input.h, g.input.w]);
         for v in x.data.iter_mut() {
             *v = rng.f32_range(-1.0, 1.0);
         }
-        let mut m = deploy::make_machine(&compiled, &g, &w, &x);
-        let stats = m.run().expect("simulate");
+        let out = engine.infer(h, &x).expect("infer");
         // Per-frame validation of the final generated layer.
-        let want = &refimpl::forward_q(&g, &w, &x, compiled.plan.fmt)[last_node];
-        let got = deploy::read_canvas(&m, &compiled.plan.canvases[&last_node]);
-        let diffs = got.count_diff(want);
+        let want = &refimpl::forward_q(&g, &w, &x, fmt)[last_node];
+        let diffs = out.output.count_diff(want);
         println!(
             "frame {f}: {:.3} ms, {:.2} GB/s, util {:.1}%, validation diffs {}",
-            stats.time_ms(&cfg),
-            stats.bandwidth_gbs(&cfg),
-            stats.cu_utilization() * 100.0,
+            out.stats.time_ms(&cfg),
+            out.stats.bandwidth_gbs(&cfg),
+            out.stats.cu_utilization() * 100.0,
             diffs
         );
         assert_eq!(diffs, 0);
-        total_cycles += stats.cycles;
-        total_bytes += stats.bytes_moved();
+        total_bytes += out.stats.bytes_moved();
     }
 
-    let ms = cfg.cycles_to_ms(total_cycles / frames as u64);
+    let stats = engine.model_stats(h).expect("stats");
+    let ms = stats.avg_ms(&cfg);
     println!("\n== headline ==");
     println!("{}: {:.2} ms/frame = {:.1} frames/s", g.name, ms, 1000.0 / ms);
     println!(
         "off-chip bandwidth: {:.2} GB/s (paper: AlexNet 93.6 fps / 1.2 GB/s; ResNet18 21.4 fps / 2.2 GB/s)",
-        cfg.achieved_gbs(total_bytes / frames as u64, total_cycles / frames as u64)
+        cfg.achieved_gbs(total_bytes / frames as u64, stats.total_cycles / frames as u64)
     );
+    println!("engine: {}", engine.stats().summary(&cfg));
 }

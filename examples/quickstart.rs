@@ -1,13 +1,15 @@
-//! Quickstart: compile one convolution layer, run it on the Snowflake
+//! Quickstart: build a versioned artifact for one convolution layer,
+//! load it into the `Engine` runtime, run an inference on the Snowflake
 //! simulator, and validate the output against the fixed-point reference
-//! — the whole §5 pipeline in ~40 lines.
+//! — the whole build/deploy/run split in ~50 lines.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::compiler::Compiler;
+use snowflake::engine::Engine;
 use snowflake::fixed::Q8_8;
 use snowflake::isa::asm::disasm_program;
 use snowflake::model::graph::Graph;
@@ -23,30 +25,34 @@ fn main() {
         "conv2",
     );
 
+    // Compile time: one builder call produces a versioned artifact
+    // (program + memory plan + schedules + config fingerprint).
     let cfg = SnowflakeConfig::default();
-    let compiled = compile(&g, &cfg, &CompileOptions::default()).expect("compile");
+    let artifact = Compiler::new(cfg.clone()).build(&g).expect("build");
     println!(
-        "compiled {} instructions ({} banks); first 12:",
-        compiled.program.len(),
-        compiled.program.len().div_ceil(cfg.icache_bank_instrs)
+        "built {} instructions ({} banks), config fingerprint {:016x}; first 12:",
+        artifact.compiled.program.len(),
+        artifact.compiled.program.len().div_ceil(cfg.icache_bank_instrs),
+        artifact.config_hash()
     );
     let head = snowflake::isa::instr::Program {
-        instrs: compiled.program.instrs[..12].to_vec(),
-        comments: compiled.program.comments[..12].to_vec(),
+        instrs: artifact.compiled.program.instrs[..12].to_vec(),
+        comments: artifact.compiled.program.comments[..12].to_vec(),
     };
     print!("{}", disasm_program(&head));
 
-    // Deploy synthetic weights + input, simulate.
-    let w = Weights::init(&g, 42);
-    let x = synthetic_input(&g, 42);
-    let mut m = deploy::make_machine(&compiled, &g, &w, &x);
-    let stats = m.run().expect("simulate");
-    println!("\nsimulation: {}", stats.summary(&cfg));
+    // Run time: an Engine owns the machine; load once, infer per input.
+    let seed = 42;
+    let x = synthetic_input(&g, seed);
+    let mut engine = Engine::new(cfg.clone());
+    let h = engine.load(artifact, seed).expect("load");
+    let out = engine.infer(h, &x).expect("infer");
+    println!("\nsimulation: {}", out.stats.summary(&cfg));
 
     // Validate against the Q8.8 software reference (§5.3).
+    let w = Weights::init(&g, seed);
     let want = &refimpl::forward_q(&g, &w, &x, Q8_8)[0];
-    let got = deploy::read_canvas(&m, &compiled.plan.canvases[&0]);
-    let diffs = got.count_diff(want);
+    let diffs = out.output.count_diff(want);
     println!(
         "validation: {}/{} output words match the Q8.8 reference",
         want.len() - diffs,

@@ -10,8 +10,9 @@
 //! ```
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, decide, deploy, CompileOptions};
-use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::compiler::{decide, CompileOptions, Compiler};
+use snowflake::engine::Engine;
+use snowflake::model::weights::synthetic_input;
 use snowflake::model::zoo;
 use snowflake::util::cli::Args;
 
@@ -21,7 +22,8 @@ fn main() {
     let g = zoo::by_name(model).expect("unknown model");
     let cfg = SnowflakeConfig::default();
     let opts = CompileOptions { skip_fc: true, ..Default::default() };
-    let compiled = compile(&g, &cfg, &opts).expect("compile");
+    let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).expect("build");
+    let compiled = &artifact.compiled;
 
     // Static per-layer analysis: required bandwidth under both loop
     // orders (the Fig. 4 model applied to the whole network).
@@ -49,11 +51,11 @@ fn main() {
         }
     }
 
-    // Dynamic run.
-    let w = Weights::init(&g, 42);
+    // Dynamic run through the Engine runtime.
     let x = synthetic_input(&g, 42);
-    let mut m = deploy::make_machine(&compiled, &g, &w, &x);
-    let stats = m.run().expect("simulate");
+    let mut engine = Engine::new(cfg.clone());
+    let h = engine.load(artifact, 42).expect("load");
+    let stats = engine.infer(h, &x).expect("infer").stats;
     println!("\n{}: {}", g.name, stats.summary(&cfg));
     println!(
         "loads {:.1} MB, stores {:.1} MB, per-unit bytes {:?}",

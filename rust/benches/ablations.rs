@@ -12,10 +12,21 @@
 //! compile-only and stays serial.
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, CompileOptions};
+use snowflake::compiler::{CompileOptions, Compiler};
 use snowflake::coordinator::report;
 use snowflake::coordinator::sweep::run_sweep_strict;
 use snowflake::model::zoo;
+use snowflake::model::graph::Graph;
+
+/// Build through the `Compiler` front door; these tests only need the
+/// compiled model, not the full artifact.
+fn compile(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<snowflake::compiler::CompiledModel, snowflake::compiler::CompileError> {
+    Compiler::new(cfg.clone()).options(opts.clone()).compile(g)
+}
 
 fn main() {
     let cfg = SnowflakeConfig::default();

@@ -9,11 +9,22 @@
 use std::time::Instant;
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::compiler::{deploy, CompileOptions, Compiler};
 use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::model::zoo;
 use snowflake::sim::CoreMode;
 use snowflake::util::json::Json;
+use snowflake::model::graph::Graph;
+
+/// Build through the `Compiler` front door; these tests only need the
+/// compiled model, not the full artifact.
+fn compile(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<snowflake::compiler::CompiledModel, snowflake::compiler::CompileError> {
+    Compiler::new(cfg.clone()).options(opts.clone()).compile(g)
+}
 
 fn measure(core: CoreMode, cfg: &SnowflakeConfig) -> (u64, f64) {
     let g = zoo::alexnet_owt();

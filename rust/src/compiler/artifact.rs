@@ -1,0 +1,1077 @@
+//! Versioned, serializable compiled artifacts — the §5.3 deployment
+//! product as a first-class object.
+//!
+//! The paper's compiler exists to be *deployed*: instructions and data
+//! are arranged once and then executed many times on the accelerator
+//! (§5.3 "Instruction deployment"). An [`Artifact`] captures everything
+//! a runtime needs to do that without re-running the compiler:
+//!
+//! * the encoded instruction [`Program`] (with its assembler comments,
+//!   so a loaded artifact disassembles identically),
+//! * the full memory [`Plan`] — canvases, weight/bias placement, the
+//!   program image address — down to every per-layer `OpPlan` decision,
+//! * the chosen per-conv-layer [`Schedule`]s (replayable through
+//!   [`CompileOptions::schedules`]),
+//! * the model description itself (the `model/parser.rs` JSON form), so
+//!   the runtime can synthesize/arrange weights and inputs,
+//! * provenance: compiler options, the [`FORMAT_VERSION`], and a
+//!   **config fingerprint** of the [`SnowflakeConfig`] the artifact was
+//!   compiled for.
+//!
+//! Loading validates the format version, the config fingerprint against
+//! the *loading* machine's configuration, and an FNV-1a checksum over
+//! the encoded instruction words — a wrong hardware config or a
+//! corrupted payload is a typed [`ArtifactError`], never a silent
+//! miscompute. The on-disk form is JSON via `util/json.rs` (the repo is
+//! dependency-free; see rust/Cargo.toml), self-describing and diffable.
+
+use super::cost::{CostEstimate, Schedule};
+use super::decide::{AvgPlan, ConvPlan, FcPlan, Geom, OpPlan, PoolPlan};
+use super::layout::{Canvas, LayerPlan, Lowered, Plan};
+use super::{BalancePolicy, CompileOptions, CompiledModel, LoopOrder, ScheduleMap, TuneMode};
+use crate::arch::SnowflakeConfig;
+use crate::fixed::QFormat;
+use crate::isa::encode::{decode, encode};
+use crate::isa::instr::Program;
+use crate::model::graph::Graph;
+use crate::model::parser;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// On-disk artifact format version. Bump on any incompatible change to
+/// the serialized layout; loaders hard-error on mismatch.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Magic tag identifying an artifact file.
+pub const FORMAT_MAGIC: &str = "snowflake-artifact";
+
+/// Why an artifact could not be saved or loaded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArtifactError {
+    /// Filesystem failure (path included in the message).
+    Io(String),
+    /// The payload is not valid JSON or is missing required fields.
+    Parse(String),
+    /// Not an artifact file at all (magic tag mismatch).
+    NotAnArtifact,
+    /// The artifact was written by an incompatible format version.
+    FormatVersion { found: u64, expected: u64 },
+    /// The artifact was compiled for different hardware: running it on
+    /// this configuration would silently miscompute addresses/timing.
+    ConfigMismatch { artifact: String, host: String },
+    /// The payload decoded but failed an integrity check (checksum,
+    /// instruction decode, internal consistency).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(m) => write!(f, "artifact io error: {m}"),
+            ArtifactError::Parse(m) => write!(f, "artifact parse error: {m}"),
+            ArtifactError::NotAnArtifact => {
+                write!(f, "not a snowflake artifact (magic tag missing)")
+            }
+            ArtifactError::FormatVersion { found, expected } => write!(
+                f,
+                "artifact format version {found} is not supported (expected {expected}); \
+                 rebuild the artifact with `repro build`"
+            ),
+            ArtifactError::ConfigMismatch { artifact, host } => write!(
+                f,
+                "artifact was compiled for config {artifact} but this machine is {host}; \
+                 rebuild the artifact for this hardware configuration"
+            ),
+            ArtifactError::Corrupt(m) => write!(f, "artifact corrupt: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// Compiler provenance recorded in the artifact (informational; the
+/// binding facts — program, plan, schedules — are stored explicitly).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// `TuneMode` the artifact was built under (display form).
+    pub tune: String,
+    /// Base balance policy (display form).
+    pub balance: String,
+    pub smart_delay_slots: bool,
+    pub reuse_regions: bool,
+    pub skip_fc: bool,
+}
+
+impl ArtifactMeta {
+    pub fn of(opts: &CompileOptions) -> Self {
+        let tune = match opts.tune {
+            TuneMode::Heuristic => "heuristic".to_string(),
+            TuneMode::Analytical => "analytical".to_string(),
+            TuneMode::Measured { top_k } => format!("measured(top_k={top_k})"),
+        };
+        ArtifactMeta {
+            tune,
+            balance: policy_str(opts.balance),
+            smart_delay_slots: opts.smart_delay_slots,
+            reuse_regions: opts.reuse_regions,
+            skip_fc: opts.skip_fc,
+        }
+    }
+}
+
+/// A versioned compiled artifact: everything `build` produced, ready to
+/// save/load and to hand to the [`crate::engine::Engine`].
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    /// The hardware configuration the program was compiled for.
+    pub cfg: SnowflakeConfig,
+    /// The model graph (embedded so the artifact is self-contained).
+    pub graph: Graph,
+    /// Program + memory plan + layer ranges (the compile output).
+    pub compiled: CompiledModel,
+    /// Chosen per-conv-layer schedules, keyed by lowered node id —
+    /// replayable through [`CompileOptions::schedules`].
+    pub schedules: ScheduleMap,
+    /// Node whose canvas holds the final generated output (None when
+    /// every layer was skipped, e.g. an all-FC model under `skip_fc`).
+    pub output_node: Option<usize>,
+    /// Build provenance.
+    pub meta: ArtifactMeta,
+}
+
+impl Artifact {
+    /// Fingerprint of the config this artifact binds to.
+    pub fn config_hash(&self) -> u64 {
+        config_hash(&self.cfg)
+    }
+
+    /// Serialize to the on-disk JSON form.
+    pub fn to_json(&self) -> Json {
+        let words = program_words(&self.compiled.program);
+        let comments: Vec<Json> = self
+            .compiled
+            .program
+            .comments
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                c.as_ref().map(|s| Json::arr([Json::num(i as f64), Json::str(s)]))
+            })
+            .collect();
+        let ranges: Vec<Json> = self
+            .compiled
+            .layer_ranges
+            .iter()
+            .map(|(li, name, r)| {
+                Json::arr([
+                    Json::num(*li as f64),
+                    Json::str(name),
+                    Json::num(r.start as f64),
+                    Json::num(r.end as f64),
+                ])
+            })
+            .collect();
+        let schedules: Vec<(String, Json)> = self
+            .schedules
+            .iter()
+            .map(|(node, s)| (node.to_string(), schedule_json(s)))
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(FORMAT_MAGIC)),
+            ("version", Json::num(FORMAT_VERSION as f64)),
+            ("config_hash", Json::str(&hex(self.config_hash()))),
+            ("config", config_json(&self.cfg)),
+            ("model", Json::parse(&parser::dump_model(&self.graph)).expect("dump_model emits valid json")),
+            ("meta", meta_json(&self.meta)),
+            ("schedules", Json::Obj(schedules.into_iter().collect())),
+            (
+                "output_node",
+                self.output_node.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
+            ),
+            ("code_len", Json::num(self.compiled.code_len as f64)),
+            ("layer_ranges", Json::Arr(ranges)),
+            (
+                "program",
+                Json::obj(vec![
+                    ("checksum", Json::str(&hex(words_checksum(&words)))),
+                    ("words", Json::arr(words.iter().map(|w| Json::num(*w as f64)))),
+                    ("comments", Json::Arr(comments)),
+                ]),
+            ),
+            ("plan", plan_json(&self.compiled.plan)),
+        ])
+    }
+
+    /// Deserialize without config validation (inspection paths). Use
+    /// [`Artifact::validate_config`] or [`Artifact::load`] before
+    /// running the result on a machine.
+    pub fn from_json(root: &Json) -> Result<Artifact, ArtifactError> {
+        if root.get("format").as_str() != Some(FORMAT_MAGIC) {
+            return Err(ArtifactError::NotAnArtifact);
+        }
+        let version = need_u64(root, "version")?;
+        if version != FORMAT_VERSION {
+            return Err(ArtifactError::FormatVersion { found: version, expected: FORMAT_VERSION });
+        }
+        let cfg = config_from(root.get("config"))?;
+        // The recorded hash must match the recorded config: a mismatch
+        // means the file was hand-edited or truncated mid-field.
+        let recorded = root
+            .get("config_hash")
+            .as_str()
+            .and_then(unhex)
+            .ok_or_else(|| corrupt("config_hash missing or not hex"))?;
+        if recorded != config_hash(&cfg) {
+            return Err(corrupt("config_hash does not match the embedded config"));
+        }
+        let graph = parser::parse_model(&root.get("model").dump())
+            .map_err(|e| corrupt(&format!("embedded model: {e}")))?;
+
+        let pj = root.get("program");
+        let words: Vec<u32> = pj
+            .get("words")
+            .as_arr()
+            .ok_or_else(|| corrupt("program.words missing"))?
+            .iter()
+            .map(|w| {
+                w.as_i64()
+                    .and_then(|v| u32::try_from(v).ok())
+                    .ok_or_else(|| corrupt("program word out of u32 range"))
+            })
+            .collect::<Result<_, _>>()?;
+        let recorded_sum = pj
+            .get("checksum")
+            .as_str()
+            .and_then(unhex)
+            .ok_or_else(|| corrupt("program.checksum missing or not hex"))?;
+        if recorded_sum != words_checksum(&words) {
+            return Err(corrupt("program checksum mismatch (payload corrupted)"));
+        }
+        let mut program = Program::new();
+        for (i, w) in words.iter().enumerate() {
+            let instr = decode(*w).map_err(|e| corrupt(&format!("instruction {i}: {e}")))?;
+            // Decode must be the exact inverse of the stored word —
+            // anything else means the word was damaged in a way that
+            // still decodes (flipped don't-care bits).
+            if encode(&instr) != *w {
+                return Err(corrupt(&format!("instruction {i} re-encodes differently")));
+            }
+            program.push(instr);
+        }
+        for c in pj.get("comments").as_arr().unwrap_or(&[]) {
+            let i = c.idx(0).as_usize().ok_or_else(|| corrupt("comment index"))?;
+            let s = c.idx(1).as_str().ok_or_else(|| corrupt("comment text"))?;
+            if i >= program.comments.len() {
+                return Err(corrupt("comment index beyond program length"));
+            }
+            program.comments[i] = Some(s.to_string());
+        }
+
+        let plan = plan_from(root.get("plan"))?;
+        if plan.mem_words < plan.program_addr + 2 * program.len() {
+            return Err(corrupt("plan.mem_words too small for the program image"));
+        }
+        validate_plan_bounds(&plan)?;
+        let code_len = need(root, "code_len")?;
+        let mut layer_ranges = Vec::new();
+        for r in root
+            .get("layer_ranges")
+            .as_arr()
+            .ok_or_else(|| corrupt("layer_ranges missing"))?
+        {
+            let li = r.idx(0).as_usize().ok_or_else(|| corrupt("layer_ranges idx"))?;
+            let name = r.idx(1).as_str().ok_or_else(|| corrupt("layer_ranges name"))?;
+            let s = r.idx(2).as_usize().ok_or_else(|| corrupt("layer_ranges start"))?;
+            let e = r.idx(3).as_usize().ok_or_else(|| corrupt("layer_ranges end"))?;
+            layer_ranges.push((li, name.to_string(), s..e));
+        }
+        let mut schedules = ScheduleMap::new();
+        if let Some(map) = root.get("schedules").as_obj() {
+            for (k, v) in map {
+                let node: usize =
+                    k.parse().map_err(|_| corrupt("schedule key is not a node id"))?;
+                schedules.insert(node, schedule_from(v)?);
+            }
+        }
+        let output_node = match root.get("output_node") {
+            Json::Null => None,
+            v => Some(v.as_usize().ok_or_else(|| corrupt("output_node"))?),
+        };
+        let meta = meta_from(root.get("meta"))?;
+        Ok(Artifact {
+            cfg,
+            graph,
+            compiled: CompiledModel { program, plan, layer_ranges, code_len },
+            schedules,
+            output_node,
+            meta,
+        })
+    }
+
+    /// Hard-error unless the artifact was compiled for `host`.
+    pub fn validate_config(&self, host: &SnowflakeConfig) -> Result<(), ArtifactError> {
+        if config_hash(&self.cfg) != config_hash(host) {
+            return Err(ArtifactError::ConfigMismatch {
+                artifact: hex(config_hash(&self.cfg)),
+                host: hex(config_hash(host)),
+            });
+        }
+        Ok(())
+    }
+
+    /// Write the artifact to `path` (pretty JSON).
+    pub fn save(&self, path: &str) -> Result<(), ArtifactError> {
+        std::fs::write(path, self.to_json().pretty() + "\n")
+            .map_err(|e| ArtifactError::Io(format!("{path}: {e}")))
+    }
+
+    /// Read an artifact from `path` and validate it against the host
+    /// configuration. Version, config-fingerprint or integrity failures
+    /// are typed errors, never silent.
+    pub fn load(path: &str, host: &SnowflakeConfig) -> Result<Artifact, ArtifactError> {
+        let a = Self::load_unchecked(path)?;
+        a.validate_config(host)?;
+        Ok(a)
+    }
+
+    /// Read an artifact without binding it to a host config (inspection
+    /// / cross-config tooling).
+    pub fn load_unchecked(path: &str) -> Result<Artifact, ArtifactError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ArtifactError::Io(format!("{path}: {e}")))?;
+        let root = Json::parse(&text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        Self::from_json(&root)
+    }
+}
+
+/// Every memory region the plan names must fall inside `mem_words`:
+/// a corrupted plan that passed the JSON grammar would otherwise panic
+/// (slice out of bounds) or silently overwrite neighbouring regions at
+/// deploy time — the failures this module promises are typed errors.
+/// (u128 arithmetic: JSON numbers cap at 2^53, so products cannot be
+/// made to wrap past the check.)
+fn validate_plan_bounds(plan: &Plan) -> Result<(), ArtifactError> {
+    let mem = plan.mem_words as u128;
+    let check = |what: &str, base: usize, words: u128| -> Result<(), ArtifactError> {
+        if base as u128 + words > mem {
+            return Err(corrupt(&format!(
+                "{what} region [{base}, +{words}) falls outside mem_words {}",
+                plan.mem_words
+            )));
+        }
+        Ok(())
+    };
+    let canvas_words = |c: &Canvas| {
+        c.w_canvas() as u128 * c.h_canvas() as u128 * c.c_pad as u128
+    };
+    check("input canvas", plan.input_canvas.base, canvas_words(&plan.input_canvas))?;
+    for (n, c) in &plan.canvases {
+        check(&format!("canvas {n}"), c.base, canvas_words(c))?;
+    }
+    check("zero", plan.zero_addr, 64)?;
+    for (i, lp) in plan.layers.iter().enumerate() {
+        check(&format!("layer {i} weights"), lp.weights_addr, lp.weights_words as u128)?;
+        check(&format!("layer {i} bias"), lp.bias_addr, lp.bias_words as u128)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Config fingerprint
+// ---------------------------------------------------------------------
+
+/// FNV-1a over a canonical field-by-field rendering of the config. Any
+/// parameter change — and any schema change to `SnowflakeConfig`
+/// itself, via the field list below — changes the fingerprint, which is
+/// exactly the invalidation we want for compiled artifacts.
+pub fn config_hash(c: &SnowflakeConfig) -> u64 {
+    let canon = format!(
+        "clock_mhz={};n_cus={};vmacs_per_cu={};macs_per_vmac={};word_bytes={};\
+         mbuf_bank_bytes={};mbuf_banks={};wbuf_bytes={};bbuf_bytes={};\
+         icache_banks={};icache_bank_instrs={};n_load_units={};axi_bytes_per_cycle={};\
+         dma_setup_cycles={};vector_queue_depth={};branch_delay_slots={};\
+         scalar_exec_cycles={};gather_cycles={}",
+        c.clock_mhz,
+        c.n_cus,
+        c.vmacs_per_cu,
+        c.macs_per_vmac,
+        c.word_bytes,
+        c.mbuf_bank_bytes,
+        c.mbuf_banks,
+        c.wbuf_bytes,
+        c.bbuf_bytes,
+        c.icache_banks,
+        c.icache_bank_instrs,
+        c.n_load_units,
+        c.axi_bytes_per_cycle,
+        c.dma_setup_cycles,
+        c.vector_queue_depth,
+        c.branch_delay_slots,
+        c.scalar_exec_cycles,
+        c.gather_cycles
+    );
+    fnv1a(canon.as_bytes())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn words_checksum(words: &[u32]) -> u64 {
+    let mut bytes = Vec::with_capacity(words.len() * 4);
+    for w in words {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+fn program_words(p: &Program) -> Vec<u32> {
+    p.instrs.iter().map(encode).collect()
+}
+
+fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn unhex(s: &str) -> Option<u64> {
+    (s.len() == 16).then(|| u64::from_str_radix(s, 16).ok()).flatten()
+}
+
+fn corrupt(msg: &str) -> ArtifactError {
+    ArtifactError::Corrupt(msg.to_string())
+}
+
+fn need(j: &Json, key: &str) -> Result<usize, ArtifactError> {
+    j.get(key).as_usize().ok_or_else(|| corrupt(&format!("missing/invalid field '{key}'")))
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, ArtifactError> {
+    j.get(key)
+        .as_i64()
+        .and_then(|v| u64::try_from(v).ok())
+        .ok_or_else(|| corrupt(&format!("missing/invalid field '{key}'")))
+}
+
+fn need_bool(j: &Json, key: &str) -> Result<bool, ArtifactError> {
+    j.get(key).as_bool().ok_or_else(|| corrupt(&format!("missing/invalid field '{key}'")))
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, ArtifactError> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => Ok(Some(v.as_usize().ok_or_else(|| corrupt(&format!("field '{key}'")))?)),
+    }
+}
+
+fn ju(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn ju64(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn jopt(n: Option<usize>) -> Json {
+    n.map(ju).unwrap_or(Json::Null)
+}
+
+// ---------------------------------------------------------------------
+// Config / meta / schedule codecs
+// ---------------------------------------------------------------------
+
+fn config_json(c: &SnowflakeConfig) -> Json {
+    Json::obj(vec![
+        ("clock_mhz", Json::Num(c.clock_mhz)),
+        ("n_cus", ju(c.n_cus)),
+        ("vmacs_per_cu", ju(c.vmacs_per_cu)),
+        ("macs_per_vmac", ju(c.macs_per_vmac)),
+        ("word_bytes", ju(c.word_bytes)),
+        ("mbuf_bank_bytes", ju(c.mbuf_bank_bytes)),
+        ("mbuf_banks", ju(c.mbuf_banks)),
+        ("wbuf_bytes", ju(c.wbuf_bytes)),
+        ("bbuf_bytes", ju(c.bbuf_bytes)),
+        ("icache_banks", ju(c.icache_banks)),
+        ("icache_bank_instrs", ju(c.icache_bank_instrs)),
+        ("n_load_units", ju(c.n_load_units)),
+        ("axi_bytes_per_cycle", Json::Num(c.axi_bytes_per_cycle)),
+        ("dma_setup_cycles", ju64(c.dma_setup_cycles)),
+        ("vector_queue_depth", ju(c.vector_queue_depth)),
+        ("branch_delay_slots", ju(c.branch_delay_slots)),
+        ("scalar_exec_cycles", ju64(c.scalar_exec_cycles)),
+        ("gather_cycles", ju64(c.gather_cycles)),
+    ])
+}
+
+fn config_from(j: &Json) -> Result<SnowflakeConfig, ArtifactError> {
+    let f = |key: &str| -> Result<f64, ArtifactError> {
+        j.get(key).as_f64().ok_or_else(|| corrupt(&format!("config.{key}")))
+    };
+    Ok(SnowflakeConfig {
+        clock_mhz: f("clock_mhz")?,
+        n_cus: need(j, "n_cus")?,
+        vmacs_per_cu: need(j, "vmacs_per_cu")?,
+        macs_per_vmac: need(j, "macs_per_vmac")?,
+        word_bytes: need(j, "word_bytes")?,
+        mbuf_bank_bytes: need(j, "mbuf_bank_bytes")?,
+        mbuf_banks: need(j, "mbuf_banks")?,
+        wbuf_bytes: need(j, "wbuf_bytes")?,
+        bbuf_bytes: need(j, "bbuf_bytes")?,
+        icache_banks: need(j, "icache_banks")?,
+        icache_bank_instrs: need(j, "icache_bank_instrs")?,
+        n_load_units: need(j, "n_load_units")?,
+        axi_bytes_per_cycle: f("axi_bytes_per_cycle")?,
+        dma_setup_cycles: need_u64(j, "dma_setup_cycles")?,
+        vector_queue_depth: need(j, "vector_queue_depth")?,
+        branch_delay_slots: need(j, "branch_delay_slots")?,
+        scalar_exec_cycles: need_u64(j, "scalar_exec_cycles")?,
+        gather_cycles: need_u64(j, "gather_cycles")?,
+    })
+}
+
+fn meta_json(m: &ArtifactMeta) -> Json {
+    Json::obj(vec![
+        ("tune", Json::str(&m.tune)),
+        ("balance", Json::str(&m.balance)),
+        ("smart_delay_slots", Json::Bool(m.smart_delay_slots)),
+        ("reuse_regions", Json::Bool(m.reuse_regions)),
+        ("skip_fc", Json::Bool(m.skip_fc)),
+    ])
+}
+
+fn meta_from(j: &Json) -> Result<ArtifactMeta, ArtifactError> {
+    Ok(ArtifactMeta {
+        tune: j.get("tune").as_str().unwrap_or("?").to_string(),
+        balance: j.get("balance").as_str().unwrap_or("?").to_string(),
+        smart_delay_slots: need_bool(j, "smart_delay_slots")?,
+        reuse_regions: need_bool(j, "reuse_regions")?,
+        skip_fc: need_bool(j, "skip_fc")?,
+    })
+}
+
+fn policy_str(p: BalancePolicy) -> String {
+    match p {
+        BalancePolicy::Greedy { split } => format!("greedy{split}"),
+        BalancePolicy::TwoUnits => "two-units".to_string(),
+        BalancePolicy::OneUnit => "one-unit".to_string(),
+    }
+}
+
+fn policy_json(p: BalancePolicy) -> Json {
+    match p {
+        BalancePolicy::Greedy { split } => {
+            Json::obj(vec![("kind", Json::str("greedy")), ("split", ju(split))])
+        }
+        BalancePolicy::TwoUnits => Json::obj(vec![("kind", Json::str("two-units"))]),
+        BalancePolicy::OneUnit => Json::obj(vec![("kind", Json::str("one-unit"))]),
+    }
+}
+
+fn policy_from(j: &Json) -> Result<BalancePolicy, ArtifactError> {
+    match j.get("kind").as_str() {
+        Some("greedy") => Ok(BalancePolicy::Greedy { split: need(j, "split")? }),
+        Some("two-units") => Ok(BalancePolicy::TwoUnits),
+        Some("one-unit") => Ok(BalancePolicy::OneUnit),
+        _ => Err(corrupt("unknown balance policy")),
+    }
+}
+
+fn order_str(o: LoopOrder) -> &'static str {
+    match o {
+        LoopOrder::Mloop => "mloop",
+        LoopOrder::Kloop => "kloop",
+    }
+}
+
+fn order_from(j: &Json) -> Result<LoopOrder, ArtifactError> {
+    match j.as_str() {
+        Some("mloop") => Ok(LoopOrder::Mloop),
+        Some("kloop") => Ok(LoopOrder::Kloop),
+        _ => Err(corrupt("unknown loop order")),
+    }
+}
+
+fn schedule_json(s: &Schedule) -> Json {
+    Json::obj(vec![
+        ("order", Json::str(order_str(s.order))),
+        ("rows_per_cu", ju(s.rows_per_cu)),
+        ("policy", policy_json(s.policy)),
+    ])
+}
+
+fn schedule_from(j: &Json) -> Result<Schedule, ArtifactError> {
+    Ok(Schedule {
+        order: order_from(j.get("order"))?,
+        rows_per_cu: need(j, "rows_per_cu")?,
+        policy: policy_from(j.get("policy"))?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Plan codec
+// ---------------------------------------------------------------------
+
+fn canvas_json(c: &Canvas) -> Json {
+    Json::obj(vec![
+        ("base", ju(c.base)),
+        ("c", ju(c.c)),
+        ("h", ju(c.h)),
+        ("w", ju(c.w)),
+        ("c_pad", ju(c.c_pad)),
+        ("mp", ju(c.mp)),
+        ("h_slack", ju(c.h_slack)),
+        ("w_slack", ju(c.w_slack)),
+    ])
+}
+
+fn canvas_from(j: &Json) -> Result<Canvas, ArtifactError> {
+    Ok(Canvas {
+        base: need(j, "base")?,
+        c: need(j, "c")?,
+        h: need(j, "h")?,
+        w: need(j, "w")?,
+        c_pad: need(j, "c_pad")?,
+        mp: need(j, "mp")?,
+        h_slack: need(j, "h_slack")?,
+        w_slack: need(j, "w_slack")?,
+    })
+}
+
+fn lowered_json(op: &Lowered) -> Json {
+    match *op {
+        Lowered::Conv { node, src, bypass, in_ch, out_ch, kh, kw, stride, pad, relu } => {
+            Json::obj(vec![
+                ("kind", Json::str("conv")),
+                ("node", ju(node)),
+                ("src", jopt(src)),
+                ("bypass", jopt(bypass)),
+                ("in_ch", ju(in_ch)),
+                ("out_ch", ju(out_ch)),
+                ("kh", ju(kh)),
+                ("kw", ju(kw)),
+                ("stride", ju(stride)),
+                ("pad", ju(pad)),
+                ("relu", Json::Bool(relu)),
+            ])
+        }
+        Lowered::MaxPool { node, src, kh, kw, stride, pad } => Json::obj(vec![
+            ("kind", Json::str("maxpool")),
+            ("node", ju(node)),
+            ("src", jopt(src)),
+            ("kh", ju(kh)),
+            ("kw", ju(kw)),
+            ("stride", ju(stride)),
+            ("pad", ju(pad)),
+        ]),
+        Lowered::AvgPool { node, src, kh, kw, stride, pad } => Json::obj(vec![
+            ("kind", Json::str("avgpool")),
+            ("node", ju(node)),
+            ("src", jopt(src)),
+            ("kh", ju(kh)),
+            ("kw", ju(kw)),
+            ("stride", ju(stride)),
+            ("pad", ju(pad)),
+        ]),
+        Lowered::Fc { node, src, in_features, out_features, relu } => Json::obj(vec![
+            ("kind", Json::str("fc")),
+            ("node", ju(node)),
+            ("src", jopt(src)),
+            ("in_features", ju(in_features)),
+            ("out_features", ju(out_features)),
+            ("relu", Json::Bool(relu)),
+        ]),
+    }
+}
+
+fn lowered_from(j: &Json) -> Result<Lowered, ArtifactError> {
+    match j.get("kind").as_str() {
+        Some("conv") => Ok(Lowered::Conv {
+            node: need(j, "node")?,
+            src: opt_usize(j, "src")?,
+            bypass: opt_usize(j, "bypass")?,
+            in_ch: need(j, "in_ch")?,
+            out_ch: need(j, "out_ch")?,
+            kh: need(j, "kh")?,
+            kw: need(j, "kw")?,
+            stride: need(j, "stride")?,
+            pad: need(j, "pad")?,
+            relu: need_bool(j, "relu")?,
+        }),
+        Some("maxpool") => Ok(Lowered::MaxPool {
+            node: need(j, "node")?,
+            src: opt_usize(j, "src")?,
+            kh: need(j, "kh")?,
+            kw: need(j, "kw")?,
+            stride: need(j, "stride")?,
+            pad: need(j, "pad")?,
+        }),
+        Some("avgpool") => Ok(Lowered::AvgPool {
+            node: need(j, "node")?,
+            src: opt_usize(j, "src")?,
+            kh: need(j, "kh")?,
+            kw: need(j, "kw")?,
+            stride: need(j, "stride")?,
+            pad: need(j, "pad")?,
+        }),
+        Some("fc") => Ok(Lowered::Fc {
+            node: need(j, "node")?,
+            src: opt_usize(j, "src")?,
+            in_features: need(j, "in_features")?,
+            out_features: need(j, "out_features")?,
+            relu: need_bool(j, "relu")?,
+        }),
+        _ => Err(corrupt("unknown lowered-op kind")),
+    }
+}
+
+fn estimate_json(e: &CostEstimate) -> Json {
+    Json::obj(vec![
+        ("cycles", ju64(e.cycles)),
+        ("dram_bytes", ju64(e.dram_bytes)),
+        ("compute_cycles", ju64(e.compute_cycles)),
+        ("issue_cycles", ju64(e.issue_cycles)),
+        ("dma_cycles", ju64(e.dma_cycles)),
+        ("startup_cycles", ju64(e.startup_cycles)),
+        ("streams", ju64(e.streams)),
+    ])
+}
+
+fn estimate_from(j: &Json) -> Result<CostEstimate, ArtifactError> {
+    Ok(CostEstimate {
+        cycles: need_u64(j, "cycles")?,
+        dram_bytes: need_u64(j, "dram_bytes")?,
+        compute_cycles: need_u64(j, "compute_cycles")?,
+        issue_cycles: need_u64(j, "issue_cycles")?,
+        dma_cycles: need_u64(j, "dma_cycles")?,
+        startup_cycles: need_u64(j, "startup_cycles")?,
+        streams: need_u64(j, "streams")?,
+    })
+}
+
+fn geom_json(g: &Geom) -> Json {
+    Json::obj(vec![
+        ("row_read", ju(g.row_read)),
+        ("segs", Json::arr(g.segs.iter().map(|s| ju(*s)))),
+        ("in_w_slack", ju(g.in_w_slack)),
+    ])
+}
+
+fn geom_from(j: &Json) -> Result<Geom, ArtifactError> {
+    Ok(Geom {
+        row_read: need(j, "row_read")?,
+        segs: j
+            .get("segs")
+            .as_arr()
+            .ok_or_else(|| corrupt("geom.segs"))?
+            .iter()
+            .map(|s| s.as_usize().ok_or_else(|| corrupt("geom.segs entry")))
+            .collect::<Result<_, _>>()?,
+        in_w_slack: need(j, "in_w_slack")?,
+    })
+}
+
+fn decision_json(d: &OpPlan) -> Json {
+    match d {
+        OpPlan::Conv(c) => Json::obj(vec![
+            ("kind", Json::str("conv")),
+            ("c_pad_in", ju(c.c_pad_in)),
+            ("c_pad_out", ju(c.c_pad_out)),
+            ("kh", ju(c.kh)),
+            ("kw", ju(c.kw)),
+            ("stride", ju(c.stride)),
+            ("pad", ju(c.pad)),
+            ("h_out", ju(c.h_out)),
+            ("w_out", ju(c.w_out)),
+            ("geom", geom_json(&c.geom)),
+            ("kernel_words", ju(c.kernel_words)),
+            ("k_groups", ju(c.k_groups)),
+            ("rows_per_cu", ju(c.rows_per_cu)),
+            ("n_tiles", ju(c.n_tiles)),
+            ("order", Json::str(order_str(c.order))),
+            ("split", ju(c.split)),
+            ("policy", policy_json(c.policy)),
+            ("max_rows", ju(c.max_rows)),
+            ("predicted", estimate_json(&c.predicted)),
+            ("dbuf_w", Json::Bool(c.dbuf_w)),
+            ("has_bypass", Json::Bool(c.has_bypass)),
+            ("relu", Json::Bool(c.relu)),
+        ]),
+        OpPlan::MaxPool(p) => Json::obj(vec![
+            ("kind", Json::str("maxpool")),
+            ("c", ju(p.c)),
+            ("c_pad", ju(p.c_pad)),
+            ("kh", ju(p.kh)),
+            ("kw", ju(p.kw)),
+            ("stride", ju(p.stride)),
+            ("pad", ju(p.pad)),
+            ("h_out", ju(p.h_out)),
+            ("w_out", ju(p.w_out)),
+            ("x_groups", ju(p.x_groups)),
+            ("rows_per_cu", ju(p.rows_per_cu)),
+            ("n_tiles", ju(p.n_tiles)),
+            ("spill", ju(p.spill)),
+            ("max_rows", ju(p.max_rows)),
+            ("predicted", estimate_json(&p.predicted)),
+        ]),
+        OpPlan::AvgPool(a) => Json::obj(vec![
+            ("kind", Json::str("avgpool")),
+            ("c", ju(a.c)),
+            ("c_pad", ju(a.c_pad)),
+            ("kh", ju(a.kh)),
+            ("kw", ju(a.kw)),
+            ("stride", ju(a.stride)),
+            ("h_out", ju(a.h_out)),
+            ("w_out", ju(a.w_out)),
+            ("chunks", ju(a.chunks)),
+        ]),
+        OpPlan::Fc(f) => Json::obj(vec![
+            ("kind", Json::str("fc")),
+            ("in_features", ju(f.in_features)),
+            ("out_features", ju(f.out_features)),
+            ("k_groups", ju(f.k_groups)),
+            ("chunks", Json::arr(f.chunks.iter().map(|c| ju(*c)))),
+            ("relu", Json::Bool(f.relu)),
+        ]),
+    }
+}
+
+fn decision_from(j: &Json) -> Result<OpPlan, ArtifactError> {
+    match j.get("kind").as_str() {
+        Some("conv") => Ok(OpPlan::Conv(ConvPlan {
+            c_pad_in: need(j, "c_pad_in")?,
+            c_pad_out: need(j, "c_pad_out")?,
+            kh: need(j, "kh")?,
+            kw: need(j, "kw")?,
+            stride: need(j, "stride")?,
+            pad: need(j, "pad")?,
+            h_out: need(j, "h_out")?,
+            w_out: need(j, "w_out")?,
+            geom: geom_from(j.get("geom"))?,
+            kernel_words: need(j, "kernel_words")?,
+            k_groups: need(j, "k_groups")?,
+            rows_per_cu: need(j, "rows_per_cu")?,
+            n_tiles: need(j, "n_tiles")?,
+            order: order_from(j.get("order"))?,
+            split: need(j, "split")?,
+            policy: policy_from(j.get("policy"))?,
+            max_rows: need(j, "max_rows")?,
+            predicted: estimate_from(j.get("predicted"))?,
+            dbuf_w: need_bool(j, "dbuf_w")?,
+            has_bypass: need_bool(j, "has_bypass")?,
+            relu: need_bool(j, "relu")?,
+        })),
+        Some("maxpool") => Ok(OpPlan::MaxPool(PoolPlan {
+            c: need(j, "c")?,
+            c_pad: need(j, "c_pad")?,
+            kh: need(j, "kh")?,
+            kw: need(j, "kw")?,
+            stride: need(j, "stride")?,
+            pad: need(j, "pad")?,
+            h_out: need(j, "h_out")?,
+            w_out: need(j, "w_out")?,
+            x_groups: need(j, "x_groups")?,
+            rows_per_cu: need(j, "rows_per_cu")?,
+            n_tiles: need(j, "n_tiles")?,
+            spill: need(j, "spill")?,
+            max_rows: need(j, "max_rows")?,
+            predicted: estimate_from(j.get("predicted"))?,
+        })),
+        Some("avgpool") => Ok(OpPlan::AvgPool(AvgPlan {
+            c: need(j, "c")?,
+            c_pad: need(j, "c_pad")?,
+            kh: need(j, "kh")?,
+            kw: need(j, "kw")?,
+            stride: need(j, "stride")?,
+            h_out: need(j, "h_out")?,
+            w_out: need(j, "w_out")?,
+            chunks: need(j, "chunks")?,
+        })),
+        Some("fc") => Ok(OpPlan::Fc(FcPlan {
+            in_features: need(j, "in_features")?,
+            out_features: need(j, "out_features")?,
+            k_groups: need(j, "k_groups")?,
+            chunks: j
+                .get("chunks")
+                .as_arr()
+                .ok_or_else(|| corrupt("fc.chunks"))?
+                .iter()
+                .map(|c| c.as_usize().ok_or_else(|| corrupt("fc.chunks entry")))
+                .collect::<Result<_, _>>()?,
+            relu: need_bool(j, "relu")?,
+        })),
+        _ => Err(corrupt("unknown decision kind")),
+    }
+}
+
+fn plan_json(p: &Plan) -> Json {
+    let canvases: BTreeMap<String, Json> =
+        p.canvases.iter().map(|(n, c)| (n.to_string(), canvas_json(c))).collect();
+    let layers: Vec<Json> = p
+        .layers
+        .iter()
+        .map(|lp| {
+            Json::obj(vec![
+                ("op", lowered_json(&lp.op)),
+                ("decision", decision_json(&lp.decision)),
+                ("weights_addr", ju(lp.weights_addr)),
+                ("weights_words", ju(lp.weights_words)),
+                ("bias_addr", ju(lp.bias_addr)),
+                ("bias_words", ju(lp.bias_words)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("fmt_frac", ju(p.fmt.frac as usize)),
+        ("input_canvas", canvas_json(&p.input_canvas)),
+        ("canvases", Json::Obj(canvases)),
+        ("layers", Json::Arr(layers)),
+        ("zero_addr", ju(p.zero_addr)),
+        ("program_addr", ju(p.program_addr)),
+        ("mem_words", ju(p.mem_words)),
+        ("activation_words", ju(p.activation_words)),
+    ])
+}
+
+fn plan_from(j: &Json) -> Result<Plan, ArtifactError> {
+    let frac = need(j, "fmt_frac")?;
+    if frac >= 16 {
+        return Err(corrupt("fmt_frac out of range"));
+    }
+    let mut canvases = BTreeMap::new();
+    if let Some(map) = j.get("canvases").as_obj() {
+        for (k, v) in map {
+            let node: usize = k.parse().map_err(|_| corrupt("canvas key"))?;
+            canvases.insert(node, canvas_from(v)?);
+        }
+    }
+    let mut layers = Vec::new();
+    for l in j.get("layers").as_arr().ok_or_else(|| corrupt("plan.layers"))? {
+        layers.push(LayerPlan {
+            op: lowered_from(l.get("op"))?,
+            decision: decision_from(l.get("decision"))?,
+            weights_addr: need(l, "weights_addr")?,
+            weights_words: need(l, "weights_words")?,
+            bias_addr: need(l, "bias_addr")?,
+            bias_words: need(l, "bias_words")?,
+        });
+    }
+    Ok(Plan {
+        fmt: QFormat::new(frac as u32),
+        input_canvas: canvas_from(j.get("input_canvas"))?,
+        canvases,
+        layers,
+        zero_addr: need(j, "zero_addr")?,
+        program_addr: need(j, "program_addr")?,
+        mem_words: need(j, "mem_words")?,
+        activation_words: need(j, "activation_words")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Compiler;
+    use crate::model::layer::{LayerKind, Shape};
+
+    fn small_graph() -> Graph {
+        let mut g = Graph::new("artifact_small", Shape::new(16, 12, 12));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c1",
+        );
+        g.push_seq(LayerKind::MaxPool { kh: 2, kw: 2, stride: 2, pad: 0 }, "p1");
+        g
+    }
+
+    fn build_small() -> Artifact {
+        Compiler::new(SnowflakeConfig::default())
+            .build(&small_graph())
+            .expect("build")
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let a = build_small();
+        let back = Artifact::from_json(&a.to_json()).expect("roundtrip");
+        assert_eq!(back.compiled.program, a.compiled.program, "program must round-trip exactly");
+        assert_eq!(back.compiled.plan, a.compiled.plan, "plan must round-trip exactly");
+        assert_eq!(back.compiled.layer_ranges, a.compiled.layer_ranges);
+        assert_eq!(back.compiled.code_len, a.compiled.code_len);
+        assert_eq!(back.schedules, a.schedules);
+        assert_eq!(back.output_node, a.output_node);
+        assert_eq!(back.meta, a.meta);
+        assert_eq!(back.cfg, a.cfg);
+        assert_eq!(back.graph.nodes.len(), a.graph.nodes.len());
+        // Re-serialization is stable (byte-identical text).
+        assert_eq!(back.to_json().pretty(), a.to_json().pretty());
+    }
+
+    #[test]
+    fn config_hash_is_stable_and_sensitive() {
+        let c = SnowflakeConfig::default();
+        assert_eq!(config_hash(&c), config_hash(&c.clone()));
+        let c2 = SnowflakeConfig { n_cus: 8, ..c.clone() };
+        assert_ne!(config_hash(&c), config_hash(&c2));
+        let c3 = SnowflakeConfig { dma_setup_cycles: 65, ..c };
+        assert_ne!(config_hash(&c3), config_hash(&SnowflakeConfig::default()));
+    }
+
+    #[test]
+    fn config_mismatch_is_a_hard_typed_error() {
+        let a = build_small();
+        let other = SnowflakeConfig { mbuf_bank_bytes: 32 * 1024, ..SnowflakeConfig::default() };
+        let err = a.validate_config(&other).unwrap_err();
+        assert!(matches!(err, ArtifactError::ConfigMismatch { .. }), "{err}");
+        assert!(a.validate_config(&SnowflakeConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let a = build_small();
+        let mut j = a.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::num(99));
+        }
+        let err = Artifact::from_json(&j).unwrap_err();
+        assert_eq!(
+            err,
+            ArtifactError::FormatVersion { found: 99, expected: FORMAT_VERSION }
+        );
+    }
+
+    #[test]
+    fn corrupted_program_word_rejected() {
+        let a = build_small();
+        let mut j = a.to_json();
+        // Flip one program word without updating the checksum.
+        if let Json::Obj(o) = &mut j {
+            let p = o.get_mut("program").unwrap();
+            if let Json::Obj(po) = p {
+                if let Some(Json::Arr(words)) = po.get_mut("words") {
+                    words[3] = Json::num(0x1234_5678u32 as f64);
+                }
+            }
+        }
+        let err = Artifact::from_json(&j).unwrap_err();
+        assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+    }
+
+    #[test]
+    fn non_artifact_json_rejected() {
+        let err = Artifact::from_json(&Json::parse(r#"{"hello": 1}"#).unwrap()).unwrap_err();
+        assert_eq!(err, ArtifactError::NotAnArtifact);
+    }
+
+    #[test]
+    fn hex_helpers_roundtrip() {
+        for v in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(unhex(&hex(v)), Some(v));
+        }
+        assert_eq!(unhex("xyz"), None);
+        assert_eq!(unhex("123"), None); // wrong length
+    }
+}

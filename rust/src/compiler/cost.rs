@@ -445,6 +445,161 @@ pub fn search(
     (best_s, best_e)
 }
 
+// ---------------------------------------------------------------------
+// Pool schedules (ROADMAP follow-on from ISSUE 2)
+// ---------------------------------------------------------------------
+
+/// Maxpool geometry the pool cost model needs — everything `decide`
+/// derives before choosing the strip height. Pool strips share the
+/// conv maps' startup-vs-volume trade: taller strips mean fewer tiles
+/// (fewer DMA streams, less per-tile loop overhead) but a longer
+/// serial prefix before the first MAX can issue.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolGeom {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    /// Real (unpadded) channels — the per-row write volume and the
+    /// channel-loop trip count.
+    pub c: usize,
+    pub c_pad: usize,
+    /// Input canvas row words (margin/slack inclusive).
+    pub row_words_in: usize,
+    /// Strip spill rows (lane overreach past the last window).
+    pub spill: usize,
+    /// Constraint cap on `rows_per_cu` (MBuf bank, `h_out/n_cus`).
+    pub max_rows: usize,
+}
+
+/// Predict cycles/traffic for a maxpool layer at one strip height.
+/// Mirrors `codegen/pool.rs::emit_maxpool`: per tile, each CU streams
+/// one strip and then issues `rows × c × x_groups × kh·kw` MAX ops
+/// (1 cycle each on the pool unit), with the channel/row loop overhead
+/// on the issue stage. Same shape as the conv estimate:
+/// `startup + max(compute, issue, dma) + drain`.
+pub fn pool_estimate(
+    g: &PoolGeom,
+    rows_per_cu: usize,
+    split: usize,
+    cfg: &SnowflakeConfig,
+) -> CostEstimate {
+    let n_cus = cfg.n_cus as u64;
+    let units = cfg.n_load_units as u64;
+    let setup = cfg.dma_setup_cycles;
+    let wb = cfg.word_bytes as u64;
+    let budget_mb = (cfg.axi_bytes_per_cycle * 1000.0).round().max(1.0) as u64;
+    let bytes_to_cycles = |bytes: u64| (bytes * 1000).div_ceil(budget_mb);
+
+    let rows_list = tile_rows(g.h_out, rows_per_cu, cfg.n_cus);
+    let n_tiles = rows_list.len() as u64;
+    let strip_words = |r: usize| ((r - 1) * g.stride + g.kh + g.spill) * g.row_words_in;
+    let pieces = |r: usize| split.min(strip_words(r).div_ceil(64)).max(1);
+
+    // ---- traffic -----------------------------------------------------
+    let maps_once: u64 = rows_list.iter().map(|&r| n_cus * strip_words(r) as u64).sum();
+    let streams: u64 = rows_list.iter().map(|&r| n_cus * pieces(r) as u64).sum();
+    let windows_rows: u64 = rows_list.iter().map(|&r| r as u64).sum();
+    let stores_words = windows_rows * n_cus * (g.c * g.w_out) as u64;
+    let dram_bytes = (maps_once + stores_words) * wb;
+
+    // ---- compute (pool unit, 1 cycle per MAX) ------------------------
+    let x_groups = g.w_out.div_ceil(16) as u64;
+    let taps = (g.kh * g.kw) as u64;
+    let compute_cycles = windows_rows * g.c as u64 * x_groups * taps;
+
+    // ---- issue -------------------------------------------------------
+    // Per x-group: 2 address adds + taps MAXes + taps-1 advances; per
+    // channel iteration ~8 loop-control instructions (branch + delay
+    // slots + the two +1 walks); per row ~13; per tile ~10 + the
+    // next-tile strip loads (5 instrs per stream).
+    let per_group = 1 + 2 * taps;
+    let per_chan = x_groups * per_group + 8;
+    let per_row = g.c as u64 * per_chan + 13;
+    let issue_cycles = windows_rows * per_row + n_tiles * 10 + streams * 5;
+
+    // ---- DMA ---------------------------------------------------------
+    let bus_cycles = bytes_to_cycles(maps_once * wb);
+    let per_unit_cycles = streams.div_ceil(units) * setup + bytes_to_cycles(maps_once * wb / units.max(1));
+    let dma_cycles = bus_cycles.max(per_unit_cycles);
+
+    // ---- startup: tile-0 strips before the first MAX -----------------
+    let start_streams = n_cus * pieces(rows_list[0]) as u64;
+    let start_bytes = n_cus * strip_words(rows_list[0]) as u64 * wb;
+    let startup_cycles = 20 + start_streams.div_ceil(units) * setup + bytes_to_cycles(start_bytes);
+
+    let cycles = startup_cycles + compute_cycles.max(issue_cycles).max(dma_cycles) + 150;
+    CostEstimate {
+        cycles,
+        dram_bytes,
+        compute_cycles,
+        issue_cycles,
+        dma_cycles,
+        startup_cycles,
+        streams,
+    }
+}
+
+/// The maps-split factor pool strip loads inherit from the base
+/// balance policy (pool layers have no per-layer policy knob).
+pub fn pool_split(opts: &CompileOptions) -> usize {
+    match opts.balance {
+        BalancePolicy::Greedy { split } => split.max(1),
+        _ => 1,
+    }
+}
+
+/// Argmin of [`pool_estimate`] over the strip-height candidates, with
+/// the same hysteresis as the conv search: the seed heuristic
+/// (capacity-maximal `max_rows`) is kept unless a candidate beats its
+/// prediction by [`DISPLACE_MARGIN_PCT`] percent. Candidate set mirrors
+/// [`rows_candidates`]: small heights, the cap and cap−1, and heights
+/// giving exactly 1..=4 tiles.
+pub fn pool_search(
+    g: &PoolGeom,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> (usize, CostEstimate) {
+    let split = pool_split(opts);
+    let seed = g.max_rows.max(1);
+    let seed_e = pool_estimate(g, seed, split, cfg);
+    let mut cands = std::collections::BTreeSet::new();
+    for r in 1..=seed.min(8) {
+        cands.insert(r);
+    }
+    cands.insert(seed);
+    if seed > 1 {
+        cands.insert(seed - 1);
+    }
+    for t in 1..=4usize {
+        let r = g.h_out.div_ceil(cfg.n_cus * t);
+        if (1..=seed).contains(&r) {
+            cands.insert(r);
+        }
+    }
+    let (mut best_r, mut best_e) = (seed, seed_e);
+    for r in cands {
+        if r == best_r {
+            continue;
+        }
+        let e = pool_estimate(g, r, split, cfg);
+        if e.cycles < best_e.cycles
+            || (e.cycles == best_e.cycles && e.dram_bytes < best_e.dram_bytes)
+        {
+            best_r = r;
+            best_e = e;
+        }
+    }
+    if best_r != seed
+        && best_e.cycles.saturating_mul(100)
+            >= seed_e.cycles.saturating_mul(100 - DISPLACE_MARGIN_PCT)
+    {
+        return (seed, seed_e);
+    }
+    (best_r, best_e)
+}
+
 /// Check an explicit override against the layer's constraint caps. An
 /// explicitly requested Mloop that the skeleton cannot emit is an
 /// error, not a silent Kloop fallback — only `force_loop_order` (a
@@ -640,5 +795,54 @@ mod tests {
         assert!(validate(&mloop_bad, &g, &cfg).is_err());
         let mloop_ok = Schedule { order: LoopOrder::Mloop, rows_per_cu: 6, ..ok };
         assert!(validate(&mloop_ok, &g, &cfg).is_ok());
+    }
+
+    /// AlexNet-pool1-class geometry (55x55 -> 27x27, 3x3 stride 2).
+    fn pool1_geom() -> PoolGeom {
+        PoolGeom {
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            h_out: 27,
+            w_out: 27,
+            c: 64,
+            c_pad: 64,
+            row_words_in: 55 * 64,
+            spill: 1,
+            max_rows: 4,
+        }
+    }
+
+    #[test]
+    fn pool_estimate_tracks_the_real_tradeoffs() {
+        let cfg = SnowflakeConfig::default();
+        let g = pool1_geom();
+        let tall = pool_estimate(&g, g.max_rows, 2, &cfg);
+        let short = pool_estimate(&g, 1, 2, &cfg);
+        assert!(tall.cycles > 0 && short.cycles > 0);
+        // Shorter strips mean more tiles, hence more DMA streams and a
+        // smaller serial startup prefix.
+        assert!(short.streams > tall.streams);
+        assert!(short.startup_cycles < tall.startup_cycles);
+        // Compute volume is height-independent (same windows either way).
+        assert_eq!(short.compute_cycles, tall.compute_cycles);
+        // Shorter strips re-stream more window-overlap rows.
+        assert!(short.dram_bytes >= tall.dram_bytes);
+    }
+
+    #[test]
+    fn pool_search_keeps_seed_on_ties_and_stays_in_cap() {
+        let cfg = SnowflakeConfig::default();
+        let g = pool1_geom();
+        let opts = CompileOptions::default();
+        let (rows, e) = pool_search(&g, &cfg, &opts);
+        assert!((1..=g.max_rows).contains(&rows));
+        let seed_e = pool_estimate(&g, g.max_rows, pool_split(&opts), &cfg);
+        assert!(e.cycles <= seed_e.cycles, "search result predicted worse than the seed");
+        // A candidate inside the hysteresis margin must not displace the
+        // seed: search on a single-candidate space returns the seed.
+        let tiny = PoolGeom { max_rows: 1, h_out: 4, ..g };
+        let (r1, _) = pool_search(&tiny, &cfg, &opts);
+        assert_eq!(r1, 1);
     }
 }

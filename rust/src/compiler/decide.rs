@@ -86,7 +86,7 @@ pub fn pool_geometry(_in_shape: Shape, _kw: usize, _stride: usize, _pad: usize, 
 }
 
 /// Per-op compiled plan (decision variables + derived tiling).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum OpPlan {
     Conv(ConvPlan),
     MaxPool(PoolPlan),
@@ -94,7 +94,7 @@ pub enum OpPlan {
     Fc(FcPlan),
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ConvPlan {
     pub c_pad_in: usize,
     pub c_pad_out: usize,
@@ -128,7 +128,7 @@ pub struct ConvPlan {
     pub relu: bool,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PoolPlan {
     pub c: usize,
     pub c_pad: usize,
@@ -143,9 +143,13 @@ pub struct PoolPlan {
     pub n_tiles: usize,
     /// Strip spill rows (lane overreach).
     pub spill: usize,
+    /// Constraint cap `rows_per_cu` was chosen under (tuner bound).
+    pub max_rows: usize,
+    /// Pool cost model's prediction for the chosen strip height.
+    pub predicted: CostEstimate,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AvgPlan {
     pub c: usize,
     pub c_pad: usize,
@@ -158,7 +162,7 @@ pub struct AvgPlan {
     pub chunks: usize,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FcPlan {
     pub in_features: usize,
     pub out_features: usize,
@@ -387,8 +391,31 @@ pub fn decide(
                     out_shape.h, cfg.n_cus
                 )));
             }
-            let mut rows_per_cu = ((max_in_rows - kh) / stride + 1).max(1);
-            rows_per_cu = rows_per_cu.min((out_shape.h / cfg.n_cus).max(1));
+            let mut max_rows = ((max_in_rows - kh) / stride + 1).max(1);
+            max_rows = max_rows.min((out_shape.h / cfg.n_cus).max(1));
+            // Strip-height selection mirrors conv: the seed heuristic is
+            // capacity-maximal; the tuner routes the same cost-model
+            // candidate search over heights, keeping the seed on ties.
+            let gx = cost::PoolGeom {
+                kh,
+                kw,
+                stride,
+                h_out: out_shape.h,
+                w_out: out_shape.w,
+                c: in_shape.c,
+                c_pad: c_pad(in_shape.c),
+                row_words_in,
+                spill,
+                max_rows,
+            };
+            let (rows_per_cu, predicted) = match opts.tune {
+                TuneMode::Heuristic => {
+                    (max_rows, cost::pool_estimate(&gx, max_rows, cost::pool_split(opts), cfg))
+                }
+                TuneMode::Analytical | TuneMode::Measured { .. } => {
+                    cost::pool_search(&gx, cfg, opts)
+                }
+            };
             let n_tiles = out_shape.h.div_ceil(rows_per_cu * cfg.n_cus);
             Ok(OpPlan::MaxPool(PoolPlan {
                 c: in_shape.c,
@@ -403,6 +430,8 @@ pub fn decide(
                 rows_per_cu,
                 n_tiles,
                 spill,
+                max_rows,
+                predicted,
             }))
         }
         Lowered::AvgPool { kh, kw, stride, pad, .. } => {
@@ -701,6 +730,37 @@ mod tests {
         assert_eq!(f.k_groups, 256);
         assert!(f.chunks.iter().all(|c| *c <= cfg.wbuf_region_words()));
         assert_eq!(f.chunks.iter().sum::<usize>(), 9216);
+    }
+
+    #[test]
+    fn pool_schedule_search_obeys_caps_and_never_predicts_worse() {
+        // ROADMAP follow-on: maxpool strips ride the same cost-model
+        // candidate search as conv maps, with the capacity-maximal seed
+        // heuristic as the tie/fallback.
+        let cfg = SnowflakeConfig::default();
+        let op = Lowered::MaxPool { node: 0, src: None, kh: 3, kw: 3, stride: 2, pad: 0 };
+        let (is_, os_) = (Shape::new(64, 55, 55), Shape::new(64, 27, 27));
+        let heur_opts = CompileOptions {
+            tune: crate::compiler::TuneMode::Heuristic,
+            ..Default::default()
+        };
+        let OpPlan::MaxPool(h) = decide(&op, is_, os_, 0, 0, &cfg, &heur_opts).unwrap() else {
+            panic!()
+        };
+        assert_eq!(h.rows_per_cu, h.max_rows, "heuristic mode pins the seed height");
+        assert!(h.predicted.cycles > 0);
+        let OpPlan::MaxPool(t) =
+            decide(&op, is_, os_, 0, 0, &cfg, &CompileOptions::default()).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(t.max_rows, h.max_rows, "caps are schedule-independent");
+        assert!((1..=t.max_rows).contains(&t.rows_per_cu));
+        assert_eq!(t.n_tiles, t.h_out.div_ceil(t.rows_per_cu * cfg.n_cus));
+        assert!(
+            t.predicted.cycles <= h.predicted.cycles,
+            "search may never pick a schedule it predicts slower than the seed"
+        );
     }
 
     #[test]

@@ -70,13 +70,24 @@ pub fn deploy(
     weights: &Weights,
     input: &Tensor<f32>,
 ) {
+    deploy_static(m, compiled, graph, weights);
+    write_canvas(m, &compiled.plan.input_canvas, input, compiled.plan.fmt);
+}
+
+/// Place the *static* image only — arranged weights/biases and the
+/// encoded instruction stream — leaving the input canvas untouched.
+/// This is the §5.3 build/deploy split the [`crate::engine::Engine`]
+/// runs on: static data is deployed once at model load; each inference
+/// then only rewrites the input canvas.
+pub fn deploy_static(
+    m: &mut Machine,
+    compiled: &CompiledModel,
+    graph: &Graph,
+    weights: &Weights,
+) {
     let plan = &compiled.plan;
     let fmt = plan.fmt;
     assert!(m.memory.len() >= plan.mem_words, "machine DRAM too small for the plan");
-
-    // Input image.
-    write_canvas(m, &plan.input_canvas, input, fmt);
-    let _ = graph;
 
     for lp in &plan.layers {
         match (&lp.op, &lp.decision) {

@@ -10,18 +10,18 @@
 //! instructions yet matches execution time wherever MAC latency hides
 //! the issue overhead (the paper's Table 1 observation).
 
-use super::{compile, CompileError, CompileOptions, CompiledModel};
+use super::{compile_impl, CompileError, CompileOptions, CompiledModel};
 use crate::arch::SnowflakeConfig;
 use crate::model::graph::Graph;
 
 /// Compile the "auto" variant (the paper's compiler-generated code).
 pub fn compile_auto(g: &Graph, cfg: &SnowflakeConfig) -> Result<CompiledModel, CompileError> {
-    compile(g, cfg, &CompileOptions { smart_delay_slots: false, ..Default::default() })
+    compile_impl(g, cfg, &CompileOptions { smart_delay_slots: false, ..Default::default() })
 }
 
 /// Compile the "hand" variant (manually scheduled slots).
 pub fn compile_hand(g: &Graph, cfg: &SnowflakeConfig) -> Result<CompiledModel, CompileError> {
-    compile(g, cfg, &CompileOptions { smart_delay_slots: true, ..Default::default() })
+    compile_impl(g, cfg, &CompileOptions { smart_delay_slots: true, ..Default::default() })
 }
 
 /// Instruction-count delta (auto − hand), the paper's "437 more".

@@ -90,7 +90,7 @@ impl Canvas {
 /// A lowered operation: graph nodes after fusing ResidualAdd into its
 /// producing conv (§2 Residual addition: "add those bypass values as
 /// output results are being produced by a CONV").
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Lowered {
     Conv {
         node: usize,
@@ -253,7 +253,7 @@ pub fn lower(graph: &Graph) -> Result<Vec<Lowered>, CompileError> {
 }
 
 /// Per-lowered-op plan entry.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerPlan {
     pub op: Lowered,
     pub decision: OpPlan,
@@ -266,7 +266,7 @@ pub struct LayerPlan {
 }
 
 /// The full memory plan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub fmt: QFormat,
     pub input_canvas: Canvas,
@@ -294,6 +294,26 @@ impl Plan {
 
     pub fn out_canvas(&self, op: &Lowered) -> Canvas {
         self.canvases[&op.out_node()]
+    }
+
+    /// The conv schedules this plan actually used, keyed by lowered
+    /// node id — the replayable form an [`super::Artifact`] records and
+    /// the measured tuner refines.
+    pub fn conv_schedules(&self) -> super::ScheduleMap {
+        self.layers
+            .iter()
+            .filter_map(|lp| {
+                let OpPlan::Conv(d) = &lp.decision else { return None };
+                Some((
+                    lp.op.out_node(),
+                    super::cost::Schedule {
+                        order: d.order,
+                        rows_per_cu: d.rows_per_cu,
+                        policy: d.policy,
+                    },
+                ))
+            })
+            .collect()
     }
 }
 

@@ -21,6 +21,7 @@
 //!
 //! [`hand`] holds the hand-optimized baseline streams for Table 1.
 
+pub mod artifact;
 pub mod balance;
 pub mod codegen;
 pub mod cost;
@@ -29,6 +30,8 @@ pub mod deploy;
 pub mod hand;
 pub mod layout;
 pub mod tile;
+
+pub use artifact::{Artifact, ArtifactError, ArtifactMeta};
 
 use crate::arch::SnowflakeConfig;
 use crate::fixed::QFormat;
@@ -161,7 +164,7 @@ impl std::error::Error for CompileError {}
 
 /// A compiled model: the instruction stream plus the memory plan needed
 /// to deploy weights/input and read results back.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompiledModel {
     pub program: Program,
     pub plan: layout::Plan,
@@ -172,8 +175,88 @@ pub struct CompiledModel {
     pub code_len: usize,
 }
 
-/// Compile a model graph for the given hardware configuration.
-pub fn compile(
+/// The builder-style front door: configure once, build versioned
+/// [`Artifact`]s for any number of graphs.
+///
+/// ```ignore
+/// let artifact = Compiler::new(cfg).options(opts).build(&graph)?;
+/// artifact.save("alexnet.artifact.json")?;
+/// ```
+///
+/// `build` is `compile` plus the deployment packaging: the artifact
+/// carries the program, the full memory plan, the chosen per-layer
+/// schedules, the embedded model description and the hardware-config
+/// fingerprint, so a runtime ([`crate::engine::Engine`]) can execute it
+/// without ever re-running the compiler.
+#[derive(Clone, Debug)]
+pub struct Compiler {
+    cfg: SnowflakeConfig,
+    opts: CompileOptions,
+}
+
+impl Compiler {
+    /// A compiler for the given hardware configuration with default
+    /// options.
+    pub fn new(cfg: SnowflakeConfig) -> Self {
+        Compiler { cfg, opts: CompileOptions::default() }
+    }
+
+    /// Replace the full option set (builder style).
+    pub fn options(mut self, opts: CompileOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Set the schedule-selection mode only.
+    pub fn tune(mut self, tune: TuneMode) -> Self {
+        self.opts.tune = tune;
+        self
+    }
+
+    /// Set explicit per-layer schedule overrides only.
+    pub fn schedules(mut self, schedules: ScheduleMap) -> Self {
+        self.opts.schedules = schedules;
+        self
+    }
+
+    /// The configuration this compiler targets.
+    pub fn config(&self) -> &SnowflakeConfig {
+        &self.cfg
+    }
+
+    /// Compile to just the compiled model — the old `compile()` surface
+    /// for callers that never serialize or serve the artifact (tests,
+    /// benches, compile-only tools). Skips the artifact packaging
+    /// (graph clone, schedule map, metadata) `build` would discard.
+    pub fn compile(&self, graph: &Graph) -> Result<CompiledModel, CompileError> {
+        compile_impl(graph, &self.cfg, &self.opts)
+    }
+
+    /// Compile `graph` into a versioned, serializable [`Artifact`].
+    pub fn build(&self, graph: &Graph) -> Result<Artifact, CompileError> {
+        let compiled = compile_impl(graph, &self.cfg, &self.opts)?;
+        let schedules = compiled.plan.conv_schedules();
+        let output_node = compiled
+            .plan
+            .layers
+            .iter()
+            .rev()
+            .find(|lp| !(self.opts.skip_fc && matches!(lp.op, layout::Lowered::Fc { .. })))
+            .map(|lp| lp.op.out_node());
+        Ok(Artifact {
+            cfg: self.cfg.clone(),
+            graph: graph.clone(),
+            compiled,
+            schedules,
+            output_node,
+            meta: ArtifactMeta::of(&self.opts),
+        })
+    }
+}
+
+/// The compile pipeline shared by [`Compiler::build`] and the
+/// deprecated [`compile`] shim.
+pub(crate) fn compile_impl(
     graph: &Graph,
     cfg: &SnowflakeConfig,
     opts: &CompileOptions,
@@ -181,6 +264,20 @@ pub fn compile(
     graph.validate().map_err(CompileError)?;
     let plan = layout::plan(graph, cfg, opts)?;
     codegen::generate(graph, cfg, opts, plan)
+}
+
+/// Compile a model graph for the given hardware configuration.
+///
+/// Deprecated shim: the single entry point is now
+/// [`Compiler::build`], which returns a versioned [`Artifact`]
+/// (`artifact.compiled` is this function's return value).
+#[deprecated(note = "use Compiler::new(cfg).options(opts).build(&graph) -> Artifact")]
+pub fn compile(
+    graph: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<CompiledModel, CompileError> {
+    compile_impl(graph, cfg, opts)
 }
 
 #[cfg(test)]
@@ -194,5 +291,25 @@ mod tests {
         assert!(o.force_loop_order.is_none());
         assert_eq!(o.tune, TuneMode::Analytical);
         assert!(o.schedules.is_empty());
+    }
+
+    #[test]
+    fn builder_and_deprecated_shim_agree() {
+        use crate::model::layer::{LayerKind, Shape};
+        let mut g = crate::model::graph::Graph::new("front_door", Shape::new(16, 8, 8));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c",
+        );
+        let cfg = SnowflakeConfig::default();
+        let artifact = Compiler::new(cfg.clone()).build(&g).unwrap();
+        #[allow(deprecated)]
+        let shim = compile(&g, &cfg, &CompileOptions::default()).unwrap();
+        assert_eq!(artifact.compiled, shim, "shim must stay a thin alias of build()");
+        // The artifact records the schedules the plan actually used and
+        // the output node the Engine will read.
+        assert_eq!(artifact.schedules, artifact.compiled.plan.conv_schedules());
+        assert_eq!(artifact.output_node, Some(0));
+        assert_eq!(artifact.meta.tune, "analytical");
     }
 }

@@ -1,9 +1,16 @@
-//! End-to-end drivers: compile → deploy → simulate (→ validate), plus
-//! batched inference (N frames through one compiled deployment).
+//! End-to-end drivers: build an [`Artifact`], load it into an
+//! [`Engine`], infer (→ validate). Batched inference streams N frames
+//! through one resident deployment.
+//!
+//! These are thin compatibility shims over the build/run split
+//! (`Compiler::build` → `Engine::load` → `Engine::infer`): every sweep
+//! job, tuning trial and paper table runs through the same two objects
+//! the CLI's `repro build` / `repro run --artifact` / `repro serve`
+//! expose.
 
 use crate::arch::SnowflakeConfig;
-use crate::compiler::layout::Lowered;
-use crate::compiler::{compile, deploy, CompileOptions, CompiledModel};
+use crate::compiler::{Artifact, CompileOptions, CompiledModel, Compiler};
+use crate::engine::Engine;
 use crate::model::graph::Graph;
 use crate::model::weights::{synthetic_input, Weights};
 use crate::refimpl;
@@ -24,12 +31,26 @@ pub fn run_model(
     opts: &CompileOptions,
     seed: u64,
 ) -> Result<RunOutcome, String> {
-    let compiled = compile(g, cfg, opts).map_err(|e| e.to_string())?;
-    let w = Weights::init(g, seed);
-    let x = synthetic_input(g, seed);
-    let mut m = deploy::make_machine_with(&compiled, g, &w, &x, cfg.clone());
-    let stats = m.run().map_err(|e| e.to_string())?;
-    Ok(RunOutcome { compiled, stats, machine: m })
+    let artifact = Compiler::new(cfg.clone())
+        .options(opts.clone())
+        .build(g)
+        .map_err(|e| e.to_string())?;
+    run_artifact(artifact, seed)
+}
+
+/// Simulate one inference from a prebuilt artifact: load it into a
+/// fresh [`Engine`] with seeded synthetic weights, run one synthetic
+/// input, and hand the machine back for canvas inspection. The
+/// `repro run --artifact` path — bit-identical to [`run_model`] on the
+/// graph/options the artifact was built from.
+pub fn run_artifact(artifact: Artifact, seed: u64) -> Result<RunOutcome, String> {
+    let cfg = artifact.cfg.clone();
+    let x = synthetic_input(&artifact.graph, seed);
+    let mut engine = Engine::new(cfg);
+    let h = engine.load(artifact, seed).map_err(|e| e.to_string())?;
+    let inf = engine.infer(h, &x).map_err(|e| e.to_string())?;
+    let (artifact, machine) = engine.unload(h).map_err(|e| e.to_string())?;
+    Ok(RunOutcome { compiled: artifact.compiled, stats: inf.stats, machine })
 }
 
 /// Result of a batched run: one compile + weight/program deployment,
@@ -52,11 +73,10 @@ impl BatchOutcome {
 }
 
 /// Compile once, deploy once, then stream `frames` synthetic inputs
-/// through the machine, resetting only the dynamic state and the input
-/// canvas between frames — the paper's deployment model, where the
-/// host re-fills the image region and re-kicks the accelerator while
-/// weights and instructions stay resident in CMA memory. Frame `f`
-/// uses input seed `seed + f`, so frame 0 reproduces [`run_model`]
+/// through the resident model — the paper's deployment model, where
+/// the host re-fills the image region and re-kicks the accelerator
+/// while weights and instructions stay resident in CMA memory. Frame
+/// `f` uses input seed `seed + f`, so frame 0 reproduces [`run_model`]
 /// bit-for-bit.
 pub fn run_batch(
     g: &Graph,
@@ -65,33 +85,34 @@ pub fn run_batch(
     seed: u64,
     frames: usize,
 ) -> Result<BatchOutcome, String> {
-    let compiled = compile(g, cfg, opts).map_err(|e| e.to_string())?;
-    let w = Weights::init(g, seed);
-    let x0 = synthetic_input(g, seed);
-    let mut m = deploy::make_machine_with(&compiled, g, &w, &x0, cfg.clone());
-    // The last layer that actually generated code (FC may be skipped).
-    let last = compiled
-        .plan
-        .layers
-        .iter()
-        .rev()
-        .find(|lp| !(opts.skip_fc && matches!(lp.op, Lowered::Fc { .. })))
-        .ok_or_else(|| "model has no generated layers".to_string())?;
-    let out_canvas = compiled.plan.canvases[&last.op.out_node()];
+    let artifact = Compiler::new(cfg.clone())
+        .options(opts.clone())
+        .build(g)
+        .map_err(|e| e.to_string())?;
+    run_batch_artifact(artifact, seed, frames)
+}
 
+/// As [`run_batch`] from a prebuilt artifact (`repro run --artifact
+/// --batch N`).
+pub fn run_batch_artifact(
+    artifact: Artifact,
+    seed: u64,
+    frames: usize,
+) -> Result<BatchOutcome, String> {
+    let cfg = artifact.cfg.clone();
+    let graph = artifact.graph.clone();
+    let mut engine = Engine::new(cfg);
+    let h = engine.load(artifact, seed).map_err(|e| e.to_string())?;
     let mut per_frame = Vec::with_capacity(frames);
     let mut outputs = Vec::with_capacity(frames);
     for f in 0..frames {
-        if f > 0 {
-            let x = synthetic_input(g, seed + f as u64);
-            m.reset_for_inference();
-            deploy::write_canvas(&mut m, &compiled.plan.input_canvas, &x, compiled.plan.fmt);
-        }
-        let stats = m.run().map_err(|e| format!("frame {f}: {e}"))?;
-        outputs.push(deploy::read_canvas(&m, &out_canvas));
-        per_frame.push(stats);
+        let x = synthetic_input(&graph, seed + f as u64);
+        let inf = engine.infer(h, &x).map_err(|e| format!("frame {f}: {e}"))?;
+        outputs.push(inf.output);
+        per_frame.push(inf.stats);
     }
-    Ok(BatchOutcome { compiled, per_frame, outputs })
+    let (artifact, _machine) = engine.unload(h).map_err(|e| e.to_string())?;
+    Ok(BatchOutcome { compiled: artifact.compiled, per_frame, outputs })
 }
 
 /// Run and validate every generated layer against the fixed-point
@@ -114,7 +135,7 @@ pub fn validate_model(
         }
         let node = lp.op.out_node();
         let cv = out.compiled.plan.canvases[&node];
-        let got = deploy::read_canvas(&out.machine, &cv);
+        let got = crate::compiler::deploy::read_canvas(&out.machine, &cv);
         let diff = got.count_diff(&refs[node]);
         rows.push((format!("{}#{}", lp.op.name(), node), refs[node].len(), diff));
     }
@@ -168,5 +189,24 @@ mod tests {
         assert!(out.stats.cycles > 0);
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].2, 0, "mismatches");
+    }
+
+    #[test]
+    fn artifact_run_matches_direct_run() {
+        // The build/run split may not perturb a single cycle: a
+        // prebuilt artifact through the Engine equals compile-and-run.
+        let mut g = Graph::new("a", Shape::new(16, 10, 10));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c",
+        );
+        let cfg = SnowflakeConfig::default();
+        let opts = CompileOptions::default();
+        let direct = run_model(&g, &cfg, &opts, 3).unwrap();
+        let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).unwrap();
+        let via = run_artifact(artifact, 3).unwrap();
+        assert_eq!(via.stats.comparable(), direct.stats.comparable());
+        assert_eq!(via.compiled.program, direct.compiled.program);
+        assert_eq!(via.machine.memory, direct.machine.memory, "final DRAM differs");
     }
 }

@@ -10,6 +10,9 @@ pub mod report;
 pub mod sweep;
 pub mod tune;
 
-pub use driver::{run_batch, run_model, validate_model, BatchOutcome, RunOutcome};
+pub use driver::{
+    run_artifact, run_batch, run_batch_artifact, run_model, validate_model, BatchOutcome,
+    RunOutcome,
+};
 pub use sweep::{run_sweep, SweepJob, SweepOutcome};
 pub use tune::{tune_measured, TuneOutcome};

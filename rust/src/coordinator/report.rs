@@ -753,9 +753,12 @@ pub fn explain(
     cfg: &SnowflakeConfig,
     opts: &CompileOptions,
 ) -> Result<Vec<ExplainRow>, String> {
-    let compiled = crate::compiler::compile(g, cfg, opts).map_err(|e| e.to_string())?;
+    let artifact = crate::compiler::Compiler::new(cfg.clone())
+        .options(opts.clone())
+        .build(g)
+        .map_err(|e| e.to_string())?;
     let mut rows = Vec::new();
-    for lp in &compiled.plan.layers {
+    for lp in &artifact.compiled.plan.layers {
         let node = lp.op.out_node();
         let kind = lp.op.name().to_string();
         let (schedule, predicted) = match &lp.decision {
@@ -779,8 +782,8 @@ pub fn explain(
                 )
             }
             decide::OpPlan::MaxPool(p) => (
-                format!("rows={} tiles={}", p.rows_per_cu, p.n_tiles),
-                String::new(),
+                format!("rows={}(cap {}) tiles={}", p.rows_per_cu, p.max_rows, p.n_tiles),
+                format!("~{} cyc, {:.2} MB", p.predicted.cycles, p.predicted.dram_bytes as f64 / 1e6),
             ),
             decide::OpPlan::AvgPool(p) => (format!("chunks={}", p.chunks), String::new()),
             decide::OpPlan::Fc(f) => (

@@ -30,6 +30,12 @@ pub struct TuneOutcome {
     /// Winning per-conv-layer schedules (node id -> schedule), ready to
     /// replay through `CompileOptions::schedules`.
     pub schedules: ScheduleMap,
+    /// Tune mode to pair with `schedules` when recompiling the winning
+    /// configuration. Non-conv decisions (maxpool strip heights) follow
+    /// the tune mode, not the schedule map, so an exact replay must use
+    /// the mode the incumbent was compiled under — `Heuristic` when the
+    /// heuristic baseline won outright, `Analytical` otherwise.
+    pub replay_tune: TuneMode,
     pub heuristic_cycles: u64,
     pub analytical_cycles: u64,
     /// Full-model simulations spent (2 baselines + candidate swaps).
@@ -74,17 +80,9 @@ fn conv_geom_for(plan: &Plan, lp: &LayerPlan) -> Option<(usize, cost::ConvGeom)>
 }
 
 /// The schedules a compiled plan actually used, keyed by node id.
+/// (Thin alias of [`Plan::conv_schedules`], which artifacts record.)
 pub fn plan_schedules(plan: &Plan) -> ScheduleMap {
-    plan.layers
-        .iter()
-        .filter_map(|lp| {
-            let OpPlan::Conv(d) = &lp.decision else { return None };
-            Some((
-                lp.op.out_node(),
-                Schedule { order: d.order, rows_per_cu: d.rows_per_cu, policy: d.policy },
-            ))
-        })
-        .collect()
+    plan.conv_schedules()
 }
 
 /// Measured tuning of one model: greedy per-layer refinement over the
@@ -110,12 +108,12 @@ pub fn tune_measured(
 
     // Seed the incumbent with the faster baseline; the result can only
     // improve from here.
-    let (mut best, mut schedules) = if analytical_cycles <= heuristic_cycles {
+    let (mut best, mut schedules, mut replay_tune) = if analytical_cycles <= heuristic_cycles {
         let s = plan_schedules(&analytical.compiled.plan);
-        (analytical, s)
+        (analytical, s, TuneMode::Analytical)
     } else {
         let s = plan_schedules(&heuristic.compiled.plan);
-        (heuristic, s)
+        (heuristic, s, TuneMode::Heuristic)
     };
     let mut trials = 2usize;
     let mut improved_swaps = 0usize;
@@ -151,6 +149,9 @@ pub fn tune_measured(
                 Ok(r) if r.stats.cycles < best.stats.cycles => {
                     best = r;
                     schedules = swapped;
+                    // Trials compile under Analytical, so a winning swap
+                    // moves the replay mode there.
+                    replay_tune = TuneMode::Analytical;
                     improved_swaps += 1;
                 }
                 // Slower/equal candidates keep the incumbent; a failed
@@ -163,6 +164,7 @@ pub fn tune_measured(
     Ok(TuneOutcome {
         outcome: best,
         schedules,
+        replay_tune,
         heuristic_cycles,
         analytical_cycles,
         trials,
@@ -191,8 +193,13 @@ mod tests {
         assert!(out.tuned_cycles() <= out.analytical_cycles, "tuned lost to analytical");
         assert!(out.trials >= 2);
         assert!(!out.schedules.is_empty());
-        // Replaying the winning schedules reproduces the winning run.
-        let opts = CompileOptions { schedules: out.schedules.clone(), ..Default::default() };
+        // Replaying the winning schedules under the recorded mode
+        // reproduces the winning run exactly (pool heights included).
+        let opts = CompileOptions {
+            tune: out.replay_tune,
+            schedules: out.schedules.clone(),
+            ..Default::default()
+        };
         let replay = driver::run_model(&g, &cfg, &opts, 7).unwrap();
         assert_eq!(replay.stats.cycles, out.tuned_cycles(), "schedule replay diverged");
     }

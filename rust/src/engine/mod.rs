@@ -1,0 +1,426 @@
+//! The `Engine` runtime — the run-time half of the build/deploy split.
+//!
+//! The paper's deployment model (§5.3) arranges instructions and data
+//! once and then executes many inferences; f-CNN^x and the Chung &
+//! Abdelrahman FPGA flow treat that ahead-of-time boundary as the
+//! product boundary. This module is that boundary for the repro:
+//! compile-time produces a versioned [`Artifact`]
+//! ([`crate::compiler::Compiler::build`]); run-time is an [`Engine`]
+//! that owns simulated machines and loaded artifacts:
+//!
+//! ```ignore
+//! let mut engine = Engine::new(cfg);
+//! let h = engine.load(artifact, seed)?;          // deploy once
+//! let out = engine.infer(h, &input)?;            // run many
+//! println!("{}", engine.stats().summary());
+//! ```
+//!
+//! * **Load** validates the artifact's config fingerprint against the
+//!   engine's hardware (mismatch = typed [`EngineError`], not silent
+//!   miscompute), sizes a [`Machine`] for the artifact's memory plan,
+//!   deploys the static image (arranged weights, biases, the encoded
+//!   program) and returns a [`ModelHandle`].
+//! * **Multi-model residency**: each loaded model owns its machine, so
+//!   any number of models stay resident and serve interleaved requests
+//!   — the `repro serve` path.
+//! * **Infer** rewrites only the input canvas (resetting the machine's
+//!   dynamic state between frames), runs to completion and reads the
+//!   output canvas back — bit-identical to a fresh single-shot
+//!   compile-and-run, which `tests/artifact_roundtrip.rs` pins.
+//! * **Stats**: per-model and per-engine counters aggregate every
+//!   inference ([`ModelStats`], [`EngineStats`]).
+
+use crate::arch::SnowflakeConfig;
+use crate::compiler::artifact::{config_hash, Artifact};
+use crate::compiler::deploy;
+use crate::compiler::layout::Canvas;
+use crate::model::weights::Weights;
+use crate::sim::stats::Stats;
+use crate::sim::Machine;
+use crate::tensor::Tensor;
+
+/// Why an engine operation failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// The artifact's config fingerprint does not match the engine's
+    /// hardware configuration.
+    ConfigMismatch { artifact: String, engine: String },
+    /// The handle does not name a loaded (still-resident) model.
+    BadHandle,
+    /// The artifact has no generated output layer to read back.
+    NoOutput,
+    /// The input tensor does not match the model's input canvas.
+    BadInput(String),
+    /// The simulation failed (deadlock/program bug).
+    Sim(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::ConfigMismatch { artifact, engine } => write!(
+                f,
+                "artifact compiled for config {artifact} cannot run on engine config {engine}; \
+                 rebuild the artifact for this hardware"
+            ),
+            EngineError::BadHandle => write!(f, "model handle is not loaded in this engine"),
+            EngineError::NoOutput => {
+                write!(f, "artifact has no generated output layer (all layers skipped)")
+            }
+            EngineError::BadInput(m) => write!(f, "bad input: {m}"),
+            EngineError::Sim(m) => write!(f, "simulation failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Handle to a model resident in an [`Engine`]. Handles stay valid
+/// until the model is unloaded; they are engine-local.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelHandle(usize);
+
+/// One simulated inference's results.
+pub struct Inference {
+    /// Full simulator statistics for this frame.
+    pub stats: Stats,
+    /// Output canvas interior (CHW i16, the model's final generated
+    /// layer).
+    pub output: Tensor<i16>,
+}
+
+/// Per-model aggregate counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelStats {
+    pub inferences: u64,
+    pub total_cycles: u64,
+    pub bytes_moved: u64,
+    pub last_cycles: u64,
+}
+
+impl ModelStats {
+    fn record(&mut self, s: &Stats) {
+        self.inferences += 1;
+        self.total_cycles += s.cycles;
+        self.bytes_moved += s.bytes_moved();
+        self.last_cycles = s.cycles;
+    }
+
+    /// Average simulated milliseconds per inference.
+    pub fn avg_ms(&self, cfg: &SnowflakeConfig) -> f64 {
+        if self.inferences == 0 {
+            return 0.0;
+        }
+        cfg.cycles_to_ms(self.total_cycles) / self.inferences as f64
+    }
+}
+
+/// Engine-wide aggregate counters (sum over resident models).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    pub models_resident: usize,
+    pub inferences: u64,
+    pub total_cycles: u64,
+    pub bytes_moved: u64,
+}
+
+impl EngineStats {
+    /// One-line human summary for `repro serve`.
+    pub fn summary(&self, cfg: &SnowflakeConfig) -> String {
+        format!(
+            "{} models resident, {} inferences, {} simulated cycles ({:.2} ms at {} MHz), \
+             {:.1} MB moved",
+            self.models_resident,
+            self.inferences,
+            self.total_cycles,
+            cfg.cycles_to_ms(self.total_cycles),
+            cfg.clock_mhz,
+            self.bytes_moved as f64 / 1e6
+        )
+    }
+}
+
+struct LoadedModel {
+    name: String,
+    artifact: Artifact,
+    machine: Machine,
+    out_canvas: Canvas,
+    /// Freshly deployed: the first inference needs no dynamic-state
+    /// reset (the machine has never run).
+    fresh: bool,
+    stats: ModelStats,
+}
+
+/// The runtime: owns simulated machines and loaded artifacts, serves
+/// inference requests against any resident model.
+pub struct Engine {
+    cfg: SnowflakeConfig,
+    cfg_hash: u64,
+    /// Slot per ever-loaded model (None after unload) so handles stay
+    /// stable.
+    models: Vec<Option<LoadedModel>>,
+}
+
+impl Engine {
+    /// An engine for the given hardware configuration, no models
+    /// resident.
+    pub fn new(cfg: SnowflakeConfig) -> Self {
+        let cfg_hash = config_hash(&cfg);
+        Engine { cfg, cfg_hash, models: Vec::new() }
+    }
+
+    pub fn config(&self) -> &SnowflakeConfig {
+        &self.cfg
+    }
+
+    /// Load an artifact with explicit weights: validate the config
+    /// fingerprint, size a machine, deploy the static image (weights,
+    /// biases, program) and keep the model resident.
+    pub fn load_with(
+        &mut self,
+        artifact: Artifact,
+        weights: &Weights,
+    ) -> Result<ModelHandle, EngineError> {
+        if config_hash(&artifact.cfg) != self.cfg_hash {
+            return Err(EngineError::ConfigMismatch {
+                artifact: format!("{:016x}", config_hash(&artifact.cfg)),
+                engine: format!("{:016x}", self.cfg_hash),
+            });
+        }
+        let out_node = artifact.output_node.ok_or(EngineError::NoOutput)?;
+        let out_canvas = *artifact
+            .compiled
+            .plan
+            .canvases
+            .get(&out_node)
+            .ok_or(EngineError::NoOutput)?;
+        let mut machine =
+            Machine::new(self.cfg.clone(), artifact.compiled.plan.fmt, artifact.compiled.plan.mem_words);
+        deploy::deploy_static(&mut machine, &artifact.compiled, &artifact.graph, weights);
+        machine.load_program(artifact.compiled.program.instrs.clone());
+        let handle = ModelHandle(self.models.len());
+        self.models.push(Some(LoadedModel {
+            name: artifact.graph.name.clone(),
+            artifact,
+            machine,
+            out_canvas,
+            fresh: true,
+            stats: ModelStats::default(),
+        }));
+        Ok(handle)
+    }
+
+    /// Load an artifact with synthetic seeded weights (the repro path:
+    /// weights are `Weights::init(graph, seed)`, as everywhere else).
+    pub fn load(&mut self, artifact: Artifact, seed: u64) -> Result<ModelHandle, EngineError> {
+        let weights = Weights::init(&artifact.graph, seed);
+        self.load_with(artifact, &weights)
+    }
+
+    /// Submit one inference: write the input canvas, run to completion,
+    /// read the output canvas back.
+    pub fn infer(
+        &mut self,
+        h: ModelHandle,
+        input: &Tensor<f32>,
+    ) -> Result<Inference, EngineError> {
+        let m = self.model_mut(h)?;
+        let cv = m.artifact.compiled.plan.input_canvas;
+        if input.shape != vec![cv.c, cv.h, cv.w] {
+            return Err(EngineError::BadInput(format!(
+                "input shape {:?} does not match the model's {:?}",
+                input.shape,
+                [cv.c, cv.h, cv.w]
+            )));
+        }
+        if !m.fresh {
+            m.machine.reset_for_inference();
+        }
+        m.fresh = false;
+        deploy::write_canvas(&mut m.machine, &cv, input, m.artifact.compiled.plan.fmt);
+        let stats = m.machine.run().map_err(|e| EngineError::Sim(e.to_string()))?;
+        let output = deploy::read_canvas(&m.machine, &m.out_canvas);
+        m.stats.record(&stats);
+        Ok(Inference { stats, output })
+    }
+
+    /// Submit a batch: each input is one frame through the resident
+    /// deployment (weights and program stay in place, only the input
+    /// canvas is rewritten between frames).
+    pub fn infer_batch(
+        &mut self,
+        h: ModelHandle,
+        inputs: &[Tensor<f32>],
+    ) -> Result<Vec<Inference>, EngineError> {
+        inputs.iter().map(|x| self.infer(h, x)).collect()
+    }
+
+    /// Per-model counters.
+    pub fn model_stats(&self, h: ModelHandle) -> Result<&ModelStats, EngineError> {
+        Ok(&self.model_ref(h)?.stats)
+    }
+
+    /// The model's display name (graph name).
+    pub fn model_name(&self, h: ModelHandle) -> Result<&str, EngineError> {
+        Ok(&self.model_ref(h)?.name)
+    }
+
+    /// The loaded artifact (metadata inspection).
+    pub fn artifact(&self, h: ModelHandle) -> Result<&Artifact, EngineError> {
+        Ok(&self.model_ref(h)?.artifact)
+    }
+
+    /// Read-only view of a resident model's machine (validation paths
+    /// read layer canvases out of simulated DRAM).
+    pub fn machine(&self, h: ModelHandle) -> Result<&Machine, EngineError> {
+        Ok(&self.model_ref(h)?.machine)
+    }
+
+    /// Handles of every resident model, in load order.
+    pub fn handles(&self) -> Vec<ModelHandle> {
+        self.models
+            .iter()
+            .enumerate()
+            .filter_map(|(i, m)| m.as_ref().map(|_| ModelHandle(i)))
+            .collect()
+    }
+
+    /// Engine-wide aggregate over resident models.
+    pub fn stats(&self) -> EngineStats {
+        let mut out = EngineStats::default();
+        for m in self.models.iter().flatten() {
+            out.models_resident += 1;
+            out.inferences += m.stats.inferences;
+            out.total_cycles += m.stats.total_cycles;
+            out.bytes_moved += m.stats.bytes_moved;
+        }
+        out
+    }
+
+    /// Evict a model, returning its artifact and machine (the driver's
+    /// single-shot path reads final canvases out of the machine after
+    /// the engine is done with it). The handle becomes invalid.
+    pub fn unload(&mut self, h: ModelHandle) -> Result<(Artifact, Machine), EngineError> {
+        let slot = self.models.get_mut(h.0).ok_or(EngineError::BadHandle)?;
+        let m = slot.take().ok_or(EngineError::BadHandle)?;
+        Ok((m.artifact, m.machine))
+    }
+
+    fn model_ref(&self, h: ModelHandle) -> Result<&LoadedModel, EngineError> {
+        self.models
+            .get(h.0)
+            .and_then(|m| m.as_ref())
+            .ok_or(EngineError::BadHandle)
+    }
+
+    fn model_mut(&mut self, h: ModelHandle) -> Result<&mut LoadedModel, EngineError> {
+        self.models
+            .get_mut(h.0)
+            .and_then(|m| m.as_mut())
+            .ok_or(EngineError::BadHandle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Compiler;
+    use crate::model::graph::Graph;
+    use crate::model::layer::{LayerKind, Shape};
+    use crate::model::weights::synthetic_input;
+    use crate::refimpl;
+
+    fn small_graph(name: &str, out_ch: usize) -> Graph {
+        let mut g = Graph::new(name, Shape::new(16, 10, 10));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c",
+        );
+        g
+    }
+
+    #[test]
+    fn engine_inference_matches_reference_and_accumulates_stats() {
+        let cfg = SnowflakeConfig::default();
+        let g = small_graph("eng", 8);
+        let artifact = Compiler::new(cfg.clone()).build(&g).unwrap();
+        let mut engine = Engine::new(cfg.clone());
+        let h = engine.load(artifact, 9).unwrap();
+
+        let w = Weights::init(&g, 9);
+        for f in 0..3u64 {
+            let x = synthetic_input(&g, 9 + f);
+            let out = engine.infer(h, &x).unwrap();
+            let want = &refimpl::forward_q(&g, &w, &x, crate::fixed::Q8_8)[0];
+            assert_eq!(out.output.count_diff(want), 0, "frame {f} diverged");
+            assert!(out.stats.cycles > 0);
+        }
+        let ms = engine.model_stats(h).unwrap();
+        assert_eq!(ms.inferences, 3);
+        assert!(ms.total_cycles >= 3 * ms.last_cycles);
+        let es = engine.stats();
+        assert_eq!(es.models_resident, 1);
+        assert_eq!(es.inferences, 3);
+        assert_eq!(engine.model_name(h).unwrap(), "eng");
+    }
+
+    #[test]
+    fn multi_model_residency_keeps_models_independent() {
+        let cfg = SnowflakeConfig::default();
+        let ga = small_graph("a", 8);
+        let gb = small_graph("b", 12);
+        let mut engine = Engine::new(cfg.clone());
+        let ha = engine
+            .load(Compiler::new(cfg.clone()).build(&ga).unwrap(), 5)
+            .unwrap();
+        let hb = engine
+            .load(Compiler::new(cfg.clone()).build(&gb).unwrap(), 5)
+            .unwrap();
+        // Interleaved requests; each model must keep producing its own
+        // reference-exact outputs.
+        let wa = Weights::init(&ga, 5);
+        let wb = Weights::init(&gb, 5);
+        for f in 0..2u64 {
+            let xa = synthetic_input(&ga, 5 + f);
+            let xb = synthetic_input(&gb, 5 + f);
+            let oa = engine.infer(ha, &xa).unwrap();
+            let ob = engine.infer(hb, &xb).unwrap();
+            assert_eq!(
+                oa.output.count_diff(&refimpl::forward_q(&ga, &wa, &xa, crate::fixed::Q8_8)[0]),
+                0
+            );
+            assert_eq!(
+                ob.output.count_diff(&refimpl::forward_q(&gb, &wb, &xb, crate::fixed::Q8_8)[0]),
+                0
+            );
+        }
+        assert_eq!(engine.stats().models_resident, 2);
+        assert_eq!(engine.stats().inferences, 4);
+        assert_eq!(engine.handles(), vec![ha, hb]);
+        // Unload invalidates the handle but leaves the other resident.
+        engine.unload(ha).unwrap();
+        assert!(matches!(
+            engine.infer(ha, &synthetic_input(&ga, 5)),
+            Err(EngineError::BadHandle)
+        ));
+        assert_eq!(engine.stats().models_resident, 1);
+        assert!(engine.infer(hb, &synthetic_input(&gb, 5)).is_ok());
+    }
+
+    #[test]
+    fn config_mismatch_and_bad_input_are_typed_errors() {
+        let cfg = SnowflakeConfig::default();
+        let g = small_graph("m", 8);
+        let other = SnowflakeConfig { dma_setup_cycles: 32, ..cfg.clone() };
+        let artifact = Compiler::new(other).build(&g).unwrap();
+        let mut engine = Engine::new(cfg.clone());
+        let err = engine.load(artifact, 1).unwrap_err();
+        assert!(matches!(err, EngineError::ConfigMismatch { .. }), "{err}");
+
+        let h = engine
+            .load(Compiler::new(cfg.clone()).build(&g).unwrap(), 1)
+            .unwrap();
+        let bad = Tensor::<f32>::zeros(&[3, 4, 4]);
+        assert!(matches!(engine.infer(h, &bad).unwrap_err(), EngineError::BadInput(_)));
+    }
+}

@@ -193,7 +193,7 @@ impl Instr {
 }
 
 /// An instruction stream plus metadata.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Program {
     pub instrs: Vec<Instr>,
     /// Optional per-instruction comments (assembler/debugging).

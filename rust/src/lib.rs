@@ -11,7 +11,13 @@
 //! Layer map (see `DESIGN.md`):
 //! * [`compiler`] — the paper's contribution: model parsing, workload
 //!   breakdown, loop rearrangement (Mloop/Kloop), communication load
-//!   balancing, instruction generation, deployment.
+//!   balancing, instruction generation, deployment. Its front door is
+//!   `Compiler::new(cfg).options(opts).build(&graph)`, producing a
+//!   versioned, serializable `Artifact` (`compiler::artifact`).
+//! * [`engine`] — the run-time half of the build/deploy split: an
+//!   `Engine` owns simulated machines and loaded artifacts, serves
+//!   `infer`/`infer_batch` against any resident model and reports
+//!   per-model/per-engine statistics.
 //! * [`sim`] — the Snowflake hardware substrate: control pipeline, compute
 //!   clusters, scratchpad buffers, DMA load units, cycle-accurate timing.
 //! * [`isa`] — the 13-instruction custom ISA: encoding, assembly text,
@@ -30,6 +36,7 @@
 pub mod arch;
 pub mod compiler;
 pub mod coordinator;
+pub mod engine;
 pub mod fixed;
 pub mod isa;
 pub mod model;

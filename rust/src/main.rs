@@ -1,8 +1,22 @@
 //! `repro` — the Snowflake compiler reproduction CLI.
 //!
 //! Subcommands (see README):
+//!   build      compile a model into a versioned artifact file
+//!              (`--model X --out x.artifact.json`); the artifact carries the
+//!              program, memory plan, per-layer schedules, model description
+//!              and a hardware-config fingerprint
+//!   run        compile + simulate, print stats; `--artifact path` skips the
+//!              compiler entirely and runs the prebuilt artifact through the
+//!              Engine (bit-identical cycles/DRAM to the direct path);
+//!              `--batch N` streams N frames through one deployment;
+//!              `--tune measured` refines schedules first (then batches, if
+//!              `--batch` was also given)
+//!   serve      load several models into one Engine (multi-model residency)
+//!              and round-robin `--requests N` inferences across them;
+//!              `--models a,b` compiles in-process, `--artifacts x,y` loads
+//!              artifact files; `--check` asserts per-request cycle equality
+//!              with the direct single-shot path
 //!   compile    compile a model, print summary / asm
-//!   run        compile + simulate, print stats (--tune measured refines)
 //!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
 //!   explain    print the chosen per-layer schedule (tuner debugging)
 //!   tune       schedule-quality table: heuristic vs cost-model vs measured
@@ -12,10 +26,12 @@
 //!   info       hardware configuration
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, BalancePolicy, CompileOptions, TuneMode};
+use snowflake::compiler::{Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
 use snowflake::coordinator::{driver, report, tune};
+use snowflake::engine::Engine;
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::asm::disasm_program;
+use snowflake::model::weights::synthetic_input;
 use snowflake::model::{parser, zoo};
 use snowflake::util::cli::Args;
 use snowflake::util::json::Json;
@@ -64,8 +80,34 @@ fn options(args: &Args) -> CompileOptions {
     }
 }
 
+fn print_batch(name: &str, out: &driver::BatchOutcome, cfg: &SnowflakeConfig, t0: std::time::Instant) {
+    let frames = out.per_frame.len();
+    for (f, s) in out.per_frame.iter().enumerate() {
+        println!("{name} frame {f}: {}", s.summary(cfg));
+    }
+    let ms = cfg.cycles_to_ms(out.total_cycles());
+    println!(
+        "batch of {frames}: {:.2} ms total = {:.1} fps ({:.2} ms/frame), host wall {:?}",
+        ms,
+        frames as f64 * 1000.0 / ms,
+        ms / frames as f64,
+        t0.elapsed()
+    );
+}
+
+fn print_run(name: &str, out: &driver::RunOutcome, cfg: &SnowflakeConfig) {
+    println!("{name}: {}", out.stats.summary(cfg));
+    println!(
+        "{:.2} ms/frame = {:.1} fps, {:.2} GB/s, {:.1} Gop/s achieved",
+        out.stats.time_ms(cfg),
+        1000.0 / out.stats.time_ms(cfg),
+        out.stats.bandwidth_gbs(cfg),
+        out.stats.achieved_gops(cfg)
+    );
+}
+
 fn main() {
-    let flags = ["hand", "reuse-regions", "with-fc", "emit-asm", "fast", "verbose"];
+    let flags = ["hand", "reuse-regions", "with-fc", "emit-asm", "fast", "verbose", "check"];
     let args = Args::from_env(&flags);
     let cfg = SnowflakeConfig::default();
     let seed = args.opt_u64("seed", 42);
@@ -78,11 +120,42 @@ fn main() {
             println!("  MBuf {}x{} KB, WBuf {} KB/vMAC, BBuf {} KB, icache {}x{} instrs", cfg.mbuf_banks, cfg.mbuf_bank_bytes / 1024, cfg.wbuf_bytes / 1024, cfg.bbuf_bytes / 1024, cfg.icache_banks, cfg.icache_bank_instrs);
             println!("  {} load units sharing {:.1} GB/s", cfg.n_load_units, cfg.bandwidth_gbs());
         }
+        Some("build") => {
+            // The build half of the build/deploy split: compile into a
+            // versioned artifact file for `run --artifact` / `serve`.
+            let g = load_model(&args);
+            let opts = options(&args);
+            let t0 = std::time::Instant::now();
+            let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            let path = args
+                .opt("out")
+                .map(String::from)
+                .unwrap_or_else(|| format!("{}.artifact.json", g.name));
+            artifact.save(&path).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            println!(
+                "{}: artifact {} in {:?} — {} instructions, {} layers, {:.1} MB plan, \
+                 format v{}, config {:016x}",
+                g.name,
+                path,
+                t0.elapsed(),
+                artifact.compiled.program.len(),
+                artifact.compiled.plan.layers.len(),
+                artifact.compiled.plan.mem_words as f64 * 2.0 / 1e6,
+                snowflake::compiler::artifact::FORMAT_VERSION,
+                artifact.config_hash()
+            );
+        }
         Some("compile") => {
             let g = load_model(&args);
             let opts = options(&args);
             let t0 = std::time::Instant::now();
-            let compiled = compile(&g, &cfg, &opts).unwrap_or_else(|e| {
+            let compiled = Compiler::new(cfg.clone()).options(opts).compile(&g).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(1);
             });
@@ -104,17 +177,38 @@ fn main() {
             eprintln!("instruction mix: {hist:?}");
         }
         Some("run") => {
+            let frames = args.opt_usize("batch", 1);
+            if let Some(path) = args.opt("artifact") {
+                // The deploy half of the split: no parsing, no tuning,
+                // no compiling — load the artifact (format-version +
+                // config-fingerprint validated) and run it.
+                let artifact = Artifact::load(path, &cfg).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                });
+                let name = artifact.graph.name.clone();
+                if frames > 1 {
+                    let t0 = std::time::Instant::now();
+                    let out = driver::run_batch_artifact(artifact, seed, frames)
+                        .unwrap_or_else(|e| {
+                            eprintln!("{e}");
+                            std::process::exit(1);
+                        });
+                    print_batch(&name, &out, &cfg, t0);
+                } else {
+                    let out = driver::run_artifact(artifact, seed).unwrap_or_else(|e| {
+                        eprintln!("{e}");
+                        std::process::exit(1);
+                    });
+                    print_run(&name, &out, &cfg);
+                }
+                return;
+            }
             let g = load_model(&args);
             let opts = options(&args);
             if let TuneMode::Measured { top_k } = opts.tune {
                 // Measured tuning: top-K predicted candidates per layer,
                 // each simulated on the full model; best config wins.
-                if args.opt_usize("batch", 1) > 1 {
-                    eprintln!(
-                        "note: --batch is ignored with --tune measured (tuning trials are \
-                         single-frame); re-run with --tune cost for batched inference"
-                    );
-                }
                 let t0 = std::time::Instant::now();
                 let out = tune::tune_measured(&g, &cfg, &opts, seed, top_k).unwrap_or_else(|e| {
                     eprintln!("{e}");
@@ -134,46 +228,47 @@ fn main() {
                     out.tuned_cycles(),
                     (out.tuned_cycles() as f64 / out.heuristic_cycles as f64 - 1.0) * 100.0
                 );
-                println!("{}: {}", g.name, out.outcome.stats.summary(&cfg));
+                if frames > 1 {
+                    // Batched run with the tuned schedules: replay the
+                    // winning ScheduleMap (under the incumbent's tune
+                    // mode, so pool heights match too) through the
+                    // Engine instead of dropping --batch on the floor.
+                    let tuned = CompileOptions {
+                        tune: out.replay_tune,
+                        schedules: out.schedules.clone(),
+                        ..opts.clone()
+                    };
+                    let t0 = std::time::Instant::now();
+                    let b = driver::run_batch(&g, &cfg, &tuned, seed, frames)
+                        .unwrap_or_else(|e| {
+                            eprintln!("{e}");
+                            std::process::exit(1);
+                        });
+                    print_batch(&g.name, &b, &cfg, t0);
+                } else {
+                    println!("{}: {}", g.name, out.outcome.stats.summary(&cfg));
+                }
                 return;
             }
-            let frames = args.opt_usize("batch", 1);
             if frames > 1 {
                 // Batched inference: one compile + weight deployment,
-                // N frames through the same machine.
+                // N frames through the same resident model.
                 let t0 = std::time::Instant::now();
                 let out = driver::run_batch(&g, &cfg, &opts, seed, frames)
                     .unwrap_or_else(|e| {
                         eprintln!("{e}");
                         std::process::exit(1);
                     });
-                let total_cycles = out.total_cycles();
-                for (f, s) in out.per_frame.iter().enumerate() {
-                    println!("{} frame {f}: {}", g.name, s.summary(&cfg));
-                }
-                let ms = cfg.cycles_to_ms(total_cycles);
-                println!(
-                    "batch of {frames}: {:.2} ms total = {:.1} fps ({:.2} ms/frame), host wall {:?}",
-                    ms,
-                    frames as f64 * 1000.0 / ms,
-                    ms / frames as f64,
-                    t0.elapsed()
-                );
+                print_batch(&g.name, &out, &cfg, t0);
                 return;
             }
             let out = driver::run_model(&g, &cfg, &opts, seed).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(1);
             });
-            println!("{}: {}", g.name, out.stats.summary(&cfg));
-            println!(
-                "{:.2} ms/frame = {:.1} fps, {:.2} GB/s, {:.1} Gop/s achieved",
-                out.stats.time_ms(&cfg),
-                1000.0 / out.stats.time_ms(&cfg),
-                out.stats.bandwidth_gbs(&cfg),
-                out.stats.achieved_gops(&cfg)
-            );
+            print_run(&g.name, &out, &cfg);
         }
+        Some("serve") => serve(&args, &cfg, seed),
         Some("validate") => {
             let g = load_model(&args);
             let (out, rows) =
@@ -273,15 +368,138 @@ fn main() {
                 eprintln!("unknown subcommand '{o}'\n");
             }
             eprintln!(
-                "usage: repro <info|compile|run|validate|explain|tune|table1|table2|table3|fig4|\
-                 accuracy|sweep|bless-baselines|golden>\n\
+                "usage: repro <info|build|run|serve|compile|validate|explain|tune|table1|table2|\
+                 table3|fig4|accuracy|sweep|bless-baselines|golden>\n\
                  \x20  --model alexnet|resnet18|resnet50   --model-file model.json\n\
                  \x20  --balance greedy1|greedy2|greedy4|two-units|one-unit\n\
                  \x20  --tune heuristic|cost|measured  --top-k N (measured candidates/layer)\n\
                  \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
-                 \x20  --batch N (run)  --threads N (sweep)  --ci-dir DIR (bless-baselines)"
+                 \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
+                 \x20  --requests N --models a,b --artifacts x,y --check (serve)\n\
+                 \x20  --threads N (sweep)  --ci-dir DIR (bless-baselines)"
             );
             std::process::exit(2);
+        }
+    }
+}
+
+/// `repro serve`: the multi-model Engine path — load several models
+/// into one engine (compiled in-process via `--models`, or prebuilt
+/// files via `--artifacts`), round-robin `--requests` inferences across
+/// them, and report per-model + engine-aggregate statistics. `--check`
+/// re-runs each model through the direct single-shot path and asserts
+/// cycle equality (simulated timing is input-independent), exiting
+/// nonzero on a mismatch — the CI smoke gate.
+fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
+    let requests = args.opt_usize("requests", 8);
+    let mut engine = Engine::new(cfg.clone());
+    // The engine owns the only Artifact copy; keep just the handle and
+    // a graph clone (cheap) for per-request input synthesis.
+    let mut loaded: Vec<(snowflake::engine::ModelHandle, snowflake::model::graph::Graph)> =
+        Vec::new();
+    let mut admit = |a: Artifact, engine: &mut Engine| {
+        let g = a.graph.clone();
+        println!(
+            "resident: {:<12} {} instructions, {:.1} MB plan, schedules for {} conv layers",
+            g.name,
+            a.compiled.program.len(),
+            a.compiled.plan.mem_words as f64 * 2.0 / 1e6,
+            a.schedules.len()
+        );
+        let h = engine.load(a, seed).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        });
+        (h, g)
+    };
+    if let Some(paths) = args.opt("artifacts") {
+        for p in paths.split(',').filter(|p| !p.is_empty()) {
+            let a = Artifact::load(p, cfg).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            let entry = admit(a, &mut engine);
+            loaded.push(entry);
+        }
+    } else {
+        let opts = options(args);
+        for name in args.opt_or("models", "alexnet,resnet18").split(',') {
+            let g = zoo::by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown model '{name}' (alexnet, resnet18, resnet50)");
+                std::process::exit(2);
+            });
+            let a = Compiler::new(cfg.clone()).options(opts.clone()).build(&g).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            let entry = admit(a, &mut engine);
+            loaded.push(entry);
+        }
+    }
+    if loaded.is_empty() {
+        eprintln!("serve: no models to load");
+        std::process::exit(2);
+    }
+
+    let t0 = std::time::Instant::now();
+    for r in 0..requests {
+        let (h, g) = &loaded[r % loaded.len()];
+        let x = synthetic_input(g, seed + r as u64);
+        let inf = engine.infer(*h, &x).unwrap_or_else(|e| {
+            eprintln!("request {r}: {e}");
+            std::process::exit(1);
+        });
+        println!(
+            "request {r:>3} -> {:<12} {:>12} cycles ({:.3} ms sim)",
+            g.name,
+            inf.stats.cycles,
+            inf.stats.time_ms(cfg)
+        );
+    }
+
+    println!("\nper-model:");
+    for (h, g) in &loaded {
+        let s = engine.model_stats(*h).expect("model resident");
+        println!(
+            "  {:<12} {:>4} inferences, {:>14} cycles total, {:.3} ms/inference avg",
+            g.name,
+            s.inferences,
+            s.total_cycles,
+            s.avg_ms(cfg)
+        );
+    }
+    println!("engine: {}", engine.stats().summary(cfg));
+    println!("served {requests} requests in {:?} host wall", t0.elapsed());
+
+    if args.flag("check") {
+        let mut bad = 0usize;
+        for (h, g) in &loaded {
+            let s = engine.model_stats(*h).expect("model resident").clone();
+            if s.inferences == 0 {
+                continue;
+            }
+            // One transient artifact clone per model, dropped after the
+            // direct single-shot re-run (run_artifact consumes it).
+            let a = engine.artifact(*h).expect("model resident").clone();
+            let direct = driver::run_artifact(a, seed).unwrap_or_else(|e| {
+                eprintln!("check {}: {e}", g.name);
+                std::process::exit(1);
+            });
+            if direct.stats.cycles == s.last_cycles {
+                println!(
+                    "check: {:<12} engine cycles == direct single-shot path ({})",
+                    g.name, direct.stats.cycles
+                );
+            } else {
+                eprintln!(
+                    "CHECK FAILED: {} served {} cycles vs direct path {}",
+                    g.name, s.last_cycles, direct.stats.cycles
+                );
+                bad += 1;
+            }
+        }
+        if bad > 0 {
+            std::process::exit(1);
         }
     }
 }

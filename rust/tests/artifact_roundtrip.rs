@@ -1,0 +1,188 @@
+//! Artifact round-trip integration tests (ISSUE 3 acceptance):
+//!
+//! * save→load yields a bit-identical `Program` and an identical memory
+//!   `Plan` for AlexNetOWT and ResNet18, under both `TuneMode::Heuristic`
+//!   and `TuneMode::Analytical`;
+//! * a loaded artifact simulates to exactly the direct compile path's
+//!   cycles, stats and final DRAM contents;
+//! * corrupted payloads, format-version mismatches and config-hash
+//!   mismatches all fail loudly with typed errors.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{Artifact, ArtifactError, CompileOptions, Compiler, TuneMode};
+use snowflake::coordinator::driver;
+use snowflake::model::zoo;
+
+fn temp_path(tag: &str) -> String {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    dir.join(format!("snowflake_{tag}_{pid}.artifact.json"))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Build → save → load → simulate for one (model, tune-mode) cell and
+/// assert bit-identity with the direct path at every level.
+fn roundtrip_model(model: &str, tune: TuneMode, tag: &str) {
+    let cfg = SnowflakeConfig::default();
+    let g = zoo::by_name(model).unwrap();
+    // FC excluded, as the paper's timing tables do — keeps the test
+    // budget sane without losing any conv/pool coverage.
+    let opts = CompileOptions { skip_fc: true, tune, ..Default::default() };
+    let artifact = Compiler::new(cfg.clone()).options(opts.clone()).build(&g).unwrap();
+
+    let path = temp_path(tag);
+    artifact.save(&path).unwrap();
+    let loaded = Artifact::load(&path, &cfg).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // Bit-identical compile output.
+    assert_eq!(
+        loaded.compiled.program, artifact.compiled.program,
+        "{model}/{tune:?}: program did not round-trip bit-identically"
+    );
+    assert_eq!(loaded.compiled.plan, artifact.compiled.plan, "{model}/{tune:?}: plan differs");
+    assert_eq!(loaded.compiled.layer_ranges, artifact.compiled.layer_ranges);
+    assert_eq!(loaded.compiled.code_len, artifact.compiled.code_len);
+    assert_eq!(loaded.schedules, artifact.schedules, "{model}/{tune:?}: schedules differ");
+    assert_eq!(loaded.output_node, artifact.output_node);
+
+    // Identical simulation: cycles, full stats, and every DRAM word.
+    let seed = 42;
+    let direct = driver::run_model(&g, &cfg, &opts, seed).unwrap();
+    let via = driver::run_artifact(loaded, seed).unwrap();
+    assert_eq!(
+        via.stats.comparable(),
+        direct.stats.comparable(),
+        "{model}/{tune:?}: loaded artifact simulated differently"
+    );
+    assert_eq!(
+        via.machine.memory, direct.machine.memory,
+        "{model}/{tune:?}: final DRAM contents differ"
+    );
+}
+
+#[test]
+fn alexnet_heuristic_roundtrip() {
+    roundtrip_model("alexnet", TuneMode::Heuristic, "alex_h");
+}
+
+#[test]
+fn alexnet_analytical_roundtrip() {
+    roundtrip_model("alexnet", TuneMode::Analytical, "alex_a");
+}
+
+#[test]
+fn resnet18_heuristic_roundtrip() {
+    roundtrip_model("resnet18", TuneMode::Heuristic, "rn18_h");
+}
+
+#[test]
+fn resnet18_analytical_roundtrip() {
+    roundtrip_model("resnet18", TuneMode::Analytical, "rn18_a");
+}
+
+// ---------------------------------------------------------------------
+// Negative paths: every failure is typed and loud.
+// ---------------------------------------------------------------------
+
+fn small_artifact() -> (Artifact, SnowflakeConfig) {
+    let cfg = SnowflakeConfig::default();
+    let g = zoo::table1_layers().into_iter().next().unwrap();
+    (Compiler::new(cfg.clone()).build(&g).unwrap(), cfg)
+}
+
+#[test]
+fn truncated_payload_fails_loudly() {
+    let (artifact, cfg) = small_artifact();
+    let path = temp_path("trunc");
+    artifact.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let err = Artifact::load(&path, &cfg).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert!(matches!(err, ArtifactError::Parse(_)), "{err}");
+}
+
+#[test]
+fn bitflipped_program_word_fails_checksum() {
+    let (artifact, cfg) = small_artifact();
+    let path = temp_path("flip");
+    artifact.save(&path).unwrap();
+    // Valid JSON, damaged payload: change one encoded instruction word
+    // inside the "words" array (split first so the digit string cannot
+    // collide with an address elsewhere in the plan).
+    let text = std::fs::read_to_string(&path).unwrap();
+    let pos = text.find("\"words\": [").expect("program words array present");
+    let (head, tail) = text.split_at(pos);
+    let needle = format!("{}", snowflake::isa::encode::encode(&artifact.compiled.program.instrs[0]));
+    assert!(tail.contains(&needle), "test needs the first word in the text");
+    let tail = tail.replacen(&needle, "4027587856", 1); // a different valid u32
+    std::fs::write(&path, format!("{head}{tail}")).unwrap();
+    let err = Artifact::load(&path, &cfg).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+}
+
+#[test]
+fn out_of_bounds_plan_region_fails_loudly() {
+    let (artifact, cfg) = small_artifact();
+    let path = temp_path("oob");
+    artifact.save(&path).unwrap();
+    // Valid JSON, valid program, but a weights region pointing far past
+    // mem_words: load must reject it instead of letting deploy panic.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let needle = format!("\"weights_addr\": {}", artifact.compiled.plan.layers[0].weights_addr);
+    assert!(text.contains(&needle), "plan layer weights_addr present in the text");
+    let text = text.replacen(&needle, "\"weights_addr\": 4503599627370496", 1);
+    std::fs::write(&path, text).unwrap();
+    let err = Artifact::load(&path, &cfg).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+}
+
+#[test]
+fn version_mismatch_fails_loudly() {
+    let (artifact, cfg) = small_artifact();
+    let path = temp_path("ver");
+    artifact.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let text = text.replacen(
+        &format!("\"version\": {}", snowflake::compiler::artifact::FORMAT_VERSION),
+        "\"version\": 999",
+        1,
+    );
+    std::fs::write(&path, text).unwrap();
+    let err = Artifact::load(&path, &cfg).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(
+        err,
+        ArtifactError::FormatVersion {
+            found: 999,
+            expected: snowflake::compiler::artifact::FORMAT_VERSION
+        }
+    );
+}
+
+#[test]
+fn config_hash_mismatch_fails_loudly() {
+    let (artifact, _cfg) = small_artifact();
+    let path = temp_path("cfg");
+    artifact.save(&path).unwrap();
+    // A "bigger" machine must refuse the artifact outright.
+    let other = SnowflakeConfig { n_cus: 8, ..SnowflakeConfig::default() };
+    let err = Artifact::load(&path, &other).unwrap_err();
+    // Unchecked load + explicit validation reports the same error.
+    let unchecked = Artifact::load_unchecked(&path).unwrap();
+    let err2 = unchecked.validate_config(&other).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert!(matches!(err, ArtifactError::ConfigMismatch { .. }), "{err}");
+    assert_eq!(err, err2);
+}
+
+#[test]
+fn missing_file_is_io_error() {
+    let err = Artifact::load("/nonexistent/dir/x.artifact.json", &SnowflakeConfig::default())
+        .unwrap_err();
+    assert!(matches!(err, ArtifactError::Io(_)), "{err}");
+}

@@ -2,13 +2,23 @@
 //! fixed-point reference (§5.3's "layer by layer validation").
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, BalancePolicy, CompileOptions};
+use snowflake::compiler::{deploy, BalancePolicy, CompileOptions, Compiler};
 use snowflake::fixed::Q8_8;
 use snowflake::model::graph::Graph;
 use snowflake::model::layer::{LayerKind, Shape};
 use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::refimpl;
 use snowflake::util::rng::Rng;
+
+/// Build through the `Compiler` front door; these tests only need the
+/// compiled model, not the full artifact.
+fn compile(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<snowflake::compiler::CompiledModel, snowflake::compiler::CompileError> {
+    Compiler::new(cfg.clone()).options(opts.clone()).compile(g)
+}
 
 /// Compile+simulate a graph and compare every lowered-layer output
 /// canvas against the fixed-point reference. Returns the stats.

@@ -3,11 +3,22 @@
 //! (the paper's end-to-end flow, §5.1–§5.3 + Table 2 setup).
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, CompileOptions};
+use snowflake::compiler::{deploy, CompileOptions, Compiler};
 use snowflake::fixed::Q8_8;
 use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::model::zoo;
 use snowflake::refimpl;
+use snowflake::model::graph::Graph;
+
+/// Build through the `Compiler` front door; these tests only need the
+/// compiled model, not the full artifact.
+fn compile(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<snowflake::compiler::CompiledModel, snowflake::compiler::CompileError> {
+    Compiler::new(cfg.clone()).options(opts.clone()).compile(g)
+}
 
 fn run_model(g: &snowflake::model::graph::Graph, seed: u64) {
     let cfg = SnowflakeConfig::default();

@@ -5,7 +5,7 @@
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::decide::OpPlan;
-use snowflake::compiler::{compile, deploy, CompileOptions, LoopOrder, TuneMode};
+use snowflake::compiler::{deploy, CompileOptions, Compiler, LoopOrder, TuneMode};
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::instr::Instr;
 use snowflake::model::graph::Graph;
@@ -14,6 +14,16 @@ use snowflake::model::parser;
 use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::refimpl;
 use snowflake::sim::Machine;
+
+/// Build through the `Compiler` front door; these tests only need the
+/// compiled model, not the full artifact.
+fn compile(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<snowflake::compiler::CompiledModel, snowflake::compiler::CompileError> {
+    Compiler::new(cfg.clone()).options(opts.clone()).compile(g)
+}
 
 fn small_net() -> Graph {
     let mut g = Graph::new("small", Shape::new(16, 12, 12));

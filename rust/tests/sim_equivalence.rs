@@ -10,11 +10,21 @@
 //! closed forms.
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{compile, deploy, BalancePolicy, CompileOptions, LoopOrder};
+use snowflake::compiler::{deploy, BalancePolicy, CompileOptions, Compiler, LoopOrder};
 use snowflake::model::graph::Graph;
 use snowflake::model::layer::{LayerKind, Shape};
 use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::sim::CoreMode;
+
+/// Build through the `Compiler` front door; these tests only need the
+/// compiled model, not the full artifact.
+fn compile(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<snowflake::compiler::CompiledModel, snowflake::compiler::CompileError> {
+    Compiler::new(cfg.clone()).options(opts.clone()).compile(g)
+}
 
 /// AlexNet conv1: 3x224x224 -> 64, 11x11 stride 4 pad 2 (zoo spec).
 fn alexnet_conv1() -> Graph {
