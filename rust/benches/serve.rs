@@ -1,0 +1,99 @@
+//! Bench — serving-runtime throughput (E17): AlexNet + ResNet18
+//! resident, a mixed request stream through the worker pool at 1 and N
+//! workers versus the sequential `Engine::infer` loop.
+//!
+//! Doubles as a differential check: every served request's simulated
+//! cycle count must equal the sequential path's for that model — the
+//! worker pool, batch coalescing and the artifact cache may only
+//! change *host* wall time, never a simulated number. Host throughput
+//! is printed but not gated (shared runners are too noisy); the bit-
+//! identity assertion is the gate.
+
+use std::time::Instant;
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{Artifact, CompileOptions, Compiler};
+use snowflake::engine::serve::{ServeConfig, Server};
+use snowflake::engine::Engine;
+use snowflake::model::weights::synthetic_input;
+use snowflake::model::zoo;
+
+const REQUESTS: usize = 12;
+
+fn build(cfg: &SnowflakeConfig, name: &str) -> Artifact {
+    let g = zoo::by_name(name).expect("zoo model");
+    let opts = CompileOptions { skip_fc: true, ..Default::default() };
+    Compiler::new(cfg.clone()).options(opts).build(&g).expect("build")
+}
+
+fn main() {
+    let cfg = SnowflakeConfig::default();
+    let seed = 42;
+    let artifacts = [build(&cfg, "alexnet"), build(&cfg, "resnet18")];
+    let graphs: Vec<_> = artifacts.iter().map(|a| a.graph.clone()).collect();
+
+    // Sequential baseline: one engine, requests served in order.
+    let mut engine = Engine::new(cfg.clone());
+    let handles: Vec<_> = artifacts
+        .iter()
+        .map(|a| engine.load(a.clone(), seed).expect("load"))
+        .collect();
+    let t0 = Instant::now();
+    let mut seq_cycles = Vec::with_capacity(REQUESTS);
+    for r in 0..REQUESTS {
+        let m = r % graphs.len();
+        let x = synthetic_input(&graphs[m], seed + r as u64);
+        seq_cycles.push(engine.infer(handles[m], &x).expect("infer").stats.cycles);
+    }
+    let seq_wall = t0.elapsed();
+    println!(
+        "serve bench: {REQUESTS} requests (alexnet/resnet18 alternating), sequential {:.2?} \
+         ({:.1} req/s)",
+        seq_wall,
+        REQUESTS as f64 / seq_wall.as_secs_f64().max(1e-9)
+    );
+
+    let workers_max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    for workers in [1, workers_max] {
+        let mut server = Server::new(
+            cfg.clone(),
+            ServeConfig { workers, max_batch: 3, queue_depth: REQUESTS },
+        );
+        let ids: Vec<_> = artifacts
+            .iter()
+            .map(|a| server.register(a.clone(), seed).expect("register"))
+            .collect();
+        let requests: Vec<_> = (0..REQUESTS)
+            .map(|r| {
+                let m = r % graphs.len();
+                (ids[m], synthetic_input(&graphs[m], seed + r as u64))
+            })
+            .collect();
+        let (responses, report) = server.serve_all(requests).expect("serve");
+        for (r, resp) in responses.iter().enumerate() {
+            assert_eq!(
+                resp.stats.cycles, seq_cycles[r],
+                "request {r}: served cycles diverged from the sequential path at {workers} workers"
+            );
+        }
+        let speedup = seq_wall.as_secs_f64() / report.wall.as_secs_f64().max(1e-9);
+        println!(
+            "  {workers} worker(s): {:.2?} ({:.1} req/s, {speedup:.2}x vs sequential), \
+             cache {} hits / {} misses",
+            report.wall,
+            report.requests_per_sec(),
+            report.cache.hits,
+            report.cache.misses
+        );
+        for ms in &report.per_model {
+            println!(
+                "    {:<10} {} requests, avg batch {:.2}, avg queue wait {:.2?}",
+                ms.name,
+                ms.requests,
+                ms.avg_batch(),
+                ms.avg_queue_wait()
+            );
+        }
+    }
+    println!("serve bench OK: all served cycle counts bit-identical to sequential");
+}

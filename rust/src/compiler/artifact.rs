@@ -24,6 +24,17 @@
 //! corrupted payload is a typed [`ArtifactError`], never a silent
 //! miscompute. The on-disk form is JSON via `util/json.rs` (the repo is
 //! dependency-free; see rust/Cargo.toml), self-describing and diffable.
+//!
+//! The full build → save → load → run cycle:
+//!
+//! ```ignore
+//! let artifact = Compiler::new(cfg.clone()).options(opts).build(&graph)?;
+//! artifact.save("model.artifact.json")?;                     // `repro build`
+//! let back = Artifact::load("model.artifact.json", &cfg)?;   // validated
+//! let mut engine = Engine::new(cfg);                         // `repro run --artifact`
+//! let h = engine.load(back, seed)?;
+//! let out = engine.infer(h, &input)?;                        // == compile-and-run, exactly
+//! ```
 
 use super::cost::{CostEstimate, Schedule};
 use super::decide::{AvgPlan, ConvPlan, FcPlan, Geom, OpPlan, PoolPlan};
@@ -143,6 +154,26 @@ impl Artifact {
     /// Fingerprint of the config this artifact binds to.
     pub fn config_hash(&self) -> u64 {
         config_hash(&self.cfg)
+    }
+
+    /// Identity fingerprint of the artifact itself: FNV-1a over the
+    /// config fingerprint, the checksum of the encoded program words,
+    /// the quantization format and the embedded model description.
+    /// The format matters even though it never appears in an
+    /// instruction word: weights are *quantized into the deployed
+    /// image* with it, so a Q8.8 and a Q5.11 build of the same model
+    /// produce identical programs but different DRAM images. Two
+    /// artifacts with equal fingerprints deploy identical static
+    /// images for the same weight seed — the cache key of the serving
+    /// runtime's [`crate::engine::cache::ArtifactCache`].
+    pub fn fingerprint(&self) -> u64 {
+        let words = program_words(&self.compiled.program);
+        let mut canon = Vec::with_capacity(24);
+        canon.extend_from_slice(&self.config_hash().to_le_bytes());
+        canon.extend_from_slice(&words_checksum(&words).to_le_bytes());
+        canon.extend_from_slice(&(self.compiled.plan.fmt.frac as u64).to_le_bytes());
+        canon.extend_from_slice(parser::dump_model(&self.graph).as_bytes());
+        fnv1a(&canon)
     }
 
     /// Serialize to the on-disk JSON form.
@@ -1008,6 +1039,23 @@ mod tests {
         assert_eq!(back.graph.nodes.len(), a.graph.nodes.len());
         // Re-serialization is stable (byte-identical text).
         assert_eq!(back.to_json().pretty(), a.to_json().pretty());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_quantization_formats() {
+        // Q8.8 and Q5.11 builds of the same model emit identical
+        // program words but deploy differently-quantized weight
+        // images; the cache key must tell them apart.
+        let g = small_graph();
+        let cfg = SnowflakeConfig::default();
+        let a8 = Compiler::new(cfg.clone()).build(&g).unwrap();
+        let a11 = Compiler::new(cfg)
+            .options(CompileOptions { fmt: crate::fixed::Q5_11, ..Default::default() })
+            .build(&g)
+            .unwrap();
+        assert_ne!(a8.fingerprint(), a11.fingerprint());
+        // Stable across clones of the same artifact.
+        assert_eq!(a8.fingerprint(), a8.clone().fingerprint());
     }
 
     #[test]

@@ -16,6 +16,17 @@ use crate::model::weights::{synthetic_input, Weights};
 use crate::refimpl;
 use crate::sim::stats::Stats;
 use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Recover the compiled model from an unloaded engine artifact. The
+/// single-shot drivers hold the only reference, so this is normally a
+/// move, not a clone.
+fn into_compiled(artifact: Arc<Artifact>) -> CompiledModel {
+    match Arc::try_unwrap(artifact) {
+        Ok(a) => a.compiled,
+        Err(shared) => shared.compiled.clone(),
+    }
+}
 
 /// Result of one simulated inference.
 pub struct RunOutcome {
@@ -50,7 +61,7 @@ pub fn run_artifact(artifact: Artifact, seed: u64) -> Result<RunOutcome, String>
     let h = engine.load(artifact, seed).map_err(|e| e.to_string())?;
     let inf = engine.infer(h, &x).map_err(|e| e.to_string())?;
     let (artifact, machine) = engine.unload(h).map_err(|e| e.to_string())?;
-    Ok(RunOutcome { compiled: artifact.compiled, stats: inf.stats, machine })
+    Ok(RunOutcome { compiled: into_compiled(artifact), stats: inf.stats, machine })
 }
 
 /// Result of a batched run: one compile + weight/program deployment,
@@ -112,7 +123,7 @@ pub fn run_batch_artifact(
         per_frame.push(inf.stats);
     }
     let (artifact, _machine) = engine.unload(h).map_err(|e| e.to_string())?;
-    Ok(BatchOutcome { compiled: artifact.compiled, per_frame, outputs })
+    Ok(BatchOutcome { compiled: into_compiled(artifact), per_frame, outputs })
 }
 
 /// Run and validate every generated layer against the fixed-point

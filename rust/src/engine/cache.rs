@@ -1,0 +1,198 @@
+//! Deployed-artifact cache: repeat [`Engine`] loads of the same
+//! artifact are (almost) free.
+//!
+//! Loading a model is two very different costs glued together: the
+//! cheap admission bookkeeping, and the expensive part — initializing
+//! synthetic weights, *arranging* them into the COOP/INDP deployment
+//! layout and writing the static image into simulated DRAM
+//! ([`deployed_machine`]). The serving runtime loads every registered
+//! model into **every** worker's engine, so without a cache an
+//! N-worker × M-model server pays N×M arrangements of identical data.
+//!
+//! [`ArtifactCache`] memoizes the deployed machine image, keyed by the
+//! artifact's identity fingerprint ([`Artifact::fingerprint`], which
+//! folds in the `config_hash`) plus the weight seed. The first
+//! [`ArtifactCache::load_into`] for a key builds the image; every
+//! later one — same worker or another — clones it, turning the load
+//! into a memcpy of DRAM. The cache is shared across threads
+//! (`Mutex`-guarded map, atomic counters) and the map lock is held
+//! across a miss's build, so concurrent workers racing to load the
+//! same model never deploy it twice.
+//!
+//! ```ignore
+//! let cache = ArtifactCache::new();
+//! let artifact = Arc::new(Compiler::new(cfg.clone()).build(&graph)?);
+//! let h1 = cache.load_into(&mut engine_a, &artifact, seed)?; // miss: deploys
+//! let h2 = cache.load_into(&mut engine_b, &artifact, seed)?; // hit: memcpy
+//! assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+//! ```
+//!
+//! There is no eviction: a server's resident model set is small and
+//! fixed at registration time. Drop the cache to free the images.
+
+use super::{deployed_machine, Engine, EngineError, ModelHandle};
+use crate::compiler::Artifact;
+use crate::model::weights::Weights;
+use crate::sim::Machine;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Aggregate cache counters. `hits` are loads served by cloning a
+/// cached image; `misses` are loads that had to deploy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Total loads that went through the cache.
+    pub fn loads(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+/// Thread-safe cache of deployed machine images, keyed by
+/// `(artifact fingerprint, weight seed)`.
+#[derive(Default)]
+pub struct ArtifactCache {
+    images: Mutex<HashMap<(u64, u64), Machine>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ArtifactCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load `artifact` (with `Weights::init(graph, seed)` weights) into
+    /// `engine`, deploying on first use and cloning the cached image on
+    /// every load after that. Bit-identical to [`Engine::load`]: the
+    /// clone carries the exact DRAM image the deploy produced.
+    pub fn load_into(
+        &self,
+        engine: &mut Engine,
+        artifact: &Arc<Artifact>,
+        seed: u64,
+    ) -> Result<ModelHandle, EngineError> {
+        let key = (artifact.fingerprint(), seed);
+        let machine = {
+            let mut images = self.images.lock().expect("artifact cache poisoned");
+            match images.get(&key) {
+                Some(proto) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    proto.clone()
+                }
+                None => {
+                    // Build under the lock: a racing worker loading the
+                    // same model waits here and takes the hit path
+                    // instead of deploying a second time.
+                    let weights = Weights::init(&artifact.graph, seed);
+                    let proto = deployed_machine(artifact, &weights);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let machine = proto.clone();
+                    images.insert(key, proto);
+                    machine
+                }
+            }
+        };
+        engine.load_image(Arc::clone(artifact), machine)
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct cached images.
+    pub fn len(&self) -> usize {
+        self.images.lock().expect("artifact cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SnowflakeConfig;
+    use crate::compiler::Compiler;
+    use crate::model::graph::Graph;
+    use crate::model::layer::{LayerKind, Shape};
+    use crate::model::weights::synthetic_input;
+
+    fn small_graph(name: &str) -> Graph {
+        let mut g = Graph::new(name, Shape::new(16, 10, 10));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c",
+        );
+        g
+    }
+
+    #[test]
+    fn cached_load_is_bit_identical_to_direct_load() {
+        let cfg = SnowflakeConfig::default();
+        let g = small_graph("cache_eq");
+        let artifact = Arc::new(Compiler::new(cfg.clone()).build(&g).unwrap());
+        let seed = 7;
+        let cache = ArtifactCache::new();
+
+        // Reference: a plain uncached load.
+        let mut direct = Engine::new(cfg.clone());
+        let hd = direct.load((*artifact).clone(), seed).unwrap();
+
+        let mut a = Engine::new(cfg.clone());
+        let mut b = Engine::new(cfg.clone());
+        let ha = cache.load_into(&mut a, &artifact, seed).unwrap();
+        let hb = cache.load_into(&mut b, &artifact, seed).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+
+        let x = synthetic_input(&g, seed);
+        let want = direct.infer(hd, &x).unwrap();
+        for (engine, h) in [(&mut a, ha), (&mut b, hb)] {
+            let got = engine.infer(h, &x).unwrap();
+            assert_eq!(got.stats.comparable(), want.stats.comparable());
+            assert_eq!(got.output.count_diff(&want.output), 0);
+        }
+    }
+
+    #[test]
+    fn distinct_artifacts_and_seeds_get_distinct_images() {
+        let cfg = SnowflakeConfig::default();
+        let a1 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("m1")).unwrap());
+        let a2 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("m2")).unwrap());
+        assert_ne!(a1.fingerprint(), a2.fingerprint());
+        let cache = ArtifactCache::new();
+        let mut e = Engine::new(cfg.clone());
+        cache.load_into(&mut e, &a1, 1).unwrap();
+        cache.load_into(&mut e, &a2, 1).unwrap();
+        // Same artifact, different weight seed: a different image.
+        cache.load_into(&mut e, &a1, 2).unwrap();
+        // Same artifact and seed again: hit.
+        cache.load_into(&mut e, &a1, 1).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3 });
+        assert_eq!(cache.len(), 3);
+        assert_eq!(e.stats().models_resident, 4);
+    }
+
+    #[test]
+    fn config_mismatch_still_typed_through_the_cache() {
+        let cfg = SnowflakeConfig::default();
+        let other = SnowflakeConfig { dma_setup_cycles: 32, ..cfg.clone() };
+        let artifact = Arc::new(Compiler::new(other).build(&small_graph("cfg")).unwrap());
+        let cache = ArtifactCache::new();
+        let mut e = Engine::new(cfg);
+        let err = cache.load_into(&mut e, &artifact, 1).unwrap_err();
+        assert!(matches!(err, EngineError::ConfigMismatch { .. }), "{err}");
+    }
+}

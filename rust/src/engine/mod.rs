@@ -29,6 +29,15 @@
 //!   compile-and-run, which `tests/artifact_roundtrip.rs` pins.
 //! * **Stats**: per-model and per-engine counters aggregate every
 //!   inference ([`ModelStats`], [`EngineStats`]).
+//! * **Serving** ([`serve`]): an asynchronous multi-model server on top
+//!   of this surface — a bounded request queue with ticket futures, a
+//!   pool of worker threads each driving its own engine, cross-request
+//!   batching per model, and a deployed-image cache ([`cache`]) that
+//!   makes repeat loads of the same artifact a memcpy. `repro serve`
+//!   is the CLI front end.
+
+pub mod cache;
+pub mod serve;
 
 use crate::arch::SnowflakeConfig;
 use crate::compiler::artifact::{config_hash, Artifact};
@@ -38,6 +47,7 @@ use crate::model::weights::Weights;
 use crate::sim::stats::Stats;
 use crate::sim::Machine;
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// Why an engine operation failed.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,6 +91,7 @@ impl std::error::Error for EngineError {}
 pub struct ModelHandle(usize);
 
 /// One simulated inference's results.
+#[derive(Clone, Debug)]
 pub struct Inference {
     /// Full simulator statistics for this frame.
     pub stats: Stats,
@@ -142,13 +153,32 @@ impl EngineStats {
 
 struct LoadedModel {
     name: String,
-    artifact: Artifact,
+    /// Shared: the serving runtime loads the same artifact into many
+    /// worker engines without cloning megabytes of plan per worker.
+    artifact: Arc<Artifact>,
     machine: Machine,
     out_canvas: Canvas,
     /// Freshly deployed: the first inference needs no dynamic-state
     /// reset (the machine has never run).
     fresh: bool,
     stats: ModelStats,
+}
+
+/// Build the deployed machine image for an artifact: a machine sized
+/// for the memory plan, with the static image — arranged weights,
+/// biases, the encoded program — resident in simulated DRAM. This is
+/// the expensive half of a model load; [`cache::ArtifactCache`] builds
+/// it once per (artifact, seed) and clones it into every engine that
+/// loads the same artifact afterwards.
+pub fn deployed_machine(artifact: &Artifact, weights: &Weights) -> Machine {
+    let mut machine = Machine::new(
+        artifact.cfg.clone(),
+        artifact.compiled.plan.fmt,
+        artifact.compiled.plan.mem_words,
+    );
+    deploy::deploy_static(&mut machine, &artifact.compiled, &artifact.graph, weights);
+    machine.load_program(artifact.compiled.program.instrs.clone());
+    machine
 }
 
 /// The runtime: owns simulated machines and loaded artifacts, serves
@@ -181,12 +211,72 @@ impl Engine {
         artifact: Artifact,
         weights: &Weights,
     ) -> Result<ModelHandle, EngineError> {
+        let artifact = Arc::new(artifact);
+        self.check_config(&artifact)?;
+        let machine = deployed_machine(&artifact, weights);
+        self.admit(artifact, machine)
+    }
+
+    /// Load an artifact with synthetic seeded weights (the repro path:
+    /// weights are `Weights::init(graph, seed)`, as everywhere else).
+    pub fn load(&mut self, artifact: Artifact, seed: u64) -> Result<ModelHandle, EngineError> {
+        let weights = Weights::init(&artifact.graph, seed);
+        self.load_with(artifact, &weights)
+    }
+
+    /// Load a pre-deployed machine image: skip weight arrangement and
+    /// static deployment entirely. `machine` must be (a clone of) the
+    /// image [`deployed_machine`] built for exactly this artifact —
+    /// [`cache::ArtifactCache::load_into`] is the checked front door.
+    /// Config and plan-size mismatches are still typed errors.
+    pub fn load_image(
+        &mut self,
+        artifact: Arc<Artifact>,
+        machine: Machine,
+    ) -> Result<ModelHandle, EngineError> {
+        self.check_config(&artifact)?;
+        if config_hash(&machine.cfg) != self.cfg_hash {
+            return Err(EngineError::ConfigMismatch {
+                artifact: format!("{:016x}", config_hash(&machine.cfg)),
+                engine: format!("{:016x}", self.cfg_hash),
+            });
+        }
+        if machine.memory.len() < artifact.compiled.plan.mem_words {
+            return Err(EngineError::BadInput(format!(
+                "machine image has {} DRAM words, plan needs {}",
+                machine.memory.len(),
+                artifact.compiled.plan.mem_words
+            )));
+        }
+        // The quantization format never shows up in an instruction
+        // word, so it is the one image-vs-artifact mismatch the other
+        // checks cannot catch: weights were quantized into the image
+        // with the image's format.
+        if machine.fmt != artifact.compiled.plan.fmt {
+            return Err(EngineError::BadInput(format!(
+                "machine image quantized as {} but the artifact's plan is {}",
+                machine.fmt, artifact.compiled.plan.fmt
+            )));
+        }
+        self.admit(artifact, machine)
+    }
+
+    fn check_config(&self, artifact: &Artifact) -> Result<(), EngineError> {
         if config_hash(&artifact.cfg) != self.cfg_hash {
             return Err(EngineError::ConfigMismatch {
                 artifact: format!("{:016x}", config_hash(&artifact.cfg)),
                 engine: format!("{:016x}", self.cfg_hash),
             });
         }
+        Ok(())
+    }
+
+    /// Admit a validated (artifact, deployed machine) pair as resident.
+    fn admit(
+        &mut self,
+        artifact: Arc<Artifact>,
+        machine: Machine,
+    ) -> Result<ModelHandle, EngineError> {
         let out_node = artifact.output_node.ok_or(EngineError::NoOutput)?;
         let out_canvas = *artifact
             .compiled
@@ -194,10 +284,6 @@ impl Engine {
             .canvases
             .get(&out_node)
             .ok_or(EngineError::NoOutput)?;
-        let mut machine =
-            Machine::new(self.cfg.clone(), artifact.compiled.plan.fmt, artifact.compiled.plan.mem_words);
-        deploy::deploy_static(&mut machine, &artifact.compiled, &artifact.graph, weights);
-        machine.load_program(artifact.compiled.program.instrs.clone());
         let handle = ModelHandle(self.models.len());
         self.models.push(Some(LoadedModel {
             name: artifact.graph.name.clone(),
@@ -208,13 +294,6 @@ impl Engine {
             stats: ModelStats::default(),
         }));
         Ok(handle)
-    }
-
-    /// Load an artifact with synthetic seeded weights (the repro path:
-    /// weights are `Weights::init(graph, seed)`, as everywhere else).
-    pub fn load(&mut self, artifact: Artifact, seed: u64) -> Result<ModelHandle, EngineError> {
-        let weights = Weights::init(&artifact.graph, seed);
-        self.load_with(artifact, &weights)
     }
 
     /// Submit one inference: write the input canvas, run to completion,
@@ -299,8 +378,10 @@ impl Engine {
 
     /// Evict a model, returning its artifact and machine (the driver's
     /// single-shot path reads final canvases out of the machine after
-    /// the engine is done with it). The handle becomes invalid.
-    pub fn unload(&mut self, h: ModelHandle) -> Result<(Artifact, Machine), EngineError> {
+    /// the engine is done with it). The handle becomes invalid. The
+    /// artifact comes back as the engine's `Arc`; callers that loaded
+    /// it exclusively can `Arc::try_unwrap` it back to a value.
+    pub fn unload(&mut self, h: ModelHandle) -> Result<(Arc<Artifact>, Machine), EngineError> {
         let slot = self.models.get_mut(h.0).ok_or(EngineError::BadHandle)?;
         let m = slot.take().ok_or(EngineError::BadHandle)?;
         Ok((m.artifact, m.machine))

@@ -1,0 +1,848 @@
+//! Asynchronous multi-model serving on top of the [`Engine`]: a
+//! bounded request queue, a pool of worker threads, per-model
+//! cross-request batching and a deployed-artifact cache.
+//!
+//! The paper's compiler exists so the accelerator can serve real
+//! inference traffic (93.6 fps AlexNet / 21.4 fps ResNet18 on the
+//! authors' testbed); this module is the runtime layer that turns the
+//! synchronous [`Engine::infer`] into a server:
+//!
+//! ```ignore
+//! let mut server = Server::new(cfg, ServeConfig { workers: 4, ..Default::default() });
+//! let alexnet = server.register(alexnet_artifact, seed)?;
+//! let resnet = server.register(resnet_artifact, seed)?;
+//! let (tickets, report) = server.run(|client| {
+//!     (0..64).map(|r| {
+//!         let model = if r % 2 == 0 { alexnet } else { resnet };
+//!         client.submit(model, input(r))
+//!     }).collect::<Result<Vec<_>, _>>()
+//! })?;
+//! for t in tickets? { println!("{} cycles", t.wait()?.stats.cycles); }
+//! println!("{}", report.summary(&cfg));
+//! ```
+//!
+//! ## Semantics
+//!
+//! * **Queue** — one bounded FIFO ([`ServeConfig::queue_depth`]).
+//!   [`Client::submit`] blocks while the queue is full (backpressure);
+//!   [`Client::try_submit`] returns [`ServeError::QueueFull`] instead.
+//!   Both hand back a [`Ticket`] — a future resolved by whichever
+//!   worker serves the request; [`Ticket::wait`] blocks for the
+//!   [`Response`].
+//! * **Workers** — `workers` OS threads ([`std::thread::scope`]; the
+//!   crate stays dependency-free, see rust/Cargo.toml). Each worker
+//!   owns a full [`Engine`] with **every** registered model resident,
+//!   so any worker can serve any request and one slow model never
+//!   wedges the pool behind a single machine.
+//! * **Batching** — a worker pops the queue head, then *coalesces*: it
+//!   steals up to [`ServeConfig::max_batch`]` - 1` more queued
+//!   requests **for the same model** (in arrival order, from anywhere
+//!   in the queue) and runs them as one [`Engine::infer_batch`]
+//!   against the already-resident deployment — the cross-request
+//!   version of the paper's §5.3 host model, where re-kicking a
+//!   resident deployment is much cheaper than switching models.
+//! * **Fairness** — admission is strict FIFO at the queue head: the
+//!   oldest waiting request always picks the next batch's model, so no
+//!   model can be starved by a burst for another. Coalescing removes
+//!   later same-model requests but never reorders the remaining
+//!   requests relative to each other.
+//! * **Artifact cache** — worker engines load through a shared
+//!   [`ArtifactCache`] keyed by the artifact fingerprint (which folds
+//!   in `config_hash`) + weight seed: the first load deploys, the
+//!   other `workers - 1` loads clone the deployed DRAM image.
+//! * **Determinism** — simulated machines are reset per inference and
+//!   timing is input-independent, so every request's simulated cycles,
+//!   DRAM traffic and output words are bit-identical to the sequential
+//!   `Engine::infer` path regardless of worker count, batch coalescing
+//!   or arrival order. `repro serve --check` and `tests/serve.rs` pin
+//!   this.
+//!
+//! Host-side wall-clock numbers (queue wait, service time, throughput)
+//! are real concurrency measurements and naturally vary run to run;
+//! everything simulated is exact.
+
+use super::cache::{ArtifactCache, CacheStats};
+use super::{Engine, EngineError, ModelHandle};
+use crate::arch::SnowflakeConfig;
+use crate::compiler::artifact::config_hash;
+use crate::compiler::Artifact;
+use crate::sim::stats::Stats;
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker-pool / queue configuration for a [`Server`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Worker threads, each with its own engine (min 1).
+    pub workers: usize,
+    /// Most same-model requests coalesced into one `infer_batch`
+    /// (min 1 = no coalescing).
+    pub max_batch: usize,
+    /// Bounded queue depth; `submit` blocks (and `try_submit` fails)
+    /// when this many requests are waiting (min 1).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 4, max_batch: 4, queue_depth: 32 }
+    }
+}
+
+impl ServeConfig {
+    /// Clamp every knob to its minimum legal value.
+    pub fn normalized(self) -> Self {
+        ServeConfig {
+            workers: self.workers.max(1),
+            max_batch: self.max_batch.max(1),
+            queue_depth: self.queue_depth.max(1),
+        }
+    }
+}
+
+/// Identifier of a model registered with a [`Server`] (server-local,
+/// in registration order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelId(usize);
+
+impl ModelId {
+    /// Registration index (also the index into
+    /// [`ServeReport::per_model`]).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Why a serving operation failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// An engine-level failure (config mismatch, simulator error, …).
+    Engine(EngineError),
+    /// The [`ModelId`] does not name a registered model.
+    UnknownModel(usize),
+    /// The input tensor does not match the model's input canvas.
+    BadInput(String),
+    /// `try_submit` found the queue at `queue_depth`.
+    QueueFull,
+    /// The server is shutting down; no more submissions are accepted.
+    Closed,
+    /// A worker failed to start (model load failure at pool spin-up).
+    Worker(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Engine(e) => write!(f, "{e}"),
+            ServeError::UnknownModel(i) => write!(f, "model id {i} is not registered"),
+            ServeError::BadInput(m) => write!(f, "bad input: {m}"),
+            ServeError::QueueFull => write!(f, "request queue is full"),
+            ServeError::Closed => write!(f, "server is closed to new requests"),
+            ServeError::Worker(m) => write!(f, "worker startup failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<EngineError> for ServeError {
+    fn from(e: EngineError) -> Self {
+        ServeError::Engine(e)
+    }
+}
+
+/// One served inference, delivered through a [`Ticket`].
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// The model that served the request.
+    pub model: ModelId,
+    /// Submission sequence number (0-based, server-wide).
+    pub request: u64,
+    /// Worker thread that executed it.
+    pub worker: usize,
+    /// Size of the coalesced batch this request rode in (1 = alone).
+    pub batch_size: usize,
+    /// Full simulator statistics — bit-identical to a sequential
+    /// [`Engine::infer`] of the same model.
+    pub stats: Stats,
+    /// Output canvas interior (the model's final generated layer).
+    pub output: Tensor<i16>,
+    /// Host time spent queued (submit → dequeue).
+    pub queue_wait: Duration,
+    /// Host time in the engine, amortized over the batch.
+    pub service: Duration,
+}
+
+#[derive(Default)]
+struct TicketSlot {
+    result: Mutex<Option<Result<Response, ServeError>>>,
+    cv: Condvar,
+}
+
+/// Future for one submitted request. Resolved exactly once by the
+/// worker that serves (or fails) the request.
+pub struct Ticket {
+    slot: Arc<TicketSlot>,
+    model: ModelId,
+    request: u64,
+}
+
+impl Ticket {
+    /// The model the request was submitted against.
+    pub fn model(&self) -> ModelId {
+        self.model
+    }
+
+    /// Submission sequence number.
+    pub fn request(&self) -> u64 {
+        self.request
+    }
+
+    /// Block until the request has been served.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        let mut r = self.slot.result.lock().expect("ticket poisoned");
+        loop {
+            if let Some(res) = r.take() {
+                return res;
+            }
+            r = self.slot.cv.wait(r).expect("ticket poisoned");
+        }
+    }
+}
+
+fn deliver(slot: &TicketSlot, result: Result<Response, ServeError>) {
+    *slot.result.lock().expect("ticket poisoned") = Some(result);
+    slot.cv.notify_all();
+}
+
+/// A request resident in the queue.
+struct QueuedRequest {
+    model: usize,
+    seqno: u64,
+    input: Tensor<f32>,
+    submitted: Instant,
+    slot: Arc<TicketSlot>,
+}
+
+struct QueueState {
+    q: VecDeque<QueuedRequest>,
+    closed: bool,
+    /// Deepest the queue ever got (bounded-queue invariant check).
+    high_water: usize,
+    next_seqno: u64,
+}
+
+/// Queue + condvars shared between the client and the workers.
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Submitters waiting for queue space.
+    space: Condvar,
+    /// Workers waiting for requests.
+    work: Condvar,
+    depth: usize,
+    max_batch: usize,
+}
+
+/// Pop the queue head, then coalesce: steal up to `max_batch - 1` more
+/// requests *for the same model* from anywhere in the queue, in
+/// arrival order. Requests for other models keep their relative order.
+fn take_batch(q: &mut VecDeque<QueuedRequest>, max_batch: usize) -> Vec<QueuedRequest> {
+    let first = match q.pop_front() {
+        Some(r) => r,
+        None => return Vec::new(),
+    };
+    let model = first.model;
+    let mut batch = vec![first];
+    let mut i = 0;
+    while batch.len() < max_batch && i < q.len() {
+        if q[i].model == model {
+            batch.push(q.remove(i).expect("index in bounds"));
+        } else {
+            i += 1;
+        }
+    }
+    batch
+}
+
+/// Per-model aggregate counters of one serve run (also per worker,
+/// before merging).
+#[derive(Clone, Debug, Default)]
+pub struct ModelServeStats {
+    /// Model display name (graph name).
+    pub name: String,
+    pub requests: u64,
+    /// Coalesced `infer_batch` calls.
+    pub batches: u64,
+    /// Largest coalesced batch observed.
+    pub max_batch: usize,
+    pub total_cycles: u64,
+    pub bytes_moved: u64,
+    /// Summed host queue wait across requests.
+    pub queue_wait: Duration,
+    /// Summed host service time across batches.
+    pub service: Duration,
+}
+
+impl ModelServeStats {
+    /// Mean requests per coalesced batch.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+
+    /// Mean host queue wait per request.
+    pub fn avg_queue_wait(&self) -> Duration {
+        if self.requests == 0 {
+            return Duration::ZERO;
+        }
+        self.queue_wait / self.requests as u32
+    }
+
+    /// Mean simulated milliseconds per inference.
+    pub fn avg_sim_ms(&self, cfg: &SnowflakeConfig) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        cfg.cycles_to_ms(self.total_cycles) / self.requests as f64
+    }
+
+    fn absorb(&mut self, other: &ModelServeStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.max_batch = self.max_batch.max(other.max_batch);
+        self.total_cycles += other.total_cycles;
+        self.bytes_moved += other.bytes_moved;
+        self.queue_wait += other.queue_wait;
+        self.service += other.service;
+    }
+}
+
+/// What one serve run did, merged across workers.
+pub struct ServeReport {
+    /// Indexed by [`ModelId::index`].
+    pub per_model: Vec<ModelServeStats>,
+    /// Total requests served.
+    pub requests: u64,
+    /// Host wall time of the whole run (pool spin-up → drain).
+    pub wall: Duration,
+    pub workers: usize,
+    /// Deepest the queue ever got (≤ `queue_depth` for streamed
+    /// submission; prefilled [`Server::serve_all`] runs may exceed it).
+    pub high_water: usize,
+    /// Artifact-cache counters for the run's worker loads.
+    pub cache: CacheStats,
+}
+
+impl ServeReport {
+    /// Total simulated cycles over all requests.
+    pub fn total_cycles(&self) -> u64 {
+        self.per_model.iter().map(|m| m.total_cycles).sum()
+    }
+
+    /// Aggregate host throughput in requests per wall second.
+    pub fn requests_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / s
+    }
+
+    /// One-line human summary for `repro serve`.
+    pub fn summary(&self, cfg: &SnowflakeConfig) -> String {
+        format!(
+            "{} requests on {} workers in {:?} ({:.1} req/s host), {} simulated cycles \
+             ({:.2} ms at {} MHz), queue high-water {}, cache {} hits / {} misses",
+            self.requests,
+            self.workers,
+            self.wall,
+            self.requests_per_sec(),
+            self.total_cycles(),
+            cfg.cycles_to_ms(self.total_cycles()),
+            cfg.clock_mhz,
+            self.high_water,
+            self.cache.hits,
+            self.cache.misses,
+        )
+    }
+}
+
+struct RegisteredModel {
+    name: String,
+    artifact: Arc<Artifact>,
+    seed: u64,
+}
+
+/// Submission handle passed to the closure of [`Server::run`]. Lives
+/// only for the duration of the run; dropping it (returning from the
+/// closure) closes the server to new requests.
+pub struct Client<'a> {
+    shared: &'a Shared,
+    models: &'a [RegisteredModel],
+}
+
+impl Client<'_> {
+    /// Submit one request, blocking while the queue is full
+    /// (backpressure). Returns the ticket that will resolve to the
+    /// [`Response`].
+    pub fn submit(&self, model: ModelId, input: Tensor<f32>) -> Result<Ticket, ServeError> {
+        self.enqueue(model, input, true)
+    }
+
+    /// As [`Client::submit`], but fail with [`ServeError::QueueFull`]
+    /// instead of blocking.
+    pub fn try_submit(&self, model: ModelId, input: Tensor<f32>) -> Result<Ticket, ServeError> {
+        self.enqueue(model, input, false)
+    }
+
+    fn enqueue(
+        &self,
+        model: ModelId,
+        input: Tensor<f32>,
+        block: bool,
+    ) -> Result<Ticket, ServeError> {
+        validate_input(self.models, model, &input)?;
+        let mut st = self.shared.state.lock().expect("serve queue poisoned");
+        while st.q.len() >= self.shared.depth {
+            if st.closed {
+                return Err(ServeError::Closed);
+            }
+            if !block {
+                return Err(ServeError::QueueFull);
+            }
+            st = self.shared.space.wait(st).expect("serve queue poisoned");
+        }
+        if st.closed {
+            return Err(ServeError::Closed);
+        }
+        let seqno = st.next_seqno;
+        st.next_seqno += 1;
+        let slot = Arc::new(TicketSlot::default());
+        st.q.push_back(QueuedRequest {
+            model: model.0,
+            seqno,
+            input,
+            submitted: Instant::now(),
+            slot: Arc::clone(&slot),
+        });
+        st.high_water = st.high_water.max(st.q.len());
+        drop(st);
+        self.shared.work.notify_one();
+        Ok(Ticket { slot, model, request: seqno })
+    }
+}
+
+fn validate_input(
+    models: &[RegisteredModel],
+    model: ModelId,
+    input: &Tensor<f32>,
+) -> Result<(), ServeError> {
+    let m = models.get(model.0).ok_or(ServeError::UnknownModel(model.0))?;
+    let cv = m.artifact.compiled.plan.input_canvas;
+    if input.shape != vec![cv.c, cv.h, cv.w] {
+        return Err(ServeError::BadInput(format!(
+            "input shape {:?} does not match {}'s {:?}",
+            input.shape,
+            m.name,
+            [cv.c, cv.h, cv.w]
+        )));
+    }
+    Ok(())
+}
+
+/// Startup barrier: `run` only hands the [`Client`] out once every
+/// worker has its engine loaded (or one has failed).
+struct ReadySignal {
+    state: Mutex<(usize, Option<String>)>,
+    cv: Condvar,
+}
+
+impl ReadySignal {
+    fn new() -> Self {
+        ReadySignal { state: Mutex::new((0, None)), cv: Condvar::new() }
+    }
+
+    fn arrived(&self) {
+        self.state.lock().expect("ready poisoned").0 += 1;
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, msg: String) {
+        let mut s = self.state.lock().expect("ready poisoned");
+        if s.1.is_none() {
+            s.1 = Some(msg);
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, n: usize) -> Option<String> {
+        let mut s = self.state.lock().expect("ready poisoned");
+        loop {
+            if s.1.is_some() {
+                return s.1.clone();
+            }
+            if s.0 >= n {
+                return None;
+            }
+            s = self.cv.wait(s).expect("ready poisoned");
+        }
+    }
+}
+
+fn close(shared: &Shared) {
+    shared.state.lock().expect("serve queue poisoned").closed = true;
+    shared.work.notify_all();
+    shared.space.notify_all();
+}
+
+/// The worker body: pop-coalesce-infer until the queue is closed *and*
+/// drained. Returns this worker's per-model counters.
+fn worker_loop(
+    worker: usize,
+    shared: &Shared,
+    engine: &mut Engine,
+    handles: &[ModelHandle],
+    n_models: usize,
+) -> Vec<ModelServeStats> {
+    let mut stats = vec![ModelServeStats::default(); n_models];
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().expect("serve queue poisoned");
+            loop {
+                if !st.q.is_empty() {
+                    break take_batch(&mut st.q, shared.max_batch);
+                }
+                if st.closed {
+                    return stats;
+                }
+                st = shared.work.wait(st).expect("serve queue poisoned");
+            }
+        };
+        // Freed up to `max_batch` slots; wake every blocked submitter.
+        shared.space.notify_all();
+
+        let model = batch[0].model;
+        let n = batch.len();
+        let dequeued = Instant::now();
+        let ms = &mut stats[model];
+        ms.batches += 1;
+        ms.max_batch = ms.max_batch.max(n);
+        let (metas, inputs): (Vec<_>, Vec<_>) = batch
+            .into_iter()
+            .map(|r| {
+                let wait = dequeued.duration_since(r.submitted);
+                ms.queue_wait += wait;
+                ((r.seqno, r.slot, wait), r.input)
+            })
+            .unzip();
+        let result = engine.infer_batch(handles[model], &inputs);
+        let service_total = dequeued.elapsed();
+        ms.service += service_total;
+        let per_request = service_total / n as u32;
+        match result {
+            Ok(inferences) => {
+                for ((seqno, slot, wait), inf) in metas.into_iter().zip(inferences) {
+                    ms.requests += 1;
+                    ms.total_cycles += inf.stats.cycles;
+                    ms.bytes_moved += inf.stats.bytes_moved();
+                    deliver(
+                        &slot,
+                        Ok(Response {
+                            model: ModelId(model),
+                            request: seqno,
+                            worker,
+                            batch_size: n,
+                            stats: inf.stats,
+                            output: inf.output,
+                            queue_wait: wait,
+                            service: per_request,
+                        }),
+                    );
+                }
+            }
+            Err(e) => {
+                for (_seqno, slot, _wait) in metas {
+                    deliver(&slot, Err(ServeError::Engine(e.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// The asynchronous multi-model server. Register artifacts up front,
+/// then [`Server::run`] a submission closure against the worker pool
+/// (or hand a complete request list to [`Server::serve_all`]).
+pub struct Server {
+    cfg: SnowflakeConfig,
+    serve_cfg: ServeConfig,
+    models: Vec<RegisteredModel>,
+    cache: ArtifactCache,
+}
+
+impl Server {
+    /// A server for the given hardware and pool configuration, no
+    /// models registered.
+    pub fn new(cfg: SnowflakeConfig, serve_cfg: ServeConfig) -> Self {
+        Server { cfg, serve_cfg: serve_cfg.normalized(), models: Vec::new(), cache: ArtifactCache::new() }
+    }
+
+    /// The normalized pool configuration.
+    pub fn serve_config(&self) -> ServeConfig {
+        self.serve_cfg
+    }
+
+    /// Register a model: validate its config fingerprint against the
+    /// server's hardware and admit it to the model set every worker
+    /// will load. `seed` picks the synthetic weights
+    /// (`Weights::init(graph, seed)`), as everywhere in the repro.
+    pub fn register(&mut self, artifact: Artifact, seed: u64) -> Result<ModelId, ServeError> {
+        if config_hash(&artifact.cfg) != config_hash(&self.cfg) {
+            return Err(ServeError::Engine(EngineError::ConfigMismatch {
+                artifact: format!("{:016x}", config_hash(&artifact.cfg)),
+                engine: format!("{:016x}", config_hash(&self.cfg)),
+            }));
+        }
+        if artifact.output_node.is_none() {
+            return Err(ServeError::Engine(EngineError::NoOutput));
+        }
+        let id = ModelId(self.models.len());
+        self.models.push(RegisteredModel {
+            name: artifact.graph.name.clone(),
+            artifact: Arc::new(artifact),
+            seed,
+        });
+        Ok(id)
+    }
+
+    /// The registered model's display name.
+    pub fn model_name(&self, id: ModelId) -> Option<&str> {
+        self.models.get(id.0).map(|m| m.name.as_str())
+    }
+
+    /// The registered model's artifact (metadata inspection).
+    pub fn artifact(&self, id: ModelId) -> Option<&Arc<Artifact>> {
+        self.models.get(id.0).map(|m| &m.artifact)
+    }
+
+    /// Registered model count.
+    pub fn model_count(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Spin up the worker pool, run `client_fn` on the calling thread
+    /// with a [`Client`] for submissions, then close the queue, drain
+    /// it and join the pool. Every ticket issued inside `client_fn` is
+    /// resolved by the time `run` returns.
+    pub fn run<R>(&self, client_fn: impl FnOnce(&Client<'_>) -> R) -> Result<(R, ServeReport), ServeError> {
+        self.run_inner(VecDeque::new(), client_fn)
+    }
+
+    /// Offline/batch mode: enqueue a complete request list *before*
+    /// the workers start, then drain it through the pool. Responses
+    /// come back in submission order. Unlike streamed [`Server::run`]
+    /// submission, the prefilled queue may exceed `queue_depth` — the
+    /// caller already holds all the inputs, so backpressure serves no
+    /// purpose. Deterministic coalescing makes this the mode the batch
+    /// tests and benches use.
+    pub fn serve_all(
+        &self,
+        requests: Vec<(ModelId, Tensor<f32>)>,
+    ) -> Result<(Vec<Response>, ServeReport), ServeError> {
+        let now = Instant::now();
+        let mut q = VecDeque::with_capacity(requests.len());
+        let mut tickets = Vec::with_capacity(requests.len());
+        for (i, (model, input)) in requests.into_iter().enumerate() {
+            validate_input(&self.models, model, &input)?;
+            let slot = Arc::new(TicketSlot::default());
+            q.push_back(QueuedRequest {
+                model: model.0,
+                seqno: i as u64,
+                input,
+                submitted: now,
+                slot: Arc::clone(&slot),
+            });
+            tickets.push(Ticket { slot, model, request: i as u64 });
+        }
+        let ((), report) = self.run_inner(q, |_| ())?;
+        let responses = tickets.into_iter().map(Ticket::wait).collect::<Result<Vec<_>, _>>()?;
+        Ok((responses, report))
+    }
+
+    /// Cache counters accumulated across runs of this server.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    fn run_inner<R>(
+        &self,
+        prefill: VecDeque<QueuedRequest>,
+        client_fn: impl FnOnce(&Client<'_>) -> R,
+    ) -> Result<(R, ServeReport), ServeError> {
+        if self.models.is_empty() {
+            return Err(ServeError::Worker("no models registered".to_string()));
+        }
+        let scfg = self.serve_cfg;
+        let cache_before = self.cache.stats();
+        let shared = Shared {
+            state: Mutex::new(QueueState {
+                high_water: prefill.len(),
+                next_seqno: prefill.len() as u64,
+                q: prefill,
+                closed: false,
+            }),
+            space: Condvar::new(),
+            work: Condvar::new(),
+            depth: scfg.queue_depth,
+            max_batch: scfg.max_batch,
+        };
+        let ready = ReadySignal::new();
+        let t0 = Instant::now();
+        let n_models = self.models.len();
+
+        let (r, worker_stats) = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..scfg.workers)
+                .map(|w| {
+                    let (shared, ready, cache, cfg, models) =
+                        (&shared, &ready, &self.cache, &self.cfg, &self.models);
+                    s.spawn(move || -> Result<Vec<ModelServeStats>, String> {
+                        let mut engine = Engine::new(cfg.clone());
+                        let mut hs = Vec::with_capacity(models.len());
+                        for m in models {
+                            match cache.load_into(&mut engine, &m.artifact, m.seed) {
+                                Ok(h) => hs.push(h),
+                                Err(e) => {
+                                    let msg = format!("worker {w}: loading {}: {e}", m.name);
+                                    ready.fail(msg.clone());
+                                    return Err(msg);
+                                }
+                            }
+                        }
+                        ready.arrived();
+                        Ok(worker_loop(w, shared, &mut engine, &hs, n_models))
+                    })
+                })
+                .collect();
+
+            if let Some(err) = ready.wait(scfg.workers) {
+                close(&shared);
+                for h in handles {
+                    let _ = h.join().expect("serve worker panicked");
+                }
+                return Err(ServeError::Worker(err));
+            }
+            let client = Client { shared: &shared, models: &self.models };
+            // Close the queue even if the client panics: otherwise the
+            // workers never exit and the scope join deadlocks instead
+            // of propagating the panic.
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| client_fn(&client)));
+            close(&shared);
+            let mut worker_stats = Vec::with_capacity(scfg.workers);
+            for h in handles {
+                worker_stats.push(
+                    h.join().expect("serve worker panicked").map_err(ServeError::Worker)?,
+                );
+            }
+            let r = match r {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            };
+            Ok((r, worker_stats))
+        })?;
+
+        let mut per_model: Vec<ModelServeStats> = self
+            .models
+            .iter()
+            .map(|m| ModelServeStats { name: m.name.clone(), ..Default::default() })
+            .collect();
+        for ws in &worker_stats {
+            for (agg, w) in per_model.iter_mut().zip(ws) {
+                agg.absorb(w);
+            }
+        }
+        let cache_after = self.cache.stats();
+        let report = ServeReport {
+            requests: per_model.iter().map(|m| m.requests).sum(),
+            per_model,
+            wall: t0.elapsed(),
+            workers: scfg.workers,
+            high_water: shared.state.lock().expect("serve queue poisoned").high_water,
+            cache: CacheStats {
+                hits: cache_after.hits - cache_before.hits,
+                misses: cache_after.misses - cache_before.misses,
+            },
+        };
+        Ok((r, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_request(model: usize, seqno: u64) -> QueuedRequest {
+        QueuedRequest {
+            model,
+            seqno,
+            input: Tensor::zeros(&[1]),
+            submitted: Instant::now(),
+            slot: Arc::new(TicketSlot::default()),
+        }
+    }
+
+    #[test]
+    fn take_batch_coalesces_same_model_preserving_order() {
+        // Queue: A B A A B — a max_batch of 3 takes the three A's (in
+        // arrival order) and leaves B B untouched, still in order.
+        let mut q: VecDeque<QueuedRequest> =
+            [(0, 0), (1, 1), (0, 2), (0, 3), (1, 4)]
+                .into_iter()
+                .map(|(m, s)| dummy_request(m, s))
+                .collect();
+        let batch = take_batch(&mut q, 3);
+        assert_eq!(batch.iter().map(|r| (r.model, r.seqno)).collect::<Vec<_>>(), vec![
+            (0, 0),
+            (0, 2),
+            (0, 3)
+        ]);
+        assert_eq!(q.iter().map(|r| (r.model, r.seqno)).collect::<Vec<_>>(), vec![
+            (1, 1),
+            (1, 4)
+        ]);
+        // Next batch is the B's: head-of-line fairness.
+        let batch = take_batch(&mut q, 3);
+        assert_eq!(batch.iter().map(|r| r.seqno).collect::<Vec<_>>(), vec![1, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn take_batch_respects_max_batch() {
+        let mut q: VecDeque<QueuedRequest> =
+            (0..5).map(|s| dummy_request(0, s)).collect();
+        assert_eq!(take_batch(&mut q, 1).len(), 1);
+        assert_eq!(take_batch(&mut q, 4).len(), 4);
+        assert!(take_batch(&mut q, 4).is_empty());
+    }
+
+    #[test]
+    fn serve_config_normalizes_zeroes() {
+        let c = ServeConfig { workers: 0, max_batch: 0, queue_depth: 0 }.normalized();
+        assert_eq!(c, ServeConfig { workers: 1, max_batch: 1, queue_depth: 1 });
+    }
+
+    #[test]
+    fn ticket_resolves_after_delivery() {
+        let slot = Arc::new(TicketSlot::default());
+        let t = Ticket { slot: Arc::clone(&slot), model: ModelId(0), request: 7 };
+        assert_eq!(t.model().index(), 0);
+        assert_eq!(t.request(), 7);
+        deliver(&slot, Err(ServeError::QueueFull));
+        match t.wait() {
+            Err(e) => assert_eq!(e, ServeError::QueueFull),
+            Ok(_) => panic!("expected a delivered error"),
+        }
+    }
+}

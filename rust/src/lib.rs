@@ -17,7 +17,10 @@
 //! * [`engine`] — the run-time half of the build/deploy split: an
 //!   `Engine` owns simulated machines and loaded artifacts, serves
 //!   `infer`/`infer_batch` against any resident model and reports
-//!   per-model/per-engine statistics.
+//!   per-model/per-engine statistics. `engine::serve` layers an
+//!   asynchronous multi-model server on top (bounded request queue,
+//!   worker pool, per-model batch coalescing), with `engine::cache`
+//!   making repeat artifact loads a memcpy of the deployed image.
 //! * [`sim`] — the Snowflake hardware substrate: control pipeline, compute
 //!   clusters, scratchpad buffers, DMA load units, cycle-accurate timing.
 //! * [`isa`] — the 13-instruction custom ISA: encoding, assembly text,

@@ -11,11 +11,14 @@
 //!              `--batch N` streams N frames through one deployment;
 //!              `--tune measured` refines schedules first (then batches, if
 //!              `--batch` was also given)
-//!   serve      load several models into one Engine (multi-model residency)
-//!              and round-robin `--requests N` inferences across them;
-//!              `--models a,b` compiles in-process, `--artifacts x,y` loads
-//!              artifact files; `--check` asserts per-request cycle equality
-//!              with the direct single-shot path
+//!   serve      asynchronous multi-model serving through the worker pool:
+//!              `--workers N` engines each with every model resident,
+//!              `--queue-depth D` bounded submission queue (backpressure),
+//!              `--max-batch B` same-model request coalescing; round-robins
+//!              `--requests N` submissions across the models. `--models a,b`
+//!              compiles in-process, `--artifacts x,y` loads artifact files;
+//!              `--check` replays every request through a sequential Engine
+//!              and asserts per-request cycle/DRAM/output equality
 //!   compile    compile a model, print summary / asm
 //!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
 //!   explain    print the chosen per-layer schedule (tuner debugging)
@@ -28,6 +31,7 @@
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
 use snowflake::coordinator::{driver, report, tune};
+use snowflake::engine::serve::{ServeConfig, Server};
 use snowflake::engine::Engine;
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::asm::disasm_program;
@@ -376,6 +380,7 @@ fn main() {
                  \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
                  \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
                  \x20  --requests N --models a,b --artifacts x,y --check (serve)\n\
+                 \x20  --workers N --max-batch B --queue-depth D (serve)\n\
                  \x20  --threads N (sweep)  --ci-dir DIR (bless-baselines)"
             );
             std::process::exit(2);
@@ -383,34 +388,41 @@ fn main() {
     }
 }
 
-/// `repro serve`: the multi-model Engine path — load several models
-/// into one engine (compiled in-process via `--models`, or prebuilt
-/// files via `--artifacts`), round-robin `--requests` inferences across
-/// them, and report per-model + engine-aggregate statistics. `--check`
-/// re-runs each model through the direct single-shot path and asserts
-/// cycle equality (simulated timing is input-independent), exiting
-/// nonzero on a mismatch — the CI smoke gate.
+/// `repro serve`: the asynchronous multi-model serving path — register
+/// several models with a [`Server`] (compiled in-process via
+/// `--models`, or prebuilt files via `--artifacts`), stream
+/// `--requests` round-robin submissions through the bounded queue and
+/// the `--workers` pool (each worker an engine with every model
+/// resident, loaded through the shared artifact cache), and report
+/// per-request lines plus per-model and aggregate statistics.
+/// `--check` replays every request through a fresh sequential `Engine`
+/// and asserts bit-identical cycles, DRAM traffic and output words,
+/// exiting nonzero on a mismatch — the CI smoke gate that concurrency,
+/// coalescing and the cache perturb nothing simulated.
 fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     let requests = args.opt_usize("requests", 8);
-    let mut engine = Engine::new(cfg.clone());
-    // The engine owns the only Artifact copy; keep just the handle and
-    // a graph clone (cheap) for per-request input synthesis.
-    let mut loaded: Vec<(snowflake::engine::ModelHandle, snowflake::model::graph::Graph)> =
-        Vec::new();
-    let mut admit = |a: Artifact, engine: &mut Engine| {
-        let g = a.graph.clone();
+    let serve_cfg = ServeConfig {
+        workers: args.opt_usize("workers", 4),
+        max_batch: args.opt_usize("max-batch", 4),
+        queue_depth: args.opt_usize("queue-depth", 32),
+    };
+    let mut server = Server::new(cfg.clone(), serve_cfg);
+    let mut ids: Vec<snowflake::engine::serve::ModelId> = Vec::new();
+    // Graph clones are cheap; kept for per-request input synthesis.
+    let mut graphs: Vec<snowflake::model::graph::Graph> = Vec::new();
+    let mut admit = |a: Artifact, server: &mut Server| {
         println!(
             "resident: {:<12} {} instructions, {:.1} MB plan, schedules for {} conv layers",
-            g.name,
+            a.graph.name,
             a.compiled.program.len(),
             a.compiled.plan.mem_words as f64 * 2.0 / 1e6,
             a.schedules.len()
         );
-        let h = engine.load(a, seed).unwrap_or_else(|e| {
+        graphs.push(a.graph.clone());
+        ids.push(server.register(a, seed).unwrap_or_else(|e| {
             eprintln!("{e}");
             std::process::exit(1);
-        });
-        (h, g)
+        }));
     };
     if let Some(paths) = args.opt("artifacts") {
         for p in paths.split(',').filter(|p| !p.is_empty()) {
@@ -418,8 +430,7 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
                 eprintln!("{e}");
                 std::process::exit(1);
             });
-            let entry = admit(a, &mut engine);
-            loaded.push(entry);
+            admit(a, &mut server);
         }
     } else {
         let opts = options(args);
@@ -432,68 +443,104 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
                 eprintln!("{e}");
                 std::process::exit(1);
             });
-            let entry = admit(a, &mut engine);
-            loaded.push(entry);
+            admit(a, &mut server);
         }
     }
-    if loaded.is_empty() {
+    if server.model_count() == 0 {
         eprintln!("serve: no models to load");
         std::process::exit(2);
     }
+    let scfg = server.serve_config();
+    println!(
+        "pool: {} workers, queue depth {}, max batch {}",
+        scfg.workers, scfg.queue_depth, scfg.max_batch
+    );
 
-    let t0 = std::time::Instant::now();
-    for r in 0..requests {
-        let (h, g) = &loaded[r % loaded.len()];
-        let x = synthetic_input(g, seed + r as u64);
-        let inf = engine.infer(*h, &x).unwrap_or_else(|e| {
-            eprintln!("request {r}: {e}");
+    // Stream the request mix through the pool: submission backpressures
+    // on the bounded queue while the workers drain it concurrently.
+    let result = server.run(|client| {
+        let tickets: Vec<_> = (0..requests)
+            .map(|r| {
+                let x = synthetic_input(&graphs[r % graphs.len()], seed + r as u64);
+                client.submit(ids[r % ids.len()], x)
+            })
+            .collect();
+        tickets
+            .into_iter()
+            .map(|t| t.and_then(|t| t.wait()))
+            .collect::<Result<Vec<_>, _>>()
+    });
+    let (responses, report) = match result {
+        Ok((Ok(rs), rep)) => (rs, rep),
+        Ok((Err(e), _)) | Err(e) => {
+            eprintln!("serve: {e}");
             std::process::exit(1);
-        });
+        }
+    };
+    for resp in &responses {
         println!(
-            "request {r:>3} -> {:<12} {:>12} cycles ({:.3} ms sim)",
-            g.name,
-            inf.stats.cycles,
-            inf.stats.time_ms(cfg)
+            "request {:>3} -> {:<12} {:>12} cycles ({:.3} ms sim)  worker {} batch {} wait {:?}",
+            resp.request,
+            server.model_name(resp.model).unwrap_or("?"),
+            resp.stats.cycles,
+            resp.stats.time_ms(cfg),
+            resp.worker,
+            resp.batch_size,
+            resp.queue_wait
         );
     }
 
     println!("\nper-model:");
-    for (h, g) in &loaded {
-        let s = engine.model_stats(*h).expect("model resident");
+    for ms in &report.per_model {
         println!(
-            "  {:<12} {:>4} inferences, {:>14} cycles total, {:.3} ms/inference avg",
-            g.name,
-            s.inferences,
-            s.total_cycles,
-            s.avg_ms(cfg)
+            "  {:<12} {:>4} requests in {:>3} batches (avg {:.2}, max {}), {:.3} ms/inference sim, \
+             avg queue wait {:?}",
+            ms.name,
+            ms.requests,
+            ms.batches,
+            ms.avg_batch(),
+            ms.max_batch,
+            ms.avg_sim_ms(cfg),
+            ms.avg_queue_wait()
         );
     }
-    println!("engine: {}", engine.stats().summary(cfg));
-    println!("served {requests} requests in {:?} host wall", t0.elapsed());
+    println!("serve: {}", report.summary(cfg));
 
     if args.flag("check") {
+        // The sequential oracle: one engine, every request replayed in
+        // submission order. Worker scheduling, coalescing and the
+        // artifact cache must not have perturbed a single simulated
+        // cycle, byte or output word.
+        let mut engine = Engine::new(cfg.clone());
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|id| {
+                let a = (**server.artifact(*id).expect("registered")).clone();
+                engine.load(a, seed).unwrap_or_else(|e| {
+                    eprintln!("check: {e}");
+                    std::process::exit(1);
+                })
+            })
+            .collect();
         let mut bad = 0usize;
-        for (h, g) in &loaded {
-            let s = engine.model_stats(*h).expect("model resident").clone();
-            if s.inferences == 0 {
-                continue;
-            }
-            // One transient artifact clone per model, dropped after the
-            // direct single-shot re-run (run_artifact consumes it).
-            let a = engine.artifact(*h).expect("model resident").clone();
-            let direct = driver::run_artifact(a, seed).unwrap_or_else(|e| {
-                eprintln!("check {}: {e}", g.name);
+        for (r, resp) in responses.iter().enumerate() {
+            let m = r % ids.len();
+            let x = synthetic_input(&graphs[m], seed + r as u64);
+            let want = engine.infer(handles[m], &x).unwrap_or_else(|e| {
+                eprintln!("check request {r}: {e}");
                 std::process::exit(1);
             });
-            if direct.stats.cycles == s.last_cycles {
-                println!(
-                    "check: {:<12} engine cycles == direct single-shot path ({})",
-                    g.name, direct.stats.cycles
-                );
-            } else {
+            if want.stats.cycles != resp.stats.cycles
+                || want.stats.bytes_moved() != resp.stats.bytes_moved()
+                || resp.output.count_diff(&want.output) != 0
+            {
                 eprintln!(
-                    "CHECK FAILED: {} served {} cycles vs direct path {}",
-                    g.name, s.last_cycles, direct.stats.cycles
+                    "CHECK FAILED: request {r} ({}) served {} cycles / {} bytes vs sequential {} / {}",
+                    graphs[m].name,
+                    resp.stats.cycles,
+                    resp.stats.bytes_moved(),
+                    want.stats.cycles,
+                    want.stats.bytes_moved()
                 );
                 bad += 1;
             }
@@ -501,6 +548,10 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
         if bad > 0 {
             std::process::exit(1);
         }
+        println!(
+            "check: all {} requests bit-identical to the sequential engine path",
+            responses.len()
+        );
     }
 }
 

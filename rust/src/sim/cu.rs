@@ -85,6 +85,7 @@ pub struct QueuedOp {
 }
 
 /// One compute unit.
+#[derive(Clone)]
 pub struct Cu {
     pub mbuf: Vec<i16>,
     /// One weight buffer per vMAC.

@@ -73,7 +73,7 @@ pub struct Stream {
 }
 
 /// One load unit: an active stream plus a short descriptor queue.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct LoadUnit {
     pub active: Option<Stream>,
     pub queue: VecDeque<Stream>,
@@ -98,6 +98,7 @@ struct Rates {
 }
 
 /// The DMA subsystem: load units + store drain queue.
+#[derive(Clone)]
 pub struct Dma {
     pub units: Vec<LoadUnit>,
     /// Writeback millibytes waiting to drain to DRAM.

@@ -106,6 +106,14 @@ enum Stall {
 const EVENT_IDLE_CAP: u64 = 1_000_000;
 
 /// The simulated machine.
+///
+/// `Clone` duplicates the *entire* machine state — DRAM, scratchpads,
+/// DMA queues, statistics. The serving runtime's artifact cache
+/// ([`crate::engine::cache::ArtifactCache`]) leans on this: a deployed
+/// machine image (weights arranged, program resident) is built once and
+/// cloned into every worker's engine, turning repeat loads into a
+/// memcpy instead of a re-deployment.
+#[derive(Clone)]
 pub struct Machine {
     pub cfg: SnowflakeConfig,
     pub fmt: QFormat,

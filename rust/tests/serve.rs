@@ -1,0 +1,266 @@
+//! Integration tests for the asynchronous serving runtime
+//! (`engine/serve.rs` + `engine/cache.rs`): determinism under
+//! concurrency, bounded-queue backpressure, batch-coalescing
+//! correctness and the artifact-cache hit path.
+//!
+//! The core contract under test: no matter how many workers race over
+//! the queue, how requests are coalesced into batches, or whether a
+//! worker's engine was loaded from a cached DRAM image, every request's
+//! simulated cycles, DRAM traffic and output words are bit-identical
+//! to a sequential `Engine::infer` of the same model and input.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{Artifact, Compiler};
+use snowflake::engine::serve::{ServeConfig, ServeError, Server};
+use snowflake::engine::Engine;
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::refimpl;
+use snowflake::tensor::Tensor;
+
+fn small_graph(name: &str, out_ch: usize) -> Graph {
+    let mut g = Graph::new(name, Shape::new(16, 10, 10));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    g
+}
+
+fn build(cfg: &SnowflakeConfig, g: &Graph) -> Artifact {
+    Compiler::new(cfg.clone()).build(g).expect("build")
+}
+
+#[test]
+fn concurrent_serving_is_bit_identical_to_sequential() {
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("serve_a", 8);
+    let gb = small_graph("serve_b", 12);
+    let seed = 42;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 4, max_batch: 3, queue_depth: 4 },
+    );
+    let ia = server.register(build(&cfg, &ga), seed).unwrap();
+    let ib = server.register(build(&cfg, &gb), seed).unwrap();
+
+    // Streamed submission: a shuffled-feeling a/b mix with per-request
+    // inputs, waited in submission order.
+    let n = 16usize;
+    let graphs = [&ga, &gb];
+    let pick = |r: usize| if r % 3 == 0 { (ib, 1) } else { (ia, 0) };
+    let (responses, report) = {
+        let (r, report) = server
+            .run(|client| {
+                let tickets: Vec<_> = (0..n)
+                    .map(|r| {
+                        let (id, gi) = pick(r);
+                        client
+                            .submit(id, synthetic_input(graphs[gi], seed + r as u64))
+                            .expect("submit")
+                    })
+                    .collect();
+                tickets
+                    .into_iter()
+                    .map(|t| t.wait())
+                    .collect::<Result<Vec<_>, _>>()
+            })
+            .unwrap();
+        (r.unwrap(), report)
+    };
+    assert_eq!(responses.len(), n);
+    assert_eq!(report.requests, n as u64);
+    assert_eq!(report.workers, 4);
+
+    // Sequential oracle: one engine, same models, same inputs, in
+    // submission order.
+    let mut engine = Engine::new(cfg.clone());
+    let ha = engine.load(build(&cfg, &ga), seed).unwrap();
+    let hb = engine.load(build(&cfg, &gb), seed).unwrap();
+    let wa = Weights::init(&ga, seed);
+    for (r, resp) in responses.iter().enumerate() {
+        let (id, gi) = pick(r);
+        assert_eq!(resp.model, id, "request {r} answered by the wrong model");
+        assert_eq!(resp.request, r as u64, "responses must come back in submission order");
+        let x = synthetic_input(graphs[gi], seed + r as u64);
+        let want = engine.infer(if gi == 0 { ha } else { hb }, &x).unwrap();
+        assert_eq!(
+            resp.stats.comparable(),
+            want.stats.comparable(),
+            "request {r}: simulated stats diverged from the sequential path"
+        );
+        assert_eq!(
+            resp.output.count_diff(&want.output),
+            0,
+            "request {r}: output words diverged from the sequential path"
+        );
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 3);
+        assert!(resp.worker < 4);
+    }
+    // Spot-check one response against the software reference too
+    // (request 1 went to model a with input seed+1).
+    let x1 = synthetic_input(&ga, seed + 1);
+    let want1 = &refimpl::forward_q(&ga, &wa, &x1, snowflake::fixed::Q8_8)[0];
+    assert_eq!(responses[1].output.count_diff(want1), 0);
+
+    // Every worker load beyond the first per model hit the cache.
+    assert_eq!(report.cache.misses, 2);
+    assert_eq!(report.cache.hits, 2 * 3);
+}
+
+#[test]
+fn bounded_queue_backpressures_streamed_submission() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("serve_bp", 8);
+    let seed = 7;
+    let depth = 2;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 1, queue_depth: depth },
+    );
+    let id = server.register(build(&cfg, &g), seed).unwrap();
+    let n = 10usize;
+    let ((), report) = server
+        .run(|client| {
+            let tickets: Vec<_> = (0..n)
+                .map(|r| {
+                    client
+                        .submit(id, synthetic_input(&g, seed + r as u64))
+                        .expect("submit blocks, never fails, while the server is open")
+                })
+                .collect();
+            for t in tickets {
+                t.wait().expect("serve");
+            }
+        })
+        .unwrap();
+    assert_eq!(report.requests, n as u64);
+    // The bounded-queue invariant: blocking submission can never stack
+    // more than `queue_depth` requests.
+    assert!(
+        report.high_water <= depth,
+        "queue reached {} with depth {depth}",
+        report.high_water
+    );
+    assert_eq!(report.per_model[0].max_batch, 1, "max_batch 1 must disable coalescing");
+}
+
+#[test]
+fn coalescing_batches_same_model_requests_deterministically() {
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("serve_ca", 8);
+    let gb = small_graph("serve_cb", 12);
+    let seed = 5;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 3, queue_depth: 8 },
+    );
+    let ia = server.register(build(&cfg, &ga), seed).unwrap();
+    let ib = server.register(build(&cfg, &gb), seed).unwrap();
+
+    // Prefilled queue A B A A B with one worker: the head A coalesces
+    // the later A's past the B (up to max_batch 3), then the B's ride
+    // together — fully deterministic.
+    let order = [(ia, &ga), (ib, &gb), (ia, &ga), (ia, &ga), (ib, &gb)];
+    let requests: Vec<_> = order
+        .iter()
+        .enumerate()
+        .map(|(r, (id, g))| (*id, synthetic_input(g, seed + r as u64)))
+        .collect();
+    let (responses, report) = server.serve_all(requests).unwrap();
+    assert_eq!(responses.len(), 5);
+    for (r, resp) in responses.iter().enumerate() {
+        assert_eq!(resp.request, r as u64);
+        assert_eq!(resp.worker, 0);
+    }
+    // Requests 0, 2, 3 (model a) formed one batch of 3; 1, 4 (model b)
+    // one batch of 2.
+    for r in [0, 2, 3] {
+        assert_eq!(responses[r].batch_size, 3, "request {r}");
+        assert_eq!(responses[r].model, ia);
+    }
+    for r in [1, 4] {
+        assert_eq!(responses[r].batch_size, 2, "request {r}");
+        assert_eq!(responses[r].model, ib);
+    }
+    let (sa, sb) = (&report.per_model[0], &report.per_model[1]);
+    assert_eq!((sa.requests, sa.batches, sa.max_batch), (3, 1, 3));
+    assert_eq!((sb.requests, sb.batches, sb.max_batch), (2, 1, 2));
+
+    // Coalesced batches must still produce sequential-exact results.
+    let mut engine = Engine::new(cfg.clone());
+    let ha = engine.load(build(&cfg, &ga), seed).unwrap();
+    let hb = engine.load(build(&cfg, &gb), seed).unwrap();
+    for (r, (id, g)) in order.iter().enumerate() {
+        let x = synthetic_input(g, seed + r as u64);
+        let want = engine.infer(if *id == ia { ha } else { hb }, &x).unwrap();
+        assert_eq!(responses[r].stats.comparable(), want.stats.comparable(), "request {r}");
+        assert_eq!(responses[r].output.count_diff(&want.output), 0, "request {r}");
+    }
+}
+
+#[test]
+fn artifact_cache_deduplicates_worker_loads() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("serve_cache", 8);
+    let seed = 3;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 3, max_batch: 2, queue_depth: 4 },
+    );
+    // The same artifact registered twice (same fingerprint, same seed):
+    // only the very first worker load anywhere deploys.
+    let id1 = server.register(build(&cfg, &g), seed).unwrap();
+    let id2 = server.register(build(&cfg, &g), seed).unwrap();
+    let requests = (0..6)
+        .map(|r| {
+            (
+                if r % 2 == 0 { id1 } else { id2 },
+                synthetic_input(&g, seed + r as u64),
+            )
+        })
+        .collect();
+    let (responses, report) = server.serve_all(requests).unwrap();
+    assert_eq!(responses.len(), 6);
+    // 3 workers x 2 registrations = 6 loads; 1 deploy, 5 image clones.
+    assert_eq!(report.cache.misses, 1, "identical artifacts must share one deployment");
+    assert_eq!(report.cache.hits, 5);
+    // Both registrations serve identical simulated results.
+    let mut engine = Engine::new(cfg.clone());
+    let h = engine.load(build(&cfg, &g), seed).unwrap();
+    for (r, resp) in responses.iter().enumerate() {
+        let x = synthetic_input(&g, seed + r as u64);
+        let want = engine.infer(h, &x).unwrap();
+        assert_eq!(resp.stats.comparable(), want.stats.comparable(), "request {r}");
+        assert_eq!(resp.output.count_diff(&want.output), 0, "request {r}");
+    }
+}
+
+#[test]
+fn submission_errors_are_typed() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("serve_err", 8);
+    let mut server =
+        Server::new(cfg.clone(), ServeConfig { workers: 1, max_batch: 2, queue_depth: 2 });
+    let id = server.register(build(&cfg, &g), 1).unwrap();
+
+    // Wrong input shape: rejected at submission, not at serve time.
+    let ((), _report) = server
+        .run(|client| {
+            let bad = Tensor::<f32>::zeros(&[3, 4, 4]);
+            match client.submit(id, bad) {
+                Err(ServeError::BadInput(_)) => {}
+                other => panic!("expected BadInput, got {other:?}", other = other.err()),
+            }
+        })
+        .unwrap();
+
+    // Config mismatch: rejected at registration.
+    let other_cfg = SnowflakeConfig { dma_setup_cycles: 32, ..cfg.clone() };
+    let foreign = Compiler::new(other_cfg).build(&g).unwrap();
+    match server.register(foreign, 1) {
+        Err(ServeError::Engine(_)) => {}
+        other => panic!("expected a config-mismatch error, got {other:?}", other = other.err()),
+    }
+}
