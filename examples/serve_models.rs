@@ -23,6 +23,7 @@ fn main() {
         workers: args.opt_usize("workers", 4),
         max_batch: args.opt_usize("max-batch", 3),
         queue_depth: args.opt_usize("queue-depth", 8),
+        cache_cap: args.opt_usize("cache-cap", 0),
     };
 
     let cfg = SnowflakeConfig::default();

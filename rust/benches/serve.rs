@@ -57,7 +57,7 @@ fn main() {
     for workers in [1, workers_max] {
         let mut server = Server::new(
             cfg.clone(),
-            ServeConfig { workers, max_batch: 3, queue_depth: REQUESTS },
+            ServeConfig { workers, max_batch: 3, queue_depth: REQUESTS, cache_cap: 0 },
         );
         let ids: Vec<_> = artifacts
             .iter()

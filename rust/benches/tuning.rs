@@ -1,22 +1,32 @@
 //! Bench + CI gate for cost-model-driven schedule tuning.
 //!
-//! Three checks, all on AlexNetOWT and ResNet18 end-to-end (FC
-//! excluded, as Table 2):
+//! Four checks, on AlexNetOWT and ResNet18 end-to-end (FC excluded, as
+//! Table 2) plus the banked-rotation scenario:
 //!
 //! 1. **Prediction error**: the analytical model's predicted cycles per
 //!    conv layer must stay within `cost::MODEL_ERROR_BOUND` of the
 //!    event core (either direction), layer by layer.
 //! 2. **Tuning quality**: measured-tuned schedules must never be slower
-//!    than the seed heuristic (the tuner includes the heuristic
-//!    configuration among its trials, so a violation is a code bug).
+//!    than the seed heuristic, the analytical search *or* the best
+//!    forced-Kloop configuration (the tuner seeds its incumbent with
+//!    all three, so a violation is a code bug).
 //! 3. **Absolute regression gate**: when `ci/schedule_baseline.json`
 //!    carries blessed cycle counts (deterministic; regenerate with
 //!    `repro bless-baselines`), tuned cycles exceeding the baseline
 //!    fail the run.
+//! 4. **Rotation single-pass kernels**: on the bandwidth-starved
+//!    AlexNet-conv1 scenario the tuner must pick the banked-rotation
+//!    skeleton, the simulated kernel-stream DRAM reads must equal
+//!    exactly one pass (`weights × word_bytes`), and the layer must
+//!    beat its forced-Kloop compile on total cycles.
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::cost::MODEL_ERROR_BOUND;
-use snowflake::coordinator::report;
+use snowflake::compiler::decide::OpPlan;
+use snowflake::compiler::{CompileOptions, LoopOrder, TuneMode};
+use snowflake::coordinator::{driver, report};
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
 use snowflake::util::json::Json;
 
 /// The blessed baseline: distinguish "absent" (gate legitimately
@@ -38,6 +48,62 @@ fn baseline() -> Baseline {
             Err(e) => Baseline::Corrupt(format!("{path}: {e}")),
         },
     }
+}
+
+/// The banked-rotation acceptance scenario (ISSUE 5), shared with
+/// `tests/rotation.rs`: AlexNet conv1 (3 forced map tiles > 2 MBuf
+/// banks) on a bandwidth-starved board variant whose WBuf holds every
+/// kernel group in one region. The tuned schedule must pick the
+/// rotation skeleton, kernel DRAM reads must collapse to a single pass,
+/// and the layer must beat the forced-Kloop compile on cycles.
+fn rotation_gate() -> usize {
+    let cfg = SnowflakeConfig {
+        wbuf_bytes: 64 * 1024,
+        axi_bytes_per_cycle: 1.4,
+        ..SnowflakeConfig::default()
+    };
+    let mut g = Graph::new("alexnet_conv1_rot", Shape::new(3, 224, 224));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 3, out_ch: 64, kh: 11, kw: 11, stride: 4, pad: 2, relu: true },
+        "conv1",
+    );
+    let tuned = driver::run_model(&g, &cfg, &CompileOptions::default(), 42).expect("tuned run");
+    let OpPlan::Conv(d) = &tuned.compiled.plan.layers[0].decision else { unreachable!() };
+    let mut failures = 0usize;
+    if d.order != LoopOrder::MloopRot || d.n_tiles <= cfg.mbuf_banks {
+        eprintln!(
+            "ROTATION GATE: tuner chose {:?} with {} tiles (wanted MloopRot, > {} tiles)",
+            d.order, d.n_tiles, cfg.mbuf_banks
+        );
+        failures += 1;
+    }
+    let single_pass = (d.k_groups * 4 * d.kernel_words * cfg.word_bytes) as u64;
+    if tuned.stats.bytes_wbuf != single_pass {
+        eprintln!(
+            "ROTATION GATE: kernel stream read {} bytes, single pass is {single_pass}",
+            tuned.stats.bytes_wbuf
+        );
+        failures += 1;
+    }
+    let kloop_opts = CompileOptions {
+        force_loop_order: Some(LoopOrder::Kloop),
+        tune: TuneMode::Analytical,
+        ..Default::default()
+    };
+    let kloop = driver::run_model(&g, &cfg, &kloop_opts, 42).expect("kloop run");
+    println!(
+        "rotation gate: tuned (MloopRot) {} cycles / {} kernel bytes vs forced-Kloop {} cycles \
+         / {} kernel bytes",
+        tuned.stats.cycles, tuned.stats.bytes_wbuf, kloop.stats.cycles, kloop.stats.bytes_wbuf
+    );
+    if tuned.stats.cycles >= kloop.stats.cycles {
+        eprintln!(
+            "ROTATION GATE: rotation {} cycles not below forced-Kloop {}",
+            tuned.stats.cycles, kloop.stats.cycles
+        );
+        failures += 1;
+    }
+    failures
 }
 
 fn main() {
@@ -93,19 +159,29 @@ fn main() {
         let h = cycles_of(m, "heuristic");
         let t = cycles_of(m, "measured");
         let a = cycles_of(m, "cost-model");
+        let fk = cycles_of(m, "forced-kloop");
         println!(
-            "{m}: heuristic {h} | cost-model {a} ({:+.2}%) | measured {t} ({:+.2}%)",
+            "{m}: heuristic {h} | cost-model {a} ({:+.2}%) | forced-kloop {fk} ({:+.2}%) | \
+             measured {t} ({:+.2}%)",
             (a as f64 / h as f64 - 1.0) * 100.0,
+            (fk as f64 / h as f64 - 1.0) * 100.0,
             (t as f64 / h as f64 - 1.0) * 100.0
         );
-        if t > h {
+        // The tuner seeds its incumbent with all three baselines, so
+        // tuned must be <= min(heuristic, analytical, forced-Kloop).
+        let floor = h.min(a).min(fk);
+        if t > floor {
             eprintln!(
-                "TUNING REGRESSION: {m} measured-tuned {t} cycles slower than the seed \
-                 heuristic {h} — the tuner must never lose to a configuration it trials"
+                "TUNING REGRESSION: {m} measured-tuned {t} cycles slower than the best \
+                 baseline {floor} (heuristic {h} / cost-model {a} / forced-kloop {fk}) — \
+                 the tuner must never lose to a configuration it trials"
             );
             failures += 1;
         }
     }
+
+    // ---- 2b. banked rotation reads the kernel stream exactly once ----
+    failures += rotation_gate();
 
     // ---- 3. absolute gate vs the blessed baseline --------------------
     match base {

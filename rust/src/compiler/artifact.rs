@@ -51,7 +51,13 @@ use std::collections::BTreeMap;
 
 /// On-disk artifact format version. Bump on any incompatible change to
 /// the serialized layout; loaders hard-error on mismatch.
-pub const FORMAT_VERSION: u64 = 1;
+///
+/// v2 (ISSUE 5): the banked-rotation loop order (`"mloop-rot"`) joined
+/// the `Schedule`/`ConvPlan` codecs. v1 readers would reject the new
+/// order string as corrupt, and v1 artifacts predate the rotation
+/// skeleton's cost model, so both directions hard-error on the version
+/// instead of guessing.
+pub const FORMAT_VERSION: u64 = 2;
 
 /// Magic tag identifying an artifact file.
 pub const FORMAT_MAGIC: &str = "snowflake-artifact";
@@ -615,6 +621,7 @@ fn order_str(o: LoopOrder) -> &'static str {
     match o {
         LoopOrder::Mloop => "mloop",
         LoopOrder::Kloop => "kloop",
+        LoopOrder::MloopRot => "mloop-rot",
     }
 }
 
@@ -622,6 +629,9 @@ fn order_from(j: &Json) -> Result<LoopOrder, ArtifactError> {
     match j.as_str() {
         Some("mloop") => Ok(LoopOrder::Mloop),
         Some("kloop") => Ok(LoopOrder::Kloop),
+        Some("mloop-rot") => Ok(LoopOrder::MloopRot),
+        // Any other order came from a different (future) format or a
+        // damaged file — typed rejection, never a silent Kloop.
         _ => Err(corrupt("unknown loop order")),
     }
 }
@@ -1089,6 +1099,32 @@ mod tests {
             err,
             ArtifactError::FormatVersion { found: 99, expected: FORMAT_VERSION }
         );
+    }
+
+    #[test]
+    fn v1_artifacts_rejected_with_typed_error() {
+        // Pre-rotation artifacts (format v1) predate the `mloop-rot`
+        // order and its cost model: loading one must be a typed
+        // FormatVersion error, not a best-effort parse.
+        let a = build_small();
+        let mut j = a.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::num(1.0));
+        }
+        let err = Artifact::from_json(&j).unwrap_err();
+        assert_eq!(err, ArtifactError::FormatVersion { found: 1, expected: FORMAT_VERSION });
+    }
+
+    #[test]
+    fn unknown_loop_order_rejected_on_load() {
+        assert!(order_from(&Json::str("mloop")).is_ok());
+        assert!(order_from(&Json::str("mloop-rot")).is_ok());
+        let err = order_from(&Json::str("zloop")).unwrap_err();
+        assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+        // Round-trip of every order string.
+        for o in [LoopOrder::Kloop, LoopOrder::Mloop, LoopOrder::MloopRot] {
+            assert_eq!(order_from(&Json::str(order_str(o))).unwrap(), o);
+        }
     }
 
     #[test]

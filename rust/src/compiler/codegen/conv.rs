@@ -1,4 +1,4 @@
-//! Convolution code generation (the two loop skeletons of Fig. 3).
+//! Convolution code generation (the loop skeletons of Fig. 3).
 //!
 //! **Kloop** (maps resident per tile): per map tile, stream kernel
 //! groups through the double-buffered weight buffers; inside, Y and X
@@ -16,14 +16,34 @@
 //! schedule tuner ([`crate::compiler::cost`]) picks between the two per
 //! layer.
 //!
-//! The two emitters deliberately share the window walk and the WBuf
+//! **Mloop-rotation** (banked rotation, ISSUE 5): extends the kernel-
+//! traffic elimination to layers with *more* tiles than MBuf banks.
+//! Kernel **sets** — as many groups as fit one WBuf region
+//! ([`crate::compiler::cost::rot_sets`]) — are loaded once per *pass*;
+//! inside a pass the tile walk streams each map strip through a
+//! rotating bank: at global step `s = pass·n_tiles + t` the strip of
+//! tile `t` computes from bank `s % mbuf_banks` while the strip needed
+//! `mbuf_banks − 1` steps later prefetches into the bank just vacated.
+//! The bank phase `(pass·n_tiles) % mbuf_banks` is static per pass
+//! (passes are unrolled into blocks), so the rotation needs no runtime
+//! modulo. The DMA-completion guard before each strip's first window is
+//! the §5.2 scoreboard itself: the prefetch LD is issued *before* the
+//! tile's MACs, so every MAC observes the fill's generation at dispatch
+//! and the CU stalls until the strip has landed; conversely the LD
+//! issue stage is interlocked on queued readers of the bank it
+//! overwrites, so a fill can never land under a not-yet-consumed
+//! window. Kernels are read exactly once for any tile count; the price
+//! is one map-strip pass per kernel set.
+//!
+//! The emitters deliberately share the window walk and the WBuf
 //! prefetch protocol *textually* (the Y/X loop bodies and the
 //! Muli/Add/Ld/Mov toggle sequence are the same instructions): the
 //! `counted_loop` `FnOnce` nesting makes a parameterized shared helper
 //! more tangled than the duplication it removes. Any edit to one
-//! skeleton's window walk or prefetch must be mirrored in the other —
-//! `tests/sim_equivalence.rs` and `tests/compile_sim.rs` pin both
-//! against the per-cycle core and the reference implementation.
+//! skeleton's window walk or prefetch must be mirrored in the others —
+//! `tests/sim_equivalence.rs`, `tests/compile_sim.rs` and
+//! `tests/rotation.rs` pin all three against the per-cycle core and the
+//! reference implementation.
 
 use super::emit::*;
 use crate::compiler::balance::{StreamClass, UnitAllocator};
@@ -45,13 +65,22 @@ pub struct ConvCtx<'a> {
     pub bias_addr: usize,
 }
 
-/// Emit the per-CU maps strip loads for one tile (split per the
-/// layer's tuned schedule).
-fn emit_maps_loads(e: &mut Emitter, ctx: &ConvCtx, tile: &MapTile, alloc: &mut UnitAllocator) {
+/// Emit the per-CU maps strip loads for one tile into MBuf bank `bank`
+/// (split per the layer's tuned schedule). The Kloop/Mloop skeletons
+/// pass `tile.bank` (so their emission is unchanged); the banked-
+/// rotation skeleton decouples the bank from the tile to rotate strips
+/// through the banks with a per-pass phase.
+fn emit_maps_loads(
+    e: &mut Emitter,
+    ctx: &ConvCtx,
+    tile: &MapTile,
+    bank: usize,
+    alloc: &mut UnitAllocator,
+) {
     let d = ctx.d;
     let strip_rows = tile.in_rows(d.kh, d.stride) + crate::compiler::decide::CONV_SPILL_ROWS;
     let strip_words = strip_rows * ctx.in_cv.row_words();
-    let bank_base = tile.bank * ctx.cfg.mbuf_bank_words();
+    let bank_base = bank * ctx.cfg.mbuf_bank_words();
     let split = d.split.max(1).min(strip_words.div_ceil(64));
     for cu in 0..ctx.cfg.n_cus {
         // First canvas row of this CU's strip: output row oy maps to
@@ -68,7 +97,7 @@ fn emit_maps_loads(e: &mut Emitter, ctx: &ConvCtx, tile: &MapTile, alloc: &mut U
             e.movi(R_T1, len as i64);
             e.c(
                 Instr::Ld {
-                    target: LdTarget::MBuf { cu: cu as u8, bank: tile.bank as u8 },
+                    target: LdTarget::MBuf { cu: cu as u8, bank: bank as u8 },
                     broadcast: false,
                     unit,
                     rd: R_LDTMP,
@@ -184,6 +213,7 @@ pub fn emit_conv(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
     match ctx.d.order {
         LoopOrder::Kloop => emit_conv_kloop(ctx, alloc),
         LoopOrder::Mloop => emit_conv_mloop(ctx, alloc),
+        LoopOrder::MloopRot => emit_conv_mloop_rot(ctx, alloc),
     }
 }
 
@@ -240,7 +270,7 @@ fn emit_conv_kloop(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
     let row_words_out = ctx.out_cv.row_words() as i64;
     emit_conv_prologue(&mut e, ctx, alloc);
     // Maps strips for tile 0.
-    emit_maps_loads(&mut e, ctx, &tiles[0], alloc);
+    emit_maps_loads(&mut e, ctx, &tiles[0], tiles[0].bank, alloc);
     blocks.push(e.prog);
 
     // ------------------------- tiles ----------------------------------
@@ -248,7 +278,7 @@ fn emit_conv_kloop(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
         let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
         // Prefetch next tile's maps into the other bank.
         if t + 1 < tiles.len() {
-            emit_maps_loads(&mut e, ctx, &tiles[t + 1], alloc);
+            emit_maps_loads(&mut e, ctx, &tiles[t + 1], tiles[t + 1].bank, alloc);
         }
         if d.has_bypass {
             emit_bypass_loads(&mut e, ctx, tile, alloc);
@@ -356,7 +386,7 @@ fn emit_conv_mloop(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
     let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
     emit_conv_prologue(&mut e, ctx, alloc);
     for tile in &tiles {
-        emit_maps_loads(&mut e, ctx, tile, alloc);
+        emit_maps_loads(&mut e, ctx, tile, tile.bank, alloc);
     }
     blocks.push(e.prog);
 
@@ -429,5 +459,140 @@ fn emit_conv_mloop(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
         },
     );
     blocks.push(e.prog);
+    blocks
+}
+
+/// The banked-rotation Mloop skeleton: one block per kernel-set *pass*.
+/// Each pass loads its set — [`cost::rot_sets`] groups, each group's 4
+/// kernels at `region_base + g·kernel_words` of every vMAC WBuf — with
+/// a counted load loop, then walks the tiles. At global step
+/// `s = pass·n_tiles + t` the strip of tile `t` is resident in bank
+/// `s % mbuf_banks`; the strip needed `mbuf_banks − 1` steps later
+/// (tile `(t + mbuf_banks − 1) % n_tiles`, same data every pass)
+/// prefetches into bank `(s + mbuf_banks − 1) % mbuf_banks` — the bank
+/// the previous step just vacated. All banks are static per (pass,
+/// tile) because passes are unrolled, so the phase needs no runtime
+/// modulo; the final `mbuf_banks − 1` steps of the last pass emit no
+/// prefetch, keeping map traffic at exactly `passes × maps_once`.
+///
+/// Synchronization is entirely the §5.2 scoreboard/interlock protocol
+/// shared with the other skeletons: a strip prefetch LD stalls at issue
+/// while queued MACs still reference its target bank (it overwrites the
+/// vacated strip only after every reader consumed it), and the tile's
+/// MACs — dispatched *after* the LD that staged their strip — observe
+/// its fill generation and wait on the CU until the DMA lands. Kernel
+/// sets alternate WBuf regions across passes (`dbuf_w` guarantees a set
+/// fits one region, never straddling the region scoreboard), so a set
+/// load streams while the previous pass's tail still computes.
+fn emit_conv_mloop_rot(ctx: &ConvCtx, alloc: &mut UnitAllocator) -> Vec<Program> {
+    let cfg = ctx.cfg;
+    let d = ctx.d;
+    debug_assert!(!d.has_bypass, "Mloop-rotation skeleton cannot stage bypass strips");
+    debug_assert!(d.dbuf_w, "Mloop-rotation needs the kernel group inside a WBuf region");
+    debug_assert!(cfg.mbuf_banks >= 2, "Mloop-rotation needs banks to rotate through");
+    let tiles = map_tiles(d.h_out, d.rows_per_cu, cfg);
+    let n_tiles = tiles.len();
+    let banks = cfg.mbuf_banks;
+    let region_words = cfg.wbuf_region_words();
+    let (groups_per_set, passes) =
+        crate::compiler::cost::rot_sets(d.kernel_words, d.k_groups, cfg);
+    let total_steps = passes * n_tiles;
+    let row_words_out = ctx.out_cv.row_words() as i64;
+    let col_off = ((ctx.in_cv.mp - d.pad) * d.c_pad_in) as i64;
+    let mut blocks = Vec::new();
+
+    // ---------------- prologue: constants + lead strips ---------------
+    // Stage the strips of global steps 0..banks−1 (the rotation's
+    // prefetch distance); every later strip is prefetched from inside
+    // the tile walk, one step ahead per vacated bank.
+    let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+    emit_conv_prologue(&mut e, ctx, alloc);
+    for s in 0..(banks - 1).min(total_steps) {
+        emit_maps_loads(&mut e, ctx, &tiles[s % n_tiles], s % banks, alloc);
+    }
+    blocks.push(e.prog);
+
+    // ---------------- one block per kernel-set pass --------------------
+    for p in 0..passes {
+        let set_base = p * groups_per_set;
+        let set_groups = groups_per_set.min(d.k_groups - set_base);
+        // Alternate WBuf regions across passes so a set load can stream
+        // under the previous pass's tail compute; a single-set layer
+        // keeps everything in region 0.
+        let region_base = if passes > 1 { (p % 2) * region_words } else { 0 };
+        let mut e = Emitter::new(cfg, ctx.opts.smart_delay_slots);
+
+        // Kernel set p: `set_groups` groups, group g of the set landing
+        // at region_base + g·kernel_words in each vMAC's WBuf.
+        e.movi(R_WREG, region_base as i64);
+        e.movi(R_KMEM, (ctx.weights_addr + set_base * 4 * d.kernel_words) as i64);
+        e.counted_loop(
+            R_XC,
+            R_XL,
+            set_groups,
+            |e| {
+                e.e(Instr::Add { rd: R_LDTMP, rs1: R_KMEM, rs2: 0 });
+                emit_kernel_group_loads(e, ctx, R_WREG, alloc);
+                e.e(Instr::Mov { rd: R_NOP, rs1: R_KW, sh: 2 });
+                e.e(Instr::Add { rd: R_KMEM, rs1: R_KMEM, rs2: R_NOP });
+            },
+            |e, _| {
+                e.e(Instr::Add { rd: R_WREG, rs1: R_WREG, rs2: R_KW });
+            },
+        );
+
+        // The tile walk: compute step s from bank s % banks, prefetch
+        // step s + banks − 1 into the bank just vacated.
+        for (t, tile) in tiles.iter().enumerate() {
+            let s = p * n_tiles + t;
+            let pf = s + banks - 1;
+            if pf < total_steps {
+                emit_maps_loads(&mut e, ctx, &tiles[pf % n_tiles], pf % banks, alloc);
+            }
+            let bank_base = ((s % banks) * cfg.mbuf_bank_words()) as i64;
+            e.movi(R_OUTBASE, ctx.out_cv.addr_u(0, tile.oy0, 0) as i64);
+            e.movi(31, tile.rows_per_cu as i64 * row_words_out); // per-CU row offset
+            e.movi(R_BIAS, (set_base * 4) as i64);
+            e.movi(R_WREG, region_base as i64);
+            e.counted_loop(
+                R_KC,
+                R_KL,
+                set_groups,
+                |e| {
+                    e.e(Instr::Vmov { sel: VmovSel::Bias, rs1: R_BIAS, wide: false });
+                    e.movi(R_MROW, bank_base);
+                    e.e(Instr::Add { rd: R_T1, rs1: R_OUTBASE, rs2: R_BIAS });
+                    e.counted_loop(
+                        R_YC,
+                        R_YL,
+                        tile.rows_per_cu,
+                        |e| {
+                            e.addi(R_MWIN, R_MROW, col_off);
+                            e.e(Instr::Add { rd: R_OUT, rs1: R_T1, rs2: 0 });
+                            e.counted_loop(
+                                R_XC,
+                                R_XL,
+                                d.w_out,
+                                |e| emit_window(e, ctx),
+                                |e, _| {
+                                    e.e(Instr::Add { rd: R_MWIN, rs1: R_MWIN, rs2: R_XADV });
+                                    e.e(Instr::Add { rd: R_OUT, rs1: R_OUT, rs2: R_CPO });
+                                },
+                            );
+                        },
+                        |e, _| {
+                            e.e(Instr::Add { rd: R_MROW, rs1: R_MROW, rs2: R_YADV });
+                            e.e(Instr::Add { rd: R_T1, rs1: R_T1, rs2: R_ROWW_OUT });
+                        },
+                    );
+                },
+                |e, _| {
+                    e.e(Instr::Addi { rd: R_BIAS, rs1: R_BIAS, imm: 4 });
+                    e.e(Instr::Add { rd: R_WREG, rs1: R_WREG, rs2: R_KW });
+                },
+            );
+        }
+        blocks.push(e.prog);
+    }
     blocks
 }

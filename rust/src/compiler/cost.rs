@@ -32,18 +32,45 @@
 //!
 //! The layer estimate is `startup + max(compute, issue, dma) + drain`:
 //! double-buffered prefetch overlaps steady-state phases, so the slowest
-//! resource governs. **Deliberately ignored**: icache reload stalls,
-//! RAW/queue-depth issue stalls, scoreboard wait tails at tile
-//! boundaries, and DMA quota re-sharing as streams come and go. The
-//! documented error bound is a factor of `MODEL_ERROR_BOUND` per conv
-//! layer versus the event core (typically well inside ±30%;
-//! `benches/tuning.rs` asserts the bound per layer).
+//! resource governs. The model also charges two second-order effects the
+//! seed version ignored (ROADMAP follow-ons, ISSUE 5): **icache reload
+//! traffic** — every emitted block costs one bank image
+//! (`icache_bank_instrs × 2` words) of off-chip reads, which is what
+//! dominates very small layers — and the **cross-layer Greedy byte
+//! memory**: the allocator balances whole streams against byte counters
+//! carried across layer boundaries, so a unit can lead or lag its fair
+//! share by about half the largest single stream; the Greedy per-unit
+//! estimate adds that skew instead of assuming perfect division.
+//! **Still deliberately ignored**: RAW/queue-depth issue stalls,
+//! scoreboard wait tails at tile boundaries, and DMA quota re-sharing
+//! as streams come and go. The documented error bound is a factor of
+//! `MODEL_ERROR_BOUND` per conv layer versus the event core (typically
+//! well inside ±30%; `benches/tuning.rs` asserts the bound per layer,
+//! and `repro tune` re-checks it on every invocation).
+//!
+//! ## The banked-rotation Mloop (ISSUE 5)
+//!
+//! The resident Mloop skeleton requires every map strip in its own MBuf
+//! bank (`n_tiles ≤ mbuf_banks`), so the tall early layers fall back to
+//! Kloop and re-stream the kernels once per tile. [`LoopOrder::MloopRot`]
+//! removes that cap: kernel *sets* — as many groups as fit one WBuf
+//! region ([`rot_sets`]) — stay resident while the map strips rotate
+//! through the banks with a `mbuf_banks − 1`-step prefetch, so the
+//! kernel stream is still read **exactly once** for any tile count. The
+//! price is one pass over the map strips per kernel set:
+//! `maps_reread = maps_once × (passes − 1)`. The search therefore picks
+//! rotation exactly when `kernels_once × (n_tiles − 1) > maps_reread`
+//! (plus the smaller startup: only `mbuf_banks − 1` strips stage before
+//! the first window, versus all of them for the resident skeleton). In
+//! the single-set case (`passes == 1`) rotation strictly dominates
+//! Kloop on traffic for every multi-tile layer.
 //!
 //! ## The candidate space
 //!
 //! * loop order: Kloop always; Mloop only where the maps-resident
 //!   skeleton exists (no fused bypass, `2 ≤ n_tiles ≤ mbuf_banks`, the
-//!   unrolled tile loop fits an icache bank block).
+//!   unrolled tile loop fits an icache bank block); MloopRot wherever
+//!   the rotation skeleton is emittable ([`mloop_rot_viable`]).
 //! * `rows_per_cu`: 1..=8, the capacity cap and cap−1, and the heights
 //!   that give exactly 1..=4 tiles — a bounded, deduplicated set.
 //! * maps split: {1, 2, 4, 8} (∪ the user's split) under Greedy.
@@ -172,15 +199,75 @@ pub fn mloop_viable(g: &ConvGeom, cfg: &SnowflakeConfig, rows_per_cu: usize) -> 
         && mloop_block_instrs(g, n_tiles) <= mloop_block_budget(cfg)
 }
 
+/// Kernel-set residency of the banked-rotation skeleton:
+/// `(groups_per_set, passes)`. A set is as many kernel groups as fit
+/// one WBuf region — sets never straddle the region boundary, because
+/// the simulator's scoreboard tracks fills per region and a straddling
+/// fill would leave its tail unguarded. `passes` map-strip passes cover
+/// all `k_groups` (each group is loaded in exactly one set, so the
+/// kernel stream is read once regardless of the pass count).
+pub fn rot_sets(kernel_words: usize, k_groups: usize, cfg: &SnowflakeConfig) -> (usize, usize) {
+    let per = (cfg.wbuf_region_words() / kernel_words.max(1)).max(1).min(k_groups.max(1));
+    (per, k_groups.max(1).div_ceil(per))
+}
+
+/// Maps-strip pieces one per-CU strip load is split into (mirrors
+/// `codegen/conv.rs::emit_maps_loads`).
+fn strip_pieces(strip_words: usize, split: usize) -> usize {
+    split.max(1).min(strip_words.div_ceil(64)).max(1)
+}
+
+/// Static instruction estimate of one banked-rotation *pass* block
+/// (kernel-set load loop + the unrolled tile walk, each tile carrying
+/// its strip prefetch and the resident-group/row/column loop nest).
+/// Deliberately an over-estimate of the real emission (wide-immediate
+/// movi worst cases included) so a schedule the tuner accepts can never
+/// overflow its icache bank at codegen time; `tests/rotation.rs` pins
+/// the bound against actual emitted blocks.
+fn mloop_rot_block_instrs(g: &ConvGeom, cfg: &SnowflakeConfig, rows_per_cu: usize, split: usize) -> usize {
+    let rows_list = tile_rows(g.h_out, rows_per_cu, cfg.n_cus);
+    let strip = ((rows_per_cu.max(1) - 1) * g.stride + g.kh + CONV_SPILL_ROWS) * g.row_words_in;
+    let pieces = strip_pieces(strip, split);
+    30 + rows_list.len() * (window_instrs(g) + 50 + cfg.n_cus * pieces * 6)
+}
+
+/// Whether the banked-rotation Mloop skeleton can serve this layer at
+/// the given tile height and maps-split: no fused bypass, at least two
+/// banks to rotate through, at least two tiles (a single tile is the
+/// degenerate resident case), the kernel group inside a WBuf region
+/// (`dbuf_w`, so a whole set fits without straddling regions), and each
+/// pass block inside one icache bank.
+pub fn mloop_rot_viable(
+    g: &ConvGeom,
+    cfg: &SnowflakeConfig,
+    rows_per_cu: usize,
+    split: usize,
+) -> bool {
+    if g.has_bypass || !g.dbuf_w || cfg.mbuf_banks < 2 {
+        return false;
+    }
+    let n_tiles = tile_rows(g.h_out, rows_per_cu, cfg.n_cus).len();
+    n_tiles >= 2 && mloop_rot_block_instrs(g, cfg, rows_per_cu, split) <= mloop_block_budget(cfg)
+}
+
 /// The loop order codegen will actually emit for a requested order.
+/// `Mloop` means the Mloop family: the maps-resident skeleton where it
+/// fits, the banked-rotation skeleton where only rotation can keep the
+/// kernel stream single-pass.
 pub fn effective_order(
     g: &ConvGeom,
     cfg: &SnowflakeConfig,
     order: LoopOrder,
     rows_per_cu: usize,
+    split: usize,
 ) -> LoopOrder {
     match order {
         LoopOrder::Mloop if mloop_viable(g, cfg, rows_per_cu) => LoopOrder::Mloop,
+        LoopOrder::Mloop | LoopOrder::MloopRot
+            if mloop_rot_viable(g, cfg, rows_per_cu, split) =>
+        {
+            LoopOrder::MloopRot
+        }
         _ => LoopOrder::Kloop,
     }
 }
@@ -193,8 +280,8 @@ pub fn estimate(
     cfg: &SnowflakeConfig,
     smart_delay_slots: bool,
 ) -> CostEstimate {
-    let order = effective_order(g, cfg, s.order, s.rows_per_cu);
     let split = s.split();
+    let order = effective_order(g, cfg, s.order, s.rows_per_cu, split);
     let n_cus = cfg.n_cus as u64;
     let units = cfg.n_load_units as u64;
     let setup = cfg.dma_setup_cycles;
@@ -207,20 +294,28 @@ pub fn estimate(
     let n_tiles = rows_list.len() as u64;
     let strip_words =
         |r: usize| ((r - 1) * g.stride + g.kh + CONV_SPILL_ROWS) * g.row_words_in;
-    let pieces = |r: usize| split.min(strip_words(r).div_ceil(64)).max(1);
+    let pieces = |r: usize| strip_pieces(strip_words(r), split);
 
     // ---- traffic -----------------------------------------------------
     let maps_once: u64 = rows_list.iter().map(|&r| n_cus * strip_words(r) as u64).sum();
-    let maps_streams: u64 = rows_list.iter().map(|&r| n_cus * pieces(r) as u64).sum();
+    let maps_streams_once: u64 = rows_list.iter().map(|&r| n_cus * pieces(r) as u64).sum();
+    // Banked rotation re-streams every strip once per kernel-set pass
+    // (the §6.2 trade: maps_reread buys kernel-traffic elimination).
+    let (gset, rot_passes) = rot_sets(g.kernel_words, g.k_groups, cfg);
+    let map_passes = if order == LoopOrder::MloopRot { rot_passes as u64 } else { 1 };
+    let maps_words_all = maps_once * map_passes;
+    let maps_streams = maps_streams_once * map_passes;
     let group_words = 4 * g.kernel_words as u64;
     // Each pass over the kernel stream loads k_groups real groups plus
-    // the dummy prefetch group.
+    // the dummy prefetch group; rotation's sets partition the groups
+    // (each loaded exactly once, no dummy prefetch needed).
     let (kernel_words_all, kernel_streams) = match order {
         LoopOrder::Kloop => (
             n_tiles * (g.k_groups as u64 + 1) * group_words,
             n_tiles * (g.k_groups as u64 + 1) * 4,
         ),
         LoopOrder::Mloop => ((g.k_groups as u64 + 1) * group_words, (g.k_groups as u64 + 1) * 4),
+        LoopOrder::MloopRot => (g.k_groups as u64 * group_words, g.k_groups as u64 * 4),
     };
     let byp_words: u64 = if g.has_bypass {
         rows_list.iter().map(|&r| n_cus * (r * g.byp_row_words) as u64).sum()
@@ -229,11 +324,20 @@ pub fn estimate(
     };
     let byp_streams = if g.has_bypass { n_tiles * n_cus } else { 0 };
     let bias_words = (g.k_groups * 4) as u64;
+    // Icache reload traffic: every emitted block re-streams one bank
+    // image (`bank_instrs` instructions × 2 words each). The seed model
+    // ignored this; it is what dominates very small layers.
+    let icache_blocks = match order {
+        LoopOrder::Kloop => 1 + n_tiles,
+        LoopOrder::Mloop => 2,
+        LoopOrder::MloopRot => 1 + rot_passes as u64,
+    };
+    let icache_words = icache_blocks * cfg.icache_bank_instrs as u64 * 2;
     let windows_rows: u64 = rows_list.iter().map(|&r| r as u64).sum();
     let stores_words = g.k_groups as u64 * 4 * windows_rows * n_cus * g.w_out as u64;
-    let loads_words = maps_once + kernel_words_all + byp_words + bias_words;
+    let loads_words = maps_words_all + kernel_words_all + byp_words + bias_words + icache_words;
     let dram_bytes = (loads_words + stores_words) * wb;
-    let streams = maps_streams + kernel_streams + byp_streams + 1;
+    let streams = maps_streams + kernel_streams + byp_streams + 1 + icache_blocks;
 
     // ---- compute (per-CU serial vector work) -------------------------
     let trace = (g.kh * g.row_read / 16) as u64;
@@ -256,9 +360,10 @@ pub fn estimate(
     let (worst_unit_streams, worst_unit_bytes) = match s.policy {
         BalancePolicy::OneUnit => (streams, loads_bytes),
         BalancePolicy::TwoUnits => {
-            // Maps on unit 0; weights + bias (+ bypass strips, which the
-            // codegen issues as Bias-class streams) on unit 1.
-            let u0 = (maps_streams, maps_once * wb);
+            // Maps + icache on unit 0; weights + bias (+ bypass strips,
+            // which the codegen issues as Bias-class streams) on unit 1
+            // (`balance::UnitAllocator`'s class pinning).
+            let u0 = (maps_streams + icache_blocks, (maps_words_all + icache_words) * wb);
             let u1 = (
                 kernel_streams + byp_streams + 1,
                 (kernel_words_all + byp_words + bias_words) * wb,
@@ -269,7 +374,24 @@ pub fn estimate(
                 u1
             }
         }
-        BalancePolicy::Greedy { .. } => (streams.div_ceil(units), loads_bytes.div_ceil(units)),
+        BalancePolicy::Greedy { .. } => {
+            // Cross-layer byte memory: Greedy assigns whole streams
+            // against byte counters that persist across layers, so the
+            // heaviest unit leads the perfect split by about half the
+            // largest single stream rather than landing exactly on it.
+            let max_stream_words = rows_list
+                .iter()
+                .map(|&r| strip_words(r).div_ceil(pieces(r)) as u64)
+                .max()
+                .unwrap_or(0)
+                .max(g.kernel_words as u64)
+                .max(bias_words)
+                .max(cfg.icache_bank_instrs as u64 * 2);
+            (
+                streams.div_ceil(units),
+                loads_bytes.div_ceil(units) + max_stream_words * wb / 2,
+            )
+        }
     };
     let per_unit_cycles = worst_unit_streams * setup + bytes_to_cycles(worst_unit_bytes);
     let dma_cycles = bus_cycles.max(per_unit_cycles);
@@ -281,7 +403,16 @@ pub fn estimate(
             n_cus * pieces(rows_list[0]) as u64 + 4,
         ),
         // Mloop stages every resident strip before compute.
-        LoopOrder::Mloop => (maps_once + group_words, maps_streams + 4),
+        LoopOrder::Mloop => (maps_once + group_words, maps_streams_once + 4),
+        // Rotation stages only the first `mbuf_banks − 1` strips plus
+        // kernel set 0 — the startup edge over the resident skeleton.
+        LoopOrder::MloopRot => {
+            let lead = (cfg.mbuf_banks as u64 - 1).min(n_tiles);
+            (
+                lead * n_cus * strip_words(rows_list[0]) as u64 + gset as u64 * group_words,
+                lead * n_cus * pieces(rows_list[0]) as u64 + gset as u64 * 4,
+            )
+        }
     };
     let startup_cycles =
         30 + start_streams.div_ceil(units) * setup + bytes_to_cycles(start_words * wb);
@@ -357,6 +488,10 @@ pub fn candidates(g: &ConvGeom, cfg: &SnowflakeConfig, base: BalancePolicy) -> V
             if mloop_viable(g, cfg, rows) {
                 out.push(Schedule { order: LoopOrder::Mloop, rows_per_cu: rows, policy });
             }
+            let split = Schedule { order: LoopOrder::MloopRot, rows_per_cu: rows, policy }.split();
+            if mloop_rot_viable(g, cfg, rows, split) {
+                out.push(Schedule { order: LoopOrder::MloopRot, rows_per_cu: rows, policy });
+            }
         }
     }
     out
@@ -405,8 +540,13 @@ pub fn search(
     let mut cands = candidates(g, cfg, opts.balance);
     match opts.force_loop_order {
         Some(LoopOrder::Kloop) => cands.retain(|s| s.order == LoopOrder::Kloop),
-        Some(LoopOrder::Mloop) if cands.iter().any(|s| s.order == LoopOrder::Mloop) => {
-            cands.retain(|s| s.order == LoopOrder::Mloop)
+        // Forcing Mloop means the Mloop *family*: resident or rotation,
+        // whichever candidates exist for the layer.
+        Some(LoopOrder::Mloop) if cands.iter().any(|s| s.order != LoopOrder::Kloop) => {
+            cands.retain(|s| s.order != LoopOrder::Kloop)
+        }
+        Some(LoopOrder::MloopRot) if cands.iter().any(|s| s.order == LoopOrder::MloopRot) => {
+            cands.retain(|s| s.order == LoopOrder::MloopRot)
         }
         _ => {}
     }
@@ -495,7 +635,7 @@ pub fn pool_estimate(
     let rows_list = tile_rows(g.h_out, rows_per_cu, cfg.n_cus);
     let n_tiles = rows_list.len() as u64;
     let strip_words = |r: usize| ((r - 1) * g.stride + g.kh + g.spill) * g.row_words_in;
-    let pieces = |r: usize| split.min(strip_words(r).div_ceil(64)).max(1);
+    let pieces = |r: usize| strip_pieces(strip_words(r), split);
 
     // ---- traffic -----------------------------------------------------
     let maps_once: u64 = rows_list.iter().map(|&r| n_cus * strip_words(r) as u64).sum();
@@ -619,6 +759,16 @@ pub fn validate(s: &Schedule, g: &ConvGeom, cfg: &SnowflakeConfig) -> Result<(),
             s.rows_per_cu, cfg.mbuf_banks
         ));
     }
+    if s.order == LoopOrder::MloopRot && !mloop_rot_viable(g, cfg, s.rows_per_cu, s.split()) {
+        return Err(format!(
+            "explicit Mloop-rotation schedule is not emittable for this layer at \
+             rows_per_cu {} / split {} (needs >=2 map tiles, >=2 MBuf banks, no fused \
+             bypass, the kernel group inside a WBuf region, and each pass block within \
+             an icache bank)",
+            s.rows_per_cu,
+            s.split()
+        ));
+    }
     if s.split() > 64 {
         return Err(format!("schedule split {} unreasonably large (max 64)", s.split()));
     }
@@ -704,11 +854,13 @@ mod tests {
         let mut g1 = conv2_geom();
         g1.h_out = 24; // 6 rows x 4 CUs: one tile
         assert!(!mloop_viable(&g1, &cfg, 6));
+        assert!(!mloop_rot_viable(&g1, &cfg, 6, 2), "single tile: nothing to rotate");
         assert_eq!(
-            effective_order(&g1, &cfg, LoopOrder::Mloop, 6),
+            effective_order(&g1, &cfg, LoopOrder::Mloop, 6, 2),
             LoopOrder::Kloop,
             "single-tile Mloop must clamp to the (identical) Kloop skeleton"
         );
+        assert_eq!(effective_order(&g1, &cfg, LoopOrder::MloopRot, 6, 2), LoopOrder::Kloop);
     }
 
     #[test]
@@ -795,6 +947,145 @@ mod tests {
         assert!(validate(&mloop_bad, &g, &cfg).is_err());
         let mloop_ok = Schedule { order: LoopOrder::Mloop, rows_per_cu: 6, ..ok };
         assert!(validate(&mloop_ok, &g, &cfg).is_ok());
+    }
+
+    /// AlexNet-conv1-class geometry (224x224x3 -> 55x55x64, 11x11/4):
+    /// 3 map tiles at the capacity height — more tiles than banks, so
+    /// only the rotation skeleton can keep the kernel stream resident.
+    fn conv1_geom() -> ConvGeom {
+        ConvGeom {
+            kh: 11,
+            stride: 4,
+            h_out: 55,
+            w_out: 55,
+            row_words_in: (224 + 2 * 2) * 4,
+            row_read: 48,
+            n_segs: 1,
+            kernel_words: 11 * 48,
+            k_groups: 16,
+            c_pad_out: 64,
+            has_bypass: false,
+            byp_row_words: 0,
+            max_rows: 6,
+            dbuf_w: true,
+        }
+    }
+
+    /// The rotation acceptance scenario's board: a 64 KB WBuf (all 16
+    /// conv1 groups in one region — a single pass) on a 1.4 B/cycle bus.
+    fn starved_cfg() -> SnowflakeConfig {
+        SnowflakeConfig {
+            wbuf_bytes: 64 * 1024,
+            axi_bytes_per_cycle: 1.4,
+            ..SnowflakeConfig::default()
+        }
+    }
+
+    #[test]
+    fn rot_sets_partition_the_groups() {
+        let cfg = SnowflakeConfig::default(); // region 4096 words
+        assert_eq!(rot_sets(528, 16, &cfg), (7, 3)); // conv1 at 16 KB WBuf
+        assert_eq!(rot_sets(4096, 16, &cfg), (1, 16)); // region-filling kernels
+        assert_eq!(rot_sets(224, 16, &cfg), (16, 1)); // everything resident
+        let big = starved_cfg(); // region 16384 words
+        assert_eq!(rot_sets(528, 16, &big), (16, 1));
+        // A set never exceeds the region: per * kernel_words <= region.
+        for kw in [100, 528, 1600, 3456] {
+            let (per, passes) = rot_sets(kw, 48, &cfg);
+            assert!(per * kw <= cfg.wbuf_region_words(), "kw {kw}");
+            assert!(per * passes >= 48, "sets must cover all groups (kw {kw})");
+        }
+    }
+
+    #[test]
+    fn rotation_viable_exactly_beyond_the_bank_count() {
+        let cfg = SnowflakeConfig::default();
+        let g = conv1_geom();
+        // 3 tiles at the capacity height: resident Mloop impossible,
+        // rotation viable (split 1 keeps the pass block in budget).
+        assert!(!mloop_viable(&g, &cfg, 6));
+        assert!(mloop_rot_viable(&g, &cfg, 6, 1));
+        assert_eq!(effective_order(&g, &cfg, LoopOrder::Mloop, 6, 1), LoopOrder::MloopRot);
+        assert_eq!(effective_order(&g, &cfg, LoopOrder::MloopRot, 6, 1), LoopOrder::MloopRot);
+        // Tall splits inflate the unrolled prefetch code past the bank.
+        assert!(!mloop_rot_viable(&g, &cfg, 6, 8));
+        // Many tiny tiles overflow the pass block too.
+        assert!(!mloop_rot_viable(&g, &cfg, 1, 1));
+        // Bypass excludes the whole Mloop family.
+        let mut gb = g;
+        gb.has_bypass = true;
+        assert!(!mloop_rot_viable(&gb, &cfg, 6, 1));
+        // A kernel too big for one WBuf region cannot hold a set.
+        let mut gk = g;
+        gk.dbuf_w = false;
+        assert!(!mloop_rot_viable(&gk, &cfg, 6, 1));
+    }
+
+    #[test]
+    fn rotation_estimate_reads_kernels_once_and_maps_per_pass() {
+        let cfg = SnowflakeConfig::default(); // 16 KB WBuf: 3 passes
+        let g = conv1_geom();
+        let pol = BalancePolicy::Greedy { split: 1 };
+        let rot = estimate(
+            &g,
+            &Schedule { order: LoopOrder::MloopRot, rows_per_cu: 6, policy: pol },
+            &cfg,
+            false,
+        );
+        let k = estimate(
+            &g,
+            &Schedule { order: LoopOrder::Kloop, rows_per_cu: 6, policy: pol },
+            &cfg,
+            false,
+        );
+        // Same compute either way; rotation re-reads maps x passes but
+        // reads kernels once, so at 3 passes it moves *more* bytes here.
+        assert_eq!(rot.compute_cycles, k.compute_cycles);
+        let (_, passes) = rot_sets(g.kernel_words, g.k_groups, &cfg);
+        assert_eq!(passes, 3);
+        assert!(rot.dram_bytes > k.dram_bytes, "3-pass rotation should lose on this board");
+    }
+
+    #[test]
+    fn rotation_wins_search_on_the_starved_board() {
+        // The acceptance crossover: single-pass rotation strictly
+        // undercuts Kloop's per-tile kernel re-streaming, and with the
+        // layer DMA-bound the search must pick it.
+        let cfg = starved_cfg();
+        let g = conv1_geom();
+        let pol = BalancePolicy::Greedy { split: 1 };
+        let rot = estimate(
+            &g,
+            &Schedule { order: LoopOrder::MloopRot, rows_per_cu: 6, policy: pol },
+            &cfg,
+            false,
+        );
+        let k = estimate(
+            &g,
+            &Schedule { order: LoopOrder::Kloop, rows_per_cu: 6, policy: pol },
+            &cfg,
+            false,
+        );
+        assert!(rot.dram_bytes < k.dram_bytes, "rot {} !< kloop {}", rot.dram_bytes, k.dram_bytes);
+        assert!(rot.cycles < k.cycles, "rot {} !< kloop {}", rot.cycles, k.cycles);
+        let (s, _) = search(&g, &cfg, &CompileOptions::default());
+        assert_eq!(s.order, LoopOrder::MloopRot, "search kept {s:?}");
+        assert!(validate(&s, &g, &cfg).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unemittable_rotation() {
+        let cfg = SnowflakeConfig::default();
+        let g = conv1_geom();
+        let bad = Schedule {
+            order: LoopOrder::MloopRot,
+            rows_per_cu: 1, // 14 tiles: pass block far beyond the bank
+            policy: BalancePolicy::Greedy { split: 1 },
+        };
+        let err = validate(&bad, &g, &cfg).unwrap_err();
+        assert!(err.contains("not emittable"), "{err}");
+        let ok = Schedule { rows_per_cu: 6, ..bad };
+        assert!(validate(&ok, &g, &cfg).is_ok());
     }
 
     /// AlexNet-pool1-class geometry (55x55 -> 27x27, 3x3 stride 2).

@@ -349,7 +349,8 @@ pub fn decide(
             // force_loop_order wins over both; either way the emitted
             // order is clamped to what the skeletons support.
             let requested = opts.force_loop_order.unwrap_or(sched.order);
-            let order = cost::effective_order(&gx, cfg, requested, sched.rows_per_cu);
+            let order =
+                cost::effective_order(&gx, cfg, requested, sched.rows_per_cu, sched.split());
             let sched = Schedule { order, ..sched };
             let predicted = cost::estimate(&gx, &sched, cfg, opts.smart_delay_slots);
 
@@ -497,6 +498,11 @@ pub fn required_bandwidth_gbs(
         LoopOrder::Kloop => maps_once + kernels_once * p.n_tiles.max(1) as f64,
         LoopOrder::Mloop => {
             maps_once * if p.n_tiles > 1 { k_sets } else { 1.0 } + kernels_once
+        }
+        // Banked rotation: kernels once, maps once per kernel-set pass.
+        LoopOrder::MloopRot => {
+            let (_, passes) = cost::rot_sets(p.kernel_words, p.k_groups, cfg);
+            maps_once * passes as f64 + kernels_once
         }
     };
     let stores = (p.h_out * p.w_out * p.c_pad_out) as f64;

@@ -46,6 +46,13 @@ pub enum LoopOrder {
     Mloop,
     /// Kernel data re-sent per map tile (maps resident).
     Kloop,
+    /// Banked-rotation Mloop: kernels still read exactly once (one
+    /// WBuf-region-resident kernel *set* per pass), map strips rotated
+    /// through the MBuf banks with double-buffered prefetch — the
+    /// kernel-traffic elimination of [`LoopOrder::Mloop`] extended to
+    /// layers with more map tiles than MBuf banks, at the price of one
+    /// map-strip pass per kernel set ([`cost::rot_sets`]).
+    MloopRot,
 }
 
 /// MAC operating mode (§4).
@@ -117,9 +124,12 @@ pub struct CompileOptions {
     /// layer to it; Greedy lets the tuner pick a per-layer split).
     pub balance: BalancePolicy,
     /// Force a loop order for every conv (None = per-layer decision).
-    /// Wins over the tuner and over `schedules`; convs the Mloop
-    /// skeleton cannot serve (fused bypass, maps exceeding the MBuf
-    /// banks) still fall back to Kloop.
+    /// Wins over the tuner and over `schedules`. `Some(Mloop)` means
+    /// the Mloop *family*: the maps-resident skeleton where it fits,
+    /// the banked-rotation skeleton where only rotation can keep the
+    /// kernel stream single-pass; convs neither skeleton can serve
+    /// (fused bypass, oversized unrolled blocks) still fall back to
+    /// Kloop.
     pub force_loop_order: Option<LoopOrder>,
     /// Conv schedule selection mode (see [`TuneMode`]).
     pub tune: TuneMode,

@@ -10,7 +10,7 @@
 //! (`repro sweep` / `cargo bench --bench grid`).
 
 use crate::arch::SnowflakeConfig;
-use crate::compiler::{decide, layout, BalancePolicy, CompileOptions, LoopOrder, TuneMode};
+use crate::compiler::{cost, decide, layout, BalancePolicy, CompileOptions, LoopOrder, TuneMode};
 use crate::fixed::{QFormat, Q5_11, Q8_8};
 use crate::model::graph::Graph;
 use crate::model::layer::{LayerKind, Shape};
@@ -613,22 +613,31 @@ fn quality_row(
 
 /// The tuning experiment: each model end-to-end (FC excluded, as
 /// Table 2) under the seed heuristic, the analytical cost-model search,
-/// and measured tuning. The heuristic/cost-model legs fan out through
-/// the parallel sweep harness; the measured leg runs its own
-/// full-model trials internally ([`tune::tune_measured`]).
+/// the all-Kloop force (the pre-Mloop/rotation ceiling the CI gate
+/// compares against), and measured tuning. The compile-and-run legs fan
+/// out through the parallel sweep harness; the measured leg runs its
+/// own full-model trials internally ([`tune::tune_measured`]).
 pub fn schedule_quality(
     cfg: &SnowflakeConfig,
     models: &[&str],
     seed: u64,
     top_k: usize,
 ) -> Vec<ScheduleQualityRow> {
-    const MODES: [(&str, TuneMode); 2] =
-        [("heuristic", TuneMode::Heuristic), ("cost-model", TuneMode::Analytical)];
+    const MODES: [(&str, TuneMode, Option<LoopOrder>); 3] = [
+        ("heuristic", TuneMode::Heuristic, None),
+        ("cost-model", TuneMode::Analytical, None),
+        ("forced-kloop", TuneMode::Analytical, Some(LoopOrder::Kloop)),
+    ];
     let mut jobs = Vec::new();
     for name in models {
         let g = zoo::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
-        for (mode, tune) in MODES {
-            let opts = CompileOptions { skip_fc: true, tune, ..Default::default() };
+        for (mode, tune, force) in MODES {
+            let opts = CompileOptions {
+                skip_fc: true,
+                tune,
+                force_loop_order: force,
+                ..Default::default()
+            };
             jobs.push(SweepJob::new(format!("sq/{name}/{mode}"), g.clone(), cfg, opts).seed(seed));
         }
     }
@@ -636,7 +645,7 @@ pub fn schedule_quality(
 
     let mut rows = Vec::new();
     for (i, name) in models.iter().enumerate() {
-        for (j, (mode, _)) in MODES.iter().enumerate() {
+        for (j, (mode, _, _)) in MODES.iter().enumerate() {
             rows.push(quality_row(name, mode, &outs[i * MODES.len() + j].stats, cfg));
         }
         let g = zoo::by_name(name).unwrap();
@@ -744,10 +753,18 @@ pub struct ExplainRow {
     pub kind: String,
     pub schedule: String,
     pub predicted: String,
+    /// Banked-rotation diagnosis: empty unless the rotation skeleton was
+    /// a live option at the chosen tile height (then: kernel-set shape,
+    /// prefetch distance, per-pass bank phase, and predicted cycles next
+    /// to the resident-Mloop alternative).
+    pub rotation: String,
 }
 
 /// Compile a model and describe every layer's chosen schedule — the
-/// debugging view of tuner decisions.
+/// debugging view of tuner decisions. Conv layers where the banked
+/// rotation was considered additionally report the rotation's bank
+/// phase per pass, its prefetch distance, and its predicted cycles
+/// against the resident-Mloop alternative (ISSUE 5 satellite).
 pub fn explain(
     g: &Graph,
     cfg: &SnowflakeConfig,
@@ -761,6 +778,7 @@ pub fn explain(
     for lp in &artifact.compiled.plan.layers {
         let node = lp.op.out_node();
         let kind = lp.op.name().to_string();
+        let mut rotation = String::new();
         let (schedule, predicted) = match &lp.decision {
             decide::OpPlan::Conv(d) => {
                 let policy = match d.policy {
@@ -768,6 +786,49 @@ pub fn explain(
                     BalancePolicy::TwoUnits => "two-units".to_string(),
                     BalancePolicy::OneUnit => "one-unit".to_string(),
                 };
+                if let Some((_, gx)) = tune::conv_geom_for(&artifact.compiled.plan, lp) {
+                    if cost::mloop_rot_viable(&gx, cfg, d.rows_per_cu, d.split) {
+                        let (gset, passes) = cost::rot_sets(d.kernel_words, d.k_groups, cfg);
+                        let rot = cost::estimate(
+                            &gx,
+                            &cost::Schedule {
+                                order: LoopOrder::MloopRot,
+                                rows_per_cu: d.rows_per_cu,
+                                policy: d.policy,
+                            },
+                            cfg,
+                            opts.smart_delay_slots,
+                        );
+                        let resident = if cost::mloop_viable(&gx, cfg, d.rows_per_cu) {
+                            let m = cost::estimate(
+                                &gx,
+                                &cost::Schedule {
+                                    order: LoopOrder::Mloop,
+                                    rows_per_cu: d.rows_per_cu,
+                                    policy: d.policy,
+                                },
+                                cfg,
+                                opts.smart_delay_slots,
+                            );
+                            format!("~{} cyc", m.cycles)
+                        } else {
+                            "n/a".to_string()
+                        };
+                        let shown = passes.min(4);
+                        let phases: Vec<String> = (0..shown)
+                            .map(|p| ((p * d.n_tiles) % cfg.mbuf_banks).to_string())
+                            .collect();
+                        rotation = format!(
+                            "rotation: sets {gset}x{passes}, pf-dist {}, bank phase/pass [{}{}], \
+                             pred ~{} cyc vs resident-Mloop {}",
+                            cfg.mbuf_banks - 1,
+                            phases.join(","),
+                            if passes > shown { ",…" } else { "" },
+                            rot.cycles,
+                            resident
+                        );
+                    }
+                }
                 (
                     format!(
                         "{:?} rows={}(cap {}) tiles={} split={} {policy}",
@@ -791,7 +852,7 @@ pub fn explain(
                 String::new(),
             ),
         };
-        rows.push(ExplainRow { node, kind, schedule, predicted });
+        rows.push(ExplainRow { node, kind, schedule, predicted, rotation });
     }
     Ok(rows)
 }
@@ -801,6 +862,9 @@ pub fn print_explain(model: &str, rows: &[ExplainRow]) {
     println!("{:<5} {:<9} {:<44} {}", "node", "kind", "schedule", "predicted");
     for r in rows {
         println!("{:<5} {:<9} {:<44} {}", r.node, r.kind, r.schedule, r.predicted);
+        if !r.rotation.is_empty() {
+            println!("{:<5} {:<9} {}", "", "", r.rotation);
+        }
     }
 }
 

@@ -24,11 +24,20 @@
 //! let artifact = Arc::new(Compiler::new(cfg.clone()).build(&graph)?);
 //! let h1 = cache.load_into(&mut engine_a, &artifact, seed)?; // miss: deploys
 //! let h2 = cache.load_into(&mut engine_b, &artifact, seed)?; // hit: memcpy
-//! assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+//! assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
 //! ```
 //!
-//! There is no eviction: a server's resident model set is small and
-//! fixed at registration time. Drop the cache to free the images.
+//! ## Eviction (ISSUE 5)
+//!
+//! A deployed image is a whole simulated DRAM (megabytes per model), so
+//! once model churn exists an unbounded cache *is* the memory leak. A
+//! capacity-bounded cache ([`ArtifactCache::with_capacity`], CLI
+//! `repro serve --cache-cap N`) evicts the least-recently-used image
+//! when admitting a new one would exceed `cap` entries. Eviction only
+//! drops the *prototype* image — engines that cloned it are untouched —
+//! so a re-load after eviction re-deploys (a new miss), with results
+//! bit-identical to the cached path (`tests/serve.rs`). `cap == 0`
+//! (the default) keeps the unbounded behavior.
 
 use super::{deployed_machine, Engine, EngineError, ModelHandle};
 use crate::compiler::Artifact;
@@ -39,11 +48,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Aggregate cache counters. `hits` are loads served by cloning a
-/// cached image; `misses` are loads that had to deploy.
+/// cached image; `misses` are loads that had to deploy; `evictions`
+/// count LRU prototype drops (capacity-bounded caches only).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -53,19 +64,46 @@ impl CacheStats {
     }
 }
 
+/// One cached prototype image plus its LRU clock stamp.
+struct CachedImage {
+    machine: Machine,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct Images {
+    map: HashMap<(u64, u64), CachedImage>,
+    /// Monotonic use clock (under the map lock, so strictly ordered).
+    clock: u64,
+}
+
 /// Thread-safe cache of deployed machine images, keyed by
-/// `(artifact fingerprint, weight seed)`.
+/// `(artifact fingerprint, weight seed)`, with optional LRU capacity.
 #[derive(Default)]
 pub struct ArtifactCache {
-    images: Mutex<HashMap<(u64, u64), Machine>>,
+    images: Mutex<Images>,
+    /// Max resident images; 0 = unbounded.
+    cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl ArtifactCache {
-    /// An empty cache.
+    /// An empty, unbounded cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty cache holding at most `cap` images (0 = unbounded),
+    /// evicting least-recently-used prototypes beyond that.
+    pub fn with_capacity(cap: usize) -> Self {
+        ArtifactCache { cap, ..Self::default() }
+    }
+
+    /// The configured capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     /// Load `artifact` (with `Weights::init(graph, seed)` weights) into
@@ -81,10 +119,13 @@ impl ArtifactCache {
         let key = (artifact.fingerprint(), seed);
         let machine = {
             let mut images = self.images.lock().expect("artifact cache poisoned");
-            match images.get(&key) {
-                Some(proto) => {
+            images.clock += 1;
+            let now = images.clock;
+            match images.map.get_mut(&key) {
+                Some(entry) => {
+                    entry.last_use = now;
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    proto.clone()
+                    entry.machine.clone()
                 }
                 None => {
                     // Build under the lock: a racing worker loading the
@@ -94,7 +135,22 @@ impl ArtifactCache {
                     let proto = deployed_machine(artifact, &weights);
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     let machine = proto.clone();
-                    images.insert(key, proto);
+                    images.map.insert(key, CachedImage { machine: proto, last_use: now });
+                    if self.cap > 0 {
+                        while images.map.len() > self.cap {
+                            // The just-inserted entry carries the newest
+                            // stamp, so the LRU victim is never it
+                            // (unless cap forces even the newcomer out).
+                            let victim = images
+                                .map
+                                .iter()
+                                .min_by_key(|(_, e)| e.last_use)
+                                .map(|(k, _)| *k)
+                                .expect("non-empty over-capacity cache");
+                            images.map.remove(&victim);
+                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                     machine
                 }
             }
@@ -107,12 +163,13 @@ impl ArtifactCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
     /// Number of distinct cached images.
     pub fn len(&self) -> usize {
-        self.images.lock().expect("artifact cache poisoned").len()
+        self.images.lock().expect("artifact cache poisoned").map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -154,7 +211,7 @@ mod tests {
         let mut b = Engine::new(cfg.clone());
         let ha = cache.load_into(&mut a, &artifact, seed).unwrap();
         let hb = cache.load_into(&mut b, &artifact, seed).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
         assert_eq!(cache.len(), 1);
 
         let x = synthetic_input(&g, seed);
@@ -180,9 +237,63 @@ mod tests {
         cache.load_into(&mut e, &a1, 2).unwrap();
         // Same artifact and seed again: hit.
         cache.load_into(&mut e, &a1, 1).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3, evictions: 0 });
         assert_eq!(cache.len(), 3);
         assert_eq!(e.stats().models_resident, 4);
+    }
+
+    #[test]
+    fn lru_eviction_bounds_residency_and_counts() {
+        let cfg = SnowflakeConfig::default();
+        let a1 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("lru1")).unwrap());
+        let a2 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("lru2")).unwrap());
+        let a3 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("lru3")).unwrap());
+        let cache = ArtifactCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let mut e = Engine::new(cfg.clone());
+        cache.load_into(&mut e, &a1, 1).unwrap(); // miss {1}
+        cache.load_into(&mut e, &a2, 1).unwrap(); // miss {1,2}
+        cache.load_into(&mut e, &a1, 1).unwrap(); // hit; 1 now most recent
+        cache.load_into(&mut e, &a3, 1).unwrap(); // miss; evicts 2 (LRU)
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3, evictions: 1 });
+        // 2 was evicted: loading it again is a fresh miss and evicts 1
+        // (3 is more recent).
+        cache.load_into(&mut e, &a2, 1).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 4, evictions: 2 });
+        // 3 survived both evictions: still a hit.
+        cache.load_into(&mut e, &a3, 1).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4, evictions: 2 });
+    }
+
+    #[test]
+    fn reload_after_eviction_is_bit_identical() {
+        // The eviction path must not perturb anything simulated: an
+        // image deployed, evicted and re-deployed serves the same
+        // cycles/outputs as an uncached engine load.
+        let cfg = SnowflakeConfig::default();
+        let g = small_graph("lru_eq");
+        let artifact = Arc::new(Compiler::new(cfg.clone()).build(&g).unwrap());
+        let other = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("lru_eq2")).unwrap());
+        let seed = 11;
+        let cache = ArtifactCache::with_capacity(1);
+
+        let mut direct = Engine::new(cfg.clone());
+        let hd = direct.load((*artifact).clone(), seed).unwrap();
+        let x = synthetic_input(&g, seed);
+        let want = direct.infer(hd, &x).unwrap();
+
+        let mut e = Engine::new(cfg.clone());
+        let h1 = cache.load_into(&mut e, &artifact, seed).unwrap(); // miss
+        cache.load_into(&mut e, &other, seed).unwrap(); // miss, evicts artifact
+        let h2 = cache.load_into(&mut e, &artifact, seed).unwrap(); // miss again (evicted)
+        assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.stats().hits, 0);
+        for h in [h1, h2] {
+            let got = e.infer(h, &x).unwrap();
+            assert_eq!(got.stats.comparable(), want.stats.comparable());
+            assert_eq!(got.output.count_diff(&want.output), 0);
+        }
     }
 
     #[test]

@@ -50,6 +50,9 @@
 //!   [`ArtifactCache`] keyed by the artifact fingerprint (which folds
 //!   in `config_hash`) + weight seed: the first load deploys, the
 //!   other `workers - 1` loads clone the deployed DRAM image.
+//!   [`ServeConfig::cache_cap`] (CLI `--cache-cap N`) bounds the cache
+//!   to N images with LRU eviction; exact hit/miss/evict counters are
+//!   part of every [`ServeReport`].
 //! * **Determinism** — simulated machines are reset per inference and
 //!   timing is input-independent, so every request's simulated cycles,
 //!   DRAM traffic and output words are bit-identical to the sequential
@@ -83,11 +86,14 @@ pub struct ServeConfig {
     /// Bounded queue depth; `submit` blocks (and `try_submit` fails)
     /// when this many requests are waiting (min 1).
     pub queue_depth: usize,
+    /// Deployed-image cache capacity (entries); least-recently-used
+    /// images beyond it are evicted. 0 = unbounded (the default).
+    pub cache_cap: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, max_batch: 4, queue_depth: 32 }
+        ServeConfig { workers: 4, max_batch: 4, queue_depth: 32, cache_cap: 0 }
     }
 }
 
@@ -98,6 +104,7 @@ impl ServeConfig {
             workers: self.workers.max(1),
             max_batch: self.max_batch.max(1),
             queue_depth: self.queue_depth.max(1),
+            cache_cap: self.cache_cap,
         }
     }
 }
@@ -356,7 +363,7 @@ impl ServeReport {
     pub fn summary(&self, cfg: &SnowflakeConfig) -> String {
         format!(
             "{} requests on {} workers in {:?} ({:.1} req/s host), {} simulated cycles \
-             ({:.2} ms at {} MHz), queue high-water {}, cache {} hits / {} misses",
+             ({:.2} ms at {} MHz), queue high-water {}, cache {} hits / {} misses / {} evictions",
             self.requests,
             self.workers,
             self.wall,
@@ -367,6 +374,7 @@ impl ServeReport {
             self.high_water,
             self.cache.hits,
             self.cache.misses,
+            self.cache.evictions,
         )
     }
 }
@@ -587,7 +595,9 @@ impl Server {
     /// A server for the given hardware and pool configuration, no
     /// models registered.
     pub fn new(cfg: SnowflakeConfig, serve_cfg: ServeConfig) -> Self {
-        Server { cfg, serve_cfg: serve_cfg.normalized(), models: Vec::new(), cache: ArtifactCache::new() }
+        let serve_cfg = serve_cfg.normalized();
+        let cache = ArtifactCache::with_capacity(serve_cfg.cache_cap);
+        Server { cfg, serve_cfg, models: Vec::new(), cache }
     }
 
     /// The normalized pool configuration.
@@ -773,6 +783,7 @@ impl Server {
             cache: CacheStats {
                 hits: cache_after.hits - cache_before.hits,
                 misses: cache_after.misses - cache_before.misses,
+                evictions: cache_after.evictions - cache_before.evictions,
             },
         };
         Ok((r, report))
@@ -829,8 +840,9 @@ mod tests {
 
     #[test]
     fn serve_config_normalizes_zeroes() {
-        let c = ServeConfig { workers: 0, max_batch: 0, queue_depth: 0 }.normalized();
-        assert_eq!(c, ServeConfig { workers: 1, max_batch: 1, queue_depth: 1 });
+        let c =
+            ServeConfig { workers: 0, max_batch: 0, queue_depth: 0, cache_cap: 0 }.normalized();
+        assert_eq!(c, ServeConfig { workers: 1, max_batch: 1, queue_depth: 1, cache_cap: 0 });
     }
 
     #[test]

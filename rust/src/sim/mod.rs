@@ -703,6 +703,11 @@ impl Machine {
         }
         let bytes = len_words * self.cfg.word_bytes as u64;
         self.stats.unit_bytes[unit as usize] += bytes;
+        match target {
+            LdTarget::WBuf { .. } => self.stats.bytes_wbuf += bytes,
+            LdTarget::MBuf { .. } => self.stats.bytes_mbuf += bytes,
+            LdTarget::BBuf { .. } | LdTarget::ICache { .. } => {}
+        }
         self.dma.push(Stream {
             dest,
             mem_addr,

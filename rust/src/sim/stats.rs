@@ -38,6 +38,15 @@ pub struct Stats {
 
     /// DMA bytes loaded, per load unit (imbalance metric, Table 3).
     pub unit_bytes: Vec<u64>,
+    /// DMA bytes loaded into weight buffers (the kernel stream). The
+    /// §6.2 loop-order contract in counter form: a resident/rotation
+    /// Mloop layer reads its kernel stream exactly once, so for a
+    /// single-conv model this equals `weights_read × word_bytes`;
+    /// Kloop multiplies it by the tile count (`tests/rotation.rs`).
+    pub bytes_wbuf: u64,
+    /// DMA bytes loaded into maps buffers (strip traffic; the quantity
+    /// the rotation skeleton re-streams once per kernel-set pass).
+    pub bytes_mbuf: u64,
     /// Total bytes stored by writebacks.
     pub bytes_stored: u64,
     /// Completed DMA streams per unit.

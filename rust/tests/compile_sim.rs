@@ -213,10 +213,12 @@ fn conv_mloop_matches_reference() {
     use snowflake::compiler::decide::OpPlan;
     use snowflake::compiler::{LoopOrder, TuneMode};
 
-    // 48 output rows, capacity cap 7 -> two tiles; no bypass.
+    // 48 output rows, capacity cap 7 -> two tiles; no bypass. All three
+    // skeletons are genuinely available (rotation trivially so at the
+    // heuristic height: 2 tiles through 2 banks, one kernel set).
     let g = conv_graph(64, 48, 8, 3, 1, 1, true);
     let cfg = SnowflakeConfig::default();
-    for order in [LoopOrder::Mloop, LoopOrder::Kloop] {
+    for order in [LoopOrder::Mloop, LoopOrder::Kloop, LoopOrder::MloopRot] {
         let opts = CompileOptions {
             force_loop_order: Some(order),
             tune: TuneMode::Heuristic,
@@ -228,12 +230,15 @@ fn conv_mloop_matches_reference() {
         check_graph_opts(&g, 31, &opts);
     }
 
-    // Explicit overrides: tile heights / splits off the heuristic path.
+    // Explicit overrides: tile heights / splits off the heuristic path
+    // (the MloopRot rows put 3-4 tiles through the 2 MBuf banks).
     for (order, rows, split) in [
         (LoopOrder::Mloop, 6, 4),
         (LoopOrder::Mloop, 7, 1),
         (LoopOrder::Kloop, 2, 8),
         (LoopOrder::Kloop, 5, 1),
+        (LoopOrder::MloopRot, 4, 1),
+        (LoopOrder::MloopRot, 3, 1),
     ] {
         let mut opts = CompileOptions::default();
         opts.schedules.insert(

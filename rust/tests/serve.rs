@@ -40,7 +40,7 @@ fn concurrent_serving_is_bit_identical_to_sequential() {
     let seed = 42;
     let mut server = Server::new(
         cfg.clone(),
-        ServeConfig { workers: 4, max_batch: 3, queue_depth: 4 },
+        ServeConfig { workers: 4, max_batch: 3, queue_depth: 4, cache_cap: 0 },
     );
     let ia = server.register(build(&cfg, &ga), seed).unwrap();
     let ib = server.register(build(&cfg, &gb), seed).unwrap();
@@ -117,7 +117,7 @@ fn bounded_queue_backpressures_streamed_submission() {
     let depth = 2;
     let mut server = Server::new(
         cfg.clone(),
-        ServeConfig { workers: 1, max_batch: 1, queue_depth: depth },
+        ServeConfig { workers: 1, max_batch: 1, queue_depth: depth, cache_cap: 0 },
     );
     let id = server.register(build(&cfg, &g), seed).unwrap();
     let n = 10usize;
@@ -154,7 +154,7 @@ fn coalescing_batches_same_model_requests_deterministically() {
     let seed = 5;
     let mut server = Server::new(
         cfg.clone(),
-        ServeConfig { workers: 1, max_batch: 3, queue_depth: 8 },
+        ServeConfig { workers: 1, max_batch: 3, queue_depth: 8, cache_cap: 0 },
     );
     let ia = server.register(build(&cfg, &ga), seed).unwrap();
     let ib = server.register(build(&cfg, &gb), seed).unwrap();
@@ -207,7 +207,7 @@ fn artifact_cache_deduplicates_worker_loads() {
     let seed = 3;
     let mut server = Server::new(
         cfg.clone(),
-        ServeConfig { workers: 3, max_batch: 2, queue_depth: 4 },
+        ServeConfig { workers: 3, max_batch: 2, queue_depth: 4, cache_cap: 0 },
     );
     // The same artifact registered twice (same fingerprint, same seed):
     // only the very first worker load anywhere deploys.
@@ -238,11 +238,56 @@ fn artifact_cache_deduplicates_worker_loads() {
 }
 
 #[test]
+fn cache_eviction_path_is_bit_identical_and_counted() {
+    // ISSUE 5: a capacity-1 cache under two models forces an eviction
+    // on every other load. Serving must stay bit-identical to the
+    // sequential engine path, and the report must carry exact
+    // hit/miss/evict counters.
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("serve_ev_a", 8);
+    let gb = small_graph("serve_ev_b", 12);
+    let seed = 13;
+    // One worker so the load order (a then b) is deterministic and the
+    // counters are exact; multi-worker interleavings only shift which
+    // load hits, never the served results.
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 2, queue_depth: 4, cache_cap: 1 },
+    );
+    let ia = server.register(build(&cfg, &ga), seed).unwrap();
+    let ib = server.register(build(&cfg, &gb), seed).unwrap();
+    let order = [(ia, &ga), (ib, &gb), (ia, &ga), (ib, &gb), (ia, &ga), (ib, &gb)];
+    let requests: Vec<_> = order
+        .iter()
+        .enumerate()
+        .map(|(r, (id, g))| (*id, synthetic_input(g, seed + r as u64)))
+        .collect();
+    let (responses, report) = server.serve_all(requests).unwrap();
+    assert_eq!(responses.len(), 6);
+    // The worker loads a (miss), then b (miss) which evicts a's
+    // prototype past the 1-image cap.
+    assert_eq!(report.cache.misses, 2);
+    assert_eq!(report.cache.hits, 0);
+    assert_eq!(report.cache.evictions, 1);
+
+    // Bit-identical to a plain (uncached) sequential engine.
+    let mut engine = Engine::new(cfg.clone());
+    let ha = engine.load(build(&cfg, &ga), seed).unwrap();
+    let hb = engine.load(build(&cfg, &gb), seed).unwrap();
+    for (r, (id, g)) in order.iter().enumerate() {
+        let x = synthetic_input(g, seed + r as u64);
+        let want = engine.infer(if *id == ia { ha } else { hb }, &x).unwrap();
+        assert_eq!(responses[r].stats.comparable(), want.stats.comparable(), "request {r}");
+        assert_eq!(responses[r].output.count_diff(&want.output), 0, "request {r}");
+    }
+}
+
+#[test]
 fn submission_errors_are_typed() {
     let cfg = SnowflakeConfig::default();
     let g = small_graph("serve_err", 8);
     let mut server =
-        Server::new(cfg.clone(), ServeConfig { workers: 1, max_batch: 2, queue_depth: 2 });
+        Server::new(cfg.clone(), ServeConfig { workers: 1, max_batch: 2, queue_depth: 2, cache_cap: 0 });
     let id = server.register(build(&cfg, &g), 1).unwrap();
 
     // Wrong input shape: rejected at submission, not at serve time.

@@ -7,7 +7,10 @@
 //! Coverage follows ISSUE 1: AlexNet conv1 and a ResNet18 basic block,
 //! each under forced Mloop and Kloop, and the three `BalancePolicy`
 //! families; plus a DMA-setup-heavy config to stress the fair-share
-//! closed forms.
+//! closed forms. Since ISSUE 5 the forced-Mloop AlexNet conv1 leg
+//! exercises the banked-rotation skeleton (3 tiles > 2 banks, so the
+//! Mloop family resolves to rotation, multi-pass at the default WBuf),
+//! and an explicit `MloopRot` override rides the schedule grid.
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{deploy, BalancePolicy, CompileOptions, Compiler, LoopOrder};
@@ -145,6 +148,20 @@ fn tuned_and_overridden_schedules_cores_agree() {
             order: LoopOrder::Mloop,
             rows_per_cu: 6,
             policy: BalancePolicy::Greedy { split: 4 },
+        },
+    );
+    assert_cores_agree(&g, &cfg, &opts, 3);
+
+    // Explicit banked-rotation override: 4 map tiles streaming through
+    // the 2 MBuf banks while kernel sets hold the WBuf — the skeleton
+    // whose correctness leans hardest on DMA/compute interleaving.
+    let mut opts = CompileOptions::default();
+    opts.schedules.insert(
+        0,
+        Schedule {
+            order: LoopOrder::MloopRot,
+            rows_per_cu: 3,
+            policy: BalancePolicy::Greedy { split: 1 },
         },
     );
     assert_cores_agree(&g, &cfg, &opts, 3);
