@@ -8,12 +8,20 @@
 //! change *host* wall time, never a simulated number. Host throughput
 //! is printed but not gated (shared runners are too noisy); the bit-
 //! identity assertion is the gate.
+//!
+//! Since ISSUE 6 this also pins the zero-overhead-when-off contract:
+//! the server below runs with an explicit default `ResilienceConfig`
+//! (no faults, no deadline), and the bit-identity assertion proves the
+//! resilience plumbing — per-attempt fault-plan lookups, the deadline
+//! check, worker supervision — costs nothing in simulated time when
+//! disabled. The report must come back with every resilience counter
+//! at zero.
 
 use std::time::Instant;
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{Artifact, CompileOptions, Compiler};
-use snowflake::engine::serve::{ServeConfig, Server};
+use snowflake::engine::serve::{ResilienceConfig, ServeConfig, Server};
 use snowflake::engine::Engine;
 use snowflake::model::weights::synthetic_input;
 use snowflake::model::zoo;
@@ -59,6 +67,9 @@ fn main() {
             cfg.clone(),
             ServeConfig { workers, max_batch: 3, queue_depth: REQUESTS, cache_cap: 0 },
         );
+        // Explicitly the off-state: the cycle assertions below gate the
+        // zero-overhead-when-off contract.
+        server.set_resilience(ResilienceConfig::default());
         let ids: Vec<_> = artifacts
             .iter()
             .map(|a| server.register(a.clone(), seed).expect("register"))
@@ -76,6 +87,10 @@ fn main() {
                 "request {r}: served cycles diverged from the sequential path at {workers} workers"
             );
         }
+        assert_eq!(report.failed(), 0, "healthy run reported failures");
+        assert_eq!(report.retries(), 0, "healthy run reported retries");
+        assert_eq!(report.faults_injected(), 0, "healthy run reported injected faults");
+        assert_eq!(report.workers_replaced(), 0, "healthy run replaced a worker");
         let speedup = seq_wall.as_secs_f64() / report.wall.as_secs_f64().max(1e-9);
         println!(
             "  {workers} worker(s): {:.2?} ({:.1} req/s, {speedup:.2}x vs sequential), \

@@ -162,6 +162,19 @@ impl Artifact {
         config_hash(&self.cfg)
     }
 
+    /// The cost model's end-to-end cycle prediction: the sum of every
+    /// layer's predicted cycles. The serving runtime derives its
+    /// per-request deadline budget from this (`prediction × slack`).
+    /// 0 means no layer carried a prediction — no deadline can be set.
+    pub fn predicted_cycles(&self) -> u64 {
+        self.compiled
+            .plan
+            .layers
+            .iter()
+            .map(|l| l.decision.predicted_cycles())
+            .sum()
+    }
+
     /// Identity fingerprint of the artifact itself: FNV-1a over the
     /// config fingerprint, the checksum of the encoded program words,
     /// the quantization format and the embedded model description.

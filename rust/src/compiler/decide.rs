@@ -173,6 +173,17 @@ pub struct FcPlan {
 }
 
 impl OpPlan {
+    /// The analytical cost model's cycle prediction for this layer —
+    /// the serving runtime's deadline-budget source. 0 for op classes
+    /// that carry no prediction (AvgPool / FC).
+    pub fn predicted_cycles(&self) -> u64 {
+        match self {
+            OpPlan::Conv(p) => p.predicted.cycles,
+            OpPlan::MaxPool(p) => p.predicted.cycles,
+            _ => 0,
+        }
+    }
+
     pub fn rows_per_cu(&self) -> usize {
         match self {
             OpPlan::Conv(p) => p.rows_per_cu,

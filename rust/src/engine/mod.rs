@@ -44,8 +44,9 @@ use crate::compiler::artifact::{config_hash, Artifact};
 use crate::compiler::deploy;
 use crate::compiler::layout::Canvas;
 use crate::model::weights::Weights;
+use crate::sim::fault::FaultPlan;
 use crate::sim::stats::Stats;
-use crate::sim::Machine;
+use crate::sim::{Machine, SimError};
 use crate::tensor::Tensor;
 use std::sync::Arc;
 
@@ -61,8 +62,11 @@ pub enum EngineError {
     NoOutput,
     /// The input tensor does not match the model's input canvas.
     BadInput(String),
-    /// The simulation failed (deadlock/program bug).
-    Sim(String),
+    /// The simulation failed. The typed [`SimError`] carries the
+    /// failure kind (program bug / deadlock / deadline / injected
+    /// abort) and whether injected faults fired — the serving
+    /// runtime's retry policy dispatches on both.
+    Sim(SimError),
 }
 
 impl std::fmt::Display for EngineError {
@@ -303,6 +307,21 @@ impl Engine {
         h: ModelHandle,
         input: &Tensor<f32>,
     ) -> Result<Inference, EngineError> {
+        self.infer_with(h, input, &FaultPlan::default(), None)
+    }
+
+    /// [`Engine::infer`] with chaos-testing hooks: an injected fault
+    /// schedule and an optional hard cycle budget, both applied to this
+    /// run only (the per-inference reset clears them, so a later plain
+    /// `infer` on the same model is bit-identical to a fresh machine).
+    /// An empty plan and `None` budget make this exactly `infer`.
+    pub fn infer_with(
+        &mut self,
+        h: ModelHandle,
+        input: &Tensor<f32>,
+        faults: &FaultPlan,
+        cycle_limit: Option<u64>,
+    ) -> Result<Inference, EngineError> {
         let m = self.model_mut(h)?;
         let cv = m.artifact.compiled.plan.input_canvas;
         if input.shape != vec![cv.c, cv.h, cv.w] {
@@ -316,8 +335,12 @@ impl Engine {
             m.machine.reset_for_inference();
         }
         m.fresh = false;
+        if !faults.is_empty() {
+            m.machine.set_fault_plan(faults.clone());
+        }
+        m.machine.set_cycle_limit(cycle_limit);
         deploy::write_canvas(&mut m.machine, &cv, input, m.artifact.compiled.plan.fmt);
-        let stats = m.machine.run().map_err(|e| EngineError::Sim(e.to_string()))?;
+        let stats = m.machine.run().map_err(EngineError::Sim)?;
         let output = deploy::read_canvas(&m.machine, &m.out_canvas);
         m.stats.record(&stats);
         Ok(Inference { stats, output })

@@ -60,17 +60,35 @@
 //!   or arrival order. `repro serve --check` and `tests/serve.rs` pin
 //!   this.
 //!
+//! * **Resilience** ([`ResilienceConfig`]) — per-request deadlines
+//!   (cost-model prediction × slack, enforced *in-sim* as a cycle
+//!   budget), retry-with-budget for transient injected failures (a
+//!   retry is a fresh attempt with a fresh fault draw), per-request
+//!   worker supervision (a panicked engine is rebuilt in place from
+//!   the artifact cache; the request is retried or failed typed) and a
+//!   per-model circuit breaker (trips after consecutive hard failures,
+//!   sheds with [`ServeError::ModelUnavailable`], half-opens after a
+//!   cooldown). Chaos runs inject deterministic faults keyed by
+//!   `(fault_seed, request, attempt)` — see [`crate::sim::fault`].
+//!   **Every ticket resolves**: to a [`Response`] or a typed
+//!   [`ServeError`], never silence, even if worker threads die.
+//!
 //! Host-side wall-clock numbers (queue wait, service time, throughput)
 //! are real concurrency measurements and naturally vary run to run;
-//! everything simulated is exact.
+//! everything simulated is exact — including injected-fault outcomes,
+//! which depend only on (seed, request seqno, attempt), not on which
+//! worker runs what when.
 
 use super::cache::{ArtifactCache, CacheStats};
 use super::{Engine, EngineError, ModelHandle};
 use crate::arch::SnowflakeConfig;
 use crate::compiler::artifact::config_hash;
 use crate::compiler::Artifact;
+use crate::sim::fault::{FaultPlan, FaultSpec, PlanHint};
 use crate::sim::stats::Stats;
+use crate::sim::SimErrorKind;
 use crate::tensor::Tensor;
+use crate::util::hist::Histogram;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -109,6 +127,48 @@ impl ServeConfig {
     }
 }
 
+/// Failure-handling policy for a [`Server`]: deadlines, retries, the
+/// per-model circuit breaker and (for chaos testing) an injected-fault
+/// specification. The default is "resilient but quiet": no faults, no
+/// deadlines, transient failures retried up to twice, breaker armed at
+/// 4 consecutive hard failures. With the default config and healthy
+/// hardware the serving path is bit-identical to the pre-resilience
+/// runtime — every knob is checked behind a cheap guard.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceConfig {
+    /// Per-request cycle budget = cost-model predicted cycles × this
+    /// slack factor (e.g. 3.0 = "three times the prediction"). 0.0
+    /// disables deadlines, as does a model with no cost prediction.
+    pub deadline_slack: f64,
+    /// Redelivery budget for *transient* failures (injected faults,
+    /// worker deaths): a request is attempted at most `retries + 1`
+    /// times before it fails typed.
+    pub retries: usize,
+    /// Consecutive hard (non-retried) failures that trip a model's
+    /// circuit breaker. 0 disables the breaker.
+    pub breaker_threshold: u64,
+    /// Requests shed while open before the breaker half-opens and lets
+    /// one probe batch through (min 1 when the breaker is armed).
+    pub breaker_cooldown: u64,
+    /// Deterministic fault injection for chaos runs; `None` = healthy.
+    pub faults: Option<FaultSpec>,
+    /// Seed for per-(request, attempt) fault-plan generation.
+    pub fault_seed: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            deadline_slack: 0.0,
+            retries: 2,
+            breaker_threshold: 4,
+            breaker_cooldown: 8,
+            faults: None,
+            fault_seed: 0,
+        }
+    }
+}
+
 /// Identifier of a model registered with a [`Server`] (server-local,
 /// in registration order).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -137,6 +197,21 @@ pub enum ServeError {
     Closed,
     /// A worker failed to start (model load failure at pool spin-up).
     Worker(String),
+    /// The request ran past its cycle budget (cost-model prediction ×
+    /// [`ResilienceConfig::deadline_slack`]) and was cut off in-sim.
+    DeadlineExceeded {
+        /// The exhausted budget, in simulated cycles.
+        budget_cycles: u64,
+    },
+    /// [`Ticket::wait_timeout`] gave up before the request resolved.
+    WaitTimeout,
+    /// The model's circuit breaker is open: the request was shed
+    /// without being attempted.
+    ModelUnavailable(usize),
+    /// The worker serving the request died (panic / injected kill) and
+    /// the retry budget could not absorb it, or the pool shut down
+    /// with the request still queued. Never silently dropped.
+    WorkerDied(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -148,6 +223,14 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueFull => write!(f, "request queue is full"),
             ServeError::Closed => write!(f, "server is closed to new requests"),
             ServeError::Worker(m) => write!(f, "worker startup failed: {m}"),
+            ServeError::DeadlineExceeded { budget_cycles } => {
+                write!(f, "deadline exceeded: cycle budget {budget_cycles} exhausted")
+            }
+            ServeError::WaitTimeout => write!(f, "timed out waiting for the response"),
+            ServeError::ModelUnavailable(i) => {
+                write!(f, "model id {i} is unavailable: circuit breaker open")
+            }
+            ServeError::WorkerDied(m) => write!(f, "worker died: {m}"),
         }
     }
 }
@@ -217,6 +300,30 @@ impl Ticket {
             r = self.slot.cv.wait(r).expect("ticket poisoned");
         }
     }
+
+    /// As [`Ticket::wait`], but give up after `timeout` with
+    /// [`ServeError::WaitTimeout`]. The ticket is consumed either way;
+    /// a timeout abandons the in-flight request (the worker still
+    /// serves and resolves the slot, nobody is left reading it).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response, ServeError> {
+        let deadline = Instant::now() + timeout;
+        let mut r = self.slot.result.lock().expect("ticket poisoned");
+        loop {
+            if let Some(res) = r.take() {
+                return res;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(ServeError::WaitTimeout);
+            }
+            let (g, _) = self
+                .slot
+                .cv
+                .wait_timeout(r, deadline - now)
+                .expect("ticket poisoned");
+            r = g;
+        }
+    }
 }
 
 fn deliver(slot: &TicketSlot, result: Result<Response, ServeError>) {
@@ -228,9 +335,77 @@ fn deliver(slot: &TicketSlot, result: Result<Response, ServeError>) {
 struct QueuedRequest {
     model: usize,
     seqno: u64,
+    /// Delivery attempt (0 = first). Bumped on retry re-queue; the
+    /// fault plan is keyed by (seqno, attempt) so a retry draws fresh
+    /// faults while a replay of the same attempt is bit-identical.
+    attempt: u64,
     input: Tensor<f32>,
     submitted: Instant,
     slot: Arc<TicketSlot>,
+}
+
+/// Per-model circuit breaker. Lives in [`QueueState`] (under the queue
+/// mutex) so trip/shed decisions are serialized with dequeues.
+///
+/// State machine: `Closed` —(threshold consecutive hard failures)→
+/// `Open` —(cooldown requests shed)→ `HalfOpen` —(probe succeeds)→
+/// `Closed`, or —(probe fails hard)→ `Open` again.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum BreakerMode {
+    #[default]
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Breaker {
+    mode: BreakerMode,
+    /// Consecutive hard failures since the last success.
+    consecutive: u64,
+    /// Requests left to shed before half-opening.
+    cooldown_left: u64,
+    /// Times this breaker transitioned to `Open`.
+    trips: u64,
+}
+
+impl Breaker {
+    /// Admission check for a dequeued batch of `n` requests. Returns
+    /// `true` when the batch must be shed. Shedding counts down the
+    /// cooldown; at zero the breaker half-opens and the *next* batch
+    /// goes through as a probe.
+    fn shed(&mut self, n: u64) -> bool {
+        match self.mode {
+            BreakerMode::Closed | BreakerMode::HalfOpen => false,
+            BreakerMode::Open => {
+                self.cooldown_left = self.cooldown_left.saturating_sub(n);
+                if self.cooldown_left == 0 {
+                    self.mode = BreakerMode::HalfOpen;
+                }
+                true
+            }
+        }
+    }
+
+    fn success(&mut self) {
+        self.consecutive = 0;
+        self.mode = BreakerMode::Closed;
+    }
+
+    fn hard_failure(&mut self, threshold: u64, cooldown: u64) {
+        self.consecutive += 1;
+        let trip = match self.mode {
+            // A failed half-open probe re-opens immediately.
+            BreakerMode::HalfOpen => true,
+            BreakerMode::Closed => threshold > 0 && self.consecutive >= threshold,
+            BreakerMode::Open => false,
+        };
+        if trip {
+            self.mode = BreakerMode::Open;
+            self.cooldown_left = cooldown.max(1);
+            self.trips += 1;
+        }
+    }
 }
 
 struct QueueState {
@@ -239,6 +414,38 @@ struct QueueState {
     /// Deepest the queue ever got (bounded-queue invariant check).
     high_water: usize,
     next_seqno: u64,
+    /// One breaker per registered model.
+    breakers: Vec<Breaker>,
+}
+
+/// The run's resolved failure policy, derived once from
+/// [`ResilienceConfig`] + the registered artifacts.
+struct Policy {
+    retries: u64,
+    /// Per-model cycle budget (`None` = no deadline).
+    deadline: Vec<Option<u64>>,
+    /// Per-model fault-plan shape hints.
+    hints: Vec<PlanHint>,
+    spec: Option<FaultSpec>,
+    fault_seed: u64,
+    breaker_threshold: u64,
+    breaker_cooldown: u64,
+}
+
+impl Policy {
+    fn plan_for(&self, model: usize, seqno: u64, attempt: u64) -> FaultPlan {
+        match &self.spec {
+            Some(s) => s.plan_for(self.fault_seed, seqno, attempt, &self.hints[model]),
+            None => FaultPlan::default(),
+        }
+    }
+
+    fn wants_kill(&self, seqno: u64, attempt: u64) -> bool {
+        match &self.spec {
+            Some(s) => s.wants_worker_kill(self.fault_seed, seqno, attempt),
+            None => false,
+        }
+    }
 }
 
 /// Queue + condvars shared between the client and the workers.
@@ -250,6 +457,7 @@ struct Shared {
     work: Condvar,
     depth: usize,
     max_batch: usize,
+    policy: Policy,
 }
 
 /// Pop the queue head, then coalesce: steal up to `max_batch - 1` more
@@ -290,6 +498,28 @@ pub struct ModelServeStats {
     pub queue_wait: Duration,
     /// Summed host service time across batches.
     pub service: Duration,
+    /// Redeliveries after transient failures (injected faults, worker
+    /// deaths within the retry budget).
+    pub retries: u64,
+    /// Times an attempt blew its cycle budget (counted per occurrence,
+    /// including attempts that were subsequently retried).
+    pub deadline_exceeded: u64,
+    /// Fault events scheduled into attempts this model processed.
+    pub faults_injected: u64,
+    /// Worker panics (real or injected kill) absorbed while serving
+    /// this model; each one cost an engine rebuild.
+    pub worker_kills: u64,
+    /// Requests shed by the open circuit breaker.
+    pub shed: u64,
+    /// Requests resolved with a typed error (includes shed).
+    pub failed: u64,
+    /// Times this model's circuit breaker tripped open.
+    pub breaker_trips: u64,
+    /// Host queue-wait distribution (nanoseconds).
+    pub wait_hist: Histogram,
+    /// Host submit→resolve latency distribution (nanoseconds), over
+    /// every resolved request — successes and typed failures alike.
+    pub e2e_hist: Histogram,
 }
 
 impl ModelServeStats {
@@ -317,6 +547,11 @@ impl ModelServeStats {
         cfg.cycles_to_ms(self.total_cycles) / self.requests as f64
     }
 
+    /// Requests that reached a final state (success or typed error).
+    pub fn resolved(&self) -> u64 {
+        self.requests + self.failed
+    }
+
     fn absorb(&mut self, other: &ModelServeStats) {
         self.requests += other.requests;
         self.batches += other.batches;
@@ -325,6 +560,15 @@ impl ModelServeStats {
         self.bytes_moved += other.bytes_moved;
         self.queue_wait += other.queue_wait;
         self.service += other.service;
+        self.retries += other.retries;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.faults_injected += other.faults_injected;
+        self.worker_kills += other.worker_kills;
+        self.shed += other.shed;
+        self.failed += other.failed;
+        self.breaker_trips += other.breaker_trips;
+        self.wait_hist.merge(&other.wait_hist);
+        self.e2e_hist.merge(&other.e2e_hist);
     }
 }
 
@@ -342,6 +586,9 @@ pub struct ServeReport {
     pub high_water: usize,
     /// Artifact-cache counters for the run's worker loads.
     pub cache: CacheStats,
+    /// Worker *threads* lost outright (panicked outside the per-request
+    /// supervision); their queued leftovers were failed typed.
+    pub workers_lost: u64,
 }
 
 impl ServeReport {
@@ -359,11 +606,68 @@ impl ServeReport {
         self.requests as f64 / s
     }
 
-    /// One-line human summary for `repro serve`.
+    /// Requests resolved with a typed error (includes breaker sheds).
+    pub fn failed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.failed).sum()
+    }
+
+    /// Redeliveries performed across all models.
+    pub fn retries(&self) -> u64 {
+        self.per_model.iter().map(|m| m.retries).sum()
+    }
+
+    /// Fault events injected across all models.
+    pub fn faults_injected(&self) -> u64 {
+        self.per_model.iter().map(|m| m.faults_injected).sum()
+    }
+
+    /// Worker panics absorbed by in-place engine rebuilds.
+    pub fn workers_replaced(&self) -> u64 {
+        self.per_model.iter().map(|m| m.worker_kills).sum()
+    }
+
+    /// Fraction of resolved requests that violated the SLO (resolved
+    /// with a typed error: deadline, shed, death, …). 0.0 when nothing
+    /// resolved.
+    pub fn slo_violation_rate(&self) -> f64 {
+        let resolved: u64 = self.per_model.iter().map(|m| m.resolved()).sum();
+        if resolved == 0 {
+            return 0.0;
+        }
+        self.failed() as f64 / resolved as f64
+    }
+
+    /// Queue-wait distribution merged across models (nanoseconds).
+    pub fn queue_wait_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for m in &self.per_model {
+            h.merge(&m.wait_hist);
+        }
+        h
+    }
+
+    /// Submit→resolve latency distribution merged across models
+    /// (nanoseconds).
+    pub fn e2e_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for m in &self.per_model {
+            h.merge(&m.e2e_hist);
+        }
+        h
+    }
+
+    /// Human summary for `repro serve`: throughput plus the p50/p95/p99
+    /// latency profile and, when anything went wrong, the failure
+    /// counters. Percentiles come from fixed-bucket histograms — O(1)
+    /// per sample, no sort at report time.
     pub fn summary(&self, cfg: &SnowflakeConfig) -> String {
-        format!(
+        let wait = self.queue_wait_hist();
+        let e2e = self.e2e_hist();
+        let us = |ns: u64| ns as f64 / 1_000.0;
+        let mut s = format!(
             "{} requests on {} workers in {:?} ({:.1} req/s host), {} simulated cycles \
-             ({:.2} ms at {} MHz), queue high-water {}, cache {} hits / {} misses / {} evictions",
+             ({:.2} ms at {} MHz), queue high-water {}, cache {} hits / {} misses / {} evictions\n\
+             latency p50/p95/p99: queue-wait {:.0}/{:.0}/{:.0} us, end-to-end {:.0}/{:.0}/{:.0} us",
             self.requests,
             self.workers,
             self.wall,
@@ -375,7 +679,38 @@ impl ServeReport {
             self.cache.hits,
             self.cache.misses,
             self.cache.evictions,
-        )
+            us(wait.quantile(0.50)),
+            us(wait.quantile(0.95)),
+            us(wait.quantile(0.99)),
+            us(e2e.quantile(0.50)),
+            us(e2e.quantile(0.95)),
+            us(e2e.quantile(0.99)),
+        );
+        let (failed, retries, faults, kills, shed, trips, deadlines) = (
+            self.failed(),
+            self.retries(),
+            self.faults_injected(),
+            self.workers_replaced(),
+            self.per_model.iter().map(|m| m.shed).sum::<u64>(),
+            self.per_model.iter().map(|m| m.breaker_trips).sum::<u64>(),
+            self.per_model.iter().map(|m| m.deadline_exceeded).sum::<u64>(),
+        );
+        if failed + retries + faults + kills + self.workers_lost > 0 {
+            s.push_str(&format!(
+                "\nresilience: {} failed ({:.1}% SLO violation), {} retries, {} faults injected, \
+                 {} deadline hits, {} workers replaced, {} lost, breaker: {} trips / {} shed",
+                failed,
+                self.slo_violation_rate() * 100.0,
+                retries,
+                faults,
+                deadlines,
+                kills,
+                self.workers_lost,
+                trips,
+                shed,
+            ));
+        }
+        s
     }
 }
 
@@ -397,6 +732,16 @@ impl Client<'_> {
     /// Submit one request, blocking while the queue is full
     /// (backpressure). Returns the ticket that will resolve to the
     /// [`Response`].
+    ///
+    /// ## No orphaned tickets
+    ///
+    /// Admission and `close` are serialized under the queue mutex, so
+    /// a ticket handed out here is always for a request that made it
+    /// *into* the queue before the closed flag was set. Workers only
+    /// exit when the queue is closed **and empty**, and after the pool
+    /// joins, [`Server::run`] fails any leftover queued request typed
+    /// ([`ServeError::WorkerDied`]) — so every ticket resolves, even
+    /// if every worker thread dies.
     pub fn submit(&self, model: ModelId, input: Tensor<f32>) -> Result<Ticket, ServeError> {
         self.enqueue(model, input, true)
     }
@@ -433,6 +778,7 @@ impl Client<'_> {
         st.q.push_back(QueuedRequest {
             model: model.0,
             seqno,
+            attempt: 0,
             input,
             submitted: Instant::now(),
             slot: Arc::clone(&slot),
@@ -507,16 +853,188 @@ fn close(shared: &Shared) {
     shared.space.notify_all();
 }
 
-/// The worker body: pop-coalesce-infer until the queue is closed *and*
+/// Everything a worker needs to serve — and to *rebuild its engine*
+/// after a death mid-request.
+struct WorkerCtx<'a> {
+    worker: usize,
+    shared: &'a Shared,
+    cache: &'a ArtifactCache,
+    cfg: &'a SnowflakeConfig,
+    models: &'a [RegisteredModel],
+}
+
+/// Re-queue a request for another attempt. Bypasses the depth bound
+/// and the closed flag: a retry is not a new submission, and dropping
+/// it would lose the request — workers only exit once the queue is
+/// *empty*, so a re-queued request is always picked back up.
+fn requeue(shared: &Shared, mut r: QueuedRequest) {
+    r.attempt += 1;
+    let mut st = shared.state.lock().expect("serve queue poisoned");
+    st.q.push_back(r);
+    st.high_water = st.high_water.max(st.q.len());
+    drop(st);
+    shared.work.notify_one();
+}
+
+/// Report a final outcome to the model's circuit breaker.
+fn breaker_feedback(shared: &Shared, model: usize, ok: bool) {
+    let pol = &shared.policy;
+    if pol.breaker_threshold == 0 {
+        return;
+    }
+    let mut st = shared.state.lock().expect("serve queue poisoned");
+    if ok {
+        st.breakers[model].success();
+    } else {
+        st.breakers[model].hard_failure(pol.breaker_threshold, pol.breaker_cooldown);
+    }
+}
+
+/// Rebuild a dead worker's engine in place: fresh [`Engine`], every
+/// model re-loaded through the shared cache (always a hit — the image
+/// was deployed at startup — so a rebuild is a DRAM clone, not a
+/// recompile).
+fn rebuild_engine(ctx: &WorkerCtx<'_>, engine: &mut Engine, handles: &mut Vec<ModelHandle>) {
+    *engine = Engine::new(ctx.cfg.clone());
+    handles.clear();
+    for m in ctx.models {
+        // Startup already proved these loads good; a failure here is
+        // unrecoverable for this worker, and the resulting thread
+        // panic is absorbed at join — queued leftovers fail typed.
+        let h = ctx
+            .cache
+            .load_into(engine, &m.artifact, m.seed)
+            .unwrap_or_else(|e| panic!("worker {}: rebuilding {}: {e}", ctx.worker, m.name));
+        handles.push(h);
+    }
+}
+
+/// Final delivery: record submit→resolve latency and hand the result
+/// to the ticket. Every dequeued request either ends here exactly once
+/// or is re-queued for another attempt — nothing resolves twice and
+/// nothing is silently dropped.
+fn resolve(ms: &mut ModelServeStats, r: &QueuedRequest, result: Result<Response, ServeError>) {
+    ms.e2e_hist.record(r.submitted.elapsed().as_nanos() as u64);
+    if result.is_err() {
+        ms.failed += 1;
+    }
+    deliver(&r.slot, result);
+}
+
+/// Serve one request attempt end to end: plan its faults, run it under
+/// per-request supervision, then deliver, retry or fail typed.
+fn serve_one(
+    ctx: &WorkerCtx<'_>,
+    engine: &mut Engine,
+    handles: &mut Vec<ModelHandle>,
+    stats: &mut [ModelServeStats],
+    r: QueuedRequest,
+    batch_size: usize,
+    wait: Duration,
+) {
+    let shared = ctx.shared;
+    let pol = &shared.policy;
+    let model = r.model;
+    let plan = pol.plan_for(model, r.seqno, r.attempt);
+    stats[model].faults_injected += plan.len() as u64;
+    // An injected worker kill takes the supervised-death path without
+    // actually unwinding (keeps test output clean); catch_unwind stays
+    // armed for *real* engine panics, which take the identical path.
+    let kill = pol.wants_kill(r.seqno, r.attempt);
+    let t0 = Instant::now();
+    let outcome = if kill {
+        None
+    } else {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.infer_with(handles[model], &r.input, &plan, pol.deadline[model])
+        }))
+        .ok()
+    };
+    stats[model].service += t0.elapsed();
+    match outcome {
+        Some(Ok(inf)) => {
+            breaker_feedback(shared, model, true);
+            let ms = &mut stats[model];
+            ms.requests += 1;
+            ms.total_cycles += inf.stats.cycles;
+            ms.bytes_moved += inf.stats.bytes_moved();
+            resolve(
+                ms,
+                &r,
+                Ok(Response {
+                    model: ModelId(model),
+                    request: r.seqno,
+                    worker: ctx.worker,
+                    batch_size,
+                    stats: inf.stats,
+                    output: inf.output,
+                    queue_wait: wait,
+                    service: t0.elapsed(),
+                }),
+            );
+        }
+        Some(Err(e)) => {
+            let (transient, deadline) = match &e {
+                EngineError::Sim(se) => {
+                    (se.injected, se.kind == SimErrorKind::DeadlineExceeded)
+                }
+                _ => (false, false),
+            };
+            if deadline {
+                stats[model].deadline_exceeded += 1;
+            }
+            if transient && r.attempt < pol.retries {
+                stats[model].retries += 1;
+                requeue(shared, r);
+            } else {
+                // Hard failure: a genuine (non-injected) deadline miss
+                // or program error, or a transient one out of budget.
+                breaker_feedback(shared, model, false);
+                let err = if deadline {
+                    ServeError::DeadlineExceeded {
+                        budget_cycles: pol.deadline[model].unwrap_or(0),
+                    }
+                } else {
+                    ServeError::Engine(e)
+                };
+                resolve(&mut stats[model], &r, Err(err));
+            }
+        }
+        None => {
+            // The worker died mid-request (injected kill or real
+            // panic). Supervision: rebuild the engine in place so the
+            // worker thread survives, then retry or fail the request
+            // typed — never drop it.
+            stats[model].worker_kills += 1;
+            rebuild_engine(ctx, engine, handles);
+            if r.attempt < pol.retries {
+                stats[model].retries += 1;
+                requeue(shared, r);
+            } else {
+                breaker_feedback(shared, model, false);
+                resolve(
+                    &mut stats[model],
+                    &r,
+                    Err(ServeError::WorkerDied(format!(
+                        "worker {} died serving request {} (attempt {})",
+                        ctx.worker, r.seqno, r.attempt
+                    ))),
+                );
+            }
+        }
+    }
+}
+
+/// The worker body: pop-coalesce-serve until the queue is closed *and*
 /// drained. Returns this worker's per-model counters.
 fn worker_loop(
-    worker: usize,
-    shared: &Shared,
+    ctx: &WorkerCtx<'_>,
     engine: &mut Engine,
-    handles: &[ModelHandle],
-    n_models: usize,
+    handles: &mut Vec<ModelHandle>,
 ) -> Vec<ModelServeStats> {
-    let mut stats = vec![ModelServeStats::default(); n_models];
+    let shared = ctx.shared;
+    let pol = &shared.policy;
+    let mut stats = vec![ModelServeStats::default(); ctx.models.len()];
     loop {
         let batch = {
             let mut st = shared.state.lock().expect("serve queue poisoned");
@@ -535,48 +1053,31 @@ fn worker_loop(
 
         let model = batch[0].model;
         let n = batch.len();
+
+        // An open breaker sheds the whole batch before any sim work.
+        if pol.breaker_threshold > 0 {
+            let shed = {
+                let mut st = shared.state.lock().expect("serve queue poisoned");
+                st.breakers[model].shed(n as u64)
+            };
+            if shed {
+                let ms = &mut stats[model];
+                for r in batch {
+                    ms.shed += 1;
+                    resolve(ms, &r, Err(ServeError::ModelUnavailable(model)));
+                }
+                continue;
+            }
+        }
+
         let dequeued = Instant::now();
-        let ms = &mut stats[model];
-        ms.batches += 1;
-        ms.max_batch = ms.max_batch.max(n);
-        let (metas, inputs): (Vec<_>, Vec<_>) = batch
-            .into_iter()
-            .map(|r| {
-                let wait = dequeued.duration_since(r.submitted);
-                ms.queue_wait += wait;
-                ((r.seqno, r.slot, wait), r.input)
-            })
-            .unzip();
-        let result = engine.infer_batch(handles[model], &inputs);
-        let service_total = dequeued.elapsed();
-        ms.service += service_total;
-        let per_request = service_total / n as u32;
-        match result {
-            Ok(inferences) => {
-                for ((seqno, slot, wait), inf) in metas.into_iter().zip(inferences) {
-                    ms.requests += 1;
-                    ms.total_cycles += inf.stats.cycles;
-                    ms.bytes_moved += inf.stats.bytes_moved();
-                    deliver(
-                        &slot,
-                        Ok(Response {
-                            model: ModelId(model),
-                            request: seqno,
-                            worker,
-                            batch_size: n,
-                            stats: inf.stats,
-                            output: inf.output,
-                            queue_wait: wait,
-                            service: per_request,
-                        }),
-                    );
-                }
-            }
-            Err(e) => {
-                for (_seqno, slot, _wait) in metas {
-                    deliver(&slot, Err(ServeError::Engine(e.clone())));
-                }
-            }
+        stats[model].batches += 1;
+        stats[model].max_batch = stats[model].max_batch.max(n);
+        for r in batch {
+            let wait = dequeued.duration_since(r.submitted);
+            stats[model].queue_wait += wait;
+            stats[model].wait_hist.record(wait.as_nanos() as u64);
+            serve_one(ctx, engine, handles, &mut stats, r, n, wait);
         }
     }
 }
@@ -587,22 +1088,40 @@ fn worker_loop(
 pub struct Server {
     cfg: SnowflakeConfig,
     serve_cfg: ServeConfig,
+    resilience: ResilienceConfig,
     models: Vec<RegisteredModel>,
     cache: ArtifactCache,
 }
 
 impl Server {
     /// A server for the given hardware and pool configuration, no
-    /// models registered.
+    /// models registered, default [`ResilienceConfig`].
     pub fn new(cfg: SnowflakeConfig, serve_cfg: ServeConfig) -> Self {
         let serve_cfg = serve_cfg.normalized();
         let cache = ArtifactCache::with_capacity(serve_cfg.cache_cap);
-        Server { cfg, serve_cfg, models: Vec::new(), cache }
+        Server {
+            cfg,
+            serve_cfg,
+            resilience: ResilienceConfig::default(),
+            models: Vec::new(),
+            cache,
+        }
     }
 
     /// The normalized pool configuration.
     pub fn serve_config(&self) -> ServeConfig {
         self.serve_cfg
+    }
+
+    /// Replace the failure-handling policy (deadlines, retries,
+    /// breaker, injected faults) for subsequent runs.
+    pub fn set_resilience(&mut self, r: ResilienceConfig) {
+        self.resilience = r;
+    }
+
+    /// The active failure-handling policy.
+    pub fn resilience(&self) -> &ResilienceConfig {
+        &self.resilience
     }
 
     /// Register a model: validate its config fingerprint against the
@@ -643,6 +1162,31 @@ impl Server {
         self.models.len()
     }
 
+    /// The fault-plan shape hint a serve run derives for this model.
+    /// Public so the sequential oracle (`repro serve --check`) can
+    /// regenerate per-attempt fault plans bit-identically.
+    pub fn plan_hint(&self, id: ModelId) -> Option<PlanHint> {
+        let m = self.models.get(id.0)?;
+        Some(PlanHint {
+            n_units: self.cfg.n_load_units,
+            n_cus: self.cfg.n_cus,
+            mem_words: m.artifact.compiled.plan.mem_words,
+            expect_cycles: m.artifact.predicted_cycles().max(100_000),
+        })
+    }
+
+    /// The per-request cycle budget the active policy gives this model
+    /// (`None` = no deadline: slack 0 or no cost prediction).
+    pub fn deadline_budget(&self, id: ModelId) -> Option<u64> {
+        let m = self.models.get(id.0)?;
+        let p = m.artifact.predicted_cycles();
+        if self.resilience.deadline_slack > 0.0 && p > 0 {
+            Some((p as f64 * self.resilience.deadline_slack).ceil() as u64)
+        } else {
+            None
+        }
+    }
+
     /// Spin up the worker pool, run `client_fn` on the calling thread
     /// with a [`Client`] for submissions, then close the queue, drain
     /// it and join the pool. Every ticket issued inside `client_fn` is
@@ -662,6 +1206,20 @@ impl Server {
         &self,
         requests: Vec<(ModelId, Tensor<f32>)>,
     ) -> Result<(Vec<Response>, ServeReport), ServeError> {
+        let (outcomes, report) = self.serve_all_outcomes(requests)?;
+        let responses = outcomes.into_iter().collect::<Result<Vec<_>, _>>()?;
+        Ok((responses, report))
+    }
+
+    /// As [`Server::serve_all`], but return every request's individual
+    /// outcome instead of failing the whole run on the first error —
+    /// the mode chaos runs use, where typed per-request failures
+    /// (deadline, shed, worker death) are expected data, not aborts.
+    /// Outcomes come back in submission order.
+    pub fn serve_all_outcomes(
+        &self,
+        requests: Vec<(ModelId, Tensor<f32>)>,
+    ) -> Result<(Vec<Result<Response, ServeError>>, ServeReport), ServeError> {
         let now = Instant::now();
         let mut q = VecDeque::with_capacity(requests.len());
         let mut tickets = Vec::with_capacity(requests.len());
@@ -671,6 +1229,7 @@ impl Server {
             q.push_back(QueuedRequest {
                 model: model.0,
                 seqno: i as u64,
+                attempt: 0,
                 input,
                 submitted: now,
                 slot: Arc::clone(&slot),
@@ -678,8 +1237,8 @@ impl Server {
             tickets.push(Ticket { slot, model, request: i as u64 });
         }
         let ((), report) = self.run_inner(q, |_| ())?;
-        let responses = tickets.into_iter().map(Ticket::wait).collect::<Result<Vec<_>, _>>()?;
-        Ok((responses, report))
+        let outcomes = tickets.into_iter().map(Ticket::wait).collect();
+        Ok((outcomes, report))
     }
 
     /// Cache counters accumulated across runs of this server.
@@ -696,24 +1255,50 @@ impl Server {
             return Err(ServeError::Worker("no models registered".to_string()));
         }
         let scfg = self.serve_cfg;
+        let res = &self.resilience;
         let cache_before = self.cache.stats();
+        let n_models = self.models.len();
+        let policy = Policy {
+            retries: res.retries as u64,
+            deadline: (0..n_models).map(|i| self.deadline_budget(ModelId(i))).collect(),
+            hints: (0..n_models)
+                .map(|i| self.plan_hint(ModelId(i)).expect("registered model"))
+                .collect(),
+            spec: res.faults.clone(),
+            fault_seed: res.fault_seed,
+            breaker_threshold: res.breaker_threshold,
+            breaker_cooldown: res.breaker_cooldown,
+        };
         let shared = Shared {
             state: Mutex::new(QueueState {
                 high_water: prefill.len(),
                 next_seqno: prefill.len() as u64,
                 q: prefill,
                 closed: false,
+                breakers: vec![Breaker::default(); n_models],
             }),
             space: Condvar::new(),
             work: Condvar::new(),
             depth: scfg.queue_depth,
             max_batch: scfg.max_batch,
+            policy,
         };
         let ready = ReadySignal::new();
         let t0 = Instant::now();
-        let n_models = self.models.len();
 
-        let (r, worker_stats) = std::thread::scope(|s| {
+        // Fail every request still queued with `err` — the pool is
+        // gone; a silent drop would leave its ticket waiting forever.
+        let fail_leftovers = |err: &ServeError| -> u64 {
+            let mut st = shared.state.lock().expect("serve queue poisoned");
+            let mut n = 0;
+            while let Some(r) = st.q.pop_front() {
+                deliver(&r.slot, Err(err.clone()));
+                n += 1;
+            }
+            n
+        };
+
+        let (r, worker_stats, workers_lost) = std::thread::scope(|s| {
             let handles: Vec<_> = (0..scfg.workers)
                 .map(|w| {
                     let (shared, ready, cache, cfg, models) =
@@ -732,7 +1317,8 @@ impl Server {
                             }
                         }
                         ready.arrived();
-                        Ok(worker_loop(w, shared, &mut engine, &hs, n_models))
+                        let ctx = WorkerCtx { worker: w, shared, cache, cfg, models };
+                        Ok(worker_loop(&ctx, &mut engine, &mut hs))
                     })
                 })
                 .collect();
@@ -740,9 +1326,11 @@ impl Server {
             if let Some(err) = ready.wait(scfg.workers) {
                 close(&shared);
                 for h in handles {
-                    let _ = h.join().expect("serve worker panicked");
+                    let _ = h.join();
                 }
-                return Err(ServeError::Worker(err));
+                let err = ServeError::Worker(err);
+                fail_leftovers(&err);
+                return Err(err);
             }
             let client = Client { shared: &shared, models: &self.models };
             // Close the queue even if the client panics: otherwise the
@@ -751,16 +1339,28 @@ impl Server {
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| client_fn(&client)));
             close(&shared);
             let mut worker_stats = Vec::with_capacity(scfg.workers);
+            let mut workers_lost = 0u64;
             for h in handles {
-                worker_stats.push(
-                    h.join().expect("serve worker panicked").map_err(ServeError::Worker)?,
-                );
+                match h.join() {
+                    Ok(Ok(ws)) => worker_stats.push(ws),
+                    Ok(Err(msg)) => return Err(ServeError::Worker(msg)),
+                    // The worker thread itself died (panic outside the
+                    // per-request supervision, e.g. a failed engine
+                    // rebuild). Its counters are gone but its queued
+                    // requests are not: fail them typed below.
+                    Err(_) => workers_lost += 1,
+                }
+            }
+            if workers_lost > 0 {
+                fail_leftovers(&ServeError::WorkerDied(format!(
+                    "pool lost {workers_lost} worker thread(s) with requests still queued"
+                )));
             }
             let r = match r {
                 Ok(v) => v,
                 Err(p) => std::panic::resume_unwind(p),
             };
-            Ok((r, worker_stats))
+            Ok((r, worker_stats, workers_lost))
         })?;
 
         let mut per_model: Vec<ModelServeStats> = self
@@ -771,6 +1371,12 @@ impl Server {
         for ws in &worker_stats {
             for (agg, w) in per_model.iter_mut().zip(ws) {
                 agg.absorb(w);
+            }
+        }
+        {
+            let st = shared.state.lock().expect("serve queue poisoned");
+            for (agg, b) in per_model.iter_mut().zip(&st.breakers) {
+                agg.breaker_trips = b.trips;
             }
         }
         let cache_after = self.cache.stats();
@@ -785,6 +1391,7 @@ impl Server {
                 misses: cache_after.misses - cache_before.misses,
                 evictions: cache_after.evictions - cache_before.evictions,
             },
+            workers_lost,
         };
         Ok((r, report))
     }
@@ -798,6 +1405,7 @@ mod tests {
         QueuedRequest {
             model,
             seqno,
+            attempt: 0,
             input: Tensor::zeros(&[1]),
             submitted: Instant::now(),
             slot: Arc::new(TicketSlot::default()),
@@ -856,5 +1464,76 @@ mod tests {
             Err(e) => assert_eq!(e, ServeError::QueueFull),
             Ok(_) => panic!("expected a delivered error"),
         }
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_resolves_when_delivered() {
+        // Undelivered slot: wait_timeout gives up typed.
+        let slot = Arc::new(TicketSlot::default());
+        let t = Ticket { slot, model: ModelId(0), request: 0 };
+        assert_eq!(
+            t.wait_timeout(Duration::from_millis(5)),
+            Err(ServeError::WaitTimeout)
+        );
+        // Pre-delivered slot: wait_timeout returns immediately.
+        let slot = Arc::new(TicketSlot::default());
+        let t = Ticket { slot: Arc::clone(&slot), model: ModelId(0), request: 1 };
+        deliver(&slot, Err(ServeError::QueueFull));
+        assert_eq!(
+            t.wait_timeout(Duration::from_secs(5)),
+            Err(ServeError::QueueFull)
+        );
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_recloses() {
+        let (threshold, cooldown) = (3, 4);
+        let mut b = Breaker::default();
+        // Two failures: still closed.
+        b.hard_failure(threshold, cooldown);
+        b.hard_failure(threshold, cooldown);
+        assert_eq!(b.mode, BreakerMode::Closed);
+        assert!(!b.shed(1));
+        // Third consecutive failure trips it open.
+        b.hard_failure(threshold, cooldown);
+        assert_eq!(b.mode, BreakerMode::Open);
+        assert_eq!(b.trips, 1);
+        // Sheds while cooling down, half-opens at zero.
+        assert!(b.shed(2));
+        assert_eq!(b.mode, BreakerMode::Open);
+        assert!(b.shed(2));
+        assert_eq!(b.mode, BreakerMode::HalfOpen);
+        // The probe batch is admitted.
+        assert!(!b.shed(1));
+        // A failed probe re-opens immediately (one failure, not three).
+        b.hard_failure(threshold, cooldown);
+        assert_eq!(b.mode, BreakerMode::Open);
+        assert_eq!(b.trips, 2);
+        // Cool down again, probe succeeds, breaker recloses.
+        assert!(b.shed(4));
+        assert!(!b.shed(1));
+        b.success();
+        assert_eq!(b.mode, BreakerMode::Closed);
+        assert_eq!(b.consecutive, 0);
+    }
+
+    #[test]
+    fn breaker_success_interrupts_the_failure_streak() {
+        let mut b = Breaker::default();
+        b.hard_failure(3, 4);
+        b.hard_failure(3, 4);
+        b.success();
+        b.hard_failure(3, 4);
+        b.hard_failure(3, 4);
+        assert_eq!(b.mode, BreakerMode::Closed, "streak was reset by the success");
+    }
+
+    #[test]
+    fn resilience_default_is_quiet() {
+        let r = ResilienceConfig::default();
+        assert_eq!(r.deadline_slack, 0.0);
+        assert!(r.faults.is_none());
+        assert_eq!(r.retries, 2);
+        assert!(r.breaker_threshold > 0);
     }
 }

@@ -19,7 +19,16 @@
 //!              `--requests N` submissions across the models. `--models a,b`
 //!              compiles in-process, `--artifacts x,y` loads artifact files;
 //!              `--check` replays every request through a sequential Engine
-//!              and asserts per-request cycle/DRAM/output equality
+//!              and asserts per-request cycle/DRAM/output equality — including
+//!              chaos runs, where it replays each request's attempt chain;
+//!              resilience knobs: `--faults kind:rate,..` (dma-stall, cu-hang,
+//!              dram-corrupt, abort, worker-kill), `--deadline-slack S`,
+//!              `--retries K`, `--breaker-threshold N`, `--breaker-cooldown C`,
+//!              `--fault-seed S`
+//!   chaos      deterministic fault-sweep table: fault kind × rate × retry
+//!              policy → goodput, p99 latency, SLO violations; exits nonzero
+//!              if the survivability gate fails (worker-kill ≥5% at the
+//!              default retry budget must keep ≥90% goodput, no lost requests)
 //!   compile    compile a model, print summary / asm
 //!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
 //!   explain    print the chosen per-layer schedule (tuner debugging),
@@ -34,8 +43,11 @@
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
 use snowflake::coordinator::{driver, report, tune};
-use snowflake::engine::serve::{ServeConfig, Server};
-use snowflake::engine::Engine;
+use snowflake::engine::serve::{
+    ModelId, ResilienceConfig, Response, ServeConfig, ServeError, Server,
+};
+use snowflake::engine::{Engine, EngineError};
+use snowflake::sim::fault::{FaultPlan, FaultSpec};
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::asm::disasm_program;
 use snowflake::model::weights::synthetic_input;
@@ -276,6 +288,7 @@ fn main() {
             print_run(&g.name, &out, &cfg);
         }
         Some("serve") => serve(&args, &cfg, seed),
+        Some("chaos") => chaos(&args, &cfg, seed),
         Some("validate") => {
             let g = load_model(&args);
             let (out, rows) =
@@ -396,8 +409,8 @@ fn main() {
                 eprintln!("unknown subcommand '{o}'\n");
             }
             eprintln!(
-                "usage: repro <info|build|run|serve|compile|validate|explain|tune|table1|table2|\
-                 table3|fig4|accuracy|sweep|bless-baselines|golden>\n\
+                "usage: repro <info|build|run|serve|chaos|compile|validate|explain|tune|table1|\
+                 table2|table3|fig4|accuracy|sweep|bless-baselines|golden>\n\
                  \x20  --model alexnet|resnet18|resnet50   --model-file model.json\n\
                  \x20  --balance greedy1|greedy2|greedy4|two-units|one-unit\n\
                  \x20  --tune heuristic|cost|measured  --top-k N (measured candidates/layer)\n\
@@ -405,10 +418,46 @@ fn main() {
                  \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
                  \x20  --requests N --models a,b --artifacts x,y --check (serve)\n\
                  \x20  --workers N --max-batch B --queue-depth D --cache-cap N (serve)\n\
+                 \x20  --faults kind:rate,.. --deadline-slack S --retries K --fault-seed S\n\
+                 \x20  --breaker-threshold N --breaker-cooldown C (serve, chaos)\n\
+                 \x20  --kinds a,b --rates r1,r2 --model NAME (chaos)\n\
                  \x20  --threads N (sweep)  --ci-dir DIR (bless-baselines)"
             );
             std::process::exit(2);
         }
+    }
+}
+
+/// Parse the resilience knobs shared by `repro serve` and `repro
+/// chaos`. The fault seed defaults to the run seed so the whole chaos
+/// run is reproducible from one number.
+fn resilience_from_args(args: &Args, seed: u64) -> ResilienceConfig {
+    let faults = args.opt("faults").map(|s| {
+        FaultSpec::parse(s).unwrap_or_else(|e| {
+            eprintln!("--faults: {e}");
+            std::process::exit(2);
+        })
+    });
+    ResilienceConfig {
+        deadline_slack: args.opt_f64("deadline-slack", 0.0),
+        retries: args.opt_usize("retries", 2),
+        breaker_threshold: args.opt_u64("breaker-threshold", 4),
+        breaker_cooldown: args.opt_u64("breaker-cooldown", 8),
+        faults,
+        fault_seed: args.opt_u64("fault-seed", seed),
+    }
+}
+
+/// Coarse error class used to compare a served failure against the
+/// sequential oracle's predicted failure (messages carry worker ids
+/// and so cannot be compared verbatim).
+fn err_class(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::DeadlineExceeded { .. } => "deadline",
+        ServeError::WorkerDied(_) => "worker-died",
+        ServeError::ModelUnavailable(_) => "shed",
+        ServeError::Engine(_) => "engine",
+        _ => "other",
     }
 }
 
@@ -419,10 +468,15 @@ fn main() {
 /// the `--workers` pool (each worker an engine with every model
 /// resident, loaded through the shared artifact cache), and report
 /// per-request lines plus per-model and aggregate statistics.
-/// `--check` replays every request through a fresh sequential `Engine`
-/// and asserts bit-identical cycles, DRAM traffic and output words,
-/// exiting nonzero on a mismatch — the CI smoke gate that concurrency,
-/// coalescing and the cache perturb nothing simulated.
+/// `--faults` & friends turn on deterministic chaos (see
+/// `ResilienceConfig`); typed per-request failures are then expected
+/// data rather than fatal. `--check` replays every request through a
+/// fresh sequential `Engine` — under faults, it replays the request's
+/// whole attempt chain with the same per-attempt fault plans and retry
+/// policy — and asserts bit-identical cycles, DRAM traffic and output
+/// words, exiting nonzero on a mismatch: the CI gate that concurrency,
+/// coalescing, the cache *and the fault machinery* perturb nothing
+/// simulated.
 fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     let requests = args.opt_usize("requests", 8);
     let serve_cfg = ServeConfig {
@@ -431,8 +485,10 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
         queue_depth: args.opt_usize("queue-depth", 32),
         cache_cap: args.opt_usize("cache-cap", 0),
     };
+    let resilience = resilience_from_args(args, seed);
     let mut server = Server::new(cfg.clone(), serve_cfg);
-    let mut ids: Vec<snowflake::engine::serve::ModelId> = Vec::new();
+    server.set_resilience(resilience.clone());
+    let mut ids: Vec<ModelId> = Vec::new();
     // Graph clones are cheap; kept for per-request input synthesis.
     let mut graphs: Vec<snowflake::model::graph::Graph> = Vec::new();
     let mut admit = |a: Artifact, server: &mut Server| {
@@ -480,9 +536,23 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
         "pool: {} workers, queue depth {}, max batch {}",
         scfg.workers, scfg.queue_depth, scfg.max_batch
     );
+    let chaos_on = resilience.faults.is_some();
+    if chaos_on || resilience.deadline_slack > 0.0 {
+        println!(
+            "resilience: faults {}, deadline slack {}, retries {}, breaker {}@{} (fault seed {})",
+            args.opt_or("faults", "off"),
+            resilience.deadline_slack,
+            resilience.retries,
+            resilience.breaker_threshold,
+            resilience.breaker_cooldown,
+            resilience.fault_seed
+        );
+    }
 
     // Stream the request mix through the pool: submission backpressures
     // on the bounded queue while the workers drain it concurrently.
+    // Outcomes are collected individually — under chaos a typed failure
+    // is data, not an abort.
     let result = server.run(|client| {
         let tickets: Vec<_> = (0..requests)
             .map(|r| {
@@ -493,26 +563,44 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
         tickets
             .into_iter()
             .map(|t| t.and_then(|t| t.wait()))
-            .collect::<Result<Vec<_>, _>>()
+            .collect::<Vec<Result<Response, ServeError>>>()
     });
-    let (responses, report) = match result {
-        Ok((Ok(rs), rep)) => (rs, rep),
-        Ok((Err(e), _)) | Err(e) => {
+    let (outcomes, report) = match result {
+        Ok((o, rep)) => (o, rep),
+        Err(e) => {
             eprintln!("serve: {e}");
             std::process::exit(1);
         }
     };
-    for resp in &responses {
-        println!(
-            "request {:>3} -> {:<12} {:>12} cycles ({:.3} ms sim)  worker {} batch {} wait {:?}",
-            resp.request,
-            server.model_name(resp.model).unwrap_or("?"),
-            resp.stats.cycles,
-            resp.stats.time_ms(cfg),
-            resp.worker,
-            resp.batch_size,
-            resp.queue_wait
-        );
+    let mut hard_failures = 0usize;
+    for (r, outcome) in outcomes.iter().enumerate() {
+        match outcome {
+            Ok(resp) => println!(
+                "request {:>3} -> {:<12} {:>12} cycles ({:.3} ms sim)  worker {} batch {} wait {:?}",
+                resp.request,
+                server.model_name(resp.model).unwrap_or("?"),
+                resp.stats.cycles,
+                resp.stats.time_ms(cfg),
+                resp.worker,
+                resp.batch_size,
+                resp.queue_wait
+            ),
+            Err(e) => {
+                hard_failures += 1;
+                println!(
+                    "request {:>3} -> {:<12} FAILED [{}]: {e}",
+                    r,
+                    graphs[r % graphs.len()].name,
+                    err_class(e)
+                );
+            }
+        }
+    }
+    if hard_failures > 0 && !chaos_on && resilience.deadline_slack == 0.0 {
+        // Failures with no fault injection and no deadline are real
+        // bugs — keep the old fatal behavior.
+        eprintln!("serve: {hard_failures} request(s) failed with no faults configured");
+        std::process::exit(1);
     }
 
     println!("\nper-model:");
@@ -528,56 +616,275 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
             ms.avg_sim_ms(cfg),
             ms.avg_queue_wait()
         );
+        if ms.failed + ms.retries + ms.faults_injected > 0 {
+            println!(
+                "  {:<12}      {} failed ({} shed, {} deadline), {} retries, {} faults injected, \
+                 {} worker kills, {} breaker trips",
+                "", ms.failed, ms.shed, ms.deadline_exceeded, ms.retries, ms.faults_injected,
+                ms.worker_kills, ms.breaker_trips
+            );
+        }
     }
     println!("serve: {}", report.summary(cfg));
 
     if args.flag("check") {
-        // The sequential oracle: one engine, every request replayed in
-        // submission order. Worker scheduling, coalescing and the
-        // artifact cache must not have perturbed a single simulated
-        // cycle, byte or output word.
-        let mut engine = Engine::new(cfg.clone());
-        let handles: Vec<_> = ids
-            .iter()
-            .map(|id| {
-                let a = (**server.artifact(*id).expect("registered")).clone();
-                engine.load(a, seed).unwrap_or_else(|e| {
-                    eprintln!("check: {e}");
-                    std::process::exit(1);
-                })
-            })
-            .collect();
-        let mut bad = 0usize;
-        for (r, resp) in responses.iter().enumerate() {
-            let m = r % ids.len();
-            let x = synthetic_input(&graphs[m], seed + r as u64);
-            let want = engine.infer(handles[m], &x).unwrap_or_else(|e| {
-                eprintln!("check request {r}: {e}");
+        check_against_oracle(&server, &ids, &graphs, &outcomes, &resilience, cfg, seed);
+    }
+}
+
+/// The sequential oracle behind `repro serve --check`: one engine,
+/// every request replayed in submission order. Under chaos, each
+/// request's *attempt chain* is replayed — same per-attempt fault
+/// plans (keyed by `(fault_seed, seqno, attempt)`), same retry policy
+/// — so worker scheduling, coalescing, the cache and supervision must
+/// not have perturbed a single simulated cycle, byte or output word.
+/// Requests shed by the circuit breaker never ran and are skipped.
+fn check_against_oracle(
+    server: &Server,
+    ids: &[ModelId],
+    graphs: &[snowflake::model::graph::Graph],
+    outcomes: &[Result<Response, ServeError>],
+    resilience: &ResilienceConfig,
+    cfg: &SnowflakeConfig,
+    seed: u64,
+) {
+    let mut engine = Engine::new(cfg.clone());
+    let handles: Vec<_> = ids
+        .iter()
+        .map(|id| {
+            let a = (**server.artifact(*id).expect("registered")).clone();
+            engine.load(a, seed).unwrap_or_else(|e| {
+                eprintln!("check: {e}");
                 std::process::exit(1);
-            });
-            if want.stats.cycles != resp.stats.cycles
-                || want.stats.bytes_moved() != resp.stats.bytes_moved()
-                || resp.output.count_diff(&want.output) != 0
-            {
+            })
+        })
+        .collect();
+    let hints: Vec<_> = ids.iter().map(|id| server.plan_hint(*id).expect("registered")).collect();
+    let budgets: Vec<_> = ids.iter().map(|id| server.deadline_budget(*id)).collect();
+    let spec = resilience.faults.as_ref();
+    let retries = resilience.retries as u64;
+    let fseed = resilience.fault_seed;
+    let (mut bad, mut skipped) = (0usize, 0usize);
+    for (r, outcome) in outcomes.iter().enumerate() {
+        if matches!(outcome, Err(ServeError::ModelUnavailable(_))) {
+            skipped += 1;
+            continue;
+        }
+        let m = r % ids.len();
+        let x = synthetic_input(&graphs[m], seed + r as u64);
+        // Replay the attempt chain the serving policy must have run.
+        let mut attempt = 0u64;
+        let want = loop {
+            let killed =
+                spec.is_some_and(|s| s.wants_worker_kill(fseed, r as u64, attempt));
+            if killed {
+                if attempt < retries {
+                    attempt += 1;
+                    continue;
+                }
+                break Err("worker-died");
+            }
+            let plan: FaultPlan = spec
+                .map(|s| s.plan_for(fseed, r as u64, attempt, &hints[m]))
+                .unwrap_or_default();
+            match engine.infer_with(handles[m], &x, &plan, budgets[m]) {
+                Ok(inf) => break Ok(inf),
+                Err(EngineError::Sim(se)) if se.injected && attempt < retries => {
+                    attempt += 1;
+                }
+                Err(EngineError::Sim(se))
+                    if se.kind == snowflake::sim::SimErrorKind::DeadlineExceeded =>
+                {
+                    break Err("deadline");
+                }
+                Err(_) => break Err("engine"),
+            }
+        };
+        match (outcome, want) {
+            (Ok(resp), Ok(want)) => {
+                if want.stats.cycles != resp.stats.cycles
+                    || want.stats.bytes_moved() != resp.stats.bytes_moved()
+                    || resp.output.count_diff(&want.output) != 0
+                {
+                    eprintln!(
+                        "CHECK FAILED: request {r} ({}) served {} cycles / {} bytes vs \
+                         sequential {} / {} (attempt {attempt})",
+                        graphs[m].name,
+                        resp.stats.cycles,
+                        resp.stats.bytes_moved(),
+                        want.stats.cycles,
+                        want.stats.bytes_moved()
+                    );
+                    bad += 1;
+                }
+            }
+            (Err(e), Err(class)) if err_class(e) == class => {}
+            (Err(e), Err(class)) => {
                 eprintln!(
-                    "CHECK FAILED: request {r} ({}) served {} cycles / {} bytes vs sequential {} / {}",
-                    graphs[m].name,
-                    resp.stats.cycles,
-                    resp.stats.bytes_moved(),
-                    want.stats.cycles,
-                    want.stats.bytes_moved()
+                    "CHECK FAILED: request {r} failed as [{}] but the oracle predicts [{class}]",
+                    err_class(e)
                 );
                 bad += 1;
             }
+            (Ok(_), Err(class)) => {
+                eprintln!("CHECK FAILED: request {r} succeeded but the oracle predicts [{class}]");
+                bad += 1;
+            }
+            (Err(e), Ok(_)) => {
+                eprintln!("CHECK FAILED: request {r} failed [{e}] but the oracle succeeds");
+                bad += 1;
+            }
         }
-        if bad > 0 {
-            std::process::exit(1);
-        }
-        println!(
-            "check: all {} requests bit-identical to the sequential engine path",
-            responses.len()
-        );
     }
+    if bad > 0 {
+        std::process::exit(1);
+    }
+    println!(
+        "check: all {} requests bit-identical to the sequential engine path{}",
+        outcomes.len() - skipped,
+        if skipped > 0 {
+            format!(" ({skipped} breaker-shed requests skipped)")
+        } else {
+            String::new()
+        }
+    );
+}
+
+/// `repro chaos`: the fault-sweep table. One model, `--requests`
+/// offline submissions per cell, swept over fault kind × rate × retry
+/// budget; every cell reports goodput (successful / submitted), p99
+/// end-to-end latency, SLO violations, retries and worker kills. The
+/// survivability gate exits nonzero if any worker-kill row at rate
+/// ≥ 0.05 under the default retry budget loses a request outright or
+/// drops below 90% goodput. The breaker is off by default here
+/// (`--breaker-threshold 0` equivalent) so cells are deterministic —
+/// shedding depends on cross-worker completion order.
+fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
+    let requests = args.opt_usize("requests", 16);
+    let retries_hi = args.opt_usize("retries", 2);
+    let deadline_slack = args.opt_f64("deadline-slack", 0.0);
+    let kinds: Vec<&str> = args
+        .opt_or("kinds", "dma-stall,dram-corrupt,worker-kill")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .collect();
+    let rates: Vec<f64> = args
+        .opt_or("rates", "0.05,0.25")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let serve_cfg = ServeConfig {
+        workers: args.opt_usize("workers", 2),
+        max_batch: args.opt_usize("max-batch", 2),
+        queue_depth: args.opt_usize("queue-depth", 32),
+        cache_cap: 0,
+    };
+    let g = zoo::by_name(args.opt_or("model", "alexnet")).unwrap_or_else(|| {
+        eprintln!("unknown model (alexnet, resnet18, resnet50)");
+        std::process::exit(2);
+    });
+    let artifact = Compiler::new(cfg.clone())
+        .options(options(args))
+        .build(&g)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        });
+
+    // One cell of the sweep: a fresh server with the given policy.
+    let run_cell = |faults: Option<FaultSpec>, retries: usize| {
+        let mut server = Server::new(cfg.clone(), serve_cfg);
+        server.set_resilience(ResilienceConfig {
+            deadline_slack,
+            retries,
+            breaker_threshold: args.opt_u64("breaker-threshold", 0),
+            breaker_cooldown: args.opt_u64("breaker-cooldown", 8),
+            faults,
+            fault_seed: args.opt_u64("fault-seed", seed),
+        });
+        let id = server.register(artifact.clone(), seed).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        });
+        let reqs: Vec<_> =
+            (0..requests).map(|r| (id, synthetic_input(&g, seed + r as u64))).collect();
+        server.serve_all_outcomes(reqs).unwrap_or_else(|e| {
+            eprintln!("chaos: {e}");
+            std::process::exit(1);
+        })
+    };
+
+    println!(
+        "chaos sweep: {} x {} requests/cell, {} workers, retries 0 vs {}, deadline slack {}",
+        g.name, requests, serve_cfg.workers, retries_hi, deadline_slack
+    );
+    println!(
+        "{:<14} {:>6} {:>8} {:>5} {:>7} {:>9} {:>9} {:>8} {:>7} {:>12}",
+        "fault", "rate", "retries", "ok", "failed", "goodput", "retried", "kills", "faults", "p99 e2e"
+    );
+    let cell_line = |label: &str, rate: f64, retries: usize, outcomes: &[Result<Response, ServeError>], report: &snowflake::engine::serve::ServeReport| {
+        let ok = outcomes.iter().filter(|o| o.is_ok()).count();
+        println!(
+            "{:<14} {:>6.2} {:>8} {:>5} {:>7} {:>8.1}% {:>9} {:>8} {:>7} {:>9.2} ms",
+            label,
+            rate,
+            retries,
+            ok,
+            outcomes.len() - ok,
+            100.0 * ok as f64 / outcomes.len().max(1) as f64,
+            report.retries(),
+            report.workers_replaced(),
+            report.faults_injected(),
+            report.e2e_hist().quantile(0.99) as f64 / 1e6,
+        );
+        ok
+    };
+
+    // Fault-free baseline.
+    let (outcomes, report) = run_cell(None, retries_hi);
+    let baseline_ok = cell_line("(healthy)", 0.0, retries_hi, &outcomes, &report);
+    if baseline_ok != requests {
+        eprintln!("chaos: the fault-free baseline failed {} requests", requests - baseline_ok);
+        std::process::exit(1);
+    }
+
+    let mut gate_failures = 0usize;
+    for kind in &kinds {
+        for &rate in &rates {
+            for retries in [0, retries_hi] {
+                let spec = FaultSpec::parse(&format!("{kind}:{rate}")).unwrap_or_else(|e| {
+                    eprintln!("chaos: {e}");
+                    std::process::exit(2);
+                });
+                let (outcomes, report) = run_cell(Some(spec), retries);
+                let ok = cell_line(kind, rate, retries, &outcomes, &report);
+                // Survivability gate (ISSUE 6): worker-killing chaos at
+                // ≥5% with the default retry budget must lose nothing
+                // and keep ≥90% of fault-free goodput.
+                if *kind == "worker-kill" && rate >= 0.05 && retries == retries_hi {
+                    if outcomes.len() != requests {
+                        eprintln!(
+                            "GATE FAILED: {} of {requests} requests never resolved",
+                            requests - outcomes.len()
+                        );
+                        gate_failures += 1;
+                    }
+                    if (ok as f64) < 0.9 * baseline_ok as f64 {
+                        eprintln!(
+                            "GATE FAILED: worker-kill rate {rate} at retries {retries}: goodput \
+                             {ok}/{requests} is below 90% of the fault-free baseline"
+                        );
+                        gate_failures += 1;
+                    }
+                }
+            }
+        }
+    }
+    if gate_failures > 0 {
+        eprintln!("chaos: {gate_failures} survivability gate failure(s)");
+        std::process::exit(1);
+    }
+    println!("chaos: survivability gate passed (no lost requests, goodput >= 90% under worker-kill)");
 }
 
 /// Regenerate both CI baselines in one command: the schedule-quality

@@ -108,6 +108,11 @@ pub struct Dma {
     budget_mb: u64,
     word_mb: u64,
     setup_cycles: u64,
+    /// Per-unit fault throttle (`super::fault`): 1 = full speed, 0 =
+    /// stalled outright, n ≥ 2 = fair-share quota divided by n. The
+    /// machine only changes these at event boundaries, so quotas stay
+    /// constant within every event span.
+    throttle: [u64; MAX_UNITS],
 }
 
 impl Dma {
@@ -120,7 +125,15 @@ impl Dma {
             budget_mb: (cfg.axi_bytes_per_cycle * MILLI as f64).round() as u64,
             word_mb: cfg.word_bytes as u64 * MILLI,
             setup_cycles: cfg.dma_setup_cycles,
+            throttle: [1; MAX_UNITS],
         }
+    }
+
+    /// Set a unit's fault throttle (see the `throttle` field). Must only
+    /// be called on a cycle the machine simulates individually — the
+    /// fault layer guarantees this by making window edges events.
+    pub fn set_throttle(&mut self, unit: usize, factor: u64) {
+        self.throttle[unit] = factor;
     }
 
     /// The shared per-cycle budget in millibytes.
@@ -164,6 +177,13 @@ impl Dma {
         loads + self.store_mb
     }
 
+    /// Bytes still owed on one unit (millibytes) — deadlock diagnostics.
+    pub fn unit_outstanding_mb(&self, i: usize) -> u64 {
+        let u = &self.units[i];
+        u.active.as_ref().map_or(0, |s| s.mb_left)
+            + u.queue.iter().map(|s| s.mb_left).sum::<u64>()
+    }
+
     /// Fair-share quotas for the current participant set. Deterministic:
     /// the integer budget divides evenly, and the remainder goes one
     /// millibyte per cycle to the lowest-numbered transferring units
@@ -176,7 +196,9 @@ impl Dma {
         let mut n_tr = 0usize;
         for (i, u) in self.units.iter().enumerate() {
             if let Some(s) = &u.active {
-                if s.setup_left == 0 {
+                // A fully stalled unit (throttle 0) transfers nothing
+                // and leaves the arbitration round entirely.
+                if s.setup_left == 0 && self.throttle[i] != 0 {
                     transferring[n_tr] = i;
                     n_tr += 1;
                 }
@@ -190,7 +212,9 @@ impl Dma {
         let q = self.budget_mb / participants;
         let rem = self.budget_mb % participants;
         for (pos, &i) in transferring[..n_tr].iter().enumerate() {
-            r.unit[i] = q + ((pos as u64) < rem) as u64;
+            // A throttled unit keeps its arbitration slot but moves only
+            // a fraction of it — the unused share is not redistributed.
+            r.unit[i] = (q + ((pos as u64) < rem) as u64) / self.throttle[i];
         }
         if storing {
             r.store = q; // last in remainder order: rem < participants
@@ -285,6 +309,18 @@ impl Dma {
 
 /// Apply a completed buffer stream's functional copy: DRAM -> scratchpads.
 pub fn apply_copy(stream: &Stream, memory: &[i16], cus: &mut [Cu]) {
+    apply_copy_faulted(stream, memory, cus, None);
+}
+
+/// [`apply_copy`] with an optional transient read corruption: words
+/// whose DRAM address falls in `[lo, hi)` arrive with `xor` applied.
+/// DRAM itself is untouched — the flip happens on the wire.
+pub fn apply_copy_faulted(
+    stream: &Stream,
+    memory: &[i16],
+    cus: &mut [Cu],
+    corrupt: Option<(i64, i64, i16)>,
+) {
     if let StreamDest::Buffer { cus: targets, kind, buf_addr, .. } = &stream.dest {
         let src_lo = stream.mem_addr as usize;
         let src_hi = src_lo + stream.len_words as usize;
@@ -298,6 +334,15 @@ pub fn apply_copy(stream: &Stream, memory: &[i16], cus: &mut [Cu]) {
             };
             let lo = *buf_addr as usize;
             dst[lo..lo + src.len()].copy_from_slice(src);
+            if let Some((c_lo, c_hi, xor)) = corrupt {
+                let f_lo = (c_lo.max(src_lo as i64) - src_lo as i64) as usize;
+                let f_hi = (c_hi.min(src_hi as i64) - src_lo as i64) as usize;
+                if f_lo < f_hi {
+                    for w in &mut dst[lo + f_lo..lo + f_hi] {
+                        *w ^= xor;
+                    }
+                }
+            }
         }
     }
 }
@@ -493,6 +538,114 @@ mod tests {
         }
         d.tick();
         assert!(!d.store_full());
+    }
+
+    #[test]
+    fn full_stall_excludes_unit_from_the_share() {
+        let c = cfg();
+        let mut d = Dma::new(&c);
+        d.push(stream(0, 168));
+        d.push(stream(1, 168));
+        d.tick(); // promote + first setup cycle
+        d.tick(); // setup done
+        d.set_throttle(0, 0);
+        // Unit 1 now owns the whole bus: 336 B at 16.8 B/c = 20 cycles.
+        let mut cycles = 0;
+        let mut done = 0;
+        while done == 0 {
+            done += d.tick().len();
+            cycles += 1;
+            assert!(cycles < 100);
+        }
+        assert_eq!(cycles, 20);
+        // The stalled unit moved nothing and is still fully outstanding.
+        assert_eq!(d.unit_outstanding_mb(0), 168 * 2 * MILLI);
+        assert!(d.next_event(0).is_none(), "no event while stalled alone");
+        // Lift the stall: it finishes alone at full rate.
+        d.set_throttle(0, 1);
+        let ev = d.next_event(0).expect("completion event after unstall");
+        let mut cycles = 0;
+        while d.tick().is_empty() {
+            cycles += 1;
+            assert!(cycles < 100);
+        }
+        assert_eq!(cycles, ev, "closed-form completion matches ticks");
+    }
+
+    #[test]
+    fn throttled_advance_matches_ticks() {
+        // The slowdown factor must stay exact under span jumps.
+        let c = cfg();
+        let mk = |d: &mut Dma| {
+            d.push(stream(0, 1680));
+            d.push(stream(1, 840));
+            d.tick(); // promote + setup
+            d.tick(); // setup done
+            d.set_throttle(0, 3);
+        };
+        let mut a = Dma::new(&c);
+        let mut b = Dma::new(&c);
+        mk(&mut a);
+        mk(&mut b);
+        let mut now = 2u64;
+        let mut completed = 0usize;
+        let mut guard = 0;
+        while completed < 2 {
+            if let Some(ev) = a.next_event(now) {
+                if ev > now {
+                    let k = ev - now;
+                    a.advance(k);
+                    for _ in 0..k {
+                        assert!(b.tick().is_empty(), "completion inside a span");
+                    }
+                    now = ev;
+                }
+            }
+            let da = a.tick();
+            let db = b.tick();
+            assert_eq!(da.len(), db.len(), "cycle {now}");
+            completed += da.len();
+            now += 1;
+            for (ua, ub) in a.units.iter().zip(&b.units) {
+                assert_eq!(
+                    ua.active.as_ref().map(|s| s.mb_left),
+                    ub.active.as_ref().map(|s| s.mb_left),
+                    "cycle {now}"
+                );
+            }
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert!(a.idle() && b.idle());
+    }
+
+    #[test]
+    fn corrupted_copy_flips_only_overlapping_words() {
+        let c = SnowflakeConfig::default();
+        let mut cus: Vec<Cu> = (0..1).map(|_| Cu::new(&c)).collect();
+        let memory: Vec<i16> = (0..100).collect();
+        let s = Stream {
+            dest: StreamDest::Buffer {
+                cus: vec![0],
+                kind: BufKind::MBuf,
+                buf_addr: 0,
+                region: 0,
+                gens: vec![1],
+            },
+            mem_addr: 10,
+            len_words: 8,
+            setup_left: 0,
+            mb_left: 0,
+            unit: 0,
+        };
+        // Corrupt DRAM words [12, 14): buffer words 2 and 3 flip.
+        apply_copy_faulted(&s, &memory, &mut cus, Some((12, 14, 0x0040)));
+        let got = &cus[0].mbuf[0..8];
+        assert_eq!(got, &[10, 11, 12 ^ 0x40, 13 ^ 0x40, 14, 15, 16, 17]);
+        // DRAM itself is untouched by construction (memory is &[i16]).
+        // Disjoint corruption window: plain copy.
+        apply_copy_faulted(&s, &memory, &mut cus, Some((50, 60, 0x0040)));
+        assert_eq!(&cus[0].mbuf[0..8], &[10, 11, 12, 13, 14, 15, 16, 17]);
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! The real Snowflake lives on a shared Zynq DRAM port: DMA latency
+//! varies, transfers stall, and an embedded deployment has to meet
+//! deadlines under exactly that variability (DESIGN.md "Failure model
+//! & chaos testing"). This module is the repro's failure model: a
+//! [`FaultPlan`] is a small schedule of injected faults expressed in
+//! *simulated time*, generated from a seed by [`FaultSpec::plan_for`],
+//! so a faulty run is exactly as reproducible as a healthy one — same
+//! seed + same plan ⇒ bit-identical cycles, DRAM and outputs on both
+//! simulator cores.
+//!
+//! Fault taxonomy (each maps to a real failure of the shared port):
+//! * [`Fault::DmaStall`] — a load channel's bandwidth collapses for a
+//!   window (arbitration starvation / a misbehaving co-master);
+//! * [`Fault::CuHang`] — a compute unit stops retiring ops (the control
+//!   pipeline bug the watchdog exists for);
+//! * [`Fault::DramCorrupt`] — a transient read returns flipped bits in
+//!   a region (the classic un-ECC'd LPDDR event);
+//! * [`Fault::Abort`] — the machine dies outright at a cycle (power /
+//!   bus error), surfacing as [`super::SimErrorKind::InjectedAbort`].
+//!
+//! Worker-process death is injected one level up, in the serving
+//! runtime ([`FaultSpec::wants_worker_kill`]): it is a host failure,
+//! not a simulated-machine one, so it must not perturb sim time.
+
+use crate::util::rng::Rng;
+
+/// One injected fault, scheduled in simulated cycles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Load unit `unit` is throttled during `[from, until)`:
+    /// `factor == 0` stalls it outright, `factor >= 2` divides its
+    /// fair-share quota (the unused share is *not* redistributed — the
+    /// channel is slow, the bus arbitration is unchanged).
+    DmaStall { unit: usize, from: u64, until: u64, factor: u64 },
+    /// CU `cu` stops retiring at cycle `at` and never recovers.
+    CuHang { cu: usize, at: u64 },
+    /// The first buffer stream completing at cycle ≥ `from` whose DRAM
+    /// source overlaps `[lo, hi)` delivers data with `xor` applied to
+    /// the overlapping words. DRAM itself is untouched (a transient
+    /// *read* corruption).
+    DramCorrupt { lo: i64, hi: i64, from: u64, xor: i16 },
+    /// Hard machine abort at cycle `at`.
+    Abort { at: u64 },
+}
+
+/// A deterministic schedule of faults for one run. Empty = healthy.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+}
+
+/// Fault classes selectable from a `--faults` spec string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    DmaStall,
+    CuHang,
+    DramCorrupt,
+    Abort,
+    /// Kills the serving worker processing the request (host-level;
+    /// never appears in a [`FaultPlan`]).
+    WorkerKill,
+}
+
+impl FaultKind {
+    fn from_name(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "dma-stall" => FaultKind::DmaStall,
+            "cu-hang" => FaultKind::CuHang,
+            "dram-corrupt" => FaultKind::DramCorrupt,
+            "abort" => FaultKind::Abort,
+            "worker-kill" => FaultKind::WorkerKill,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::DmaStall => "dma-stall",
+            FaultKind::CuHang => "cu-hang",
+            FaultKind::DramCorrupt => "dram-corrupt",
+            FaultKind::Abort => "abort",
+            FaultKind::WorkerKill => "worker-kill",
+        }
+    }
+
+    /// Stable salt for the per-kind RNG stream.
+    fn salt(&self) -> u64 {
+        match self {
+            FaultKind::DmaStall => 1,
+            FaultKind::CuHang => 2,
+            FaultKind::DramCorrupt => 3,
+            FaultKind::Abort => 4,
+            FaultKind::WorkerKill => 5,
+        }
+    }
+}
+
+/// Machine geometry the plan generator needs to place faults sensibly.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanHint {
+    pub n_units: usize,
+    pub n_cus: usize,
+    pub mem_words: usize,
+    /// Expected run length in cycles (cost-model prediction); fault
+    /// trigger cycles are drawn from `[0, expect_cycles)`.
+    pub expect_cycles: u64,
+}
+
+impl Default for PlanHint {
+    fn default() -> Self {
+        PlanHint { n_units: 4, n_cus: 4, mem_words: 1 << 20, expect_cycles: 1_000_000 }
+    }
+}
+
+/// A parsed `--faults` specification: per-kind injection rates.
+///
+/// Grammar: `kind:rate[,kind:rate...]`, e.g.
+/// `dma-stall:0.05,cu-hang:0.02,worker-kill:0.05`. Each rate is the
+/// per-request probability that one fault of that kind is scheduled.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub rates: Vec<(FaultKind, f64)>,
+}
+
+/// Independent RNG stream per (seed, request, attempt, kind): retries
+/// of the same request see *different* faults (so a retry can succeed)
+/// while every replay of the same attempt sees the same ones.
+fn stream_seed(seed: u64, request: u64, attempt: u64, salt: u64) -> u64 {
+    seed ^ request
+        .wrapping_add(1)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ attempt
+            .wrapping_add(1)
+            .wrapping_mul(0xbf58_476d_1ce4_e5b9)
+        ^ salt.wrapping_mul(0x94d0_49bb_1331_11eb)
+}
+
+impl FaultSpec {
+    /// Parse a `kind:rate,...` spec. Unknown kinds and out-of-range
+    /// rates are errors (a chaos run with a typo'd spec silently doing
+    /// nothing would defeat the point).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut rates = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, rate) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec '{part}' is not kind:rate"))?;
+            let kind = FaultKind::from_name(name.trim())
+                .ok_or_else(|| format!("unknown fault kind '{}'", name.trim()))?;
+            let rate: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault rate '{rate}' is not a number"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("fault rate {rate} outside [0, 1]"));
+            }
+            rates.push((kind, rate));
+        }
+        if rates.is_empty() {
+            return Err("empty fault spec".to_string());
+        }
+        Ok(FaultSpec { rates })
+    }
+
+    /// The deterministic fault schedule for one attempt of one request.
+    /// Only sim-level kinds appear; `worker-kill` is queried separately.
+    pub fn plan_for(&self, seed: u64, request: u64, attempt: u64, hint: &PlanHint) -> FaultPlan {
+        let expect = hint.expect_cycles.max(1000);
+        let mut faults = Vec::new();
+        for &(kind, rate) in &self.rates {
+            let mut rng = Rng::new(stream_seed(seed, request, attempt, kind.salt()));
+            if rng.f64() >= rate {
+                continue;
+            }
+            match kind {
+                FaultKind::DmaStall => {
+                    let unit = rng.below(hint.n_units.max(1) as u64) as usize;
+                    let from = rng.below(expect);
+                    // Windows stay far below the 8M-cycle watchdog so a
+                    // full stall can never read as a false deadlock.
+                    let len = 1_000 + rng.below((expect / 4).clamp(1, 200_000));
+                    let factor = if rng.bool() { 0 } else { 2 + rng.below(7) };
+                    faults.push(Fault::DmaStall { unit, from, until: from + len, factor });
+                }
+                FaultKind::CuHang => {
+                    let cu = rng.below(hint.n_cus.max(1) as u64) as usize;
+                    faults.push(Fault::CuHang { cu, at: rng.below(expect) });
+                }
+                FaultKind::DramCorrupt => {
+                    let words = hint.mem_words.max(2) as u64;
+                    let lo = rng.below(words - 1) as i64;
+                    let hi = (lo + 1 + rng.below(4096) as i64).min(words as i64);
+                    let xor = ((rng.next_u64() & 0x7fff) as i16) | 1;
+                    faults.push(Fault::DramCorrupt { lo, hi, from: rng.below(expect), xor });
+                }
+                FaultKind::Abort => {
+                    faults.push(Fault::Abort { at: rng.below(expect) });
+                }
+                FaultKind::WorkerKill => {}
+            }
+        }
+        FaultPlan { faults }
+    }
+
+    /// Should the serving worker handling this attempt be killed?
+    pub fn wants_worker_kill(&self, seed: u64, request: u64, attempt: u64) -> bool {
+        self.rates.iter().any(|&(kind, rate)| {
+            kind == FaultKind::WorkerKill
+                && Rng::new(stream_seed(seed, request, attempt, kind.salt())).f64() < rate
+        })
+    }
+
+    /// The configured rate for a kind (0 if absent) — reporting only.
+    pub fn rate(&self, kind: FaultKind) -> f64 {
+        self.rates
+            .iter()
+            .find(|&&(k, _)| k == kind)
+            .map_or(0.0, |&(_, r)| r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_kinds_and_rates() {
+        let s = FaultSpec::parse("dma-stall:0.05, cu-hang:0.02,worker-kill:1.0").unwrap();
+        assert_eq!(s.rates.len(), 3);
+        assert_eq!(s.rate(FaultKind::DmaStall), 0.05);
+        assert_eq!(s.rate(FaultKind::WorkerKill), 1.0);
+        assert_eq!(s.rate(FaultKind::Abort), 0.0);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("").is_err());
+        assert!(FaultSpec::parse("gamma-ray:0.5").is_err());
+        assert!(FaultSpec::parse("dma-stall").is_err());
+        assert!(FaultSpec::parse("dma-stall:1.5").is_err());
+        assert!(FaultSpec::parse("dma-stall:x").is_err());
+    }
+
+    #[test]
+    fn plans_are_deterministic_per_attempt() {
+        let spec = FaultSpec::parse("dma-stall:1.0,cu-hang:1.0,dram-corrupt:1.0,abort:1.0").unwrap();
+        let hint = PlanHint::default();
+        let a = spec.plan_for(7, 3, 0, &hint);
+        let b = spec.plan_for(7, 3, 0, &hint);
+        assert_eq!(a, b, "same attempt must see the same plan");
+        assert_eq!(a.len(), 4, "rate 1.0 schedules every kind");
+        let c = spec.plan_for(7, 3, 1, &hint);
+        assert_ne!(a, c, "a retry must see a different plan");
+        let d = spec.plan_for(7, 4, 0, &hint);
+        assert_ne!(a, d, "requests draw independent streams");
+    }
+
+    #[test]
+    fn rate_zero_schedules_nothing() {
+        let spec = FaultSpec::parse("dma-stall:0.0,abort:0").unwrap();
+        let hint = PlanHint::default();
+        for r in 0..64 {
+            assert!(spec.plan_for(1, r, 0, &hint).is_empty());
+            assert!(!spec.wants_worker_kill(1, r, 0));
+        }
+    }
+
+    #[test]
+    fn rates_are_rates() {
+        let spec = FaultSpec::parse("worker-kill:0.25").unwrap();
+        let hits = (0..4000)
+            .filter(|&r| spec.wants_worker_kill(9, r, 0))
+            .count();
+        // 4000 draws at p=0.25: expect ~1000, allow a wide band.
+        assert!((800..=1200).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn generated_faults_respect_the_hint() {
+        let spec =
+            FaultSpec::parse("dma-stall:1.0,cu-hang:1.0,dram-corrupt:1.0,abort:1.0").unwrap();
+        let hint = PlanHint { n_units: 4, n_cus: 4, mem_words: 5000, expect_cycles: 80_000 };
+        for r in 0..200 {
+            for f in spec.plan_for(11, r, 0, &hint).faults {
+                match f {
+                    Fault::DmaStall { unit, from, until, factor } => {
+                        assert!(unit < 4);
+                        assert!(until > from);
+                        assert!(until - from <= 1_000 + 200_000);
+                        assert!(factor == 0 || (2..=8).contains(&factor));
+                    }
+                    Fault::CuHang { cu, at } => {
+                        assert!(cu < 4);
+                        assert!(at < 80_000);
+                    }
+                    Fault::DramCorrupt { lo, hi, xor, .. } => {
+                        assert!(lo >= 0 && hi > lo && hi <= 5000);
+                        assert_ne!(xor, 0);
+                    }
+                    Fault::Abort { at } => assert!(at < 80_000),
+                }
+            }
+        }
+    }
+}

@@ -51,6 +51,7 @@
 
 pub mod cu;
 pub mod dma;
+pub mod fault;
 pub mod scoreboard;
 pub mod stats;
 
@@ -58,20 +59,47 @@ use crate::arch::SnowflakeConfig;
 use crate::fixed::{relu_q, sat_add, QFormat};
 use crate::isa::instr::{Instr, LdTarget, VmovSel};
 use cu::{observe_gens, op_regions, Cu, CuPhase, QueuedOp, VecOp};
-use dma::{apply_copy, BufKind, Dma, Stream, StreamDest};
+use dma::{apply_copy_faulted, BufKind, Dma, Stream, StreamDest};
+use fault::{Fault, FaultPlan};
 use scoreboard::RegionBoard;
 use stats::Stats;
 
-/// Simulation failure: a program bug the hardware would not forgive.
-#[derive(Debug, Clone)]
+/// What class of failure ended the run — the serving runtime's retry
+/// and deadline policies dispatch on this, not on message strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimErrorKind {
+    /// A program bug the hardware would not forgive (OOB access, bad
+    /// LD, coherence hazard).
+    Program,
+    /// No forward progress and nothing pending anywhere.
+    Deadlock,
+    /// The configured cycle budget ([`Machine::set_cycle_limit`])
+    /// expired before the run finished.
+    DeadlineExceeded,
+    /// An injected hard abort from the fault plan.
+    InjectedAbort,
+}
+
+/// Simulation failure: a program bug the hardware would not forgive —
+/// or, under chaos testing, the consequence of an injected fault.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimError {
     pub cycle: u64,
+    pub kind: SimErrorKind,
     pub message: String,
+    /// True when at least one injected fault fired before the error —
+    /// the transience signal the serving runtime's retry policy keys
+    /// on (a fresh attempt draws a fresh fault plan).
+    pub injected: bool,
 }
 
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "cycle {}: {}", self.cycle, self.message)
+        write!(f, "cycle {}: {}", self.cycle, self.message)?;
+        if self.injected {
+            write!(f, " [after injected faults]")?;
+        }
+        Ok(())
     }
 }
 
@@ -142,6 +170,22 @@ pub struct Machine {
     progress_mark: u64,
     last_stall: Option<Stall>,
     cu_phase: Vec<CuPhase>,
+
+    /// Injected fault schedule for the current run (chaos testing).
+    fault_plan: FaultPlan,
+    /// Per-fault lifecycle, parallel to `fault_plan.faults`:
+    /// 0 = pending, 1 = active (stall window in force), 2 = done.
+    fault_state: Vec<u8>,
+    /// Fast guard: true iff `fault_plan` is non-empty, so the healthy
+    /// hot path pays one branch per cycle and nothing else.
+    faults_armed: bool,
+    /// Hard cycle budget: the run fails typed
+    /// ([`SimErrorKind::DeadlineExceeded`]) if it is still going when
+    /// `now` reaches this.
+    cycle_limit: Option<u64>,
+    /// pc of the most recently issued instruction (−1 before the
+    /// first) — deadlock diagnostics.
+    last_issued_pc: i64,
 }
 
 impl Machine {
@@ -169,8 +213,27 @@ impl Machine {
             progress_mark: 0,
             last_stall: None,
             cu_phase: vec![CuPhase::default(); cfg.n_cus],
+            fault_plan: FaultPlan::default(),
+            fault_state: Vec::new(),
+            faults_armed: false,
+            cycle_limit: None,
+            last_issued_pc: -1,
             cfg,
         }
+    }
+
+    /// Arm an injected fault schedule for the next run. Cleared by
+    /// [`Machine::reset_for_inference`], so faults never leak across
+    /// requests.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_state = vec![0; plan.faults.len()];
+        self.faults_armed = !plan.is_empty();
+        self.fault_plan = plan;
+    }
+
+    /// Set (or clear) the hard cycle budget for the next run.
+    pub fn set_cycle_limit(&mut self, limit: Option<u64>) {
+        self.cycle_limit = limit;
     }
 
     /// Write words into DRAM (deployment).
@@ -222,6 +285,11 @@ impl Machine {
         self.progress_mark = 0;
         self.last_stall = None;
         self.cu_phase = vec![CuPhase::default(); self.cfg.n_cus];
+        self.fault_plan = FaultPlan::default();
+        self.fault_state.clear();
+        self.faults_armed = false;
+        self.cycle_limit = None;
+        self.last_issued_pc = -1;
     }
 
     /// Current simulated cycle.
@@ -254,6 +322,14 @@ impl Machine {
                 idle_window = 0;
                 idle_allowance = self.watchdog_threshold();
             } else {
+                // A waiting machine with nothing pending anywhere can
+                // never progress again: report the deadlock now, at the
+                // same cycle the event core does, instead of spinning
+                // out the watchdog. The watchdog stays as the backstop
+                // for anything the event model might miss.
+                if self.next_event_cycle().is_none() {
+                    return Err(self.deadlock_report());
+                }
                 idle_window += 1;
                 if idle_window > idle_allowance {
                     return Err(self.deadlock_report());
@@ -299,6 +375,17 @@ impl Machine {
     /// Returns true when the cycle made forward progress (a DMA
     /// completion, an instruction issue, or a CU op start).
     fn step_cycle(&mut self) -> Result<bool, SimError> {
+        if self.faults_armed {
+            self.fire_faults()?;
+        }
+        if let Some(limit) = self.cycle_limit {
+            if self.now >= limit {
+                return Err(self.err(
+                    SimErrorKind::DeadlineExceeded,
+                    format!("cycle budget of {limit} exhausted before completion"),
+                ));
+            }
+        }
         let mark = self.progress_mark;
         // 1. DMA completions (data ready the same cycle).
         let done = self.dma.tick();
@@ -336,11 +423,105 @@ impl Machine {
             }
         }
         for c in &self.cus {
-            if c.busy_until >= now {
+            // A hung CU (injected `busy_until == u64::MAX`) never pops
+            // again — it must not masquerade as a pending event.
+            if c.busy_until >= now && c.busy_until != u64::MAX {
                 push(c.busy_until); // first cycle the CU can pop again
             }
         }
+        // Fault-schedule boundaries and the deadline are discrete state
+        // changes too: making them events keeps spans from crossing
+        // them, which is what makes faulty runs bit-identical across
+        // cores (and lets the per-cycle core detect hung-machine
+        // deadlocks immediately once nothing is pending).
+        if self.faults_armed {
+            for (idx, f) in self.fault_plan.faults.iter().enumerate() {
+                let state = self.fault_state[idx];
+                if state == 2 {
+                    continue;
+                }
+                match *f {
+                    Fault::DmaStall { from, until, .. } => {
+                        push(if state == 0 { from.max(now) } else { until.max(now) });
+                    }
+                    Fault::CuHang { at, .. } | Fault::Abort { at } => push(at.max(now)),
+                    // Corruption rides on a stream completion, which is
+                    // already an event in its own right.
+                    Fault::DramCorrupt { .. } => {}
+                }
+            }
+        }
+        if let Some(limit) = self.cycle_limit {
+            push(limit.max(now));
+        }
         best
+    }
+
+    /// Fire every due fault at the top of a simulated cycle. Window
+    /// edges, hang points and abort points are all events
+    /// ([`Machine::next_event_cycle`]), so both cores reach each
+    /// boundary cycle individually and fire it identically.
+    fn fire_faults(&mut self) -> Result<(), SimError> {
+        for idx in 0..self.fault_plan.faults.len() {
+            let state = self.fault_state[idx];
+            if state == 2 {
+                continue;
+            }
+            match self.fault_plan.faults[idx] {
+                Fault::Abort { at } => {
+                    if self.now >= at {
+                        self.fault_state[idx] = 2;
+                        self.stats.faults_aborted += 1;
+                        return Err(self.err(
+                            SimErrorKind::InjectedAbort,
+                            format!("injected machine abort (scheduled at cycle {at})"),
+                        ));
+                    }
+                }
+                Fault::CuHang { cu, at } => {
+                    if self.now >= at {
+                        self.fault_state[idx] = 2;
+                        self.stats.faults_cu_hang += 1;
+                        if cu < self.cus.len() {
+                            self.cus[cu].busy_until = u64::MAX;
+                        }
+                    }
+                }
+                Fault::DmaStall { unit, from, until, factor } => {
+                    if state == 0 && self.now >= from {
+                        self.fault_state[idx] = 1;
+                        self.stats.faults_dma_stall += 1;
+                        if unit < self.dma.units.len() {
+                            self.dma.set_throttle(unit, factor);
+                        }
+                    }
+                    if self.fault_state[idx] == 1 && self.now >= until {
+                        self.fault_state[idx] = 2;
+                        if unit < self.dma.units.len() {
+                            self.dma.set_throttle(unit, 1);
+                        }
+                    }
+                }
+                // Fired from `complete_stream` when a matching stream
+                // lands.
+                Fault::DramCorrupt { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Count of injected-fault events that have fired this run.
+    pub fn faults_fired(&self) -> u64 {
+        self.stats.faults_injected()
+    }
+
+    fn err(&self, kind: SimErrorKind, message: String) -> SimError {
+        SimError {
+            cycle: self.now,
+            kind,
+            message,
+            injected: self.stats.faults_injected() > 0,
+        }
     }
 
     /// Jump `k` cycles in one step. Caller guarantees — via
@@ -390,19 +571,38 @@ impl Machine {
 
     fn deadlock_report(&self) -> SimError {
         let mut msg = format!(
-            "no forward progress: pc={} halted={} loaded_chunks={:?} dma_outstanding={}B",
+            "no forward progress: pc={} last_issued_pc={} halted={} loaded_chunks={:?} \
+             dma_outstanding={}B",
             self.pc,
+            self.last_issued_pc,
             self.halted,
             self.loaded_chunk,
             self.dma.outstanding_mb() / dma::MILLI
         );
+        for i in 0..self.dma.units.len() {
+            let mb = self.dma.unit_outstanding_mb(i);
+            if mb > 0 {
+                msg.push_str(&format!(" ld{i}={}B", mb / dma::MILLI));
+            }
+        }
         for (i, c) in self.cus.iter().enumerate() {
             msg.push_str(&format!(" cu{i}[queue={} busy_until={}]", c.queue.len(), c.busy_until));
             if let Some(q) = c.queue.front() {
                 msg.push_str(&format!(" front={:?}", q.op));
+                // Scoreboard wait state: which region fills the front op
+                // is still waiting on (region@generation).
+                let waits: Vec<String> = q
+                    .gens
+                    .iter()
+                    .filter(|&&(r, g)| !self.boards[i].done_upto(r, g))
+                    .map(|&(r, g)| format!("r{r}@g{g}"))
+                    .collect();
+                if !waits.is_empty() {
+                    msg.push_str(&format!(" waits={}", waits.join(",")));
+                }
             }
         }
-        SimError { cycle: self.now, message: msg }
+        self.err(SimErrorKind::Deadlock, msg)
     }
 
     fn all_cus_drained(&self) -> bool {
@@ -428,14 +628,10 @@ impl Machine {
             return Ok(());
         }
         if self.pc >= self.stream.len() {
-            return Err(SimError {
-                cycle: self.now,
-                message: format!(
-                    "pc {} ran off the end of the stream ({})",
-                    self.pc,
-                    self.stream.len()
-                ),
-            });
+            return Err(self.err(
+                SimErrorKind::Program,
+                format!("pc {} ran off the end of the stream ({})", self.pc, self.stream.len()),
+            ));
         }
         let instr = self.stream[self.pc];
 
@@ -489,6 +685,7 @@ impl Machine {
         if issued {
             self.stats.issued += 1;
             self.progress_mark += 1;
+            self.last_issued_pc = self.pc as i64;
             self.pc += 1;
             // Branch delay-slot bookkeeping: a branch sets slots; each
             // subsequently issued instruction consumes one.
@@ -632,10 +829,10 @@ impl Machine {
         let mem_addr = self.regs[rs1 as usize];
         let len = self.regs[rs2 as usize];
         if len <= 0 {
-            return Err(SimError {
-                cycle: self.now,
-                message: format!("LD with non-positive length {len} at pc {}", self.pc),
-            });
+            return Err(self.err(
+                SimErrorKind::Program,
+                format!("LD with non-positive length {len} at pc {}", self.pc),
+            ));
         }
 
         let all_cus = || (0..self.cfg.n_cus as u8).collect::<Vec<u8>>();
@@ -693,13 +890,13 @@ impl Machine {
             }
         };
         if mem_addr < 0 || (mem_addr as usize + len_words as usize) > self.memory.len() {
-            return Err(SimError {
-                cycle: self.now,
-                message: format!(
+            return Err(self.err(
+                SimErrorKind::Program,
+                format!(
                     "LD out of DRAM bounds: addr={mem_addr} len={len_words} mem={}",
                     self.memory.len()
                 ),
-            });
+            ));
         }
         let bytes = len_words * self.cfg.word_bytes as u64;
         self.stats.unit_bytes[unit as usize] += bytes;
@@ -722,12 +919,38 @@ impl Machine {
 
     fn check_buf_bounds(&self, name: &str, addr: i64, len: i64, cap: usize) -> Result<(), SimError> {
         if addr < 0 || (addr + len) as usize > cap {
-            return Err(SimError {
-                cycle: self.now,
-                message: format!("LD {name} out of bounds: addr={addr} len={len} cap={cap}"),
-            });
+            return Err(self.err(
+                SimErrorKind::Program,
+                format!("LD {name} out of bounds: addr={addr} len={len} cap={cap}"),
+            ));
         }
         Ok(())
+    }
+
+    /// One-shot transient read corruption: the first buffer stream
+    /// completing at cycle ≥ `from` whose DRAM source overlaps the
+    /// fault's `[lo, hi)` delivers flipped words. Completions happen in
+    /// unit order at identical cycles on both cores, so the corrupted
+    /// stream is the same one everywhere.
+    fn pending_corruption(&mut self, s: &Stream) -> Option<(i64, i64, i16)> {
+        if !self.faults_armed {
+            return None;
+        }
+        let s_lo = s.mem_addr;
+        let s_hi = s.mem_addr + s.len_words as i64;
+        for idx in 0..self.fault_plan.faults.len() {
+            if self.fault_state[idx] != 0 {
+                continue;
+            }
+            if let Fault::DramCorrupt { lo, hi, from, xor } = self.fault_plan.faults[idx] {
+                if self.now >= from && s_lo < hi && lo < s_hi {
+                    self.fault_state[idx] = 2;
+                    self.stats.faults_dram_corrupt += 1;
+                    return Some((lo, hi, xor));
+                }
+            }
+        }
+        None
     }
 
     fn complete_stream(&mut self, s: &Stream) {
@@ -737,7 +960,8 @@ impl Machine {
                 self.stats.icache_loads += 1;
             }
             StreamDest::Buffer { cus, region, gens, .. } => {
-                apply_copy(s, &self.memory, &mut self.cus);
+                let corrupt = self.pending_corruption(s);
+                apply_copy_faulted(s, &self.memory, &mut self.cus, corrupt);
                 for (&c, &g) in cus.iter().zip(gens) {
                     self.boards[c as usize].set_ready(*region, g, self.now);
                 }
@@ -777,13 +1001,13 @@ impl Machine {
             for &(r, g) in &front.gens {
                 let board = &self.boards[c];
                 if board.overwritten_after(r, g) {
-                    return Err(SimError {
-                        cycle: self.now,
-                        message: format!(
+                    return Err(self.err(
+                        SimErrorKind::Program,
+                        format!(
                             "coherence hazard on cu{c} region {r}: buffer reloaded and filled \
                              before a previously issued vector instruction consumed it"
                         ),
-                    });
+                    ));
                 }
                 if !board.done_upto(r, g) {
                     wait = true;
@@ -933,10 +1157,10 @@ impl Machine {
     fn apply_stores(&mut self, c: usize, stores: &[(i64, i16)]) -> Result<(), SimError> {
         for &(addr, val) in stores {
             if addr < 0 || addr as usize >= self.memory.len() {
-                return Err(SimError {
-                    cycle: self.now,
-                    message: format!("cu{c} writeback out of DRAM bounds: addr={addr}"),
-                });
+                return Err(self.err(
+                    SimErrorKind::Program,
+                    format!("cu{c} writeback out of DRAM bounds: addr={addr}"),
+                ));
             }
             self.memory[addr as usize] = val;
         }
@@ -947,10 +1171,10 @@ impl Machine {
     }
 
     fn oob(&self, c: usize, what: &str, addr: i64, len: usize) -> SimError {
-        SimError {
-            cycle: self.now,
-            message: format!("cu{c} {what} read out of bounds: addr={addr} len={len}"),
-        }
+        self.err(
+            SimErrorKind::Program,
+            format!("cu{c} {what} read out of bounds: addr={addr} len={len}"),
+        )
     }
 }
 

@@ -65,6 +65,15 @@ pub struct Stats {
     /// (`tests/sim_equivalence.rs` compares everything else).
     pub event_spans: u64,
     pub cycles_skipped: u64,
+
+    /// Injected-fault events that fired this run (chaos testing,
+    /// `sim::fault`). Fault boundaries are events on both cores, so
+    /// these fire at identical cycles everywhere and participate in
+    /// [`Stats::comparable`] like every real counter.
+    pub faults_dma_stall: u64,
+    pub faults_cu_hang: u64,
+    pub faults_dram_corrupt: u64,
+    pub faults_aborted: u64,
 }
 
 impl Stats {
@@ -88,6 +97,14 @@ impl Stats {
 
     pub fn bytes_loaded(&self) -> u64 {
         self.unit_bytes.iter().sum()
+    }
+
+    /// Total injected-fault events that fired (0 on a healthy run).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults_dma_stall
+            + self.faults_cu_hang
+            + self.faults_dram_corrupt
+            + self.faults_aborted
     }
 
     /// Total off-chip traffic (loads + stores).

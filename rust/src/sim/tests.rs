@@ -392,19 +392,89 @@ fn icache_bank_reload() {
     assert_eq!(s.icache_loads, 1);
 }
 
-#[test]
-fn missing_icache_load_deadlocks() {
-    let cfg = SnowflakeConfig::default();
+/// A program that runs past the preloaded icache banks without an
+/// icache LD: the fetch stage stalls forever. Built once for the
+/// missing-icache deadlock tests below.
+fn missing_icache_prog() -> Vec<Instr> {
     let mut prog: Vec<Instr> = Vec::new();
     while prog.len() < 1100 {
         prog.push(Instr::Addi { rd: 10, rs1: 10, imm: 1 });
     }
     prog.push(Instr::Halt);
+    prog
+}
+
+#[test]
+fn missing_icache_load_deadlocks() {
+    let cfg = SnowflakeConfig::default();
     let mut m = Machine::new(cfg, Q8_8, 1024);
     m.watchdog = 10_000;
-    m.load_program(prog);
+    m.load_program(missing_icache_prog());
     let err = m.run().unwrap_err();
+    assert_eq!(err.kind, SimErrorKind::Deadlock);
+    assert!(!err.injected, "no faults were armed");
     assert!(err.message.contains("no forward progress"), "{err}");
+    // The enriched report pinpoints the stall: the pc parked on the
+    // unloaded chunk, the last instruction that did issue, and the
+    // per-CU queue state.
+    assert!(err.message.contains("pc="), "{err}");
+    assert!(err.message.contains("last_issued_pc="), "{err}");
+    assert!(err.message.contains("loaded_chunks="), "{err}");
+    assert!(err.message.contains("cu0["), "{err}");
+}
+
+#[test]
+fn per_cycle_core_reports_missing_icache_deadlock_immediately() {
+    // Nothing is pending anywhere, so the per-cycle core must report at
+    // the same early cycle the event core does — not after spinning out
+    // the full 8M-cycle default watchdog.
+    let cfg = SnowflakeConfig::default();
+    let run = |core: CoreMode| {
+        let mut m = Machine::new(cfg.clone(), Q8_8, 1024);
+        m.core = core;
+        m.load_program(missing_icache_prog());
+        m.run().unwrap_err()
+    };
+    let ee = run(CoreMode::EventDriven);
+    let ec = run(CoreMode::PerCycle);
+    assert_eq!(ee.kind, SimErrorKind::Deadlock);
+    assert_eq!(ee.cycle, ec.cycle, "cores disagree on the deadlock cycle");
+    assert_eq!(ee.kind, ec.kind);
+    assert!(ec.cycle < 100_000, "per-cycle core spun to {} before reporting", ec.cycle);
+}
+
+#[test]
+fn empty_fault_plan_and_no_limit_leave_the_run_untouched() {
+    // The zero-overhead-when-off contract at the sim level: arming an
+    // empty plan and a cleared limit must not perturb a single counter.
+    let program = "movi r1, 0\n\
+         movi r2, 4096\n\
+         movi r3, 0\n\
+         ld mbuf bcast u=0 cu=0 bank=0 buf=r3, mem=r1, len=r2\n\
+         movi r4, 8192\n\
+         movi r7, 3200\n\
+         ld wbuf bcast u=1 cu=0 v=0 buf=r3, mem=r4, len=r7\n\
+         movi r5, 60000\n\
+         movi r28, 1\n\
+         movi r31, 16\n\
+         mac coop r5, r3, r3, len=200, wb, reset\n\
+         halt\n";
+    let mut base = machine(64 * 1024);
+    write_q(&mut base, 0, &[0.25; 4096]);
+    write_q(&mut base, 8192, &[0.5; 3200]);
+    let sb = run_asm(&mut base, program);
+
+    let mut armed = machine(64 * 1024);
+    write_q(&mut armed, 0, &[0.25; 4096]);
+    write_q(&mut armed, 8192, &[0.5; 3200]);
+    armed.set_fault_plan(FaultPlan::default());
+    armed.set_cycle_limit(None);
+    let sa = run_asm(&mut armed, program);
+
+    assert_eq!(sb.cycles, sa.cycles);
+    assert_eq!(sb.comparable(), sa.comparable());
+    assert_eq!(base.memory, armed.memory);
+    assert_eq!(sa.faults_dma_stall + sa.faults_cu_hang + sa.faults_dram_corrupt, 0);
 }
 
 #[test]

@@ -1,9 +1,11 @@
 //! Small self-contained substrates the offline build cannot pull from
 //! crates.io: a JSON parser/emitter, a deterministic PRNG, a CLI argument
-//! parser, a micro-benchmark harness and a property-testing helper.
+//! parser, a micro-benchmark harness, a property-testing helper and a
+//! fixed-bucket latency histogram.
 
 pub mod bench;
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,531 @@
+//! Chaos-engineering integration tests (ISSUE 6).
+//!
+//! Three contracts under test:
+//!
+//! 1. **Fault determinism** — a faulted run is exactly as reproducible
+//!    as a healthy one: same seed + same `FaultSpec` ⇒ bit-identical
+//!    per-request cycles, outputs and typed failures, on either
+//!    simulator core (faults are *events*, so the event core and the
+//!    per-cycle core reach every fault boundary cycle individually).
+//! 2. **Survivability** — no request is ever silently dropped: every
+//!    submitted request resolves as a `Response` or a typed
+//!    `ServeError`, through worker kills, deadline cut-offs, injected
+//!    aborts and breaker sheds alike.
+//! 3. **Watchdog coverage** — broken programs (truncation, injected CU
+//!    hangs) surface as typed `SimError`s on all three conv skeletons,
+//!    never as an unbounded spin. (The missing-icache-block leg lives
+//!    in `sim::tests`, where the oversized program is hand-built.)
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{deploy, Artifact, CompileOptions, Compiler, LoopOrder};
+use snowflake::engine::serve::{ModelId, ResilienceConfig, ServeConfig, ServeError, Server};
+use snowflake::engine::EngineError;
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::sim::fault::{Fault, FaultPlan, FaultSpec};
+use snowflake::sim::{CoreMode, SimErrorKind};
+use snowflake::tensor::Tensor;
+
+fn small_graph(name: &str, out_ch: usize) -> Graph {
+    let mut g = Graph::new(name, Shape::new(16, 10, 10));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    g
+}
+
+fn build(cfg: &SnowflakeConfig, g: &Graph) -> Artifact {
+    Compiler::new(cfg.clone()).build(g).expect("build")
+}
+
+/// A one-model server with the given resilience policy.
+fn chaos_server(
+    cfg: &SnowflakeConfig,
+    res: ResilienceConfig,
+    workers: usize,
+    max_batch: usize,
+) -> (Server, ModelId, Graph) {
+    let g = small_graph("chaos", 8);
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers, max_batch, queue_depth: 4, cache_cap: 2 },
+    );
+    let id = server.register(build(cfg, &g), 42).unwrap();
+    server.set_resilience(res);
+    (server, id, g)
+}
+
+fn inputs(g: &Graph, id: ModelId, n: usize) -> Vec<(ModelId, Tensor<f32>)> {
+    (0..n).map(|r| (id, synthetic_input(g, 100 + r as u64))).collect()
+}
+
+/// Coarse failure class — what `repro serve --check` compares too.
+fn class(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::DeadlineExceeded { .. } => "deadline",
+        ServeError::WorkerDied(_) => "worker-died",
+        ServeError::ModelUnavailable(_) => "shed",
+        ServeError::Engine(_) => "engine",
+        _ => "other",
+    }
+}
+
+/// Two runs with the same seed and fault spec must agree on every
+/// request's outcome bit for bit — cycles, traffic, output words and
+/// failure class — no matter how the workers interleave.
+#[test]
+fn faulted_serving_is_bit_identical_across_runs() {
+    let cfg = SnowflakeConfig::default();
+    let spec = FaultSpec::parse("dma-stall:0.5,dram-corrupt:0.4,abort:0.2").unwrap();
+    let res = ResilienceConfig {
+        retries: 1,
+        breaker_threshold: 0, // breaker shed depends on host order; keep it out
+        faults: Some(spec),
+        fault_seed: 7,
+        ..Default::default()
+    };
+    let run = || {
+        let (server, id, g) = chaos_server(&cfg, res.clone(), 3, 2);
+        server.serve_all_outcomes(inputs(&g, id, 12)).unwrap()
+    };
+    let (a, ra) = run();
+    let (b, rb) = run();
+    assert_eq!(a.len(), 12);
+    assert_eq!(b.len(), 12);
+    for (r, (x, y)) in a.iter().zip(&b).enumerate() {
+        match (x, y) {
+            (Ok(rx), Ok(ry)) => {
+                assert_eq!(rx.stats.cycles, ry.stats.cycles, "request {r}: cycles diverged");
+                assert_eq!(
+                    rx.stats.comparable(),
+                    ry.stats.comparable(),
+                    "request {r}: stats diverged"
+                );
+                assert_eq!(
+                    rx.output.count_diff(&ry.output),
+                    0,
+                    "request {r}: output diverged"
+                );
+            }
+            (Err(ex), Err(ey)) => {
+                assert_eq!(class(ex), class(ey), "request {r}: failure class diverged")
+            }
+            _ => panic!("request {r}: outcome shape diverged between identical chaos runs"),
+        }
+    }
+    assert_eq!(ra.faults_injected(), rb.faults_injected());
+    assert_eq!(ra.retries(), rb.retries());
+    assert_eq!(ra.failed(), rb.failed());
+}
+
+/// Zero-rate fault specs and generous resilience knobs must leave the
+/// run untouched: same cycles, same outputs, dark counters.
+#[test]
+fn zero_rate_faults_match_plain_serving_bit_for_bit() {
+    let cfg = SnowflakeConfig::default();
+    let n = 6;
+
+    let (plain_server, pid, pg) = chaos_server(&cfg, ResilienceConfig::default(), 2, 2);
+    let (plain, _) = plain_server.serve_all(inputs(&pg, pid, n)).unwrap();
+
+    let res = ResilienceConfig {
+        deadline_slack: 1_000.0, // budget far above any real run
+        retries: 3,
+        faults: Some(FaultSpec::parse("dma-stall:0.0,worker-kill:0.0").unwrap()),
+        fault_seed: 99,
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, res, 2, 2);
+    let (quiet, report) = server.serve_all(inputs(&g, id, n)).unwrap();
+
+    for (p, q) in plain.iter().zip(&quiet) {
+        assert_eq!(p.stats.cycles, q.stats.cycles);
+        assert_eq!(p.stats.comparable(), q.stats.comparable());
+        assert_eq!(p.output.count_diff(&q.output), 0);
+    }
+    assert_eq!(report.faults_injected(), 0);
+    assert_eq!(report.retries(), 0);
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.workers_replaced(), 0);
+    assert_eq!(report.slo_violation_rate(), 0.0);
+}
+
+/// Injected aborts either kill an attempt (typed, retryable) or never
+/// fire — so every successful request stays bit-identical to the
+/// healthy baseline, and every failure is a typed `InjectedAbort`.
+#[test]
+fn injected_aborts_fail_typed_and_survivors_stay_bit_identical() {
+    let cfg = SnowflakeConfig::default();
+    let n = 12;
+
+    let (healthy_server, hid, hg) = chaos_server(&cfg, ResilienceConfig::default(), 3, 2);
+    let (healthy, _) = healthy_server.serve_all(inputs(&hg, hid, n)).unwrap();
+
+    let res = ResilienceConfig {
+        retries: 2,
+        breaker_threshold: 0,
+        faults: Some(FaultSpec::parse("abort:1.0").unwrap()),
+        fault_seed: 11,
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, res, 3, 2);
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
+
+    assert_eq!(outcomes.len(), n);
+    let mut failed = 0u64;
+    for (r, o) in outcomes.iter().enumerate() {
+        match o {
+            Ok(resp) => {
+                assert_eq!(resp.stats.cycles, healthy[r].stats.cycles, "request {r}");
+                assert_eq!(resp.stats.comparable(), healthy[r].stats.comparable());
+                assert_eq!(resp.output.count_diff(&healthy[r].output), 0);
+            }
+            Err(ServeError::Engine(EngineError::Sim(se))) => {
+                failed += 1;
+                assert_eq!(se.kind, SimErrorKind::InjectedAbort, "request {r}: {se}");
+                assert!(se.injected, "request {r}: abort not flagged injected");
+            }
+            Err(e) => panic!("request {r}: unexpected failure {e}"),
+        }
+    }
+    assert_eq!(report.failed(), failed);
+    // Rate 1.0 schedules exactly one abort per attempt: initial
+    // attempts plus one per redelivery.
+    assert_eq!(report.faults_injected(), n as u64 + report.retries());
+}
+
+/// A 100% worker-kill storm: every attempt of every request kills its
+/// worker, the supervisor rebuilds the engine in place each time, the
+/// retry budget is spent, and every request resolves as a typed
+/// `WorkerDied` — nothing is lost, nothing hangs.
+#[test]
+fn worker_kill_storm_never_loses_a_request() {
+    let cfg = SnowflakeConfig::default();
+    let n = 8u64;
+    let retries = 2u64;
+    let res = ResilienceConfig {
+        retries: retries as usize,
+        breaker_threshold: 0,
+        faults: Some(FaultSpec::parse("worker-kill:1.0").unwrap()),
+        fault_seed: 5,
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, res, 3, 2);
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n as usize)).unwrap();
+
+    assert_eq!(outcomes.len(), n as usize);
+    for (r, o) in outcomes.iter().enumerate() {
+        match o {
+            Err(ServeError::WorkerDied(_)) => {}
+            other => panic!("request {r}: expected WorkerDied, got {other:?}"),
+        }
+    }
+    // Every attempt (1 initial + `retries` redeliveries) was a kill.
+    assert_eq!(report.workers_replaced(), n * (retries + 1));
+    assert_eq!(report.retries(), n * retries);
+    assert_eq!(report.failed(), n);
+    assert_eq!(report.slo_violation_rate(), 1.0);
+    assert_eq!(report.per_model[0].resolved(), n);
+}
+
+/// The survivability gate at the ISSUE's floor: a ≥5% worker-kill rate
+/// with the default retry budget must lose nothing and keep goodput at
+/// ≥90% of fault-free — and the survivors stay bit-identical (a kill
+/// never touches simulated time).
+#[test]
+fn moderate_worker_kills_keep_goodput_and_bit_identity() {
+    let cfg = SnowflakeConfig::default();
+    let n = 16;
+
+    let (healthy_server, hid, hg) = chaos_server(&cfg, ResilienceConfig::default(), 4, 2);
+    let (healthy, _) = healthy_server.serve_all(inputs(&hg, hid, n)).unwrap();
+
+    let res = ResilienceConfig {
+        retries: 2,
+        breaker_threshold: 0,
+        faults: Some(FaultSpec::parse("worker-kill:0.05").unwrap()),
+        fault_seed: 21,
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, res, 4, 2);
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
+
+    assert_eq!(outcomes.len(), n, "a request was silently lost");
+    let mut ok = 0usize;
+    for (r, o) in outcomes.iter().enumerate() {
+        match o {
+            Ok(resp) => {
+                ok += 1;
+                assert_eq!(resp.stats.cycles, healthy[r].stats.cycles, "request {r}");
+                assert_eq!(resp.output.count_diff(&healthy[r].output), 0, "request {r}");
+            }
+            Err(ServeError::WorkerDied(_)) => {}
+            Err(e) => panic!("request {r}: unexpected failure {e}"),
+        }
+    }
+    // At a 5% kill rate a request needs 3 consecutive kills to fail —
+    // goodput stays ≥ 90% of the fault-free baseline by a wide margin.
+    assert!(ok * 10 >= n * 9, "goodput {ok}/{n} below the 90% gate");
+    assert_eq!(report.failed(), (n - ok) as u64);
+}
+
+/// Deadlines are enforced *inside* the simulation: a starvation-level
+/// budget cuts every request off typed (with the budget attached), and
+/// a generous one changes nothing.
+#[test]
+fn deadline_budgets_cut_off_typed_and_generous_slack_passes() {
+    let cfg = SnowflakeConfig::default();
+    let n = 4;
+
+    let tight = ResilienceConfig {
+        deadline_slack: 0.01,
+        retries: 2, // a genuine deadline miss is not transient: no retries spent
+        breaker_threshold: 0,
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, tight, 2, 2);
+    let budget = server.deadline_budget(id).expect("slack > 0 sets a budget");
+    assert!(budget > 0);
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
+    for (r, o) in outcomes.iter().enumerate() {
+        match o {
+            Err(ServeError::DeadlineExceeded { budget_cycles }) => {
+                assert_eq!(*budget_cycles, budget, "request {r}")
+            }
+            other => panic!("request {r}: expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    assert_eq!(report.per_model[0].deadline_exceeded, n as u64);
+    assert_eq!(report.retries(), 0, "non-injected deadline misses must not retry");
+
+    let loose = ResilienceConfig { deadline_slack: 1_000.0, ..Default::default() };
+    let (server, id, g) = chaos_server(&cfg, loose, 2, 2);
+    let (responses, report) = server.serve_all(inputs(&g, id, n)).unwrap();
+    assert_eq!(responses.len(), n);
+    assert_eq!(report.failed(), 0);
+}
+
+/// The circuit breaker, walked deterministically: one worker, one
+/// request per batch, a deadline that fails every attempt hard. Trips
+/// after `threshold` consecutive failures, sheds through the cooldown,
+/// half-opens, and a failed probe re-opens immediately.
+#[test]
+fn breaker_trips_sheds_and_half_opens_in_order() {
+    let cfg = SnowflakeConfig::default();
+    let res = ResilienceConfig {
+        deadline_slack: 0.01, // every attempt fails hard
+        retries: 0,
+        breaker_threshold: 2,
+        breaker_cooldown: 2,
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, res, 1, 1);
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, 8)).unwrap();
+
+    let classes: Vec<&str> = outcomes
+        .iter()
+        .map(|o| class(o.as_ref().unwrap_err()))
+        .collect();
+    assert_eq!(
+        classes,
+        [
+            "deadline", "deadline", // consecutive failures 1, 2 -> trip
+            "shed", "shed",         // cooldown 2 -> half-open
+            "deadline",             // probe admitted, fails -> re-open
+            "shed", "shed",         // cooldown again
+            "deadline",             // second probe
+        ],
+    );
+    assert_eq!(report.per_model[0].shed, 4);
+    assert_eq!(report.per_model[0].breaker_trips, 3);
+    assert_eq!(report.per_model[0].deadline_exceeded, 4);
+    assert_eq!(report.failed(), 8);
+}
+
+// ---------------------------------------------------------------------
+// Cross-core equivalence of faulty runs on compiled models.
+// ---------------------------------------------------------------------
+
+/// Run one compiled model under the same fault plan (and optional cycle
+/// limit) on both cores and demand identical outcomes: stats + DRAM on
+/// success, or the same typed error at the same cycle on failure.
+/// Uses the two-tile conv: its input load alone takes >17k cycles
+/// (294 KB over a 16.8 B/cycle bus), so every fault window below is
+/// guaranteed to land inside live DMA/compute activity.
+fn run_both_cores(
+    plan: &FaultPlan,
+    limit: Option<u64>,
+) -> Result<snowflake::sim::stats::Stats, snowflake::sim::SimError> {
+    let cfg = SnowflakeConfig::default();
+    let g = forced_conv();
+    let compiled = Compiler::new(cfg.clone()).compile(&g).unwrap();
+    let w = Weights::init(&g, 3);
+    let x = synthetic_input(&g, 3);
+    let run = |core: CoreMode| {
+        let mut m = deploy::make_machine(&compiled, &g, &w, &x);
+        m.core = core;
+        m.set_fault_plan(plan.clone());
+        m.set_cycle_limit(limit);
+        let r = m.run();
+        (m, r)
+    };
+    let (me, re) = run(CoreMode::EventDriven);
+    let (mc, rc) = run(CoreMode::PerCycle);
+    match (&re, &rc) {
+        (Ok(se), Ok(sc)) => {
+            assert_eq!(se.cycles, sc.cycles, "cycles diverged under faults");
+            assert_eq!(se.comparable(), sc.comparable(), "stats diverged under faults");
+        }
+        (Err(ee), Err(ec)) => {
+            assert_eq!(ee.cycle, ec.cycle, "error cycle diverged: {ee} vs {ec}");
+            assert_eq!(ee.kind, ec.kind, "error kind diverged");
+            assert_eq!(ee.injected, ec.injected);
+        }
+        _ => panic!("one core errored, the other did not: {re:?} vs {rc:?}"),
+    }
+    assert_eq!(me.memory, mc.memory, "simulated DRAM diverged under faults");
+    re
+}
+
+#[test]
+fn dma_stall_windows_keep_cores_bit_identical() {
+    let healthy = run_both_cores(&FaultPlan::default(), None).expect("healthy run");
+
+    // Full bus blackout: every load unit stalled outright while the
+    // input canvas is still streaming in. The run must finish anyway,
+    // and must pay for the window.
+    let blackout = FaultPlan {
+        faults: (0..4)
+            .map(|unit| Fault::DmaStall { unit, from: 2_000, until: 20_000, factor: 0 })
+            .collect(),
+    };
+    let s = run_both_cores(&blackout, None).expect("stalls only slow the run");
+    assert_eq!(s.faults_dma_stall, 4);
+    assert!(
+        s.cycles > healthy.cycles,
+        "stall windows did not cost cycles: {} !> {}",
+        s.cycles,
+        healthy.cycles
+    );
+
+    // Partial throttle (fair-share quota divided, not zeroed).
+    let throttle = FaultPlan {
+        faults: vec![Fault::DmaStall { unit: 0, from: 2_000, until: 30_000, factor: 4 }],
+    };
+    let t = run_both_cores(&throttle, None).expect("throttle only slows the run");
+    assert_eq!(t.faults_dma_stall, 1);
+    assert!(t.cycles >= healthy.cycles);
+}
+
+#[test]
+fn dram_read_corruption_keeps_cores_bit_identical() {
+    // Whole-DRAM window from cycle 0: the first completing stream is
+    // the one corrupted — identically on both cores.
+    let plan = FaultPlan {
+        faults: vec![Fault::DramCorrupt { lo: 0, hi: i64::MAX / 2, from: 0, xor: 0x11 }],
+    };
+    let s = run_both_cores(&plan, None).expect("read corruption is not fatal");
+    assert_eq!(s.faults_dram_corrupt, 1, "corruption is one-shot");
+}
+
+#[test]
+fn injected_cu_hang_deadlocks_identically_on_both_cores() {
+    let plan = FaultPlan { faults: vec![Fault::CuHang { cu: 0, at: 1_000 }] };
+    let err = run_both_cores(&plan, None).unwrap_err();
+    assert_eq!(err.kind, SimErrorKind::Deadlock);
+    assert!(err.injected);
+    assert!(err.message.contains("no forward progress"), "{err}");
+    // Immediate detection, not an 8M-cycle watchdog spin.
+    assert!(err.cycle < 1_000_000, "detected only at cycle {}", err.cycle);
+}
+
+#[test]
+fn injected_abort_fires_at_the_exact_cycle_on_both_cores() {
+    let at = 5_000;
+    let plan = FaultPlan { faults: vec![Fault::Abort { at }] };
+    let err = run_both_cores(&plan, None).unwrap_err();
+    assert_eq!(err.kind, SimErrorKind::InjectedAbort);
+    assert_eq!(err.cycle, at, "abort boundary must be an event on both cores");
+    assert!(err.injected);
+}
+
+#[test]
+fn cycle_limit_expires_at_the_exact_cycle_on_both_cores() {
+    let err = run_both_cores(&FaultPlan::default(), Some(10_000)).unwrap_err();
+    assert_eq!(err.kind, SimErrorKind::DeadlineExceeded);
+    assert_eq!(err.cycle, 10_000, "deadline boundary must be an event on both cores");
+    assert!(!err.injected, "a pure deadline miss is not an injected fault");
+}
+
+// ---------------------------------------------------------------------
+// Watchdog/deadlock coverage across the three conv skeletons.
+// ---------------------------------------------------------------------
+
+/// A conv where all three skeletons are genuinely available (48 output
+/// rows -> two map tiles, no bypass; see tests/robustness.rs).
+fn forced_conv() -> Graph {
+    let mut g = Graph::new("forced", Shape::new(64, 48, 48));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 64, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    g
+}
+
+const SKELETONS: [LoopOrder; 3] = [LoopOrder::Kloop, LoopOrder::Mloop, LoopOrder::MloopRot];
+
+/// Truncating the program (dropping the halt and the tail of the real
+/// work) must surface as a typed error on the event core — a pc run
+/// off the stream, or a deadlock once the starved CUs stop — never as
+/// an unbounded spin.
+#[test]
+fn truncated_programs_fail_typed_on_every_skeleton() {
+    let cfg = SnowflakeConfig::default();
+    let g = forced_conv();
+    let w = Weights::init(&g, 3);
+    let x = synthetic_input(&g, 3);
+    for order in SKELETONS {
+        let opts = CompileOptions { force_loop_order: Some(order), ..Default::default() };
+        let compiled = Compiler::new(cfg.clone()).options(opts).compile(&g).unwrap();
+        let mut cut = compiled.clone();
+        let keep = cut.program.instrs.len() * 2 / 3;
+        cut.program.instrs.truncate(keep);
+        let mut m = deploy::make_machine(&cut, &g, &w, &x);
+        m.core = CoreMode::EventDriven;
+        let err = m.run().expect_err(&format!("truncated {order:?} program ran to completion"));
+        assert!(
+            matches!(err.kind, SimErrorKind::Program | SimErrorKind::Deadlock),
+            "{order:?}: unexpected error kind {:?}: {err}",
+            err.kind
+        );
+        assert!(err.cycle < 8_000_000, "{order:?}: spun to cycle {} before reporting", err.cycle);
+        assert!(!err.message.is_empty());
+    }
+}
+
+/// A CU hang injected mid-run must deadlock every skeleton typed, with
+/// the enriched report naming the hung CU — and long before the base
+/// watchdog would have fired.
+#[test]
+fn injected_cu_hangs_deadlock_typed_on_every_skeleton() {
+    let cfg = SnowflakeConfig::default();
+    let g = forced_conv();
+    let w = Weights::init(&g, 3);
+    let x = synthetic_input(&g, 3);
+    for order in SKELETONS {
+        let opts = CompileOptions { force_loop_order: Some(order), ..Default::default() };
+        let compiled = Compiler::new(cfg.clone()).options(opts).compile(&g).unwrap();
+        let mut m = deploy::make_machine(&compiled, &g, &w, &x);
+        m.core = CoreMode::EventDriven;
+        m.set_fault_plan(FaultPlan { faults: vec![Fault::CuHang { cu: 1, at: 2_000 }] });
+        let err = m.run().expect_err(&format!("{order:?} survived a hung CU"));
+        assert_eq!(err.kind, SimErrorKind::Deadlock, "{order:?}: {err}");
+        assert!(err.injected, "{order:?}: hang not flagged injected");
+        assert!(err.message.contains("no forward progress"), "{order:?}: {err}");
+        assert!(err.message.contains("cu1["), "{order:?}: report misses the hung CU: {err}");
+        assert!(m.stats.faults_cu_hang == 1, "{order:?}");
+        assert!(err.cycle < 1_000_000, "{order:?}: detected only at cycle {}", err.cycle);
+    }
+}

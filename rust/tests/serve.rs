@@ -309,3 +309,43 @@ fn submission_errors_are_typed() {
         other => panic!("expected a config-mismatch error, got {other:?}", other = other.err()),
     }
 }
+
+/// The SLO report's latency percentiles come from fixed-bucket
+/// histograms: every resolved request is recorded, the quantiles are
+/// monotone (p50 ≤ p95 ≤ p99 ≤ max — bucket floors are monotone by
+/// construction), and a healthy run keeps every resilience counter
+/// dark.
+#[test]
+fn latency_percentiles_are_ordered_and_resilience_stays_dark() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("serve_slo", 8);
+    let seed = 3;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 3, max_batch: 2, queue_depth: 4, cache_cap: 0 },
+    );
+    let id = server.register(build(&cfg, &g), seed).unwrap();
+    let n = 12usize;
+    let requests: Vec<_> = (0..n).map(|r| (id, synthetic_input(&g, seed + r as u64))).collect();
+    let (responses, report) = server.serve_all(requests).unwrap();
+    assert_eq!(responses.len(), n);
+
+    for (name, h) in [("queue-wait", report.queue_wait_hist()), ("e2e", report.e2e_hist())] {
+        assert_eq!(h.count(), n as u64, "{name}: every request records a sample");
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{name}: {p50} !<= {p95} !<= {p99}");
+        assert!(p99 <= h.max(), "{name}: p99 {p99} above the exact max {}", h.max());
+        assert_eq!(h.quantile(1.0), h.max(), "{name}: q=1.0 is the exact max");
+    }
+
+    // No faults, no deadline, no kills: the resilience machinery must
+    // be invisible in the report.
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.retries(), 0);
+    assert_eq!(report.faults_injected(), 0);
+    assert_eq!(report.workers_replaced(), 0);
+    assert_eq!(report.workers_lost, 0);
+    assert_eq!(report.slo_violation_rate(), 0.0);
+    assert_eq!(report.per_model[0].shed, 0);
+    assert_eq!(report.per_model[0].breaker_trips, 0);
+}
