@@ -16,12 +16,20 @@
 //! check, worker supervision — costs nothing in simulated time when
 //! disabled. The report must come back with every resilience counter
 //! at zero.
+//!
+//! Since ISSUE 7 the same contract covers scheduling: the default
+//! `SchedConfig`/`AdmissionConfig` are asserted inactive, and a second
+//! multi-worker pass with WFQ *on* must still produce cycle counts
+//! bit-identical to the sequential path — fair queueing reorders
+//! dispatch, never simulated numbers.
 
 use std::time::Instant;
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{Artifact, CompileOptions, Compiler};
-use snowflake::engine::serve::{ResilienceConfig, ServeConfig, Server};
+use snowflake::engine::serve::{
+    AdmissionConfig, ResilienceConfig, SchedConfig, ServeConfig, Server,
+};
 use snowflake::engine::Engine;
 use snowflake::model::weights::synthetic_input;
 use snowflake::model::zoo;
@@ -37,6 +45,10 @@ fn build(cfg: &SnowflakeConfig, name: &str) -> Artifact {
 fn main() {
     let cfg = SnowflakeConfig::default();
     let seed = 42;
+    // The scheduling and admission policies must be off by default —
+    // the FIFO passes below exercise exactly the off-state.
+    assert!(!SchedConfig::default().active(), "default SchedConfig is not off");
+    assert!(!AdmissionConfig::default().active(), "default AdmissionConfig is not off");
     let artifacts = [build(&cfg, "alexnet"), build(&cfg, "resnet18")];
     let graphs: Vec<_> = artifacts.iter().map(|a| a.graph.clone()).collect();
 
@@ -62,14 +74,19 @@ fn main() {
     );
 
     let workers_max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-    for workers in [1, workers_max] {
+    for (workers, wfq) in [(1, false), (workers_max, false), (workers_max, true)] {
         let mut server = Server::new(
             cfg.clone(),
             ServeConfig { workers, max_batch: 3, queue_depth: REQUESTS, cache_cap: 0 },
         );
         // Explicitly the off-state: the cycle assertions below gate the
-        // zero-overhead-when-off contract.
+        // zero-overhead-when-off contract. The third pass turns WFQ on
+        // to pin that fair queueing only reorders dispatch — per-request
+        // simulated cycles stay bit-identical to the sequential path.
         server.set_resilience(ResilienceConfig::default());
+        if wfq {
+            server.set_sched(SchedConfig { wfq: true, ..Default::default() });
+        }
         let ids: Vec<_> = artifacts
             .iter()
             .map(|a| server.register(a.clone(), seed).expect("register"))
@@ -91,10 +108,12 @@ fn main() {
         assert_eq!(report.retries(), 0, "healthy run reported retries");
         assert_eq!(report.faults_injected(), 0, "healthy run reported injected faults");
         assert_eq!(report.workers_replaced(), 0, "healthy run replaced a worker");
+        assert!(!report.prefilled_overflow, "{REQUESTS} prefilled requests fit the queue");
         let speedup = seq_wall.as_secs_f64() / report.wall.as_secs_f64().max(1e-9);
         println!(
-            "  {workers} worker(s): {:.2?} ({:.1} req/s, {speedup:.2}x vs sequential), \
+            "  {workers} worker(s){}: {:.2?} ({:.1} req/s, {speedup:.2}x vs sequential), \
              cache {} hits / {} misses",
+            if wfq { " [wfq]" } else { "" },
             report.wall,
             report.requests_per_sec(),
             report.cache.hits,
@@ -110,5 +129,5 @@ fn main() {
             );
         }
     }
-    println!("serve bench OK: all served cycle counts bit-identical to sequential");
+    println!("serve bench OK: all served cycle counts bit-identical to sequential (FIFO and WFQ)");
 }

@@ -775,6 +775,109 @@ pub fn validate(s: &Schedule, g: &ConvGeom, cfg: &SnowflakeConfig) -> Result<(),
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Serving capacity model (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// The serving-side analogue of the per-layer cost model: given each
+/// registered model's service time in cycles (cost-model predicted or
+/// calibrated by one measured inference — sim timing is
+/// input-independent, so one sample is exact) and the worker count, it
+/// answers the questions the admission controller and the capacity
+/// planner ask:
+///
+/// * [`ServeModel::completion`] — when would a request admitted *now*
+///   finish, given the backlog already committed? This is the deadline
+///   predicate behind `ServeError::Shed`.
+/// * [`ServeModel::roofline_rps`] — the saturation throughput for a
+///   given popularity mix; capacity sweeps are expressed as multiples
+///   of it.
+///
+/// The backlog estimate deliberately ignores batching and WFQ order:
+/// total committed cycles divided evenly over the workers is a
+/// scheduling-independent lower bound that is exact for a saturated
+/// pool, which is the only regime where admission control matters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeModel {
+    /// Per registered model: cycles one inference costs.
+    pub service_cycles: Vec<u64>,
+    /// Virtual (or real) worker count serving in parallel.
+    pub workers: usize,
+}
+
+impl ServeModel {
+    pub fn new(service_cycles: Vec<u64>, workers: usize) -> ServeModel {
+        ServeModel { service_cycles, workers: workers.max(1) }
+    }
+
+    /// Cycles until a backlog of `backlog_cycles` committed work
+    /// drains, with the workers pulling in parallel.
+    pub fn drain_cycles(&self, backlog_cycles: u64) -> u64 {
+        backlog_cycles.div_ceil(self.workers as u64)
+    }
+
+    /// Predicted completion time (absolute, in cycles) of a `model`
+    /// request admitted at `now` behind `backlog_cycles` of committed
+    /// work.
+    pub fn completion(&self, now: u64, backlog_cycles: u64, model: usize) -> u64 {
+        now + self.drain_cycles(backlog_cycles) + self.service_cycles[model]
+    }
+
+    /// Mean service cycles per request under a popularity `mix`
+    /// (probabilities per model, summing to 1).
+    pub fn mean_service_cycles(&self, mix: &[f64]) -> f64 {
+        assert_eq!(mix.len(), self.service_cycles.len(), "mix/model count mismatch");
+        mix.iter().zip(&self.service_cycles).map(|(p, c)| p * *c as f64).sum()
+    }
+
+    /// Saturation throughput in requests per second of virtual time:
+    /// `workers / mean service time`. Offered load above this must
+    /// queue without bound; admission control exists to shed it.
+    pub fn roofline_rps(&self, mix: &[f64], clock_mhz: f64) -> f64 {
+        let mean = self.mean_service_cycles(mix);
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        self.workers as f64 * clock_mhz * 1e6 / mean
+    }
+}
+
+#[cfg(test)]
+mod serve_model_tests {
+    use super::ServeModel;
+
+    #[test]
+    fn completion_accounts_for_backlog_and_workers() {
+        let m = ServeModel::new(vec![1000, 4000], 2);
+        // Empty backlog: now + own service time.
+        assert_eq!(m.completion(500, 0, 0), 1500);
+        // 6000 committed cycles over 2 workers = 3000 to drain.
+        assert_eq!(m.drain_cycles(6000), 3000);
+        assert_eq!(m.completion(0, 6000, 1), 7000);
+        // Odd backlogs round up (a worker cannot serve half a request).
+        assert_eq!(m.drain_cycles(5), 3);
+    }
+
+    #[test]
+    fn roofline_scales_with_workers_and_mix() {
+        let m = ServeModel::new(vec![250_000, 1_000_000], 1);
+        // Uniform mix: mean 625k cycles at 250 MHz = 2.5 ms => 400 rps.
+        let r1 = m.roofline_rps(&[0.5, 0.5], 250.0);
+        assert!((r1 - 400.0).abs() < 1e-6, "{r1}");
+        let m4 = ServeModel::new(vec![250_000, 1_000_000], 4);
+        assert!((m4.roofline_rps(&[0.5, 0.5], 250.0) - 1600.0).abs() < 1e-6);
+        // A mix leaning on the fast model raises the roofline.
+        assert!(m.roofline_rps(&[1.0, 0.0], 250.0) > r1);
+    }
+
+    #[test]
+    fn workers_are_clamped_to_one() {
+        let m = ServeModel::new(vec![100], 0);
+        assert_eq!(m.workers, 1);
+        assert_eq!(m.drain_cycles(100), 100);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,559 @@
+//! Seeded open-loop load generation for the serving runtime.
+//!
+//! The paper's throughput numbers (93.6 fps AlexNet, 21.4 fps ResNet18)
+//! are closed-loop: the host feeds the next frame the moment the last
+//! one finishes. Real serving is *open-loop* — arrivals do not wait for
+//! the system — and that difference is exactly where overload behavior
+//! lives. This module generates deterministic open-loop request traces:
+//!
+//! * **Arrival process** ([`ArrivalKind`]): Poisson (exponential
+//!   inter-arrivals), bursty (a 2-state Markov-modulated Poisson
+//!   process that alternates between a base rate and a `mult`× burst
+//!   rate), or diurnal (a sinusoidally rate-modulated Poisson process,
+//!   sampled by thinning against the peak rate).
+//! * **Model popularity** ([`Popularity`]): uniform or Zipf(`s`) over
+//!   the registered models, sampled per request by CDF inversion —
+//!   under skew one hot model dominates, the serving-fairness stress
+//!   case.
+//! * **Virtual time**: every arrival is stamped in *simulated cycles*
+//!   (`seconds × clock_mhz × 1e6`), so a trace — and everything the
+//!   virtual-time scheduler in [`crate::engine::serve`] derives from it
+//!   — is host-machine-independent and bit-reproducible from
+//!   `(spec, seed)`.
+//! * **Replay**: a [`Trace`] saves to / loads from a small versioned
+//!   JSON file, so a capacity experiment can be replayed exactly
+//!   (`repro loadtest --arrivals trace:FILE`).
+//!
+//! All randomness comes from one [`Rng`] stream seeded by the caller;
+//! the same `(kind, popularity, n_models, n_requests, seed, clock)`
+//! always yields the same trace, which `tests/overload.rs` pins.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Trace-file format version; bumped on any incompatible change.
+pub const TRACE_VERSION: u64 = 1;
+
+/// An open-loop arrival process. All rates are mean requests per
+/// second of *virtual* time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// 2-state Markov-modulated Poisson process: a base state at
+    /// `rate` req/s and a burst state at `rate × mult`. After each
+    /// arrival the chain switches base→burst with probability
+    /// `p_enter` and burst→base with probability `p_exit`.
+    Bursty { rate: f64, mult: f64, p_enter: f64, p_exit: f64 },
+    /// Sinusoidal diurnal mix: instantaneous rate
+    /// `rate × (1 + depth · sin(2π t / period))`, sampled by thinning
+    /// against the peak `rate × (1 + depth)`. `period` is in seconds
+    /// of virtual time, `depth` in `[0, 1)`.
+    Diurnal { rate: f64, period: f64, depth: f64 },
+}
+
+impl ArrivalKind {
+    /// Parse a CLI spec: `poisson:RATE`,
+    /// `bursty:RATE[,MULT[,P_ENTER[,P_EXIT]]]`,
+    /// `diurnal:RATE[,PERIOD_S[,DEPTH]]`.
+    pub fn parse(spec: &str) -> Result<ArrivalKind, String> {
+        let (kind, rest) = spec.split_once(':').ok_or_else(|| {
+            format!("arrival spec '{spec}' needs kind:params (poisson:RATE, bursty:.., diurnal:..)")
+        })?;
+        let nums: Vec<f64> = rest
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("arrival spec '{spec}': bad number '{s}'"))
+            })
+            .collect::<Result<_, _>>()?;
+        let rate = *nums.first().ok_or_else(|| format!("arrival spec '{spec}' needs a rate"))?;
+        if !(rate > 0.0) {
+            return Err(format!("arrival spec '{spec}': rate must be > 0"));
+        }
+        let at = |i: usize, default: f64| nums.get(i).copied().unwrap_or(default);
+        match kind {
+            "poisson" => Ok(ArrivalKind::Poisson { rate }),
+            "bursty" => {
+                let k = ArrivalKind::Bursty {
+                    rate,
+                    mult: at(1, 8.0),
+                    p_enter: at(2, 0.1),
+                    p_exit: at(3, 0.25),
+                };
+                if let ArrivalKind::Bursty { mult, p_enter, p_exit, .. } = k {
+                    if mult < 1.0 {
+                        return Err(format!("arrival spec '{spec}': burst mult must be >= 1"));
+                    }
+                    for (name, p) in [("p_enter", p_enter), ("p_exit", p_exit)] {
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!("arrival spec '{spec}': {name} must be in [0,1]"));
+                        }
+                    }
+                }
+                Ok(k)
+            }
+            "diurnal" => {
+                let (period, depth) = (at(1, 1.0), at(2, 0.8));
+                if !(period > 0.0) {
+                    return Err(format!("arrival spec '{spec}': period must be > 0"));
+                }
+                if !(0.0..1.0).contains(&depth) {
+                    return Err(format!("arrival spec '{spec}': depth must be in [0,1)"));
+                }
+                Ok(ArrivalKind::Diurnal { rate, period, depth })
+            }
+            other => Err(format!("unknown arrival kind '{other}' (poisson|bursty|diurnal)")),
+        }
+    }
+
+    /// Long-run mean arrival rate (req/s). For the MMPP this folds in
+    /// the stationary burst occupancy `p_enter / (p_enter + p_exit)`;
+    /// the diurnal sinusoid integrates to its base rate.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalKind::Poisson { rate } => rate,
+            ArrivalKind::Bursty { rate, mult, p_enter, p_exit } => {
+                if p_enter + p_exit <= 0.0 {
+                    return rate;
+                }
+                let pi_burst = p_enter / (p_enter + p_exit);
+                rate * (1.0 - pi_burst + pi_burst * mult)
+            }
+            ArrivalKind::Diurnal { rate, .. } => rate,
+        }
+    }
+
+    /// The same process shape rescaled so [`Self::mean_rate`] equals
+    /// `target` — how capacity sweeps express "x× the roofline"
+    /// without changing burstiness.
+    pub fn scaled_to(&self, target: f64) -> ArrivalKind {
+        let f = target / self.mean_rate();
+        match *self {
+            ArrivalKind::Poisson { rate } => ArrivalKind::Poisson { rate: rate * f },
+            ArrivalKind::Bursty { rate, mult, p_enter, p_exit } => {
+                ArrivalKind::Bursty { rate: rate * f, mult, p_enter, p_exit }
+            }
+            ArrivalKind::Diurnal { rate, period, depth } => {
+                ArrivalKind::Diurnal { rate: rate * f, period, depth }
+            }
+        }
+    }
+
+    /// Compact spec string (`parse` round-trips it); recorded in saved
+    /// traces for provenance.
+    pub fn spec(&self) -> String {
+        match *self {
+            ArrivalKind::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalKind::Bursty { rate, mult, p_enter, p_exit } => {
+                format!("bursty:{rate},{mult},{p_enter},{p_exit}")
+            }
+            ArrivalKind::Diurnal { rate, period, depth } => {
+                format!("diurnal:{rate},{period},{depth}")
+            }
+        }
+    }
+}
+
+/// Which model each arrival asks for.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Popularity {
+    /// Every model equally likely.
+    Uniform,
+    /// Zipf with exponent `s`: model `m` (registration order) has
+    /// weight `1 / (m + 1)^s` — model 0 is the hot one.
+    Zipf { s: f64 },
+}
+
+impl Popularity {
+    /// Parse a CLI spec: `uniform` or `zipf:S`.
+    pub fn parse(spec: &str) -> Result<Popularity, String> {
+        if spec == "uniform" {
+            return Ok(Popularity::Uniform);
+        }
+        if let Some(rest) = spec.strip_prefix("zipf:") {
+            let s: f64 = rest
+                .trim()
+                .parse()
+                .map_err(|_| format!("popularity spec '{spec}': bad exponent"))?;
+            if !(s >= 0.0) {
+                return Err(format!("popularity spec '{spec}': exponent must be >= 0"));
+            }
+            return Ok(Popularity::Zipf { s });
+        }
+        Err(format!("unknown popularity spec '{spec}' (uniform|zipf:S)"))
+    }
+
+    /// Per-model probabilities over `n` models (sums to 1).
+    pub fn mix(&self, n: usize) -> Vec<f64> {
+        assert!(n > 0, "popularity mix over zero models");
+        let w: Vec<f64> = match *self {
+            Popularity::Uniform => vec![1.0; n],
+            Popularity::Zipf { s } => (0..n).map(|m| 1.0 / ((m + 1) as f64).powf(s)).collect(),
+        };
+        let total: f64 = w.iter().sum();
+        w.into_iter().map(|x| x / total).collect()
+    }
+
+    /// Spec string (`parse` round-trips it).
+    pub fn spec(&self) -> String {
+        match *self {
+            Popularity::Uniform => "uniform".to_string(),
+            Popularity::Zipf { s } => format!("zipf:{s}"),
+        }
+    }
+}
+
+/// One arrival: a virtual-time timestamp (simulated cycles since the
+/// trace start) and the model it asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceRequest {
+    /// Arrival time in simulated cycles.
+    pub at: u64,
+    /// Registered-model index.
+    pub model: usize,
+}
+
+/// A deterministic open-loop request trace (arrival order, timestamps
+/// non-decreasing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+    /// Model count the trace was generated against; replay validates
+    /// this against the server's registered models.
+    pub n_models: usize,
+    /// Clock the timestamps were scaled with (cycles = seconds × MHz ×
+    /// 1e6); provenance only.
+    pub clock_mhz: f64,
+    /// Generator seed (provenance; 0 for hand-built traces).
+    pub seed: u64,
+    /// Arrival-process spec string (provenance).
+    pub arrivals: String,
+    /// Popularity spec string (provenance).
+    pub popularity: String,
+}
+
+impl Trace {
+    /// Span from time 0 to the last arrival, in cycles.
+    pub fn duration_cycles(&self) -> u64 {
+        self.requests.last().map_or(0, |r| r.at)
+    }
+
+    /// Offered load over the trace span, in requests per second of
+    /// virtual time (0 for traces shorter than 2 requests).
+    pub fn offered_rps(&self) -> f64 {
+        let d = self.duration_cycles();
+        if d == 0 || self.requests.len() < 2 {
+            return 0.0;
+        }
+        (self.requests.len() - 1) as f64 * self.clock_mhz * 1e6 / d as f64
+    }
+
+    /// Per-model request counts.
+    pub fn model_counts(&self) -> Vec<u64> {
+        let mut c = vec![0u64; self.n_models];
+        for r in &self.requests {
+            c[r.model] += 1;
+        }
+        c
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Flat [at0, model0, at1, model1, ...] keeps trace files small.
+        let flat = self
+            .requests
+            .iter()
+            .flat_map(|r| [Json::num(r.at as f64), Json::num(r.model as f64)])
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("n_models", Json::num(self.n_models as f64)),
+            ("clock_mhz", Json::num(self.clock_mhz)),
+            ("seed", Json::num(self.seed as f64)),
+            ("arrivals", Json::str(&self.arrivals)),
+            ("popularity", Json::str(&self.popularity)),
+            ("requests", Json::Arr(flat)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace, String> {
+        let version = j.get("version").as_i64().ok_or("trace: missing version")?;
+        if version != TRACE_VERSION as i64 {
+            return Err(format!(
+                "trace: format version {version} unsupported (this build reads v{TRACE_VERSION})"
+            ));
+        }
+        let n_models = j.get("n_models").as_usize().ok_or("trace: missing n_models")?;
+        if n_models == 0 {
+            return Err("trace: n_models must be > 0".to_string());
+        }
+        let flat = j.get("requests").as_arr().ok_or("trace: missing requests")?;
+        if flat.len() % 2 != 0 {
+            return Err("trace: requests array must be (at, model) pairs".to_string());
+        }
+        let mut requests = Vec::with_capacity(flat.len() / 2);
+        let mut last_at = 0u64;
+        for pair in flat.chunks_exact(2) {
+            let at = pair[0].as_i64().filter(|v| *v >= 0).ok_or("trace: bad timestamp")? as u64;
+            let model = pair[1].as_usize().ok_or("trace: bad model index")?;
+            if model >= n_models {
+                return Err(format!("trace: model index {model} >= n_models {n_models}"));
+            }
+            if at < last_at {
+                return Err("trace: timestamps must be non-decreasing".to_string());
+            }
+            last_at = at;
+            requests.push(TraceRequest { at, model });
+        }
+        Ok(Trace {
+            requests,
+            n_models,
+            clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(0.0),
+            seed: j.get("seed").as_i64().unwrap_or(0) as u64,
+            arrivals: j.get("arrivals").as_str().unwrap_or("").to_string(),
+            popularity: j.get("popularity").as_str().unwrap_or("").to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().dump() + "\n")
+            .map_err(|e| format!("write trace {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read trace {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse trace {path}: {e}"))?;
+        Trace::from_json(&j)
+    }
+}
+
+/// Generate a deterministic `n_requests`-arrival trace: one RNG stream
+/// drives inter-arrival draws, state switches, thinning and popularity
+/// picks, so the trace is a pure function of the arguments.
+pub fn generate(
+    kind: &ArrivalKind,
+    pop: &Popularity,
+    n_models: usize,
+    n_requests: usize,
+    seed: u64,
+    clock_mhz: f64,
+) -> Trace {
+    assert!(n_models > 0, "load generation needs at least one model");
+    assert!(clock_mhz > 0.0, "load generation needs a positive clock");
+    let cycles_per_sec = clock_mhz * 1e6;
+    let mix = pop.mix(n_models);
+    let mut cdf = Vec::with_capacity(n_models);
+    let mut acc = 0.0;
+    for p in &mix {
+        acc += p;
+        cdf.push(acc);
+    }
+    let mut rng = Rng::new(seed ^ 0x10ad_9e4e_7a7e_5eed);
+    let mut t = 0.0f64; // virtual seconds
+    let mut bursting = false;
+    let mut requests = Vec::with_capacity(n_requests);
+    let mut last_at = 0u64;
+    for _ in 0..n_requests {
+        match *kind {
+            ArrivalKind::Poisson { rate } => t += rng.exp(1.0 / rate),
+            ArrivalKind::Bursty { rate, mult, p_enter, p_exit } => {
+                let r = if bursting { rate * mult } else { rate };
+                t += rng.exp(1.0 / r);
+                // Modulate at arrival epochs: cheap, deterministic, and
+                // enough to produce the queue-filling burst trains the
+                // admission controller must survive.
+                let u = rng.f64();
+                if bursting {
+                    bursting = u >= p_exit;
+                } else {
+                    bursting = u < p_enter;
+                }
+            }
+            ArrivalKind::Diurnal { rate, period, depth } => {
+                // Thinning: candidates at the peak rate, each kept with
+                // probability (instantaneous / peak) at its epoch.
+                let peak = rate * (1.0 + depth);
+                loop {
+                    t += rng.exp(1.0 / peak);
+                    let inst = rate
+                        * (1.0 + depth * (2.0 * std::f64::consts::PI * t / period).sin());
+                    if rng.f64() < inst / peak {
+                        break;
+                    }
+                }
+            }
+        }
+        let u = rng.f64();
+        let model = cdf.iter().position(|&c| u < c).unwrap_or(n_models - 1);
+        // Monotone by construction (t only grows), but rounding could
+        // tie; clamp keeps the invariant explicit.
+        let at = ((t * cycles_per_sec).round() as u64).max(last_at);
+        last_at = at;
+        requests.push(TraceRequest { at, model });
+    }
+    Trace {
+        requests,
+        n_models,
+        clock_mhz,
+        seed,
+        arrivals: kind.spec(),
+        popularity: pop.spec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLOCK: f64 = 250.0;
+
+    #[test]
+    fn generation_is_deterministic_from_seed() {
+        let k = ArrivalKind::Poisson { rate: 500.0 };
+        let a = generate(&k, &Popularity::Zipf { s: 1.0 }, 3, 200, 7, CLOCK);
+        let b = generate(&k, &Popularity::Zipf { s: 1.0 }, 3, 200, 7, CLOCK);
+        assert_eq!(a, b);
+        let c = generate(&k, &Popularity::Zipf { s: 1.0 }, 3, 200, 8, CLOCK);
+        assert_ne!(a, c, "different seeds must give different traces");
+    }
+
+    #[test]
+    fn poisson_hits_its_mean_rate() {
+        let t = generate(
+            &ArrivalKind::Poisson { rate: 1000.0 },
+            &Popularity::Uniform,
+            2,
+            4000,
+            42,
+            CLOCK,
+        );
+        let rps = t.offered_rps();
+        assert!((rps - 1000.0).abs() / 1000.0 < 0.1, "offered {rps} req/s");
+        // Timestamps are non-decreasing.
+        assert!(t.requests.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn bursty_mean_rate_and_scaling() {
+        let k = ArrivalKind::Bursty { rate: 100.0, mult: 8.0, p_enter: 0.1, p_exit: 0.25 };
+        // Stationary burst occupancy 0.1/0.35; mean = 100·(1 - π + 8π).
+        let pi = 0.1 / 0.35;
+        assert!((k.mean_rate() - 100.0 * (1.0 - pi + 8.0 * pi)).abs() < 1e-9);
+        let scaled = k.scaled_to(500.0);
+        assert!((scaled.mean_rate() - 500.0).abs() < 1e-9);
+        // The generated trace lands near the analytic mean.
+        let t = generate(&scaled, &Popularity::Uniform, 1, 6000, 3, CLOCK);
+        let rps = t.offered_rps();
+        assert!((rps - 500.0).abs() / 500.0 < 0.2, "offered {rps} req/s");
+    }
+
+    #[test]
+    fn diurnal_thinning_keeps_the_base_rate() {
+        let k = ArrivalKind::Diurnal { rate: 800.0, period: 0.5, depth: 0.8 };
+        let t = generate(&k, &Popularity::Uniform, 1, 6000, 9, CLOCK);
+        let rps = t.offered_rps();
+        assert!((rps - 800.0).abs() / 800.0 < 0.15, "offered {rps} req/s");
+    }
+
+    #[test]
+    fn zipf_skews_toward_model_zero() {
+        let t = generate(
+            &ArrivalKind::Poisson { rate: 500.0 },
+            &Popularity::Zipf { s: 1.2 },
+            4,
+            2000,
+            5,
+            CLOCK,
+        );
+        let c = t.model_counts();
+        assert!(c[0] > c[1] && c[1] > c[3], "counts {c:?} not Zipf-skewed");
+        // The empirical hot-model share tracks the analytic mix.
+        let mix = Popularity::Zipf { s: 1.2 }.mix(4);
+        let share = c[0] as f64 / 2000.0;
+        assert!((share - mix[0]).abs() < 0.05, "hot share {share} vs {}", mix[0]);
+    }
+
+    #[test]
+    fn uniform_mix_sums_to_one() {
+        for pop in [Popularity::Uniform, Popularity::Zipf { s: 0.9 }] {
+            let mix = pop.mix(5);
+            assert!((mix.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            assert!(mix.iter().all(|p| *p > 0.0));
+        }
+    }
+
+    #[test]
+    fn spec_strings_round_trip() {
+        for spec in ["poisson:250", "bursty:100,8,0.1,0.25", "diurnal:800,0.5,0.8"] {
+            let k = ArrivalKind::parse(spec).unwrap();
+            assert_eq!(ArrivalKind::parse(&k.spec()).unwrap(), k);
+        }
+        for spec in ["uniform", "zipf:1.1"] {
+            let p = Popularity::parse(spec).unwrap();
+            assert_eq!(Popularity::parse(&p.spec()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "poisson",
+            "poisson:0",
+            "poisson:-5",
+            "poisson:abc",
+            "weibull:3",
+            "bursty:100,0.5",
+            "diurnal:100,0",
+            "diurnal:100,1,1.5",
+        ] {
+            assert!(ArrivalKind::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        assert!(Popularity::parse("zipf:-1").is_err());
+        assert!(Popularity::parse("pareto").is_err());
+    }
+
+    #[test]
+    fn trace_json_round_trips_bit_identically() {
+        let t = generate(
+            &ArrivalKind::Bursty { rate: 300.0, mult: 4.0, p_enter: 0.2, p_exit: 0.3 },
+            &Popularity::Zipf { s: 1.0 },
+            3,
+            128,
+            13,
+            CLOCK,
+        );
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn trace_validation_rejects_corruption() {
+        let t = Trace {
+            requests: vec![TraceRequest { at: 0, model: 0 }, TraceRequest { at: 5, model: 1 }],
+            n_models: 2,
+            clock_mhz: CLOCK,
+            seed: 0,
+            arrivals: "hand".to_string(),
+            popularity: "hand".to_string(),
+        };
+        let mut j = t.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::num(99.0));
+        }
+        assert!(Trace::from_json(&j).is_err(), "future version must be rejected");
+
+        let mut j = t.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("n_models".to_string(), Json::num(1.0));
+        }
+        assert!(Trace::from_json(&j).is_err(), "out-of-range model index must be rejected");
+
+        // Decreasing timestamps are rejected on load.
+        let mut bad = t.clone();
+        bad.requests[1].at = 0;
+        bad.requests[0].at = 5;
+        assert!(Trace::from_json(&bad.to_json()).is_err());
+    }
+}

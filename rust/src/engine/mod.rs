@@ -35,8 +35,16 @@
 //!   batching per model, and a deployed-image cache ([`cache`]) that
 //!   makes repeat loads of the same artifact a memcpy. `repro serve`
 //!   is the CLI front end.
+//! * **Load testing** ([`loadgen`] + [`serve::Server::loadtest`]): a
+//!   seeded open-loop arrival-trace generator (Poisson / bursty /
+//!   diurnal × Zipf popularity) and a virtual-time discrete-event
+//!   replay of the worker pool with admission control and weighted
+//!   fair queueing — every capacity number derives from the trace and
+//!   simulated cycles, bit-reproducible on any host. `repro loadtest`
+//!   is the CLI front end.
 
 pub mod cache;
+pub mod loadgen;
 pub mod serve;
 
 use crate::arch::SnowflakeConfig;

@@ -78,18 +78,62 @@
 //! everything simulated is exact — including injected-fault outcomes,
 //! which depend only on (seed, request seqno, attempt), not on which
 //! worker runs what when.
+//!
+//! ## Scheduling & overload (ISSUE 7)
+//!
+//! * **Weighted fair queueing** ([`SchedConfig`], default off) replaces
+//!   the head-of-line FIFO model pick in `take_batch` with a
+//!   self-clocked virtual-finish-time order: request `i` for model `m`
+//!   gets tag `F(i) = max(V, F_last(m)) + predicted_cycles(m) /
+//!   weight(m)`, where `V` is the tag of the request most recently
+//!   dispatched, and the smallest tag (ties by seqno) picks the next
+//!   batch's model — so a hot slow model cannot starve the rest, in
+//!   proportion to the configured weights. Coalescing is unchanged.
+//!   With WFQ off the pick is the exact pre-ISSUE-7 FIFO and costs one
+//!   branch.
+//! * **Virtual-time load testing** ([`Server::loadtest`]): a
+//!   *sequential* discrete-event simulation of the pool against an
+//!   open-loop [`Trace`] from [`crate::engine::loadgen`]. Arrivals are
+//!   stamped in simulated cycles; virtual workers advance a virtual
+//!   clock by simulated service cycles (cost-model predicted, or
+//!   measured by running the real simulator per request). Queue wait,
+//!   deadlines and SLO accounting all read the virtual clock, so every
+//!   capacity number is host-machine-independent and bit-reproducible
+//!   from `(trace, config)`.
+//! * **Admission control** ([`AdmissionConfig`], default off, loadtest
+//!   only — it needs the virtual clock): a token bucket in requests
+//!   per virtual second, plus deadline-aware shedding — a request
+//!   whose predicted completion (committed backlog drained across the
+//!   workers + its own predicted cycles, via
+//!   [`crate::compiler::cost::ServeModel`]) already exceeds its
+//!   arrival-relative deadline is rejected at admission as
+//!   [`ServeError::Shed`] with the predicted miss, instead of wasting
+//!   worker cycles. Hysteresis: once shedding starts it only stops
+//!   when the predicted queueing delay has drained below
+//!   `resume_frac ×` the budget, so the controller does not flap at
+//!   the boundary. The shed *set* is deterministic given the trace.
+//! * **Deadline semantics differ from the threaded path by design**:
+//!   `Server::run` enforces deadlines *in-sim* (a cycle budget cuts
+//!   the run off); `loadtest` deadlines are arrival-relative
+//!   accounting and admission predicates only — admitted requests run
+//!   to completion, so every non-shed request's simulated result stays
+//!   bit-identical to the sequential oracle no matter the policy.
 
 use super::cache::{ArtifactCache, CacheStats};
+use super::loadgen::Trace;
 use super::{Engine, EngineError, ModelHandle};
 use crate::arch::SnowflakeConfig;
 use crate::compiler::artifact::config_hash;
+use crate::compiler::cost::ServeModel;
 use crate::compiler::Artifact;
+use crate::model::weights::synthetic_input;
 use crate::sim::fault::{FaultPlan, FaultSpec, PlanHint};
 use crate::sim::stats::Stats;
 use crate::sim::SimErrorKind;
 use crate::tensor::Tensor;
 use crate::util::hist::Histogram;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -169,6 +213,84 @@ impl Default for ResilienceConfig {
     }
 }
 
+/// Scheduling policy for the request queue (ISSUE 7). Default: WFQ and
+/// affinity off — the queue is the pre-ISSUE-7 strict FIFO and the
+/// plumbing costs one branch per dequeue (`benches/serve.rs` pins the
+/// zero-overhead-when-off contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedConfig {
+    /// Weighted fair queueing: pick the next batch's model by smallest
+    /// virtual finish tag instead of queue position.
+    pub wfq: bool,
+    /// Per-model weights (registration order). Missing or non-positive
+    /// entries default to 1.0; a weight-2 model gets twice the service
+    /// share of a weight-1 model under contention.
+    pub weights: Vec<f64>,
+    /// Worker affinity (loadtest scheduler): worker `w` prefers models
+    /// with `model % workers == w`, falling back to the global pick
+    /// when none of its models are queued. Keeps a model's batches on
+    /// one virtual worker without ever idling a worker that has work.
+    pub affinity: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { wfq: false, weights: Vec::new(), affinity: false }
+    }
+}
+
+impl SchedConfig {
+    /// The effective weight of a model (1.0 unless configured > 0).
+    pub fn weight(&self, model: usize) -> f64 {
+        match self.weights.get(model) {
+            Some(w) if *w > 0.0 => *w,
+            _ => 1.0,
+        }
+    }
+
+    /// Any non-default policy switched on?
+    pub fn active(&self) -> bool {
+        self.wfq || self.affinity
+    }
+}
+
+/// Admission-control policy for [`Server::loadtest`] (ISSUE 7).
+/// Default: everything off — every arrival is admitted, exactly the
+/// pre-ISSUE-7 behavior.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    /// Token-bucket refill rate in requests per second of *virtual*
+    /// time; 0 disables the bucket. Each admission spends one token.
+    pub tokens_rps: f64,
+    /// Bucket capacity (burst allowance), in tokens (min 1 when the
+    /// bucket is active). The bucket starts full.
+    pub burst: f64,
+    /// Deadline-aware shedding: reject a request whose predicted
+    /// completion (backlog + predicted cycles) exceeds its deadline
+    /// (`ServeError::Shed { predicted_miss }`). Needs a deadline, i.e.
+    /// `ResilienceConfig::deadline_slack > 0`.
+    pub deadline_aware: bool,
+    /// Hysteresis for deadline-aware shedding: once shedding, resume
+    /// admission only when the predicted queueing delay has drained to
+    /// `resume_frac ×` the request's cycle budget (and the request
+    /// itself would meet its deadline), so the controller does not
+    /// flap around the threshold.
+    pub resume_frac: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { tokens_rps: 0.0, burst: 8.0, deadline_aware: false, resume_frac: 0.5 }
+    }
+}
+
+impl AdmissionConfig {
+    /// Any admission policy switched on?
+    pub fn active(&self) -> bool {
+        self.tokens_rps > 0.0 || self.deadline_aware
+    }
+}
+
 /// Identifier of a model registered with a [`Server`] (server-local,
 /// in registration order).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -212,6 +334,14 @@ pub enum ServeError {
     /// the retry budget could not absorb it, or the pool shut down
     /// with the request still queued. Never silently dropped.
     WorkerDied(String),
+    /// Admission control rejected the request up front: its predicted
+    /// completion already missed its deadline by `predicted_miss`
+    /// simulated cycles (0 = shed by the token bucket or hysteresis,
+    /// not a deadline miss). The request never cost a worker cycle.
+    Shed {
+        /// Predicted deadline overshoot at admission, in cycles.
+        predicted_miss: u64,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -231,6 +361,11 @@ impl std::fmt::Display for ServeError {
                 write!(f, "model id {i} is unavailable: circuit breaker open")
             }
             ServeError::WorkerDied(m) => write!(f, "worker died: {m}"),
+            ServeError::Shed { predicted_miss } => write!(
+                f,
+                "shed at admission: predicted completion misses the deadline by \
+                 {predicted_miss} cycles"
+            ),
         }
     }
 }
@@ -339,6 +474,8 @@ struct QueuedRequest {
     /// fault plan is keyed by (seqno, attempt) so a retry draws fresh
     /// faults while a replay of the same attempt is bit-identical.
     attempt: u64,
+    /// WFQ virtual finish tag (0.0 and unread when WFQ is off).
+    ftag: f64,
     input: Tensor<f32>,
     submitted: Instant,
     slot: Arc<TicketSlot>,
@@ -416,6 +553,24 @@ struct QueueState {
     next_seqno: u64,
     /// One breaker per registered model.
     breakers: Vec<Breaker>,
+    /// WFQ virtual time: the finish tag of the request most recently
+    /// picked as a batch head (self-clocked fair queueing). Advances
+    /// monotonically under the queue mutex.
+    wfq_v: f64,
+    /// Per-model last-assigned finish tag.
+    wfq_finish: Vec<f64>,
+}
+
+/// Assign the SCFQ virtual finish tag for a `model` request entering
+/// the queue: `max(V, F_last(model)) + predicted / weight`. Within a
+/// model tags are strictly increasing, so the model's oldest queued
+/// request always holds its smallest tag and coalescing in arrival
+/// order agrees with tag order.
+fn wfq_tag(v: f64, finish: &mut [f64], pred: &[u64], sched: &SchedConfig, model: usize) -> f64 {
+    let start = v.max(finish[model]);
+    let tag = start + pred[model] as f64 / sched.weight(model);
+    finish[model] = tag;
+    tag
 }
 
 /// The run's resolved failure policy, derived once from
@@ -430,6 +585,10 @@ struct Policy {
     fault_seed: u64,
     breaker_threshold: u64,
     breaker_cooldown: u64,
+    /// Queue scheduling policy (WFQ / weights).
+    sched: SchedConfig,
+    /// Per-model predicted cycles (WFQ tag increments), min 1.
+    pred: Vec<u64>,
 }
 
 impl Policy {
@@ -460,11 +619,35 @@ struct Shared {
     policy: Policy,
 }
 
-/// Pop the queue head, then coalesce: steal up to `max_batch - 1` more
-/// requests *for the same model* from anywhere in the queue, in
+/// Pick the batch head, then coalesce: steal up to `max_batch - 1`
+/// more requests *for the same model* from anywhere in the queue, in
 /// arrival order. Requests for other models keep their relative order.
-fn take_batch(q: &mut VecDeque<QueuedRequest>, max_batch: usize) -> Vec<QueuedRequest> {
-    let first = match q.pop_front() {
+///
+/// The head is the queue front (strict FIFO) — or, with `wfq` on, the
+/// request with the smallest virtual finish tag (ties broken by seqno,
+/// so the order is total and deterministic). Tags within a model are
+/// assigned in increasing order, so the WFQ head is always its model's
+/// oldest queued request and coalescing stays in arrival order.
+fn take_batch(q: &mut VecDeque<QueuedRequest>, max_batch: usize, wfq: bool) -> Vec<QueuedRequest> {
+    let head = if wfq {
+        let mut best: Option<usize> = None;
+        for (i, r) in q.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => (r.ftag, r.seqno) < (q[b].ftag, q[b].seqno),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => i,
+            None => return Vec::new(),
+        }
+    } else {
+        0
+    };
+    let first = match q.remove(head) {
         Some(r) => r,
         None => return Vec::new(),
     };
@@ -584,6 +767,13 @@ pub struct ServeReport {
     /// Deepest the queue ever got (≤ `queue_depth` for streamed
     /// submission; prefilled [`Server::serve_all`] runs may exceed it).
     pub high_water: usize,
+    /// `true` when the run was prefilled ([`Server::serve_all`]) with
+    /// more requests than `queue_depth`: the bounded-queue invariant
+    /// `high_water <= queue_depth` intentionally does not apply
+    /// (prefill bypasses backpressure — the caller already holds every
+    /// input), and the invariant test excludes such runs explicitly
+    /// instead of passing silently.
+    pub prefilled_overflow: bool,
     /// Artifact-cache counters for the run's worker loads.
     pub cache: CacheStats,
     /// Worker *threads* lost outright (panicked outside the per-request
@@ -637,23 +827,17 @@ impl ServeReport {
         self.failed() as f64 / resolved as f64
     }
 
-    /// Queue-wait distribution merged across models (nanoseconds).
+    /// Queue-wait distribution merged across models (nanoseconds) —
+    /// the exact bucket-wise merge of the per-model histograms
+    /// ([`Histogram::merge_all`]), never a second accumulation.
     pub fn queue_wait_hist(&self) -> Histogram {
-        let mut h = Histogram::new();
-        for m in &self.per_model {
-            h.merge(&m.wait_hist);
-        }
-        h
+        Histogram::merge_all(self.per_model.iter().map(|m| &m.wait_hist))
     }
 
     /// Submit→resolve latency distribution merged across models
-    /// (nanoseconds).
+    /// (nanoseconds) — exact bucket-wise merge, as above.
     pub fn e2e_hist(&self) -> Histogram {
-        let mut h = Histogram::new();
-        for m in &self.per_model {
-            h.merge(&m.e2e_hist);
-        }
-        h
+        Histogram::merge_all(self.per_model.iter().map(|m| &m.e2e_hist))
     }
 
     /// Human summary for `repro serve`: throughput plus the p50/p95/p99
@@ -774,11 +958,18 @@ impl Client<'_> {
         }
         let seqno = st.next_seqno;
         st.next_seqno += 1;
+        let pol = &self.shared.policy;
+        let ftag = if pol.sched.wfq {
+            wfq_tag(st.wfq_v, &mut st.wfq_finish, &pol.pred, &pol.sched, model.0)
+        } else {
+            0.0
+        };
         let slot = Arc::new(TicketSlot::default());
         st.q.push_back(QueuedRequest {
             model: model.0,
             seqno,
             attempt: 0,
+            ftag,
             input,
             submitted: Instant::now(),
             slot: Arc::clone(&slot),
@@ -869,7 +1060,14 @@ struct WorkerCtx<'a> {
 /// *empty*, so a re-queued request is always picked back up.
 fn requeue(shared: &Shared, mut r: QueuedRequest) {
     r.attempt += 1;
+    let pol = &shared.policy;
     let mut st = shared.state.lock().expect("serve queue poisoned");
+    if pol.sched.wfq {
+        // A retry is a fresh arrival for fairness purposes: re-tag it
+        // under the current virtual time instead of letting a stale
+        // (smaller) tag preempt everything queued since.
+        r.ftag = wfq_tag(st.wfq_v, &mut st.wfq_finish, &pol.pred, &pol.sched, r.model);
+    }
     st.q.push_back(r);
     st.high_water = st.high_water.max(st.q.len());
     drop(st);
@@ -1040,7 +1238,15 @@ fn worker_loop(
             let mut st = shared.state.lock().expect("serve queue poisoned");
             loop {
                 if !st.q.is_empty() {
-                    break take_batch(&mut st.q, shared.max_batch);
+                    let b = take_batch(&mut st.q, shared.max_batch, pol.sched.wfq);
+                    if pol.sched.wfq {
+                        if let Some(head) = b.first() {
+                            // Self-clocking: virtual time advances to
+                            // the tag of the request entering service.
+                            st.wfq_v = st.wfq_v.max(head.ftag);
+                        }
+                    }
+                    break b;
                 }
                 if st.closed {
                     return stats;
@@ -1089,13 +1295,15 @@ pub struct Server {
     cfg: SnowflakeConfig,
     serve_cfg: ServeConfig,
     resilience: ResilienceConfig,
+    sched: SchedConfig,
     models: Vec<RegisteredModel>,
     cache: ArtifactCache,
 }
 
 impl Server {
     /// A server for the given hardware and pool configuration, no
-    /// models registered, default [`ResilienceConfig`].
+    /// models registered, default [`ResilienceConfig`] and
+    /// [`SchedConfig`] (strict FIFO).
     pub fn new(cfg: SnowflakeConfig, serve_cfg: ServeConfig) -> Self {
         let serve_cfg = serve_cfg.normalized();
         let cache = ArtifactCache::with_capacity(serve_cfg.cache_cap);
@@ -1103,6 +1311,7 @@ impl Server {
             cfg,
             serve_cfg,
             resilience: ResilienceConfig::default(),
+            sched: SchedConfig::default(),
             models: Vec::new(),
             cache,
         }
@@ -1122,6 +1331,17 @@ impl Server {
     /// The active failure-handling policy.
     pub fn resilience(&self) -> &ResilienceConfig {
         &self.resilience
+    }
+
+    /// Replace the queue-scheduling policy (WFQ, per-model weights)
+    /// for subsequent runs.
+    pub fn set_sched(&mut self, s: SchedConfig) {
+        self.sched = s;
+    }
+
+    /// The active queue-scheduling policy.
+    pub fn sched(&self) -> &SchedConfig {
+        &self.sched
     }
 
     /// Register a model: validate its config fingerprint against the
@@ -1230,6 +1450,7 @@ impl Server {
                 model: model.0,
                 seqno: i as u64,
                 attempt: 0,
+                ftag: 0.0, // assigned in run_inner once the policy exists
                 input,
                 submitted: now,
                 slot: Arc::clone(&slot),
@@ -1248,7 +1469,7 @@ impl Server {
 
     fn run_inner<R>(
         &self,
-        prefill: VecDeque<QueuedRequest>,
+        mut prefill: VecDeque<QueuedRequest>,
         client_fn: impl FnOnce(&Client<'_>) -> R,
     ) -> Result<(R, ServeReport), ServeError> {
         if self.models.is_empty() {
@@ -1258,6 +1479,7 @@ impl Server {
         let res = &self.resilience;
         let cache_before = self.cache.stats();
         let n_models = self.models.len();
+        let prefilled_overflow = prefill.len() > scfg.queue_depth;
         let policy = Policy {
             retries: res.retries as u64,
             deadline: (0..n_models).map(|i| self.deadline_budget(ModelId(i))).collect(),
@@ -1268,7 +1490,19 @@ impl Server {
             fault_seed: res.fault_seed,
             breaker_threshold: res.breaker_threshold,
             breaker_cooldown: res.breaker_cooldown,
+            sched: self.sched.clone(),
+            pred: (0..n_models)
+                .map(|i| self.models[i].artifact.predicted_cycles().max(1))
+                .collect(),
         };
+        let mut wfq_finish = vec![0.0f64; n_models];
+        if policy.sched.wfq {
+            // Prefilled requests were queued before the policy existed;
+            // tag them now, in submission order, from virtual time 0.
+            for r in prefill.iter_mut() {
+                r.ftag = wfq_tag(0.0, &mut wfq_finish, &policy.pred, &policy.sched, r.model);
+            }
+        }
         let shared = Shared {
             state: Mutex::new(QueueState {
                 high_water: prefill.len(),
@@ -1276,6 +1510,8 @@ impl Server {
                 q: prefill,
                 closed: false,
                 breakers: vec![Breaker::default(); n_models],
+                wfq_v: 0.0,
+                wfq_finish,
             }),
             space: Condvar::new(),
             work: Condvar::new(),
@@ -1386,6 +1622,7 @@ impl Server {
             wall: t0.elapsed(),
             workers: scfg.workers,
             high_water: shared.state.lock().expect("serve queue poisoned").high_water,
+            prefilled_overflow,
             cache: CacheStats {
                 hits: cache_after.hits - cache_before.hits,
                 misses: cache_after.misses - cache_before.misses,
@@ -1394,6 +1631,695 @@ impl Server {
             workers_lost,
         };
         Ok((r, report))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time load testing (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// Where [`Server::loadtest`] gets each model's service time from.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServiceModel {
+    /// Cost-model prediction ([`Artifact::predicted_cycles`], min 1).
+    /// No simulations run: a capacity sweep is pure arithmetic over
+    /// the trace. Incompatible with fault injection (faults change
+    /// cycle counts only a real sim can produce).
+    #[default]
+    Predicted,
+    /// Run every admitted request through the real simulator. Service
+    /// times, outputs and fault outcomes are the engine's own, so the
+    /// per-request results are `--check`-able against the sequential
+    /// oracle bit for bit.
+    Measured,
+}
+
+impl std::fmt::Display for ServiceModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceModel::Predicted => write!(f, "predicted"),
+            ServiceModel::Measured => write!(f, "measured"),
+        }
+    }
+}
+
+/// Configuration for one [`Server::loadtest`] run. Scheduling policy
+/// comes from [`Server::set_sched`] (shared with the threaded path);
+/// admission control lives here because it needs the virtual clock.
+#[derive(Clone, Debug, Default)]
+pub struct LoadtestConfig {
+    pub admission: AdmissionConfig,
+    pub service: ServiceModel,
+}
+
+/// Per-request outcome of a [`Server::loadtest`] run, indexed like the
+/// trace. All times are virtual cycles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LtOutcome {
+    /// Admitted, dispatched and completed.
+    Served {
+        /// Virtual worker that ran it.
+        worker: usize,
+        /// Dispatch time (batch pickup) in cycles.
+        start: u64,
+        /// Completion time in cycles.
+        done: u64,
+        /// Simulated cycles of the final (successful) attempt.
+        cycles: u64,
+        /// DRAM bytes moved by the final attempt (0 in predicted mode).
+        bytes: u64,
+        /// FNV-1a digest of the output words (0 in predicted mode).
+        digest: u64,
+        /// Attempts consumed (1 = clean first try).
+        attempts: u64,
+        /// Size of the coalesced batch it rode in.
+        batch: usize,
+    },
+    /// Rejected at admission ([`ServeError::Shed`]); never dispatched.
+    Shed {
+        /// Predicted deadline overshoot (0 = token bucket/hysteresis).
+        predicted_miss: u64,
+    },
+    /// Admitted but resolved with a typed error after exhausting the
+    /// retry budget. `class` matches the CLI's error taxonomy
+    /// ("worker-died", "engine").
+    Failed { class: &'static str, done: u64, attempts: u64 },
+}
+
+/// Per-model counters of one loadtest run; histograms are in virtual
+/// cycles (not host nanoseconds — contrast [`ModelServeStats`]).
+#[derive(Clone, Debug, Default)]
+pub struct LoadtestModelStats {
+    pub name: String,
+    /// Trace arrivals for this model (admitted or not).
+    pub offered: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub retries: u64,
+    pub faults_injected: u64,
+    pub worker_kills: u64,
+    /// Served requests that finished after their deadline budget
+    /// (arrival-relative; only counted when deadlines are configured).
+    pub slo_violations: u64,
+    /// Worker-busy cycles charged to this model (includes retried
+    /// attempts' cycles).
+    pub busy_cycles: u64,
+    /// Arrival→dispatch wait, virtual cycles.
+    pub wait_hist: Histogram,
+    /// Arrival→completion latency, virtual cycles, over served and
+    /// failed requests (shed requests never start, so they have no
+    /// latency — they show up in `shed` instead).
+    pub e2e_hist: Histogram,
+}
+
+/// What one [`Server::loadtest`] run did. Every number derives from
+/// `(trace, config)` alone — bit-reproducible anywhere.
+#[derive(Clone, Debug)]
+pub struct LoadtestReport {
+    /// Indexed by [`ModelId::index`].
+    pub per_model: Vec<LoadtestModelStats>,
+    pub workers: usize,
+    pub service: ServiceModel,
+    /// The active per-model service table (cycles).
+    pub service_cycles: Vec<u64>,
+    /// Clock the virtual time base runs at (from the trace).
+    pub clock_mhz: f64,
+    /// Offered load of the trace, requests per virtual second.
+    pub offered_rps: f64,
+    /// Saturation throughput for the trace's empirical model mix.
+    pub roofline_rps: f64,
+    /// Last completion (or last arrival if later), cycles.
+    pub makespan: u64,
+    /// Trace indices shed at admission, in arrival order. Same trace +
+    /// same config ⇒ same set, bit for bit.
+    pub shed_set: Vec<u64>,
+}
+
+/// FNV-1a over a little-endian u64 stream.
+fn fnv1a_u64s<I: IntoIterator<Item = u64>>(vals: I) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in vals {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// FNV-1a digest of an output canvas — the per-request output
+/// fingerprint `loadtest --check` compares against the sequential
+/// oracle (public so the CLI oracle uses the identical fold).
+pub fn output_digest(t: &Tensor<i16>) -> u64 {
+    fnv1a_u64s(t.data.iter().map(|&w| w as u16 as u64))
+}
+
+impl LoadtestReport {
+    pub fn served(&self) -> u64 {
+        self.per_model.iter().map(|m| m.served).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.shed).sum()
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.failed).sum()
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.per_model.iter().map(|m| m.offered).sum()
+    }
+
+    /// Fraction of offered requests rejected at admission.
+    pub fn shed_rate(&self) -> f64 {
+        let o = self.offered();
+        if o == 0 {
+            return 0.0;
+        }
+        self.shed() as f64 / o as f64
+    }
+
+    /// Successfully served requests per virtual second of makespan.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.served() as f64 * self.clock_mhz * 1e6 / self.makespan as f64
+    }
+
+    /// Worker-busy fraction of `workers × makespan`.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan == 0 || self.workers == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.per_model.iter().map(|m| m.busy_cycles).sum();
+        busy as f64 / (self.workers as u64 * self.makespan) as f64
+    }
+
+    /// Fraction of *admitted* requests that missed their SLO: served
+    /// past the deadline budget, or failed typed. Shed requests are
+    /// intentional rejections, tracked by [`LoadtestReport::shed_rate`].
+    pub fn slo_violation_rate(&self) -> f64 {
+        let admitted: u64 = self.per_model.iter().map(|m| m.served + m.failed).sum();
+        if admitted == 0 {
+            return 0.0;
+        }
+        let viol: u64 = self.per_model.iter().map(|m| m.slo_violations + m.failed).sum();
+        viol as f64 / admitted as f64
+    }
+
+    /// Order-sensitive FNV-1a hash of the shed set — one line the CI
+    /// job can diff across two same-seed runs.
+    pub fn shed_set_hash(&self) -> u64 {
+        fnv1a_u64s(self.shed_set.iter().copied())
+    }
+
+    /// Exact bucket-wise merge of the per-model e2e histograms
+    /// (virtual cycles).
+    pub fn e2e_hist(&self) -> Histogram {
+        Histogram::merge_all(self.per_model.iter().map(|m| &m.e2e_hist))
+    }
+
+    /// Exact bucket-wise merge of the per-model wait histograms
+    /// (virtual cycles).
+    pub fn wait_hist(&self) -> Histogram {
+        Histogram::merge_all(self.per_model.iter().map(|m| &m.wait_hist))
+    }
+
+    /// Human summary for `repro loadtest`.
+    pub fn summary(&self) -> String {
+        let ms = |cy: u64| cy as f64 / (self.clock_mhz * 1e3);
+        let e2e = self.e2e_hist();
+        let wait = self.wait_hist();
+        let mut s = format!(
+            "{} offered at {:.1} req/s (roofline {:.1}) on {} virtual workers [{} service]\n\
+             served {} ({:.1} req/s goodput), shed {} ({:.1}%), failed {}, \
+             utilization {:.1}%, SLO violations {:.1}%\n\
+             virtual latency p50/p95/p99: queue-wait {:.2}/{:.2}/{:.2} ms, \
+             end-to-end {:.2}/{:.2}/{:.2} ms",
+            self.offered(),
+            self.offered_rps,
+            self.roofline_rps,
+            self.workers,
+            self.service,
+            self.served(),
+            self.goodput_rps(),
+            self.shed(),
+            self.shed_rate() * 100.0,
+            self.failed(),
+            self.utilization() * 100.0,
+            self.slo_violation_rate() * 100.0,
+            ms(wait.quantile(0.50)),
+            ms(wait.quantile(0.95)),
+            ms(wait.quantile(0.99)),
+            ms(e2e.quantile(0.50)),
+            ms(e2e.quantile(0.95)),
+            ms(e2e.quantile(0.99)),
+        );
+        if !self.shed_set.is_empty() {
+            s.push_str(&format!("\nshed-set fnv1a: {:016x}", self.shed_set_hash()));
+        }
+        s
+    }
+}
+
+/// A request admitted to the virtual queue.
+struct LtQueued {
+    /// Trace index (doubles as the fault-plan seqno).
+    idx: usize,
+    model: usize,
+    at: u64,
+    ftag: f64,
+}
+
+impl Server {
+    /// The per-model service table a loadtest with this `service` mode
+    /// would use. Predicted reads the cost model; Measured calibrates
+    /// by running one inference per model — simulator timing is
+    /// input-independent, so a single sample is the exact service time.
+    pub fn service_table(&self, service: ServiceModel) -> Result<Vec<u64>, ServeError> {
+        match service {
+            ServiceModel::Predicted => Ok(self
+                .models
+                .iter()
+                .map(|m| m.artifact.predicted_cycles().max(1))
+                .collect()),
+            ServiceModel::Measured => {
+                let mut engine = Engine::new(self.cfg.clone());
+                let mut v = Vec::with_capacity(self.models.len());
+                for (i, m) in self.models.iter().enumerate() {
+                    let h = self.cache.load_into(&mut engine, &m.artifact, m.seed)?;
+                    let input = self.loadtest_input(ModelId(i), 0);
+                    let inf = engine.infer_with(h, &input, &FaultPlan::default(), None)?;
+                    v.push(inf.stats.cycles.max(1));
+                }
+                Ok(v)
+            }
+        }
+    }
+
+    /// The deterministic input `loadtest` feeds trace request `idx`
+    /// against `model` — public so the `--check` oracle replays the
+    /// identical tensors.
+    pub fn loadtest_input(&self, model: ModelId, idx: u64) -> Tensor<f32> {
+        let m = &self.models[model.0];
+        synthetic_input(&m.artifact.graph, m.seed.wrapping_add(idx))
+    }
+
+    /// Virtual-time load test: replay an open-loop [`Trace`] through a
+    /// *sequential* discrete-event simulation of the worker pool.
+    ///
+    /// Event loop: completions at a cycle are processed before arrivals
+    /// at the same cycle (a worker freed at `t` can serve a request
+    /// arriving at `t`), arrivals run the admission ladder (token
+    /// bucket, then the deadline predicate with hysteresis), and
+    /// dispatch fills every idle worker whenever the queue is
+    /// non-empty — lowest worker id first, batch head by WFQ tag /
+    /// affinity / FIFO, then same-model coalescing in arrival order up
+    /// to `max_batch`. Batch members execute sequentially on their
+    /// worker; in `Measured` mode each attempt is a real simulation, so
+    /// per-request cycles, bytes and output digests are bit-identical
+    /// to a sequential [`Engine::infer_with`] oracle regardless of
+    /// policy — scheduling and admission can only change *which*
+    /// requests run and *when*, never what they compute.
+    ///
+    /// Everything is derived from `(trace, self, lt)`: no host clocks,
+    /// no thread interleaving. Two calls with the same inputs return
+    /// identical outcomes, reports and shed sets.
+    pub fn loadtest(
+        &self,
+        trace: &Trace,
+        lt: &LoadtestConfig,
+    ) -> Result<(Vec<LtOutcome>, LoadtestReport), ServeError> {
+        if self.models.is_empty() {
+            return Err(ServeError::Worker("no models registered".to_string()));
+        }
+        if trace.n_models != self.models.len() {
+            return Err(ServeError::BadInput(format!(
+                "trace was generated for {} models but {} are registered",
+                trace.n_models,
+                self.models.len()
+            )));
+        }
+        let res = &self.resilience;
+        if lt.service == ServiceModel::Predicted && res.faults.is_some() {
+            return Err(ServeError::BadInput(
+                "fault injection needs --service measured (predicted mode runs no sims)"
+                    .to_string(),
+            ));
+        }
+        let n_models = self.models.len();
+        let workers = self.serve_cfg.workers;
+        let max_batch = self.serve_cfg.max_batch;
+        let srv = self.service_table(lt.service)?;
+        let cap = ServeModel::new(srv.clone(), workers);
+        let sched = &self.sched;
+        let adm = &lt.admission;
+        // Deadline budgets are relative to the *active* service table,
+        // so measured-mode budgets track real service times.
+        let budget: Vec<Option<u64>> = srv
+            .iter()
+            .map(|&c| {
+                if res.deadline_slack > 0.0 {
+                    Some((c as f64 * res.deadline_slack).ceil() as u64)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        if adm.deadline_aware && budget.iter().any(|b| b.is_none()) {
+            return Err(ServeError::BadInput(
+                "deadline-aware admission needs a deadline: set --deadline-slack > 0"
+                    .to_string(),
+            ));
+        }
+        let hints: Vec<PlanHint> = (0..n_models)
+            .map(|i| self.plan_hint(ModelId(i)).expect("registered model"))
+            .collect();
+        // Measured mode: one engine with every model resident, exactly
+        // like one pool worker. Virtual workers share it — sim state is
+        // reset per inference, so sharing is invisible to the results.
+        let mut engine_handles = match lt.service {
+            ServiceModel::Measured => {
+                let mut engine = Engine::new(self.cfg.clone());
+                let mut hs = Vec::with_capacity(n_models);
+                for m in &self.models {
+                    hs.push(self.cache.load_into(&mut engine, &m.artifact, m.seed)?);
+                }
+                Some((engine, hs))
+            }
+            ServiceModel::Predicted => None,
+        };
+
+        let n_req = trace.requests.len();
+        let mut outcomes: Vec<Option<LtOutcome>> = (0..n_req).map(|_| None).collect();
+        let mut stats: Vec<LoadtestModelStats> = self
+            .models
+            .iter()
+            .map(|m| LoadtestModelStats { name: m.name.clone(), ..Default::default() })
+            .collect();
+        let mut pending: VecDeque<LtQueued> = VecDeque::new();
+        // Min-heaps keyed by (free-at cycle, worker id) / worker id:
+        // dispatch picks the lowest idle worker id, deterministically.
+        let mut idle: BinaryHeap<Reverse<usize>> = (0..workers).map(Reverse).collect();
+        let mut busy: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        // Predicted cycles of admitted-but-undispatched requests: the
+        // queue half of the admission backlog estimate.
+        let mut pending_pred: u64 = 0;
+        let bucket_on = adm.tokens_rps > 0.0;
+        let bucket_cap = adm.burst.max(1.0);
+        let tokens_per_cycle = adm.tokens_rps / (trace.clock_mhz * 1e6);
+        let mut tokens = bucket_cap;
+        let mut last_refill: u64 = 0;
+        let mut shedding = false;
+        let mut wfq_v = 0.0f64;
+        let mut wfq_finish = vec![0.0f64; n_models];
+        let mut shed_set: Vec<u64> = Vec::new();
+        let mut makespan: u64 = trace.requests.last().map_or(0, |r| r.at);
+        let mut next_arrival = 0usize;
+        let mut now: u64 = 0;
+
+        loop {
+            // Fill every idle worker while there is queued work.
+            while !pending.is_empty() {
+                let w = match idle.pop() {
+                    Some(Reverse(w)) => w,
+                    None => break,
+                };
+                // Head pick: affinity first (worker w prefers models
+                // ≡ w mod workers), then WFQ min-tag, then FIFO. Ties
+                // by trace index — total, deterministic order.
+                let affine = |m: usize| m % workers == w;
+                let pick = |restrict: bool| -> Option<usize> {
+                    let mut best: Option<usize> = None;
+                    for (i, r) in pending.iter().enumerate() {
+                        if restrict && !affine(r.model) {
+                            continue;
+                        }
+                        if !sched.wfq {
+                            return Some(i); // earliest in arrival order
+                        }
+                        let better = match best {
+                            None => true,
+                            Some(b) => {
+                                (r.ftag, r.idx) < (pending[b].ftag, pending[b].idx)
+                            }
+                        };
+                        if better {
+                            best = Some(i);
+                        }
+                    }
+                    best
+                };
+                let head_i = match if sched.affinity { pick(true).or_else(|| pick(false)) } else { pick(false) } {
+                    Some(i) => i,
+                    None => {
+                        idle.push(Reverse(w));
+                        break;
+                    }
+                };
+                let head = pending.remove(head_i).expect("index in bounds");
+                let model = head.model;
+                if sched.wfq {
+                    wfq_v = wfq_v.max(head.ftag);
+                }
+                let mut batch = vec![head];
+                let mut i = 0;
+                while batch.len() < max_batch && i < pending.len() {
+                    if pending[i].model == model {
+                        batch.push(pending.remove(i).expect("index in bounds"));
+                    } else {
+                        i += 1;
+                    }
+                }
+                let n = batch.len();
+                stats[model].batches += 1;
+                let start = now;
+                let mut t = now;
+                for r in batch {
+                    pending_pred -= srv[model];
+                    stats[model].wait_hist.record(now - r.at);
+                    // Attempt chain: mirrors serve_one, but against the
+                    // virtual clock. Admitted requests always run to
+                    // completion (no in-sim cycle limit): loadtest
+                    // deadlines are accounting, not execution cuts, so
+                    // results stay oracle-identical.
+                    let mut attempt: u64 = 0;
+                    let out = loop {
+                        let (consumed, result) = match &mut engine_handles {
+                            None => (srv[model], Ok(None)),
+                            Some((engine, hs)) => {
+                                let plan = match &res.faults {
+                                    Some(s) => s.plan_for(
+                                        res.fault_seed,
+                                        r.idx as u64,
+                                        attempt,
+                                        &hints[model],
+                                    ),
+                                    None => FaultPlan::default(),
+                                };
+                                stats[model].faults_injected += plan.len() as u64;
+                                let kill = res
+                                    .faults
+                                    .as_ref()
+                                    .is_some_and(|s| {
+                                        s.wants_worker_kill(res.fault_seed, r.idx as u64, attempt)
+                                    });
+                                if kill {
+                                    // A killed virtual worker loses the
+                                    // attempt; charge the model's full
+                                    // service time for the wasted work
+                                    // (the threaded path pays a rebuild
+                                    // there is no virtual analogue of).
+                                    stats[model].worker_kills += 1;
+                                    (srv[model], Err("worker-died"))
+                                } else {
+                                    let input = self.loadtest_input(ModelId(model), r.idx as u64);
+                                    match engine.infer_with(hs[model], &input, &plan, None) {
+                                        Ok(inf) => (inf.stats.cycles, Ok(Some(inf))),
+                                        // The sim consumed `se.cycle`
+                                        // cycles before failing; only
+                                        // injected faults are
+                                        // retriable, as in serve_one.
+                                        Err(EngineError::Sim(se)) => (
+                                            se.cycle,
+                                            Err(if se.injected { "engine" } else { "engine-hard" }),
+                                        ),
+                                        Err(e) => {
+                                            return Err(ServeError::Engine(e));
+                                        }
+                                    }
+                                }
+                            }
+                        };
+                        t += consumed;
+                        stats[model].busy_cycles += consumed;
+                        match result {
+                            Ok(inf) => {
+                                let (cycles, bytes, digest) = match inf {
+                                    Some(inf) => (
+                                        inf.stats.cycles,
+                                        inf.stats.bytes_moved(),
+                                        output_digest(&inf.output),
+                                    ),
+                                    None => (srv[model], 0, 0),
+                                };
+                                break LtOutcome::Served {
+                                    worker: w,
+                                    start,
+                                    done: t,
+                                    cycles,
+                                    bytes,
+                                    digest,
+                                    attempts: attempt + 1,
+                                    batch: n,
+                                };
+                            }
+                            Err(class) => {
+                                let transient = class != "engine-hard";
+                                if transient && attempt < res.retries as u64 {
+                                    stats[model].retries += 1;
+                                    attempt += 1;
+                                    continue;
+                                }
+                                break LtOutcome::Failed {
+                                    class: if class == "engine-hard" { "engine" } else { class },
+                                    done: t,
+                                    attempts: attempt + 1,
+                                };
+                            }
+                        }
+                    };
+                    let done = match &out {
+                        LtOutcome::Served { done, .. } | LtOutcome::Failed { done, .. } => *done,
+                        LtOutcome::Shed { .. } => unreachable!("shed never dispatches"),
+                    };
+                    let e2e = done - r.at;
+                    stats[model].e2e_hist.record(e2e);
+                    match &out {
+                        LtOutcome::Served { .. } => {
+                            stats[model].served += 1;
+                            if budget[model].is_some_and(|b| e2e > b) {
+                                stats[model].slo_violations += 1;
+                            }
+                        }
+                        LtOutcome::Failed { .. } => stats[model].failed += 1,
+                        LtOutcome::Shed { .. } => unreachable!(),
+                    }
+                    makespan = makespan.max(done);
+                    outcomes[r.idx] = Some(out);
+                }
+                busy.push(Reverse((t, w)));
+            }
+
+            // Next event: the earlier of the next arrival and the next
+            // completion (completions first at ties, so a worker freed
+            // at t serves a request arriving at t).
+            let na = trace.requests.get(next_arrival).map(|r| r.at);
+            let nc = busy.peek().map(|&Reverse((t, _))| t);
+            now = match (na, nc) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(c)) => c,
+                (Some(a), Some(c)) => a.min(c),
+            };
+            while let Some(&Reverse((t, w))) = busy.peek() {
+                if t <= now {
+                    busy.pop();
+                    idle.push(Reverse(w));
+                } else {
+                    break;
+                }
+            }
+            while next_arrival < n_req && trace.requests[next_arrival].at <= now {
+                let r = &trace.requests[next_arrival];
+                let (idx, at, m) = (next_arrival, r.at, r.model);
+                next_arrival += 1;
+                stats[m].offered += 1;
+                let shed = |stats: &mut Vec<LoadtestModelStats>,
+                                outcomes: &mut Vec<Option<LtOutcome>>,
+                                shed_set: &mut Vec<u64>,
+                                miss: u64| {
+                    stats[m].shed += 1;
+                    shed_set.push(idx as u64);
+                    outcomes[idx] = Some(LtOutcome::Shed { predicted_miss: miss });
+                };
+                if bucket_on {
+                    tokens = (tokens + (at - last_refill) as f64 * tokens_per_cycle)
+                        .min(bucket_cap);
+                    last_refill = at;
+                    if tokens < 1.0 {
+                        shed(&mut stats, &mut outcomes, &mut shed_set, 0);
+                        continue;
+                    }
+                }
+                if adm.deadline_aware {
+                    let backlog = pending_pred
+                        + busy
+                            .iter()
+                            .map(|&Reverse((t, _))| t.saturating_sub(at))
+                            .sum::<u64>();
+                    let b = budget[m].expect("validated above");
+                    let est = cap.completion(at, backlog, m);
+                    let miss = est.saturating_sub(at + b);
+                    if shedding {
+                        // Hysteresis: resume only once the predicted
+                        // queueing delay has drained well below the
+                        // budget — not at the exact boundary.
+                        let queueing = cap.drain_cycles(backlog);
+                        if miss == 0 && (queueing as f64) <= adm.resume_frac * b as f64 {
+                            shedding = false;
+                        } else {
+                            shed(&mut stats, &mut outcomes, &mut shed_set, miss);
+                            continue;
+                        }
+                    } else if miss > 0 {
+                        shedding = true;
+                        shed(&mut stats, &mut outcomes, &mut shed_set, miss);
+                        continue;
+                    }
+                }
+                if bucket_on {
+                    tokens -= 1.0;
+                }
+                let ftag = if sched.wfq {
+                    wfq_tag(wfq_v, &mut wfq_finish, &srv, sched, m)
+                } else {
+                    0.0
+                };
+                pending.push_back(LtQueued { idx, model: m, at, ftag });
+                pending_pred += srv[m];
+            }
+        }
+        let outcomes: Vec<LtOutcome> = outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.unwrap_or_else(|| panic!("request {i} never resolved")))
+            .collect();
+        let mix: Vec<f64> = {
+            let counts = trace.model_counts();
+            let total: u64 = counts.iter().sum();
+            if total == 0 {
+                vec![1.0 / n_models as f64; n_models]
+            } else {
+                counts.iter().map(|&c| c as f64 / total as f64).collect()
+            }
+        };
+        let report = LoadtestReport {
+            per_model: stats,
+            workers,
+            service: lt.service,
+            service_cycles: srv.clone(),
+            clock_mhz: trace.clock_mhz,
+            offered_rps: trace.offered_rps(),
+            roofline_rps: cap.roofline_rps(&mix, trace.clock_mhz),
+            makespan,
+            shed_set,
+        };
+        Ok((outcomes, report))
     }
 }
 
@@ -1406,6 +2332,7 @@ mod tests {
             model,
             seqno,
             attempt: 0,
+            ftag: 0.0,
             input: Tensor::zeros(&[1]),
             submitted: Instant::now(),
             slot: Arc::new(TicketSlot::default()),
@@ -1421,7 +2348,7 @@ mod tests {
                 .into_iter()
                 .map(|(m, s)| dummy_request(m, s))
                 .collect();
-        let batch = take_batch(&mut q, 3);
+        let batch = take_batch(&mut q, 3, false);
         assert_eq!(batch.iter().map(|r| (r.model, r.seqno)).collect::<Vec<_>>(), vec![
             (0, 0),
             (0, 2),
@@ -1432,7 +2359,7 @@ mod tests {
             (1, 4)
         ]);
         // Next batch is the B's: head-of-line fairness.
-        let batch = take_batch(&mut q, 3);
+        let batch = take_batch(&mut q, 3, false);
         assert_eq!(batch.iter().map(|r| r.seqno).collect::<Vec<_>>(), vec![1, 4]);
         assert!(q.is_empty());
     }
@@ -1441,9 +2368,74 @@ mod tests {
     fn take_batch_respects_max_batch() {
         let mut q: VecDeque<QueuedRequest> =
             (0..5).map(|s| dummy_request(0, s)).collect();
-        assert_eq!(take_batch(&mut q, 1).len(), 1);
-        assert_eq!(take_batch(&mut q, 4).len(), 4);
-        assert!(take_batch(&mut q, 4).is_empty());
+        assert_eq!(take_batch(&mut q, 1, false).len(), 1);
+        assert_eq!(take_batch(&mut q, 4, false).len(), 4);
+        assert!(take_batch(&mut q, 4, false).is_empty());
+    }
+
+    #[test]
+    fn take_batch_wfq_picks_min_finish_tag_head() {
+        // Two models in the queue; model 1's requests carry smaller
+        // finish tags (lighter predicted cost / higher weight), so the
+        // WFQ head pick dispatches them first even though model 0
+        // arrived earlier.
+        let mut q: VecDeque<QueuedRequest> = VecDeque::new();
+        for (m, s, tag) in [(0usize, 0u64, 100.0f64), (1, 1, 10.0), (0, 2, 200.0), (1, 3, 20.0)] {
+            let mut r = dummy_request(m, s);
+            r.ftag = tag;
+            q.push_back(r);
+        }
+        let batch = take_batch(&mut q, 4, true);
+        // Head is seqno 1 (tag 10); coalescing gathers model 1's other
+        // queued request in arrival order.
+        assert_eq!(batch.iter().map(|r| r.seqno).collect::<Vec<_>>(), vec![1, 3]);
+        let batch = take_batch(&mut q, 4, true);
+        assert_eq!(batch.iter().map(|r| r.seqno).collect::<Vec<_>>(), vec![0, 2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn take_batch_wfq_breaks_tag_ties_by_seqno() {
+        let mut q: VecDeque<QueuedRequest> = VecDeque::new();
+        for (m, s) in [(1usize, 0u64), (0, 1), (1, 2)] {
+            let mut r = dummy_request(m, s);
+            r.ftag = 5.0; // all tied
+            q.push_back(r);
+        }
+        let batch = take_batch(&mut q, 4, true);
+        // Seqno 0 wins the tie; model-1 coalescing pulls seqno 2 too.
+        assert_eq!(batch.iter().map(|r| r.seqno).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn wfq_tags_are_monotone_within_a_model_and_weight_scaled() {
+        let sched = SchedConfig { wfq: true, weights: vec![1.0, 4.0], affinity: false };
+        let pred = vec![1000u64, 1000];
+        let mut finish = vec![0.0f64; 2];
+        // Model 1 has 4x the weight: its tags grow 4x slower.
+        let a0 = wfq_tag(0.0, &mut finish, &pred, &sched, 0);
+        let a1 = wfq_tag(0.0, &mut finish, &pred, &sched, 0);
+        let b0 = wfq_tag(0.0, &mut finish, &pred, &sched, 1);
+        let b1 = wfq_tag(0.0, &mut finish, &pred, &sched, 1);
+        assert!(a1 > a0 && b1 > b0, "tags strictly increase within a model");
+        assert_eq!(a0, 1000.0);
+        assert_eq!(a1, 2000.0);
+        assert_eq!(b0, 250.0);
+        assert_eq!(b1, 500.0);
+        // A later arrival starts from the virtual clock, not from a
+        // stale finish tag: an idle model is not penalised for idling.
+        let c = wfq_tag(10_000.0, &mut finish, &pred, &sched, 1);
+        assert_eq!(c, 10_250.0);
+    }
+
+    #[test]
+    fn sched_config_weight_defaults_missing_and_nonpositive_to_one() {
+        let sched = SchedConfig { wfq: true, weights: vec![2.0, 0.0, -3.0], affinity: false };
+        assert_eq!(sched.weight(0), 2.0);
+        assert_eq!(sched.weight(1), 1.0, "zero weight falls back to 1");
+        assert_eq!(sched.weight(2), 1.0, "negative weight falls back to 1");
+        assert_eq!(sched.weight(9), 1.0, "out-of-range model falls back to 1");
+        assert!(!SchedConfig::default().active(), "defaults are off");
     }
 
     #[test]
@@ -1483,6 +2475,38 @@ mod tests {
             t.wait_timeout(Duration::from_secs(5)),
             Err(ServeError::QueueFull)
         );
+    }
+
+    #[test]
+    fn wait_timeout_resolves_when_delivered_mid_wait() {
+        // Delivery from another thread while the caller is blocked in
+        // wait_timeout: the condvar wakes it before the deadline.
+        let slot = Arc::new(TicketSlot::default());
+        let t = Ticket { slot: Arc::clone(&slot), model: ModelId(0), request: 2 };
+        let deliverer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            deliver(&slot, Err(ServeError::QueueFull));
+        });
+        assert_eq!(
+            t.wait_timeout(Duration::from_secs(10)),
+            Err(ServeError::QueueFull),
+            "delivery mid-wait resolves the ticket, not the timeout"
+        );
+        deliverer.join().expect("deliverer thread");
+    }
+
+    #[test]
+    fn wait_timeout_zero_duration_on_resolved_ticket_succeeds() {
+        // A zero timeout must still return the result when the slot is
+        // already resolved — "no time left" never masks a done request.
+        let slot = Arc::new(TicketSlot::default());
+        let t = Ticket { slot: Arc::clone(&slot), model: ModelId(0), request: 3 };
+        deliver(&slot, Err(ServeError::QueueFull));
+        assert_eq!(t.wait_timeout(Duration::ZERO), Err(ServeError::QueueFull));
+        // And on an unresolved slot a zero timeout gives up immediately.
+        let slot = Arc::new(TicketSlot::default());
+        let t = Ticket { slot, model: ModelId(0), request: 4 };
+        assert_eq!(t.wait_timeout(Duration::ZERO), Err(ServeError::WaitTimeout));
     }
 
     #[test]

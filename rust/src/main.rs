@@ -28,7 +28,20 @@
 //!   chaos      deterministic fault-sweep table: fault kind × rate × retry
 //!              policy → goodput, p99 latency, SLO violations; exits nonzero
 //!              if the survivability gate fails (worker-kill ≥5% at the
-//!              default retry budget must keep ≥90% goodput, no lost requests)
+//!              default retry budget must keep ≥90% goodput, no lost requests);
+//!              `--arrivals SPEC` replays cells through the virtual-time
+//!              loadtest scheduler instead of prefilled serve_all, adding
+//!              offered-load and shed-rate columns
+//!   loadtest   virtual-time capacity planning: seeded open-loop arrivals
+//!              (`--arrivals poisson:RPS|bursty:RPS[,MULT[,P_IN[,P_OUT]]]|
+//!              diurnal:RPS[,PERIOD[,DEPTH]]|trace:FILE`, `--popularity
+//!              uniform|zipf:S`) replayed through a sequential DES of the
+//!              worker pool; `--wfq --weights m=w,..` weighted fair queueing,
+//!              `--admission tokens=RPS[,burst=B][,deadline][,resume=F]`
+//!              token-bucket + deadline-aware shedding, `--service
+//!              predicted|measured`, `--sweep M1,M2,..` offered-load sweep in
+//!              roofline multiples, `--save-trace FILE`, `--check` replays the
+//!              sequential oracle, `--gate` enforces the capacity gates
 //!   compile    compile a model, print summary / asm
 //!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
 //!   explain    print the chosen per-layer schedule (tuner debugging),
@@ -43,8 +56,10 @@
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
 use snowflake::coordinator::{driver, report, tune};
+use snowflake::engine::loadgen::{self, ArrivalKind, Popularity, Trace};
 use snowflake::engine::serve::{
-    ModelId, ResilienceConfig, Response, ServeConfig, ServeError, Server,
+    output_digest, AdmissionConfig, LoadtestConfig, LoadtestReport, LtOutcome, ModelId,
+    ResilienceConfig, Response, SchedConfig, ServeConfig, ServeError, Server, ServiceModel,
 };
 use snowflake::engine::{Engine, EngineError};
 use snowflake::sim::fault::{FaultPlan, FaultSpec};
@@ -126,7 +141,10 @@ fn print_run(name: &str, out: &driver::RunOutcome, cfg: &SnowflakeConfig) {
 }
 
 fn main() {
-    let flags = ["hand", "reuse-regions", "with-fc", "emit-asm", "fast", "verbose", "check"];
+    let flags = [
+        "hand", "reuse-regions", "with-fc", "emit-asm", "fast", "verbose", "check", "wfq",
+        "affinity", "gate",
+    ];
     let args = Args::from_env(&flags);
     let cfg = SnowflakeConfig::default();
     let seed = args.opt_u64("seed", 42);
@@ -289,6 +307,7 @@ fn main() {
         }
         Some("serve") => serve(&args, &cfg, seed),
         Some("chaos") => chaos(&args, &cfg, seed),
+        Some("loadtest") => loadtest(&args, &cfg, seed),
         Some("validate") => {
             let g = load_model(&args);
             let (out, rows) =
@@ -409,18 +428,23 @@ fn main() {
                 eprintln!("unknown subcommand '{o}'\n");
             }
             eprintln!(
-                "usage: repro <info|build|run|serve|chaos|compile|validate|explain|tune|table1|\
-                 table2|table3|fig4|accuracy|sweep|bless-baselines|golden>\n\
+                "usage: repro <info|build|run|serve|chaos|loadtest|compile|validate|explain|tune|\
+                 table1|table2|table3|fig4|accuracy|sweep|bless-baselines|golden>\n\
                  \x20  --model alexnet|resnet18|resnet50   --model-file model.json\n\
                  \x20  --balance greedy1|greedy2|greedy4|two-units|one-unit\n\
                  \x20  --tune heuristic|cost|measured  --top-k N (measured candidates/layer)\n\
                  \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
                  \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
-                 \x20  --requests N --models a,b --artifacts x,y --check (serve)\n\
+                 \x20  --requests N --models a,b --artifacts x,y --check (serve, loadtest)\n\
                  \x20  --workers N --max-batch B --queue-depth D --cache-cap N (serve)\n\
+                 \x20  --wfq --weights name=w,.. --affinity (serve, loadtest)\n\
                  \x20  --faults kind:rate,.. --deadline-slack S --retries K --fault-seed S\n\
                  \x20  --breaker-threshold N --breaker-cooldown C (serve, chaos)\n\
-                 \x20  --kinds a,b --rates r1,r2 --model NAME (chaos)\n\
+                 \x20  --kinds a,b --rates r1,r2 --model NAME --arrivals SPEC (chaos)\n\
+                 \x20  --arrivals poisson:RPS|bursty:..|diurnal:..|trace:FILE (loadtest)\n\
+                 \x20  --popularity uniform|zipf:S  --service predicted|measured (loadtest)\n\
+                 \x20  --admission tokens=RPS[,burst=B][,deadline][,resume=F] (loadtest)\n\
+                 \x20  --sweep M1,M2,..  --save-trace FILE  --gate (loadtest)\n\
                  \x20  --threads N (sweep)  --ci-dir DIR (bless-baselines)"
             );
             std::process::exit(2);
@@ -456,6 +480,7 @@ fn err_class(e: &ServeError) -> &'static str {
         ServeError::DeadlineExceeded { .. } => "deadline",
         ServeError::WorkerDied(_) => "worker-died",
         ServeError::ModelUnavailable(_) => "shed",
+        ServeError::Shed { .. } => "shed",
         ServeError::Engine(_) => "engine",
         _ => "other",
     }
@@ -488,54 +513,25 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     let resilience = resilience_from_args(args, seed);
     let mut server = Server::new(cfg.clone(), serve_cfg);
     server.set_resilience(resilience.clone());
-    let mut ids: Vec<ModelId> = Vec::new();
-    // Graph clones are cheap; kept for per-request input synthesis.
-    let mut graphs: Vec<snowflake::model::graph::Graph> = Vec::new();
-    let mut admit = |a: Artifact, server: &mut Server| {
-        println!(
-            "resident: {:<12} {} instructions, {:.1} MB plan, schedules for {} conv layers",
-            a.graph.name,
-            a.compiled.program.len(),
-            a.compiled.plan.mem_words as f64 * 2.0 / 1e6,
-            a.schedules.len()
-        );
-        graphs.push(a.graph.clone());
-        ids.push(server.register(a, seed).unwrap_or_else(|e| {
-            eprintln!("{e}");
-            std::process::exit(1);
-        }));
-    };
-    if let Some(paths) = args.opt("artifacts") {
-        for p in paths.split(',').filter(|p| !p.is_empty()) {
-            let a = Artifact::load(p, cfg).unwrap_or_else(|e| {
-                eprintln!("{e}");
-                std::process::exit(1);
-            });
-            admit(a, &mut server);
-        }
-    } else {
-        let opts = options(args);
-        for name in args.opt_or("models", "alexnet,resnet18").split(',') {
-            let g = zoo::by_name(name).unwrap_or_else(|| {
-                eprintln!("unknown model '{name}' (alexnet, resnet18, resnet50)");
-                std::process::exit(2);
-            });
-            let a = Compiler::new(cfg.clone()).options(opts.clone()).build(&g).unwrap_or_else(|e| {
-                eprintln!("{e}");
-                std::process::exit(1);
-            });
-            admit(a, &mut server);
-        }
-    }
-    if server.model_count() == 0 {
-        eprintln!("serve: no models to load");
-        std::process::exit(2);
-    }
+    let (ids, graphs) = register_models(args, cfg, seed, &mut server);
+    let sched = sched_from_args(args, &server, &ids);
+    server.set_sched(sched.clone());
     let scfg = server.serve_config();
     println!(
         "pool: {} workers, queue depth {}, max batch {}",
         scfg.workers, scfg.queue_depth, scfg.max_batch
     );
+    if sched.active() {
+        println!(
+            "scheduling: wfq {}, weights [{}], affinity {}",
+            if sched.wfq { "on" } else { "off" },
+            (0..ids.len())
+                .map(|i| format!("{:.1}", sched.weight(i)))
+                .collect::<Vec<_>>()
+                .join(","),
+            if sched.affinity { "on" } else { "off" }
+        );
+    }
     let chaos_on = resilience.faults.is_some();
     if chaos_on || resilience.deadline_slack > 0.0 {
         println!(
@@ -630,6 +626,133 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     if args.flag("check") {
         check_against_oracle(&server, &ids, &graphs, &outcomes, &resilience, cfg, seed);
     }
+}
+
+/// Register the requested models (`--models` compiled in-process, or
+/// `--artifacts` prebuilt files) with a server, printing one resident
+/// line per model. Shared by `repro serve` and `repro loadtest`.
+/// Graph clones are cheap; they are kept for input synthesis.
+fn register_models(
+    args: &Args,
+    cfg: &SnowflakeConfig,
+    seed: u64,
+    server: &mut Server,
+) -> (Vec<ModelId>, Vec<snowflake::model::graph::Graph>) {
+    let mut artifacts: Vec<Artifact> = Vec::new();
+    if let Some(paths) = args.opt("artifacts") {
+        for p in paths.split(',').filter(|p| !p.is_empty()) {
+            artifacts.push(Artifact::load(p, cfg).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }));
+        }
+    } else {
+        let opts = options(args);
+        for name in args.opt_or("models", "alexnet,resnet18").split(',') {
+            let g = zoo::by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown model '{name}' (alexnet, resnet18, resnet50)");
+                std::process::exit(2);
+            });
+            artifacts.push(
+                Compiler::new(cfg.clone()).options(opts.clone()).build(&g).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }),
+            );
+        }
+    }
+    let mut ids = Vec::new();
+    let mut graphs = Vec::new();
+    for a in artifacts {
+        println!(
+            "resident: {:<12} {} instructions, {:.1} MB plan, schedules for {} conv layers",
+            a.graph.name,
+            a.compiled.program.len(),
+            a.compiled.plan.mem_words as f64 * 2.0 / 1e6,
+            a.schedules.len()
+        );
+        graphs.push(a.graph.clone());
+        ids.push(server.register(a, seed).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }));
+    }
+    if ids.is_empty() {
+        eprintln!("no models to load");
+        std::process::exit(2);
+    }
+    (ids, graphs)
+}
+
+/// Parse `--wfq --weights name=w,.. --affinity` into a [`SchedConfig`],
+/// resolving weight names against the registered models. `--weights`
+/// implies `--wfq` (weights do nothing under FIFO).
+fn sched_from_args(args: &Args, server: &Server, ids: &[ModelId]) -> SchedConfig {
+    let weights = match args.opt("weights") {
+        None => Vec::new(),
+        Some(spec) => {
+            let mut w = vec![1.0f64; ids.len()];
+            for tok in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (name, val) = tok.split_once('=').unwrap_or_else(|| {
+                    eprintln!("--weights: '{tok}' is not name=weight");
+                    std::process::exit(2);
+                });
+                let v: f64 = val.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("--weights: '{val}' is not a number");
+                    std::process::exit(2);
+                });
+                if v <= 0.0 {
+                    eprintln!("--weights: weight for '{name}' must be > 0");
+                    std::process::exit(2);
+                }
+                match ids.iter().position(|id| server.model_name(*id) == Some(name.trim())) {
+                    Some(i) => w[i] = v,
+                    None => {
+                        eprintln!("--weights: '{name}' is not a registered model");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            w
+        }
+    };
+    SchedConfig {
+        wfq: args.flag("wfq") || !weights.is_empty(),
+        weights,
+        affinity: args.flag("affinity"),
+    }
+}
+
+/// Parse `--admission tokens=RPS[,burst=B][,deadline][,resume=F]` into
+/// an [`AdmissionConfig`] (default: everything off).
+fn admission_from_args(args: &Args) -> AdmissionConfig {
+    let mut a = AdmissionConfig::default();
+    if let Some(spec) = args.opt("admission") {
+        for tok in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if tok == "deadline" {
+                a.deadline_aware = true;
+                continue;
+            }
+            let (k, v) = tok.split_once('=').unwrap_or_else(|| {
+                eprintln!("--admission: '{tok}' (tokens=RPS, burst=B, deadline, resume=F)");
+                std::process::exit(2);
+            });
+            let f: f64 = v.trim().parse().unwrap_or_else(|_| {
+                eprintln!("--admission: '{v}' is not a number");
+                std::process::exit(2);
+            });
+            match k.trim() {
+                "tokens" => a.tokens_rps = f,
+                "burst" => a.burst = f,
+                "resume" => a.resume_frac = f,
+                other => {
+                    eprintln!("--admission: unknown key '{other}'");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    a
 }
 
 /// The sequential oracle behind `repro serve --check`: one engine,
@@ -750,6 +873,379 @@ fn check_against_oracle(
     );
 }
 
+/// `repro loadtest`: virtual-time capacity planning. Generate (or
+/// load) an open-loop arrival trace, replay it through the sequential
+/// discrete-event simulation of the worker pool
+/// ([`Server::loadtest`]), and report goodput, shed rate, virtual
+/// latency percentiles and SLO violations — all derived from simulated
+/// cycles, bit-reproducible on any host. `--sweep M1,M2,..` scales the
+/// arrival process to multiples of the roofline throughput and prints
+/// one capacity-table row per multiple. `--gate` enforces the capacity
+/// gates: p99 latency monotone in offered load (admission off), and
+/// goodput ≥ 90% of roofline at ≥ 2x overload (deadline-aware
+/// admission on). `--check` (measured service) replays every non-shed
+/// request through a sequential engine and asserts bit-identical
+/// cycles, bytes and output digests — scheduling and admission may
+/// reorder or reject work, never change what it computes.
+fn loadtest(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
+    let serve_cfg = ServeConfig {
+        workers: args.opt_usize("workers", 4),
+        max_batch: args.opt_usize("max-batch", 4),
+        queue_depth: args.opt_usize("queue-depth", 32),
+        cache_cap: args.opt_usize("cache-cap", 0),
+    };
+    let resilience = resilience_from_args(args, seed);
+    let mut server = Server::new(cfg.clone(), serve_cfg);
+    server.set_resilience(resilience.clone());
+    let (ids, _graphs) = register_models(args, cfg, seed, &mut server);
+    let sched = sched_from_args(args, &server, &ids);
+    server.set_sched(sched.clone());
+    let admission = admission_from_args(args);
+    let service = match args.opt_or("service", "predicted") {
+        "predicted" => ServiceModel::Predicted,
+        "measured" => ServiceModel::Measured,
+        other => {
+            eprintln!("--service: unknown mode '{other}' (predicted|measured)");
+            std::process::exit(2);
+        }
+    };
+    let lt = LoadtestConfig { admission: admission.clone(), service };
+    let n_models = ids.len();
+    let pop = Popularity::parse(args.opt_or("popularity", "uniform")).unwrap_or_else(|e| {
+        eprintln!("--popularity: {e}");
+        std::process::exit(2);
+    });
+    let srv = server.service_table(service).unwrap_or_else(|e| {
+        eprintln!("loadtest: {e}");
+        std::process::exit(1);
+    });
+    let cap = snowflake::compiler::cost::ServeModel::new(srv.clone(), serve_cfg.workers);
+    let roofline = cap.roofline_rps(&pop.mix(n_models), cfg.clock_mhz);
+    let n_requests = args.opt_usize("requests", 64);
+    let chaos_on = resilience.faults.is_some();
+
+    // Arrival process: a saved trace file, an explicit spec, or Poisson
+    // at 80% of the roofline.
+    let arrivals = args.opt_or("arrivals", "");
+    let (base_kind, base_trace): (Option<ArrivalKind>, Option<Trace>) =
+        if let Some(path) = arrivals.strip_prefix("trace:") {
+            let t = Trace::load(path).unwrap_or_else(|e| {
+                eprintln!("loadtest: {e}");
+                std::process::exit(1);
+            });
+            (None, Some(t))
+        } else if arrivals.is_empty() {
+            (Some(ArrivalKind::Poisson { rate: 0.8 * roofline }), None)
+        } else {
+            let k = ArrivalKind::parse(arrivals).unwrap_or_else(|e| {
+                eprintln!("--arrivals: {e}");
+                std::process::exit(2);
+            });
+            (Some(k), None)
+        };
+    println!(
+        "loadtest: {} virtual workers, max batch {}, service [{service}] = [{}] cycles, \
+         roofline {roofline:.1} req/s",
+        serve_cfg.workers,
+        serve_cfg.max_batch,
+        srv.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ")
+    );
+    if sched.active() || admission.active() {
+        println!(
+            "policy: wfq {}, affinity {}, admission tokens {:.1} req/s burst {:.0}, \
+             deadline-aware {} (resume {:.2})",
+            if sched.wfq { "on" } else { "off" },
+            if sched.affinity { "on" } else { "off" },
+            admission.tokens_rps,
+            admission.burst,
+            if admission.deadline_aware { "on" } else { "off" },
+            admission.resume_frac,
+        );
+    }
+
+    // ---- capacity sweep: offered load in roofline multiples ----------
+    if let Some(spec) = args.opt("sweep") {
+        let kind = base_kind.unwrap_or_else(|| {
+            eprintln!("loadtest: --sweep rescales an arrival spec, not a trace: file");
+            std::process::exit(2);
+        });
+        let mults: Vec<f64> = spec
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|m: &f64| *m > 0.0)
+            .collect();
+        if mults.is_empty() {
+            eprintln!("loadtest: --sweep needs positive multiples, e.g. 0.5,1.0,2.0");
+            std::process::exit(2);
+        }
+        println!(
+            "\n{:>6} {:>10} {:>10} {:>7} {:>7} {:>9} {:>9} {:>9} {:>7}",
+            "xroof", "offered", "goodput", "shed%", "fail", "p50 ms", "p95 ms", "p99 ms", "slo%"
+        );
+        let ms = |cy: u64| cy as f64 / (cfg.clock_mhz * 1e3);
+        let mut rows: Vec<(f64, LoadtestReport)> = Vec::new();
+        for &m in &mults {
+            let k = kind.scaled_to(m * roofline);
+            let trace = loadgen::generate(&k, &pop, n_models, n_requests, seed, cfg.clock_mhz);
+            let (_outcomes, report) = server.loadtest(&trace, &lt).unwrap_or_else(|e| {
+                eprintln!("loadtest: {e}");
+                std::process::exit(1);
+            });
+            let e2e = report.e2e_hist();
+            println!(
+                "{:>6.2} {:>10.1} {:>10.1} {:>6.1}% {:>7} {:>9.2} {:>9.2} {:>9.2} {:>6.1}%",
+                m,
+                report.offered_rps,
+                report.goodput_rps(),
+                report.shed_rate() * 100.0,
+                report.failed(),
+                ms(e2e.quantile(0.50)),
+                ms(e2e.quantile(0.95)),
+                ms(e2e.quantile(0.99)),
+                report.slo_violation_rate() * 100.0,
+            );
+            if report.failed() > 0 && !chaos_on {
+                eprintln!(
+                    "loadtest: {} request(s) failed with no faults configured",
+                    report.failed()
+                );
+                std::process::exit(1);
+            }
+            rows.push((m, report));
+        }
+        if args.flag("gate") {
+            let mut failures = 0usize;
+            if !admission.active() {
+                // Open-loop queueing: heavier offered load cannot make
+                // the p99 better. Allow 5% slack for sub-saturation
+                // sampling noise between stochastic traces.
+                let mut sorted = rows.iter().collect::<Vec<_>>();
+                sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite multiples"));
+                for w in sorted.windows(2) {
+                    let (lo, hi) = (w[0].1.e2e_hist().quantile(0.99), w[1].1.e2e_hist().quantile(0.99));
+                    if (hi as f64) < 0.95 * lo as f64 {
+                        eprintln!(
+                            "GATE FAILED: p99 fell from {:.2} ms at {:.2}x to {:.2} ms at {:.2}x",
+                            ms(lo), w[0].0, ms(hi), w[1].0
+                        );
+                        failures += 1;
+                    }
+                }
+            }
+            if admission.deadline_aware {
+                // The overload-robustness acceptance gate: with
+                // deadline-aware admission shedding the excess, a 2x
+                // overload must still deliver ≥ 90% of roofline.
+                for (m, report) in rows.iter().filter(|(m, _)| *m >= 2.0) {
+                    if report.goodput_rps() < 0.9 * roofline {
+                        eprintln!(
+                            "GATE FAILED: goodput {:.1} req/s at {m:.2}x roofline is below 90% \
+                             of roofline ({:.1})",
+                            report.goodput_rps(),
+                            0.9 * roofline
+                        );
+                        failures += 1;
+                    }
+                }
+            }
+            if failures > 0 {
+                eprintln!("loadtest: {failures} capacity gate failure(s)");
+                std::process::exit(1);
+            }
+            println!("loadtest: capacity gates passed");
+        }
+        return;
+    }
+
+    // ---- single run --------------------------------------------------
+    let trace = match base_trace {
+        Some(t) => {
+            println!("trace: {} arrivals loaded from {arrivals}", t.requests.len());
+            t
+        }
+        None => {
+            let k = base_kind.expect("no trace file means a generated kind");
+            loadgen::generate(&k, &pop, n_models, n_requests, seed, cfg.clock_mhz)
+        }
+    };
+    if let Some(path) = args.opt("save-trace") {
+        trace.save(path).unwrap_or_else(|e| {
+            eprintln!("loadtest: {e}");
+            std::process::exit(1);
+        });
+        println!("trace: saved {} arrivals to {path}", trace.requests.len());
+    }
+    println!(
+        "trace: {} arrivals [{}] x [{}], offered {:.1} req/s ({:.2}x roofline), seed {}",
+        trace.requests.len(),
+        trace.arrivals,
+        trace.popularity,
+        trace.offered_rps(),
+        trace.offered_rps() / roofline.max(1e-9),
+        trace.seed
+    );
+    let (outcomes, report) = server.loadtest(&trace, &lt).unwrap_or_else(|e| {
+        eprintln!("loadtest: {e}");
+        std::process::exit(1);
+    });
+    println!("\nper-model:");
+    for pm in &report.per_model {
+        println!(
+            "  {:<12} {:>5} offered, {:>5} served in {:>4} batches, {:>4} shed, {:>3} failed, \
+             {:>3} retries, {:>3} slo-miss",
+            pm.name, pm.offered, pm.served, pm.batches, pm.shed, pm.failed, pm.retries,
+            pm.slo_violations
+        );
+    }
+    println!("loadtest: {}", report.summary());
+    // One greppable line for CI: two same-seed runs must print the same
+    // hash (the shed *set*, not just the count, is deterministic).
+    println!(
+        "shed-set: {} requests, fnv1a {:016x}",
+        report.shed_set.len(),
+        report.shed_set_hash()
+    );
+    let lost = trace.requests.len() as u64 - report.served() - report.shed() - report.failed();
+    if lost != 0 {
+        eprintln!("loadtest: {lost} request(s) unaccounted for");
+        std::process::exit(1);
+    }
+    if report.failed() > 0 && !chaos_on {
+        eprintln!("loadtest: {} request(s) failed with no faults configured", report.failed());
+        std::process::exit(1);
+    }
+    if args.flag("check") {
+        loadtest_check(&server, &ids, cfg, seed, &trace, &outcomes, &resilience, service);
+    }
+    if args.flag("gate") && admission.deadline_aware && trace.offered_rps() >= 2.0 * roofline {
+        if report.goodput_rps() < 0.9 * roofline {
+            eprintln!(
+                "GATE FAILED: goodput {:.1} req/s under {:.2}x overload is below 90% of \
+                 roofline ({:.1})",
+                report.goodput_rps(),
+                trace.offered_rps() / roofline.max(1e-9),
+                0.9 * roofline
+            );
+            std::process::exit(1);
+        }
+        println!("loadtest: overload gate passed (goodput >= 90% of roofline at 2x offered)");
+    }
+}
+
+/// The sequential oracle behind `repro loadtest --check` (measured
+/// service only): one engine, every non-shed request replayed in trace
+/// order with the same inputs and per-attempt fault plans. Asserts
+/// bit-identical cycles, DRAM bytes and output digests for served
+/// requests, and matching failure class + attempt count for failed
+/// ones — admission and scheduling may move or reject work, never
+/// change what it computes.
+fn loadtest_check(
+    server: &Server,
+    ids: &[ModelId],
+    cfg: &SnowflakeConfig,
+    seed: u64,
+    trace: &Trace,
+    outcomes: &[LtOutcome],
+    resilience: &ResilienceConfig,
+    service: ServiceModel,
+) {
+    if service != ServiceModel::Measured {
+        eprintln!("loadtest --check compares real sims: add --service measured");
+        std::process::exit(2);
+    }
+    let mut engine = Engine::new(cfg.clone());
+    let handles: Vec<_> = ids
+        .iter()
+        .map(|id| {
+            let a = (**server.artifact(*id).expect("registered")).clone();
+            engine.load(a, seed).unwrap_or_else(|e| {
+                eprintln!("check: {e}");
+                std::process::exit(1);
+            })
+        })
+        .collect();
+    let hints: Vec<_> = ids.iter().map(|id| server.plan_hint(*id).expect("registered")).collect();
+    let spec = resilience.faults.as_ref();
+    let retries = resilience.retries as u64;
+    let fseed = resilience.fault_seed;
+    let (mut bad, mut shed) = (0usize, 0usize);
+    for (idx, out) in outcomes.iter().enumerate() {
+        let m = trace.requests[idx].model;
+        if let LtOutcome::Shed { .. } = out {
+            shed += 1;
+            continue;
+        }
+        let x = server.loadtest_input(ids[m], idx as u64);
+        let mut attempt = 0u64;
+        let want = loop {
+            let killed = spec.is_some_and(|s| s.wants_worker_kill(fseed, idx as u64, attempt));
+            if killed {
+                if attempt < retries {
+                    attempt += 1;
+                    continue;
+                }
+                break Err("worker-died");
+            }
+            let plan: FaultPlan = spec
+                .map(|s| s.plan_for(fseed, idx as u64, attempt, &hints[m]))
+                .unwrap_or_default();
+            match engine.infer_with(handles[m], &x, &plan, None) {
+                Ok(inf) => break Ok(inf),
+                Err(EngineError::Sim(se)) if se.injected && attempt < retries => {
+                    attempt += 1;
+                }
+                Err(_) => break Err("engine"),
+            }
+        };
+        match (out, want) {
+            (LtOutcome::Served { cycles, bytes, digest, attempts, .. }, Ok(inf)) => {
+                if inf.stats.cycles != *cycles
+                    || inf.stats.bytes_moved() != *bytes
+                    || output_digest(&inf.output) != *digest
+                    || attempt + 1 != *attempts
+                {
+                    eprintln!(
+                        "CHECK FAILED: request {idx} served {cycles} cycles / {bytes} bytes / \
+                         digest {digest:016x} ({attempts} attempts) vs sequential {} / {} / \
+                         {:016x} ({})",
+                        inf.stats.cycles,
+                        inf.stats.bytes_moved(),
+                        output_digest(&inf.output),
+                        attempt + 1
+                    );
+                    bad += 1;
+                }
+            }
+            (LtOutcome::Failed { class, attempts, .. }, Err(want_class))
+                if class == &want_class && attempt + 1 == *attempts => {}
+            (LtOutcome::Failed { class, .. }, Err(want_class)) => {
+                eprintln!(
+                    "CHECK FAILED: request {idx} failed as [{class}] but the oracle predicts \
+                     [{want_class}]"
+                );
+                bad += 1;
+            }
+            (LtOutcome::Served { .. }, Err(class)) => {
+                eprintln!("CHECK FAILED: request {idx} served but the oracle predicts [{class}]");
+                bad += 1;
+            }
+            (LtOutcome::Failed { class, .. }, Ok(_)) => {
+                eprintln!("CHECK FAILED: request {idx} failed [{class}] but the oracle succeeds");
+                bad += 1;
+            }
+            (LtOutcome::Shed { .. }, _) => unreachable!("shed skipped above"),
+        }
+    }
+    if bad > 0 {
+        std::process::exit(1);
+    }
+    println!(
+        "check: all {} non-shed requests bit-identical to the sequential engine path{}",
+        outcomes.len() - shed,
+        if shed > 0 { format!(" ({shed} admission-shed requests skipped)") } else { String::new() }
+    );
+}
+
 /// `repro chaos`: the fault-sweep table. One model, `--requests`
 /// offline submissions per cell, swept over fault kind × rate × retry
 /// budget; every cell reports goodput (successful / submitted), p99
@@ -790,9 +1286,31 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
             eprintln!("{e}");
             std::process::exit(1);
         });
+    // With `--arrivals SPEC`, cells replay an open-loop trace through
+    // the virtual-time loadtest scheduler (measured service) instead of
+    // a prefilled serve_all — adding offered-load and shed-rate columns
+    // and making the latency column virtual cycles rather than host
+    // time. The same trace is shared by every cell.
+    let trace: Option<Trace> = args.opt("arrivals").map(|spec| {
+        let kind = ArrivalKind::parse(spec).unwrap_or_else(|e| {
+            eprintln!("--arrivals: {e}");
+            std::process::exit(2);
+        });
+        loadgen::generate(&kind, &Popularity::Uniform, 1, requests, seed, cfg.clock_mhz)
+    });
 
-    // One cell of the sweep: a fresh server with the given policy.
-    let run_cell = |faults: Option<FaultSpec>, retries: usize| {
+    // One cell of the sweep: a fresh server with the given policy,
+    // reduced to the columns the table prints.
+    struct Cell {
+        ok: usize,
+        resolved: usize,
+        retried: u64,
+        kills: u64,
+        faults: u64,
+        p99_ms: f64,
+        shed_pct: f64,
+    }
+    let run_cell = |faults: Option<FaultSpec>, retries: usize| -> Cell {
         let mut server = Server::new(cfg.clone(), serve_cfg);
         server.set_resilience(ResilienceConfig {
             deadline_slack,
@@ -806,45 +1324,91 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
             eprintln!("{e}");
             std::process::exit(1);
         });
-        let reqs: Vec<_> =
-            (0..requests).map(|r| (id, synthetic_input(&g, seed + r as u64))).collect();
-        server.serve_all_outcomes(reqs).unwrap_or_else(|e| {
-            eprintln!("chaos: {e}");
-            std::process::exit(1);
-        })
+        match &trace {
+            Some(t) => {
+                let lt = LoadtestConfig {
+                    admission: AdmissionConfig::default(),
+                    service: ServiceModel::Measured,
+                };
+                let (outcomes, report) = server.loadtest(t, &lt).unwrap_or_else(|e| {
+                    eprintln!("chaos: {e}");
+                    std::process::exit(1);
+                });
+                Cell {
+                    ok: report.served() as usize,
+                    resolved: outcomes.len(),
+                    retried: report.per_model.iter().map(|m| m.retries).sum(),
+                    kills: report.per_model.iter().map(|m| m.worker_kills).sum(),
+                    faults: report.per_model.iter().map(|m| m.faults_injected).sum(),
+                    p99_ms: report.e2e_hist().quantile(0.99) as f64 / (cfg.clock_mhz * 1e3),
+                    shed_pct: report.shed_rate() * 100.0,
+                }
+            }
+            None => {
+                let reqs: Vec<_> =
+                    (0..requests).map(|r| (id, synthetic_input(&g, seed + r as u64))).collect();
+                let (outcomes, report) = server.serve_all_outcomes(reqs).unwrap_or_else(|e| {
+                    eprintln!("chaos: {e}");
+                    std::process::exit(1);
+                });
+                Cell {
+                    ok: outcomes.iter().filter(|o| o.is_ok()).count(),
+                    resolved: outcomes.len(),
+                    retried: report.retries(),
+                    kills: report.workers_replaced(),
+                    faults: report.faults_injected(),
+                    p99_ms: report.e2e_hist().quantile(0.99) as f64 / 1e6,
+                    shed_pct: 0.0,
+                }
+            }
+        }
     };
 
     println!(
-        "chaos sweep: {} x {} requests/cell, {} workers, retries 0 vs {}, deadline slack {}",
-        g.name, requests, serve_cfg.workers, retries_hi, deadline_slack
+        "chaos sweep: {} x {} requests/cell, {} workers, retries 0 vs {}, deadline slack {}{}",
+        g.name,
+        requests,
+        serve_cfg.workers,
+        retries_hi,
+        deadline_slack,
+        match &trace {
+            Some(t) => format!(
+                ", arrivals [{}] offered {:.1} req/s (virtual-time cells)",
+                t.arrivals,
+                t.offered_rps()
+            ),
+            None => String::new(),
+        }
     );
     println!(
-        "{:<14} {:>6} {:>8} {:>5} {:>7} {:>9} {:>9} {:>8} {:>7} {:>12}",
-        "fault", "rate", "retries", "ok", "failed", "goodput", "retried", "kills", "faults", "p99 e2e"
+        "{:<14} {:>6} {:>8} {:>5} {:>7} {:>9} {:>7} {:>9} {:>9} {:>8} {:>7} {:>12}",
+        "fault", "rate", "retries", "ok", "failed", "goodput", "shed%", "offered", "retried",
+        "kills", "faults", "p99 e2e"
     );
-    let cell_line = |label: &str, rate: f64, retries: usize, outcomes: &[Result<Response, ServeError>], report: &snowflake::engine::serve::ServeReport| {
-        let ok = outcomes.iter().filter(|o| o.is_ok()).count();
+    let offered_col = trace.as_ref().map_or("-".to_string(), |t| format!("{:.1}", t.offered_rps()));
+    let cell_line = |label: &str, rate: f64, retries: usize, c: &Cell| {
         println!(
-            "{:<14} {:>6.2} {:>8} {:>5} {:>7} {:>8.1}% {:>9} {:>8} {:>7} {:>9.2} ms",
+            "{:<14} {:>6.2} {:>8} {:>5} {:>7} {:>8.1}% {:>6.1}% {:>9} {:>9} {:>8} {:>7} {:>9.2} ms",
             label,
             rate,
             retries,
-            ok,
-            outcomes.len() - ok,
-            100.0 * ok as f64 / outcomes.len().max(1) as f64,
-            report.retries(),
-            report.workers_replaced(),
-            report.faults_injected(),
-            report.e2e_hist().quantile(0.99) as f64 / 1e6,
+            c.ok,
+            c.resolved - c.ok,
+            100.0 * c.ok as f64 / c.resolved.max(1) as f64,
+            c.shed_pct,
+            offered_col,
+            c.retried,
+            c.kills,
+            c.faults,
+            c.p99_ms,
         );
-        ok
     };
 
     // Fault-free baseline.
-    let (outcomes, report) = run_cell(None, retries_hi);
-    let baseline_ok = cell_line("(healthy)", 0.0, retries_hi, &outcomes, &report);
-    if baseline_ok != requests {
-        eprintln!("chaos: the fault-free baseline failed {} requests", requests - baseline_ok);
+    let baseline = run_cell(None, retries_hi);
+    cell_line("(healthy)", 0.0, retries_hi, &baseline);
+    if baseline.ok != requests {
+        eprintln!("chaos: the fault-free baseline failed {} requests", requests - baseline.ok);
         std::process::exit(1);
     }
 
@@ -856,23 +1420,24 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
                     eprintln!("chaos: {e}");
                     std::process::exit(2);
                 });
-                let (outcomes, report) = run_cell(Some(spec), retries);
-                let ok = cell_line(kind, rate, retries, &outcomes, &report);
+                let cell = run_cell(Some(spec), retries);
+                cell_line(kind, rate, retries, &cell);
                 // Survivability gate (ISSUE 6): worker-killing chaos at
                 // ≥5% with the default retry budget must lose nothing
                 // and keep ≥90% of fault-free goodput.
                 if *kind == "worker-kill" && rate >= 0.05 && retries == retries_hi {
-                    if outcomes.len() != requests {
+                    if cell.resolved != requests {
                         eprintln!(
                             "GATE FAILED: {} of {requests} requests never resolved",
-                            requests - outcomes.len()
+                            requests - cell.resolved
                         );
                         gate_failures += 1;
                     }
-                    if (ok as f64) < 0.9 * baseline_ok as f64 {
+                    if (cell.ok as f64) < 0.9 * baseline.ok as f64 {
                         eprintln!(
                             "GATE FAILED: worker-kill rate {rate} at retries {retries}: goodput \
-                             {ok}/{requests} is below 90% of the fault-free baseline"
+                             {}/{requests} is below 90% of the fault-free baseline",
+                            cell.ok
                         );
                         gate_failures += 1;
                     }

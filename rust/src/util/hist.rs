@@ -73,6 +73,19 @@ impl Histogram {
         self.max = self.max.max(other.max);
     }
 
+    /// The exact bucket-wise merge of several histograms — what an
+    /// aggregate report must be relative to its per-model parts
+    /// (`ServeReport` builds its run-wide latency views this way, so
+    /// aggregate quantiles come from the same samples as the per-model
+    /// ones, never a second accumulation that could drift).
+    pub fn merge_all<'a, I: IntoIterator<Item = &'a Histogram>>(parts: I) -> Histogram {
+        let mut h = Histogram::new();
+        for p in parts {
+            h.merge(p);
+        }
+        h
+    }
+
     pub fn count(&self) -> u64 {
         self.total
     }
@@ -167,6 +180,25 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a, all);
+    }
+
+    #[test]
+    fn merge_all_is_exact_bucket_wise() {
+        // Three disjoint parts vs one histogram fed every sample: the
+        // merged aggregate must be equal as a value (PartialEq covers
+        // every bucket count, the total and the max), not just agree on
+        // a few quantiles.
+        let mut parts = vec![Histogram::new(), Histogram::new(), Histogram::new()];
+        let mut all = Histogram::new();
+        for v in 0..900u64 {
+            parts[(v % 3) as usize].record(v * 11 + 3);
+            all.record(v * 11 + 3);
+        }
+        let merged = Histogram::merge_all(parts.iter());
+        assert_eq!(merged, all);
+        assert_eq!(merged.count(), 900);
+        // Merging nothing is the empty histogram.
+        assert_eq!(Histogram::merge_all(std::iter::empty()), Histogram::new());
     }
 
     #[test]

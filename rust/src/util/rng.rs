@@ -79,6 +79,14 @@ impl Rng {
         self.next_u64() & 1 == 1
     }
 
+    /// Exponential draw with the given mean (inverse-CDF transform);
+    /// the inter-arrival sampler for the Poisson / Markov-modulated
+    /// load generators. `f64()` is in `[0, 1)` so the argument of `ln`
+    /// stays in `(0, 1]` and the result is finite and non-negative.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -(1.0 - self.f64()).ln() * mean
+    }
+
     /// Fill a slice with N(0, sigma) values.
     pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
         for v in out.iter_mut() {
@@ -145,6 +153,20 @@ mod tests {
             // expect 4096 each; allow +-15%
             assert!((3480..=4710).contains(&b), "bucket {b}");
         }
+    }
+
+    #[test]
+    fn exp_mean_and_positivity() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let mut s = 0.0f64;
+        for _ in 0..n {
+            let x = r.exp(4.0);
+            assert!(x >= 0.0 && x.is_finite());
+            s += x;
+        }
+        let mean = s / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
     }
 
     #[test]

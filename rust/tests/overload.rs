@@ -1,0 +1,393 @@
+//! Integration tests for overload-robust serving (ISSUE 7): the
+//! open-loop load generator, the virtual-time loadtest scheduler,
+//! token-bucket + deadline-aware admission control with hysteresis,
+//! and weighted fair queueing.
+//!
+//! The contracts under test:
+//!  - **Bit-reproducibility** (acceptance pin): two loadtest runs from
+//!    the same seed produce identical traces, outcomes, shed sets and
+//!    reports — the whole pipeline is a pure function of `(trace,
+//!    server, config)`.
+//!  - **Oracle identity**: under any scheduling/admission policy, every
+//!    *served* request's measured cycles, DRAM bytes and output digest
+//!    are bit-identical to a sequential `Engine` run of the same model
+//!    and input. Policies choose *which* requests run and *when*,
+//!    never what they compute.
+//!  - **Graceful degradation** (acceptance gate): at 2x-roofline
+//!    offered load with deadline-aware admission on, goodput stays
+//!    ≥ 90% of roofline — the server sheds instead of collapsing.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{Artifact, Compiler};
+use snowflake::engine::loadgen::{self, ArrivalKind, Popularity, Trace, TraceRequest};
+use snowflake::engine::serve::{
+    output_digest, AdmissionConfig, LoadtestConfig, LtOutcome, ResilienceConfig, SchedConfig,
+    ServeConfig, ServeError, Server, ServiceModel,
+};
+use snowflake::engine::Engine;
+use snowflake::model::graph::Graph;
+use snowflake::model::layer::{LayerKind, Shape};
+use snowflake::sim::fault::FaultSpec;
+
+fn small_graph(name: &str, out_ch: usize) -> Graph {
+    let mut g = Graph::new(name, Shape::new(16, 10, 10));
+    g.push_seq(
+        LayerKind::Conv { in_ch: 16, out_ch, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+        "c",
+    );
+    g
+}
+
+fn build(cfg: &SnowflakeConfig, g: &Graph) -> Artifact {
+    Compiler::new(cfg.clone()).build(g).expect("build")
+}
+
+fn hand_trace(cfg: &SnowflakeConfig, n_models: usize, arrivals: &[(u64, usize)]) -> Trace {
+    Trace {
+        requests: arrivals.iter().map(|&(at, model)| TraceRequest { at, model }).collect(),
+        n_models,
+        clock_mhz: cfg.clock_mhz,
+        seed: 0,
+        arrivals: "hand".to_string(),
+        popularity: "hand".to_string(),
+    }
+}
+
+/// Acceptance pin: same seed ⇒ identical traces, outcomes, shed sets
+/// and report counters across two independent runs, with every policy
+/// on at once (WFQ + token bucket + deadline-aware admission, measured
+/// service, overload-level arrival rate).
+#[test]
+fn same_seed_loadtests_are_bit_identical() {
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("ovl_det_a", 8);
+    let gb = small_graph("ovl_det_b", 12);
+    let seed = 42;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 2, max_batch: 2, queue_depth: 32, cache_cap: 0 },
+    );
+    server.set_resilience(ResilienceConfig { deadline_slack: 4.0, ..Default::default() });
+    server.set_sched(SchedConfig { wfq: true, weights: vec![1.0, 2.0], affinity: false });
+    server.register(build(&cfg, &ga), seed).unwrap();
+    server.register(build(&cfg, &gb), seed).unwrap();
+
+    let srv = server.service_table(ServiceModel::Measured).unwrap();
+    let mean = (srv[0] + srv[1]) as f64 / 2.0;
+    let roofline = 2.0 * cfg.clock_mhz * 1e6 / mean;
+    let kind = ArrivalKind::Poisson { rate: 1.0 }.scaled_to(2.0 * roofline);
+    let pop = Popularity::Zipf { s: 1.1 };
+
+    let t1 = loadgen::generate(&kind, &pop, 2, 80, seed, cfg.clock_mhz);
+    let t2 = loadgen::generate(&kind, &pop, 2, 80, seed, cfg.clock_mhz);
+    assert_eq!(t1.requests, t2.requests, "same-seed traces must be identical");
+
+    let lt = LoadtestConfig {
+        admission: AdmissionConfig {
+            tokens_rps: 1.5 * roofline,
+            burst: 8.0,
+            deadline_aware: true,
+            resume_frac: 0.5,
+        },
+        service: ServiceModel::Measured,
+    };
+    let (o1, r1) = server.loadtest(&t1, &lt).unwrap();
+    let (o2, r2) = server.loadtest(&t2, &lt).unwrap();
+    assert_eq!(o1, o2, "same-seed runs must resolve every request identically");
+    assert_eq!(r1.shed_set, r2.shed_set);
+    assert_eq!(r1.shed_set_hash(), r2.shed_set_hash());
+    assert_eq!(
+        (r1.served(), r1.shed(), r1.failed(), r1.makespan),
+        (r2.served(), r2.shed(), r2.failed(), r2.makespan)
+    );
+    // Every request resolved one way or another — nothing lost.
+    assert_eq!(r1.served() + r1.shed() + r1.failed(), 80);
+}
+
+/// Acceptance gate: at 2x roofline with deadline-aware admission,
+/// goodput holds ≥ 90% of roofline (load shedding keeps the workers
+/// fed instead of letting the queue blow the deadline for everyone),
+/// and every non-shed request is bit-identical to the sequential
+/// engine oracle.
+#[test]
+fn admission_holds_goodput_at_2x_overload_and_served_results_match_the_oracle() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("ovl_gate", 8);
+    let seed = 7;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 4, max_batch: 2, queue_depth: 64, cache_cap: 0 },
+    );
+    server.set_resilience(ResilienceConfig { deadline_slack: 4.0, ..Default::default() });
+    let id = server.register(build(&cfg, &g), seed).unwrap();
+
+    let srv = server.service_table(ServiceModel::Measured).unwrap();
+    let roofline = 4.0 * cfg.clock_mhz * 1e6 / srv[0] as f64;
+    let kind = ArrivalKind::Poisson { rate: 1.0 }.scaled_to(2.0 * roofline);
+    let trace = loadgen::generate(&kind, &Popularity::Uniform, 1, 200, seed, cfg.clock_mhz);
+
+    let lt = LoadtestConfig {
+        admission: AdmissionConfig { deadline_aware: true, ..Default::default() },
+        service: ServiceModel::Measured,
+    };
+    let (outcomes, report) = server.loadtest(&trace, &lt).unwrap();
+    assert!(report.shed() > 0, "2x overload must shed something");
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.served() + report.shed(), 200);
+    assert!(
+        report.goodput_rps() >= 0.9 * report.roofline_rps,
+        "goodput {:.1} req/s fell below 90% of roofline {:.1} req/s",
+        report.goodput_rps(),
+        report.roofline_rps
+    );
+
+    // Oracle: one sequential engine, same artifact, same per-request
+    // inputs. Scheduling and admission must not have touched a single
+    // simulated number of the requests that ran.
+    let mut engine = Engine::new(cfg.clone());
+    let h = engine.load(build(&cfg, &g), seed).unwrap();
+    for (idx, out) in outcomes.iter().enumerate() {
+        match out {
+            LtOutcome::Shed { .. } => {}
+            LtOutcome::Served { cycles, bytes, digest, .. } => {
+                let x = server.loadtest_input(id, idx as u64);
+                let want = engine.infer(h, &x).unwrap();
+                assert_eq!(*cycles, want.stats.cycles, "request {idx}: cycles diverged");
+                assert_eq!(*bytes, want.stats.bytes_moved(), "request {idx}: bytes diverged");
+                assert_eq!(*digest, output_digest(&want.output), "request {idx}: output diverged");
+            }
+            LtOutcome::Failed { .. } => panic!("request {idx} failed with no faults configured"),
+        }
+    }
+}
+
+/// Token bucket: a hand-built all-at-once burst against burst capacity
+/// B admits exactly the first B requests and sheds the rest with
+/// `predicted_miss: 0` — a fully arithmetic, deterministic outcome.
+#[test]
+fn token_bucket_sheds_exactly_past_the_burst_capacity() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("ovl_bucket", 8);
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 1, queue_depth: 16, cache_cap: 0 },
+    );
+    server.register(build(&cfg, &g), 3).unwrap();
+
+    // 10 arrivals at cycle 0: zero refill time, so exactly
+    // `burst = 4` tokens exist.
+    let trace = hand_trace(&cfg, 1, &[(0, 0); 10]);
+    let lt = LoadtestConfig {
+        admission: AdmissionConfig { tokens_rps: 1.0, burst: 4.0, ..Default::default() },
+        service: ServiceModel::Predicted,
+    };
+    let (outcomes, report) = server.loadtest(&trace, &lt).unwrap();
+    for (i, out) in outcomes.iter().enumerate() {
+        if i < 4 {
+            assert!(matches!(out, LtOutcome::Served { .. }), "request {i}: {out:?}");
+        } else {
+            assert_eq!(*out, LtOutcome::Shed { predicted_miss: 0 }, "request {i}");
+        }
+    }
+    assert_eq!(report.shed_set, vec![4, 5, 6, 7, 8, 9]);
+    assert_eq!((report.served(), report.shed()), (4, 6));
+}
+
+/// Deadline-aware shedding with hysteresis, traced exactly on one
+/// worker in predicted mode (service time `s` is known, so every
+/// admission decision is hand-computable):
+///  - a burst overcommits the deadline → the tail sheds with a
+///    positive `predicted_miss` and the gate latches (`shedding`);
+///  - while latched, a request that *would* meet its deadline is still
+///    shed (`predicted_miss: 0`) because the predicted queueing delay
+///    has not drained below `resume_frac × budget`;
+///  - once the backlog drains, admission resumes.
+#[test]
+fn deadline_shedding_latches_and_resumes_with_hysteresis() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("ovl_hyst", 8);
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 1, queue_depth: 16, cache_cap: 0 },
+    );
+    // budget = 3s; resume threshold = 0.5 × 3s = 1.5s of queueing.
+    server.set_resilience(ResilienceConfig { deadline_slack: 3.0, ..Default::default() });
+    server.register(build(&cfg, &g), 5).unwrap();
+    let s = server.service_table(ServiceModel::Predicted).unwrap()[0];
+    assert!(s > 4, "the traced schedule below needs s > 4 (got {s})");
+
+    let trace = hand_trace(
+        &cfg,
+        1,
+        &[
+            (0, 0),      // r0: admitted, runs 0..s
+            (1, 0),      // r1: backlog s-1, est 2s ≤ 1+3s → admitted
+            (1, 0),      // r2: backlog 2s-1, est 3s ≤ 1+3s → admitted
+            (1, 0),      // r3: backlog 3s-1, est 4s, miss s-1 → shed, latch
+            (2, 0),      // r4: still over budget → shed (miss s-2)
+            (s + 2, 0),  // r5: est 4s ≤ 4s+2 (miss 0) BUT queueing 2s-2 > 1.5s → hysteresis shed
+            (3 * s + 1, 0), // r6: idle again, queueing 0 → resume, admitted
+        ],
+    );
+    let lt = LoadtestConfig {
+        admission: AdmissionConfig { deadline_aware: true, ..Default::default() },
+        service: ServiceModel::Predicted,
+    };
+    let (outcomes, report) = server.loadtest(&trace, &lt).unwrap();
+    for i in [0usize, 1, 2, 6] {
+        assert!(matches!(outcomes[i], LtOutcome::Served { .. }), "request {i}: {:?}", outcomes[i]);
+    }
+    assert_eq!(outcomes[3], LtOutcome::Shed { predicted_miss: s - 1 });
+    assert_eq!(outcomes[4], LtOutcome::Shed { predicted_miss: s - 2 });
+    // The hysteresis shed: deadline satisfiable, shed anyway.
+    assert_eq!(outcomes[5], LtOutcome::Shed { predicted_miss: 0 });
+    assert_eq!(report.shed_set, vec![3, 4, 5]);
+    assert_eq!(report.slo_violation_rate(), 0.0, "admitted requests all met the 3s budget");
+}
+
+/// WFQ anti-starvation: a 20-deep flood of model A queued ahead of one
+/// model-B request. FIFO dispatches B last; WFQ gives B the second
+/// slot (its virtual finish tag competes from the current virtual
+/// time, not from the back of A's backlog).
+#[test]
+fn wfq_prevents_starvation_of_the_sparse_model() {
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("ovl_wfq_a", 8);
+    let gb = small_graph("ovl_wfq_b", 12);
+    let mut arrivals = vec![(0u64, 0usize); 20];
+    arrivals.push((0, 1)); // the lone model-B request, queued last
+    let trace = hand_trace(&cfg, 2, &arrivals);
+    let lt = LoadtestConfig::default();
+
+    let start_of_b = |wfq: bool| -> u64 {
+        let mut server = Server::new(
+            cfg.clone(),
+            ServeConfig { workers: 1, max_batch: 1, queue_depth: 32, cache_cap: 0 },
+        );
+        server.set_sched(SchedConfig { wfq, ..Default::default() });
+        server.register(build(&cfg, &ga), 9).unwrap();
+        server.register(build(&cfg, &gb), 9).unwrap();
+        let (outcomes, report) = server.loadtest(&trace, &lt).unwrap();
+        assert_eq!(report.served(), 21, "no admission configured: everything serves");
+        match outcomes[20] {
+            LtOutcome::Served { start, .. } => start,
+            ref o => panic!("model-B request did not serve: {o:?}"),
+        }
+    };
+
+    let fifo = start_of_b(false);
+    let wfq = start_of_b(true);
+    assert!(
+        wfq < fifo,
+        "WFQ must dispatch the sparse model earlier than FIFO ({wfq} !< {fifo})"
+    );
+    // Exact schedule: FIFO runs all 20 A's first, so B starts at 20·sa.
+    // Under WFQ, B's finish tag is sb (one service time past virtual
+    // time 0) while A's k-th queued request carries k·sa — as long as
+    // sb < 2·sa, B wins the second dispatch slot and starts at sa.
+    let srv = {
+        let mut server = Server::new(
+            cfg.clone(),
+            ServeConfig { workers: 1, max_batch: 1, queue_depth: 32, cache_cap: 0 },
+        );
+        server.register(build(&cfg, &ga), 9).unwrap();
+        server.register(build(&cfg, &gb), 9).unwrap();
+        server.service_table(ServiceModel::Predicted).unwrap()
+    };
+    let (sa, sb) = (srv[0], srv[1]);
+    assert!(sb < 2 * sa, "schedule precondition: sb {sb} must be under 2·sa {sa}");
+    assert_eq!(wfq, sa, "WFQ dispatches B right after A's head request");
+    assert_eq!(fifo, 20 * sa, "FIFO starves B behind the whole A backlog");
+}
+
+/// Predicted-mode sanity: no simulations run — every served outcome
+/// carries exactly the cost-model service time, zero bytes and a zero
+/// digest, and worker busy-time is served × service.
+#[test]
+fn predicted_mode_is_pure_arithmetic_over_the_service_table() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("ovl_pred", 8);
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 2, max_batch: 2, queue_depth: 16, cache_cap: 0 },
+    );
+    server.register(build(&cfg, &g), 11).unwrap();
+    let s = server.service_table(ServiceModel::Predicted).unwrap()[0];
+
+    let kind = ArrivalKind::Poisson { rate: 0.5 * 2.0 * cfg.clock_mhz * 1e6 / s as f64 };
+    let trace = loadgen::generate(&kind, &Popularity::Uniform, 1, 24, 99, cfg.clock_mhz);
+    let (outcomes, report) = server.loadtest(&trace, &LoadtestConfig::default()).unwrap();
+    assert_eq!(report.served(), 24);
+    for (i, out) in outcomes.iter().enumerate() {
+        match out {
+            LtOutcome::Served { cycles, bytes, digest, attempts, .. } => {
+                assert_eq!(*cycles, s, "request {i}");
+                assert_eq!((*bytes, *digest, *attempts), (0, 0, 1), "request {i}");
+            }
+            o => panic!("request {i}: {o:?}"),
+        }
+    }
+    assert_eq!(report.per_model[0].busy_cycles, 24 * s);
+    assert_eq!(report.service_cycles, vec![s]);
+}
+
+/// Predicted mode runs no simulations, so it cannot honour fault
+/// injection — the combination is a typed configuration error, not a
+/// silently fault-free run.
+#[test]
+fn predicted_mode_rejects_fault_injection() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("ovl_nofault", 8);
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 1, queue_depth: 4, cache_cap: 0 },
+    );
+    server.set_resilience(ResilienceConfig {
+        faults: Some(FaultSpec::parse("dram-flip:0.5").unwrap()),
+        retries: 1,
+        ..Default::default()
+    });
+    server.register(build(&cfg, &g), 1).unwrap();
+    let trace = hand_trace(&cfg, 1, &[(0, 0)]);
+    match server.loadtest(&trace, &LoadtestConfig::default()) {
+        Err(ServeError::BadInput(_)) => {}
+        other => panic!("expected BadInput, got {other:?}", other = other.map(|_| ())),
+    }
+}
+
+/// A trace survives the JSON round-trip bit-exactly, and a loadtest of
+/// the round-tripped trace reproduces the original run.
+#[test]
+fn trace_json_roundtrip_reproduces_the_run() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("ovl_json", 8);
+    let seed = 21;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 2, max_batch: 2, queue_depth: 16, cache_cap: 0 },
+    );
+    server.register(build(&cfg, &g), seed).unwrap();
+    let s = server.service_table(ServiceModel::Predicted).unwrap()[0];
+
+    let kind = ArrivalKind::Bursty {
+        rate: 2.0 * cfg.clock_mhz * 1e6 / s as f64,
+        mult: 4.0,
+        p_enter: 0.2,
+        p_exit: 0.3,
+    };
+    let trace = loadgen::generate(&kind, &Popularity::Uniform, 1, 40, seed, cfg.clock_mhz);
+    let back = Trace::from_json(&trace.to_json()).expect("roundtrip");
+    assert_eq!(trace.requests, back.requests);
+    assert_eq!(trace.n_models, back.n_models);
+    assert_eq!(trace.seed, back.seed);
+
+    let lt = LoadtestConfig {
+        admission: AdmissionConfig { tokens_rps: 1.0e6, burst: 2.0, ..Default::default() },
+        service: ServiceModel::Predicted,
+    };
+    let (o1, r1) = server.loadtest(&trace, &lt).unwrap();
+    let (o2, r2) = server.loadtest(&back, &lt).unwrap();
+    assert_eq!(o1, o2);
+    assert_eq!(r1.shed_set, r2.shed_set);
+    assert_eq!(r1.makespan, r2.makespan);
+}

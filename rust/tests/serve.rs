@@ -18,6 +18,7 @@ use snowflake::model::layer::{LayerKind, Shape};
 use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::refimpl;
 use snowflake::tensor::Tensor;
+use snowflake::util::hist::Histogram;
 
 fn small_graph(name: &str, out_ch: usize) -> Graph {
     let mut g = Graph::new(name, Shape::new(16, 10, 10));
@@ -137,13 +138,90 @@ fn bounded_queue_backpressures_streamed_submission() {
         .unwrap();
     assert_eq!(report.requests, n as u64);
     // The bounded-queue invariant: blocking submission can never stack
-    // more than `queue_depth` requests.
+    // more than `queue_depth` requests. This only holds for streamed
+    // runs — `serve_all` prefills past the depth by design and flags it
+    // with `prefilled_overflow` (tested below) — so the invariant is
+    // guarded on the flag.
+    assert!(!report.prefilled_overflow, "streamed run must not flag a prefill overflow");
     assert!(
         report.high_water <= depth,
         "queue reached {} with depth {depth}",
         report.high_water
     );
     assert_eq!(report.per_model[0].max_batch, 1, "max_batch 1 must disable coalescing");
+}
+
+/// `serve_all` prefills the whole request list before workers start, so
+/// a list longer than `queue_depth` legitimately exceeds the bound. The
+/// report must disclose that with `prefilled_overflow` so consumers
+/// (and the invariant test above) know `high_water <= depth` does not
+/// apply to the run.
+#[test]
+fn prefilled_runs_past_the_depth_set_the_overflow_flag() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("serve_pf", 8);
+    let seed = 11;
+    let depth = 2;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 2, queue_depth: depth, cache_cap: 0 },
+    );
+    let id = server.register(build(&cfg, &g), seed).unwrap();
+    let n = 6usize;
+    let requests: Vec<_> = (0..n).map(|r| (id, synthetic_input(&g, seed + r as u64))).collect();
+    let (responses, report) = server.serve_all(requests).unwrap();
+    assert_eq!(responses.len(), n);
+    assert!(report.prefilled_overflow, "{n} prefilled requests exceed depth {depth}");
+    assert!(report.high_water >= n, "prefill stacks the whole list");
+
+    // A prefilled run that fits the queue keeps the flag off.
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 2, queue_depth: n, cache_cap: 0 },
+    );
+    let id = server.register(build(&cfg, &g), seed).unwrap();
+    let requests: Vec<_> = (0..n).map(|r| (id, synthetic_input(&g, seed + r as u64))).collect();
+    let (_, report) = server.serve_all(requests).unwrap();
+    assert!(!report.prefilled_overflow);
+    assert!(report.high_water <= n);
+}
+
+/// The report's run-wide latency views must be the exact bucket-wise
+/// merge of the per-model histograms — same value, not just agreeing
+/// quantiles — so aggregate percentiles always come from the same
+/// samples as the per-model ones.
+#[test]
+fn aggregate_histograms_are_exact_merges_of_per_model_parts() {
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("serve_agg_a", 8);
+    let gb = small_graph("serve_agg_b", 12);
+    let seed = 17;
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 2, max_batch: 2, queue_depth: 16, cache_cap: 0 },
+    );
+    let ia = server.register(build(&cfg, &ga), seed).unwrap();
+    let ib = server.register(build(&cfg, &gb), seed).unwrap();
+    let n = 10usize;
+    let requests: Vec<_> = (0..n)
+        .map(|r| {
+            let (id, g) = if r % 2 == 0 { (ia, &ga) } else { (ib, &gb) };
+            (id, synthetic_input(g, seed + r as u64))
+        })
+        .collect();
+    let (_, report) = server.serve_all(requests).unwrap();
+    assert_eq!(report.per_model.len(), 2);
+
+    let mut want_wait = Histogram::new();
+    let mut want_e2e = Histogram::new();
+    for m in &report.per_model {
+        want_wait.merge(&m.wait_hist);
+        want_e2e.merge(&m.e2e_hist);
+    }
+    assert_eq!(report.queue_wait_hist(), want_wait);
+    assert_eq!(report.e2e_hist(), want_e2e);
+    assert_eq!(report.queue_wait_hist().count(), n as u64);
+    assert_eq!(report.e2e_hist().count(), n as u64);
 }
 
 #[test]
