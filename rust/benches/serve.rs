@@ -26,7 +26,8 @@
 use std::time::Instant;
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{Artifact, CompileOptions, Compiler};
+use snowflake::compiler::{partition, Artifact, CompileOptions, Compiler};
+use snowflake::engine::cluster::{self, Cluster};
 use snowflake::engine::serve::{
     AdmissionConfig, ResilienceConfig, SchedConfig, ServeConfig, Server,
 };
@@ -130,4 +131,53 @@ fn main() {
         }
     }
     println!("serve bench OK: all served cycle counts bit-identical to sequential (FIFO and WFQ)");
+
+    // ---- shard scaling (ISSUE 8) -------------------------------------
+    // ResNet18 partitioned into 1..=3 pipeline stages: one real cluster
+    // inference per shard count yields the *measured* per-stage cycles,
+    // and `pipeline_timing` turns those into steady-state pipeline
+    // throughput in virtual time. Gates: every shard count produces the
+    // same output words as the unsharded pipeline, and 2 shards must
+    // sustain >= 1.5x the 1-shard steady-state throughput.
+    let g = zoo::by_name("resnet18").expect("zoo model");
+    let opts = CompileOptions { skip_fc: true, ..Default::default() };
+    let batch = 16u64;
+    println!("shard scaling: resnet18, {batch} requests, virtual time");
+    let mut baseline: Option<(u64, snowflake::tensor::Tensor<i16>)> = None;
+    for n in 1usize..=3 {
+        let plan = partition::partition(&g, &cfg, &opts, n).expect("partition");
+        let mut cl = Cluster::new(&plan, seed).expect("cluster");
+        let x = synthetic_input(&g, seed);
+        let ci = cl.infer(&x).expect("cluster infer");
+        let t = cluster::pipeline_timing(cl.last_stage_cycles(), cl.link_cycles(), batch);
+        let tput = batch as f64 * cfg.clock_mhz * 1e3 / t.makespan.max(1) as f64;
+        println!(
+            "  {n} shard(s): cuts {:?}, makespan {:>12} cyc, {:>8.1} req/s steady-state \
+             ({:.2}x pipeline speedup)",
+            plan.cuts(),
+            t.makespan,
+            tput,
+            t.speedup()
+        );
+        match &baseline {
+            None => baseline = Some((t.makespan, ci.output.clone())),
+            Some((mk1, out1)) => {
+                assert_eq!(
+                    ci.output.count_diff(out1),
+                    0,
+                    "{n}-shard pipeline output diverged from the single machine"
+                );
+                if n == 2 {
+                    let scale = *mk1 as f64 / t.makespan.max(1) as f64;
+                    assert!(
+                        scale >= 1.5,
+                        "2-shard steady-state throughput is only {scale:.2}x the single \
+                         machine (gate: >= 1.5x)"
+                    );
+                    println!("  shard gate OK: 2 shards sustain {scale:.2}x 1-shard throughput");
+                }
+            }
+        }
+    }
+    println!("serve bench OK: sharded pipelines bit-identical, 2-shard scaling gate passed");
 }

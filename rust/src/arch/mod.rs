@@ -50,6 +50,14 @@ pub struct SnowflakeConfig {
     /// which is why load balancing has a sweet spot — Table 3).
     pub dma_setup_cycles: u64,
 
+    /// Inter-machine link bandwidth in GB/s for sharded (multi-machine)
+    /// deployments — the modeled interconnect that carries boundary
+    /// activations between pipeline stages (`engine/cluster.rs`).
+    /// Transfers pay `dma_setup_cycles` up front like any other DMA
+    /// transaction. Default 1.0 GB/s: a point-to-point serial link,
+    /// deliberately slower than the 4.2 GB/s on-board AXI.
+    pub link_bandwidth_gbs: f64,
+
     /// Depth of each CU's pending-vector-instruction queue ("trace
     /// buffer"; §5.2 uses 16 as the fill count).
     pub vector_queue_depth: usize,
@@ -79,6 +87,7 @@ impl Default for SnowflakeConfig {
             n_load_units: 4,
             axi_bytes_per_cycle: 16.8,
             dma_setup_cycles: 64,
+            link_bandwidth_gbs: 1.0,
             vector_queue_depth: 16,
             branch_delay_slots: 4,
             scalar_exec_cycles: 2,
@@ -128,6 +137,12 @@ impl SnowflakeConfig {
         self.macs_per_vmac
     }
 
+    /// Inter-stage link throughput in bytes/cycle at the configured
+    /// clock (1.0 GB/s at 250 MHz = 4 B/cycle).
+    pub fn link_bytes_per_cycle(&self) -> f64 {
+        self.link_bandwidth_gbs * 1000.0 / self.clock_mhz
+    }
+
     /// Convert a cycle count to milliseconds at the configured clock.
     pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.clock_mhz * 1e3)
@@ -164,5 +179,7 @@ mod tests {
         assert!((c.cycles_to_ms(250_000) - 1.0).abs() < 1e-12);
         // Moving 16.8 bytes/cycle for any duration = 4.2 GB/s.
         assert!((c.achieved_gbs(16_800, 1000) - 4.2).abs() < 1e-9);
+        // 1.0 GB/s inter-stage link at 250 MHz = 4 bytes/cycle.
+        assert!((c.link_bytes_per_cycle() - 4.0).abs() < 1e-9);
     }
 }

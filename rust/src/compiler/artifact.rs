@@ -57,7 +57,13 @@ use std::collections::BTreeMap;
 /// order string as corrupt, and v1 artifacts predate the rotation
 /// skeleton's cost model, so both directions hard-error on the version
 /// instead of guessing.
-pub const FORMAT_VERSION: u64 = 2;
+///
+/// v3 (ISSUE 8): `link_bandwidth_gbs` joined the `SnowflakeConfig`
+/// schema — and therefore the config fingerprint. A v2 artifact's hash
+/// was computed without the field, so it can never match a v3 host's;
+/// rejecting on the version gives the typed "rebuild" message instead
+/// of a confusing config-mismatch hex pair.
+pub const FORMAT_VERSION: u64 = 3;
 
 /// Magic tag identifying an artifact file.
 pub const FORMAT_MAGIC: &str = "snowflake-artifact";
@@ -439,7 +445,7 @@ pub fn config_hash(c: &SnowflakeConfig) -> u64 {
         "clock_mhz={};n_cus={};vmacs_per_cu={};macs_per_vmac={};word_bytes={};\
          mbuf_bank_bytes={};mbuf_banks={};wbuf_bytes={};bbuf_bytes={};\
          icache_banks={};icache_bank_instrs={};n_load_units={};axi_bytes_per_cycle={};\
-         dma_setup_cycles={};vector_queue_depth={};branch_delay_slots={};\
+         dma_setup_cycles={};link_bandwidth_gbs={};vector_queue_depth={};branch_delay_slots={};\
          scalar_exec_cycles={};gather_cycles={}",
         c.clock_mhz,
         c.n_cus,
@@ -455,6 +461,7 @@ pub fn config_hash(c: &SnowflakeConfig) -> u64 {
         c.n_load_units,
         c.axi_bytes_per_cycle,
         c.dma_setup_cycles,
+        c.link_bandwidth_gbs,
         c.vector_queue_depth,
         c.branch_delay_slots,
         c.scalar_exec_cycles,
@@ -484,11 +491,11 @@ fn program_words(p: &Program) -> Vec<u32> {
     p.instrs.iter().map(encode).collect()
 }
 
-fn hex(v: u64) -> String {
+pub(crate) fn hex(v: u64) -> String {
     format!("{v:016x}")
 }
 
-fn unhex(s: &str) -> Option<u64> {
+pub(crate) fn unhex(s: &str) -> Option<u64> {
     (s.len() == 16).then(|| u64::from_str_radix(s, 16).ok()).flatten()
 }
 
@@ -534,7 +541,7 @@ fn jopt(n: Option<usize>) -> Json {
 // Config / meta / schedule codecs
 // ---------------------------------------------------------------------
 
-fn config_json(c: &SnowflakeConfig) -> Json {
+pub(crate) fn config_json(c: &SnowflakeConfig) -> Json {
     Json::obj(vec![
         ("clock_mhz", Json::Num(c.clock_mhz)),
         ("n_cus", ju(c.n_cus)),
@@ -550,6 +557,7 @@ fn config_json(c: &SnowflakeConfig) -> Json {
         ("n_load_units", ju(c.n_load_units)),
         ("axi_bytes_per_cycle", Json::Num(c.axi_bytes_per_cycle)),
         ("dma_setup_cycles", ju64(c.dma_setup_cycles)),
+        ("link_bandwidth_gbs", Json::Num(c.link_bandwidth_gbs)),
         ("vector_queue_depth", ju(c.vector_queue_depth)),
         ("branch_delay_slots", ju(c.branch_delay_slots)),
         ("scalar_exec_cycles", ju64(c.scalar_exec_cycles)),
@@ -557,7 +565,7 @@ fn config_json(c: &SnowflakeConfig) -> Json {
     ])
 }
 
-fn config_from(j: &Json) -> Result<SnowflakeConfig, ArtifactError> {
+pub(crate) fn config_from(j: &Json) -> Result<SnowflakeConfig, ArtifactError> {
     let f = |key: &str| -> Result<f64, ArtifactError> {
         j.get(key).as_f64().ok_or_else(|| corrupt(&format!("config.{key}")))
     };
@@ -576,6 +584,7 @@ fn config_from(j: &Json) -> Result<SnowflakeConfig, ArtifactError> {
         n_load_units: need(j, "n_load_units")?,
         axi_bytes_per_cycle: f("axi_bytes_per_cycle")?,
         dma_setup_cycles: need_u64(j, "dma_setup_cycles")?,
+        link_bandwidth_gbs: f("link_bandwidth_gbs")?,
         vector_queue_depth: need(j, "vector_queue_depth")?,
         branch_delay_slots: need(j, "branch_delay_slots")?,
         scalar_exec_cycles: need_u64(j, "scalar_exec_cycles")?,
@@ -1087,8 +1096,12 @@ mod tests {
         assert_eq!(config_hash(&c), config_hash(&c.clone()));
         let c2 = SnowflakeConfig { n_cus: 8, ..c.clone() };
         assert_ne!(config_hash(&c), config_hash(&c2));
-        let c3 = SnowflakeConfig { dma_setup_cycles: 65, ..c };
+        let c3 = SnowflakeConfig { dma_setup_cycles: 65, ..c.clone() };
         assert_ne!(config_hash(&c3), config_hash(&SnowflakeConfig::default()));
+        // v3: the inter-stage link bandwidth is part of the schema, so a
+        // different link speed invalidates compiled artifacts too.
+        let c4 = SnowflakeConfig { link_bandwidth_gbs: 2.0, ..c };
+        assert_ne!(config_hash(&c4), config_hash(&SnowflakeConfig::default()));
     }
 
     #[test]
@@ -1126,6 +1139,21 @@ mod tests {
         }
         let err = Artifact::from_json(&j).unwrap_err();
         assert_eq!(err, ArtifactError::FormatVersion { found: 1, expected: FORMAT_VERSION });
+    }
+
+    #[test]
+    fn v2_artifacts_rejected_with_typed_error() {
+        // Format-v2 artifacts predate `link_bandwidth_gbs` in the
+        // config schema: their config hash was computed without the
+        // field, so loading one must be a typed FormatVersion error
+        // ("rebuild"), not a baffling config-mismatch hex pair.
+        let a = build_small();
+        let mut j = a.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::num(2.0));
+        }
+        let err = Artifact::from_json(&j).unwrap_err();
+        assert_eq!(err, ArtifactError::FormatVersion { found: 2, expected: FORMAT_VERSION });
     }
 
     #[test]

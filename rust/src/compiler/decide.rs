@@ -352,9 +352,13 @@ pub fn decide(
             } else {
                 match opts.tune {
                     TuneMode::Heuristic => cost::seed_heuristic(&gx, cfg, opts),
-                    TuneMode::Analytical | TuneMode::Measured { .. } => {
-                        cost::search(&gx, cfg, opts).0
-                    }
+                    TuneMode::Analytical => cost::search(&gx, cfg, opts).0,
+                    // Measured mode consults the in-process measurement
+                    // cache (populated by `coordinator/tune.rs`): a hit
+                    // compiles the layer under its measured winner; a
+                    // miss falls back to the analytical pick.
+                    TuneMode::Measured { .. } => super::measure_cache::lookup(cfg, &gx)
+                        .unwrap_or_else(|| cost::search(&gx, cfg, opts).0),
                 }
             };
             // force_loop_order wins over both; either way the emitted

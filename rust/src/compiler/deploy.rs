@@ -27,6 +27,23 @@ pub fn write_canvas(m: &mut Machine, cv: &Canvas, t: &Tensor<f32>, fmt: QFormat)
     }
 }
 
+/// Write an already-quantized CHW i16 tensor into its canvas interior
+/// verbatim — the exact inverse of [`read_canvas`]. Sharded execution
+/// uses this for inter-stage activation handoff: the producing stage's
+/// output words land in the consuming stage's input canvas untouched,
+/// so a pipeline of machines computes bit-identically to one machine
+/// writing the same words into the same layer boundary.
+pub fn write_canvas_i16(m: &mut Machine, cv: &Canvas, t: &Tensor<i16>) {
+    assert_eq!(t.shape, vec![cv.c, cv.h, cv.w], "tensor/canvas mismatch");
+    for y in 0..cv.h {
+        for x in 0..cv.w {
+            for c in 0..cv.c {
+                m.memory[cv.addr(c, y, x)] = t.at3(c, y, x);
+            }
+        }
+    }
+}
+
 /// Read a canvas interior back into a CHW i16 tensor.
 pub fn read_canvas(m: &Machine, cv: &Canvas) -> Tensor<i16> {
     let mut t = Tensor::zeros(&[cv.c, cv.h, cv.w]);
@@ -254,6 +271,22 @@ mod tests {
         assert_eq!(back.data, t.quantize(Q8_8).data);
         // Margins stay zero.
         assert_eq!(m.memory[cv.base], 0);
+    }
+
+    #[test]
+    fn canvas_i16_roundtrip_is_verbatim() {
+        // The sharded handoff path: read_canvas -> write_canvas_i16 must
+        // reproduce the exact interior words with no re-quantization.
+        let cv = Canvas { base: 7, c: 3, h: 4, w: 5, c_pad: 4, mp: 1, h_slack: 2, w_slack: 1 };
+        let mut m = Machine::new(crate::arch::SnowflakeConfig::default(), Q8_8, 7 + cv.words());
+        let mut t = Tensor::zeros(&[3, 4, 5]);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = (i as i16) * 37 - 500;
+        }
+        write_canvas_i16(&mut m, &cv, &t);
+        let back = read_canvas(&m, &cv);
+        assert_eq!(back.data, t.data);
+        assert_eq!(m.memory[cv.base], 0, "margins stay zero");
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! In-process memoized measurement cache for `TuneMode::Measured`
+//! (ROADMAP carry-over, ISSUE 8 satellite).
+//!
+//! The measured tuner (`coordinator/tune.rs`) simulates top-K schedule
+//! candidates per conv layer — minutes of full-model simulation for a
+//! verdict that is a pure function of (hardware config, layer
+//! geometry). This cache publishes each winning per-layer schedule
+//! under that key, so a later `compile()` under
+//! [`super::TuneMode::Measured`] picks the measured winner directly
+//! instead of passing through to the analytical search: identical
+//! layers shared *across models* (every 3x3x512 ResNet block, say)
+//! are measured once and reused everywhere.
+//!
+//! Correctness: a cache hit only ever changes *which* valid schedule a
+//! layer compiles under — a stale or cross-layer entry whose
+//! `rows_per_cu` no longer fits the caps fails [`cost::validate`] and
+//! is treated as a miss (analytical fallback), never an error.
+
+use super::cost::{self, ConvGeom, Schedule};
+use crate::arch::SnowflakeConfig;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Cache key: the config fingerprint plus every schedule-independent
+/// geometry field the cost model reads. `byp_row_words` is deliberately
+/// excluded — `decide` keys costs on a conservative bypass-row estimate
+/// while the tuner sees the placed canvas's exact row words, and two
+/// layers differing only there are the same schedule-selection problem.
+type Key = (u64, [u64; 10], bool, bool);
+
+fn key(cfg: &SnowflakeConfig, g: &ConvGeom) -> Key {
+    (
+        super::artifact::config_hash(cfg),
+        [
+            g.kh as u64,
+            g.stride as u64,
+            g.h_out as u64,
+            g.w_out as u64,
+            g.row_words_in as u64,
+            g.row_read as u64,
+            g.n_segs as u64,
+            g.kernel_words as u64,
+            g.k_groups as u64,
+            g.max_rows as u64,
+        ],
+        g.has_bypass,
+        g.dbuf_w,
+    )
+}
+
+fn cache() -> &'static Mutex<HashMap<Key, Schedule>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, Schedule>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Hit/miss counters since process start (process-wide totals —
+/// tests assert on deltas, not absolutes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+pub fn counters() -> CacheCounters {
+    CacheCounters {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+        entries: cache().lock().expect("measure cache poisoned").len(),
+    }
+}
+
+/// Look up the measured winner for a layer geometry. Counts a hit only
+/// when a *valid* schedule comes back; an absent or cap-violating entry
+/// counts as a miss and returns `None` (caller falls back to the
+/// analytical search).
+pub fn lookup(cfg: &SnowflakeConfig, g: &ConvGeom) -> Option<Schedule> {
+    let found = cache().lock().expect("measure cache poisoned").get(&key(cfg, g)).copied();
+    match found {
+        Some(s) if cost::validate(&s, g, cfg).is_ok() => {
+            HITS.fetch_add(1, Ordering::Relaxed);
+            Some(s)
+        }
+        _ => {
+            MISSES.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+/// Publish a measured winner (latest measurement wins on re-tune).
+pub fn record(cfg: &SnowflakeConfig, g: &ConvGeom, s: Schedule) {
+    cache().lock().expect("measure cache poisoned").insert(key(cfg, g), s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{BalancePolicy, LoopOrder};
+
+    fn geom(kernel_words: usize) -> ConvGeom {
+        ConvGeom {
+            kh: 3,
+            stride: 1,
+            h_out: 16,
+            w_out: 16,
+            row_words_in: 1234,
+            row_read: 48,
+            n_segs: 1,
+            kernel_words,
+            k_groups: 4,
+            c_pad_out: 16,
+            has_bypass: false,
+            byp_row_words: 0,
+            max_rows: 4,
+            dbuf_w: true,
+        }
+    }
+
+    #[test]
+    fn record_then_lookup_hits_and_validates() {
+        let cfg = SnowflakeConfig::default();
+        // Unique kernel_words so no other test's entries collide.
+        let g = geom(98_761);
+        let before = counters();
+        assert_eq!(lookup(&cfg, &g), None, "empty key must miss");
+        let s = Schedule {
+            order: LoopOrder::Kloop,
+            rows_per_cu: 2,
+            policy: BalancePolicy::Greedy { split: 2 },
+        };
+        record(&cfg, &g, s);
+        assert_eq!(lookup(&cfg, &g), Some(s));
+        // An entry that violates the geometry caps is a miss, not a
+        // panic: rows_per_cu 9 > max_rows 4.
+        let bad =
+            Schedule { order: LoopOrder::Kloop, rows_per_cu: 9, policy: BalancePolicy::default() };
+        record(&cfg, &g, bad);
+        assert_eq!(lookup(&cfg, &g), None, "cap-violating entry must read as a miss");
+        let after = counters();
+        assert!(after.hits >= before.hits + 1);
+        assert!(after.misses >= before.misses + 2);
+        // A different config never sees the entry.
+        let other = SnowflakeConfig { link_bandwidth_gbs: 9.0, ..SnowflakeConfig::default() };
+        record(&cfg, &g, s);
+        assert_eq!(lookup(&other, &g), None, "config fingerprint partitions the cache");
+    }
+}

@@ -29,6 +29,8 @@ pub mod decide;
 pub mod deploy;
 pub mod hand;
 pub mod layout;
+pub mod measure_cache;
+pub mod partition;
 pub mod tile;
 
 pub use artifact::{Artifact, ArtifactError, ArtifactMeta};
@@ -264,8 +266,9 @@ impl Compiler {
     }
 }
 
-/// The compile pipeline shared by [`Compiler::build`] and the
-/// deprecated [`compile`] shim.
+/// The compile pipeline behind [`Compiler::compile`] and
+/// [`Compiler::build`]. (The free-function `compile()` shim this once
+/// backed was removed in ISSUE 8 — `Compiler` is the only front door.)
 pub(crate) fn compile_impl(
     graph: &Graph,
     cfg: &SnowflakeConfig,
@@ -274,20 +277,6 @@ pub(crate) fn compile_impl(
     graph.validate().map_err(CompileError)?;
     let plan = layout::plan(graph, cfg, opts)?;
     codegen::generate(graph, cfg, opts, plan)
-}
-
-/// Compile a model graph for the given hardware configuration.
-///
-/// Deprecated shim: the single entry point is now
-/// [`Compiler::build`], which returns a versioned [`Artifact`]
-/// (`artifact.compiled` is this function's return value).
-#[deprecated(note = "use Compiler::new(cfg).options(opts).build(&graph) -> Artifact")]
-pub fn compile(
-    graph: &Graph,
-    cfg: &SnowflakeConfig,
-    opts: &CompileOptions,
-) -> Result<CompiledModel, CompileError> {
-    compile_impl(graph, cfg, opts)
 }
 
 #[cfg(test)]
@@ -304,7 +293,7 @@ mod tests {
     }
 
     #[test]
-    fn builder_and_deprecated_shim_agree() {
+    fn builder_compile_and_build_agree() {
         use crate::model::layer::{LayerKind, Shape};
         let mut g = crate::model::graph::Graph::new("front_door", Shape::new(16, 8, 8));
         g.push_seq(
@@ -312,10 +301,10 @@ mod tests {
             "c",
         );
         let cfg = SnowflakeConfig::default();
-        let artifact = Compiler::new(cfg.clone()).build(&g).unwrap();
-        #[allow(deprecated)]
-        let shim = compile(&g, &cfg, &CompileOptions::default()).unwrap();
-        assert_eq!(artifact.compiled, shim, "shim must stay a thin alias of build()");
+        let compiler = Compiler::new(cfg);
+        let artifact = compiler.build(&g).unwrap();
+        let compiled = compiler.compile(&g).unwrap();
+        assert_eq!(artifact.compiled, compiled, "compile() must stay build() minus packaging");
         // The artifact records the schedules the plan actually used and
         // the output node the Engine will read.
         assert_eq!(artifact.schedules, artifact.compiled.plan.conv_schedules());

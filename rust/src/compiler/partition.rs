@@ -1,0 +1,837 @@
+//! Pipeline-parallel model partitioning (multi-machine sharding).
+//!
+//! Splits a model graph into N *contiguous* layer ranges — pipeline
+//! stages — each compiled into its own [`Artifact`] for its own
+//! accelerator, plus a versioned [`ShardPlan`] manifest recording the
+//! stage boundaries, the inter-stage activation shapes/bytes and the
+//! per-stage artifact fingerprints. The cluster runtime
+//! (`engine::cluster`) deploys one machine per stage and forwards each
+//! boundary activation over a modeled inter-machine link.
+//!
+//! Two invariants make sharding *transparent*:
+//!
+//! 1. **Bit-identity.** A cut is only *feasible* when every edge that
+//!    crosses it leaves the node directly before the cut and lands in a
+//!    single-input consumer. The consuming stage then reads the shipped
+//!    activation as its network input, and the producing stage's output
+//!    canvas words are copied verbatim (`deploy::write_canvas_i16`) —
+//!    no re-quantization, so N machines compute exactly what one
+//!    machine computes at the same layer boundary.
+//! 2. **Balance.** The partitioner minimizes the *bottleneck* stage
+//!    (max per-stage predicted cycles from the compiler's cost model),
+//!    which bounds steady-state pipeline throughput. Seeds (even layer
+//!    split + cost-greedy split) are refined by deterministic local
+//!    moves, so the result is never worse than the even split.
+
+use super::artifact::{self, config_hash, Artifact};
+use super::{CompileOptions, Compiler};
+use crate::arch::SnowflakeConfig;
+use crate::model::graph::Graph;
+use crate::model::layer::{LayerKind, Shape};
+use crate::model::parser;
+use crate::model::weights::Weights;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Current manifest format version. Bump on incompatible change.
+pub const SHARDPLAN_VERSION: u64 = 1;
+const MAGIC: &str = "snowflake-shardplan";
+
+/// Partitioning / manifest failure.
+#[derive(Debug, Clone)]
+pub struct PartitionError(pub String);
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "partition error: {}", self.0)
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+fn perr<E: std::fmt::Display>(e: E) -> PartitionError {
+    PartitionError(e.to_string())
+}
+
+/// The activation tensor shipped across one inter-stage link: the
+/// logical CHW interior of the boundary node's canvas (padding and
+/// margins are a per-machine layout concern and never travel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Boundary {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Boundary {
+    fn of(s: Shape) -> Boundary {
+        Boundary { c: s.c, h: s.h, w: s.w }
+    }
+
+    /// i16 words shipped per inference.
+    pub fn words(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Bytes on the wire per inference.
+    pub fn bytes(&self, cfg: &SnowflakeConfig) -> u64 {
+        (self.words() * cfg.word_bytes) as u64
+    }
+}
+
+/// Cycles to move `bytes` over the inter-machine link: one DMA setup
+/// plus the serialization time at [`SnowflakeConfig::link_bytes_per_cycle`].
+/// Millibyte-per-cycle fixed point keeps the division exact and
+/// platform-independent (same scheme as the DMA engine's rates).
+pub fn link_cycles(cfg: &SnowflakeConfig, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    let millibytes_per_cycle = ((cfg.link_bytes_per_cycle() * 1000.0).round() as u64).max(1);
+    cfg.dma_setup_cycles + (bytes * 1000).div_ceil(millibytes_per_cycle)
+}
+
+/// One pipeline stage: a compiled contiguous layer range.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// First full-graph node id in the stage (inclusive).
+    pub start: usize,
+    /// One past the last full-graph node id (exclusive).
+    pub end: usize,
+    /// The stage's own compiled artifact (stage-local node ids).
+    pub artifact: Artifact,
+    /// Cost-model prediction for this stage ([`Artifact::predicted_cycles`]).
+    pub predicted_cycles: u64,
+    /// Activation shipped to the next stage (None for the final stage).
+    pub boundary: Option<Boundary>,
+}
+
+/// A partitioned model: the full graph, the target config and one
+/// compiled [`Stage`] per machine. Serialized as a versioned manifest
+/// plus sibling per-stage artifact files.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub cfg: SnowflakeConfig,
+    /// The unpartitioned model (boundary oracle + provenance).
+    pub graph: Graph,
+    pub stages: Vec<Stage>,
+}
+
+impl ShardPlan {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Cut positions in full-graph node ids (empty for one stage).
+    pub fn cuts(&self) -> Vec<usize> {
+        self.stages.iter().skip(1).map(|s| s.start).collect()
+    }
+
+    /// Per-stage predicted cycles, in stage order.
+    pub fn stage_cycles(&self) -> Vec<u64> {
+        self.stages.iter().map(|s| s.predicted_cycles).collect()
+    }
+
+    /// Predicted link cycles per boundary (one per stage minus one).
+    pub fn link_cycles(&self) -> Vec<u64> {
+        self.stages
+            .iter()
+            .filter_map(|s| s.boundary)
+            .map(|b| link_cycles(&self.cfg, b.bytes(&self.cfg)))
+            .collect()
+    }
+
+    /// Predicted *sequential* end-to-end cycles for one inference:
+    /// every stage plus every link, no pipeline overlap. This is the
+    /// per-request latency the cluster reports and the serving policies
+    /// budget against.
+    pub fn predicted_cycles(&self) -> u64 {
+        self.stage_cycles().iter().sum::<u64>() + self.link_cycles().iter().sum::<u64>()
+    }
+
+    /// The bottleneck stage's predicted cycles — the steady-state
+    /// pipeline initiation interval (lower is faster).
+    pub fn bottleneck_cycles(&self) -> u64 {
+        self.stage_cycles().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn config_hash(&self) -> u64 {
+        config_hash(&self.cfg)
+    }
+
+    /// Structural self-check: contiguous full coverage, per-stage node
+    /// counts, boundary shapes against the full graph, config binding.
+    pub fn validate(&self) -> Result<(), PartitionError> {
+        if self.stages.is_empty() {
+            return Err(PartitionError("shard plan has no stages".to_string()));
+        }
+        let n = self.graph.nodes.len();
+        let shapes = self.graph.shapes();
+        let mut expect = 0usize;
+        for (k, st) in self.stages.iter().enumerate() {
+            if st.start != expect || st.end <= st.start {
+                return Err(PartitionError(format!(
+                    "stage {k} covers [{}, {}) but [{expect}, ..) was expected: \
+                     stages must tile the graph contiguously",
+                    st.start, st.end
+                )));
+            }
+            if st.artifact.graph.nodes.len() != st.end - st.start {
+                return Err(PartitionError(format!(
+                    "stage {k} artifact has {} nodes but covers {} graph nodes",
+                    st.artifact.graph.nodes.len(),
+                    st.end - st.start
+                )));
+            }
+            st.artifact.validate_config(&self.cfg).map_err(perr)?;
+            let last = k + 1 == self.stages.len();
+            match (st.boundary, last) {
+                (Some(b), false) => {
+                    if b != Boundary::of(shapes[st.end - 1]) {
+                        return Err(PartitionError(format!(
+                            "stage {k} boundary {}x{}x{} does not match node {} output",
+                            b.c,
+                            b.h,
+                            b.w,
+                            st.end - 1
+                        )));
+                    }
+                }
+                (None, true) => {}
+                (Some(_), true) => {
+                    return Err(PartitionError("final stage must not have a boundary".into()))
+                }
+                (None, false) => {
+                    return Err(PartitionError(format!("stage {k} is missing its boundary")))
+                }
+            }
+            expect = st.end;
+        }
+        if expect != n {
+            return Err(PartitionError(format!(
+                "stages cover {expect} of {n} graph nodes"
+            )));
+        }
+        Ok(())
+    }
+
+    fn manifest_json(&self, stem: &str) -> Json {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(k, st)| {
+                Json::obj(vec![
+                    ("start", Json::num(st.start as f64)),
+                    ("end", Json::num(st.end as f64)),
+                    ("file", Json::str(&stage_file(stem, k))),
+                    ("fingerprint", Json::str(&artifact::hex(st.artifact.fingerprint()))),
+                    ("predicted_cycles", Json::num(st.predicted_cycles as f64)),
+                    (
+                        "boundary",
+                        match st.boundary {
+                            Some(b) => Json::obj(vec![
+                                ("c", Json::num(b.c as f64)),
+                                ("h", Json::num(b.h as f64)),
+                                ("w", Json::num(b.w as f64)),
+                            ]),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("magic", Json::str(MAGIC)),
+            ("version", Json::num(SHARDPLAN_VERSION as f64)),
+            ("config_hash", Json::str(&artifact::hex(self.config_hash()))),
+            ("config", artifact::config_json(&self.cfg)),
+            ("model", Json::str(&parser::dump_model(&self.graph))),
+            ("stages", Json::Arr(stages)),
+        ])
+    }
+
+    /// Write the manifest at `path` plus one sibling
+    /// `<stem>.stage<k>.artifact.json` per stage.
+    pub fn save(&self, path: &str) -> Result<(), PartitionError> {
+        self.validate()?;
+        let p = Path::new(path);
+        let dir = p.parent().unwrap_or_else(|| Path::new(""));
+        let stem = manifest_stem(p);
+        for (k, st) in self.stages.iter().enumerate() {
+            let file = dir.join(stage_file(&stem, k));
+            st.artifact.save(&file.to_string_lossy()).map_err(perr)?;
+        }
+        std::fs::write(path, self.manifest_json(&stem).pretty() + "\n")
+            .map_err(|e| PartitionError(format!("{path}: {e}")))
+    }
+
+    /// Load a manifest and its stage artifacts, validating the format
+    /// version, the config binding against `host`, every recorded
+    /// fingerprint and the coverage invariants.
+    pub fn load(path: &str, host: &SnowflakeConfig) -> Result<ShardPlan, PartitionError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| PartitionError(format!("{path}: {e}")))?;
+        let root = Json::parse(&text).map_err(perr)?;
+        if root.get("magic").as_str() != Some(MAGIC) {
+            return Err(PartitionError(format!("{path}: not a shard-plan manifest")));
+        }
+        let version = root
+            .get("version")
+            .as_f64()
+            .ok_or_else(|| PartitionError(format!("{path}: missing version")))?
+            as u64;
+        if version != SHARDPLAN_VERSION {
+            return Err(PartitionError(format!(
+                "{path}: shard-plan version {version} is not supported \
+                 (this build reads version {SHARDPLAN_VERSION})"
+            )));
+        }
+        let cfg = artifact::config_from(root.get("config")).map_err(perr)?;
+        let recorded = root
+            .get("config_hash")
+            .as_str()
+            .and_then(artifact::unhex)
+            .ok_or_else(|| PartitionError(format!("{path}: bad config_hash")))?;
+        if recorded != config_hash(&cfg) {
+            return Err(PartitionError(format!(
+                "{path}: config_hash does not match the embedded config"
+            )));
+        }
+        if config_hash(&cfg) != config_hash(host) {
+            return Err(PartitionError(format!(
+                "{path}: built for config {} but the host runs {}",
+                artifact::hex(config_hash(&cfg)),
+                artifact::hex(config_hash(host))
+            )));
+        }
+        let model = root
+            .get("model")
+            .as_str()
+            .ok_or_else(|| PartitionError(format!("{path}: missing model")))?;
+        let graph = parser::parse_model(model).map_err(perr)?;
+        let dir = Path::new(path).parent().unwrap_or_else(|| Path::new(""));
+        let entries = root
+            .get("stages")
+            .as_arr()
+            .ok_or_else(|| PartitionError(format!("{path}: missing stages")))?;
+        let mut stages = Vec::with_capacity(entries.len());
+        for (k, e) in entries.iter().enumerate() {
+            let start = e.get("start").as_usize();
+            let end = e.get("end").as_usize();
+            let file = e.get("file").as_str();
+            let (Some(start), Some(end), Some(file)) = (start, end, file) else {
+                return Err(PartitionError(format!("{path}: stage {k} entry is corrupt")));
+            };
+            let fp = e
+                .get("fingerprint")
+                .as_str()
+                .and_then(artifact::unhex)
+                .ok_or_else(|| PartitionError(format!("{path}: stage {k} bad fingerprint")))?;
+            let apath = dir.join(file);
+            let art = Artifact::load(&apath.to_string_lossy(), host).map_err(perr)?;
+            if art.fingerprint() != fp {
+                return Err(PartitionError(format!(
+                    "{}: fingerprint {} does not match the manifest's {} — \
+                     stage artifact was modified or replaced",
+                    apath.to_string_lossy(),
+                    artifact::hex(art.fingerprint()),
+                    artifact::hex(fp)
+                )));
+            }
+            let boundary = match e.get("boundary") {
+                Json::Null => None,
+                b => {
+                    let (c, h, w) =
+                        (b.get("c").as_usize(), b.get("h").as_usize(), b.get("w").as_usize());
+                    let (Some(c), Some(h), Some(w)) = (c, h, w) else {
+                        return Err(PartitionError(format!(
+                            "{path}: stage {k} boundary is corrupt"
+                        )));
+                    };
+                    Some(Boundary { c, h, w })
+                }
+            };
+            let predicted_cycles = art.predicted_cycles();
+            stages.push(Stage { start, end, artifact: art, predicted_cycles, boundary });
+        }
+        let plan = ShardPlan { cfg, graph, stages };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+fn manifest_stem(p: &Path) -> String {
+    let name = p.file_name().map(|s| s.to_string_lossy().into_owned());
+    let name = name.unwrap_or_else(|| "shardplan".to_string());
+    name.strip_suffix(".shardplan.json")
+        .or_else(|| name.strip_suffix(".json"))
+        .unwrap_or(&name)
+        .to_string()
+}
+
+fn stage_file(stem: &str, k: usize) -> String {
+    format!("{stem}.stage{k}.artifact.json")
+}
+
+// ---------------------------------------------------------------------
+// Cut feasibility and stage sub-graphs
+// ---------------------------------------------------------------------
+
+fn skipped(g: &Graph, opts: &CompileOptions, id: usize) -> bool {
+    opts.skip_fc && matches!(g.nodes[id].kind, LayerKind::Fc { .. })
+}
+
+/// Cut positions `a` (a stage may start at node `a`) where sharding is
+/// transparent: every edge crossing the cut leaves node `a-1` and lands
+/// in a single-input consumer (so the consumer can read the shipped
+/// activation as its network input), node `a-1` generates code (its
+/// canvas is the shipped activation), and both sides keep at least one
+/// code-generating node.
+pub fn feasible_cuts(g: &Graph, opts: &CompileOptions) -> Vec<usize> {
+    let n = g.nodes.len();
+    (1..n)
+        .filter(|&a| {
+            for node in &g.nodes[a..] {
+                for &p in &node.inputs {
+                    if p < a && (p != a - 1 || node.inputs.len() != 1) {
+                        return false;
+                    }
+                }
+            }
+            if skipped(g, opts, a - 1) {
+                return false;
+            }
+            if (0..a).all(|i| skipped(g, opts, i)) || (a..n).all(|i| skipped(g, opts, i)) {
+                return false;
+            }
+            true
+        })
+        .collect()
+}
+
+/// The sub-graph a stage compiles: nodes `start..end` with stage-local
+/// ids; edges from node `start-1` become network-input reads, and the
+/// stage input shape is node `start-1`'s output. The full range
+/// (`0..n`) returns the graph verbatim, so a 1-stage partition builds
+/// the identical artifact (same fingerprint) as an unsharded compile.
+pub fn stage_graph(g: &Graph, start: usize, end: usize) -> Graph {
+    if start == 0 && end == g.nodes.len() {
+        return g.clone();
+    }
+    let input = if start == 0 { g.input } else { g.shapes()[start - 1] };
+    let mut sg = Graph::new(&format!("{}.s{}_{}", g.name, start, end), input);
+    for node in &g.nodes[start..end] {
+        let inputs: Vec<usize> = if node.inputs.iter().any(|&p| p < start) {
+            Vec::new()
+        } else {
+            node.inputs.iter().map(|&p| p - start).collect()
+        };
+        sg.push(node.kind.clone(), inputs, &node.name);
+    }
+    sg
+}
+
+/// Slice a full-model weight set down to one stage's (stage-local node
+/// ids). Stage weights must come from *one* full-model
+/// [`Weights::init`] — the RNG runs sequentially over the full graph,
+/// so re-initializing from a stage graph would produce different
+/// weights than the unsharded model.
+pub fn stage_weights(full: &Weights, start: usize, end: usize) -> Weights {
+    let slice = |m: &std::collections::BTreeMap<usize, crate::tensor::Tensor<f32>>| {
+        m.range(start..end).map(|(&k, v)| (k - start, v.clone())).collect()
+    };
+    Weights { weights: slice(&full.weights), biases: slice(&full.biases) }
+}
+
+// ---------------------------------------------------------------------
+// Balance objective
+// ---------------------------------------------------------------------
+
+/// Per-node predicted cycles from one full-model compile. Fused
+/// conv+residual cycles land on the residual node (the lowered op's
+/// `out_node`); layers the cost model does not predict (FC, avgpool)
+/// contribute 0.
+pub fn node_costs(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+) -> Result<Vec<u64>, PartitionError> {
+    let compiled = super::compile_impl(g, cfg, opts).map_err(perr)?;
+    let mut costs = vec![0u64; g.nodes.len()];
+    for lp in &compiled.plan.layers {
+        costs[lp.op.out_node()] += lp.decision.predicted_cycles();
+    }
+    Ok(costs)
+}
+
+/// Per-stage cost sums for a cut set over precomputed node costs.
+pub fn stage_costs(costs: &[u64], cuts: &[usize]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(cuts.len() + 1);
+    let mut prev = 0usize;
+    for &c in cuts.iter().chain(std::iter::once(&costs.len())) {
+        out.push(costs[prev..c].iter().sum());
+        prev = c;
+    }
+    out
+}
+
+/// (bottleneck, sum of squared stage costs): lexicographic objective.
+/// The primary term bounds pipeline throughput; the secondary breaks
+/// ties toward overall balance, keeping refinement deterministic.
+fn score(costs: &[u64], cuts: &[usize]) -> (u64, u128) {
+    let sc = stage_costs(costs, cuts);
+    let max = sc.iter().copied().max().unwrap_or(0);
+    let sq = sc.iter().map(|&c| (c as u128) * (c as u128)).sum();
+    (max, sq)
+}
+
+fn not_enough(g: &Graph, feasible: usize, n_stages: usize) -> PartitionError {
+    PartitionError(format!(
+        "{} supports at most {} pipeline stages ({} feasible cuts); {} requested",
+        g.name,
+        feasible + 1,
+        feasible,
+        n_stages
+    ))
+}
+
+/// The even-layer-count split snapped to feasible cuts: ideal cut `i`
+/// sits at `i·n/n_stages`; each is moved to the nearest feasible
+/// position that keeps the cut set strictly increasing. This is the
+/// baseline [`partition`] must never lose to.
+pub fn even_cuts(
+    g: &Graph,
+    opts: &CompileOptions,
+    n_stages: usize,
+) -> Result<Vec<usize>, PartitionError> {
+    let n = g.nodes.len();
+    if n_stages == 0 {
+        return Err(PartitionError("cannot partition into 0 stages".to_string()));
+    }
+    let feas = feasible_cuts(g, opts);
+    if feas.len() + 1 < n_stages {
+        return Err(not_enough(g, feas.len(), n_stages));
+    }
+    let targets: Vec<f64> =
+        (1..n_stages).map(|i| (i * n) as f64 / n_stages as f64).collect();
+    Ok(snap(&feas, &targets, |&cut| cut as f64))
+}
+
+/// Snap ideal positions to feasible cuts: for each target in order,
+/// pick the unused feasible cut closest to it (ties toward the earlier
+/// cut) that still leaves enough cuts for the remaining targets.
+fn snap<F: Fn(&usize) -> f64>(feas: &[usize], targets: &[f64], measure: F) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(targets.len());
+    let mut lo = 0usize;
+    for (i, &t) in targets.iter().enumerate() {
+        let hi = feas.len() - (targets.len() - 1 - i);
+        let mut best = lo;
+        for j in lo + 1..hi {
+            if (measure(&feas[j]) - t).abs() < (measure(&feas[best]) - t).abs() {
+                best = j;
+            }
+        }
+        cuts.push(feas[best]);
+        lo = best + 1;
+    }
+    cuts
+}
+
+/// Deterministic local-move refinement: repeatedly try moving each cut
+/// to every feasible position between its neighbors, accepting strict
+/// objective improvements, until a fixed point. Never worsens the seed.
+fn refine(costs: &[u64], feas: &[usize], mut cuts: Vec<usize>) -> Vec<usize> {
+    let n = costs.len();
+    loop {
+        let mut improved = false;
+        for i in 0..cuts.len() {
+            let lo = if i == 0 { 0 } else { cuts[i - 1] };
+            let hi = if i + 1 == cuts.len() { n } else { cuts[i + 1] };
+            let mut best_cut = cuts[i];
+            let mut best_score = score(costs, &cuts);
+            for &c in feas.iter().filter(|&&c| c > lo && c < hi && c != cuts[i]) {
+                let mut cand = cuts.clone();
+                cand[i] = c;
+                let s = score(costs, &cand);
+                if s < best_score {
+                    best_score = s;
+                    best_cut = c;
+                }
+            }
+            if best_cut != cuts[i] {
+                cuts[i] = best_cut;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cuts;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Partitioning front doors
+// ---------------------------------------------------------------------
+
+/// Partition `g` into `n_stages` balanced pipeline stages and compile
+/// each. Deterministic: same inputs, same cuts, same artifacts. The
+/// result's bottleneck (on the cost model's node costs) is never worse
+/// than [`even_cuts`]'s, because the even split is one of the refined
+/// seeds.
+pub fn partition(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+    n_stages: usize,
+) -> Result<ShardPlan, PartitionError> {
+    if n_stages == 0 {
+        return Err(PartitionError("cannot partition into 0 stages".to_string()));
+    }
+    if n_stages == 1 {
+        return partition_at(g, cfg, opts, &[]);
+    }
+    let feas = feasible_cuts(g, opts);
+    if feas.len() + 1 < n_stages {
+        return Err(not_enough(g, feas.len(), n_stages));
+    }
+    let costs = node_costs(g, cfg, opts)?;
+    let total: u64 = costs.iter().sum();
+    let prefix: Vec<u64> = std::iter::once(0)
+        .chain(costs.iter().scan(0u64, |acc, &c| {
+            *acc += c;
+            Some(*acc)
+        }))
+        .collect();
+    // Seed 2: cuts placed where the cost prefix crosses i/n of total.
+    let targets: Vec<f64> =
+        (1..n_stages).map(|i| (i as u64 * total) as f64 / n_stages as f64).collect();
+    let greedy = snap(&feas, &targets, |&cut| prefix[cut] as f64);
+    let even = even_cuts(g, opts, n_stages)?;
+    let mut best = refine(&costs, &feas, even);
+    for seed in [greedy] {
+        let cand = refine(&costs, &feas, seed);
+        if score(&costs, &cand) < score(&costs, &best) {
+            best = cand;
+        }
+    }
+    partition_at(g, cfg, opts, &best)
+}
+
+/// Compile the stages of an explicit cut set (must be feasible,
+/// strictly increasing). `&[]` compiles the whole model as one stage —
+/// bit-identical (same fingerprint) to an unsharded build.
+pub fn partition_at(
+    g: &Graph,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+    cuts: &[usize],
+) -> Result<ShardPlan, PartitionError> {
+    let n = g.nodes.len();
+    let feas = feasible_cuts(g, opts);
+    for w in cuts.windows(2) {
+        if w[1] <= w[0] {
+            return Err(PartitionError(format!(
+                "cuts must be strictly increasing, got {cuts:?}"
+            )));
+        }
+    }
+    for &c in cuts {
+        if !feas.contains(&c) {
+            return Err(PartitionError(format!(
+                "cut at node {c} is not feasible for {} (feasible cuts: {feas:?})",
+                g.name
+            )));
+        }
+    }
+    let shapes = g.shapes();
+    let compiler = Compiler::new(cfg.clone()).options(opts.clone());
+    let mut bounds = vec![0usize];
+    bounds.extend_from_slice(cuts);
+    bounds.push(n);
+    let mut stages = Vec::with_capacity(bounds.len() - 1);
+    for (k, w) in bounds.windows(2).enumerate() {
+        let (start, end) = (w[0], w[1]);
+        let sg = stage_graph(g, start, end);
+        let art = compiler.build(&sg).map_err(|e| {
+            PartitionError(format!("stage {k} (nodes {start}..{end}): {e}"))
+        })?;
+        let last = end == n;
+        if !last && art.output_node != Some(end - 1 - start) {
+            return Err(PartitionError(format!(
+                "stage {k} boundary node {} generates no code — cannot ship its activation",
+                end - 1
+            )));
+        }
+        if art.output_node.is_none() {
+            return Err(PartitionError(format!(
+                "stage {k} (nodes {start}..{end}) generates no code"
+            )));
+        }
+        let predicted_cycles = art.predicted_cycles();
+        let boundary = (!last).then(|| Boundary::of(shapes[end - 1]));
+        stages.push(Stage { start, end, artifact: art, predicted_cycles, boundary });
+    }
+    let plan = ShardPlan { cfg: cfg.clone(), graph: g.clone(), stages };
+    plan.validate()?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn opts_nofc() -> CompileOptions {
+        CompileOptions { skip_fc: true, ..CompileOptions::default() }
+    }
+
+    #[test]
+    fn resnet18_feasible_cuts_are_block_boundaries() {
+        let g = zoo::resnet18();
+        // Identity-block bypasses reach past interior cuts; only the
+        // stem boundary, the four downsample-block starts and the
+        // avgpool/fc tail admit transparent cuts.
+        assert_eq!(feasible_cuts(&g, &CompileOptions::default()), vec![1, 8, 15, 22, 29, 30]);
+        // skip_fc: the fc-only tail stage would generate no code.
+        assert_eq!(feasible_cuts(&g, &opts_nofc()), vec![1, 8, 15, 22, 29]);
+    }
+
+    #[test]
+    fn alexnet_feasible_cuts() {
+        let g = zoo::alexnet_owt();
+        assert_eq!(
+            feasible_cuts(&g, &CompileOptions::default()),
+            (1..=10).collect::<Vec<_>>()
+        );
+        // skip_fc excludes fc boundaries (9, 10) and the cut whose tail
+        // stage is all-fc (8).
+        assert_eq!(feasible_cuts(&g, &opts_nofc()), (1..=7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stage_graphs_tile_the_model() {
+        let g = zoo::resnet18();
+        let mut covered = 0usize;
+        let bounds = [0, 8, 22, g.nodes.len()];
+        for w in bounds.windows(2) {
+            let sg = stage_graph(&g, w[0], w[1]);
+            assert_eq!(sg.nodes.len(), w[1] - w[0]);
+            sg.validate().expect("stage graph must validate");
+            if w[0] > 0 {
+                assert_eq!(sg.input, g.shapes()[w[0] - 1]);
+            }
+            covered += sg.nodes.len();
+        }
+        assert_eq!(covered, g.nodes.len());
+    }
+
+    #[test]
+    fn full_range_stage_graph_is_verbatim() {
+        let g = zoo::alexnet_owt();
+        let sg = stage_graph(&g, 0, g.nodes.len());
+        assert_eq!(parser::dump_model(&sg), parser::dump_model(&g));
+    }
+
+    #[test]
+    fn stage_weights_are_sliced_not_reinitialized() {
+        let g = zoo::alexnet_owt();
+        let full = Weights::init(&g, 7);
+        let sw = stage_weights(&full, 2, 5);
+        // conv2 (node 2) -> stage node 0; conv3 (node 4) -> stage node 2.
+        assert_eq!(sw.weights[&0].data, full.weights[&2].data);
+        assert_eq!(sw.weights[&2].data, full.weights[&4].data);
+        assert_eq!(sw.weights.len(), 2, "pools carry no weights");
+    }
+
+    #[test]
+    fn partition_balances_no_worse_than_even_split() {
+        let cfg = SnowflakeConfig::default();
+        let opts = opts_nofc();
+        for g in [zoo::alexnet_owt(), zoo::resnet18()] {
+            let costs = node_costs(&g, &cfg, &opts).unwrap();
+            for n_stages in 2..=3 {
+                let plan = partition(&g, &cfg, &opts, n_stages).unwrap();
+                assert_eq!(plan.n_stages(), n_stages);
+                plan.validate().unwrap();
+                let even = even_cuts(&g, &opts, n_stages).unwrap();
+                let best = stage_costs(&costs, &plan.cuts()).into_iter().max().unwrap();
+                let base = stage_costs(&costs, &even).into_iter().max().unwrap();
+                assert!(
+                    best <= base,
+                    "{} x{}: partitioner bottleneck {} worse than even split {}",
+                    g.name,
+                    n_stages,
+                    best,
+                    base
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn too_many_stages_is_a_typed_error() {
+        let g = zoo::resnet18();
+        let cfg = SnowflakeConfig::default();
+        let e = partition(&g, &cfg, &opts_nofc(), 7).unwrap_err();
+        assert!(e.0.contains("at most 6 pipeline stages"), "{}", e.0);
+        let e = partition(&g, &cfg, &opts_nofc(), 0).unwrap_err();
+        assert!(e.0.contains("0 stages"), "{}", e.0);
+    }
+
+    #[test]
+    fn infeasible_cut_is_a_typed_error() {
+        let g = zoo::resnet18();
+        let cfg = SnowflakeConfig::default();
+        let e = partition_at(&g, &cfg, &opts_nofc(), &[3]).unwrap_err();
+        assert!(e.0.contains("not feasible"), "{}", e.0);
+    }
+
+    #[test]
+    fn link_cycles_model() {
+        let cfg = SnowflakeConfig::default();
+        // Defaults: 1 GB/s at 250 MHz = 4 bytes/cycle.
+        assert_eq!(link_cycles(&cfg, 0), 0);
+        assert_eq!(link_cycles(&cfg, 4000), cfg.dma_setup_cycles + 1000);
+        assert_eq!(link_cycles(&cfg, 1), cfg.dma_setup_cycles + 1);
+        let fast = SnowflakeConfig { link_bandwidth_gbs: 8.0, ..SnowflakeConfig::default() };
+        assert_eq!(link_cycles(&fast, 4000), fast.dma_setup_cycles + 125);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_tamper_detection() {
+        let g = zoo::alexnet_owt();
+        let cfg = SnowflakeConfig::default();
+        let plan = partition(&g, &cfg, &opts_nofc(), 2).unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join("repro_test_alexnet.shardplan.json");
+        let path = path.to_string_lossy().into_owned();
+        plan.save(&path).unwrap();
+        let back = ShardPlan::load(&path, &cfg).unwrap();
+        assert_eq!(back.cuts(), plan.cuts());
+        assert_eq!(back.n_stages(), 2);
+        for (a, b) in back.stages.iter().zip(&plan.stages) {
+            assert_eq!(a.artifact.fingerprint(), b.artifact.fingerprint());
+            assert_eq!(a.boundary, b.boundary);
+            assert_eq!(a.predicted_cycles, b.predicted_cycles);
+        }
+        // Wrong host config is rejected.
+        let other = SnowflakeConfig { n_cus: 2, ..SnowflakeConfig::default() };
+        assert!(ShardPlan::load(&path, &other).is_err());
+        // A future manifest version is rejected with a clear message.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bumped = text.replacen("\"version\": 1", "\"version\": 2", 1);
+        let vpath = dir.join("repro_test_alexnet_v2.shardplan.json");
+        std::fs::write(&vpath, bumped).unwrap();
+        // Stage files resolve against the manifest dir, so the copy
+        // still points at valid artifacts — only the version differs.
+        let e = ShardPlan::load(&vpath.to_string_lossy(), &cfg).unwrap_err();
+        assert!(e.0.contains("version 2"), "{}", e.0);
+        // A swapped stage artifact is caught by the fingerprint check.
+        let s0 = dir.join("repro_test_alexnet.stage0.artifact.json");
+        let s1 = dir.join("repro_test_alexnet.stage1.artifact.json");
+        std::fs::copy(&s1, &s0).unwrap();
+        let e = ShardPlan::load(&path, &cfg).unwrap_err();
+        assert!(e.0.contains("fingerprint"), "{}", e.0);
+    }
+}

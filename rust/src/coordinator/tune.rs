@@ -200,6 +200,18 @@ pub fn tune_measured(
         }
     }
 
+    // Publish the measured winners to the in-process measurement cache:
+    // from here on, any `compile()` under `TuneMode::Measured` reuses
+    // them per layer (keyed on config + geometry, so identical layers
+    // in *other* models hit too) instead of re-deriving analytically.
+    for lp in &best.compiled.plan.layers {
+        if let Some((node, geom)) = conv_geom_for(&best.compiled.plan, lp) {
+            if let Some(s) = schedules.get(&node) {
+                crate::compiler::measure_cache::record(cfg, &geom, *s);
+            }
+        }
+    }
+
     Ok(TuneOutcome {
         outcome: best,
         schedules,
@@ -243,5 +255,44 @@ mod tests {
         };
         let replay = driver::run_model(&g, &cfg, &opts, 7).unwrap();
         assert_eq!(replay.stats.cycles, out.tuned_cycles(), "schedule replay diverged");
+    }
+
+    /// ISSUE 8 satellite: `TuneMode::Measured` inside `compile()` is no
+    /// longer a pass-through — it consults the in-process measurement
+    /// cache. Cold compile = miss + analytical fallback; after a
+    /// `tune_measured` run the same compile hits and picks the measured
+    /// winner without a single simulation.
+    #[test]
+    fn measured_compile_consults_the_measurement_cache() {
+        use crate::compiler::{measure_cache, Compiler};
+        // A geometry unique to this test (8ch 36x36) so parallel tests
+        // can neither satisfy these lookups nor overwrite the entry.
+        let mut g = Graph::new("tune_cache", Shape::new(8, 36, 36));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 8, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c1",
+        );
+        let cfg = SnowflakeConfig::default();
+        let measured = CompileOptions {
+            tune: TuneMode::Measured { top_k: 2 },
+            ..Default::default()
+        };
+        let before = measure_cache::counters();
+        let cold = Compiler::new(cfg.clone()).options(measured.clone()).build(&g).unwrap();
+        let mid = measure_cache::counters();
+        assert!(mid.misses >= before.misses + 1, "cold measured compile must miss");
+        let analytical = Compiler::new(cfg.clone()).build(&g).unwrap();
+        assert_eq!(
+            cold.schedules, analytical.schedules,
+            "a cache miss falls back to the analytical pick"
+        );
+        let out = tune_measured(&g, &cfg, &CompileOptions::default(), 3, 2).unwrap();
+        let warm = Compiler::new(cfg.clone()).options(measured).build(&g).unwrap();
+        let after = measure_cache::counters();
+        assert!(after.hits >= mid.hits + 1, "post-tune measured compile must hit");
+        assert_eq!(
+            warm.schedules, out.schedules,
+            "the hit compiles the layer under its measured winner"
+        );
     }
 }

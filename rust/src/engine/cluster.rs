@@ -1,0 +1,376 @@
+//! Multi-machine pipeline cluster: one simulated accelerator per
+//! [`crate::compiler::partition::Stage`], chained by modeled
+//! inter-machine links.
+//!
+//! Execution is *transparent sharding*: stage `k+1` receives stage
+//! `k`'s output canvas interior verbatim
+//! ([`deploy::write_canvas_i16`]), so the pipeline computes
+//! bit-identically to one machine running the unsharded model — the
+//! invariant `repro serve --shards N --check` pins. Timing is modeled
+//! two ways:
+//!
+//! * **Per-request latency** is *sequential*: the sum of every stage's
+//!   simulated cycles plus every link's transfer cycles
+//!   ([`partition::link_cycles`]). Simulator timing is
+//!   input-independent, so this is a per-model constant — exactly the
+//!   discipline the serving oracle needs (batching and scheduling can
+//!   never change a request's reported cycles).
+//! * **Throughput** overlaps stages: [`pipeline_timing`] runs the
+//!   classic pipeline recurrence over the per-stage constants, so a
+//!   balanced N-stage cluster approaches N× the single-machine rate at
+//!   steady state.
+
+use super::{deployed_machine, EngineError};
+use crate::arch::SnowflakeConfig;
+use crate::compiler::deploy;
+use crate::compiler::layout::Canvas;
+use crate::compiler::partition::{self, ShardPlan};
+use crate::fixed::QFormat;
+use crate::model::weights::Weights;
+use crate::sim::stats::Stats;
+use crate::sim::Machine;
+use crate::tensor::Tensor;
+
+struct StageRt {
+    machine: Machine,
+    in_canvas: Canvas,
+    out_canvas: Canvas,
+    fmt: QFormat,
+    /// Freshly deployed: the first inference needs no reset.
+    fresh: bool,
+}
+
+/// One simulated inference through the whole pipeline.
+#[derive(Clone, Debug)]
+pub struct ClusterInference {
+    /// Combined statistics: `cycles` is the sequential end-to-end count
+    /// (every stage plus every link); every other counter is the
+    /// element-wise sum over stages.
+    pub stats: Stats,
+    /// Final stage's output canvas interior — bit-identical to the
+    /// unsharded model's output.
+    pub output: Tensor<i16>,
+    /// Per-stage simulator statistics, in stage order.
+    pub stage_stats: Vec<Stats>,
+    /// The activation shipped across each link (producing stage's
+    /// output interior) — the `--check` oracle compares these against
+    /// the unsharded machine's canvases at the same graph nodes.
+    pub boundaries: Vec<Tensor<i16>>,
+    /// Modeled transfer cycles per link.
+    pub link_cycles: Vec<u64>,
+}
+
+/// N machines executing one partitioned model as a pipeline.
+pub struct Cluster {
+    cfg: SnowflakeConfig,
+    name: String,
+    stages: Vec<StageRt>,
+    link_cycles: Vec<u64>,
+    /// Per-stage simulated cycles of the last inference (pipeline
+    /// timing input; populated after the first `infer`).
+    last_stage_cycles: Vec<u64>,
+}
+
+impl Cluster {
+    /// Deploy every stage of a shard plan onto its own machine. Weights
+    /// come from *one* full-model `Weights::init(graph, seed)` sliced
+    /// per stage — the same weights every unsharded load of this model
+    /// gets, which is what makes sharded outputs comparable at all.
+    pub fn new(plan: &ShardPlan, seed: u64) -> Result<Cluster, EngineError> {
+        plan.validate().map_err(|e| EngineError::BadInput(e.to_string()))?;
+        let full = Weights::init(&plan.graph, seed);
+        let mut stages = Vec::with_capacity(plan.n_stages());
+        for st in &plan.stages {
+            let weights = partition::stage_weights(&full, st.start, st.end);
+            let machine = deployed_machine(&st.artifact, &weights);
+            let out_node = st.artifact.output_node.ok_or(EngineError::NoOutput)?;
+            let splan = &st.artifact.compiled.plan;
+            let out_canvas = *splan.canvases.get(&out_node).ok_or(EngineError::NoOutput)?;
+            stages.push(StageRt {
+                machine,
+                in_canvas: splan.input_canvas,
+                out_canvas,
+                fmt: splan.fmt,
+                fresh: true,
+            });
+        }
+        Ok(Cluster {
+            cfg: plan.cfg.clone(),
+            name: plan.graph.name.clone(),
+            stages,
+            link_cycles: plan.link_cycles(),
+            last_stage_cycles: Vec::new(),
+        })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn config(&self) -> &SnowflakeConfig {
+        &self.cfg
+    }
+
+    /// Modeled transfer cycles per link.
+    pub fn link_cycles(&self) -> &[u64] {
+        &self.link_cycles
+    }
+
+    /// Per-stage simulated cycles of the most recent inference (empty
+    /// before the first). Simulator timing is input-independent, so
+    /// these are per-model constants — valid pipeline-timing input for
+    /// any request mix.
+    pub fn last_stage_cycles(&self) -> &[u64] {
+        &self.last_stage_cycles
+    }
+
+    /// Run one input through every stage in order, forwarding each
+    /// boundary activation verbatim.
+    pub fn infer(&mut self, input: &Tensor<f32>) -> Result<ClusterInference, EngineError> {
+        let cv = self.stages[0].in_canvas;
+        if input.shape != vec![cv.c, cv.h, cv.w] {
+            return Err(EngineError::BadInput(format!(
+                "input shape {:?} does not match the model's {:?}",
+                input.shape,
+                [cv.c, cv.h, cv.w]
+            )));
+        }
+        let n = self.stages.len();
+        let mut stage_stats = Vec::with_capacity(n);
+        let mut boundaries = Vec::with_capacity(n.saturating_sub(1));
+        let mut carry: Option<Tensor<i16>> = None;
+        for (k, st) in self.stages.iter_mut().enumerate() {
+            if !st.fresh {
+                st.machine.reset_for_inference();
+            }
+            st.fresh = false;
+            st.machine.set_cycle_limit(None);
+            match &carry {
+                None => deploy::write_canvas(&mut st.machine, &st.in_canvas, input, st.fmt),
+                Some(t) => deploy::write_canvas_i16(&mut st.machine, &st.in_canvas, t),
+            }
+            let stats = st.machine.run().map_err(EngineError::Sim)?;
+            let out = deploy::read_canvas(&st.machine, &st.out_canvas);
+            stage_stats.push(stats);
+            if k + 1 < n {
+                boundaries.push(out.clone());
+            }
+            carry = Some(out);
+        }
+        self.last_stage_cycles = stage_stats.iter().map(|s| s.cycles).collect();
+        let mut stats = stage_stats[0].clone();
+        for s in &stage_stats[1..] {
+            absorb(&mut stats, s);
+        }
+        stats.cycles += self.link_cycles.iter().sum::<u64>();
+        Ok(ClusterInference {
+            stats,
+            output: carry.expect("at least one stage"),
+            stage_stats,
+            boundaries,
+            link_cycles: self.link_cycles.clone(),
+        })
+    }
+}
+
+/// Element-wise accumulate `s` into `acc` (same config, so the
+/// per-CU/per-unit vectors line up).
+fn absorb(acc: &mut Stats, s: &Stats) {
+    acc.cycles += s.cycles;
+    acc.issued += s.issued;
+    acc.issued_scalar += s.issued_scalar;
+    acc.issued_vector += s.issued_vector;
+    acc.issued_branch += s.issued_branch;
+    acc.issued_ld += s.issued_ld;
+    acc.stall_fetch += s.stall_fetch;
+    acc.stall_raw += s.stall_raw;
+    acc.stall_queue_full += s.stall_queue_full;
+    acc.stall_ld_unit += s.stall_ld_unit;
+    acc.stall_coherence += s.stall_coherence;
+    for (a, b) in acc.cu_busy.iter_mut().zip(&s.cu_busy) {
+        *a += b;
+    }
+    for (a, b) in acc.cu_data_stall.iter_mut().zip(&s.cu_data_stall) {
+        *a += b;
+    }
+    for (a, b) in acc.cu_store_stall.iter_mut().zip(&s.cu_store_stall) {
+        *a += b;
+    }
+    for (a, b) in acc.cu_starved.iter_mut().zip(&s.cu_starved) {
+        *a += b;
+    }
+    for (a, b) in acc.unit_bytes.iter_mut().zip(&s.unit_bytes) {
+        *a += b;
+    }
+    for (a, b) in acc.unit_streams.iter_mut().zip(&s.unit_streams) {
+        *a += b;
+    }
+    acc.bytes_wbuf += s.bytes_wbuf;
+    acc.bytes_mbuf += s.bytes_mbuf;
+    acc.bytes_stored += s.bytes_stored;
+    acc.icache_loads += s.icache_loads;
+    acc.mac_ops += s.mac_ops;
+    acc.max_ops += s.max_ops;
+    acc.event_spans += s.event_spans;
+    acc.cycles_skipped += s.cycles_skipped;
+    acc.faults_dma_stall += s.faults_dma_stall;
+    acc.faults_cu_hang += s.faults_cu_hang;
+    acc.faults_dram_corrupt += s.faults_dram_corrupt;
+    acc.faults_aborted += s.faults_aborted;
+}
+
+/// Virtual-time pipeline schedule over per-stage/per-link constants.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelineTiming {
+    /// Completion time of each request at the final stage, cycles,
+    /// with all requests queued at cycle 0.
+    pub finish: Vec<u64>,
+    /// Completion of the last request (pipeline wall time).
+    pub makespan: u64,
+    /// What one machine running the stages back-to-back would take for
+    /// the same batch (sequential baseline).
+    pub sequential: u64,
+}
+
+impl PipelineTiming {
+    /// Steady-state speedup of the pipeline over sequential execution
+    /// for this batch.
+    pub fn speedup(&self) -> f64 {
+        if self.makespan == 0 {
+            return 1.0;
+        }
+        self.sequential as f64 / self.makespan as f64
+    }
+}
+
+/// The classic pipeline recurrence: stage `s` starts request `r` once
+/// both the request's activation has arrived and the stage finished
+/// request `r-1`; links delay arrival at the next stage but never
+/// occupy either machine. With `R` requests and balanced stages the
+/// makespan tends to `ΣT + ΣL + (R-1)·max(T)` — throughput is set by
+/// the bottleneck stage alone, which is what the partitioner minimizes.
+pub fn pipeline_timing(stage_cycles: &[u64], link_cycles: &[u64], requests: u64) -> PipelineTiming {
+    assert_eq!(
+        link_cycles.len() + 1,
+        stage_cycles.len().max(1),
+        "need one link per adjacent stage pair"
+    );
+    let per_req: u64 =
+        stage_cycles.iter().sum::<u64>() + link_cycles.iter().sum::<u64>();
+    let r = requests as usize;
+    // arrive[i]: when request i's input is available at the current stage.
+    let mut arrive = vec![0u64; r];
+    let mut finish = vec![0u64; r];
+    for (s, &t) in stage_cycles.iter().enumerate() {
+        let mut prev = 0u64;
+        for i in 0..r {
+            finish[i] = arrive[i].max(prev) + t;
+            prev = finish[i];
+        }
+        if s < link_cycles.len() {
+            for i in 0..r {
+                arrive[i] = finish[i] + link_cycles[s];
+            }
+        }
+    }
+    PipelineTiming {
+        makespan: finish.last().copied().unwrap_or(0),
+        finish,
+        sequential: per_req * requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::partition::partition_at;
+    use crate::compiler::{CompileOptions, Compiler};
+    use crate::engine::Engine;
+    use crate::model::graph::Graph;
+    use crate::model::layer::{LayerKind, Shape};
+    use crate::model::weights::synthetic_input;
+
+    fn two_conv_graph() -> Graph {
+        let mut g = Graph::new("pipe2", Shape::new(8, 12, 12));
+        g.push_seq(
+            LayerKind::Conv { in_ch: 8, out_ch: 12, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            "c1",
+        );
+        g.push_seq(
+            LayerKind::Conv { in_ch: 12, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: false },
+            "c2",
+        );
+        g
+    }
+
+    #[test]
+    fn two_stage_cluster_matches_single_machine_bit_for_bit() {
+        let cfg = SnowflakeConfig::default();
+        let opts = CompileOptions::default();
+        let g = two_conv_graph();
+        let seed = 11;
+        let plan = partition_at(&g, &cfg, &opts, &[1]).unwrap();
+        let mut cluster = Cluster::new(&plan, seed).unwrap();
+
+        let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).unwrap();
+        let mut engine = Engine::new(cfg.clone());
+        let h = engine.load(artifact.clone(), seed).unwrap();
+
+        for f in 0..3u64 {
+            let x = synthetic_input(&g, seed + f);
+            let got = cluster.infer(&x).unwrap();
+            let want = engine.infer(h, &x).unwrap();
+            assert_eq!(got.output.data, want.output.data, "frame {f} output diverged");
+            // The shipped boundary is the single machine's node-0 canvas.
+            let mono = engine.machine(h).unwrap();
+            let cv = artifact.compiled.plan.canvases[&0];
+            assert_eq!(got.boundaries[0].data, deploy::read_canvas(mono, &cv).data);
+            // Combined cycles = stages + modeled link, repeatably.
+            let seq: u64 = got.stage_stats.iter().map(|s| s.cycles).sum::<u64>()
+                + got.link_cycles.iter().sum::<u64>();
+            assert_eq!(got.stats.cycles, seq);
+            assert_eq!(got.stats.mac_ops, want.stats.mac_ops, "work must be conserved");
+        }
+    }
+
+    #[test]
+    fn one_stage_cluster_is_the_single_machine() {
+        let cfg = SnowflakeConfig::default();
+        let g = two_conv_graph();
+        let plan = partition_at(&g, &cfg, &CompileOptions::default(), &[]).unwrap();
+        let mut cluster = Cluster::new(&plan, 3).unwrap();
+        let mut engine = Engine::new(cfg.clone());
+        let h = engine
+            .load(Compiler::new(cfg.clone()).build(&g).unwrap(), 3)
+            .unwrap();
+        let x = synthetic_input(&g, 3);
+        let got = cluster.infer(&x).unwrap();
+        let want = engine.infer(h, &x).unwrap();
+        assert_eq!(got.output.data, want.output.data);
+        assert_eq!(got.stats.cycles, want.stats.cycles, "no links, no overhead");
+        assert!(got.boundaries.is_empty());
+    }
+
+    #[test]
+    fn pipeline_timing_overlaps_stages() {
+        // Two balanced stages of 100 cycles, 10-cycle link, 4 requests:
+        // stage 0 finishes at 100,200,300,400; arrivals 110,210,310,410;
+        // stage 1 finishes at 210,310,410,510.
+        let t = pipeline_timing(&[100, 100], &[10], 4);
+        assert_eq!(t.finish, vec![210, 310, 410, 510]);
+        assert_eq!(t.makespan, 510);
+        assert_eq!(t.sequential, 4 * 210);
+        assert!(t.speedup() > 1.6, "got {}", t.speedup());
+        // Degenerate single stage: sequential, no overlap.
+        let t1 = pipeline_timing(&[100], &[], 4);
+        assert_eq!(t1.makespan, 400);
+        assert_eq!(t1.speedup(), 1.0);
+        // Unbalanced: the bottleneck stage sets the interval.
+        let tb = pipeline_timing(&[30, 100], &[5], 3);
+        assert_eq!(tb.makespan, 30 + 5 + 3 * 100);
+    }
+}

@@ -42,8 +42,14 @@
 //!   fair queueing — every capacity number derives from the trace and
 //!   simulated cycles, bit-reproducible on any host. `repro loadtest`
 //!   is the CLI front end.
+//! * **Sharded execution** ([`cluster`]): a pipeline of machines, one
+//!   per [`crate::compiler::partition::Stage`], forwarding boundary
+//!   activations over modeled inter-machine links — bit-identical to a
+//!   single machine running the unsharded model. `repro serve
+//!   --shards N` is the CLI front end.
 
 pub mod cache;
+pub mod cluster;
 pub mod loadgen;
 pub mod serve;
 

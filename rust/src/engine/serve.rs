@@ -120,11 +120,13 @@
 //!   bit-identical to the sequential oracle no matter the policy.
 
 use super::cache::{ArtifactCache, CacheStats};
+use super::cluster::Cluster;
 use super::loadgen::Trace;
-use super::{Engine, EngineError, ModelHandle};
+use super::{Engine, EngineError, Inference, ModelHandle};
 use crate::arch::SnowflakeConfig;
 use crate::compiler::artifact::config_hash;
 use crate::compiler::cost::ServeModel;
+use crate::compiler::partition::ShardPlan;
 use crate::compiler::Artifact;
 use crate::model::weights::synthetic_input;
 use crate::sim::fault::{FaultPlan, FaultSpec, PlanHint};
@@ -342,6 +344,11 @@ pub enum ServeError {
         /// Predicted deadline overshoot at admission, in cycles.
         predicted_miss: u64,
     },
+    /// The requested feature combination is not implemented — rejected
+    /// up front, before any worker spins up or request is accepted
+    /// (e.g. fault injection or deadline budgets against a sharded
+    /// model, or loadtesting a sharded registry).
+    Unsupported(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -366,6 +373,7 @@ impl std::fmt::Display for ServeError {
                 "shed at admission: predicted completion misses the deadline by \
                  {predicted_miss} cycles"
             ),
+            ServeError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
     }
 }
@@ -900,8 +908,27 @@ impl ServeReport {
 
 struct RegisteredModel {
     name: String,
+    /// Unsharded: the whole compiled model. Sharded: stage 0's
+    /// artifact — its `input_canvas` is the model's input canvas, so
+    /// [`validate_input`] works unchanged.
     artifact: Arc<Artifact>,
     seed: u64,
+    /// `Some` when the model runs as a pipeline of shard machines
+    /// instead of a single engine-resident image.
+    shards: Option<Arc<ShardPlan>>,
+}
+
+impl RegisteredModel {
+    /// Predicted end-to-end cycles, used for admission budgets and WFQ
+    /// weights. For a sharded model this is the sequential sum over
+    /// stages plus link transfers — what one request costs the
+    /// pipeline end to end.
+    fn pred_cycles(&self) -> u64 {
+        match &self.shards {
+            Some(plan) => plan.predicted_cycles(),
+            None => self.artifact.predicted_cycles(),
+        }
+    }
 }
 
 /// Submission handle passed to the closure of [`Server::run`]. Lives
@@ -1088,23 +1115,54 @@ fn breaker_feedback(shared: &Shared, model: usize, ok: bool) {
     }
 }
 
+/// Load every registered model into a worker's engine: unsharded
+/// models through the shared cache (one [`ModelHandle`] each), sharded
+/// models as a private [`Cluster`] of per-stage machines. Exactly one
+/// of the two slots is `Some` for each model.
+fn load_models(
+    ctx: &WorkerCtx<'_>,
+    engine: &mut Engine,
+) -> Result<(Vec<Option<ModelHandle>>, Vec<Option<Cluster>>), String> {
+    let mut handles = Vec::with_capacity(ctx.models.len());
+    let mut clusters = Vec::with_capacity(ctx.models.len());
+    for m in ctx.models {
+        match &m.shards {
+            Some(plan) => {
+                let cl = Cluster::new(plan, m.seed).map_err(|e| format!("{}: {e}", m.name))?;
+                handles.push(None);
+                clusters.push(Some(cl));
+            }
+            None => {
+                let h = ctx
+                    .cache
+                    .load_into(engine, &m.artifact, m.seed)
+                    .map_err(|e| format!("{}: {e}", m.name))?;
+                handles.push(Some(h));
+                clusters.push(None);
+            }
+        }
+    }
+    Ok((handles, clusters))
+}
+
 /// Rebuild a dead worker's engine in place: fresh [`Engine`], every
 /// model re-loaded through the shared cache (always a hit — the image
 /// was deployed at startup — so a rebuild is a DRAM clone, not a
-/// recompile).
-fn rebuild_engine(ctx: &WorkerCtx<'_>, engine: &mut Engine, handles: &mut Vec<ModelHandle>) {
+/// recompile). Sharded models get fresh [`Cluster`] pipelines.
+fn rebuild_engine(
+    ctx: &WorkerCtx<'_>,
+    engine: &mut Engine,
+    handles: &mut Vec<Option<ModelHandle>>,
+    clusters: &mut Vec<Option<Cluster>>,
+) {
     *engine = Engine::new(ctx.cfg.clone());
-    handles.clear();
-    for m in ctx.models {
-        // Startup already proved these loads good; a failure here is
-        // unrecoverable for this worker, and the resulting thread
-        // panic is absorbed at join — queued leftovers fail typed.
-        let h = ctx
-            .cache
-            .load_into(engine, &m.artifact, m.seed)
-            .unwrap_or_else(|e| panic!("worker {}: rebuilding {}: {e}", ctx.worker, m.name));
-        handles.push(h);
-    }
+    // Startup already proved these loads good; a failure here is
+    // unrecoverable for this worker, and the resulting thread
+    // panic is absorbed at join — queued leftovers fail typed.
+    let (h, c) = load_models(ctx, engine)
+        .unwrap_or_else(|e| panic!("worker {}: rebuilding {e}", ctx.worker));
+    *handles = h;
+    *clusters = c;
 }
 
 /// Final delivery: record submit→resolve latency and hand the result
@@ -1124,7 +1182,8 @@ fn resolve(ms: &mut ModelServeStats, r: &QueuedRequest, result: Result<Response,
 fn serve_one(
     ctx: &WorkerCtx<'_>,
     engine: &mut Engine,
-    handles: &mut Vec<ModelHandle>,
+    handles: &mut Vec<Option<ModelHandle>>,
+    clusters: &mut Vec<Option<Cluster>>,
     stats: &mut [ModelServeStats],
     r: QueuedRequest,
     batch_size: usize,
@@ -1144,7 +1203,19 @@ fn serve_one(
         None
     } else {
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            engine.infer_with(handles[model], &r.input, &plan, pol.deadline[model])
+            match clusters[model].as_mut() {
+                // Sharded: the pipeline runs outside the engine's
+                // address space. Faults and deadlines are rejected for
+                // sharded models at run start, so the ignored plan and
+                // budget here are always empty.
+                Some(cl) => cl
+                    .infer(&r.input)
+                    .map(|ci| Inference { stats: ci.stats, output: ci.output }),
+                None => {
+                    let h = handles[model].expect("unsharded model has a handle");
+                    engine.infer_with(h, &r.input, &plan, pol.deadline[model])
+                }
+            }
         }))
         .ok()
     };
@@ -1204,7 +1275,7 @@ fn serve_one(
             // worker thread survives, then retry or fail the request
             // typed — never drop it.
             stats[model].worker_kills += 1;
-            rebuild_engine(ctx, engine, handles);
+            rebuild_engine(ctx, engine, handles, clusters);
             if r.attempt < pol.retries {
                 stats[model].retries += 1;
                 requeue(shared, r);
@@ -1228,7 +1299,8 @@ fn serve_one(
 fn worker_loop(
     ctx: &WorkerCtx<'_>,
     engine: &mut Engine,
-    handles: &mut Vec<ModelHandle>,
+    handles: &mut Vec<Option<ModelHandle>>,
+    clusters: &mut Vec<Option<Cluster>>,
 ) -> Vec<ModelServeStats> {
     let shared = ctx.shared;
     let pol = &shared.policy;
@@ -1283,7 +1355,7 @@ fn worker_loop(
             let wait = dequeued.duration_since(r.submitted);
             stats[model].queue_wait += wait;
             stats[model].wait_hist.record(wait.as_nanos() as u64);
-            serve_one(ctx, engine, handles, &mut stats, r, n, wait);
+            serve_one(ctx, engine, handles, clusters, &mut stats, r, n, wait);
         }
     }
 }
@@ -1363,8 +1435,39 @@ impl Server {
             name: artifact.graph.name.clone(),
             artifact: Arc::new(artifact),
             seed,
+            shards: None,
         });
         Ok(id)
+    }
+
+    /// Register a sharded model from its [`ShardPlan`]: every worker
+    /// serves it as a [`Cluster`] pipeline instead of loading one
+    /// engine-resident image. Stage 0's artifact stands in for the
+    /// whole model where only the input canvas matters (input
+    /// validation); admission budgets and WFQ weights use the plan's
+    /// end-to-end predicted cycles.
+    pub fn register_sharded(&mut self, plan: ShardPlan, seed: u64) -> Result<ModelId, ServeError> {
+        if plan.config_hash() != config_hash(&self.cfg) {
+            return Err(ServeError::Engine(EngineError::ConfigMismatch {
+                artifact: format!("{:016x}", plan.config_hash()),
+                engine: format!("{:016x}", config_hash(&self.cfg)),
+            }));
+        }
+        plan.validate().map_err(|e| ServeError::BadInput(e.to_string()))?;
+        let id = ModelId(self.models.len());
+        self.models.push(RegisteredModel {
+            name: plan.graph.name.clone(),
+            artifact: Arc::new(plan.stages[0].artifact.clone()),
+            seed,
+            shards: Some(Arc::new(plan)),
+        });
+        Ok(id)
+    }
+
+    /// The registered model's shard plan, if it was registered via
+    /// [`Server::register_sharded`].
+    pub fn shard_plan(&self, id: ModelId) -> Option<&Arc<ShardPlan>> {
+        self.models.get(id.0).and_then(|m| m.shards.as_ref())
     }
 
     /// The registered model's display name.
@@ -1391,7 +1494,7 @@ impl Server {
             n_units: self.cfg.n_load_units,
             n_cus: self.cfg.n_cus,
             mem_words: m.artifact.compiled.plan.mem_words,
-            expect_cycles: m.artifact.predicted_cycles().max(100_000),
+            expect_cycles: m.pred_cycles().max(100_000),
         })
     }
 
@@ -1399,7 +1502,7 @@ impl Server {
     /// (`None` = no deadline: slack 0 or no cost prediction).
     pub fn deadline_budget(&self, id: ModelId) -> Option<u64> {
         let m = self.models.get(id.0)?;
-        let p = m.artifact.predicted_cycles();
+        let p = m.pred_cycles();
         if self.resilience.deadline_slack > 0.0 && p > 0 {
             Some((p as f64 * self.resilience.deadline_slack).ceil() as u64)
         } else {
@@ -1477,6 +1580,21 @@ impl Server {
         }
         let scfg = self.serve_cfg;
         let res = &self.resilience;
+        if self.models.iter().any(|m| m.shards.is_some()) {
+            // Fault plans and deadline budgets act *inside* one engine;
+            // a shard pipeline spans several. Reject the combination up
+            // front rather than silently not injecting.
+            if res.faults.is_some() {
+                return Err(ServeError::Unsupported(
+                    "fault injection against a sharded model".to_string(),
+                ));
+            }
+            if res.deadline_slack > 0.0 {
+                return Err(ServeError::Unsupported(
+                    "deadline budgets against a sharded model".to_string(),
+                ));
+            }
+        }
         let cache_before = self.cache.stats();
         let n_models = self.models.len();
         let prefilled_overflow = prefill.len() > scfg.queue_depth;
@@ -1491,9 +1609,7 @@ impl Server {
             breaker_threshold: res.breaker_threshold,
             breaker_cooldown: res.breaker_cooldown,
             sched: self.sched.clone(),
-            pred: (0..n_models)
-                .map(|i| self.models[i].artifact.predicted_cycles().max(1))
-                .collect(),
+            pred: (0..n_models).map(|i| self.models[i].pred_cycles().max(1)).collect(),
         };
         let mut wfq_finish = vec![0.0f64; n_models];
         if policy.sched.wfq {
@@ -1541,20 +1657,17 @@ impl Server {
                         (&shared, &ready, &self.cache, &self.cfg, &self.models);
                     s.spawn(move || -> Result<Vec<ModelServeStats>, String> {
                         let mut engine = Engine::new(cfg.clone());
-                        let mut hs = Vec::with_capacity(models.len());
-                        for m in models {
-                            match cache.load_into(&mut engine, &m.artifact, m.seed) {
-                                Ok(h) => hs.push(h),
-                                Err(e) => {
-                                    let msg = format!("worker {w}: loading {}: {e}", m.name);
-                                    ready.fail(msg.clone());
-                                    return Err(msg);
-                                }
-                            }
-                        }
-                        ready.arrived();
                         let ctx = WorkerCtx { worker: w, shared, cache, cfg, models };
-                        Ok(worker_loop(&ctx, &mut engine, &mut hs))
+                        let (mut hs, mut cls) = match load_models(&ctx, &mut engine) {
+                            Ok(v) => v,
+                            Err(e) => {
+                                let msg = format!("worker {w}: loading {e}");
+                                ready.fail(msg.clone());
+                                return Err(msg);
+                            }
+                        };
+                        ready.arrived();
+                        Ok(worker_loop(&ctx, &mut engine, &mut hs, &mut cls))
                     })
                 })
                 .collect();
@@ -1901,6 +2014,15 @@ impl Server {
     /// by running one inference per model — simulator timing is
     /// input-independent, so a single sample is the exact service time.
     pub fn service_table(&self, service: ServiceModel) -> Result<Vec<u64>, ServeError> {
+        if let Some(m) = self.models.iter().find(|m| m.shards.is_some()) {
+            // The loadtest's virtual queue models one machine per
+            // worker; a shard pipeline's occupancy does not fit that
+            // shape yet. (`pipeline_timing` covers sharded capacity.)
+            return Err(ServeError::Unsupported(format!(
+                "loadtest against sharded model {}",
+                m.name
+            )));
+        }
         match service {
             ServiceModel::Predicted => Ok(self
                 .models

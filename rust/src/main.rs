@@ -4,7 +4,9 @@
 //!   build      compile a model into a versioned artifact file
 //!              (`--model X --out x.artifact.json`); the artifact carries the
 //!              program, memory plan, per-layer schedules, model description
-//!              and a hardware-config fingerprint
+//!              and a hardware-config fingerprint; `--shards N` partitions the
+//!              model into an N-stage pipeline instead, emitting one artifact
+//!              per stage plus a shard-plan manifest (x.shardplan.json)
 //!   run        compile + simulate, print stats; `--artifact path` skips the
 //!              compiler entirely and runs the prebuilt artifact through the
 //!              Engine (bit-identical cycles/DRAM to the direct path);
@@ -24,7 +26,9 @@
 //!              resilience knobs: `--faults kind:rate,..` (dma-stall, cu-hang,
 //!              dram-corrupt, abort, worker-kill), `--deadline-slack S`,
 //!              `--retries K`, `--breaker-threshold N`, `--breaker-cooldown C`,
-//!              `--fault-seed S`
+//!              `--fault-seed S`; `--shards N` serves each model as an N-stage
+//!              pipeline of machines with modeled inter-stage links (`--check`
+//!              then also asserts bit-identity against the unsharded model)
 //!   chaos      deterministic fault-sweep table: fault kind × rate × retry
 //!              policy → goodput, p99 latency, SLO violations; exits nonzero
 //!              if the survivability gate fails (worker-kill ≥5% at the
@@ -45,7 +49,9 @@
 //!   compile    compile a model, print summary / asm
 //!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
 //!   explain    print the chosen per-layer schedule (tuner debugging),
-//!              including the banked-rotation diagnosis per conv layer
+//!              including the banked-rotation diagnosis per conv layer;
+//!              `--shards N` appends the pipeline partition: cuts, per-stage
+//!              predicted cycles, boundary shapes and link costs
 //!   tune       schedule-quality table: heuristic vs cost-model vs measured
 //!              vs forced-Kloop, asserting the per-layer prediction bound
 //!   table1|table2|table3|fig4|accuracy   regenerate the paper results
@@ -54,8 +60,10 @@
 //!   info       hardware configuration
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
+use snowflake::compiler::partition::{self, ShardPlan};
+use snowflake::compiler::{deploy, Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
 use snowflake::coordinator::{driver, report, tune};
+use snowflake::engine::cluster::Cluster;
 use snowflake::engine::loadgen::{self, ArrivalKind, Popularity, Trace};
 use snowflake::engine::serve::{
     output_digest, AdmissionConfig, LoadtestConfig, LoadtestReport, LtOutcome, ModelId,
@@ -65,7 +73,7 @@ use snowflake::engine::{Engine, EngineError};
 use snowflake::sim::fault::{FaultPlan, FaultSpec};
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::asm::disasm_program;
-use snowflake::model::weights::synthetic_input;
+use snowflake::model::weights::{synthetic_input, Weights};
 use snowflake::model::{parser, zoo};
 use snowflake::util::cli::Args;
 use snowflake::util::json::Json;
@@ -162,6 +170,39 @@ fn main() {
             // versioned artifact file for `run --artifact` / `serve`.
             let g = load_model(&args);
             let opts = options(&args);
+            let shards = args.opt_usize("shards", 1);
+            if shards > 1 {
+                // Sharded build: partition into a pipeline and emit one
+                // artifact per stage plus the shard-plan manifest.
+                let t0 = std::time::Instant::now();
+                let plan = partition::partition(&g, &cfg, &opts, shards).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                });
+                let path = args
+                    .opt("out")
+                    .map(String::from)
+                    .unwrap_or_else(|| format!("{}.shardplan.json", g.name));
+                plan.save(&path).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                });
+                println!(
+                    "{}: shard plan {} in {:?} — {} stages, cuts {:?}, stage cycles {:?}, \
+                     link cycles {:?}, bottleneck {} cyc, sequential {} cyc, config {:016x}",
+                    g.name,
+                    path,
+                    t0.elapsed(),
+                    plan.n_stages(),
+                    plan.cuts(),
+                    plan.stage_cycles(),
+                    plan.link_cycles(),
+                    plan.bottleneck_cycles(),
+                    plan.predicted_cycles(),
+                    plan.config_hash()
+                );
+                return;
+            }
             let t0 = std::time::Instant::now();
             let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).unwrap_or_else(|e| {
                 eprintln!("{e}");
@@ -342,6 +383,34 @@ fn main() {
                     std::process::exit(1);
                 }
             }
+            let shards = args.opt_usize("shards", 1);
+            if shards > 1 {
+                // The partitioner's view: where it cuts the pipeline
+                // and what each stage and link is predicted to cost.
+                let plan = partition::partition(&g, &cfg, &opts, shards).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                });
+                let links = plan.link_cycles();
+                println!("\npartition into {} stages (cuts {:?}):", plan.n_stages(), plan.cuts());
+                for (i, st) in plan.stages.iter().enumerate() {
+                    let link = match (&st.boundary, links.get(i)) {
+                        (Some(b), Some(l)) => {
+                            format!("  -> {}x{}x{} boundary, link {} cyc", b.c, b.h, b.w, l)
+                        }
+                        _ => String::new(),
+                    };
+                    println!(
+                        "  stage {i}: nodes {:>2}..{:<2} {:>12} cycles{link}",
+                        st.start, st.end, st.predicted_cycles
+                    );
+                }
+                println!(
+                    "  bottleneck {} cyc, sequential {} cyc/request",
+                    plan.bottleneck_cycles(),
+                    plan.predicted_cycles()
+                );
+            }
         }
         Some("tune") => {
             // Schedule-quality table (heuristic vs cost-model vs
@@ -435,6 +504,7 @@ fn main() {
                  \x20  --tune heuristic|cost|measured  --top-k N (measured candidates/layer)\n\
                  \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
                  \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
+                 \x20  --shards N (build, serve, explain: N-stage pipeline partition)\n\
                  \x20  --requests N --models a,b --artifacts x,y --check (serve, loadtest)\n\
                  \x20  --workers N --max-batch B --queue-depth D --cache-cap N (serve)\n\
                  \x20  --wfq --weights name=w,.. --affinity (serve, loadtest)\n\
@@ -511,9 +581,14 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
         cache_cap: args.opt_usize("cache-cap", 0),
     };
     let resilience = resilience_from_args(args, seed);
+    let shards = args.opt_usize("shards", 1);
     let mut server = Server::new(cfg.clone(), serve_cfg);
     server.set_resilience(resilience.clone());
-    let (ids, graphs) = register_models(args, cfg, seed, &mut server);
+    let (ids, graphs) = if shards > 1 {
+        register_sharded_models(args, cfg, seed, shards, &mut server)
+    } else {
+        register_models(args, cfg, seed, &mut server)
+    };
     let sched = sched_from_args(args, &server, &ids);
     server.set_sched(sched.clone());
     let scfg = server.serve_config();
@@ -624,8 +699,206 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     println!("serve: {}", report.summary(cfg));
 
     if args.flag("check") {
-        check_against_oracle(&server, &ids, &graphs, &outcomes, &resilience, cfg, seed);
+        if shards > 1 {
+            check_sharded_against_oracles(&server, &ids, &graphs, &outcomes, cfg, seed, args);
+        } else {
+            check_against_oracle(&server, &ids, &graphs, &outcomes, &resilience, cfg, seed);
+        }
     }
+}
+
+/// Register sharded models for `repro serve --shards N`: `--models`
+/// partitions each model in-process; `--artifacts` loads prebuilt
+/// shard-plan manifests (`repro build --shards N`), whose stage count
+/// must match `--shards`. Prints one resident line per pipeline.
+fn register_sharded_models(
+    args: &Args,
+    cfg: &SnowflakeConfig,
+    seed: u64,
+    shards: usize,
+    server: &mut Server,
+) -> (Vec<ModelId>, Vec<snowflake::model::graph::Graph>) {
+    let mut plans: Vec<ShardPlan> = Vec::new();
+    if let Some(paths) = args.opt("artifacts") {
+        for p in paths.split(',').filter(|p| !p.is_empty()) {
+            let plan = ShardPlan::load(p, cfg).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            });
+            if plan.n_stages() != shards {
+                eprintln!(
+                    "{p}: manifest has {} stages but --shards {shards} was requested",
+                    plan.n_stages()
+                );
+                std::process::exit(2);
+            }
+            plans.push(plan);
+        }
+    } else {
+        let opts = options(args);
+        for name in args.opt_or("models", "alexnet,resnet18").split(',') {
+            let g = zoo::by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown model '{name}' (alexnet, resnet18, resnet50)");
+                std::process::exit(2);
+            });
+            plans.push(partition::partition(&g, cfg, &opts, shards).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }));
+        }
+    }
+    let mut ids = Vec::new();
+    let mut graphs = Vec::new();
+    for plan in plans {
+        println!(
+            "resident: {:<12} {} stages, cuts {:?}, stage cycles {:?}, link cycles {:?}",
+            plan.graph.name,
+            plan.n_stages(),
+            plan.cuts(),
+            plan.stage_cycles(),
+            plan.link_cycles()
+        );
+        graphs.push(plan.graph.clone());
+        ids.push(server.register_sharded(plan, seed).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }));
+    }
+    if ids.is_empty() {
+        eprintln!("no models to load");
+        std::process::exit(2);
+    }
+    (ids, graphs)
+}
+
+/// The two oracles behind `repro serve --shards N --check`.
+///
+/// 1. **Sequential cluster**: every request replayed, in submission
+///    order, through a fresh single-threaded [`Cluster`] built from the
+///    same shard plan — served cycles, DRAM bytes and output words must
+///    be bit-identical (worker scheduling and coalescing perturb
+///    nothing simulated).
+/// 2. **Single machine**: the *unsharded* model compiled and run on one
+///    machine — the final output words and every boundary activation
+///    (read from the cut node's canvas) must match the pipeline's
+///    bit for bit. Cycles are excluded: one machine crosses no links.
+///    With `--artifacts`, the unsharded oracle recompiles the
+///    manifest's embedded model under the current CLI compile options,
+///    so pass the same options the plan was built with.
+///
+/// Sharded runs reject fault injection and deadline budgets up front,
+/// so every outcome here is expected to be a success.
+fn check_sharded_against_oracles(
+    server: &Server,
+    ids: &[ModelId],
+    graphs: &[snowflake::model::graph::Graph],
+    outcomes: &[Result<Response, ServeError>],
+    cfg: &SnowflakeConfig,
+    seed: u64,
+    args: &Args,
+) {
+    let opts = options(args);
+    let mut clusters: Vec<Cluster> = Vec::new();
+    let mut machines = Vec::new();
+    let mut meta: Vec<Artifact> = Vec::new();
+    for id in ids {
+        let plan = server.shard_plan(*id).expect("sharded model");
+        clusters.push(Cluster::new(plan, seed).unwrap_or_else(|e| {
+            eprintln!("check: {e}");
+            std::process::exit(1);
+        }));
+        let full = Compiler::new(cfg.clone())
+            .options(opts.clone())
+            .build(&plan.graph)
+            .unwrap_or_else(|e| {
+                eprintln!("check: {e}");
+                std::process::exit(1);
+            });
+        let weights = Weights::init(&plan.graph, seed);
+        machines.push(snowflake::engine::deployed_machine(&full, &weights));
+        // Keep the artifact alongside its machine for canvas lookups.
+        meta.push(full);
+    }
+    let mut bad = 0usize;
+    let mut boundaries_checked = 0usize;
+    let mut fresh = vec![true; ids.len()];
+    for (r, outcome) in outcomes.iter().enumerate() {
+        let m = r % ids.len();
+        let resp = match outcome {
+            Ok(resp) => resp,
+            Err(e) => {
+                eprintln!("CHECK FAILED: request {r} failed [{e}] with no faults configured");
+                bad += 1;
+                continue;
+            }
+        };
+        let x = synthetic_input(&graphs[m], seed + r as u64);
+        // Oracle 1: the sequential cluster.
+        let ci = clusters[m].infer(&x).unwrap_or_else(|e| {
+            eprintln!("check: {e}");
+            std::process::exit(1);
+        });
+        if ci.stats.cycles != resp.stats.cycles
+            || ci.stats.bytes_moved() != resp.stats.bytes_moved()
+            || resp.output.count_diff(&ci.output) != 0
+        {
+            eprintln!(
+                "CHECK FAILED: request {r} ({}) served {} cycles / {} bytes vs sequential \
+                 cluster {} / {}",
+                graphs[m].name,
+                resp.stats.cycles,
+                resp.stats.bytes_moved(),
+                ci.stats.cycles,
+                ci.stats.bytes_moved()
+            );
+            bad += 1;
+        }
+        // Oracle 2: the unsharded model on one machine.
+        let machine = &mut machines[m];
+        let full = &meta[m];
+        if !fresh[m] {
+            machine.reset_for_inference();
+        }
+        fresh[m] = false;
+        let lplan = &full.compiled.plan;
+        deploy::write_canvas(machine, &lplan.input_canvas, &x, lplan.fmt);
+        machine.run().unwrap_or_else(|e| {
+            eprintln!("check: single-machine oracle: {e}");
+            std::process::exit(1);
+        });
+        let out_node = full.output_node.expect("unsharded model has an output");
+        let want = deploy::read_canvas(machine, &lplan.canvases[&out_node]);
+        if resp.output.count_diff(&want) != 0 {
+            eprintln!(
+                "CHECK FAILED: request {r} ({}) pipeline output differs from the unsharded \
+                 single-machine model",
+                graphs[m].name
+            );
+            bad += 1;
+        }
+        let plan = server.shard_plan(ids[m]).expect("sharded model");
+        for (k, cut) in plan.cuts().iter().enumerate() {
+            let b = deploy::read_canvas(machine, &lplan.canvases[&(cut - 1)]);
+            boundaries_checked += 1;
+            if ci.boundaries[k].count_diff(&b) != 0 {
+                eprintln!(
+                    "CHECK FAILED: request {r} ({}) boundary activation at node {} differs \
+                     from the unsharded model",
+                    graphs[m].name,
+                    cut - 1
+                );
+                bad += 1;
+            }
+        }
+    }
+    if bad > 0 {
+        std::process::exit(1);
+    }
+    println!(
+        "check: all {} requests bit-identical to the sequential cluster AND the unsharded \
+         single-machine model ({boundaries_checked} boundary activations compared)",
+        outcomes.len()
+    );
 }
 
 /// Register the requested models (`--models` compiled in-process, or

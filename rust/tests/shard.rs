@@ -1,0 +1,123 @@
+//! Integration tests for multi-machine sharding (ISSUE 8): the
+//! pipeline partitioner's coverage invariants and the cluster's
+//! bit-identity to a single machine running the unsharded model.
+//!
+//! The full-model simulations here follow the `tests/models.rs`
+//! precedent: AlexNet and ResNet18 end-to-end sims are in budget for a
+//! plain `cargo test`. One single-machine run per model is reused
+//! across every shard count.
+
+use snowflake::arch::SnowflakeConfig;
+use snowflake::compiler::{deploy, partition, CompileOptions, Compiler};
+use snowflake::engine::cluster::Cluster;
+use snowflake::engine::deployed_machine;
+use snowflake::model::weights::{synthetic_input, Weights};
+use snowflake::model::zoo;
+
+const SEED: u64 = 42;
+
+fn opts() -> CompileOptions {
+    CompileOptions { skip_fc: true, ..Default::default() }
+}
+
+/// Property (ISSUE 8 satellite): every partition of AlexNet/ResNet18
+/// into 1..=4 stages covers all graph nodes exactly once, in order,
+/// with contiguous non-empty stages.
+#[test]
+fn partitions_cover_all_nodes_exactly_once() {
+    let cfg = SnowflakeConfig::default();
+    let opts = opts();
+    for name in ["alexnet", "resnet18"] {
+        let g = zoo::by_name(name).expect("zoo model");
+        for n in 1..=4usize {
+            let plan = partition::partition(&g, &cfg, &opts, n)
+                .unwrap_or_else(|e| panic!("{name} into {n}: {e}"));
+            assert_eq!(plan.n_stages(), n, "{name}: asked for {n} stages");
+            let mut covered = 0usize;
+            for st in &plan.stages {
+                assert!(st.start < st.end, "{name}/{n}: empty stage");
+                assert_eq!(st.start, covered, "{name}/{n}: gap or overlap at node {covered}");
+                covered = st.end;
+            }
+            assert_eq!(covered, g.nodes.len(), "{name}/{n}: nodes left uncovered");
+            plan.validate().unwrap_or_else(|e| panic!("{name}/{n}: {e}"));
+        }
+    }
+}
+
+/// A 1-stage partition is the degenerate case and must be bit-identical
+/// to the ordinary unsharded build: same artifact fingerprint, no cuts,
+/// no boundaries.
+#[test]
+fn one_stage_partition_is_the_unsharded_artifact() {
+    let cfg = SnowflakeConfig::default();
+    let opts = opts();
+    for name in ["alexnet", "resnet18"] {
+        let g = zoo::by_name(name).expect("zoo model");
+        let plan = partition::partition(&g, &cfg, &opts, 1).expect("partition");
+        let unsharded =
+            Compiler::new(cfg.clone()).options(opts.clone()).build(&g).expect("build");
+        assert!(plan.cuts().is_empty());
+        assert!(plan.stages[0].boundary.is_none());
+        assert_eq!(
+            plan.stages[0].artifact.fingerprint(),
+            unsharded.fingerprint(),
+            "{name}: 1-stage artifact diverged from the unsharded build"
+        );
+    }
+}
+
+/// The acceptance bar of ISSUE 8: sharded output AND per-stage boundary
+/// activations bit-identical to the single-machine run, for AlexNet and
+/// ResNet18 at 2 and 3 shards. Also pins the combined-stats contract:
+/// the cluster's end-to-end cycle count is the sum of per-stage sim
+/// cycles plus modeled link cycles.
+#[test]
+fn sharded_inference_is_bit_identical_to_single_machine() {
+    let cfg = SnowflakeConfig::default();
+    let opts = opts();
+    for name in ["alexnet", "resnet18"] {
+        let g = zoo::by_name(name).expect("zoo model");
+        let x = synthetic_input(&g, SEED);
+
+        // One unsharded single-machine run, reused for every shard
+        // count: final output plus every interior canvas.
+        let full = Compiler::new(cfg.clone()).options(opts.clone()).build(&g).expect("build");
+        let weights = Weights::init(&g, SEED);
+        let mut machine = deployed_machine(&full, &weights);
+        let lplan = &full.compiled.plan;
+        deploy::write_canvas(&mut machine, &lplan.input_canvas, &x, lplan.fmt);
+        machine.run().unwrap_or_else(|e| panic!("{name}: single machine: {e}"));
+        let out_node = full.output_node.expect("unsharded output");
+        let want = deploy::read_canvas(&machine, &lplan.canvases[&out_node]);
+
+        for n in [2usize, 3] {
+            let plan = partition::partition(&g, &cfg, &opts, n)
+                .unwrap_or_else(|e| panic!("{name} into {n}: {e}"));
+            let mut cl = Cluster::new(&plan, SEED).expect("cluster");
+            let ci = cl.infer(&x).unwrap_or_else(|e| panic!("{name}/{n}: {e}"));
+            assert_eq!(
+                ci.output.count_diff(&want),
+                0,
+                "{name}/{n}: pipeline output diverged from the single machine"
+            );
+            for (k, cut) in plan.cuts().iter().enumerate() {
+                let b = deploy::read_canvas(&machine, &lplan.canvases[&(cut - 1)]);
+                assert_eq!(
+                    ci.boundaries[k].count_diff(&b),
+                    0,
+                    "{name}/{n}: boundary at node {} diverged from the single machine",
+                    cut - 1
+                );
+            }
+            let total: u64 = ci.stage_stats.iter().map(|s| s.cycles).sum::<u64>()
+                + ci.link_cycles.iter().sum::<u64>();
+            assert_eq!(
+                ci.stats.cycles, total,
+                "{name}/{n}: combined cycles are not stage sims plus links"
+            );
+            assert_eq!(ci.boundaries.len(), n - 1);
+            assert_eq!(ci.link_cycles.len(), n - 1);
+        }
+    }
+}
