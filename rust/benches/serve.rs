@@ -26,7 +26,7 @@
 use std::time::Instant;
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{partition, Artifact, CompileOptions, Compiler};
+use snowflake::compiler::{partition, Artifact, ArtifactFormat, CompileOptions, Compiler};
 use snowflake::engine::cluster::{self, Cluster};
 use snowflake::engine::serve::{
     AdmissionConfig, ResilienceConfig, SchedConfig, ServeConfig, Server,
@@ -180,4 +180,72 @@ fn main() {
         }
     }
     println!("serve bench OK: sharded pipelines bit-identical, 2-shard scaling gate passed");
+
+    // ---- cold start (ISSUE 9) ----------------------------------------
+    // Cold path to first response, per encoding: artifact bytes on
+    // disk, load time (sniff + decode + every integrity check), deploy
+    // time (weights init + DRAM image build), and the first response's
+    // simulated cycles. Two gates: the binary envelope is at least 5x
+    // smaller than the JSON rendering of the same artifact, and the
+    // binary-loaded twin's first response is cycle-identical to the
+    // JSON-loaded one — the envelope may only ever change host-side
+    // numbers, never simulated ones.
+    println!("cold start: artifact load -> deploy -> first response, json vs bin");
+    println!(
+        "  {:<10} {:>4} {:>10} {:>10} {:>10} {:>14}",
+        "model", "fmt", "bytes", "load us", "deploy us", "first cycles"
+    );
+    for a in &artifacts {
+        let name = a.graph.name.clone();
+        let mut first_cycles: Option<u64> = None;
+        let mut sizes = [0usize; 2];
+        for (fi, fmt) in [ArtifactFormat::Json, ArtifactFormat::Bin].into_iter().enumerate() {
+            let path = std::env::temp_dir()
+                .join(format!(
+                    "snowflake_bench_cold_{name}_{}.artifact.{}",
+                    std::process::id(),
+                    fmt.extension()
+                ))
+                .to_string_lossy()
+                .into_owned();
+            a.save_format(&path, fmt).expect("save");
+            let bytes = std::fs::metadata(&path).expect("metadata").len() as usize;
+            sizes[fi] = bytes;
+            let t0 = Instant::now();
+            let loaded = Artifact::load(&path, &cfg).expect("load");
+            let load_us = t0.elapsed().as_micros();
+            let _ = std::fs::remove_file(&path);
+            let mut eng = Engine::new(cfg.clone());
+            let t1 = Instant::now();
+            let h = eng.load(loaded, seed).expect("deploy");
+            let deploy_us = t1.elapsed().as_micros();
+            let x = synthetic_input(&a.graph, seed);
+            let cycles = eng.infer(h, &x).expect("infer").stats.cycles;
+            println!(
+                "  {:<10} {:>4} {:>10} {:>10} {:>10} {:>14}",
+                name,
+                fmt.extension(),
+                bytes,
+                load_us,
+                deploy_us,
+                cycles
+            );
+            match first_cycles {
+                None => first_cycles = Some(cycles),
+                Some(want) => assert_eq!(
+                    cycles, want,
+                    "{name}: binary-loaded first response drifted from the JSON-loaded twin"
+                ),
+            }
+        }
+        let (json_b, bin_b) = (sizes[0], sizes[1]);
+        let ratio = json_b as f64 / bin_b.max(1) as f64;
+        assert!(
+            bin_b * 5 <= json_b,
+            "{name}: envelope is only {ratio:.2}x smaller than JSON \
+             ({bin_b} vs {json_b} bytes; gate: >= 5x)"
+        );
+        println!("  cold-start gate OK: {name} envelope {ratio:.1}x smaller, cycle-identical");
+    }
+    println!("serve bench OK: cold-start gates passed (size >= 5x, no cycle drift)");
 }

@@ -68,6 +68,52 @@ pub const FORMAT_VERSION: u64 = 3;
 /// Magic tag identifying an artifact file.
 pub const FORMAT_MAGIC: &str = "snowflake-artifact";
 
+/// Magic prefix of the binary envelope. The first byte can never be
+/// `{` (or leading whitespace), so [`Artifact::from_bytes`] can sniff
+/// the encoding from content alone — extensions are advisory.
+pub const BIN_MAGIC: [u8; 8] = *b"SNFLKART";
+
+/// On-disk encoding of an artifact. Both carry the same
+/// `FORMAT_VERSION` / config-fingerprint / checksum discipline and load
+/// through the same sniffing [`Artifact::load`]; `Bin` is the compact
+/// length-prefixed envelope (see `to_bin`), `Json` the self-describing
+/// pretty form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactFormat {
+    Json,
+    Bin,
+}
+
+impl ArtifactFormat {
+    /// File extension conventionally used for this encoding
+    /// (`.artifact.json` / `.artifact.bin`). Loaders never trust it;
+    /// the sniffer decides from content.
+    pub fn extension(self) -> &'static str {
+        match self {
+            ArtifactFormat::Json => "json",
+            ArtifactFormat::Bin => "bin",
+        }
+    }
+
+    /// Parse a CLI/manifest token.
+    pub fn parse(s: &str) -> Option<ArtifactFormat> {
+        match s {
+            "json" => Some(ArtifactFormat::Json),
+            "bin" | "binary" => Some(ArtifactFormat::Bin),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ArtifactFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ArtifactFormat::Json => "json",
+            ArtifactFormat::Bin => "bin",
+        })
+    }
+}
+
 /// Why an artifact could not be saved or loaded.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ArtifactError {
@@ -377,13 +423,22 @@ impl Artifact {
 
     /// Write the artifact to `path` (pretty JSON).
     pub fn save(&self, path: &str) -> Result<(), ArtifactError> {
-        std::fs::write(path, self.to_json().pretty() + "\n")
-            .map_err(|e| ArtifactError::Io(format!("{path}: {e}")))
+        self.save_format(path, ArtifactFormat::Json)
+    }
+
+    /// Write the artifact to `path` in the given encoding.
+    pub fn save_format(&self, path: &str, fmt: ArtifactFormat) -> Result<(), ArtifactError> {
+        let bytes = match fmt {
+            ArtifactFormat::Json => (self.to_json().pretty() + "\n").into_bytes(),
+            ArtifactFormat::Bin => self.to_bin(),
+        };
+        std::fs::write(path, bytes).map_err(|e| ArtifactError::Io(format!("{path}: {e}")))
     }
 
     /// Read an artifact from `path` and validate it against the host
     /// configuration. Version, config-fingerprint or integrity failures
-    /// are typed errors, never silent.
+    /// are typed errors, never silent. Accepts both encodings — the
+    /// payload is sniffed, never the extension.
     pub fn load(path: &str, host: &SnowflakeConfig) -> Result<Artifact, ArtifactError> {
         let a = Self::load_unchecked(path)?;
         a.validate_config(host)?;
@@ -393,10 +448,644 @@ impl Artifact {
     /// Read an artifact without binding it to a host config (inspection
     /// / cross-config tooling).
     pub fn load_unchecked(path: &str) -> Result<Artifact, ArtifactError> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| ArtifactError::Io(format!("{path}: {e}")))?;
-        let root = Json::parse(&text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let bytes =
+            std::fs::read(path).map_err(|e| ArtifactError::Io(format!("{path}: {e}")))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Decode an artifact from raw bytes, sniffing the encoding:
+    /// leading whitespace is skipped, `{` selects the JSON codec, the
+    /// 8-byte [`BIN_MAGIC`] selects the binary envelope, anything else
+    /// is [`ArtifactError::NotAnArtifact`]. There is no fallback — a
+    /// binary payload that fails to decode is never retried as JSON.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Artifact, ArtifactError> {
+        let mut i = 0;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let body = &bytes[i..];
+        match body.first() {
+            None => Err(corrupt("empty file")),
+            Some(b'{') => {
+                let text = std::str::from_utf8(body)
+                    .map_err(|e| ArtifactError::Parse(format!("not utf-8: {e}")))?;
+                let root =
+                    Json::parse(text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+                Self::from_json(&root)
+            }
+            Some(_) if body.len() >= BIN_MAGIC.len() && body[..BIN_MAGIC.len()] == BIN_MAGIC => {
+                Self::from_bin(body)
+            }
+            Some(_) => Err(ArtifactError::NotAnArtifact),
+        }
+    }
+
+    /// Serialize to the binary envelope.
+    ///
+    /// Layout (all integers little-endian u64 unless noted):
+    ///
+    /// ```text
+    /// [ 0.. 8)  magic  "SNFLKART"
+    /// [ 8..16)  FORMAT_VERSION
+    /// [16..24)  config fingerprint (config_hash of the embedded config)
+    /// [24..32)  section count (== SECTION_TAGS.len())
+    /// then per section, a 24-byte table entry:
+    ///             tag · payload length · FNV-1a checksum of the payload
+    /// then the payloads, concatenated in table order, nothing after.
+    /// ```
+    ///
+    /// Sections (tags ascending, each exactly once): CONFIG, MODEL,
+    /// META, PROGRAM, COMMENTS, PLAN, SCHEDULES, EXTRAS. Each payload
+    /// is [`lz`]-compressed; checksums and table lengths cover the
+    /// compressed bytes, so tampering is caught before any
+    /// decompression runs. Under the compression, the PROGRAM payload
+    /// is raw — stored words-checksum, word count, then the encoded
+    /// u32 instruction words — so the dominant section starts at
+    /// 4 bytes/instruction instead of a decimal rendering and the
+    /// repetitive per-tile emission collapses further under LZ. Every
+    /// other payload is the corresponding `to_json` subtree under the
+    /// `bvalue` codec (string-table + varint binary JSON).
+    pub fn to_bin(&self) -> Vec<u8> {
+        let root = self.to_json();
+        let words = program_words(&self.compiled.program);
+        let mut program = Vec::with_capacity(16 + words.len() * 4);
+        program.extend_from_slice(&words_checksum(&words).to_le_bytes());
+        program.extend_from_slice(&(words.len() as u64).to_le_bytes());
+        for w in &words {
+            program.extend_from_slice(&w.to_le_bytes());
+        }
+        let extras = Json::obj(vec![
+            ("code_len", root.get("code_len").clone()),
+            ("layer_ranges", root.get("layer_ranges").clone()),
+            ("output_node", root.get("output_node").clone()),
+        ]);
+        let payloads: Vec<(u64, Vec<u8>)> = vec![
+            (SEC_CONFIG, bvalue::encode(root.get("config"))),
+            (SEC_MODEL, bvalue::encode(root.get("model"))),
+            (SEC_META, bvalue::encode(root.get("meta"))),
+            (SEC_PROGRAM, program),
+            (SEC_COMMENTS, bvalue::encode(root.get("program").get("comments"))),
+            (SEC_PLAN, bvalue::encode(root.get("plan"))),
+            (SEC_SCHEDULES, bvalue::encode(root.get("schedules"))),
+            (SEC_EXTRAS, bvalue::encode(&extras)),
+        ]
+        .into_iter()
+        .map(|(tag, p)| (tag, lz::compress(&p)))
+        .collect();
+        let total: usize = payloads.iter().map(|(_, p)| p.len()).sum();
+        let mut out = Vec::with_capacity(32 + payloads.len() * 24 + total);
+        out.extend_from_slice(&BIN_MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.config_hash().to_le_bytes());
+        out.extend_from_slice(&(payloads.len() as u64).to_le_bytes());
+        for (tag, p) in &payloads {
+            out.extend_from_slice(&tag.to_le_bytes());
+            out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fnv1a(p).to_le_bytes());
+        }
+        for (_, p) in &payloads {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Decode the binary envelope. The header is validated first
+    /// (magic, version — so a v1/v2 envelope is a typed
+    /// [`ArtifactError::FormatVersion`] before any payload is touched),
+    /// then the section table (tags ascending and complete, lengths
+    /// summing to exactly the remaining bytes, per-section checksums),
+    /// and finally the payloads are decompressed ([`lz`]), decoded and
+    /// re-assembled into the JSON tree so [`Artifact::from_json`]
+    /// reruns every semantic check
+    /// the JSON path has: config-hash equality, program words checksum,
+    /// per-word decode/re-encode, plan bounds. Binary-loaded artifacts
+    /// are bit-identical to JSON-loaded ones by construction.
+    pub fn from_bin(bytes: &[u8]) -> Result<Artifact, ArtifactError> {
+        let header = |at: usize| -> Result<u64, ArtifactError> {
+            let end = at + 8;
+            if end > bytes.len() {
+                return Err(corrupt("truncated envelope header"));
+            }
+            Ok(u64::from_le_bytes(bytes[at..end].try_into().unwrap()))
+        };
+        if bytes.len() < 8 || bytes[..8] != BIN_MAGIC {
+            return Err(ArtifactError::NotAnArtifact);
+        }
+        let version = header(8)?;
+        if version != FORMAT_VERSION {
+            return Err(ArtifactError::FormatVersion { found: version, expected: FORMAT_VERSION });
+        }
+        let cfg_hash = header(16)?;
+        let nsec = header(24)?;
+        if nsec != SECTION_TAGS.len() as u64 {
+            return Err(corrupt(&format!(
+                "envelope has {nsec} sections, expected {}",
+                SECTION_TAGS.len()
+            )));
+        }
+        let table_end = 32 + SECTION_TAGS.len() * 24;
+        if bytes.len() < table_end {
+            return Err(corrupt("truncated section table"));
+        }
+        let mut sections: Vec<(u64, usize, u64)> = Vec::with_capacity(SECTION_TAGS.len());
+        for (i, &want) in SECTION_TAGS.iter().enumerate() {
+            let at = 32 + i * 24;
+            let tag = header(at)?;
+            if tag != want {
+                return Err(corrupt(&format!(
+                    "section table entry {i} has tag {tag}, expected {want}"
+                )));
+            }
+            let len = header(at + 8)?;
+            let len = usize::try_from(len)
+                .ok()
+                .filter(|l| *l <= bytes.len())
+                .ok_or_else(|| corrupt("section length exceeds file size"))?;
+            sections.push((tag, len, header(at + 16)?));
+        }
+        let total: usize = sections.iter().map(|&(_, l, _)| l).sum();
+        if table_end + total != bytes.len() {
+            return Err(corrupt(&format!(
+                "payload bytes {} do not match section table total {total}",
+                bytes.len() - table_end
+            )));
+        }
+        let mut at = table_end;
+        let mut payload: std::collections::HashMap<u64, Vec<u8>> = std::collections::HashMap::new();
+        for &(tag, len, sum) in &sections {
+            let p = &bytes[at..at + len];
+            at += len;
+            if fnv1a(p) != sum {
+                return Err(corrupt(&format!("section {tag} checksum mismatch")));
+            }
+            payload.insert(tag, lz::decompress(p, section_name(tag))?);
+        }
+
+        // PROGRAM is raw (under the LZ layer): stored checksum ·
+        // count · u32 words.
+        let praw = &payload[&SEC_PROGRAM];
+        if praw.len() < 16 {
+            return Err(corrupt("program section truncated"));
+        }
+        let stored_sum = u64::from_le_bytes(praw[..8].try_into().unwrap());
+        let count = u64::from_le_bytes(praw[8..16].try_into().unwrap());
+        let count = usize::try_from(count)
+            .ok()
+            .filter(|c| 16 + c * 4 == praw.len())
+            .ok_or_else(|| corrupt("program word count does not match section length"))?;
+        let words_json: Vec<Json> = (0..count)
+            .map(|i| {
+                let b = 16 + i * 4;
+                Json::num(u32::from_le_bytes(praw[b..b + 4].try_into().unwrap()) as f64)
+            })
+            .collect();
+
+        let decode_sec = |tag: u64, what: &str| bvalue::decode(&payload[&tag], what);
+        let program = Json::obj(vec![
+            ("checksum", Json::str(&hex(stored_sum))),
+            ("words", Json::Arr(words_json)),
+            ("comments", decode_sec(SEC_COMMENTS, "comments")?),
+        ]);
+        let extras = decode_sec(SEC_EXTRAS, "extras")?;
+        let root = Json::obj(vec![
+            ("format", Json::str(FORMAT_MAGIC)),
+            ("version", Json::num(version as f64)),
+            ("config_hash", Json::str(&hex(cfg_hash))),
+            ("config", decode_sec(SEC_CONFIG, "config")?),
+            ("model", decode_sec(SEC_MODEL, "model")?),
+            ("meta", decode_sec(SEC_META, "meta")?),
+            ("schedules", decode_sec(SEC_SCHEDULES, "schedules")?),
+            ("output_node", extras.get("output_node").clone()),
+            ("code_len", extras.get("code_len").clone()),
+            ("layer_ranges", extras.get("layer_ranges").clone()),
+            ("program", program),
+            ("plan", decode_sec(SEC_PLAN, "plan")?),
+        ]);
         Self::from_json(&root)
+    }
+}
+
+// Envelope section tags, ascending; the table must list each exactly
+// once in this order.
+const SEC_CONFIG: u64 = 1;
+const SEC_MODEL: u64 = 2;
+const SEC_META: u64 = 3;
+const SEC_PROGRAM: u64 = 4;
+const SEC_COMMENTS: u64 = 5;
+const SEC_PLAN: u64 = 6;
+const SEC_SCHEDULES: u64 = 7;
+const SEC_EXTRAS: u64 = 8;
+const SECTION_TAGS: [u64; 8] = [
+    SEC_CONFIG,
+    SEC_MODEL,
+    SEC_META,
+    SEC_PROGRAM,
+    SEC_COMMENTS,
+    SEC_PLAN,
+    SEC_SCHEDULES,
+    SEC_EXTRAS,
+];
+
+/// Human name for a section tag (error messages).
+fn section_name(tag: u64) -> &'static str {
+    match tag {
+        SEC_CONFIG => "config",
+        SEC_MODEL => "model",
+        SEC_META => "meta",
+        SEC_PROGRAM => "program",
+        SEC_COMMENTS => "comments",
+        SEC_PLAN => "plan",
+        SEC_SCHEDULES => "schedules",
+        SEC_EXTRAS => "extras",
+        _ => "unknown",
+    }
+}
+
+/// Compact binary rendering of a `Json` tree: a deduplicating string
+/// table (object keys amortize to 1–2 varint bytes) followed by one
+/// tagged value. Lossless — integral numbers ride a zigzag varint,
+/// everything else keeps its exact f64 bits — so decode∘encode is the
+/// identity on the `util/json.rs` value model, which is what makes
+/// binary envelopes bit-identical to JSON ones through `from_json`.
+/// Decoding is hardened: every count is bounded by the bytes that
+/// remain, recursion is depth-limited, and any violation is a typed
+/// `Corrupt` — never a panic or an allocation bomb.
+mod bvalue {
+    use super::{corrupt, ArtifactError};
+    use crate::util::json::Json;
+    use std::collections::{BTreeMap, HashMap};
+
+    const T_NULL: u8 = 0x00;
+    const T_FALSE: u8 = 0x01;
+    const T_TRUE: u8 = 0x02;
+    const T_INT: u8 = 0x03;
+    const T_F64: u8 = 0x04;
+    const T_STR: u8 = 0x05;
+    const T_ARR: u8 = 0x06;
+    const T_OBJ: u8 = 0x07;
+
+    /// JSON numbers are f64; 2^53 bounds the exactly-representable
+    /// integers, so only that range takes the varint path.
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+
+    const MAX_DEPTH: usize = 64;
+
+    pub fn encode(v: &Json) -> Vec<u8> {
+        let mut strings: Vec<&str> = Vec::new();
+        let mut index: HashMap<&str, u64> = HashMap::new();
+        collect(v, &mut strings, &mut index);
+        let mut out = Vec::new();
+        wvarint(&mut out, strings.len() as u64);
+        for s in &strings {
+            wvarint(&mut out, s.len() as u64);
+            out.extend_from_slice(s.as_bytes());
+        }
+        enc_value(v, &index, &mut out);
+        out
+    }
+
+    fn collect<'a>(v: &'a Json, strings: &mut Vec<&'a str>, index: &mut HashMap<&'a str, u64>) {
+        let mut intern = |s: &'a str, strings: &mut Vec<&'a str>, index: &mut HashMap<&'a str, u64>| {
+            if !index.contains_key(s) {
+                index.insert(s, strings.len() as u64);
+                strings.push(s);
+            }
+        };
+        match v {
+            Json::Str(s) => intern(s.as_str(), strings, index),
+            Json::Arr(a) => {
+                for e in a {
+                    collect(e, strings, index);
+                }
+            }
+            Json::Obj(m) => {
+                for (k, e) in m {
+                    intern(k.as_str(), strings, index);
+                    collect(e, strings, index);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn enc_value(v: &Json, index: &HashMap<&str, u64>, out: &mut Vec<u8>) {
+        match v {
+            Json::Null => out.push(T_NULL),
+            Json::Bool(false) => out.push(T_FALSE),
+            Json::Bool(true) => out.push(T_TRUE),
+            Json::Num(n) => {
+                let integral = n.fract() == 0.0
+                    && n.abs() <= MAX_EXACT
+                    && !(*n == 0.0 && n.is_sign_negative());
+                if integral {
+                    out.push(T_INT);
+                    wvarint(out, zigzag(*n as i64));
+                } else {
+                    out.push(T_F64);
+                    out.extend_from_slice(&n.to_bits().to_le_bytes());
+                }
+            }
+            Json::Str(s) => {
+                out.push(T_STR);
+                wvarint(out, index[s.as_str()]);
+            }
+            Json::Arr(a) => {
+                out.push(T_ARR);
+                wvarint(out, a.len() as u64);
+                for e in a {
+                    enc_value(e, index, out);
+                }
+            }
+            Json::Obj(m) => {
+                out.push(T_OBJ);
+                wvarint(out, m.len() as u64);
+                for (k, e) in m {
+                    wvarint(out, index[k.as_str()]);
+                    enc_value(e, index, out);
+                }
+            }
+        }
+    }
+
+    pub fn decode(bytes: &[u8], what: &str) -> Result<Json, ArtifactError> {
+        let mut r = Reader { b: bytes, pos: 0, what };
+        let n = r.varint()? as usize;
+        // Each table entry costs at least one length byte, so a count
+        // beyond the remaining bytes is corrupt, not an allocation.
+        if n > r.remaining() {
+            return Err(r.err("string table count exceeds payload"));
+        }
+        let mut strings = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = r.varint()? as usize;
+            let raw = r.take(len)?;
+            let s = std::str::from_utf8(raw).map_err(|_| r.err("string table not utf-8"))?;
+            strings.push(s.to_string());
+        }
+        let v = dec_value(&mut r, &strings, 0)?;
+        if r.pos != r.b.len() {
+            return Err(r.err("trailing bytes after value"));
+        }
+        Ok(v)
+    }
+
+    fn dec_value(r: &mut Reader, strings: &[String], depth: usize) -> Result<Json, ArtifactError> {
+        if depth > MAX_DEPTH {
+            return Err(r.err("nesting too deep"));
+        }
+        let tag = r.take(1)?[0];
+        match tag {
+            T_NULL => Ok(Json::Null),
+            T_FALSE => Ok(Json::Bool(false)),
+            T_TRUE => Ok(Json::Bool(true)),
+            T_INT => Ok(Json::Num(unzigzag(r.varint()?) as f64)),
+            T_F64 => {
+                let raw = r.take(8)?;
+                Ok(Json::Num(f64::from_bits(u64::from_le_bytes(raw.try_into().unwrap()))))
+            }
+            T_STR => Ok(Json::Str(r.string(strings)?)),
+            T_ARR => {
+                let n = r.varint()? as usize;
+                if n > r.remaining() {
+                    return Err(r.err("array count exceeds payload"));
+                }
+                let mut a = Vec::with_capacity(n);
+                for _ in 0..n {
+                    a.push(dec_value(r, strings, depth + 1)?);
+                }
+                Ok(Json::Arr(a))
+            }
+            T_OBJ => {
+                let n = r.varint()? as usize;
+                if n > r.remaining() {
+                    return Err(r.err("object count exceeds payload"));
+                }
+                let mut m = BTreeMap::new();
+                for _ in 0..n {
+                    let k = r.string(strings)?;
+                    m.insert(k, dec_value(r, strings, depth + 1)?);
+                }
+                Ok(Json::Obj(m))
+            }
+            t => Err(r.err(&format!("unknown value tag {t:#04x}"))),
+        }
+    }
+
+    struct Reader<'a> {
+        b: &'a [u8],
+        pos: usize,
+        what: &'a str,
+    }
+
+    impl<'a> Reader<'a> {
+        fn remaining(&self) -> usize {
+            self.b.len() - self.pos
+        }
+
+        fn err(&self, msg: &str) -> ArtifactError {
+            corrupt(&format!("{} section: {msg} (at byte {})", self.what, self.pos))
+        }
+
+        fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+            if n > self.remaining() {
+                return Err(self.err("truncated"));
+            }
+            let s = &self.b[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        fn varint(&mut self) -> Result<u64, ArtifactError> {
+            let mut v: u64 = 0;
+            for shift in (0..70).step_by(7) {
+                let b = self.take(1)?[0];
+                // The 10th byte holds only bit 63: anything above 1
+                // (including a continuation bit) overflows u64.
+                if shift == 63 && b > 1 {
+                    return Err(self.err("varint overflows u64"));
+                }
+                v |= ((b & 0x7f) as u64) << shift;
+                if b & 0x80 == 0 {
+                    return Ok(v);
+                }
+            }
+            unreachable!("loop returns or errors within 10 bytes")
+        }
+
+        fn string(&mut self, strings: &[String]) -> Result<String, ArtifactError> {
+            let i = self.varint()? as usize;
+            strings
+                .get(i)
+                .cloned()
+                .ok_or_else(|| self.err(&format!("string index {i} out of table")))
+        }
+    }
+
+    /// Shared with [`super::lz`]'s raw-length prefix.
+    pub(super) fn wvarint(out: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(b);
+                return;
+            }
+            out.push(b | 0x80);
+        }
+    }
+
+    /// Standalone varint read for callers without a [`Reader`] (the
+    /// [`super::lz`] raw-length prefix). `None` = truncated/overflow.
+    pub(super) fn rvarint(b: &[u8], pos: &mut usize) -> Option<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..70).step_by(7) {
+            let byte = *b.get(*pos)?;
+            *pos += 1;
+            if shift == 63 && byte > 1 {
+                return None;
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    fn zigzag(v: i64) -> u64 {
+        ((v << 1) ^ (v >> 63)) as u64
+    }
+
+    fn unzigzag(z: u64) -> i64 {
+        ((z >> 1) as i64) ^ -((z & 1) as i64)
+    }
+}
+
+/// Byte-oriented LZ77 — the envelope's per-section compressor. The
+/// instruction stream (and the plan around it) is block-repetitive:
+/// per-tile emission repeats the same few-word shapes with only
+/// addresses changing, which a backreference coder collapses far below
+/// the 4-bytes-per-word floor of a raw dump.
+///
+/// Stream format: a uvarint raw (decompressed) length, then tokens —
+/// a control byte `< 0x80` copies `ctrl + 1` following literal bytes;
+/// a control byte `>= 0x80` copies `ctrl - 0x80 + 4` bytes starting
+/// `offset` bytes back in the output, `offset` the following
+/// little-endian u16 (1-based; overlapping copies allowed, so a
+/// one-byte period still encodes).
+///
+/// The encoder is a greedy single-probe hash matcher and fully
+/// deterministic — same input, same bytes — which keeps
+/// [`Artifact::to_bin`] canonical. Decoding is hardened like
+/// [`bvalue`]: every length and offset is bounds-checked, output can
+/// never exceed the declared raw length, and every violation is a
+/// typed `Corrupt` — never a panic or an allocation bomb.
+mod lz {
+    use super::{bvalue, corrupt, ArtifactError};
+
+    const MIN_MATCH: usize = 4;
+    /// Control byte carries `len - MIN_MATCH` in its low 7 bits.
+    const MAX_MATCH: usize = MIN_MATCH + 0x7f;
+    const MAX_OFFSET: usize = u16::MAX as usize;
+    const HASH_BITS: u32 = 16;
+
+    fn hash4(b: &[u8]) -> usize {
+        let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+    }
+
+    pub fn compress(src: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(src.len() / 2 + 16);
+        bvalue::wvarint(&mut out, src.len() as u64);
+        let mut table = vec![usize::MAX; 1 << HASH_BITS];
+        let mut i = 0usize;
+        let mut lit = 0usize; // start of the pending literal run
+        while i + MIN_MATCH <= src.len() {
+            let h = hash4(&src[i..]);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX
+                && i - cand <= MAX_OFFSET
+                && src[cand..cand + MIN_MATCH] == src[i..i + MIN_MATCH]
+            {
+                let mut len = MIN_MATCH;
+                while len < MAX_MATCH && i + len < src.len() && src[cand + len] == src[i + len] {
+                    len += 1;
+                }
+                flush_literals(&mut out, &src[lit..i]);
+                out.push(0x80 + (len - MIN_MATCH) as u8);
+                out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+                i += len;
+                lit = i;
+            } else {
+                i += 1;
+            }
+        }
+        flush_literals(&mut out, &src[lit..]);
+        out
+    }
+
+    /// Emit a literal run as chunks of at most 128 bytes (control byte
+    /// `n - 1` in `0..=0x7f`).
+    fn flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+        while !lits.is_empty() {
+            let n = lits.len().min(0x80);
+            out.push((n - 1) as u8);
+            out.extend_from_slice(&lits[..n]);
+            lits = &lits[n..];
+        }
+    }
+
+    pub fn decompress(src: &[u8], what: &str) -> Result<Vec<u8>, ArtifactError> {
+        let oops = |msg: &str| corrupt(&format!("{what} section: {msg}"));
+        let mut pos = 0usize;
+        let raw = bvalue::rvarint(src, &mut pos)
+            .ok_or_else(|| oops("truncated raw-length varint"))?;
+        // A 3-byte match token expands to at most MAX_MATCH bytes, so
+        // a declared raw length beyond that ratio cannot be real — and
+        // cannot be turned into an allocation bomb.
+        let raw = usize::try_from(raw)
+            .ok()
+            .filter(|r| *r / MAX_MATCH <= src.len())
+            .ok_or_else(|| oops("declared raw length impossible for payload size"))?;
+        let mut out = Vec::with_capacity(raw.min(1 << 20));
+        while pos < src.len() {
+            let ctrl = src[pos];
+            pos += 1;
+            if ctrl < 0x80 {
+                let n = ctrl as usize + 1;
+                if pos + n > src.len() {
+                    return Err(oops("literal run past end of payload"));
+                }
+                if out.len() + n > raw {
+                    return Err(oops("output exceeds declared raw length"));
+                }
+                out.extend_from_slice(&src[pos..pos + n]);
+                pos += n;
+            } else {
+                let len = (ctrl - 0x80) as usize + MIN_MATCH;
+                if pos + 2 > src.len() {
+                    return Err(oops("match token truncated"));
+                }
+                let off = u16::from_le_bytes([src[pos], src[pos + 1]]) as usize;
+                pos += 2;
+                if off == 0 || off > out.len() {
+                    return Err(oops("match offset outside decoded output"));
+                }
+                if out.len() + len > raw {
+                    return Err(oops("output exceeds declared raw length"));
+                }
+                // Byte-wise so overlapping (short-period) copies work.
+                for _ in 0..len {
+                    let b = out[out.len() - off];
+                    out.push(b);
+                }
+            }
+        }
+        if out.len() != raw {
+            return Err(oops("decoded length does not match declaration"));
+        }
+        Ok(out)
     }
 }
 
@@ -470,7 +1159,7 @@ pub fn config_hash(c: &SnowflakeConfig) -> u64 {
     fnv1a(canon.as_bytes())
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -1198,5 +1887,186 @@ mod tests {
         }
         assert_eq!(unhex("xyz"), None);
         assert_eq!(unhex("123"), None); // wrong length
+    }
+
+    #[test]
+    fn bvalue_roundtrips_every_json_shape() {
+        let cases = [
+            "null",
+            "true",
+            "false",
+            "0",
+            "-1",
+            "9007199254740992",
+            "-9007199254740992",
+            "0.5",
+            "-123.25",
+            "1e300",
+            r#""""#,
+            r#""hello world""#,
+            r#"[]"#,
+            r#"[1, [2, [3, "x"]], null]"#,
+            r#"{}"#,
+            r#"{"a": 1, "b": {"a": "a", "c": [true, false]}, "z": -0.125}"#,
+        ];
+        for src in cases {
+            let v = Json::parse(src).expect(src);
+            let back = bvalue::decode(&bvalue::encode(&v), "test").expect(src);
+            assert_eq!(back.dump(), v.dump(), "case {src}");
+        }
+        // Exact f64 bit preservation for a non-integral value.
+        let v = Json::Num(0.1 + 0.2);
+        if let Json::Num(n) = bvalue::decode(&bvalue::encode(&v), "test").unwrap() {
+            assert_eq!(n.to_bits(), (0.1f64 + 0.2).to_bits());
+        } else {
+            panic!("expected number");
+        }
+    }
+
+    #[test]
+    fn bvalue_rejects_malformed_payloads() {
+        // Empty payload, truncated string table, absurd counts, bad
+        // string index — all typed Corrupt, never a panic or OOM.
+        for bad in [
+            &[][..],
+            &[5u8][..],                   // 5 strings promised, nothing follows
+            &[0, 0x06, 0xff, 0xff][..],   // array count varint truncated
+            &[0, 0x05, 0][..],            // string index into empty table
+            &[0, 0x08][..],               // unknown tag
+            &[0, 0x03][..],               // int with no varint
+            &[0, 0x04, 1, 2][..],         // f64 with 2 of 8 bytes
+            &[0, 0x00, 0x00][..],         // trailing byte after value
+        ] {
+            let err = bvalue::decode(bad, "test").unwrap_err();
+            assert!(matches!(err, ArtifactError::Corrupt(_)), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn bin_roundtrip_is_bit_identical() {
+        let a = build_small();
+        let bytes = a.to_bin();
+        let back = Artifact::from_bytes(&bytes).expect("bin roundtrip");
+        assert_eq!(back.compiled.program, a.compiled.program);
+        assert_eq!(back.compiled.plan, a.compiled.plan);
+        assert_eq!(back.schedules, a.schedules);
+        assert_eq!(back.fingerprint(), a.fingerprint());
+        // Re-encoding the decoded artifact is byte-identical in both
+        // codecs: the envelope is canonical.
+        assert_eq!(back.to_bin(), bytes);
+        assert_eq!(back.to_json().pretty(), a.to_json().pretty());
+    }
+
+    #[test]
+    fn sniffer_selects_codec_by_content_not_extension() {
+        let a = build_small();
+        // JSON body with leading whitespace still parses.
+        let mut json = b"  \n\t".to_vec();
+        json.extend_from_slice((a.to_json().pretty() + "\n").as_bytes());
+        assert_eq!(Artifact::from_bytes(&json).unwrap().fingerprint(), a.fingerprint());
+        // Binary body parses regardless of how the file was named.
+        assert_eq!(Artifact::from_bytes(&a.to_bin()).unwrap().fingerprint(), a.fingerprint());
+        // Neither: typed NotAnArtifact / Corrupt, never a guess.
+        assert_eq!(Artifact::from_bytes(b"PNG\x89 not ours").unwrap_err(), ArtifactError::NotAnArtifact);
+        assert_eq!(Artifact::from_bytes(b"SNFLK").unwrap_err(), ArtifactError::NotAnArtifact);
+        assert!(matches!(Artifact::from_bytes(b"   ").unwrap_err(), ArtifactError::Corrupt(_)));
+    }
+
+    #[test]
+    fn bin_version_mismatch_is_typed_before_payload_decode() {
+        let a = build_small();
+        let mut bytes = a.to_bin();
+        bytes[8..16].copy_from_slice(&99u64.to_le_bytes());
+        assert_eq!(
+            Artifact::from_bytes(&bytes).unwrap_err(),
+            ArtifactError::FormatVersion { found: 99, expected: FORMAT_VERSION }
+        );
+    }
+
+    #[test]
+    fn bin_truncation_and_bitflips_are_typed_errors() {
+        let a = build_small();
+        let bytes = a.to_bin();
+        // Truncations at every header/table boundary and a few payload
+        // offsets: always a typed error (NotAnArtifact for a cut magic,
+        // Corrupt elsewhere), never a panic.
+        for cut in [0, 4, 8, 12, 16, 24, 31, 32, 56, 32 + 8 * 24, bytes.len() - 1] {
+            let err = Artifact::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, ArtifactError::Corrupt(_) | ArtifactError::NotAnArtifact),
+                "cut at {cut}: {err}"
+            );
+        }
+        // A flipped bit inside the first payload breaks that section's
+        // checksum before any decoding happens.
+        let mut flipped = bytes.clone();
+        let at = 32 + 8 * 24; // first payload byte
+        flipped[at] ^= 0x01;
+        let err = Artifact::from_bytes(&flipped).unwrap_err();
+        assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+    }
+
+    #[test]
+    fn lz_roundtrips_and_compresses_repetitive_payloads() {
+        // Shaped like the instruction stream: repeating 16-byte blocks
+        // where only one "address" field changes per block.
+        let mut data = Vec::new();
+        for i in 0u32..4096 {
+            data.extend_from_slice(&0x1000_0000u32.to_le_bytes());
+            data.extend_from_slice(&(0x2000_0000u32 + i * 64).to_le_bytes());
+            data.extend_from_slice(&0x3000_0040u32.to_le_bytes());
+            data.extend_from_slice(&0xc000_0123u32.to_le_bytes());
+        }
+        let packed = lz::compress(&data);
+        assert_eq!(lz::decompress(&packed, "test").unwrap(), data);
+        assert!(
+            packed.len() * 2 < data.len(),
+            "block-repetitive data must compress at least 2x: {} vs {}",
+            packed.len(),
+            data.len()
+        );
+        // Deterministic: same input, same bytes (to_bin canonicality).
+        assert_eq!(lz::compress(&data), packed);
+
+        // Noisy data still round-trips (worst case degrades to literal
+        // runs, one control byte per 128).
+        let mut x = 0x9e37_79b9_7f4a_7c15u64;
+        let noisy: Vec<u8> = (0..10_000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 56) as u8
+            })
+            .collect();
+        assert_eq!(lz::decompress(&lz::compress(&noisy), "test").unwrap(), noisy);
+
+        // Degenerate shapes: empty, and a one-byte period (overlapping
+        // match copies).
+        assert_eq!(lz::decompress(&lz::compress(&[]), "test").unwrap(), Vec::<u8>::new());
+        let same = vec![7u8; 1000];
+        assert_eq!(lz::decompress(&lz::compress(&same), "test").unwrap(), same);
+    }
+
+    #[test]
+    fn lz_rejects_malformed_streams() {
+        let data = b"abcdabcdabcdabcdabcd";
+        let good = lz::compress(data);
+        assert_eq!(lz::decompress(&good, "test").unwrap(), data.to_vec());
+        // Every strict prefix fails the final raw-length accounting (or
+        // an earlier bounds check) — typed, never a panic.
+        for cut in 0..good.len() {
+            assert!(
+                lz::decompress(&good[..cut], "test").is_err(),
+                "truncation to {cut}/{} bytes must fail",
+                good.len()
+            );
+        }
+        // Match reaching before the start of the decoded output.
+        assert!(lz::decompress(&[4, 0x80, 1, 0], "test").is_err());
+        // Zero match offset.
+        assert!(lz::decompress(&[4, 0x00, b'x', 0x80, 0, 0], "test").is_err());
+        // Literal run overflowing the declared raw length.
+        assert!(lz::decompress(&[1, 1, b'a', b'b'], "test").is_err());
+        // Declared raw length impossible for the payload size.
+        assert!(lz::decompress(&[0xff, 0xff, 0xff, 0xff, 0x7f], "test").is_err());
     }
 }

@@ -33,7 +33,7 @@ pub mod measure_cache;
 pub mod partition;
 pub mod tile;
 
-pub use artifact::{Artifact, ArtifactError, ArtifactMeta};
+pub use artifact::{Artifact, ArtifactError, ArtifactFormat, ArtifactMeta};
 
 use crate::arch::SnowflakeConfig;
 use crate::fixed::QFormat;

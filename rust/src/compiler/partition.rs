@@ -23,7 +23,7 @@
 //!    split + cost-greedy split) are refined by deterministic local
 //!    moves, so the result is never worse than the even split.
 
-use super::artifact::{self, config_hash, Artifact};
+use super::artifact::{self, config_hash, Artifact, ArtifactFormat};
 use super::{CompileOptions, Compiler};
 use crate::arch::SnowflakeConfig;
 use crate::model::graph::Graph;
@@ -215,7 +215,7 @@ impl ShardPlan {
         Ok(())
     }
 
-    fn manifest_json(&self, stem: &str) -> Json {
+    fn manifest_json(&self, stem: &str, formats: &[ArtifactFormat]) -> Json {
         let stages: Vec<Json> = self
             .stages
             .iter()
@@ -224,7 +224,8 @@ impl ShardPlan {
                 Json::obj(vec![
                     ("start", Json::num(st.start as f64)),
                     ("end", Json::num(st.end as f64)),
-                    ("file", Json::str(&stage_file(stem, k))),
+                    ("file", Json::str(&stage_file(stem, k, formats[k]))),
+                    ("format", Json::str(&formats[k].to_string())),
                     ("fingerprint", Json::str(&artifact::hex(st.artifact.fingerprint()))),
                     ("predicted_cycles", Json::num(st.predicted_cycles as f64)),
                     (
@@ -252,17 +253,34 @@ impl ShardPlan {
     }
 
     /// Write the manifest at `path` plus one sibling
-    /// `<stem>.stage<k>.artifact.json` per stage.
+    /// `<stem>.stage<k>.artifact.json` per stage (JSON encoding).
     pub fn save(&self, path: &str) -> Result<(), PartitionError> {
+        self.save_with_formats(path, |_| ArtifactFormat::Json)
+    }
+
+    /// Like [`ShardPlan::save`], but each stage artifact is written in
+    /// the encoding `fmt_of(stage_index)` returns, the stage file name
+    /// takes that encoding's extension, and the manifest records the
+    /// per-stage format. A mixed json/bin stage set is valid: loading
+    /// goes through the sniffing [`Artifact::load`], so the recorded
+    /// format is provenance, not a dispatch key.
+    pub fn save_with_formats(
+        &self,
+        path: &str,
+        fmt_of: impl Fn(usize) -> ArtifactFormat,
+    ) -> Result<(), PartitionError> {
         self.validate()?;
         let p = Path::new(path);
         let dir = p.parent().unwrap_or_else(|| Path::new(""));
         let stem = manifest_stem(p);
+        let formats: Vec<ArtifactFormat> = (0..self.stages.len()).map(&fmt_of).collect();
         for (k, st) in self.stages.iter().enumerate() {
-            let file = dir.join(stage_file(&stem, k));
-            st.artifact.save(&file.to_string_lossy()).map_err(perr)?;
+            let file = dir.join(stage_file(&stem, k, formats[k]));
+            st.artifact
+                .save_format(&file.to_string_lossy(), formats[k])
+                .map_err(perr)?;
         }
-        std::fs::write(path, self.manifest_json(&stem).pretty() + "\n")
+        std::fs::write(path, self.manifest_json(&stem, &formats).pretty() + "\n")
             .map_err(|e| PartitionError(format!("{path}: {e}")))
     }
 
@@ -323,6 +341,22 @@ impl ShardPlan {
             let (Some(start), Some(end), Some(file)) = (start, end, file) else {
                 return Err(PartitionError(format!("{path}: stage {k} entry is corrupt")));
             };
+            // Per-stage artifact encoding, recorded since the binary
+            // envelope landed. Absent in older manifests (all-JSON
+            // stage sets); the actual load below sniffs the file
+            // content, so this is provenance validation only.
+            match e.get("format") {
+                Json::Null => {}
+                v => {
+                    let known = v.as_str().and_then(ArtifactFormat::parse).is_some();
+                    if !known {
+                        return Err(PartitionError(format!(
+                            "{path}: stage {k} records unknown artifact format {}",
+                            v.dump()
+                        )));
+                    }
+                }
+            }
             let fp = e
                 .get("fingerprint")
                 .as_str()
@@ -370,8 +404,8 @@ fn manifest_stem(p: &Path) -> String {
         .to_string()
 }
 
-fn stage_file(stem: &str, k: usize) -> String {
-    format!("{stem}.stage{k}.artifact.json")
+fn stage_file(stem: &str, k: usize, fmt: ArtifactFormat) -> String {
+    format!("{stem}.stage{k}.artifact.{}", fmt.extension())
 }
 
 // ---------------------------------------------------------------------
@@ -833,5 +867,41 @@ mod tests {
         std::fs::copy(&s1, &s0).unwrap();
         let e = ShardPlan::load(&path, &cfg).unwrap_err();
         assert!(e.0.contains("fingerprint"), "{}", e.0);
+    }
+
+    #[test]
+    fn manifest_roundtrip_with_mixed_stage_formats() {
+        // One stage JSON, one binary: the manifest records each format,
+        // the stage files carry the matching extensions, and loading
+        // sniffs both back to bit-identical artifacts.
+        let g = zoo::alexnet_owt();
+        let cfg = SnowflakeConfig::default();
+        let plan = partition(&g, &cfg, &opts_nofc(), 2).unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join("repro_test_alexnet_mixed.shardplan.json");
+        let path = path.to_string_lossy().into_owned();
+        plan.save_with_formats(&path, |k| {
+            if k == 0 { ArtifactFormat::Json } else { ArtifactFormat::Bin }
+        })
+        .unwrap();
+        assert!(dir.join("repro_test_alexnet_mixed.stage0.artifact.json").exists());
+        assert!(dir.join("repro_test_alexnet_mixed.stage1.artifact.bin").exists());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"format\": \"json\""), "manifest must record stage formats");
+        assert!(text.contains("\"format\": \"bin\""), "manifest must record stage formats");
+        let back = ShardPlan::load(&path, &cfg).unwrap();
+        assert_eq!(back.cuts(), plan.cuts());
+        for (a, b) in back.stages.iter().zip(&plan.stages) {
+            assert_eq!(a.artifact.fingerprint(), b.artifact.fingerprint());
+            assert_eq!(a.artifact.compiled.program, b.artifact.compiled.program);
+        }
+        // A manifest recording a format this build does not know is a
+        // typed error, not a guess.
+        let bad = text.replacen("\"format\": \"bin\"", "\"format\": \"zip\"", 1);
+        let bpath = dir.join("repro_test_alexnet_badfmt.shardplan.json");
+        // Keep the stage files resolvable: same dir, same stems.
+        std::fs::write(&bpath, bad).unwrap();
+        let e = ShardPlan::load(&bpath.to_string_lossy(), &cfg).unwrap_err();
+        assert!(e.0.contains("unknown artifact format"), "{}", e.0);
     }
 }

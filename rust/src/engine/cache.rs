@@ -38,12 +38,40 @@
 //! so a re-load after eviction re-deploys (a new miss), with results
 //! bit-identical to the cached path (`tests/serve.rs`). `cap == 0`
 //! (the default) keeps the unbounded behavior.
+//!
+//! ## Warmup pinning (ISSUE 9)
+//!
+//! [`ArtifactCache::warm`] deploys an artifact ahead of any worker and
+//! **pins** the entry: pinned prototypes are exempt from LRU eviction,
+//! so a fleet of workers starting together can churn scratch models
+//! through a tight cache without ever re-deploying a pinned one. The
+//! serving runtime's `--warmup` phase warms every registered model
+//! before spawning workers — each model is deployed exactly once per
+//! server run, no matter how many workers race to load it.
+//!
+//! ## Disk tier (ISSUE 9)
+//!
+//! [`DiskCache`] is the cross-*process* counterpart: compiled
+//! [`Artifact`]s persisted as binary envelopes under a directory,
+//! keyed by [`Artifact::fingerprint`], LRU-bounded like the in-process
+//! tier and **checksum-verified on every read** (a tampered entry is a
+//! typed miss that deletes the entry — the caller recompiles; never a
+//! crash, never a silently wrong artifact). A `source` alias key —
+//! FNV-1a over (config, model description, compile options) — lets a
+//! CLI that has not compiled yet look up the artifact a previous
+//! process built from the same inputs.
 
 use super::{deployed_machine, Engine, EngineError, ModelHandle};
-use crate::compiler::Artifact;
+use crate::arch::SnowflakeConfig;
+use crate::compiler::artifact::{config_hash, fnv1a, hex, unhex};
+use crate::compiler::{Artifact, ArtifactError, CompileOptions};
+use crate::model::graph::Graph;
+use crate::model::parser;
 use crate::model::weights::Weights;
 use crate::sim::Machine;
+use crate::util::json::Json;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -64,10 +92,12 @@ impl CacheStats {
     }
 }
 
-/// One cached prototype image plus its LRU clock stamp.
+/// One cached prototype image plus its LRU clock stamp. Pinned images
+/// (warmup) are exempt from eviction.
 struct CachedImage {
     machine: Machine,
     last_use: u64,
+    pinned: bool,
 }
 
 #[derive(Default)]
@@ -135,27 +165,72 @@ impl ArtifactCache {
                     let proto = deployed_machine(artifact, &weights);
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     let machine = proto.clone();
-                    images.map.insert(key, CachedImage { machine: proto, last_use: now });
-                    if self.cap > 0 {
-                        while images.map.len() > self.cap {
-                            // The just-inserted entry carries the newest
-                            // stamp, so the LRU victim is never it
-                            // (unless cap forces even the newcomer out).
-                            let victim = images
-                                .map
-                                .iter()
-                                .min_by_key(|(_, e)| e.last_use)
-                                .map(|(k, _)| *k)
-                                .expect("non-empty over-capacity cache");
-                            images.map.remove(&victim);
-                            self.evictions.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
+                    images
+                        .map
+                        .insert(key, CachedImage { machine: proto, last_use: now, pinned: false });
+                    self.evict_over_cap(&mut images);
                     machine
                 }
             }
         };
         engine.load_image(Arc::clone(artifact), machine)
+    }
+
+    /// Deploy `artifact` ahead of any worker and **pin** the image:
+    /// pinned entries never fall to LRU eviction, so every later
+    /// [`ArtifactCache::load_into`] for this key is a hit for the
+    /// lifetime of the cache. Deploying counts one miss (it is the
+    /// build the workers now skip); warming an already-cached entry
+    /// only pins it — no load happened, so no counter moves. Pinned
+    /// entries may hold the cache over capacity; unpinned churn still
+    /// evicts among itself.
+    pub fn warm(&self, artifact: &Arc<Artifact>, seed: u64) {
+        let key = (artifact.fingerprint(), seed);
+        let mut images = self.images.lock().expect("artifact cache poisoned");
+        images.clock += 1;
+        let now = images.clock;
+        match images.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_use = now;
+                entry.pinned = true;
+            }
+            None => {
+                let weights = Weights::init(&artifact.graph, seed);
+                let proto = deployed_machine(artifact, &weights);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                images
+                    .map
+                    .insert(key, CachedImage { machine: proto, last_use: now, pinned: true });
+                self.evict_over_cap(&mut images);
+            }
+        }
+    }
+
+    /// Drop least-recently-used *unpinned* prototypes until the cache
+    /// fits `cap`. Stops early if only pinned entries remain over
+    /// capacity — pinned residency is allowed to exceed the bound.
+    fn evict_over_cap(&self, images: &mut Images) {
+        if self.cap == 0 {
+            return;
+        }
+        while images.map.len() > self.cap {
+            // The just-inserted entry carries the newest stamp, so the
+            // LRU victim is never it (unless cap forces even the
+            // newcomer out).
+            let victim = images
+                .map
+                .iter()
+                .filter(|(_, e)| !e.pinned)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    images.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
     }
 
     /// Counters so far.
@@ -175,6 +250,308 @@ impl ArtifactCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+// ---------------------------------------------------------------------
+// Disk tier
+// ---------------------------------------------------------------------
+
+/// Per-entry disk index record.
+struct DiskEntry {
+    last_use: u64,
+    /// Compile-input alias ([`DiskCache::source_key`]) when the entry
+    /// was admitted via [`DiskCache::put_with_source`].
+    source: Option<u64>,
+}
+
+struct DiskIndex {
+    map: HashMap<u64, DiskEntry>,
+    clock: u64,
+}
+
+/// Disk-backed artifact cache: compiled [`Artifact`]s persisted as
+/// binary envelopes under one directory, shared across processes.
+///
+/// * **Keyed by [`Artifact::fingerprint`]** — the entry file is
+///   `<fingerprint>.artifact.bin`; a persistent `index.json` carries
+///   the LRU clock and the source aliases across restarts (when it is
+///   missing or damaged the index is rebuilt from the directory
+///   listing — entries are never lost to a bad index).
+/// * **Checksum-verified on read** — every [`DiskCache::get`] decodes
+///   the full envelope (section checksums, program-word checksum,
+///   config-hash binding) and re-derives the fingerprint; a tampered
+///   or truncated entry is deleted and reported as a **miss**, so the
+///   caller recompiles instead of crashing or running damaged code.
+/// * **LRU-bounded** like the in-process tier: `cap` entries (0 =
+///   unbounded), least-recently-used evicted on admission.
+///
+/// Counters mirror [`CacheStats`]: gets count hits/misses (a tampered
+/// read is a miss), puts count evictions.
+pub struct DiskCache {
+    dir: PathBuf,
+    cap: usize,
+    state: Mutex<DiskIndex>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) the cache directory with an LRU bound
+    /// of `cap` entries (0 = unbounded).
+    pub fn open(dir: &str, cap: usize) -> Result<DiskCache, ArtifactError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| ArtifactError::Io(format!("{dir}: {e}")))?;
+        let dir = PathBuf::from(dir);
+        let map = match read_index(&dir.join("index.json")) {
+            Some(map) => map,
+            // Missing or damaged index: rebuild from the entry files
+            // themselves (fresh LRU clocks, no source aliases).
+            None => scan_entries(&dir),
+        };
+        let clock = map.values().map(|e| e.last_use).max().unwrap_or(0);
+        let cache = DiskCache {
+            dir,
+            cap,
+            state: Mutex::new(DiskIndex { map, clock }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        };
+        {
+            let mut st = cache.state.lock().expect("disk cache poisoned");
+            cache.evict_over_cap(&mut st);
+            cache.write_index(&st)?;
+        }
+        Ok(cache)
+    }
+
+    /// Alias key for "the artifact a compile of these inputs would
+    /// produce": FNV-1a over the host config fingerprint, the model
+    /// description and the compile options. Lets a process look the
+    /// artifact up *before* compiling ([`DiskCache::get_by_source`]).
+    pub fn source_key(host: &SnowflakeConfig, graph: &Graph, opts: &CompileOptions) -> u64 {
+        let mut canon = Vec::new();
+        canon.extend_from_slice(&config_hash(host).to_le_bytes());
+        canon.extend_from_slice(parser::dump_model(graph).as_bytes());
+        canon.extend_from_slice(format!("{opts:?}").as_bytes());
+        fnv1a(&canon)
+    }
+
+    /// The configured capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Fetch by artifact fingerprint. `None` is a miss: absent, built
+    /// for a different config, or failed verification (in which case
+    /// the damaged entry was deleted so a recompile can replace it).
+    pub fn get(&self, fingerprint: u64, host: &SnowflakeConfig) -> Option<Artifact> {
+        let mut st = self.state.lock().expect("disk cache poisoned");
+        if !st.map.contains_key(&fingerprint) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.read_verified(&mut st, fingerprint, host)
+    }
+
+    /// Fetch by compile-input alias (see [`DiskCache::source_key`]).
+    pub fn get_by_source(&self, source: u64, host: &SnowflakeConfig) -> Option<Artifact> {
+        let mut st = self.state.lock().expect("disk cache poisoned");
+        let fp = st
+            .map
+            .iter()
+            .find(|(_, e)| e.source == Some(source))
+            .map(|(fp, _)| *fp);
+        match fp {
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Some(fp) => self.read_verified(&mut st, fp, host),
+        }
+    }
+
+    /// Admit `artifact`, overwriting any same-fingerprint entry.
+    /// Returns the fingerprint key.
+    pub fn put(&self, artifact: &Artifact) -> Result<u64, ArtifactError> {
+        self.put_entry(artifact, None)
+    }
+
+    /// Admit `artifact` and record the compile-input alias that
+    /// produced it, so [`DiskCache::get_by_source`] finds it before a
+    /// recompile.
+    pub fn put_with_source(&self, source: u64, artifact: &Artifact) -> Result<u64, ArtifactError> {
+        self.put_entry(artifact, Some(source))
+    }
+
+    /// Counters so far (this process; the index persists entries, not
+    /// counters).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of indexed entries.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("disk cache poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn entry_path(&self, fingerprint: u64) -> PathBuf {
+        self.dir.join(format!("{}.artifact.bin", hex(fingerprint)))
+    }
+
+    /// Read + fully verify an indexed entry; on any damage, delete the
+    /// entry and count a miss. Counts a hit only on a verified read.
+    fn read_verified(
+        &self,
+        st: &mut DiskIndex,
+        fingerprint: u64,
+        host: &SnowflakeConfig,
+    ) -> Option<Artifact> {
+        let path = self.entry_path(fingerprint);
+        let verified = std::fs::read(&path)
+            .ok()
+            .and_then(|bytes| Artifact::from_bytes(&bytes).ok())
+            .filter(|a| a.fingerprint() == fingerprint);
+        let Some(artifact) = verified else {
+            // Damaged, truncated or swapped entry: drop it so the
+            // recompile that follows this miss can replace it.
+            let _ = std::fs::remove_file(&path);
+            st.map.remove(&fingerprint);
+            let _ = self.write_index(st);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        if artifact.validate_config(host).is_err() {
+            // Intact but built for other hardware: a miss, and the
+            // entry stays for the host it belongs to.
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        st.clock += 1;
+        let now = st.clock;
+        if let Some(e) = st.map.get_mut(&fingerprint) {
+            e.last_use = now;
+        }
+        let _ = self.write_index(st);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(artifact)
+    }
+
+    fn put_entry(&self, artifact: &Artifact, source: Option<u64>) -> Result<u64, ArtifactError> {
+        let fingerprint = artifact.fingerprint();
+        let path = self.entry_path(fingerprint);
+        let tmp = self.dir.join(format!("{}.tmp", hex(fingerprint)));
+        std::fs::write(&tmp, artifact.to_bin())
+            .map_err(|e| ArtifactError::Io(format!("{}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| ArtifactError::Io(format!("{}: {e}", path.display())))?;
+        let mut st = self.state.lock().expect("disk cache poisoned");
+        st.clock += 1;
+        let last_use = st.clock;
+        let prior = st.map.insert(fingerprint, DiskEntry { last_use, source });
+        // Keep an existing alias if the overwrite did not carry one.
+        if source.is_none() {
+            if let (Some(p), Some(e)) = (prior, st.map.get_mut(&fingerprint)) {
+                e.source = p.source;
+            }
+        }
+        self.evict_over_cap(&mut st);
+        self.write_index(&st)?;
+        Ok(fingerprint)
+    }
+
+    fn evict_over_cap(&self, st: &mut DiskIndex) {
+        if self.cap == 0 {
+            return;
+        }
+        while st.map.len() > self.cap {
+            let victim = st
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(fp, _)| *fp)
+                .expect("non-empty over-capacity disk cache");
+            st.map.remove(&victim);
+            let _ = std::fs::remove_file(self.entry_path(victim));
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn write_index(&self, st: &DiskIndex) -> Result<(), ArtifactError> {
+        let entries: Vec<Json> = st
+            .map
+            .iter()
+            .map(|(fp, e)| {
+                Json::obj(vec![
+                    ("fingerprint", Json::str(&hex(*fp))),
+                    ("last_use", Json::num(e.last_use as f64)),
+                    (
+                        "source",
+                        e.source.map(|s| Json::str(&hex(s))).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let root = Json::obj(vec![
+            ("magic", Json::str("snowflake-disk-cache")),
+            ("entries", Json::Arr(entries)),
+        ]);
+        let path = self.dir.join("index.json");
+        std::fs::write(&path, root.pretty() + "\n")
+            .map_err(|e| ArtifactError::Io(format!("{}: {e}", path.display())))
+    }
+}
+
+/// Parse `index.json`; `None` means missing/damaged (rebuild).
+fn read_index(path: &Path) -> Option<HashMap<u64, DiskEntry>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let root = Json::parse(&text).ok()?;
+    if root.get("magic").as_str() != Some("snowflake-disk-cache") {
+        return None;
+    }
+    let mut map = HashMap::new();
+    for e in root.get("entries").as_arr()? {
+        let fp = unhex(e.get("fingerprint").as_str()?)?;
+        let last_use = e.get("last_use").as_i64()? as u64;
+        let source = match e.get("source") {
+            Json::Null => None,
+            v => Some(unhex(v.as_str()?)?),
+        };
+        map.insert(fp, DiskEntry { last_use, source });
+    }
+    Some(map)
+}
+
+/// Rebuild an index from the `<16-hex>.artifact.bin` files on disk.
+fn scan_entries(dir: &Path) -> HashMap<u64, DiskEntry> {
+    let mut map = HashMap::new();
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return map;
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(stem) = name.strip_suffix(".artifact.bin") {
+            if let Some(fp) = unhex(stem) {
+                map.insert(fp, DiskEntry { last_use: 0, source: None });
+            }
+        }
+    }
+    map
 }
 
 #[cfg(test)]
@@ -305,5 +682,84 @@ mod tests {
         let mut e = Engine::new(cfg);
         let err = cache.load_into(&mut e, &artifact, 1).unwrap_err();
         assert!(matches!(err, EngineError::ConfigMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn warm_pins_models_against_lru_churn() {
+        let cfg = SnowflakeConfig::default();
+        let a1 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("warm1")).unwrap());
+        let a2 = Arc::new(Compiler::new(cfg.clone()).build(&small_graph("warm2")).unwrap());
+        let cache = ArtifactCache::with_capacity(1);
+        cache.warm(&a1, 1); // deploy counts one miss, entry pinned
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1, evictions: 0 });
+        let mut e = Engine::new(cfg.clone());
+        cache.load_into(&mut e, &a1, 1).unwrap(); // hit on the pinned image
+        // Churning an unpinned model through a full cache evicts the
+        // newcomer, never the pinned entry.
+        cache.load_into(&mut e, &a2, 1).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, evictions: 1 });
+        cache.load_into(&mut e, &a1, 1).unwrap(); // still resident, still a hit
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 2, evictions: 1 });
+        // Re-warming a resident entry moves no counter.
+        cache.warm(&a1, 1);
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 2, evictions: 1 });
+        assert_eq!(cache.len(), 1);
+        // Two pinned models may hold a cap-1 cache over capacity.
+        cache.warm(&a2, 1);
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 3, evictions: 1 });
+        assert_eq!(cache.len(), 2);
+    }
+
+    fn disk_dir(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!(
+            "repro_diskcache_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn disk_cache_roundtrip_and_source_alias() {
+        let cfg = SnowflakeConfig::default();
+        let g = small_graph("disk1");
+        let artifact = Compiler::new(cfg.clone()).build(&g).unwrap();
+        let fp = artifact.fingerprint();
+        let dir = disk_dir("roundtrip");
+        let cache = DiskCache::open(&dir, 0).unwrap();
+        assert!(cache.get(fp, &cfg).is_none()); // miss on empty
+        let src = DiskCache::source_key(&cfg, &g, &CompileOptions::default());
+        assert!(cache.get_by_source(src, &cfg).is_none());
+        cache.put_with_source(src, &artifact).unwrap();
+        let by_fp = cache.get(fp, &cfg).expect("hit by fingerprint");
+        assert_eq!(by_fp.fingerprint(), fp);
+        assert_eq!(by_fp.compiled.program, artifact.compiled.program);
+        let by_src = cache.get_by_source(src, &cfg).expect("hit by source alias");
+        assert_eq!(by_src.fingerprint(), fp);
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 2, evictions: 0 });
+        // A different host config is a miss; the entry survives.
+        let other = SnowflakeConfig { n_cus: 2, ..cfg.clone() };
+        assert!(cache.get(fp, &other).is_none());
+        assert_eq!(cache.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_cache_rebuilds_from_a_damaged_index() {
+        let cfg = SnowflakeConfig::default();
+        let artifact = Compiler::new(cfg.clone()).build(&small_graph("disk2")).unwrap();
+        let fp = artifact.fingerprint();
+        let dir = disk_dir("reindex");
+        {
+            let cache = DiskCache::open(&dir, 0).unwrap();
+            cache.put(&artifact).unwrap();
+        }
+        // Trash the index; the entry file itself is intact.
+        std::fs::write(Path::new(&dir).join("index.json"), b"not json").unwrap();
+        let cache = DiskCache::open(&dir, 0).unwrap();
+        assert_eq!(cache.len(), 1, "entries must be recovered from the directory");
+        let back = cache.get(fp, &cfg).expect("recovered entry still verifies");
+        assert_eq!(back.fingerprint(), fp);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1370,6 +1370,7 @@ pub struct Server {
     sched: SchedConfig,
     models: Vec<RegisteredModel>,
     cache: ArtifactCache,
+    warmup: bool,
 }
 
 impl Server {
@@ -1386,6 +1387,7 @@ impl Server {
             sched: SchedConfig::default(),
             models: Vec::new(),
             cache,
+            warmup: false,
         }
     }
 
@@ -1414,6 +1416,23 @@ impl Server {
     /// The active queue-scheduling policy.
     pub fn sched(&self) -> &SchedConfig {
         &self.sched
+    }
+
+    /// Enable the warmup phase: before spawning workers, each run
+    /// deploys every registered (unsharded) model into the shared
+    /// [`ArtifactCache`] and **pins** it there ([`ArtifactCache::warm`]).
+    /// N workers starting together then deploy each model exactly
+    /// once — one warm miss per model, every worker load a hit — and
+    /// pinned models never fall to LRU churn mid-run. Sharded models
+    /// are skipped: their stage pipelines are per-worker `Cluster`s,
+    /// not cached images.
+    pub fn set_warmup(&mut self, warmup: bool) {
+        self.warmup = warmup;
+    }
+
+    /// Whether the warmup phase is enabled.
+    pub fn warmup(&self) -> bool {
+        self.warmup
     }
 
     /// Register a model: validate its config fingerprint against the
@@ -1596,6 +1615,16 @@ impl Server {
             }
         }
         let cache_before = self.cache.stats();
+        if self.warmup {
+            // Deploy + pin every unsharded model before any worker
+            // spawns: the warm misses land inside this run's cache
+            // delta, and every worker's own load below is a hit.
+            for m in &self.models {
+                if m.shards.is_none() {
+                    self.cache.warm(&m.artifact, m.seed);
+                }
+            }
+        }
         let n_models = self.models.len();
         let prefilled_overflow = prefill.len() > scfg.queue_depth;
         let policy = Policy {

@@ -4,9 +4,13 @@
 //!   build      compile a model into a versioned artifact file
 //!              (`--model X --out x.artifact.json`); the artifact carries the
 //!              program, memory plan, per-layer schedules, model description
-//!              and a hardware-config fingerprint; `--shards N` partitions the
-//!              model into an N-stage pipeline instead, emitting one artifact
-//!              per stage plus a shard-plan manifest (x.shardplan.json)
+//!              and a hardware-config fingerprint; `--format bin` writes the
+//!              compact binary envelope instead of JSON (both load through
+//!              the same sniffing `Artifact::load`); `--disk-cache DIR`
+//!              reuses a previous process's compile; `--shards N` partitions
+//!              the model into an N-stage pipeline instead, emitting one
+//!              artifact per stage plus a shard-plan manifest
+//!              (x.shardplan.json)
 //!   run        compile + simulate, print stats; `--artifact path` skips the
 //!              compiler entirely and runs the prebuilt artifact through the
 //!              Engine (bit-identical cycles/DRAM to the direct path);
@@ -17,7 +21,9 @@
 //!              `--workers N` engines each with every model resident,
 //!              `--queue-depth D` bounded submission queue (backpressure),
 //!              `--max-batch B` same-model request coalescing, `--cache-cap N`
-//!              LRU bound on the deployed-image cache; round-robins
+//!              LRU bound on the deployed-image cache, `--warmup` deploys and
+//!              pins every model before the workers spawn (exactly one deploy
+//!              per model however many workers race); round-robins
 //!              `--requests N` submissions across the models. `--models a,b`
 //!              compiles in-process, `--artifacts x,y` loads artifact files;
 //!              `--check` replays every request through a sequential Engine
@@ -61,8 +67,11 @@
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::partition::{self, ShardPlan};
-use snowflake::compiler::{deploy, Artifact, BalancePolicy, CompileOptions, Compiler, TuneMode};
+use snowflake::compiler::{
+    deploy, Artifact, ArtifactFormat, BalancePolicy, CompileOptions, Compiler, TuneMode,
+};
 use snowflake::coordinator::{driver, report, tune};
+use snowflake::engine::cache::DiskCache;
 use snowflake::engine::cluster::Cluster;
 use snowflake::engine::loadgen::{self, ArrivalKind, Popularity, Trace};
 use snowflake::engine::serve::{
@@ -112,7 +121,13 @@ fn options(args: &Args) -> CompileOptions {
         }
     };
     CompileOptions {
-        fmt: if args.opt_or("format", "q8.8") == "q5.11" { Q5_11 } else { Q8_8 },
+        // `--format` takes comma-separated tokens shared with the
+        // artifact encoding: `--format q5.11,bin` selects both.
+        fmt: if args.opt_or("format", "q8.8").split(',').any(|t| t.trim() == "q5.11") {
+            Q5_11
+        } else {
+            Q8_8
+        },
         balance,
         tune,
         smart_delay_slots: args.flag("hand"),
@@ -120,6 +135,67 @@ fn options(args: &Args) -> CompileOptions {
         skip_fc: !args.flag("with-fc"),
         ..Default::default()
     }
+}
+
+/// Artifact encoding from `--format`. The flag is shared with the
+/// quantization format (`q8.8`/`q5.11`), so tokens are comma-separated
+/// and scanned: `--format bin`, `--format q5.11,bin` and
+/// `--format json` all work. Default is JSON; unknown tokens exit 2.
+fn artifact_format(args: &Args) -> ArtifactFormat {
+    let mut fmt = ArtifactFormat::Json;
+    for tok in args.opt_or("format", "").split(',').map(str::trim) {
+        match tok {
+            "" | "q8.8" | "q5.11" => {}
+            t => match ArtifactFormat::parse(t) {
+                Some(f) => fmt = f,
+                None => {
+                    eprintln!("unknown --format token '{t}' (q8.8|q5.11|json|bin)");
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
+    fmt
+}
+
+/// Open the `--disk-cache DIR` artifact cache if requested
+/// (`--disk-cache-cap N` bounds it, 0 = unbounded).
+fn open_disk_cache(args: &Args) -> Option<DiskCache> {
+    let dir = args.opt("disk-cache")?;
+    let cap = args.opt_usize("disk-cache-cap", 0);
+    Some(DiskCache::open(dir, cap).unwrap_or_else(|e| {
+        eprintln!("--disk-cache: {e}");
+        std::process::exit(1);
+    }))
+}
+
+/// Compile `g`, routed through the disk cache when one is configured:
+/// a checksum-verified entry for the same (config, model, options)
+/// inputs skips the compiler entirely; a fresh compile is admitted so
+/// the next process (or worker fleet restart) hits.
+fn build_cached(
+    dcache: Option<&DiskCache>,
+    cfg: &SnowflakeConfig,
+    opts: &CompileOptions,
+    g: &snowflake::model::graph::Graph,
+) -> Artifact {
+    let keyed = dcache.map(|c| (c, DiskCache::source_key(cfg, g, opts)));
+    if let Some((c, key)) = keyed {
+        if let Some(a) = c.get_by_source(key, cfg) {
+            return a;
+        }
+    }
+    let artifact =
+        Compiler::new(cfg.clone()).options(opts.clone()).build(g).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        });
+    if let Some((c, key)) = keyed {
+        if let Err(e) = c.put_with_source(key, &artifact) {
+            eprintln!("warning: disk-cache admit failed: {e}");
+        }
+    }
+    artifact
 }
 
 fn print_batch(name: &str, out: &driver::BatchOutcome, cfg: &SnowflakeConfig, t0: std::time::Instant) {
@@ -151,7 +227,7 @@ fn print_run(name: &str, out: &driver::RunOutcome, cfg: &SnowflakeConfig) {
 fn main() {
     let flags = [
         "hand", "reuse-regions", "with-fc", "emit-asm", "fast", "verbose", "check", "wfq",
-        "affinity", "gate",
+        "affinity", "gate", "warmup",
     ];
     let args = Args::from_env(&flags);
     let cfg = SnowflakeConfig::default();
@@ -170,6 +246,7 @@ fn main() {
             // versioned artifact file for `run --artifact` / `serve`.
             let g = load_model(&args);
             let opts = options(&args);
+            let fmt = artifact_format(&args);
             let shards = args.opt_usize("shards", 1);
             if shards > 1 {
                 // Sharded build: partition into a pipeline and emit one
@@ -183,7 +260,7 @@ fn main() {
                     .opt("out")
                     .map(String::from)
                     .unwrap_or_else(|| format!("{}.shardplan.json", g.name));
-                plan.save(&path).unwrap_or_else(|e| {
+                plan.save_with_formats(&path, |_| fmt).unwrap_or_else(|e| {
                     eprintln!("{e}");
                     std::process::exit(1);
                 });
@@ -204,23 +281,22 @@ fn main() {
                 return;
             }
             let t0 = std::time::Instant::now();
-            let artifact = Compiler::new(cfg.clone()).options(opts).build(&g).unwrap_or_else(|e| {
-                eprintln!("{e}");
-                std::process::exit(1);
-            });
+            let dcache = open_disk_cache(&args);
+            let artifact = build_cached(dcache.as_ref(), &cfg, &opts, &g);
             let path = args
                 .opt("out")
                 .map(String::from)
-                .unwrap_or_else(|| format!("{}.artifact.json", g.name));
-            artifact.save(&path).unwrap_or_else(|e| {
+                .unwrap_or_else(|| format!("{}.artifact.{}", g.name, fmt.extension()));
+            artifact.save_format(&path, fmt).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(1);
             });
             println!(
-                "{}: artifact {} in {:?} — {} instructions, {} layers, {:.1} MB plan, \
+                "{}: artifact {} ({}) in {:?} — {} instructions, {} layers, {:.1} MB plan, \
                  format v{}, config {:016x}",
                 g.name,
                 path,
+                fmt,
                 t0.elapsed(),
                 artifact.compiled.program.len(),
                 artifact.compiled.plan.layers.len(),
@@ -325,6 +401,32 @@ fn main() {
                     print_batch(&g.name, &b, &cfg, t0);
                 } else {
                     println!("{}: {}", g.name, out.outcome.stats.summary(&cfg));
+                }
+                return;
+            }
+            if let Some(dcache) = open_disk_cache(&args) {
+                // Disk-cached run: skip the compiler when a verified
+                // entry for these inputs exists, then take the exact
+                // `--artifact` execution path (bit-identical to the
+                // compile-and-run path by the artifact invariants).
+                let artifact = build_cached(Some(&dcache), &cfg, &opts, &g);
+                let name = artifact.graph.name.clone();
+                let s = dcache.stats();
+                println!("disk-cache: {} hits, {} misses ({})", s.hits, s.misses, dcache.dir().display());
+                if frames > 1 {
+                    let t0 = std::time::Instant::now();
+                    let out = driver::run_batch_artifact(artifact, seed, frames)
+                        .unwrap_or_else(|e| {
+                            eprintln!("{e}");
+                            std::process::exit(1);
+                        });
+                    print_batch(&name, &out, &cfg, t0);
+                } else {
+                    let out = driver::run_artifact(artifact, seed).unwrap_or_else(|e| {
+                        eprintln!("{e}");
+                        std::process::exit(1);
+                    });
+                    print_run(&name, &out, &cfg);
                 }
                 return;
             }
@@ -502,11 +604,16 @@ fn main() {
                  \x20  --model alexnet|resnet18|resnet50   --model-file model.json\n\
                  \x20  --balance greedy1|greedy2|greedy4|two-units|one-unit\n\
                  \x20  --tune heuristic|cost|measured  --top-k N (measured candidates/layer)\n\
-                 \x20  --format q8.8|q5.11  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
+                 \x20  --format q8.8|q5.11|json|bin (comma-separated; json|bin picks the\n\
+                 \x20      artifact encoding for build/run/serve)\n\
+                 \x20  --hand  --with-fc  --reuse-regions  --emit-asm  --fast\n\
                  \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
+                 \x20  --disk-cache DIR --disk-cache-cap N (build, run, serve: persistent\n\
+                 \x20      checksum-verified artifact cache keyed by compile inputs)\n\
                  \x20  --shards N (build, serve, explain: N-stage pipeline partition)\n\
                  \x20  --requests N --models a,b --artifacts x,y --check (serve, loadtest)\n\
                  \x20  --workers N --max-batch B --queue-depth D --cache-cap N (serve)\n\
+                 \x20  --warmup (serve: deploy + pin every model before workers start)\n\
                  \x20  --wfq --weights name=w,.. --affinity (serve, loadtest)\n\
                  \x20  --faults kind:rate,.. --deadline-slack S --retries K --fault-seed S\n\
                  \x20  --breaker-threshold N --breaker-cooldown C (serve, chaos)\n\
@@ -591,10 +698,14 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     };
     let sched = sched_from_args(args, &server, &ids);
     server.set_sched(sched.clone());
+    server.set_warmup(args.flag("warmup"));
     let scfg = server.serve_config();
     println!(
-        "pool: {} workers, queue depth {}, max batch {}",
-        scfg.workers, scfg.queue_depth, scfg.max_batch
+        "pool: {} workers, queue depth {}, max batch {}{}",
+        scfg.workers,
+        scfg.queue_depth,
+        scfg.max_batch,
+        if server.warmup() { ", warmup on (models pinned)" } else { "" }
     );
     if sched.active() {
         println!(
@@ -911,13 +1022,22 @@ fn register_models(
     seed: u64,
     server: &mut Server,
 ) -> (Vec<ModelId>, Vec<snowflake::model::graph::Graph>) {
+    let dcache = open_disk_cache(args);
     let mut artifacts: Vec<Artifact> = Vec::new();
     if let Some(paths) = args.opt("artifacts") {
         for p in paths.split(',').filter(|p| !p.is_empty()) {
-            artifacts.push(Artifact::load(p, cfg).unwrap_or_else(|e| {
+            let a = Artifact::load(p, cfg).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(1);
-            }));
+            });
+            if let Some(c) = &dcache {
+                // Admit loaded files too, so a later `--models` run of
+                // the same build hits by fingerprint.
+                if let Err(e) = c.put(&a) {
+                    eprintln!("warning: disk-cache admit failed: {e}");
+                }
+            }
+            artifacts.push(a);
         }
     } else {
         let opts = options(args);
@@ -926,13 +1046,18 @@ fn register_models(
                 eprintln!("unknown model '{name}' (alexnet, resnet18, resnet50)");
                 std::process::exit(2);
             });
-            artifacts.push(
-                Compiler::new(cfg.clone()).options(opts.clone()).build(&g).unwrap_or_else(|e| {
-                    eprintln!("{e}");
-                    std::process::exit(1);
-                }),
-            );
+            artifacts.push(build_cached(dcache.as_ref(), cfg, &opts, &g));
         }
+    }
+    if let Some(c) = &dcache {
+        let s = c.stats();
+        println!(
+            "disk-cache: {} hits, {} misses, {} entries ({})",
+            s.hits,
+            s.misses,
+            c.len(),
+            c.dir().display()
+        );
     }
     let mut ids = Vec::new();
     let mut graphs = Vec::new();

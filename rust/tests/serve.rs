@@ -11,6 +11,7 @@
 
 use snowflake::arch::SnowflakeConfig;
 use snowflake::compiler::{Artifact, Compiler};
+use snowflake::engine::cache::DiskCache;
 use snowflake::engine::serve::{ServeConfig, ServeError, Server};
 use snowflake::engine::Engine;
 use snowflake::model::graph::Graph;
@@ -426,4 +427,156 @@ fn latency_percentiles_are_ordered_and_resilience_stays_dark() {
     assert_eq!(report.slo_violation_rate(), 0.0);
     assert_eq!(report.per_model[0].shed, 0);
     assert_eq!(report.per_model[0].breaker_trips, 0);
+}
+
+// ---------------------------------------------------------------------
+// ISSUE 9: the disk tier and the warmup phase.
+// ---------------------------------------------------------------------
+
+fn disk_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("snowflake_servedisk_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.to_string_lossy().into_owned()
+}
+
+/// Hit/miss/evict counter exactness across process "restarts": dropping
+/// the handle and re-opening the same directory models a new process —
+/// entries persist, per-process counters start at zero, and the LRU
+/// bound keeps holding across the restart.
+#[test]
+fn disk_cache_counters_are_exact_across_restarts() {
+    let cfg = SnowflakeConfig::default();
+    let a1 = build(&cfg, &small_graph("disk_r1", 8));
+    let a2 = build(&cfg, &small_graph("disk_r2", 12));
+    let a3 = build(&cfg, &small_graph("disk_r3", 16));
+    let dir = disk_dir("restart");
+
+    // Process 1: cold miss, then admit.
+    let c = DiskCache::open(&dir, 2).unwrap();
+    assert!(c.get(a1.fingerprint(), &cfg).is_none());
+    c.put(&a1).unwrap();
+    let s = c.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (0, 1, 0));
+    assert_eq!(c.len(), 1);
+    drop(c);
+
+    // Process 2, same directory: the entry survived, counters are
+    // fresh, and the read comes back fully verified and bit-identical.
+    let c = DiskCache::open(&dir, 2).unwrap();
+    assert_eq!(c.len(), 1, "entry must survive the restart");
+    let got = c.get(a1.fingerprint(), &cfg).expect("restart hit");
+    assert_eq!(got.compiled.program, a1.compiled.program);
+    assert_eq!(got.fingerprint(), a1.fingerprint());
+    let s = c.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (1, 0, 0));
+
+    // Fill past cap 2: a1 (bumped by the hit above) then a2, a3 — the
+    // admission of a3 evicts exactly the least-recently-used a1.
+    c.put(&a2).unwrap();
+    c.put(&a3).unwrap();
+    assert_eq!(c.len(), 2);
+    assert_eq!(c.stats().evictions, 1);
+    assert!(c.get(a1.fingerprint(), &cfg).is_none(), "LRU victim must be gone");
+    assert!(c.get(a2.fingerprint(), &cfg).is_some());
+    assert!(c.get(a3.fingerprint(), &cfg).is_some());
+    let s = c.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (3, 1, 1));
+    drop(c);
+
+    // Process 3: the post-eviction population persists too.
+    let c = DiskCache::open(&dir, 2).unwrap();
+    assert_eq!(c.len(), 2);
+    assert!(c.get(a1.fingerprint(), &cfg).is_none());
+    assert!(c.get(a3.fingerprint(), &cfg).is_some());
+    let s = c.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A tampered cache entry is a typed miss — never a crash, never
+/// damaged code served — the damaged file is dropped, and a recompile
+/// re-admits a verified replacement over the same key.
+#[test]
+fn tampered_disk_entry_is_a_miss_and_recompile_replaces_it() {
+    let cfg = SnowflakeConfig::default();
+    let g = small_graph("disk_tamper", 8);
+    let a = build(&cfg, &g);
+    let dir = disk_dir("tamper");
+    let c = DiskCache::open(&dir, 0).unwrap();
+    c.put(&a).unwrap();
+
+    // Flip one byte in the middle of the stored envelope (payload
+    // region: caught by a section checksum, not the header sniff).
+    let entry = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "bin"))
+        .expect("entry file present");
+    let mut bytes = std::fs::read(&entry).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&entry, &bytes).unwrap();
+
+    assert!(c.get(a.fingerprint(), &cfg).is_none(), "tampered entry must read as a miss");
+    assert!(!entry.exists(), "tampered entry must be deleted for the recompile to replace");
+    assert_eq!(c.len(), 0);
+
+    // The recompile path: build again, re-admit, verified hit.
+    let rebuilt = build(&cfg, &g);
+    c.put(&rebuilt).unwrap();
+    let got = c.get(a.fingerprint(), &cfg).expect("replacement entry hits");
+    assert_eq!(got.compiled.program, a.compiled.program);
+    let s = c.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The warmup stampede contract: N workers starting together deploy
+/// each registered model exactly once (the warm), every per-worker
+/// load is a hit, pinned models survive a cap-1 LRU, and the served
+/// responses stay bit-identical to the sequential engine.
+#[test]
+fn warmup_deploys_each_model_exactly_once_across_racing_workers() {
+    let cfg = SnowflakeConfig::default();
+    let ga = small_graph("serve_w_a", 8);
+    let gb = small_graph("serve_w_b", 12);
+    let seed = 21;
+    // cache_cap 1 with two models: without pinning, the second deploy
+    // would evict the first and every later load would re-deploy. With
+    // warmup both are pinned, so the counters below are only reachable
+    // through the "deploy once, pin, share" path.
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 4, max_batch: 2, queue_depth: 8, cache_cap: 1 },
+    );
+    server.set_warmup(true);
+    assert!(server.warmup());
+    let ia = server.register(build(&cfg, &ga), seed).unwrap();
+    let ib = server.register(build(&cfg, &gb), seed).unwrap();
+    let n = 12usize;
+    let requests: Vec<_> = (0..n)
+        .map(|r| {
+            let (id, g) = if r % 2 == 0 { (ia, &ga) } else { (ib, &gb) };
+            (id, synthetic_input(g, seed + r as u64))
+        })
+        .collect();
+    let (responses, report) = server.serve_all(requests).unwrap();
+    assert_eq!(responses.len(), n);
+
+    assert_eq!(report.cache.misses, 2, "warmup must deploy each model exactly once");
+    assert_eq!(report.cache.hits, 2 * 4, "all 4 workers x 2 models load from the warm cache");
+    assert_eq!(report.cache.evictions, 0, "pinned models must survive the cap-1 LRU");
+
+    // Bit-identical to the sequential engine, same as every other path.
+    let mut engine = Engine::new(cfg.clone());
+    let ha = engine.load(build(&cfg, &ga), seed).unwrap();
+    let hb = engine.load(build(&cfg, &gb), seed).unwrap();
+    for (r, resp) in responses.iter().enumerate() {
+        let (h, g) = if r % 2 == 0 { (ha, &ga) } else { (hb, &gb) };
+        let x = synthetic_input(g, seed + r as u64);
+        let want = engine.infer(h, &x).unwrap();
+        assert_eq!(resp.stats.comparable(), want.stats.comparable(), "request {r}");
+        assert_eq!(resp.output.count_diff(&want.output), 0, "request {r}");
+    }
 }
