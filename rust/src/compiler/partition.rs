@@ -155,6 +155,21 @@ impl ShardPlan {
         self.stage_cycles().into_iter().max().unwrap_or(0)
     }
 
+    /// Apportion a deadline over the pipeline: each stage gets its own
+    /// in-sim cycle budget `ceil(predicted_cycles × slack)` — the same
+    /// cost-model prediction the whole-pipeline budget
+    /// (`predicted_cycles() × slack`, links included) is built from, so
+    /// the per-stage budgets sum to the stage share of the whole and a
+    /// stage that blows its share is named at the exact cycle it does.
+    /// Link time is *not* apportioned per stage; effective link cycles
+    /// accrue against the whole-pipeline budget as boundaries cross.
+    pub fn stage_budgets(&self, slack: f64) -> Vec<u64> {
+        self.stages
+            .iter()
+            .map(|s| (s.predicted_cycles as f64 * slack).ceil() as u64)
+            .collect()
+    }
+
     pub fn config_hash(&self) -> u64 {
         config_hash(&self.cfg)
     }

@@ -146,34 +146,50 @@ impl ArtifactCache {
         artifact: &Arc<Artifact>,
         seed: u64,
     ) -> Result<ModelHandle, EngineError> {
-        let key = (artifact.fingerprint(), seed);
-        let machine = {
-            let mut images = self.images.lock().expect("artifact cache poisoned");
-            images.clock += 1;
-            let now = images.clock;
-            match images.map.get_mut(&key) {
-                Some(entry) => {
-                    entry.last_use = now;
-                    self.hits.fetch_add(1, Ordering::Relaxed);
-                    entry.machine.clone()
-                }
-                None => {
-                    // Build under the lock: a racing worker loading the
-                    // same model waits here and takes the hit path
-                    // instead of deploying a second time.
-                    let weights = Weights::init(&artifact.graph, seed);
-                    let proto = deployed_machine(artifact, &weights);
-                    self.misses.fetch_add(1, Ordering::Relaxed);
-                    let machine = proto.clone();
-                    images
-                        .map
-                        .insert(key, CachedImage { machine: proto, last_use: now, pinned: false });
-                    self.evict_over_cap(&mut images);
-                    machine
-                }
-            }
-        };
+        let machine = self.image_with(artifact, seed, || {
+            let weights = Weights::init(&artifact.graph, seed);
+            deployed_machine(artifact, &weights)
+        });
         engine.load_image(Arc::clone(artifact), machine)
+    }
+
+    /// The cached image for `(artifact, seed)`, running `build` under
+    /// the map lock on a miss. This is the entry point for callers
+    /// whose weights are *not* `Weights::init(graph, seed)` — pipeline
+    /// stages deploy slices of the full model's weights, so only the
+    /// caller can build the image. The key contract is the caller's:
+    /// `build` must be a pure function of the key, or cached clones
+    /// would diverge from fresh deploys.
+    pub fn image_with(
+        &self,
+        artifact: &Artifact,
+        seed: u64,
+        build: impl FnOnce() -> Machine,
+    ) -> Machine {
+        let key = (artifact.fingerprint(), seed);
+        let mut images = self.images.lock().expect("artifact cache poisoned");
+        images.clock += 1;
+        let now = images.clock;
+        match images.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_use = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                entry.machine.clone()
+            }
+            None => {
+                // Build under the lock: a racing worker loading the
+                // same model waits here and takes the hit path
+                // instead of deploying a second time.
+                let proto = build();
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let machine = proto.clone();
+                images
+                    .map
+                    .insert(key, CachedImage { machine: proto, last_use: now, pinned: false });
+                self.evict_over_cap(&mut images);
+                machine
+            }
+        }
     }
 
     /// Deploy `artifact` ahead of any worker and **pin** the image:
@@ -185,6 +201,16 @@ impl ArtifactCache {
     /// entries may hold the cache over capacity; unpinned churn still
     /// evicts among itself.
     pub fn warm(&self, artifact: &Arc<Artifact>, seed: u64) {
+        self.warm_with(artifact, seed, || {
+            let weights = Weights::init(&artifact.graph, seed);
+            deployed_machine(artifact, &weights)
+        });
+    }
+
+    /// [`ArtifactCache::warm`] with a caller-supplied builder — the
+    /// stage-image counterpart of [`ArtifactCache::image_with`], used
+    /// to pin every stage of a sharded model before workers start.
+    pub fn warm_with(&self, artifact: &Artifact, seed: u64, build: impl FnOnce() -> Machine) {
         let key = (artifact.fingerprint(), seed);
         let mut images = self.images.lock().expect("artifact cache poisoned");
         images.clock += 1;
@@ -195,8 +221,7 @@ impl ArtifactCache {
                 entry.pinned = true;
             }
             None => {
-                let weights = Weights::init(&artifact.graph, seed);
-                let proto = deployed_machine(artifact, &weights);
+                let proto = build();
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 images
                     .map
@@ -707,6 +732,39 @@ mod tests {
         // Two pinned models may hold a cap-1 cache over capacity.
         cache.warm(&a2, 1);
         assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 3, evictions: 1 });
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn builder_entry_points_build_once_and_pin() {
+        // `image_with`/`warm_with` are the stage-image path: the caller
+        // owns the build (stage weights are slices of the full model's,
+        // which the cache cannot reconstruct), the cache owns identity.
+        let cfg = SnowflakeConfig::default();
+        let g = small_graph("with1");
+        let artifact = Compiler::new(cfg.clone()).build(&g).unwrap();
+        let weights = Weights::init(&g, 5);
+        let cache = ArtifactCache::new();
+        let mut builds = 0u32;
+        let mut get = |cache: &ArtifactCache, builds: &mut u32| {
+            cache.image_with(&artifact, 5, || {
+                *builds += 1;
+                deployed_machine(&artifact, &weights)
+            })
+        };
+        let a = get(&cache, &mut builds); // miss: builds
+        let b = get(&cache, &mut builds); // hit: clones
+        assert_eq!(builds, 1, "second image_with must not re-deploy");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        assert_eq!(a.memory, b.memory, "cached clone carries the exact DRAM image");
+        // warm_with on a resident entry pins without building or
+        // counting; on an absent one it builds exactly once.
+        cache.warm_with(&artifact, 5, || unreachable!("already resident"));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        let other = Compiler::new(cfg).build(&small_graph("with2")).unwrap();
+        let ow = Weights::init(&other.graph, 5);
+        cache.warm_with(&other, 5, || deployed_machine(&other, &ow));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, evictions: 0 });
         assert_eq!(cache.len(), 2);
     }
 

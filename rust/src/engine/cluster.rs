@@ -27,8 +27,9 @@ use crate::compiler::layout::Canvas;
 use crate::compiler::partition::{self, ShardPlan};
 use crate::fixed::QFormat;
 use crate::model::weights::Weights;
+use crate::sim::fault::{FaultSpec, LinkFault, PlanHint};
 use crate::sim::stats::Stats;
-use crate::sim::Machine;
+use crate::sim::{Machine, SimError, SimErrorKind};
 use crate::tensor::Tensor;
 
 struct StageRt {
@@ -38,6 +39,97 @@ struct StageRt {
     fmt: QFormat,
     /// Freshly deployed: the first inference needs no reset.
     fresh: bool,
+}
+
+/// Fault/deadline policy for one resilient pipeline inference
+/// ([`Cluster::infer_resilient`]). The default policy is empty — no
+/// faults, no budgets — under which the resilient path is bit-identical
+/// to [`Cluster::infer`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelinePolicy<'a> {
+    /// Fault rates; per-stage machine plans and per-link draws are
+    /// keyed by (seed, request, attempt, stage/link salt).
+    pub spec: Option<&'a FaultSpec>,
+    pub seed: u64,
+    pub request: u64,
+    /// Attempt number the chain starts at (a redelivery after a worker
+    /// kill resumes at its outer attempt, so its stages draw fresh
+    /// streams).
+    pub first_attempt: u64,
+    /// Total attempt budget for this request: every stage retry and
+    /// link re-send advances one shared attempt counter, which may not
+    /// exceed `retries`.
+    pub retries: u64,
+    /// Apportioned per-stage in-sim cycle budgets
+    /// ([`ShardPlan::stage_budgets`]); `None` disables deadlines.
+    pub stage_budgets: Option<&'a [u64]>,
+    /// Whole-pipeline budget, links included — checked as modeled link
+    /// cycles accrue between stages.
+    pub total_budget: Option<u64>,
+    /// Per-stage plan-geometry hints; defaults are used where missing.
+    pub hints: Option<&'a [PlanHint]>,
+}
+
+/// Counters from one resilient pipeline chain — the observability the
+/// stage-granular retry invariant is asserted through: a clean run has
+/// every `stage_sims[k] == 1`, and a retried stage bumps *only* its own
+/// entry.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PipelineCounters {
+    /// Simulator runs per stage (1 = clean; >1 = that stage retried).
+    pub stage_sims: Vec<u64>,
+    /// Retries consumed (stage re-runs plus link re-sends).
+    pub retries: u64,
+    /// Machine faults scheduled across all stage attempts.
+    pub faults_injected: u64,
+    /// Link faults drawn (drops and degrades).
+    pub link_faults: u64,
+}
+
+/// Typed failure of a resilient pipeline inference — every variant
+/// names where in the pipeline the request died.
+#[derive(Clone, Debug)]
+pub enum PipelineFailure {
+    /// A cycle budget expired: stage `stage`'s in-sim budget when
+    /// `at_link` is false, or the whole-pipeline budget while crossing
+    /// the link *after* stage `stage` when true.
+    Deadline { stage: usize, at_link: bool, budget_cycles: u64 },
+    /// Stage `stage`'s simulation failed (hard, or transient with the
+    /// retry budget spent); `error.injected` separates chaos from real
+    /// bugs.
+    Stage { stage: usize, error: SimError },
+    /// Link `link` (between stages `link` and `link+1`) dropped the
+    /// boundary transfer with no retries left.
+    Link { link: usize },
+}
+
+impl std::fmt::Display for PipelineFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineFailure::Deadline { stage, at_link: false, budget_cycles } => {
+                write!(f, "stage {stage}: cycle budget {budget_cycles} exhausted")
+            }
+            PipelineFailure::Deadline { stage, at_link: true, budget_cycles } => write!(
+                f,
+                "link {stage}->{}: pipeline budget {budget_cycles} exhausted",
+                stage + 1
+            ),
+            PipelineFailure::Stage { stage, error } => write!(f, "stage {stage}: {error}"),
+            PipelineFailure::Link { link } => write!(
+                f,
+                "link {link}->{}: boundary transfer dropped (retries exhausted)",
+                link + 1
+            ),
+        }
+    }
+}
+
+/// Result of [`Cluster::infer_resilient`]: what happened, plus the
+/// per-stage accounting of how it happened.
+#[derive(Clone, Debug)]
+pub struct PipelineOutcome {
+    pub counters: PipelineCounters,
+    pub result: Result<ClusterInference, PipelineFailure>,
 }
 
 /// One simulated inference through the whole pipeline.
@@ -56,7 +148,8 @@ pub struct ClusterInference {
     /// output interior) — the `--check` oracle compares these against
     /// the unsharded machine's canvases at the same graph nodes.
     pub boundaries: Vec<Tensor<i16>>,
-    /// Modeled transfer cycles per link.
+    /// Effective transfer cycles per link: the modeled constant, times
+    /// the degrade factor where a link-degrade fault fired.
     pub link_cycles: Vec<u64>,
 }
 
@@ -77,12 +170,49 @@ impl Cluster {
     /// per stage — the same weights every unsharded load of this model
     /// gets, which is what makes sharded outputs comparable at all.
     pub fn new(plan: &ShardPlan, seed: u64) -> Result<Cluster, EngineError> {
+        Self::build(plan, seed, |_, weights, st| deployed_machine(&st.artifact, weights))
+    }
+
+    /// [`Cluster::new`] with stage deployments routed through the
+    /// shared image cache: the first build of a stage anywhere deploys
+    /// (one miss per stage), every later worker clones the cached DRAM
+    /// image (a hit per stage per worker) — bit-identical either way.
+    /// Stage artifacts have distinct fingerprints, so they key cleanly
+    /// next to unsharded models.
+    pub fn new_cached(
+        plan: &ShardPlan,
+        seed: u64,
+        cache: &super::cache::ArtifactCache,
+    ) -> Result<Cluster, EngineError> {
+        Self::build(plan, seed, |full_seed, weights, st| {
+            cache.image_with(&st.artifact, full_seed, || deployed_machine(&st.artifact, weights))
+        })
+    }
+
+    /// Warmup path: deploy **and pin** every stage image of `plan` into
+    /// the shared cache before any worker spawns — one miss per stage
+    /// on the first warm, after which every [`Cluster::new_cached`]
+    /// load is a hit per stage, and pinned stage images never fall to
+    /// LRU churn mid-run.
+    pub fn warm_stages(plan: &ShardPlan, seed: u64, cache: &super::cache::ArtifactCache) {
+        let full = Weights::init(&plan.graph, seed);
+        for st in &plan.stages {
+            let weights = partition::stage_weights(&full, st.start, st.end);
+            cache.warm_with(&st.artifact, seed, || deployed_machine(&st.artifact, &weights));
+        }
+    }
+
+    fn build(
+        plan: &ShardPlan,
+        seed: u64,
+        mut deploy_stage: impl FnMut(u64, &Weights, &partition::Stage) -> Machine,
+    ) -> Result<Cluster, EngineError> {
         plan.validate().map_err(|e| EngineError::BadInput(e.to_string()))?;
         let full = Weights::init(&plan.graph, seed);
         let mut stages = Vec::with_capacity(plan.n_stages());
         for st in &plan.stages {
             let weights = partition::stage_weights(&full, st.start, st.end);
-            let machine = deployed_machine(&st.artifact, &weights);
+            let machine = deploy_stage(seed, &weights, st);
             let out_node = st.artifact.output_node.ok_or(EngineError::NoOutput)?;
             let splan = &st.artifact.compiled.plan;
             let out_canvas = *splan.canvases.get(&out_node).ok_or(EngineError::NoOutput)?;
@@ -129,8 +259,34 @@ impl Cluster {
     }
 
     /// Run one input through every stage in order, forwarding each
-    /// boundary activation verbatim.
+    /// boundary activation verbatim. This is the empty-policy case of
+    /// [`Cluster::infer_resilient`] — one code path, so the healthy run
+    /// is bit-identical by construction.
     pub fn infer(&mut self, input: &Tensor<f32>) -> Result<ClusterInference, EngineError> {
+        let out = self.infer_resilient(input, &PipelinePolicy::default())?;
+        out.result.map_err(|fail| match fail {
+            PipelineFailure::Stage { error, .. } => EngineError::Sim(error),
+            // Unreachable with an empty policy: no budgets, no links
+            // faults. Kept typed rather than panicking.
+            other => EngineError::BadInput(other.to_string()),
+        })
+    }
+
+    /// Run one input through the pipeline under a fault/deadline policy
+    /// with **stage-granular retry**: an injected stage failure re-runs
+    /// only the failed stage from its retained boundary activation
+    /// (fresh attempt salt), never the whole pipeline; a dropped link
+    /// re-sends the retained boundary the same way. Per-stage budgets
+    /// cut runs off in-sim at the exact budget cycle; modeled link
+    /// cycles (degrades included) accrue against the whole-pipeline
+    /// budget. The outer `Err` is reserved for infrastructure misuse
+    /// (bad input shape); everything chaos-induced is a typed
+    /// [`PipelineFailure`] inside [`PipelineOutcome`].
+    pub fn infer_resilient(
+        &mut self,
+        input: &Tensor<f32>,
+        pol: &PipelinePolicy,
+    ) -> Result<PipelineOutcome, EngineError> {
         let cv = self.stages[0].in_canvas;
         if input.shape != vec![cv.c, cv.h, cv.w] {
             return Err(EngineError::BadInput(format!(
@@ -140,23 +296,110 @@ impl Cluster {
             )));
         }
         let n = self.stages.len();
-        let mut stage_stats = Vec::with_capacity(n);
+        let spec = pol.spec.filter(|s| !s.rates.is_empty());
+        let mut counters = PipelineCounters { stage_sims: vec![0; n], ..Default::default() };
+        let fail = |counters: PipelineCounters, f: PipelineFailure| {
+            Ok(PipelineOutcome { counters, result: Err(f) })
+        };
+        // One shared attempt counter across the chain: every stage
+        // retry and link re-send advances it, so retries draw fresh
+        // per-stage streams and the total budget is enforced globally.
+        let mut attempt = pol.first_attempt;
+        // Successful stage cycles plus effective link cycles so far —
+        // the elapsed pipeline time the whole-budget check sees.
+        let mut elapsed = 0u64;
+        let mut stage_stats: Vec<Stats> = Vec::with_capacity(n);
         let mut boundaries = Vec::with_capacity(n.saturating_sub(1));
+        let mut link_cycles_eff = Vec::with_capacity(n.saturating_sub(1));
         let mut carry: Option<Tensor<i16>> = None;
-        for (k, st) in self.stages.iter_mut().enumerate() {
-            if !st.fresh {
-                st.machine.reset_for_inference();
-            }
-            st.fresh = false;
-            st.machine.set_cycle_limit(None);
-            match &carry {
-                None => deploy::write_canvas(&mut st.machine, &st.in_canvas, input, st.fmt),
-                Some(t) => deploy::write_canvas_i16(&mut st.machine, &st.in_canvas, t),
-            }
-            let stats = st.machine.run().map_err(EngineError::Sim)?;
-            let out = deploy::read_canvas(&st.machine, &st.out_canvas);
+        for k in 0..n {
+            let budget = pol.stage_budgets.and_then(|b| b.get(k)).copied();
+            // Stage attempt loop: the carry (and the input) are
+            // retained, so a retry re-runs only this stage.
+            let stats = loop {
+                let st = &mut self.stages[k];
+                if !st.fresh {
+                    st.machine.reset_for_inference();
+                }
+                st.fresh = false;
+                st.machine.set_cycle_limit(budget);
+                if let Some(spec) = spec {
+                    let hint =
+                        pol.hints.and_then(|h| h.get(k)).copied().unwrap_or_default();
+                    let plan =
+                        spec.plan_for_stage(pol.seed, pol.request, attempt, k, &hint);
+                    counters.faults_injected += plan.len() as u64;
+                    st.machine.set_fault_plan(plan);
+                }
+                match &carry {
+                    None => deploy::write_canvas(&mut st.machine, &st.in_canvas, input, st.fmt),
+                    Some(t) => deploy::write_canvas_i16(&mut st.machine, &st.in_canvas, t),
+                }
+                counters.stage_sims[k] += 1;
+                match st.machine.run() {
+                    Ok(stats) => break stats,
+                    Err(se) => {
+                        // The transience signal: injected faults fired.
+                        // A pure deadline miss or a real program bug is
+                        // not retriable — exactly the unsharded rule.
+                        if se.injected && attempt < pol.retries {
+                            attempt += 1;
+                            counters.retries += 1;
+                            continue;
+                        }
+                        let f = if se.kind == SimErrorKind::DeadlineExceeded {
+                            PipelineFailure::Deadline {
+                                stage: k,
+                                at_link: false,
+                                budget_cycles: budget.unwrap_or(0),
+                            }
+                        } else {
+                            PipelineFailure::Stage { stage: k, error: se }
+                        };
+                        return fail(counters, f);
+                    }
+                }
+            };
+            elapsed += stats.cycles;
+            let out = deploy::read_canvas(&self.stages[k].machine, &self.stages[k].out_canvas);
             stage_stats.push(stats);
             if k + 1 < n {
+                // Cross link k, re-sending the retained boundary on a
+                // drop until the attempt budget runs out.
+                let base = self.link_cycles[k];
+                let eff = loop {
+                    match spec.and_then(|s| s.link_fault_for(pol.seed, pol.request, attempt, k))
+                    {
+                        None => break base,
+                        Some(LinkFault::Degrade { factor }) => {
+                            counters.link_faults += 1;
+                            break base.saturating_mul(factor);
+                        }
+                        Some(LinkFault::Drop) => {
+                            counters.link_faults += 1;
+                            if attempt < pol.retries {
+                                attempt += 1;
+                                counters.retries += 1;
+                                continue;
+                            }
+                            return fail(counters, PipelineFailure::Link { link: k });
+                        }
+                    }
+                };
+                elapsed += eff;
+                if let Some(total) = pol.total_budget {
+                    if elapsed > total {
+                        return fail(
+                            counters,
+                            PipelineFailure::Deadline {
+                                stage: k,
+                                at_link: true,
+                                budget_cycles: total,
+                            },
+                        );
+                    }
+                }
+                link_cycles_eff.push(eff);
                 boundaries.push(out.clone());
             }
             carry = Some(out);
@@ -166,13 +409,16 @@ impl Cluster {
         for s in &stage_stats[1..] {
             absorb(&mut stats, s);
         }
-        stats.cycles += self.link_cycles.iter().sum::<u64>();
-        Ok(ClusterInference {
-            stats,
-            output: carry.expect("at least one stage"),
-            stage_stats,
-            boundaries,
-            link_cycles: self.link_cycles.clone(),
+        stats.cycles += link_cycles_eff.iter().sum::<u64>();
+        Ok(PipelineOutcome {
+            counters,
+            result: Ok(ClusterInference {
+                stats,
+                output: carry.expect("at least one stage"),
+                stage_stats,
+                boundaries,
+                link_cycles: link_cycles_eff,
+            }),
         })
     }
 }
@@ -355,6 +601,232 @@ mod tests {
         assert!(got.boundaries.is_empty());
     }
 
+    /// The single-code-path contract: the resilient path under an empty
+    /// policy is `infer`, bit for bit, with every per-stage sim counter
+    /// at exactly 1.
+    #[test]
+    fn resilient_empty_policy_matches_infer_bit_for_bit() {
+        let cfg = SnowflakeConfig::default();
+        let g = two_conv_graph();
+        let plan = partition_at(&g, &cfg, &CompileOptions::default(), &[1]).unwrap();
+        let x = synthetic_input(&g, 5);
+        let mut a = Cluster::new(&plan, 5).unwrap();
+        let mut b = Cluster::new(&plan, 5).unwrap();
+        let want = a.infer(&x).unwrap();
+        let out = b.infer_resilient(&x, &PipelinePolicy::default()).unwrap();
+        assert_eq!(out.counters.stage_sims, vec![1, 1]);
+        assert_eq!(out.counters, PipelineCounters { stage_sims: vec![1, 1], ..Default::default() });
+        let got = out.result.expect("empty policy cannot fail");
+        assert_eq!(got.stats.cycles, want.stats.cycles);
+        assert_eq!(got.output.data, want.output.data);
+        assert_eq!(got.link_cycles, want.link_cycles);
+    }
+
+    /// The stage-granular retry invariant, asserted through the
+    /// per-stage sim counters: when faults down a stage attempt, only
+    /// the failed stage re-simulates — and because the boundary is
+    /// forwarded verbatim, the survivor is bit-identical to a
+    /// never-faulted run.
+    #[test]
+    fn stage_retry_reruns_only_the_failed_stage_and_stays_bit_identical() {
+        let cfg = SnowflakeConfig::default();
+        let g = two_conv_graph();
+        let plan = partition_at(&g, &cfg, &CompileOptions::default(), &[1]).unwrap();
+        let seed = 11;
+        let x = synthetic_input(&g, seed);
+        let want = Cluster::new(&plan, seed).unwrap().infer(&x).unwrap();
+        let spec = FaultSpec::parse("abort:0.5").unwrap();
+        let hints: Vec<PlanHint> = plan
+            .stages
+            .iter()
+            .map(|st| PlanHint {
+                mem_words: st.artifact.compiled.plan.mem_words,
+                expect_cycles: st.predicted_cycles.max(1),
+                ..Default::default()
+            })
+            .collect();
+        let mut cl = Cluster::new(&plan, seed).unwrap();
+        let mut saw_single_stage_retry = false;
+        for r in 0..48u64 {
+            let pol = PipelinePolicy {
+                spec: Some(&spec),
+                seed: 7,
+                request: r,
+                retries: 6,
+                hints: Some(&hints[..]),
+                ..Default::default()
+            };
+            let out = cl.infer_resilient(&x, &pol).unwrap();
+            let got = out.result.unwrap_or_else(|f| panic!("request {r}: {f}"));
+            // Retried or not, the survivor is the healthy answer.
+            assert_eq!(got.output.data, want.output.data, "request {r}");
+            assert_eq!(got.stats.cycles, want.stats.cycles, "request {r}");
+            let sims = &out.counters.stage_sims;
+            let total_retries: u64 = sims.iter().map(|&s| s - 1).sum();
+            assert_eq!(total_retries, out.counters.retries, "request {r}");
+            if sims.iter().filter(|&&s| s > 1).count() == 1 {
+                saw_single_stage_retry = true;
+            }
+            // Replays are bit-identical, counters included.
+            let replay = cl.infer_resilient(&x, &pol).unwrap();
+            assert_eq!(replay.counters, out.counters, "request {r}: replay diverged");
+        }
+        assert!(saw_single_stage_retry, "abort:0.5 over 48 requests never retried one stage");
+
+        // Retry budget 0: the first scheduled abort fails typed, naming
+        // its stage, with the injected flag set.
+        let mut failed = 0;
+        for r in 0..48u64 {
+            let pol = PipelinePolicy {
+                spec: Some(&spec),
+                seed: 7,
+                request: r,
+                retries: 0,
+                hints: Some(&hints[..]),
+                ..Default::default()
+            };
+            let out = cl.infer_resilient(&x, &pol).unwrap();
+            if let Err(f) = out.result {
+                failed += 1;
+                match f {
+                    PipelineFailure::Stage { stage, error } => {
+                        assert!(stage < 2);
+                        assert!(error.injected, "request {r}: abort not flagged injected");
+                    }
+                    other => panic!("request {r}: expected a stage failure, got {other}"),
+                }
+            }
+        }
+        assert!(failed > 0, "abort:0.5 with no retries never failed");
+    }
+
+    /// Link faults: a degrade multiplies the charged link cycles (and
+    /// nothing else — outputs stay bit-identical), a drop consumes
+    /// retries re-sending the retained boundary, and a drop with no
+    /// budget left fails typed naming the link.
+    #[test]
+    fn link_faults_charge_cycles_and_drop_consumes_retries() {
+        let cfg = SnowflakeConfig::default();
+        let g = two_conv_graph();
+        let plan = partition_at(&g, &cfg, &CompileOptions::default(), &[1]).unwrap();
+        let x = synthetic_input(&g, 3);
+        let want = Cluster::new(&plan, 3).unwrap().infer(&x).unwrap();
+        let base = want.link_cycles[0];
+        assert!(base > 0);
+
+        let degrade = FaultSpec::parse("link-degrade:1.0").unwrap();
+        let mut cl = Cluster::new(&plan, 3).unwrap();
+        let pol = PipelinePolicy { spec: Some(&degrade), seed: 9, request: 0, ..Default::default() };
+        let out = cl.infer_resilient(&x, &pol).unwrap();
+        assert_eq!(out.counters.link_faults, 1);
+        let got = out.result.expect("a degrade only slows the link");
+        assert_eq!(got.output.data, want.output.data);
+        let factor = got.link_cycles[0] / base;
+        assert!((2..=8).contains(&factor), "factor {factor}");
+        assert_eq!(got.link_cycles[0], base * factor);
+        assert_eq!(
+            got.stats.cycles,
+            want.stats.cycles - base + got.link_cycles[0],
+            "degrade must charge exactly the extra link cycles"
+        );
+
+        // Drop at rate 1.0: every re-send is dropped too, so the chain
+        // burns the whole budget and fails typed at the link.
+        let drop = FaultSpec::parse("link-drop:1.0").unwrap();
+        let retries = 3u64;
+        let pol = PipelinePolicy {
+            spec: Some(&drop),
+            seed: 9,
+            request: 0,
+            retries,
+            ..Default::default()
+        };
+        let out = cl.infer_resilient(&x, &pol).unwrap();
+        match out.result {
+            Err(PipelineFailure::Link { link: 0 }) => {}
+            other => panic!("expected a link-drop failure, got {other:?}"),
+        }
+        assert_eq!(out.counters.retries, retries, "every retry re-sends the link");
+        assert_eq!(out.counters.link_faults, retries + 1);
+        assert_eq!(out.counters.stage_sims, vec![1, 0], "stage 0 must not re-run on a drop");
+
+        // Drop at 0.5 with a budget: some request survives via re-send,
+        // bit-identical to healthy.
+        let drop_half = FaultSpec::parse("link-drop:0.5").unwrap();
+        let mut resent = false;
+        for r in 0..48u64 {
+            let pol = PipelinePolicy {
+                spec: Some(&drop_half),
+                seed: 9,
+                request: r,
+                retries: 6,
+                ..Default::default()
+            };
+            let out = cl.infer_resilient(&x, &pol).unwrap();
+            if out.counters.retries > 0 {
+                if let Ok(got) = &out.result {
+                    resent = true;
+                    assert_eq!(got.output.data, want.output.data, "request {r}");
+                    assert_eq!(got.link_cycles[0], base, "a clean re-send is charged once");
+                }
+            }
+        }
+        assert!(resent, "link-drop:0.5 over 48 requests never recovered via re-send");
+    }
+
+    /// Apportioned budgets fire in-sim naming the stage; the whole-
+    /// pipeline budget catches link overruns; generous budgets change
+    /// nothing.
+    #[test]
+    fn stage_budgets_cut_off_typed_naming_the_stage() {
+        let cfg = SnowflakeConfig::default();
+        let g = two_conv_graph();
+        let plan = partition_at(&g, &cfg, &CompileOptions::default(), &[1]).unwrap();
+        let x = synthetic_input(&g, 3);
+        let want = Cluster::new(&plan, 3).unwrap().infer(&x).unwrap();
+        let mut cl = Cluster::new(&plan, 3).unwrap();
+
+        // Stage 1 starved, stage 0 generous: the failure names stage 1
+        // and the cut lands at exactly the budget cycle.
+        let budgets = vec![u64::MAX, 1_000];
+        let pol = PipelinePolicy { stage_budgets: Some(&budgets[..]), ..Default::default() };
+        let out = cl.infer_resilient(&x, &pol).unwrap();
+        match out.result {
+            Err(PipelineFailure::Deadline { stage: 1, at_link: false, budget_cycles }) => {
+                assert_eq!(budget_cycles, 1_000)
+            }
+            other => panic!("expected a stage-1 deadline, got {other:?}"),
+        }
+        assert_eq!(out.counters.stage_sims, vec![1, 1]);
+        assert_eq!(out.counters.retries, 0, "a pure deadline miss must not retry");
+
+        // Whole-pipeline budget too small for the link crossing.
+        let generous = vec![u64::MAX, u64::MAX];
+        let total = want.stage_stats[0].cycles; // spent before the link
+        let pol = PipelinePolicy {
+            stage_budgets: Some(&generous[..]),
+            total_budget: Some(total),
+            ..Default::default()
+        };
+        let out = cl.infer_resilient(&x, &pol).unwrap();
+        match out.result {
+            Err(PipelineFailure::Deadline { stage: 0, at_link: true, budget_cycles }) => {
+                assert_eq!(budget_cycles, total)
+            }
+            other => panic!("expected a link-crossing deadline, got {other:?}"),
+        }
+
+        // Generous everything: bit-identical to the unbudgeted run.
+        let pol = PipelinePolicy {
+            stage_budgets: Some(&generous[..]),
+            total_budget: Some(u64::MAX),
+            ..Default::default()
+        };
+        let got = cl.infer_resilient(&x, &pol).unwrap().result.unwrap();
+        assert_eq!(got.stats.cycles, want.stats.cycles);
+        assert_eq!(got.output.data, want.output.data);
+    }
+
     #[test]
     fn pipeline_timing_overlaps_stages() {
         // Two balanced stages of 100 cycles, 10-cycle link, 4 requests:
@@ -372,5 +844,30 @@ mod tests {
         // Unbalanced: the bottleneck stage sets the interval.
         let tb = pipeline_timing(&[30, 100], &[5], 3);
         assert_eq!(tb.makespan, 30 + 5 + 3 * 100);
+    }
+
+    #[test]
+    fn pipeline_timing_edge_cases() {
+        // Zero requests: an empty schedule, unit speedup.
+        let t0 = pipeline_timing(&[100, 100], &[10], 0);
+        assert!(t0.finish.is_empty());
+        assert_eq!(t0.makespan, 0);
+        assert_eq!(t0.sequential, 0);
+        assert_eq!(t0.speedup(), 1.0);
+        // One request: no overlap possible — makespan is exactly the
+        // sequential per-request latency.
+        let t1 = pipeline_timing(&[100, 100], &[10], 1);
+        assert_eq!(t1.finish, vec![210]);
+        assert_eq!(t1.makespan, t1.sequential);
+        assert_eq!(t1.speedup(), 1.0);
+        // One stage, zero links, zero and one requests.
+        assert_eq!(pipeline_timing(&[70], &[], 0).makespan, 0);
+        assert_eq!(pipeline_timing(&[70], &[], 1).finish, vec![70]);
+        // A link slower than every stage: links delay arrival but never
+        // occupy a machine, so the initiation interval is still the
+        // bottleneck *stage* (60), not the 200-cycle link.
+        let tl = pipeline_timing(&[50, 60], &[200], 3);
+        assert_eq!(tl.finish, vec![310, 370, 430]);
+        assert_eq!(tl.finish[2] - tl.finish[1], 60);
     }
 }

@@ -120,7 +120,7 @@
 //!   bit-identical to the sequential oracle no matter the policy.
 
 use super::cache::{ArtifactCache, CacheStats};
-use super::cluster::Cluster;
+use super::cluster::{Cluster, PipelineFailure, PipelineOutcome, PipelinePolicy};
 use super::loadgen::Trace;
 use super::{Engine, EngineError, Inference, ModelHandle};
 use crate::arch::SnowflakeConfig;
@@ -131,7 +131,7 @@ use crate::compiler::Artifact;
 use crate::model::weights::synthetic_input;
 use crate::sim::fault::{FaultPlan, FaultSpec, PlanHint};
 use crate::sim::stats::Stats;
-use crate::sim::SimErrorKind;
+use crate::sim::{SimError, SimErrorKind};
 use crate::tensor::Tensor;
 use crate::util::hist::Histogram;
 use std::cmp::Reverse;
@@ -324,8 +324,14 @@ pub enum ServeError {
     /// The request ran past its cycle budget (cost-model prediction ×
     /// [`ResilienceConfig::deadline_slack`]) and was cut off in-sim.
     DeadlineExceeded {
-        /// The exhausted budget, in simulated cycles.
+        /// The exhausted budget, in simulated cycles. For a sharded
+        /// model this is the apportioned per-stage budget when a stage
+        /// blew it, or the whole-pipeline budget when the overrun was
+        /// caught at a link crossing.
         budget_cycles: u64,
+        /// For sharded models: where in the pipeline the budget ran out
+        /// (`"stage 1"`, `"link 0->1"`). `None` for unsharded models.
+        at: Option<String>,
     },
     /// [`Ticket::wait_timeout`] gave up before the request resolved.
     WaitTimeout,
@@ -345,9 +351,10 @@ pub enum ServeError {
         predicted_miss: u64,
     },
     /// The requested feature combination is not implemented — rejected
-    /// up front, before any worker spins up or request is accepted
-    /// (e.g. fault injection or deadline budgets against a sharded
-    /// model, or loadtesting a sharded registry).
+    /// up front, before any worker spins up or request is accepted.
+    /// Sharded models are now first-class citizens of the
+    /// fault/deadline/loadtest paths, so nothing in-tree constructs
+    /// this today; the variant stays for downstream callers.
     Unsupported(String),
 }
 
@@ -360,8 +367,12 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueFull => write!(f, "request queue is full"),
             ServeError::Closed => write!(f, "server is closed to new requests"),
             ServeError::Worker(m) => write!(f, "worker startup failed: {m}"),
-            ServeError::DeadlineExceeded { budget_cycles } => {
-                write!(f, "deadline exceeded: cycle budget {budget_cycles} exhausted")
+            ServeError::DeadlineExceeded { budget_cycles, at } => {
+                write!(f, "deadline exceeded: cycle budget {budget_cycles} exhausted")?;
+                match at {
+                    Some(at) => write!(f, " at {at}"),
+                    None => Ok(()),
+                }
             }
             ServeError::WaitTimeout => write!(f, "timed out waiting for the response"),
             ServeError::ModelUnavailable(i) => {
@@ -585,10 +596,17 @@ fn wfq_tag(v: f64, finish: &mut [f64], pred: &[u64], sched: &SchedConfig, model:
 /// [`ResilienceConfig`] + the registered artifacts.
 struct Policy {
     retries: u64,
-    /// Per-model cycle budget (`None` = no deadline).
+    /// Per-model cycle budget (`None` = no deadline). For a sharded
+    /// model this is the *whole-pipeline* budget, links included.
     deadline: Vec<Option<u64>>,
     /// Per-model fault-plan shape hints.
     hints: Vec<PlanHint>,
+    /// Sharded models: apportioned per-stage cycle budgets
+    /// ([`ShardPlan::stage_budgets`]); `None` for unsharded models or
+    /// when deadlines are off.
+    stage_budgets: Vec<Option<Vec<u64>>>,
+    /// Sharded models: per-stage fault-plan shape hints.
+    stage_hints: Vec<Option<Vec<PlanHint>>>,
     spec: Option<FaultSpec>,
     fault_seed: u64,
     breaker_threshold: u64,
@@ -1128,7 +1146,11 @@ fn load_models(
     for m in ctx.models {
         match &m.shards {
             Some(plan) => {
-                let cl = Cluster::new(plan, m.seed).map_err(|e| format!("{}: {e}", m.name))?;
+                // Stage images route through the shared cache: the
+                // first worker's build deploys each stage once, every
+                // other worker clones the cached DRAM images.
+                let cl = Cluster::new_cached(plan, m.seed, ctx.cache)
+                    .map_err(|e| format!("{}: {e}", m.name))?;
                 handles.push(None);
                 clusters.push(Some(cl));
             }
@@ -1192,36 +1214,135 @@ fn serve_one(
     let shared = ctx.shared;
     let pol = &shared.policy;
     let model = r.model;
-    let plan = pol.plan_for(model, r.seqno, r.attempt);
+    // Unsharded models draw one whole-run fault plan here; sharded
+    // models draw *per-stage* plans inside the resilient pipeline
+    // chain, so the outer plan stays empty (and uncounted) for them.
+    let sharded = clusters[model].is_some();
+    let plan = if sharded {
+        FaultPlan::default()
+    } else {
+        pol.plan_for(model, r.seqno, r.attempt)
+    };
     stats[model].faults_injected += plan.len() as u64;
     // An injected worker kill takes the supervised-death path without
     // actually unwinding (keeps test output clean); catch_unwind stays
     // armed for *real* engine panics, which take the identical path.
     let kill = pol.wants_kill(r.seqno, r.attempt);
+    /// One supervised execution attempt, before outcome mapping.
+    enum Attempt {
+        Engine(Result<Inference, EngineError>),
+        Pipeline(Result<PipelineOutcome, EngineError>),
+    }
     let t0 = Instant::now();
     let outcome = if kill {
         None
     } else {
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match clusters[model].as_mut() {
-                // Sharded: the pipeline runs outside the engine's
-                // address space. Faults and deadlines are rejected for
-                // sharded models at run start, so the ignored plan and
-                // budget here are always empty.
-                Some(cl) => cl
-                    .infer(&r.input)
-                    .map(|ci| Inference { stats: ci.stats, output: ci.output }),
+                // Sharded: resilient pipeline inference. Per-stage
+                // fault plans, apportioned budgets and stage-granular
+                // retry all run inside the chain; the request-level
+                // attempt counter seeds it so a redelivery after a
+                // worker kill draws fresh per-stage streams.
+                Some(cl) => {
+                    let pp = PipelinePolicy {
+                        spec: pol.spec.as_ref(),
+                        seed: pol.fault_seed,
+                        request: r.seqno,
+                        first_attempt: r.attempt,
+                        retries: pol.retries,
+                        stage_budgets: pol.stage_budgets[model].as_deref(),
+                        total_budget: pol.deadline[model],
+                        hints: pol.stage_hints[model].as_deref(),
+                    };
+                    Attempt::Pipeline(cl.infer_resilient(&r.input, &pp))
+                }
                 None => {
                     let h = handles[model].expect("unsharded model has a handle");
-                    engine.infer_with(h, &r.input, &plan, pol.deadline[model])
+                    Attempt::Engine(engine.infer_with(h, &r.input, &plan, pol.deadline[model]))
                 }
             }
         }))
         .ok()
     };
     stats[model].service += t0.elapsed();
-    match outcome {
-        Some(Ok(inf)) => {
+    /// What the attempt means for the request's lifecycle.
+    enum Next {
+        Done(Inference),
+        Retry,
+        Hard(ServeError),
+        Died,
+    }
+    let next = match outcome {
+        None => Next::Died,
+        Some(Attempt::Engine(Ok(inf))) => Next::Done(inf),
+        Some(Attempt::Engine(Err(e))) => {
+            let (transient, deadline) = match &e {
+                EngineError::Sim(se) => {
+                    (se.injected, se.kind == SimErrorKind::DeadlineExceeded)
+                }
+                _ => (false, false),
+            };
+            if deadline {
+                stats[model].deadline_exceeded += 1;
+            }
+            if transient && r.attempt < pol.retries {
+                Next::Retry
+            } else if deadline {
+                // Hard failure: a genuine (non-injected) deadline miss
+                // or program error, or a transient one out of budget.
+                Next::Hard(ServeError::DeadlineExceeded {
+                    budget_cycles: pol.deadline[model].unwrap_or(0),
+                    at: None,
+                })
+            } else {
+                Next::Hard(ServeError::Engine(e))
+            }
+        }
+        // Outer pipeline Err is infrastructure misuse (bad input
+        // shape), not chaos: hard, no retry.
+        Some(Attempt::Pipeline(Err(e))) => Next::Hard(ServeError::Engine(e)),
+        Some(Attempt::Pipeline(Ok(out))) => {
+            // The chain's internal stage retries and link re-sends
+            // consumed the shared attempt budget, so every surfaced
+            // failure is hard here — no request-level requeue.
+            stats[model].retries += out.counters.retries;
+            stats[model].faults_injected +=
+                out.counters.faults_injected + out.counters.link_faults;
+            match out.result {
+                Ok(ci) => Next::Done(Inference { stats: ci.stats, output: ci.output }),
+                Err(PipelineFailure::Deadline { stage, at_link, budget_cycles }) => {
+                    stats[model].deadline_exceeded += 1;
+                    let at = if at_link {
+                        format!("link {stage}->{}", stage + 1)
+                    } else {
+                        format!("stage {stage}")
+                    };
+                    Next::Hard(ServeError::DeadlineExceeded { budget_cycles, at: Some(at) })
+                }
+                Err(PipelineFailure::Stage { stage, error }) => {
+                    Next::Hard(ServeError::Engine(EngineError::Sim(SimError {
+                        message: format!("stage {stage}: {}", error.message),
+                        ..error
+                    })))
+                }
+                Err(PipelineFailure::Link { link }) => {
+                    Next::Hard(ServeError::Engine(EngineError::Sim(SimError {
+                        cycle: 0,
+                        kind: SimErrorKind::InjectedAbort,
+                        message: format!(
+                            "link {link}->{} dropped the boundary transfer \
+                             (retries exhausted)",
+                            link + 1
+                        ),
+                        injected: true,
+                    })))
+                }
+            }
+        }
+    };
+    match next {
+        Next::Done(inf) => {
             breaker_feedback(shared, model, true);
             let ms = &mut stats[model];
             ms.requests += 1;
@@ -1242,34 +1363,15 @@ fn serve_one(
                 }),
             );
         }
-        Some(Err(e)) => {
-            let (transient, deadline) = match &e {
-                EngineError::Sim(se) => {
-                    (se.injected, se.kind == SimErrorKind::DeadlineExceeded)
-                }
-                _ => (false, false),
-            };
-            if deadline {
-                stats[model].deadline_exceeded += 1;
-            }
-            if transient && r.attempt < pol.retries {
-                stats[model].retries += 1;
-                requeue(shared, r);
-            } else {
-                // Hard failure: a genuine (non-injected) deadline miss
-                // or program error, or a transient one out of budget.
-                breaker_feedback(shared, model, false);
-                let err = if deadline {
-                    ServeError::DeadlineExceeded {
-                        budget_cycles: pol.deadline[model].unwrap_or(0),
-                    }
-                } else {
-                    ServeError::Engine(e)
-                };
-                resolve(&mut stats[model], &r, Err(err));
-            }
+        Next::Retry => {
+            stats[model].retries += 1;
+            requeue(shared, r);
         }
-        None => {
+        Next::Hard(err) => {
+            breaker_feedback(shared, model, false);
+            resolve(&mut stats[model], &r, Err(err));
+        }
+        Next::Died => {
             // The worker died mid-request (injected kill or real
             // panic). Supervision: rebuild the engine in place so the
             // worker thread survives, then retry or fail the request
@@ -1423,9 +1525,9 @@ impl Server {
     /// [`ArtifactCache`] and **pins** it there ([`ArtifactCache::warm`]).
     /// N workers starting together then deploy each model exactly
     /// once — one warm miss per model, every worker load a hit — and
-    /// pinned models never fall to LRU churn mid-run. Sharded models
-    /// are skipped: their stage pipelines are per-worker `Cluster`s,
-    /// not cached images.
+    /// pinned models never fall to LRU churn mid-run. A sharded model
+    /// warms every stage image ([`Cluster::warm_stages`]): S warm
+    /// misses, then S hits per worker building its pipeline.
     pub fn set_warmup(&mut self, warmup: bool) {
         self.warmup = warmup;
     }
@@ -1517,6 +1619,38 @@ impl Server {
         })
     }
 
+    /// Per-stage fault-plan shape hints for a sharded model (`None` for
+    /// unsharded). Public for the same reason as [`Server::plan_hint`]:
+    /// the `--check` oracle must regenerate per-stage fault plans
+    /// bit-identically.
+    pub fn stage_plan_hints(&self, id: ModelId) -> Option<Vec<PlanHint>> {
+        let plan = self.models.get(id.0)?.shards.as_ref()?;
+        Some(
+            plan.stages
+                .iter()
+                .map(|st| PlanHint {
+                    n_units: self.cfg.n_load_units,
+                    n_cus: self.cfg.n_cus,
+                    mem_words: st.artifact.compiled.plan.mem_words,
+                    expect_cycles: st.predicted_cycles.max(100_000),
+                })
+                .collect(),
+        )
+    }
+
+    /// The apportioned per-stage cycle budgets the active policy gives
+    /// a sharded model (`None`: unsharded, or deadlines off). The
+    /// whole-pipeline budget, links included, stays
+    /// [`Server::deadline_budget`].
+    pub fn stage_budgets(&self, id: ModelId) -> Option<Vec<u64>> {
+        let plan = self.models.get(id.0)?.shards.as_ref()?;
+        if self.resilience.deadline_slack > 0.0 {
+            Some(plan.stage_budgets(self.resilience.deadline_slack))
+        } else {
+            None
+        }
+    }
+
     /// The per-request cycle budget the active policy gives this model
     /// (`None` = no deadline: slack 0 or no cost prediction).
     pub fn deadline_budget(&self, id: ModelId) -> Option<u64> {
@@ -1599,29 +1733,46 @@ impl Server {
         }
         let scfg = self.serve_cfg;
         let res = &self.resilience;
-        if self.models.iter().any(|m| m.shards.is_some()) {
-            // Fault plans and deadline budgets act *inside* one engine;
-            // a shard pipeline spans several. Reject the combination up
-            // front rather than silently not injecting.
-            if res.faults.is_some() {
-                return Err(ServeError::Unsupported(
-                    "fault injection against a sharded model".to_string(),
+        if let Some(spec) = &res.faults {
+            // Sharded models are first-class under faults, but the
+            // stage-salted streams address a bounded stage
+            // count, and link kinds need a link to fault — violations
+            // are rejected typed up front, never mis-keyed or silently
+            // not injected.
+            let any_linked = self
+                .models
+                .iter()
+                .any(|m| m.shards.as_ref().is_some_and(|p| p.n_stages() > 1));
+            if spec.has_link_kinds() && !any_linked {
+                return Err(ServeError::BadInput(
+                    "link fault kinds (link-drop / link-degrade) need a sharded \
+                     model with at least 2 stages (build one with --shards)"
+                        .to_string(),
                 ));
             }
-            if res.deadline_slack > 0.0 {
-                return Err(ServeError::Unsupported(
-                    "deadline budgets against a sharded model".to_string(),
-                ));
+            for m in &self.models {
+                // A 1-stage "pipeline" is covered by the global link
+                // check above; per-model we bound the stage count the
+                // salted streams can address.
+                if let Some(plan) = &m.shards {
+                    if plan.n_stages() > 1 {
+                        spec.check_stages(plan.n_stages())
+                            .map_err(|e| ServeError::BadInput(format!("{}: {e}", m.name)))?;
+                    }
+                }
             }
         }
         let cache_before = self.cache.stats();
         if self.warmup {
-            // Deploy + pin every unsharded model before any worker
-            // spawns: the warm misses land inside this run's cache
-            // delta, and every worker's own load below is a hit.
+            // Deploy + pin every model before any worker spawns: the
+            // warm misses land inside this run's cache delta, and every
+            // worker's own load below is a hit. A sharded model warms
+            // one image per stage (S misses; each worker then takes S
+            // hits building its cluster).
             for m in &self.models {
-                if m.shards.is_none() {
-                    self.cache.warm(&m.artifact, m.seed);
+                match &m.shards {
+                    None => self.cache.warm(&m.artifact, m.seed),
+                    Some(plan) => Cluster::warm_stages(plan, m.seed, &self.cache),
                 }
             }
         }
@@ -1633,6 +1784,8 @@ impl Server {
             hints: (0..n_models)
                 .map(|i| self.plan_hint(ModelId(i)).expect("registered model"))
                 .collect(),
+            stage_budgets: (0..n_models).map(|i| self.stage_budgets(ModelId(i))).collect(),
+            stage_hints: (0..n_models).map(|i| self.stage_plan_hints(ModelId(i))).collect(),
             spec: res.faults.clone(),
             fault_seed: res.fault_seed,
             breaker_threshold: res.breaker_threshold,
@@ -2043,29 +2196,35 @@ impl Server {
     /// by running one inference per model — simulator timing is
     /// input-independent, so a single sample is the exact service time.
     pub fn service_table(&self, service: ServiceModel) -> Result<Vec<u64>, ServeError> {
-        if let Some(m) = self.models.iter().find(|m| m.shards.is_some()) {
-            // The loadtest's virtual queue models one machine per
-            // worker; a shard pipeline's occupancy does not fit that
-            // shape yet. (`pipeline_timing` covers sharded capacity.)
-            return Err(ServeError::Unsupported(format!(
-                "loadtest against sharded model {}",
-                m.name
-            )));
-        }
         match service {
             ServiceModel::Predicted => Ok(self
                 .models
                 .iter()
-                .map(|m| m.artifact.predicted_cycles().max(1))
+                .map(|m| m.pred_cycles().max(1))
                 .collect()),
             ServiceModel::Measured => {
                 let mut engine = Engine::new(self.cfg.clone());
                 let mut v = Vec::with_capacity(self.models.len());
                 for (i, m) in self.models.iter().enumerate() {
-                    let h = self.cache.load_into(&mut engine, &m.artifact, m.seed)?;
                     let input = self.loadtest_input(ModelId(i), 0);
-                    let inf = engine.infer_with(h, &input, &FaultPlan::default(), None)?;
-                    v.push(inf.stats.cycles.max(1));
+                    match &m.shards {
+                        // Sharded: one clean end-to-end pipeline run —
+                        // the service entry is the request's full
+                        // latency (stages plus links), matching what
+                        // `pred_cycles` predicts.
+                        Some(plan) => {
+                            let mut cl = Cluster::new_cached(plan, m.seed, &self.cache)?;
+                            let ci = cl.infer(&input)?;
+                            v.push(ci.stats.cycles.max(1));
+                        }
+                        None => {
+                            let h =
+                                self.cache.load_into(&mut engine, &m.artifact, m.seed)?;
+                            let inf =
+                                engine.infer_with(h, &input, &FaultPlan::default(), None)?;
+                            v.push(inf.stats.cycles.max(1));
+                        }
+                    }
                 }
                 Ok(v)
             }
@@ -2164,6 +2323,43 @@ impl Server {
             }
             ServiceModel::Predicted => None,
         };
+        // Sharded models flow through a stage pipeline, not one
+        // machine: `pipes[m]` holds the per-stage occupancy constants
+        // and per-link transfer constants the virtual queue charges
+        // (predicted mode: the partitioner's model; measured mode:
+        // calibrated by one clean end-to-end run). Measured mode also
+        // keeps a live cluster per sharded model for the real
+        // per-request simulations.
+        let mut lt_clusters: Vec<Option<Cluster>> = Vec::with_capacity(n_models);
+        let mut pipes: Vec<Option<(Vec<u64>, Vec<u64>)>> = Vec::with_capacity(n_models);
+        for (i, m) in self.models.iter().enumerate() {
+            match &m.shards {
+                None => {
+                    lt_clusters.push(None);
+                    pipes.push(None);
+                }
+                Some(plan) => match lt.service {
+                    ServiceModel::Predicted => {
+                        lt_clusters.push(None);
+                        pipes.push(Some((
+                            plan.stage_cycles().iter().map(|&c| c.max(1)).collect(),
+                            plan.link_cycles(),
+                        )));
+                    }
+                    ServiceModel::Measured => {
+                        let mut cl = Cluster::new_cached(plan, m.seed, &self.cache)?;
+                        let ci = cl.infer(&self.loadtest_input(ModelId(i), 0))?;
+                        pipes.push(Some((
+                            ci.stage_stats.iter().map(|s| s.cycles.max(1)).collect(),
+                            ci.link_cycles.clone(),
+                        )));
+                        lt_clusters.push(Some(cl));
+                    }
+                },
+            }
+        }
+        let stage_hints: Vec<Option<Vec<PlanHint>>> =
+            (0..n_models).map(|i| self.stage_plan_hints(ModelId(i))).collect();
 
         let n_req = trace.requests.len();
         let mut outcomes: Vec<Option<LtOutcome>> = (0..n_req).map(|_| None).collect();
@@ -2250,9 +2446,172 @@ impl Server {
                 stats[model].batches += 1;
                 let start = now;
                 let mut t = now;
+                // Sharded batches: when stage k of the pipeline frees
+                // up. Successive batch members overlap across stages —
+                // the same recurrence as `pipeline_timing`.
+                let mut stage_free: Vec<u64> =
+                    pipes[model].as_ref().map(|(sc, _)| vec![now; sc.len()]).unwrap_or_default();
                 for r in batch {
                     pending_pred -= srv[model];
                     stats[model].wait_hist.record(now - r.at);
+                    if let Some((stage_c, link_c)) = &pipes[model] {
+                        // Sharded: the request occupies stages in
+                        // sequence with link delays in between. As in
+                        // the unsharded path, admitted requests run to
+                        // completion — loadtest deadlines are
+                        // accounting, not execution cuts — so no
+                        // in-sim budgets are passed to the chain.
+                        let mut attempt: u64 = 0;
+                        let mut kill_charge: u64 = 0;
+                        // (per-stage occupancy, per-link delay, verdict)
+                        let (mut occ, links, verdict) = loop {
+                            let kill = res.faults.as_ref().is_some_and(|s| {
+                                s.wants_worker_kill(res.fault_seed, r.idx as u64, attempt)
+                            });
+                            if kill {
+                                // The killed virtual worker loses the
+                                // whole pipeline attempt before stage 0
+                                // ever runs; charge the model's full
+                                // service time there, mirroring the
+                                // unsharded path's wasted-work charge.
+                                stats[model].worker_kills += 1;
+                                kill_charge += srv[model];
+                                if attempt < res.retries as u64 {
+                                    stats[model].retries += 1;
+                                    attempt += 1;
+                                    continue;
+                                }
+                                break (
+                                    vec![0; stage_c.len()],
+                                    Vec::new(),
+                                    Err(("worker-died", attempt + 1)),
+                                );
+                            }
+                            match lt_clusters[model].as_mut() {
+                                // Predicted mode (fault-free, checked
+                                // above): every stage runs once at its
+                                // predicted constant.
+                                None => break (stage_c.clone(), link_c.clone(), Ok(None)),
+                                Some(cl) => {
+                                    let input =
+                                        self.loadtest_input(ModelId(model), r.idx as u64);
+                                    let pp = PipelinePolicy {
+                                        spec: res.faults.as_ref(),
+                                        seed: res.fault_seed,
+                                        request: r.idx as u64,
+                                        first_attempt: attempt,
+                                        retries: res.retries as u64,
+                                        stage_budgets: None,
+                                        total_budget: None,
+                                        hints: stage_hints[model].as_deref(),
+                                    };
+                                    let out = match cl.infer_resilient(&input, &pp) {
+                                        Ok(out) => out,
+                                        Err(e) => return Err(ServeError::Engine(e)),
+                                    };
+                                    stats[model].retries += out.counters.retries;
+                                    stats[model].faults_injected +=
+                                        out.counters.faults_injected + out.counters.link_faults;
+                                    let attempts = attempt + out.counters.retries + 1;
+                                    match out.result {
+                                        // Failed stage attempts occupied
+                                        // the stage too: charge them at
+                                        // the calibrated constant, the
+                                        // final successful run at its
+                                        // true cycles.
+                                        Ok(ci) => {
+                                            break (
+                                                out.counters
+                                                    .stage_sims
+                                                    .iter()
+                                                    .zip(stage_c)
+                                                    .enumerate()
+                                                    .map(|(k, (&s, &c))| {
+                                                        (s - 1) * c + ci.stage_stats[k].cycles
+                                                    })
+                                                    .collect(),
+                                                ci.link_cycles.clone(),
+                                                Ok(Some((ci, attempts))),
+                                            );
+                                        }
+                                        // The chain consumed the shared
+                                        // retry budget internally — hard,
+                                        // as in serve_one. Every sim it
+                                        // ran occupied its stage; the
+                                        // dropped request crossed no
+                                        // further links.
+                                        Err(_) => {
+                                            break (
+                                                out.counters
+                                                    .stage_sims
+                                                    .iter()
+                                                    .zip(stage_c)
+                                                    .map(|(&s, &c)| s * c)
+                                                    .collect(),
+                                                Vec::new(),
+                                                Err(("engine", attempts)),
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        };
+                        occ[0] += kill_charge;
+                        let mut t_arr = now;
+                        let mut done = now;
+                        for (k, &o) in occ.iter().enumerate() {
+                            if o == 0 {
+                                continue; // stage never ran (request already failed)
+                            }
+                            let s = t_arr.max(stage_free[k]);
+                            let fin = s + o;
+                            stage_free[k] = fin;
+                            stats[model].busy_cycles += o;
+                            done = fin;
+                            t_arr = fin + links.get(k).copied().unwrap_or(0);
+                        }
+                        let out = match verdict {
+                            Ok(Some((ci, attempts))) => LtOutcome::Served {
+                                worker: w,
+                                start,
+                                done,
+                                cycles: ci.stats.cycles,
+                                bytes: ci.stats.bytes_moved(),
+                                digest: output_digest(&ci.output),
+                                attempts,
+                                batch: n,
+                            },
+                            Ok(None) => LtOutcome::Served {
+                                worker: w,
+                                start,
+                                done,
+                                cycles: srv[model],
+                                bytes: 0,
+                                digest: 0,
+                                attempts: 1,
+                                batch: n,
+                            },
+                            Err((class, attempts)) => {
+                                LtOutcome::Failed { class, done, attempts }
+                            }
+                        };
+                        let e2e = done - r.at;
+                        stats[model].e2e_hist.record(e2e);
+                        match &out {
+                            LtOutcome::Served { .. } => {
+                                stats[model].served += 1;
+                                if budget[model].is_some_and(|b| e2e > b) {
+                                    stats[model].slo_violations += 1;
+                                }
+                            }
+                            LtOutcome::Failed { .. } => stats[model].failed += 1,
+                            LtOutcome::Shed { .. } => unreachable!(),
+                        }
+                        makespan = makespan.max(done);
+                        outcomes[r.idx] = Some(out);
+                        t = t.max(*stage_free.iter().max().expect("n_stages >= 1"));
+                        continue;
+                    }
                     // Attempt chain: mirrors serve_one, but against the
                     // virtual clock. Admitted requests always run to
                     // completion (no in-sim cycle limit): loadtest

@@ -30,18 +30,24 @@
 //!              and asserts per-request cycle/DRAM/output equality — including
 //!              chaos runs, where it replays each request's attempt chain;
 //!              resilience knobs: `--faults kind:rate,..` (dma-stall, cu-hang,
-//!              dram-corrupt, abort, worker-kill), `--deadline-slack S`,
-//!              `--retries K`, `--breaker-threshold N`, `--breaker-cooldown C`,
+//!              dram-corrupt, abort, worker-kill; with `--shards`: link-drop,
+//!              link-degrade), `--deadline-slack S`, `--retries K`,
+//!              `--breaker-threshold N`, `--breaker-cooldown C`,
 //!              `--fault-seed S`; `--shards N` serves each model as an N-stage
-//!              pipeline of machines with modeled inter-stage links (`--check`
-//!              then also asserts bit-identity against the unsharded model)
+//!              pipeline of machines with modeled inter-stage links —
+//!              first-class under chaos: per-stage fault plans, apportioned
+//!              per-stage deadline budgets and stage-granular retry (`--check`
+//!              then replays the resilient pipeline chain AND asserts clean
+//!              chains bit-identical to the unsharded model)
 //!   chaos      deterministic fault-sweep table: fault kind × rate × retry
 //!              policy → goodput, p99 latency, SLO violations; exits nonzero
 //!              if the survivability gate fails (worker-kill ≥5% at the
 //!              default retry budget must keep ≥90% goodput, no lost requests);
 //!              `--arrivals SPEC` replays cells through the virtual-time
 //!              loadtest scheduler instead of prefilled serve_all, adding
-//!              offered-load and shed-rate columns
+//!              offered-load and shed-rate columns; `--shards N` sweeps the
+//!              model as an N-stage pipeline (stage-granular retry; link-drop
+//!              and link-degrade become valid `--kinds`)
 //!   loadtest   virtual-time capacity planning: seeded open-loop arrivals
 //!              (`--arrivals poisson:RPS|bursty:RPS[,MULT[,P_IN[,P_OUT]]]|
 //!              diurnal:RPS[,PERIOD[,DEPTH]]|trace:FILE`, `--popularity
@@ -51,13 +57,18 @@
 //!              token-bucket + deadline-aware shedding, `--service
 //!              predicted|measured`, `--sweep M1,M2,..` offered-load sweep in
 //!              roofline multiples, `--save-trace FILE`, `--check` replays the
-//!              sequential oracle, `--gate` enforces the capacity gates
+//!              sequential oracle, `--gate` enforces the capacity gates;
+//!              `--shards N` loadtests each model as an N-stage pipeline
+//!              (requests occupy stages in sequence with link delays; the
+//!              DES overlaps successive requests across stages)
 //!   compile    compile a model, print summary / asm
 //!   validate   run + layer-by-layer check vs the Q8.8 reference (§5.3)
 //!   explain    print the chosen per-layer schedule (tuner debugging),
 //!              including the banked-rotation diagnosis per conv layer;
 //!              `--shards N` appends the pipeline partition: cuts, per-stage
-//!              predicted cycles, boundary shapes and link costs
+//!              predicted cycles, boundary shapes and link costs; with
+//!              `--deadline-slack S` also each stage's apportioned serving
+//!              budget and the whole-pipeline budget
 //!   tune       schedule-quality table: heuristic vs cost-model vs measured
 //!              vs forced-Kloop, asserting the per-layer prediction bound
 //!   table1|table2|table3|fig4|accuracy   regenerate the paper results
@@ -72,14 +83,14 @@ use snowflake::compiler::{
 };
 use snowflake::coordinator::{driver, report, tune};
 use snowflake::engine::cache::DiskCache;
-use snowflake::engine::cluster::Cluster;
+use snowflake::engine::cluster::{Cluster, PipelineFailure, PipelinePolicy};
 use snowflake::engine::loadgen::{self, ArrivalKind, Popularity, Trace};
 use snowflake::engine::serve::{
     output_digest, AdmissionConfig, LoadtestConfig, LoadtestReport, LtOutcome, ModelId,
     ResilienceConfig, Response, SchedConfig, ServeConfig, ServeError, Server, ServiceModel,
 };
 use snowflake::engine::{Engine, EngineError};
-use snowflake::sim::fault::{FaultPlan, FaultSpec};
+use snowflake::sim::fault::{FaultPlan, FaultSpec, PlanHint};
 use snowflake::fixed::{Q5_11, Q8_8};
 use snowflake::isa::asm::disasm_program;
 use snowflake::model::weights::{synthetic_input, Weights};
@@ -494,8 +505,17 @@ fn main() {
                     std::process::exit(1);
                 });
                 let links = plan.link_cycles();
+                // `--deadline-slack S` also prints what each stage's
+                // apportioned serving budget would be (the in-sim
+                // cutoff `serve --shards` enforces per stage).
+                let slack = args.opt_f64("deadline-slack", 0.0);
+                let stage_budgets = (slack > 0.0).then(|| plan.stage_budgets(slack));
                 println!("\npartition into {} stages (cuts {:?}):", plan.n_stages(), plan.cuts());
                 for (i, st) in plan.stages.iter().enumerate() {
+                    let budget = match &stage_budgets {
+                        Some(b) => format!("  budget {:>12}", b[i]),
+                        None => String::new(),
+                    };
                     let link = match (&st.boundary, links.get(i)) {
                         (Some(b), Some(l)) => {
                             format!("  -> {}x{}x{} boundary, link {} cyc", b.c, b.h, b.w, l)
@@ -503,7 +523,7 @@ fn main() {
                         _ => String::new(),
                     };
                     println!(
-                        "  stage {i}: nodes {:>2}..{:<2} {:>12} cycles{link}",
+                        "  stage {i}: nodes {:>2}..{:<2} {:>12} cycles{budget}{link}",
                         st.start, st.end, st.predicted_cycles
                     );
                 }
@@ -512,6 +532,13 @@ fn main() {
                     plan.bottleneck_cycles(),
                     plan.predicted_cycles()
                 );
+                if let Some(slack) = (slack > 0.0).then_some(slack) {
+                    println!(
+                        "  whole-pipeline budget {} cyc (predicted x slack {slack}), links \
+                         charged against it",
+                        (plan.predicted_cycles() as f64 * slack).ceil() as u64
+                    );
+                }
             }
         }
         Some("tune") => {
@@ -610,12 +637,14 @@ fn main() {
                  \x20  --out PATH (build)  --artifact PATH (run)  --batch N (run)\n\
                  \x20  --disk-cache DIR --disk-cache-cap N (build, run, serve: persistent\n\
                  \x20      checksum-verified artifact cache keyed by compile inputs)\n\
-                 \x20  --shards N (build, serve, explain: N-stage pipeline partition)\n\
+                 \x20  --shards N (build, serve, chaos, loadtest, explain: N-stage pipeline)\n\
                  \x20  --requests N --models a,b --artifacts x,y --check (serve, loadtest)\n\
                  \x20  --workers N --max-batch B --queue-depth D --cache-cap N (serve)\n\
                  \x20  --warmup (serve: deploy + pin every model before workers start)\n\
                  \x20  --wfq --weights name=w,.. --affinity (serve, loadtest)\n\
                  \x20  --faults kind:rate,.. --deadline-slack S --retries K --fault-seed S\n\
+                 \x20      (kinds: dma-stall cu-hang dram-corrupt abort worker-kill,\n\
+                 \x20       and with --shards >= 2: link-drop link-degrade)\n\
                  \x20  --breaker-threshold N --breaker-cooldown C (serve, chaos)\n\
                  \x20  --kinds a,b --rates r1,r2 --model NAME --arrivals SPEC (chaos)\n\
                  \x20  --arrivals poisson:RPS|bursty:..|diurnal:..|trace:FILE (loadtest)\n\
@@ -639,6 +668,17 @@ fn resilience_from_args(args: &Args, seed: u64) -> ResilienceConfig {
             std::process::exit(2);
         })
     });
+    if let Some(spec) = &faults {
+        // The server rejects this typed too; catching it here turns a
+        // run-start error into a usage error with the fix spelled out.
+        if spec.has_link_kinds() && args.opt_usize("shards", 1) < 2 {
+            eprintln!(
+                "--faults: link-drop / link-degrade fault inter-stage links — add --shards N \
+                 (N >= 2); one machine has no links"
+            );
+            std::process::exit(2);
+        }
+    }
     ResilienceConfig {
         deadline_slack: args.opt_f64("deadline-slack", 0.0),
         retries: args.opt_usize("retries", 2),
@@ -811,7 +851,9 @@ fn serve(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
 
     if args.flag("check") {
         if shards > 1 {
-            check_sharded_against_oracles(&server, &ids, &graphs, &outcomes, cfg, seed, args);
+            check_sharded_against_oracles(
+                &server, &ids, &graphs, &outcomes, &resilience, cfg, seed, args,
+            );
         } else {
             check_against_oracle(&server, &ids, &graphs, &outcomes, &resilience, cfg, seed);
         }
@@ -884,26 +926,33 @@ fn register_sharded_models(
 
 /// The two oracles behind `repro serve --shards N --check`.
 ///
-/// 1. **Sequential cluster**: every request replayed, in submission
-///    order, through a fresh single-threaded [`Cluster`] built from the
-///    same shard plan — served cycles, DRAM bytes and output words must
-///    be bit-identical (worker scheduling and coalescing perturb
-///    nothing simulated).
+/// 1. **Sequential resilient cluster**: every request's *attempt chain*
+///    replayed, in submission order, through a fresh single-threaded
+///    [`Cluster`] with the same per-stage fault plans (keyed by
+///    `(fault_seed, seqno, attempt, stage salt)`), the same apportioned
+///    stage budgets and the same stage-granular retry policy — served
+///    cycles, DRAM bytes and output words, or the typed failure class,
+///    must match bit for bit. Worker kills consume request-level
+///    attempts before the chain runs, exactly as redelivery does in the
+///    pool.
 /// 2. **Single machine**: the *unsharded* model compiled and run on one
 ///    machine — the final output words and every boundary activation
-///    (read from the cut node's canvas) must match the pipeline's
-///    bit for bit. Cycles are excluded: one machine crosses no links.
-///    With `--artifacts`, the unsharded oracle recompiles the
-///    manifest's embedded model under the current CLI compile options,
-///    so pass the same options the plan was built with.
+///    (read from the cut node's canvas) must match the pipeline's bit
+///    for bit. Applied to requests whose chain ran clean (no faults
+///    injected, no retries): a corrupted-but-successful chaos run
+///    legitimately differs from the healthy oracle. Cycles are
+///    excluded: one machine crosses no links. With `--artifacts`, the
+///    unsharded oracle recompiles the manifest's embedded model under
+///    the current CLI compile options, so pass the same options the
+///    plan was built with.
 ///
-/// Sharded runs reject fault injection and deadline budgets up front,
-/// so every outcome here is expected to be a success.
+/// Requests shed by the circuit breaker never ran and are skipped.
 fn check_sharded_against_oracles(
     server: &Server,
     ids: &[ModelId],
     graphs: &[snowflake::model::graph::Graph],
     outcomes: &[Result<Response, ServeError>],
+    resilience: &ResilienceConfig,
     cfg: &SnowflakeConfig,
     seed: u64,
     args: &Args,
@@ -930,74 +979,138 @@ fn check_sharded_against_oracles(
         // Keep the artifact alongside its machine for canvas lookups.
         meta.push(full);
     }
-    let mut bad = 0usize;
+    let stage_budgets: Vec<Option<Vec<u64>>> =
+        ids.iter().map(|id| server.stage_budgets(*id)).collect();
+    let stage_hints: Vec<Option<Vec<PlanHint>>> =
+        ids.iter().map(|id| server.stage_plan_hints(*id)).collect();
+    let budgets: Vec<Option<u64>> = ids.iter().map(|id| server.deadline_budget(*id)).collect();
+    let spec = resilience.faults.as_ref();
+    let retries = resilience.retries as u64;
+    let fseed = resilience.fault_seed;
+    let (mut bad, mut skipped) = (0usize, 0usize);
     let mut boundaries_checked = 0usize;
+    let mut clean_checked = 0usize;
     let mut fresh = vec![true; ids.len()];
     for (r, outcome) in outcomes.iter().enumerate() {
+        if matches!(outcome, Err(ServeError::ModelUnavailable(_))) {
+            skipped += 1;
+            continue;
+        }
         let m = r % ids.len();
-        let resp = match outcome {
-            Ok(resp) => resp,
-            Err(e) => {
-                eprintln!("CHECK FAILED: request {r} failed [{e}] with no faults configured");
-                bad += 1;
-                continue;
-            }
-        };
         let x = synthetic_input(&graphs[m], seed + r as u64);
-        // Oracle 1: the sequential cluster.
-        let ci = clusters[m].infer(&x).unwrap_or_else(|e| {
-            eprintln!("check: {e}");
-            std::process::exit(1);
-        });
-        if ci.stats.cycles != resp.stats.cycles
-            || ci.stats.bytes_moved() != resp.stats.bytes_moved()
-            || resp.output.count_diff(&ci.output) != 0
-        {
-            eprintln!(
-                "CHECK FAILED: request {r} ({}) served {} cycles / {} bytes vs sequential \
-                 cluster {} / {}",
-                graphs[m].name,
-                resp.stats.cycles,
-                resp.stats.bytes_moved(),
-                ci.stats.cycles,
-                ci.stats.bytes_moved()
-            );
-            bad += 1;
-        }
-        // Oracle 2: the unsharded model on one machine.
-        let machine = &mut machines[m];
-        let full = &meta[m];
-        if !fresh[m] {
-            machine.reset_for_inference();
-        }
-        fresh[m] = false;
-        let lplan = &full.compiled.plan;
-        deploy::write_canvas(machine, &lplan.input_canvas, &x, lplan.fmt);
-        machine.run().unwrap_or_else(|e| {
-            eprintln!("check: single-machine oracle: {e}");
-            std::process::exit(1);
-        });
-        let out_node = full.output_node.expect("unsharded model has an output");
-        let want = deploy::read_canvas(machine, &lplan.canvases[&out_node]);
-        if resp.output.count_diff(&want) != 0 {
-            eprintln!(
-                "CHECK FAILED: request {r} ({}) pipeline output differs from the unsharded \
-                 single-machine model",
-                graphs[m].name
-            );
-            bad += 1;
-        }
-        let plan = server.shard_plan(ids[m]).expect("sharded model");
-        for (k, cut) in plan.cuts().iter().enumerate() {
-            let b = deploy::read_canvas(machine, &lplan.canvases[&(cut - 1)]);
-            boundaries_checked += 1;
-            if ci.boundaries[k].count_diff(&b) != 0 {
+        // Oracle 1: replay the attempt chain through the resilient
+        // sequential cluster. Worker kills consume request-level
+        // attempts; the chain draws per-stage streams from the first
+        // surviving one.
+        let mut attempt = 0u64;
+        let want = loop {
+            let killed = spec.is_some_and(|s| s.wants_worker_kill(fseed, r as u64, attempt));
+            if killed {
+                if attempt < retries {
+                    attempt += 1;
+                    continue;
+                }
+                break Err("worker-died");
+            }
+            let pp = PipelinePolicy {
+                spec,
+                seed: fseed,
+                request: r as u64,
+                first_attempt: attempt,
+                retries,
+                stage_budgets: stage_budgets[m].as_deref(),
+                total_budget: budgets[m],
+                hints: stage_hints[m].as_deref(),
+            };
+            let out = clusters[m].infer_resilient(&x, &pp).unwrap_or_else(|e| {
+                eprintln!("check: {e}");
+                std::process::exit(1);
+            });
+            break match out.result {
+                Ok(ci) => Ok((ci, out.counters)),
+                Err(PipelineFailure::Deadline { .. }) => Err("deadline"),
+                Err(_) => Err("engine"),
+            };
+        };
+        match (outcome, want) {
+            (Ok(resp), Ok((ci, counters))) => {
+                if ci.stats.cycles != resp.stats.cycles
+                    || ci.stats.bytes_moved() != resp.stats.bytes_moved()
+                    || resp.output.count_diff(&ci.output) != 0
+                {
+                    eprintln!(
+                        "CHECK FAILED: request {r} ({}) served {} cycles / {} bytes vs \
+                         sequential cluster {} / {}",
+                        graphs[m].name,
+                        resp.stats.cycles,
+                        resp.stats.bytes_moved(),
+                        ci.stats.cycles,
+                        ci.stats.bytes_moved()
+                    );
+                    bad += 1;
+                    continue;
+                }
+                // Oracle 2 compares against the *healthy* unsharded
+                // model, so it only applies to chains that ran clean.
+                let clean = attempt == 0
+                    && counters.retries == 0
+                    && counters.faults_injected == 0
+                    && counters.link_faults == 0;
+                if !clean {
+                    continue;
+                }
+                clean_checked += 1;
+                let machine = &mut machines[m];
+                let full = &meta[m];
+                if !fresh[m] {
+                    machine.reset_for_inference();
+                }
+                fresh[m] = false;
+                let lplan = &full.compiled.plan;
+                deploy::write_canvas(machine, &lplan.input_canvas, &x, lplan.fmt);
+                machine.run().unwrap_or_else(|e| {
+                    eprintln!("check: single-machine oracle: {e}");
+                    std::process::exit(1);
+                });
+                let out_node = full.output_node.expect("unsharded model has an output");
+                let want = deploy::read_canvas(machine, &lplan.canvases[&out_node]);
+                if resp.output.count_diff(&want) != 0 {
+                    eprintln!(
+                        "CHECK FAILED: request {r} ({}) pipeline output differs from the \
+                         unsharded single-machine model",
+                        graphs[m].name
+                    );
+                    bad += 1;
+                }
+                let plan = server.shard_plan(ids[m]).expect("sharded model");
+                for (k, cut) in plan.cuts().iter().enumerate() {
+                    let b = deploy::read_canvas(machine, &lplan.canvases[&(cut - 1)]);
+                    boundaries_checked += 1;
+                    if ci.boundaries[k].count_diff(&b) != 0 {
+                        eprintln!(
+                            "CHECK FAILED: request {r} ({}) boundary activation at node {} \
+                             differs from the unsharded model",
+                            graphs[m].name,
+                            cut - 1
+                        );
+                        bad += 1;
+                    }
+                }
+            }
+            (Err(e), Err(class)) if err_class(e) == class => {}
+            (Err(e), Err(class)) => {
                 eprintln!(
-                    "CHECK FAILED: request {r} ({}) boundary activation at node {} differs \
-                     from the unsharded model",
-                    graphs[m].name,
-                    cut - 1
+                    "CHECK FAILED: request {r} failed as [{}] but the oracle predicts [{class}]",
+                    err_class(e)
                 );
+                bad += 1;
+            }
+            (Ok(_), Err(class)) => {
+                eprintln!("CHECK FAILED: request {r} succeeded but the oracle predicts [{class}]");
+                bad += 1;
+            }
+            (Err(e), Ok(_)) => {
+                eprintln!("CHECK FAILED: request {r} failed [{e}] but the oracle succeeds");
                 bad += 1;
             }
         }
@@ -1006,9 +1119,15 @@ fn check_sharded_against_oracles(
         std::process::exit(1);
     }
     println!(
-        "check: all {} requests bit-identical to the sequential cluster AND the unsharded \
-         single-machine model ({boundaries_checked} boundary activations compared)",
-        outcomes.len()
+        "check: all {} requests bit-identical to the sequential resilient cluster \
+         ({clean_checked} clean chains also matched the unsharded single-machine model, \
+         {boundaries_checked} boundary activations compared{})",
+        outcomes.len() - skipped,
+        if skipped > 0 {
+            format!("; {skipped} breaker-shed requests skipped")
+        } else {
+            String::new()
+        }
     );
 }
 
@@ -1293,9 +1412,14 @@ fn loadtest(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
         cache_cap: args.opt_usize("cache-cap", 0),
     };
     let resilience = resilience_from_args(args, seed);
+    let shards = args.opt_usize("shards", 1);
     let mut server = Server::new(cfg.clone(), serve_cfg);
     server.set_resilience(resilience.clone());
-    let (ids, _graphs) = register_models(args, cfg, seed, &mut server);
+    let (ids, _graphs) = if shards > 1 {
+        register_sharded_models(args, cfg, seed, shards, &mut server)
+    } else {
+        register_models(args, cfg, seed, &mut server)
+    };
     let sched = sched_from_args(args, &server, &ids);
     server.set_sched(sched.clone());
     let admission = admission_from_args(args);
@@ -1531,12 +1655,13 @@ fn loadtest(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
 }
 
 /// The sequential oracle behind `repro loadtest --check` (measured
-/// service only): one engine, every non-shed request replayed in trace
-/// order with the same inputs and per-attempt fault plans. Asserts
-/// bit-identical cycles, DRAM bytes and output digests for served
-/// requests, and matching failure class + attempt count for failed
-/// ones — admission and scheduling may move or reject work, never
-/// change what it computes.
+/// service only): one engine — plus one resilient [`Cluster`] per
+/// sharded model — every non-shed request replayed in trace order with
+/// the same inputs and per-attempt fault plans. Asserts bit-identical
+/// cycles, DRAM bytes and output digests for served requests, and
+/// matching failure class + attempt count for failed ones — admission
+/// and scheduling may move or reject work, never change what it
+/// computes.
 fn loadtest_check(
     server: &Server,
     ids: &[ModelId],
@@ -1552,17 +1677,34 @@ fn loadtest_check(
         std::process::exit(2);
     }
     let mut engine = Engine::new(cfg.clone());
-    let handles: Vec<_> = ids
+    let mut clusters: Vec<Option<Cluster>> = ids
         .iter()
         .map(|id| {
-            let a = (**server.artifact(*id).expect("registered")).clone();
-            engine.load(a, seed).unwrap_or_else(|e| {
-                eprintln!("check: {e}");
-                std::process::exit(1);
+            server.shard_plan(*id).map(|p| {
+                Cluster::new(p, seed).unwrap_or_else(|e| {
+                    eprintln!("check: {e}");
+                    std::process::exit(1);
+                })
             })
         })
         .collect();
+    let handles: Vec<_> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            if clusters[i].is_some() {
+                return None; // sharded models replay through the cluster
+            }
+            let a = (**server.artifact(*id).expect("registered")).clone();
+            Some(engine.load(a, seed).unwrap_or_else(|e| {
+                eprintln!("check: {e}");
+                std::process::exit(1);
+            }))
+        })
+        .collect();
     let hints: Vec<_> = ids.iter().map(|id| server.plan_hint(*id).expect("registered")).collect();
+    let stage_hints: Vec<Option<Vec<PlanHint>>> =
+        ids.iter().map(|id| server.stage_plan_hints(*id)).collect();
     let spec = resilience.faults.as_ref();
     let retries = resilience.retries as u64;
     let fseed = resilience.fault_seed;
@@ -1575,55 +1717,89 @@ fn loadtest_check(
         }
         let x = server.loadtest_input(ids[m], idx as u64);
         let mut attempt = 0u64;
-        let want = loop {
+        // (cycles, bytes, digest, attempts) or (class, attempts).
+        let want: Result<(u64, u64, u64, u64), (&str, u64)> = loop {
             let killed = spec.is_some_and(|s| s.wants_worker_kill(fseed, idx as u64, attempt));
             if killed {
                 if attempt < retries {
                     attempt += 1;
                     continue;
                 }
-                break Err("worker-died");
+                break Err(("worker-died", attempt + 1));
             }
-            let plan: FaultPlan = spec
-                .map(|s| s.plan_for(fseed, idx as u64, attempt, &hints[m]))
-                .unwrap_or_default();
-            match engine.infer_with(handles[m], &x, &plan, None) {
-                Ok(inf) => break Ok(inf),
-                Err(EngineError::Sim(se)) if se.injected && attempt < retries => {
-                    attempt += 1;
+            match clusters[m].as_mut() {
+                // Sharded: one resilient chain consumes the rest of the
+                // shared attempt budget (no in-sim budgets, matching
+                // the loadtest's accounting-only deadlines).
+                Some(cl) => {
+                    let pp = PipelinePolicy {
+                        spec,
+                        seed: fseed,
+                        request: idx as u64,
+                        first_attempt: attempt,
+                        retries,
+                        stage_budgets: None,
+                        total_budget: None,
+                        hints: stage_hints[m].as_deref(),
+                    };
+                    let out = cl.infer_resilient(&x, &pp).unwrap_or_else(|e| {
+                        eprintln!("check: {e}");
+                        std::process::exit(1);
+                    });
+                    let attempts = attempt + out.counters.retries + 1;
+                    break match out.result {
+                        Ok(ci) => Ok((
+                            ci.stats.cycles,
+                            ci.stats.bytes_moved(),
+                            output_digest(&ci.output),
+                            attempts,
+                        )),
+                        Err(_) => Err(("engine", attempts)),
+                    };
                 }
-                Err(_) => break Err("engine"),
+                None => {
+                    let plan: FaultPlan = spec
+                        .map(|s| s.plan_for(fseed, idx as u64, attempt, &hints[m]))
+                        .unwrap_or_default();
+                    let h = handles[m].expect("unsharded model has a handle");
+                    match engine.infer_with(h, &x, &plan, None) {
+                        Ok(inf) => {
+                            break Ok((
+                                inf.stats.cycles,
+                                inf.stats.bytes_moved(),
+                                output_digest(&inf.output),
+                                attempt + 1,
+                            ));
+                        }
+                        Err(EngineError::Sim(se)) if se.injected && attempt < retries => {
+                            attempt += 1;
+                        }
+                        Err(_) => break Err(("engine", attempt + 1)),
+                    }
+                }
             }
         };
         match (out, want) {
-            (LtOutcome::Served { cycles, bytes, digest, attempts, .. }, Ok(inf)) => {
-                if inf.stats.cycles != *cycles
-                    || inf.stats.bytes_moved() != *bytes
-                    || output_digest(&inf.output) != *digest
-                    || attempt + 1 != *attempts
-                {
+            (LtOutcome::Served { cycles, bytes, digest, attempts, .. }, Ok((wc, wb, wd, wa))) => {
+                if wc != *cycles || wb != *bytes || wd != *digest || wa != *attempts {
                     eprintln!(
                         "CHECK FAILED: request {idx} served {cycles} cycles / {bytes} bytes / \
-                         digest {digest:016x} ({attempts} attempts) vs sequential {} / {} / \
-                         {:016x} ({})",
-                        inf.stats.cycles,
-                        inf.stats.bytes_moved(),
-                        output_digest(&inf.output),
-                        attempt + 1
+                         digest {digest:016x} ({attempts} attempts) vs sequential {wc} / {wb} / \
+                         {wd:016x} ({wa})"
                     );
                     bad += 1;
                 }
             }
-            (LtOutcome::Failed { class, attempts, .. }, Err(want_class))
-                if class == &want_class && attempt + 1 == *attempts => {}
-            (LtOutcome::Failed { class, .. }, Err(want_class)) => {
+            (LtOutcome::Failed { class, attempts, .. }, Err((want_class, wa)))
+                if class == &want_class && wa == *attempts => {}
+            (LtOutcome::Failed { class, .. }, Err((want_class, _))) => {
                 eprintln!(
                     "CHECK FAILED: request {idx} failed as [{class}] but the oracle predicts \
                      [{want_class}]"
                 );
                 bad += 1;
             }
-            (LtOutcome::Served { .. }, Err(class)) => {
+            (LtOutcome::Served { .. }, Err((class, _))) => {
                 eprintln!("CHECK FAILED: request {idx} served but the oracle predicts [{class}]");
                 bad += 1;
             }
@@ -1657,8 +1833,14 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     let requests = args.opt_usize("requests", 16);
     let retries_hi = args.opt_usize("retries", 2);
     let deadline_slack = args.opt_f64("deadline-slack", 0.0);
+    // A sharded sweep defaults the kind axis to cover the links too.
+    let default_kinds = if args.opt_usize("shards", 1) > 1 {
+        "dma-stall,dram-corrupt,worker-kill,link-drop,link-degrade"
+    } else {
+        "dma-stall,dram-corrupt,worker-kill"
+    };
     let kinds: Vec<&str> = args
-        .opt_or("kinds", "dma-stall,dram-corrupt,worker-kill")
+        .opt_or("kinds", default_kinds)
         .split(',')
         .filter(|s| !s.is_empty())
         .collect();
@@ -1684,6 +1866,16 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
             eprintln!("{e}");
             std::process::exit(1);
         });
+    // `--shards N`: every cell serves the model as an N-stage pipeline
+    // instead — the same sweep then exercises stage-granular retry and
+    // (with link-drop/link-degrade kinds) the inter-stage links.
+    let shards = args.opt_usize("shards", 1);
+    let shard_plan: Option<ShardPlan> = (shards > 1).then(|| {
+        partition::partition(&g, cfg, &options(args), shards).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        })
+    });
     // With `--arrivals SPEC`, cells replay an open-loop trace through
     // the virtual-time loadtest scheduler (measured service) instead of
     // a prefilled serve_all — adding offered-load and shed-rate columns
@@ -1718,7 +1910,11 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
             faults,
             fault_seed: args.opt_u64("fault-seed", seed),
         });
-        let id = server.register(artifact.clone(), seed).unwrap_or_else(|e| {
+        let id = match &shard_plan {
+            Some(plan) => server.register_sharded(plan.clone(), seed),
+            None => server.register(artifact.clone(), seed),
+        }
+        .unwrap_or_else(|e| {
             eprintln!("{e}");
             std::process::exit(1);
         });
@@ -1763,12 +1959,16 @@ fn chaos(args: &Args, cfg: &SnowflakeConfig, seed: u64) {
     };
 
     println!(
-        "chaos sweep: {} x {} requests/cell, {} workers, retries 0 vs {}, deadline slack {}{}",
+        "chaos sweep: {} x {} requests/cell, {} workers, retries 0 vs {}, deadline slack {}{}{}",
         g.name,
         requests,
         serve_cfg.workers,
         retries_hi,
         deadline_slack,
+        match &shard_plan {
+            Some(p) => format!(", {}-stage pipeline (cuts {:?})", p.n_stages(), p.cuts()),
+            None => String::new(),
+        },
         match &trace {
             Some(t) => format!(
                 ", arrivals [{}] offered {:.1} req/s (virtual-time cells)",

@@ -23,6 +23,23 @@
 //! Worker-process death is injected one level up, in the serving
 //! runtime ([`FaultSpec::wants_worker_kill`]): it is a host failure,
 //! not a simulated-machine one, so it must not perturb sim time.
+//!
+//! ## Pipeline faults (ISSUE 10)
+//!
+//! A sharded pipeline multiplies the failure surface: N machines plus
+//! N−1 inter-stage links. Two link kinds cover the links —
+//! [`LinkFault::Drop`] (the transfer is lost outright; the boundary
+//! activation must be re-sent) and [`LinkFault::Degrade`] (the link
+//! survives at a fraction of its bandwidth; the modeled transfer
+//! cycles are multiplied). Links are *modeled*, not simulated, so link
+//! faults are drawn here ([`FaultSpec::link_fault_for`]) and charged
+//! by the cluster runtime in link cycles.
+//!
+//! Per-stage machine plans come from [`FaultSpec::plan_for_stage`]:
+//! the per-kind stream salt is widened with the stage index
+//! ([`stage_salt`]), so every stage of every attempt draws an
+//! independent stream — a stage retry sees fresh faults while a replay
+//! of the same (seed, request, attempt, stage) is bit-identical.
 
 use crate::util::rng::Rng;
 
@@ -71,6 +88,12 @@ pub enum FaultKind {
     /// Kills the serving worker processing the request (host-level;
     /// never appears in a [`FaultPlan`]).
     WorkerKill,
+    /// An inter-stage link loses the boundary transfer outright
+    /// (pipeline-level; never appears in a [`FaultPlan`]).
+    LinkDrop,
+    /// An inter-stage link survives at a fraction of its bandwidth
+    /// (pipeline-level; never appears in a [`FaultPlan`]).
+    LinkDegrade,
 }
 
 impl FaultKind {
@@ -81,6 +104,8 @@ impl FaultKind {
             "dram-corrupt" => FaultKind::DramCorrupt,
             "abort" => FaultKind::Abort,
             "worker-kill" => FaultKind::WorkerKill,
+            "link-drop" => FaultKind::LinkDrop,
+            "link-degrade" => FaultKind::LinkDegrade,
             _ => return None,
         })
     }
@@ -92,7 +117,15 @@ impl FaultKind {
             FaultKind::DramCorrupt => "dram-corrupt",
             FaultKind::Abort => "abort",
             FaultKind::WorkerKill => "worker-kill",
+            FaultKind::LinkDrop => "link-drop",
+            FaultKind::LinkDegrade => "link-degrade",
         }
+    }
+
+    /// True for the kinds that act on an inter-stage pipeline link and
+    /// therefore need a sharded (≥2-stage) run to mean anything.
+    pub fn is_link_kind(&self) -> bool {
+        matches!(self, FaultKind::LinkDrop | FaultKind::LinkDegrade)
     }
 
     /// Stable salt for the per-kind RNG stream.
@@ -103,6 +136,8 @@ impl FaultKind {
             FaultKind::DramCorrupt => 3,
             FaultKind::Abort => 4,
             FaultKind::WorkerKill => 5,
+            FaultKind::LinkDrop => 6,
+            FaultKind::LinkDegrade => 7,
         }
     }
 }
@@ -134,10 +169,40 @@ pub struct FaultSpec {
     pub rates: Vec<(FaultKind, f64)>,
 }
 
-/// Independent RNG stream per (seed, request, attempt, kind): retries
+/// Exclusive upper bound on the stage/link indices the stage-salted
+/// streams ([`stage_salt`]) can address: the index is packed into bits
+/// 8.. of the per-kind salt, and 256 stages is far beyond any plan the
+/// partitioner will produce. A sharded run with more stages must be
+/// rejected typed ([`FaultSpec::check_stages`]), never mis-keyed.
+pub const MAX_STAGE_SALTS: usize = 256;
+
+/// Widen a per-kind stream salt with a pipeline stage (or link) index,
+/// so stage `s` of a request draws faults independently of every other
+/// stage of the same attempt. Bits 0..8 keep the kind salt, bits 8..
+/// carry `index + 1` — distinct (kind, index) pairs can never collide,
+/// and index 0 stays distinct from the unsalted single-machine stream.
+pub fn stage_salt(kind_salt: u64, index: usize) -> u64 {
+    kind_salt | ((index as u64).wrapping_add(1) << 8)
+}
+
+/// Outcome of the link-fault draw for one boundary transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFault {
+    /// The transfer is lost: the full modeled link time is wasted and
+    /// the boundary must be re-sent (a fresh attempt draws fresh
+    /// faults). A drop is injected and therefore transient.
+    Drop,
+    /// The link survives at reduced bandwidth: the modeled transfer
+    /// cycles are multiplied by `factor` (2..=8).
+    Degrade { factor: u64 },
+}
+
+/// Independent RNG stream per (seed, request, attempt, salt): retries
 /// of the same request see *different* faults (so a retry can succeed)
-/// while every replay of the same attempt sees the same ones.
-fn stream_seed(seed: u64, request: u64, attempt: u64, salt: u64) -> u64 {
+/// while every replay of the same attempt sees the same ones. The salt
+/// is the per-kind constant ([`FaultKind`]'s internal salt), widened
+/// with [`stage_salt`] for per-stage pipeline streams.
+pub fn stream_seed(seed: u64, request: u64, attempt: u64, salt: u64) -> u64 {
     seed ^ request
         .wrapping_add(1)
         .wrapping_mul(0x9e37_79b9_7f4a_7c15)
@@ -177,10 +242,38 @@ impl FaultSpec {
     /// The deterministic fault schedule for one attempt of one request.
     /// Only sim-level kinds appear; `worker-kill` is queried separately.
     pub fn plan_for(&self, seed: u64, request: u64, attempt: u64, hint: &PlanHint) -> FaultPlan {
+        self.plan_with_salts(seed, request, attempt, hint, |k| k.salt())
+    }
+
+    /// The deterministic machine-fault schedule for one attempt of one
+    /// stage of a pipelined request: [`FaultSpec::plan_for`] with every
+    /// per-kind salt widened by the stage index ([`stage_salt`]), so
+    /// stages draw independent streams and a stage retry (attempt+1)
+    /// sees fresh faults. Link kinds never appear here — they are drawn
+    /// per boundary transfer by [`FaultSpec::link_fault_for`].
+    pub fn plan_for_stage(
+        &self,
+        seed: u64,
+        request: u64,
+        attempt: u64,
+        stage: usize,
+        hint: &PlanHint,
+    ) -> FaultPlan {
+        self.plan_with_salts(seed, request, attempt, hint, |k| stage_salt(k.salt(), stage))
+    }
+
+    fn plan_with_salts(
+        &self,
+        seed: u64,
+        request: u64,
+        attempt: u64,
+        hint: &PlanHint,
+        salt_of: impl Fn(FaultKind) -> u64,
+    ) -> FaultPlan {
         let expect = hint.expect_cycles.max(1000);
         let mut faults = Vec::new();
         for &(kind, rate) in &self.rates {
-            let mut rng = Rng::new(stream_seed(seed, request, attempt, kind.salt()));
+            let mut rng = Rng::new(stream_seed(seed, request, attempt, salt_of(kind)));
             if rng.f64() >= rate {
                 continue;
             }
@@ -208,7 +301,7 @@ impl FaultSpec {
                 FaultKind::Abort => {
                     faults.push(Fault::Abort { at: rng.below(expect) });
                 }
-                FaultKind::WorkerKill => {}
+                FaultKind::WorkerKill | FaultKind::LinkDrop | FaultKind::LinkDegrade => {}
             }
         }
         FaultPlan { faults }
@@ -220,6 +313,67 @@ impl FaultSpec {
             kind == FaultKind::WorkerKill
                 && Rng::new(stream_seed(seed, request, attempt, kind.salt())).f64() < rate
         })
+    }
+
+    /// The deterministic link-fault draw for one boundary transfer
+    /// across link `link` (between stages `link` and `link+1`). A drop
+    /// and a degrade drawn together resolve to the drop — a transfer
+    /// that is lost cannot also be merely slow.
+    pub fn link_fault_for(
+        &self,
+        seed: u64,
+        request: u64,
+        attempt: u64,
+        link: usize,
+    ) -> Option<LinkFault> {
+        let draw = |kind: FaultKind| {
+            let rate = self.rate(kind);
+            let mut rng =
+                Rng::new(stream_seed(seed, request, attempt, stage_salt(kind.salt(), link)));
+            if rng.f64() < rate {
+                Some(rng)
+            } else {
+                None
+            }
+        };
+        if draw(FaultKind::LinkDrop).is_some() {
+            return Some(LinkFault::Drop);
+        }
+        draw(FaultKind::LinkDegrade).map(|mut rng| LinkFault::Degrade { factor: 2 + rng.below(7) })
+    }
+
+    /// True iff the spec carries any link-level kind.
+    pub fn has_link_kinds(&self) -> bool {
+        self.rates.iter().any(|(k, _)| k.is_link_kind())
+    }
+
+    /// Validate this spec against the pipeline depth it will run on:
+    /// link kinds need a real pipeline (≥2 stages), and the stage-salted
+    /// streams address at most [`MAX_STAGE_SALTS`] stages. Violations
+    /// are typed errors — a chaos run must reject a meaningless spec,
+    /// never silently ignore it or mis-key a stream.
+    pub fn check_stages(&self, n_stages: usize) -> Result<(), String> {
+        if n_stages <= 1 && self.has_link_kinds() {
+            let kinds: Vec<&str> = self
+                .rates
+                .iter()
+                .filter(|(k, _)| k.is_link_kind())
+                .map(|(k, _)| k.name())
+                .collect();
+            return Err(format!(
+                "fault kind{} {} need{} an inter-stage link: run sharded (--shards N, N >= 2)",
+                if kinds.len() > 1 { "s" } else { "" },
+                kinds.join(", "),
+                if kinds.len() > 1 { "" } else { "s" },
+            ));
+        }
+        if n_stages > MAX_STAGE_SALTS {
+            return Err(format!(
+                "pipeline has {n_stages} stages but fault streams address at most \
+                 {MAX_STAGE_SALTS} (stage salt out of range)"
+            ));
+        }
+        Ok(())
     }
 
     /// The configured rate for a kind (0 if absent) — reporting only.
@@ -285,6 +439,92 @@ mod tests {
             .count();
         // 4000 draws at p=0.25: expect ~1000, allow a wide band.
         assert!((800..=1200).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn parse_round_trips_link_kinds() {
+        let s = FaultSpec::parse("link-drop:0.1,link-degrade:0.2").unwrap();
+        assert_eq!(s.rate(FaultKind::LinkDrop), 0.1);
+        assert_eq!(s.rate(FaultKind::LinkDegrade), 0.2);
+        assert!(s.has_link_kinds());
+        assert!(!FaultSpec::parse("dma-stall:0.5").unwrap().has_link_kinds());
+    }
+
+    /// The stage-salt independence property (ISSUE 10 satellite): the
+    /// same (seed, request, attempt, stage) key is bit-identical across
+    /// draws, while distinct stage salts (and distinct attempts within
+    /// one stage) produce distinct streams.
+    #[test]
+    fn stage_salted_streams_are_independent_and_reproducible() {
+        let spec = FaultSpec::parse("dma-stall:1.0,cu-hang:1.0,dram-corrupt:1.0,abort:1.0")
+            .unwrap();
+        let hint = PlanHint::default();
+        for stage in [0usize, 1, 7] {
+            let a = spec.plan_for_stage(7, 3, 0, stage, &hint);
+            let b = spec.plan_for_stage(7, 3, 0, stage, &hint);
+            assert_eq!(a, b, "stage {stage}: same salt must be bit-identical");
+            assert_eq!(a.len(), 4);
+            let retry = spec.plan_for_stage(7, 3, 1, stage, &hint);
+            assert_ne!(a, retry, "stage {stage}: a stage retry must draw fresh faults");
+        }
+        let s0 = spec.plan_for_stage(7, 3, 0, 0, &hint);
+        let s1 = spec.plan_for_stage(7, 3, 0, 1, &hint);
+        assert_ne!(s0, s1, "distinct stage salts must yield distinct plans");
+        // Stage 0 is salted too: it must not alias the unsharded stream.
+        assert_ne!(s0, spec.plan_for(7, 3, 0, &hint));
+        // Raw salt arithmetic: no (kind, index) collisions in range.
+        let mut seen = std::collections::HashSet::new();
+        for kind_salt in 1..=7u64 {
+            for idx in 0..MAX_STAGE_SALTS {
+                assert!(seen.insert(stage_salt(kind_salt, idx)));
+            }
+        }
+    }
+
+    #[test]
+    fn link_faults_are_deterministic_and_drop_wins() {
+        let spec = FaultSpec::parse("link-drop:1.0,link-degrade:1.0").unwrap();
+        for link in 0..4 {
+            let a = spec.link_fault_for(9, 2, 0, link);
+            assert_eq!(a, Some(LinkFault::Drop), "drop must shadow degrade");
+            assert_eq!(a, spec.link_fault_for(9, 2, 0, link), "replay must agree");
+        }
+        let degrade = FaultSpec::parse("link-degrade:1.0").unwrap();
+        for link in 0..4 {
+            match degrade.link_fault_for(9, 2, 0, link) {
+                Some(LinkFault::Degrade { factor }) => assert!((2..=8).contains(&factor)),
+                other => panic!("link {link}: expected a degrade, got {other:?}"),
+            }
+        }
+        // Distinct links and attempts draw independent streams.
+        let half = FaultSpec::parse("link-drop:0.5").unwrap();
+        let hits = (0..4000)
+            .filter(|&r| half.link_fault_for(13, r, 0, 0) == Some(LinkFault::Drop))
+            .count();
+        assert!((1800..=2200).contains(&hits), "{hits}");
+        assert!(
+            (0..64).any(|r| half.link_fault_for(13, r, 0, 0) != half.link_fault_for(13, r, 0, 1)),
+            "links must not share one stream"
+        );
+        // Zero rate draws nothing, ever.
+        let quiet = FaultSpec::parse("link-drop:0.0,link-degrade:0").unwrap();
+        for r in 0..64 {
+            assert_eq!(quiet.link_fault_for(1, r, 0, 0), None);
+        }
+    }
+
+    #[test]
+    fn check_stages_rejects_linkless_and_oversized_runs_typed() {
+        let link = FaultSpec::parse("link-drop:0.5").unwrap();
+        let err = link.check_stages(1).unwrap_err();
+        assert!(err.contains("link-drop"), "{err}");
+        assert!(err.contains("--shards"), "{err}");
+        assert!(link.check_stages(2).is_ok());
+        let machine = FaultSpec::parse("dma-stall:0.5").unwrap();
+        assert!(machine.check_stages(1).is_ok(), "machine kinds run unsharded");
+        let err = machine.check_stages(MAX_STAGE_SALTS + 1).unwrap_err();
+        assert!(err.contains("stage salt"), "{err}");
+        assert!(machine.check_stages(MAX_STAGE_SALTS).is_ok());
     }
 
     #[test]

@@ -17,13 +17,14 @@
 //!    in `sim::tests`, where the oversized program is hand-built.)
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{deploy, Artifact, CompileOptions, Compiler, LoopOrder};
+use snowflake::compiler::{deploy, partition, Artifact, CompileOptions, Compiler, LoopOrder};
+use snowflake::engine::cluster::{Cluster, PipelineFailure, PipelinePolicy};
 use snowflake::engine::serve::{ModelId, ResilienceConfig, ServeConfig, ServeError, Server};
 use snowflake::engine::EngineError;
 use snowflake::model::graph::Graph;
 use snowflake::model::layer::{LayerKind, Shape};
 use snowflake::model::weights::{synthetic_input, Weights};
-use snowflake::sim::fault::{Fault, FaultPlan, FaultSpec};
+use snowflake::sim::fault::{Fault, FaultPlan, FaultSpec, PlanHint, MAX_STAGE_SALTS};
 use snowflake::sim::{CoreMode, SimErrorKind};
 use snowflake::tensor::Tensor;
 
@@ -291,8 +292,9 @@ fn deadline_budgets_cut_off_typed_and_generous_slack_passes() {
     let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
     for (r, o) in outcomes.iter().enumerate() {
         match o {
-            Err(ServeError::DeadlineExceeded { budget_cycles }) => {
-                assert_eq!(*budget_cycles, budget, "request {r}")
+            Err(ServeError::DeadlineExceeded { budget_cycles, at }) => {
+                assert_eq!(*budget_cycles, budget, "request {r}");
+                assert!(at.is_none(), "unsharded misses carry no stage location");
             }
             other => panic!("request {r}: expected DeadlineExceeded, got {other:?}"),
         }
@@ -527,5 +529,340 @@ fn injected_cu_hangs_deadlock_typed_on_every_skeleton() {
         assert!(err.message.contains("cu1["), "{order:?}: report misses the hung CU: {err}");
         assert!(m.stats.faults_cu_hang == 1, "{order:?}");
         assert!(err.cycle < 1_000_000, "{order:?}: detected only at cycle {}", err.cycle);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded chaos (ISSUE 10): stage/link faults, apportioned deadlines,
+// stage-granular retry.
+// ---------------------------------------------------------------------
+
+/// Two small convs — just enough graph to cut into a 2-stage pipeline.
+fn sharded_graph() -> Graph {
+    let mut g = Graph::new("sharded-chaos", Shape::new(16, 10, 10));
+    for i in 0..2 {
+        g.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            &format!("c{i}"),
+        );
+    }
+    g
+}
+
+/// A one-model server whose model is the 2-stage pipeline cut of
+/// [`sharded_graph`], plus the plan itself for oracle replays.
+fn sharded_server(
+    cfg: &SnowflakeConfig,
+    res: ResilienceConfig,
+    workers: usize,
+) -> (Server, ModelId, Graph, partition::ShardPlan) {
+    let g = sharded_graph();
+    let plan = partition::partition(&g, cfg, &CompileOptions::default(), 2).expect("partition");
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers, max_batch: 2, queue_depth: 4, cache_cap: 8 },
+    );
+    let id = server.register_sharded(plan.clone(), 42).unwrap();
+    server.set_resilience(res);
+    (server, id, g, plan)
+}
+
+/// With no faults and no deadlines, a sharded model served through the
+/// full worker/queue machinery stays bit-identical to a plain
+/// [`Cluster::infer`] — the ISSUE 8 contract survives the resilient
+/// path, and every chaos counter stays dark.
+#[test]
+fn zero_fault_sharded_serving_matches_plain_cluster_inference() {
+    let cfg = SnowflakeConfig::default();
+    let (server, id, g, plan) = sharded_server(&cfg, ResilienceConfig::default(), 2);
+    let n = 6;
+    let (responses, report) = server.serve_all(inputs(&g, id, n)).unwrap();
+    let mut cl = Cluster::new(&plan, 42).expect("cluster");
+    for (r, resp) in responses.iter().enumerate() {
+        let want = cl.infer(&synthetic_input(&g, 100 + r as u64)).expect("plain pipeline");
+        assert_eq!(resp.stats.cycles, want.stats.cycles, "request {r}: cycles diverged");
+        assert_eq!(resp.stats.comparable(), want.stats.comparable(), "request {r}");
+        assert_eq!(resp.output.count_diff(&want.output), 0, "request {r}: output diverged");
+    }
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.faults_injected(), 0);
+    assert_eq!(report.retries(), 0);
+}
+
+/// The stage-granular retry invariant, proven through per-stage sim
+/// counters: with abort triggers aimed inside the *actual* stage run
+/// length, a failed stage re-runs alone from its retained boundary —
+/// the chain's extra sims land exactly on the stages that retried —
+/// and the survivor's output and elapsed cycles are bit-identical to
+/// the healthy pipeline (failed attempts never leak into either).
+#[test]
+fn stage_retry_reruns_only_the_failed_stage_from_its_boundary() {
+    let cfg = SnowflakeConfig::default();
+    let g = sharded_graph();
+    let plan = partition::partition(&g, &cfg, &CompileOptions::default(), 2).expect("partition");
+    let mut cl = Cluster::new(&plan, 42).expect("cluster");
+    let x = synthetic_input(&g, 7);
+    let healthy = cl.infer(&x).expect("healthy pipeline");
+
+    // Fault triggers are drawn from [0, expect_cycles): pinning the
+    // hint to the measured stage length makes every scheduled abort
+    // land inside the run, so a drawn fault always costs a retry.
+    let hints: Vec<PlanHint> = plan
+        .stages
+        .iter()
+        .zip(&healthy.stage_stats)
+        .map(|(st, s)| PlanHint {
+            n_units: cfg.n_load_units,
+            n_cus: cfg.n_cus,
+            mem_words: st.artifact.compiled.plan.mem_words,
+            expect_cycles: s.cycles,
+        })
+        .collect();
+    let spec = FaultSpec::parse("abort:0.5").unwrap();
+    let mut retried = 0u64;
+    for r in 0..16u64 {
+        let pp = PipelinePolicy {
+            spec: Some(&spec),
+            seed: 31,
+            request: r,
+            retries: 8,
+            hints: Some(&hints[..]),
+            ..Default::default()
+        };
+        let out = cl.infer_resilient(&x, &pp).expect("input shape is valid");
+        let c = &out.counters;
+        assert_eq!(c.link_faults, 0, "request {r}: machine kinds drew a link fault");
+        match &out.result {
+            Ok(ci) => {
+                assert!(c.stage_sims.iter().all(|&s| s >= 1), "request {r}: {:?}", c.stage_sims);
+                assert_eq!(
+                    c.stage_sims.iter().sum::<u64>(),
+                    plan.n_stages() as u64 + c.retries,
+                    "request {r}: a retry re-ran more than the failed stage: {:?}",
+                    c.stage_sims
+                );
+                assert_eq!(ci.output.count_diff(&healthy.output), 0, "request {r}");
+                assert_eq!(
+                    ci.stats.cycles, healthy.stats.cycles,
+                    "request {r}: failed attempts leaked into elapsed cycles"
+                );
+                if c.retries > 0 {
+                    retried += 1;
+                }
+            }
+            Err(PipelineFailure::Stage { stage, error }) => {
+                // Attempt budget spent mid-chain: stages past the dead
+                // one never ran at all.
+                assert!(error.injected, "request {r}: {error}");
+                assert_eq!(c.retries, 8, "request {r}: failed with budget left");
+                for k in stage + 1..plan.n_stages() {
+                    assert_eq!(
+                        c.stage_sims[k], 0,
+                        "request {r}: stage {k} ran after the chain died at stage {stage}"
+                    );
+                }
+            }
+            Err(other) => panic!("request {r}: unexpected failure {other}"),
+        }
+    }
+    assert!(retried > 0, "abort:0.5 never retried a stage in 16 chains");
+}
+
+/// Sharded serving under machine faults is exactly reproducible: a
+/// fresh [`Cluster::infer_resilient`] replay with the server's own
+/// policy reproduces every served outcome bit for bit, and the
+/// report's chaos counters equal the sums over the replayed chains.
+#[test]
+fn sharded_chaos_serving_matches_the_oracle_replay() {
+    let cfg = SnowflakeConfig::default();
+    let res = ResilienceConfig {
+        retries: 4,
+        breaker_threshold: 0,
+        faults: Some(FaultSpec::parse("abort:1.0").unwrap()),
+        fault_seed: 17,
+        ..Default::default()
+    };
+    let (server, id, g, plan) = sharded_server(&cfg, res.clone(), 3);
+    let hints = server.stage_plan_hints(id).expect("sharded models carry stage hints");
+    let n = 12;
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
+    assert_eq!(outcomes.len(), n);
+
+    let mut oracle = Cluster::new(&plan, 42).expect("cluster");
+    let spec = res.faults.as_ref().unwrap();
+    let (mut want_retries, mut want_faults) = (0u64, 0u64);
+    for (r, o) in outcomes.iter().enumerate() {
+        let x = synthetic_input(&g, 100 + r as u64);
+        let pp = PipelinePolicy {
+            spec: Some(spec),
+            seed: res.fault_seed,
+            request: r as u64,
+            retries: res.retries as u64,
+            hints: Some(&hints[..]),
+            ..Default::default()
+        };
+        let out = oracle.infer_resilient(&x, &pp).expect("oracle replay");
+        want_retries += out.counters.retries;
+        want_faults += out.counters.faults_injected + out.counters.link_faults;
+        match (&out.result, o) {
+            (Ok(ci), Ok(resp)) => {
+                assert_eq!(resp.stats.cycles, ci.stats.cycles, "request {r}: cycles diverged");
+                assert_eq!(resp.stats.comparable(), ci.stats.comparable(), "request {r}");
+                assert_eq!(resp.output.count_diff(&ci.output), 0, "request {r}");
+            }
+            (Err(PipelineFailure::Stage { stage, .. }), Err(ServeError::Engine(EngineError::Sim(se)))) => {
+                assert_eq!(se.kind, SimErrorKind::InjectedAbort, "request {r}: {se}");
+                assert!(se.injected, "request {r}: abort not flagged injected");
+                assert!(
+                    se.message.contains(&format!("stage {stage}")),
+                    "request {r}: error does not name stage {stage}: {se}"
+                );
+            }
+            (want, got) => panic!("request {r}: serve and oracle disagree: {want:?} vs {got:?}"),
+        }
+    }
+    // Rate 1.0 schedules exactly one abort per stage attempt, so the
+    // replayed counter sums pin the report exactly.
+    assert_eq!(report.retries(), want_retries);
+    assert_eq!(report.faults_injected(), want_faults);
+}
+
+/// Link faults never corrupt data: a dropped transfer is re-sent from
+/// the retained boundary (or fails typed naming the link), a degraded
+/// link only adds modeled link cycles — every survivor's output stays
+/// bit-identical to the healthy pipeline and never arrives early.
+#[test]
+fn link_faults_only_slow_or_drop_transfers_never_corrupt_them() {
+    let cfg = SnowflakeConfig::default();
+    let res = ResilienceConfig {
+        retries: 2,
+        breaker_threshold: 0,
+        faults: Some(FaultSpec::parse("link-drop:0.5,link-degrade:0.8").unwrap()),
+        fault_seed: 23,
+        ..Default::default()
+    };
+    let (server, id, g, plan) = sharded_server(&cfg, res, 3);
+    let n = 12;
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
+
+    let mut healthy = Cluster::new(&plan, 42).expect("cluster");
+    for (r, o) in outcomes.iter().enumerate() {
+        let h = healthy.infer(&synthetic_input(&g, 100 + r as u64)).expect("healthy pipeline");
+        match o {
+            Ok(resp) => {
+                assert_eq!(resp.output.count_diff(&h.output), 0, "request {r}: output corrupted");
+                assert!(
+                    resp.stats.cycles >= h.stats.cycles,
+                    "request {r}: a faulted link made the pipeline faster ({} < {})",
+                    resp.stats.cycles,
+                    h.stats.cycles
+                );
+            }
+            Err(ServeError::Engine(EngineError::Sim(se))) => {
+                assert!(se.injected, "request {r}: {se}");
+                assert!(
+                    se.message.contains("dropped the boundary transfer"),
+                    "request {r}: failure does not name the dropped link: {se}"
+                );
+            }
+            Err(e) => panic!("request {r}: unexpected failure {e}"),
+        }
+    }
+    // drop:0.5 + degrade:0.8 across 12 transfers: statistically
+    // impossible (and, with this seed, deterministically false) that
+    // no link fault fired.
+    assert!(report.faults_injected() > 0, "no link fault fired across {n} transfers");
+}
+
+/// A starvation-level sharded deadline cuts every request off *in-sim*
+/// against the first stage's apportioned budget, and the typed error
+/// names that stage; generous slack changes nothing.
+#[test]
+fn sharded_deadline_misses_name_the_dead_stage() {
+    let cfg = SnowflakeConfig::default();
+    let tight = ResilienceConfig {
+        deadline_slack: 0.01,
+        retries: 2,
+        breaker_threshold: 0,
+        ..Default::default()
+    };
+    let (server, id, g, plan) = sharded_server(&cfg, tight, 2);
+    let budgets = server.stage_budgets(id).expect("slack > 0 apportions stage budgets");
+    assert_eq!(budgets, plan.stage_budgets(0.01), "server budgets diverge from the plan's");
+    let n = 4;
+    let (outcomes, report) = server.serve_all_outcomes(inputs(&g, id, n)).unwrap();
+    for (r, o) in outcomes.iter().enumerate() {
+        match o {
+            Err(ServeError::DeadlineExceeded { budget_cycles, at }) => {
+                assert_eq!(
+                    at.as_deref(),
+                    Some("stage 0"),
+                    "request {r}: the first stage's budget must die first"
+                );
+                assert_eq!(*budget_cycles, budgets[0], "request {r}");
+            }
+            other => panic!("request {r}: expected a sharded deadline miss, got {other:?}"),
+        }
+    }
+    assert_eq!(report.per_model[0].deadline_exceeded, n as u64);
+    assert_eq!(report.retries(), 0, "deadline misses are hard failures: no retries spent");
+
+    let loose = ResilienceConfig { deadline_slack: 1_000.0, ..Default::default() };
+    let (server, id, g, _) = sharded_server(&cfg, loose, 2);
+    let (responses, report) = server.serve_all(inputs(&g, id, n)).unwrap();
+    assert_eq!(responses.len(), n);
+    assert_eq!(report.failed(), 0);
+}
+
+/// Link fault kinds against a server with no sharded model must be
+/// rejected typed up front — one machine has no links to fault.
+#[test]
+fn link_kinds_without_a_pipeline_are_rejected_typed() {
+    let cfg = SnowflakeConfig::default();
+    let res = ResilienceConfig {
+        faults: Some(FaultSpec::parse("link-drop:0.5,link-degrade:0.25").unwrap()),
+        ..Default::default()
+    };
+    let (server, id, g) = chaos_server(&cfg, res, 2, 2);
+    let err = server.serve_all_outcomes(inputs(&g, id, 2)).unwrap_err();
+    match err {
+        ServeError::BadInput(m) => {
+            assert!(m.contains("link"), "{m}");
+            assert!(m.contains("--shards"), "{m}");
+        }
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+}
+
+/// A registered pipeline deeper than the stage-salt address space must
+/// be rejected typed the moment fault injection is armed — never
+/// silently mis-keyed. Registration itself stays legal: the depth cap
+/// belongs to the fault streams, not the pipeline.
+#[test]
+fn fault_injection_on_an_oversized_pipeline_is_rejected_typed() {
+    let cfg = SnowflakeConfig::default();
+    let depth = MAX_STAGE_SALTS + 1;
+    let mut g = Graph::new("deep", Shape::new(8, 6, 6));
+    for i in 0..depth + 3 {
+        g.push_seq(
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            &format!("c{i}"),
+        );
+    }
+    let plan =
+        partition::partition(&g, &cfg, &CompileOptions::default(), depth).expect("partition");
+    let mut server = Server::new(
+        cfg.clone(),
+        ServeConfig { workers: 1, max_batch: 1, queue_depth: 4, cache_cap: 2 },
+    );
+    let id = server.register_sharded(plan, 42).unwrap();
+    server.set_resilience(ResilienceConfig {
+        faults: Some(FaultSpec::parse("dma-stall:0.5").unwrap()),
+        ..Default::default()
+    });
+    let err = server.serve_all_outcomes(inputs(&g, id, 1)).unwrap_err();
+    match err {
+        ServeError::BadInput(m) => assert!(m.contains("stage salt"), "{m}"),
+        other => panic!("expected BadInput, got {other:?}"),
     }
 }

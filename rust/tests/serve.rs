@@ -10,8 +10,9 @@
 //! to a sequential `Engine::infer` of the same model and input.
 
 use snowflake::arch::SnowflakeConfig;
-use snowflake::compiler::{Artifact, Compiler};
+use snowflake::compiler::{partition, Artifact, CompileOptions, Compiler};
 use snowflake::engine::cache::DiskCache;
+use snowflake::engine::cluster::Cluster;
 use snowflake::engine::serve::{ServeConfig, ServeError, Server};
 use snowflake::engine::Engine;
 use snowflake::model::graph::Graph;
@@ -535,17 +536,28 @@ fn tampered_disk_entry_is_a_miss_and_recompile_replaces_it() {
 /// The warmup stampede contract: N workers starting together deploy
 /// each registered model exactly once (the warm), every per-worker
 /// load is a hit, pinned models survive a cap-1 LRU, and the served
-/// responses stay bit-identical to the sequential engine.
+/// responses stay bit-identical to the sequential engine. A sharded
+/// model warms one image per *stage* (S misses), and every worker
+/// building its pipeline takes S hits.
 #[test]
 fn warmup_deploys_each_model_exactly_once_across_racing_workers() {
     let cfg = SnowflakeConfig::default();
     let ga = small_graph("serve_w_a", 8);
     let gb = small_graph("serve_w_b", 12);
+    // A third, sharded model: two convs cut into a 2-stage pipeline.
+    let mut gc = Graph::new("serve_w_c", Shape::new(16, 10, 10));
+    for i in 0..2 {
+        gc.push_seq(
+            LayerKind::Conv { in_ch: 16, out_ch: 16, kh: 3, kw: 3, stride: 1, pad: 1, relu: true },
+            &format!("c{i}"),
+        );
+    }
+    let plan = partition::partition(&gc, &cfg, &CompileOptions::default(), 2).expect("partition");
     let seed = 21;
-    // cache_cap 1 with two models: without pinning, the second deploy
-    // would evict the first and every later load would re-deploy. With
-    // warmup both are pinned, so the counters below are only reachable
-    // through the "deploy once, pin, share" path.
+    // cache_cap 1 with several models: without pinning, each deploy
+    // would evict the previous and every later load would re-deploy.
+    // With warmup every image is pinned, so the counters below are only
+    // reachable through the "deploy once, pin, share" path.
     let mut server = Server::new(
         cfg.clone(),
         ServeConfig { workers: 4, max_batch: 2, queue_depth: 8, cache_cap: 1 },
@@ -554,29 +566,51 @@ fn warmup_deploys_each_model_exactly_once_across_racing_workers() {
     assert!(server.warmup());
     let ia = server.register(build(&cfg, &ga), seed).unwrap();
     let ib = server.register(build(&cfg, &gb), seed).unwrap();
+    let ic = server.register_sharded(plan.clone(), seed).unwrap();
     let n = 12usize;
     let requests: Vec<_> = (0..n)
         .map(|r| {
-            let (id, g) = if r % 2 == 0 { (ia, &ga) } else { (ib, &gb) };
+            let (id, g) = match r % 3 {
+                0 => (ia, &ga),
+                1 => (ib, &gb),
+                _ => (ic, &gc),
+            };
             (id, synthetic_input(g, seed + r as u64))
         })
         .collect();
     let (responses, report) = server.serve_all(requests).unwrap();
     assert_eq!(responses.len(), n);
 
-    assert_eq!(report.cache.misses, 2, "warmup must deploy each model exactly once");
-    assert_eq!(report.cache.hits, 2 * 4, "all 4 workers x 2 models load from the warm cache");
+    // 2 unsharded images + 2 stage images, each deployed exactly once.
+    assert_eq!(report.cache.misses, 4, "warmup must deploy each image exactly once");
+    assert_eq!(
+        report.cache.hits,
+        4 * 4,
+        "all 4 workers x (2 unsharded + 2 stage images) load from the warm cache"
+    );
     assert_eq!(report.cache.evictions, 0, "pinned models must survive the cap-1 LRU");
 
-    // Bit-identical to the sequential engine, same as every other path.
+    // Bit-identical to the sequential engine (and, for the sharded
+    // model, to a plain sequential pipeline), same as every other path.
     let mut engine = Engine::new(cfg.clone());
     let ha = engine.load(build(&cfg, &ga), seed).unwrap();
     let hb = engine.load(build(&cfg, &gb), seed).unwrap();
+    let mut cl = Cluster::new(&plan, seed).expect("cluster");
     for (r, resp) in responses.iter().enumerate() {
-        let (h, g) = if r % 2 == 0 { (ha, &ga) } else { (hb, &gb) };
-        let x = synthetic_input(g, seed + r as u64);
-        let want = engine.infer(h, &x).unwrap();
-        assert_eq!(resp.stats.comparable(), want.stats.comparable(), "request {r}");
-        assert_eq!(resp.output.count_diff(&want.output), 0, "request {r}");
+        match r % 3 {
+            0 | 1 => {
+                let (h, g) = if r % 3 == 0 { (ha, &ga) } else { (hb, &gb) };
+                let x = synthetic_input(g, seed + r as u64);
+                let want = engine.infer(h, &x).unwrap();
+                assert_eq!(resp.stats.comparable(), want.stats.comparable(), "request {r}");
+                assert_eq!(resp.output.count_diff(&want.output), 0, "request {r}");
+            }
+            _ => {
+                let x = synthetic_input(&gc, seed + r as u64);
+                let want = cl.infer(&x).unwrap();
+                assert_eq!(resp.stats.comparable(), want.stats.comparable(), "request {r}");
+                assert_eq!(resp.output.count_diff(&want.output), 0, "request {r}");
+            }
+        }
     }
 }
